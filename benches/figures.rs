@@ -1,0 +1,30 @@
+//! Benches regenerating the paper's FIGURES (1, 2, 6, 7, 8).
+//!
+//! fig7/fig8 are the headline sweeps: 8 workloads × 5 systems and
+//! 6 contexts × 4 systems. The bench doubles as the regeneration
+//! harness and as the perf budget check for the simulator hot path
+//! (DESIGN.md §8: the full Fig. 7 sweep must stay well under 1 s).
+
+use flexllm::eval;
+use flexllm::util::bench::Bench;
+
+fn main() {
+    Bench::header("Paper figures (regeneration harness)");
+    let mut b = Bench::new();
+    b.run("fig1_architecture_styles", eval::fig1);
+    b.run("fig2_a100_stage_utilization", eval::fig2);
+    b.run("fig6_layout_breakdown", eval::fig6);
+    let r7 = b.run("fig7_full_sweep", eval::fig7_data).clone();
+    b.run("fig8_long_context_sweep", eval::fig8_data);
+
+    assert!(
+        r7.mean < std::time::Duration::from_secs(1),
+        "Fig. 7 sweep exceeds the 1 s perf budget: {:?}",
+        r7.mean
+    );
+
+    // print the regenerated figures once for the record
+    println!("\n{}", eval::fig2());
+    println!("{}", eval::fig7());
+    println!("{}", eval::fig8());
+}

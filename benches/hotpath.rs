@@ -1,0 +1,51 @@
+//! Hot-path microbenches for the perf pass (EXPERIMENTS.md §Perf):
+//! the dataflow pipeline simulator, architecture construction, the DSE
+//! sweep, and (when artifacts exist) the serving path through PJRT.
+
+use flexllm::arch::{AcceleratorSystem, DecodeConfig, PrefillConfig};
+use flexllm::config::{DeviceConfig, ModelDims};
+use flexllm::coordinator::{Engine, GenRequest};
+use flexllm::dse;
+use flexllm::runtime::Runtime;
+use flexllm::util::bench::Bench;
+
+fn main() {
+    let sys = AcceleratorSystem::u280();
+    let model = ModelDims::llama32_1b();
+    let dev = DeviceConfig::u280();
+
+    Bench::header("pipeline simulator");
+    let mut b = Bench::new();
+    for tokens in [256u64, 1024, 4096] {
+        b.run(&format!("prefill_layer_sim/{tokens}"), || sys.prefill.simulate(tokens));
+    }
+    b.run("decode_sim_1k_steps", || sys.decode.simulate(1024, 1024));
+
+    Bench::header("architecture construction");
+    let mut b = Bench::new();
+    b.run("arch_construct_prefill", || {
+        flexllm::arch::PrefillArch::new(PrefillConfig::u280_paper(), model.clone(),
+                                        dev.clone())
+    });
+    b.run("arch_construct_decode", || {
+        flexllm::arch::DecodeArch::new(DecodeConfig::u280_paper(), model.clone(),
+                                       dev.clone())
+    });
+
+    Bench::header("design-space exploration");
+    let mut b = Bench::new().heavy();
+    b.run("tune_prefill_u280", || dse::tune_prefill(&model, &dev, 1024));
+    b.run("tune_decode_u280", || dse::tune_decode(&model, &dev, 1024, 1024));
+
+    Bench::header("serving path (PJRT artifacts)");
+    match Runtime::open("artifacts") {
+        Ok(rt) => {
+            let mut engine = Engine::new(rt);
+            let s = engine.batcher.prefill_len;
+            let queue = vec![GenRequest { id: 0, prompt: vec![3i32; s], max_new_tokens: 4 }];
+            let mut b = Bench::new().heavy();
+            b.run("prefill_plus_4_decode_steps", || engine.serve(&queue).expect("serve"));
+        }
+        Err(_) => eprintln!("serving bench skipped: artifacts/ missing (run `make artifacts`)"),
+    }
+}

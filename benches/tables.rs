@@ -1,0 +1,33 @@
+//! Benches regenerating the paper's TABLES (I–VI).
+//!
+//! Each bench measures the harness that produces one table, so `cargo
+//! bench` both regenerates the numbers and tracks the generator cost
+//! (in-tree harness; the vendored crate set has no criterion).
+
+use flexllm::eval;
+use flexllm::runtime::Runtime;
+use flexllm::util::bench::Bench;
+
+fn main() {
+    Bench::header("Paper tables (regeneration harness)");
+    let mut b = Bench::new();
+    b.run("table1_hardware_metrics", eval::table1);
+    b.run("table2_framework_matrix", eval::table2);
+    b.run("table3_module_templates", eval::table3);
+    b.run("table4_module_usage", || eval::table4(4000, 8000));
+    b.run("table6_arch_configs", eval::table6);
+
+    // Table V executes the real artifacts — expensive, few samples.
+    match Runtime::open("artifacts") {
+        Ok(rt) => {
+            let mut heavy = Bench::new().heavy();
+            heavy.run("table5_quant_ablation", || eval::table5(&rt).expect("table5"));
+            // print the regenerated table once for the record
+            println!("\n{}", eval::table5(&rt).expect("table5"));
+        }
+        Err(_) => eprintln!("table5 bench skipped: artifacts/ missing (run `make artifacts`)"),
+    }
+
+    println!("\n{}", eval::table1());
+    println!("{}", eval::table6());
+}

@@ -1,0 +1,59 @@
+//! Design-space exploration demo: run the ILP-style tuner for both
+//! stages on both FPGAs and compare the optima against the paper's
+//! hand-tuned Table VI configurations.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use flexllm::arch::{DecodeArch, DecodeConfig, PrefillArch, PrefillConfig};
+use flexllm::config::{DeviceConfig, ModelDims};
+use flexllm::dse::{tune_decode, tune_prefill};
+use flexllm::report::fmt_secs;
+
+fn main() {
+    let model = ModelDims::llama32_1b();
+    for dev in [DeviceConfig::u280(), DeviceConfig::v80()] {
+        println!("=== {} ===", dev.name);
+
+        // ---- prefill -----------------------------------------------------
+        let t0 = std::time::Instant::now();
+        let r = tune_prefill(&model, &dev, 1024);
+        let paper_cfg = if dev.tech_node_nm == 16 {
+            PrefillConfig::u280_paper()
+        } else {
+            PrefillConfig::v80_paper()
+        };
+        let paper = PrefillArch::new(paper_cfg, model.clone(), dev.clone());
+        println!("prefill DSE ({} candidates, {} feasible, {:?}):",
+                 r.evaluated, r.feasible, t0.elapsed());
+        println!("  found  TP={:<3} WPkqvo={:<4} WPmha={:<4} WPffn={:<4} → {}",
+                 r.best.tp, r.best.wp_kqvo, r.best.wp_mha, r.best.wp_ffn,
+                 fmt_secs(r.latency_s));
+        println!("  paper  TP={:<3} WPkqvo={:<4} WPmha={:<4} WPffn={:<4} → {}",
+                 paper_cfg.tp, paper_cfg.wp_kqvo, paper_cfg.wp_mha, paper_cfg.wp_ffn,
+                 fmt_secs(paper.analytic_latency_s(1024)));
+
+        // ---- decode ------------------------------------------------------
+        let t0 = std::time::Instant::now();
+        let r = tune_decode(&model, &dev, 1024, 1024);
+        let paper_cfg = if dev.tech_node_nm == 16 {
+            DecodeConfig::u280_paper()
+        } else {
+            DecodeConfig::v80_paper()
+        };
+        let paper = DecodeArch::new(paper_cfg, model.clone(), dev.clone());
+        println!("decode DSE ({} candidates, {} feasible, {:?}):",
+                 r.evaluated, r.feasible, t0.elapsed());
+        println!("  found  BP={:<3} WPint4={:<5} WPmha={:<4} → {}",
+                 r.best.bp, r.best.wp_int4, r.best.wp_mha, fmt_secs(r.latency_s));
+        println!("  paper  BP={:<3} WPint4={:<5} WPmha={:<4} → {}",
+                 paper_cfg.bp, paper_cfg.wp_int4, paper_cfg.wp_mha,
+                 fmt_secs(paper.analytic_latency_s(1024, 1024)));
+
+        // the DSE optimum must dominate (or tie) the paper's hand point
+        assert!(r.latency_s <= paper.analytic_latency_s(1024, 1024) * 1.02);
+        println!();
+    }
+    println!("design_space OK");
+}

@@ -1,0 +1,254 @@
+"""AOT compiler: lower every L2 graph to HLO **text** artifacts.
+
+Python's last act: after this script runs, the Rust coordinator is fully
+self-contained. Interchange is HLO text — NOT ``.serialize()`` — because
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that the
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md). Constants (the baked model
+weights) require ``print_large_constants=True`` or the text elides them.
+
+Outputs (``artifacts/``):
+
+* ``ppl_<scheme>.hlo.txt``       — Table V ablation graphs (5 schemes)
+* ``prefill_serve_q3.hlo.txt``   — serving prefill (logits + KV cache)
+* ``decode_step_q3.hlo.txt``     — serving decode step
+* ``hmt_memattn.hlo.txt``        — HMT plug-in memory attention
+* ``kernel_smoke.hlo.txt``       — tiny kernel for runtime unit tests
+* ``eval_tokens.bin``            — held-out eval batches (i32 LE)
+* ``prompt_tokens.bin``          — serving demo prompts (i32 LE)
+* ``tiny_params.npz``            — trained FP weights (cache + reference)
+* ``manifest.json``              — shapes, expected values, model config
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from .model import (ModelConfig, decode_step, hmt_memattn, llama32_1b, prefill_logits,
+                    prefill_serve, summary_embedding, tiny)
+from .quantize import SCHEMES, prepare
+from .train_tiny import eval_ppl_fp, train
+
+# Serving shapes (fixed at AOT time; the coordinator pads to these)
+SERVE_BATCH = 4
+SERVE_PREFILL = 128
+HMT_BATCH = 1
+HMT_MEMORIES = 16
+EVAL_BATCHES = 6
+EVAL_BATCH = 8
+EVAL_SEQ = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def dump(fn, specs, path: pathlib.Path, inputs, outputs):
+    """Lower ``fn`` at ``specs``, write HLO text, return a manifest entry."""
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    print(f"  wrote {path.name}  ({len(text)/1e6:.1f} MB, {time.time()-t0:.1f}s)")
+    return {
+        "path": path.name,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def tensor(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def ppl_from_logits(logits, tokens):
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return float(jnp.sum(nll)), int(nll.size)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--steps", type=int, default=600, help="training steps")
+    ap.add_argument("--retrain", action="store_true", help="ignore cached weights")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    cfg = tiny()
+    manifest: dict = {"model": cfg.__dict__, "llama32_1b": llama32_1b().__dict__,
+                      "artifacts": {}, "schemes": {}}
+
+    # ------------------------------------------------------------------ train
+    cache = out / "tiny_params.npz"
+    if cache.exists() and not args.retrain:
+        print("loading cached tiny model weights")
+        flat = dict(np.load(cache))
+        params = {
+            "embed": jnp.asarray(flat["embed"]),
+            "final_norm": jnp.asarray(flat["final_norm"]),
+            "lm_head": jnp.asarray(flat["lm_head"]),
+            "layers": [
+                {k: jnp.asarray(flat[f"l{i}_{k}"]) for k in
+                 ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "wg", "wu", "wd")}
+                for i in range(cfg.n_layers)
+            ],
+        }
+    else:
+        print(f"training tiny model ({cfg.n_params/1e6:.1f}M params, {args.steps} steps)")
+        params, curve = train(cfg, steps=args.steps)
+        manifest["train_curve"] = curve
+        flat = {"embed": params["embed"], "final_norm": params["final_norm"],
+                "lm_head": params["lm_head"]}
+        for i, lp in enumerate(params["layers"]):
+            for k, v in lp.items():
+                flat[f"l{i}_{k}"] = v
+        np.savez(cache, **{k: np.asarray(v) for k, v in flat.items()})
+
+    # ------------------------------------------------------- corpus material
+    held = corpus.generate(EVAL_BATCHES * EVAL_BATCH * EVAL_SEQ + SERVE_BATCH * 512,
+                           stream_seed=99)  # disjoint stream from training
+    evalb = corpus.eval_batches(held, EVAL_BATCHES, EVAL_BATCH, EVAL_SEQ)
+    evalb.tofile(out / "eval_tokens.bin")
+    prompts = held[-SERVE_BATCH * SERVE_PREFILL:].reshape(SERVE_BATCH, SERVE_PREFILL)
+    prompts.astype(np.int32).tofile(out / "prompt_tokens.bin")
+    calib_tokens = jnp.asarray(corpus.eval_batches(
+        corpus.generate(EVAL_BATCH * EVAL_SEQ, stream_seed=7), 1, EVAL_BATCH, EVAL_SEQ)[0])
+
+    fp_ppl = eval_ppl_fp(params, cfg, evalb)
+    print(f"held-out FP perplexity: {fp_ppl:.3f}  (vocab={cfg.vocab})")
+    manifest["fp_ppl"] = fp_ppl
+    manifest["eval"] = {"n_batches": EVAL_BATCHES, "batch": EVAL_BATCH, "seq": EVAL_SEQ}
+
+    # ------------------------------------------------- Table V ablation graphs
+    tok_spec = jax.ShapeDtypeStruct((EVAL_BATCH, EVAL_SEQ), jnp.int32)
+    for name, scheme in SCHEMES.items():
+        print(f"scheme {name}: preparing + lowering ppl graph")
+        qp = prepare(params, cfg, scheme, calib_tokens)
+        fn = functools.partial(prefill_logits, qp, cfg, scheme)
+        entry = dump(lambda t: (fn(t),), [tok_spec], out / f"ppl_{name}.hlo.txt",
+                     [tensor("tokens", "i32", tok_spec.shape)],
+                     [tensor("logits", "f32", (EVAL_BATCH, EVAL_SEQ, cfg.vocab))])
+        manifest["artifacts"][f"ppl_{name}"] = entry
+
+        # build-time expected perplexity (Rust cross-checks within 2%)
+        run = jax.jit(fn)
+        tot, cnt = 0.0, 0
+        for b in evalb:
+            s, n = ppl_from_logits(run(jnp.asarray(b)), jnp.asarray(b))
+            tot += s
+            cnt += n
+        ppl = float(np.exp(tot / cnt))
+        print(f"  {name} perplexity: {ppl:.3f}")
+        manifest["schemes"][name] = {
+            "ppl": ppl,
+            "w_bits": scheme.linear_w_bits, "a_bits": scheme.linear_a_bits,
+            "attn_mode": scheme.attn_mode, "kv_bits": scheme.kv_bits,
+            "lm_head_quant": scheme.lm_head_quant,
+        }
+        if name == "q3":
+            qp_q3, scheme_q3 = qp, scheme
+
+    # ---------------------------------------------------- serving graphs (Q3)
+    serve_tok = jax.ShapeDtypeStruct((SERVE_BATCH, SERVE_PREFILL), jnp.int32)
+    cache_shape = (cfg.n_layers, SERVE_BATCH, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    manifest["serving"] = {"batch": SERVE_BATCH, "prefill_len": SERVE_PREFILL,
+                           "cache_shape": list(cache_shape)}
+
+    fn_pre = functools.partial(prefill_serve, qp_q3, cfg, scheme_q3)
+    manifest["artifacts"]["prefill_serve_q3"] = dump(
+        fn_pre, [serve_tok], out / "prefill_serve_q3.hlo.txt",
+        [tensor("tokens", "i32", serve_tok.shape)],
+        [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
+         tensor("k_cache", "f32", cache_shape),
+         tensor("v_cache", "f32", cache_shape)])
+
+    fn_dec = functools.partial(decode_step, qp_q3, cfg, scheme_q3)
+    dec_specs = [jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32),
+                 jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+                 jax.ShapeDtypeStruct(cache_shape, jnp.float32)]
+    manifest["artifacts"]["decode_step_q3"] = dump(
+        fn_dec, dec_specs, out / "decode_step_q3.hlo.txt",
+        [tensor("token", "i32", (SERVE_BATCH,)), tensor("pos", "i32", ()),
+         tensor("k_cache", "f32", cache_shape), tensor("v_cache", "f32", cache_shape)],
+        [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
+         tensor("k_cache", "f32", cache_shape),
+         tensor("v_cache", "f32", cache_shape)])
+
+    # -------------------------------------------- greedy generation reference
+    print("computing greedy generation reference (q3, 32 steps)")
+    pre = jax.jit(fn_pre)
+    dec = jax.jit(fn_dec)
+    logits, kc, vc = pre(jnp.asarray(prompts))
+    toks = [np.asarray(jnp.argmax(logits, -1), np.int32)]
+    for step in range(32):
+        pos = jnp.int32(SERVE_PREFILL + step)
+        logits, kc, vc = dec(jnp.asarray(toks[-1]), pos, kc, vc)
+        toks.append(np.asarray(jnp.argmax(logits, -1), np.int32))
+    manifest["greedy_reference"] = np.stack(toks, 1).tolist()  # [B, 33]
+
+    # ---------------------------------------------------------- HMT plug-in
+    # summary pass: half-segment prompt → topic summary vector S_n (uses
+    # the deployed q3 backbone, matching the serving datapath)
+    sum_len = 64
+    fn_sum = functools.partial(summary_embedding, qp_q3, cfg, scheme_q3)
+    manifest["artifacts"]["hmt_summary"] = dump(
+        lambda t: (fn_sum(t),), [jax.ShapeDtypeStruct((HMT_BATCH, sum_len), jnp.int32)],
+        out / "hmt_summary.hlo.txt",
+        [tensor("tokens", "i32", (HMT_BATCH, sum_len))],
+        [tensor("summary", "f32", (HMT_BATCH, cfg.d_model))])
+
+    fn_hmt = functools.partial(hmt_memattn, params, cfg)
+    hmt_specs = [jax.ShapeDtypeStruct((HMT_BATCH, cfg.d_model), jnp.float32),
+                 jax.ShapeDtypeStruct((HMT_MEMORIES, cfg.d_model), jnp.float32)]
+    manifest["artifacts"]["hmt_memattn"] = dump(
+        lambda s, m: (fn_hmt(s, m),), hmt_specs, out / "hmt_memattn.hlo.txt",
+        [tensor("summary", "f32", (HMT_BATCH, cfg.d_model)),
+         tensor("memories", "f32", (HMT_MEMORIES, cfg.d_model))],
+        [tensor("retrieved", "f32", (HMT_BATCH, cfg.d_model))])
+    manifest["hmt"] = {"batch": HMT_BATCH, "n_memories": HMT_MEMORIES}
+
+    # ----------------------------------------------------- runtime smoke test
+    from .kernels.ref import ref_quant_linear
+
+    def smoke(x, w):
+        return (ref_quant_linear(x, w, 4, 4),)
+
+    smoke_specs = [jax.ShapeDtypeStruct((8, 16), jnp.float32),
+                   jax.ShapeDtypeStruct((16, 8), jnp.float32)]
+    manifest["artifacts"]["kernel_smoke"] = dump(
+        smoke, smoke_specs, out / "kernel_smoke.hlo.txt",
+        [tensor("x", "f32", (8, 16)), tensor("w", "f32", (16, 8))],
+        [tensor("y", "f32", (8, 8))])
+    # deterministic smoke vector for the rust runtime test
+    rng = np.random.default_rng(3)
+    sx = rng.standard_normal((8, 16)).astype(np.float32)
+    sw = rng.standard_normal((16, 8)).astype(np.float32)
+    sy = np.asarray(smoke(jnp.asarray(sx), jnp.asarray(sw))[0])
+    manifest["smoke"] = {"x": sx.flatten().tolist(), "w": sw.flatten().tolist(),
+                         "y": sy.flatten().tolist()}
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"manifest + {len(manifest['artifacts'])} artifacts → {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""L1: Pallas kernels for the FlexLLM datapath (interpret-mode, CPU-PJRT).
+
+Kernel inventory (each mirrors a FlexLLM HLS module template, Table III):
+
+* ``linear``    — prefill TP×WP and decode BP×(WP/BP) integer matmuls
+* ``quant``     — dynamic/static, sym/asym quantizers + dequantizer
+* ``fht``       — Fast Hadamard Transform outlier-handling module
+* ``attention`` — INT8 static-symmetric and FP GQA cores
+* ``ref``       — pure-jnp oracles for all of the above
+"""
+
+from .attention import attention_fp, attention_int8, P_SCALE
+from .fht import fht
+from .linear import decode_linear, prefill_linear
+from .nonlinear import rmsnorm, rope, swiglu
+from .quant import dequantize_linear, quantize_dynamic, quantize_static
+
+__all__ = [
+    "attention_fp",
+    "attention_int8",
+    "P_SCALE",
+    "fht",
+    "decode_linear",
+    "prefill_linear",
+    "rmsnorm",
+    "rope",
+    "swiglu",
+    "dequantize_linear",
+    "quantize_dynamic",
+    "quantize_static",
+]

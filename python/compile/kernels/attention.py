@@ -1,0 +1,108 @@
+"""Pallas attention kernels (MHA/GQA core, the paper's INT8 KV8 datapath).
+
+The paper computes attention (QKᵀ and PV matmuls, including KV-cache
+traffic) at static symmetric INT8 while projections stay INT4 (Table V,
+Q2/Q3). The FPGA implementation parallelizes over heads
+(``head_parallelism``); here the Pallas grid dimension is the head axis —
+one program per head, with the softmax row reduction done in VMEM.
+
+Scales are passed as [1, 1] f32 *inputs* (not compile-time constants) so
+the same kernel serves static quantization (constant scale baked by the
+caller) and dynamic quantization (scale traced at runtime) — the paper's
+Q1 vs Q2 distinction.
+
+Masking: the kernel receives an additive FP mask (0 / -1e30) so the same
+kernel serves causal prefill and single-token decode (where the mask
+hides not-yet-written cache slots).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+pallas_call = functools.partial(pl.pallas_call, interpret=True)
+
+P_SCALE = 1.0 / 127.0  # static scale for probabilities in [0, 1]
+
+
+def _attn_int8_kernel(q_ref, k_ref, v_ref, m_ref, sq_ref, sk_ref, sv_ref,
+                      o_ref, *, hd):
+    q = q_ref[0]          # [Tq, hd] integer grid
+    k = k_ref[0]          # [Tk, hd]
+    v = v_ref[0]          # [Tk, hd]
+    mask = m_ref[...]     # [Tq, Tk] additive
+    sq = sq_ref[0, 0]
+    sk = sk_ref[0, 0]
+    sv = sv_ref[0, 0]
+    acc = jnp.dot(q, k.T)                       # int accumulator
+    scores = acc * (sq * sk / jnp.sqrt(jnp.float32(hd))) + mask
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - mx)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    qp = jnp.clip(jnp.round(p / P_SCALE), 0.0, 127.0)   # static int8 P
+    o_ref[0] = jnp.dot(qp, v) * (P_SCALE * sv)
+
+
+def attention_int8(qq, qk, qv, mask, sq, sk, sv):
+    """Static/dynamic-symmetric INT8 GQA core.
+
+    qq [H, Tq, hd], qk/qv [H, Tk, hd] — KV heads already repeated to H
+    (the coordinator's GQA head mapping). mask [Tq, Tk] additive FP.
+    sq/sk/sv: [1, 1] f32 symmetric scales (constant → static quant,
+    traced → dynamic quant). Returns FP output [H, Tq, hd].
+    Grid = heads (the paper's head_parallelism).
+    """
+    h, tq, hd = qq.shape
+    _, tk, _ = qk.shape
+    kernel = functools.partial(_attn_int8_kernel, hd=hd)
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, tq, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tk, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tk, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tq, tk), lambda i: (0, 0)),
+            scalar, scalar, scalar,
+        ],
+        out_specs=pl.BlockSpec((1, tq, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, hd), jnp.float32),
+    )(qq, qk, qv, mask,
+      jnp.asarray(sq, jnp.float32).reshape(1, 1),
+      jnp.asarray(sk, jnp.float32).reshape(1, 1),
+      jnp.asarray(sv, jnp.float32).reshape(1, 1))
+
+
+def _attn_fp_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, hd):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(hd)) + m_ref[...]
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - mx)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v)
+
+
+def attention_fp(q, k, v, mask):
+    """FP attention core (No_Quant baseline and Q0's FP query path)."""
+    h, tq, hd = q.shape
+    _, tk, _ = k.shape
+    kernel = functools.partial(_attn_fp_kernel, hd=hd)
+    return pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, tq, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tk, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tk, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tq, tk), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, hd), jnp.float32),
+    )(q, k, v, mask)

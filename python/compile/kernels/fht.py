@@ -1,0 +1,59 @@
+"""Pallas Fast Hadamard Transform kernel (outlier-handling module, L1).
+
+The paper uses FHT (from SpinQuant) as an online rotation that spreads
+activation outliers across channels before aggressive INT4 quantization —
+on the FPGA it is a log2(d)-stage butterfly network. Here the butterfly
+runs entirely in VMEM on a token tile: each stage is a reshape + add/sub
+pair, so the whole transform costs d·log2(d) adds per token (vs d² for
+the explicit-matrix rotation it replaces — the paper's motivation for
+keeping FHT but removing boundary rotations).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+pallas_call = functools.partial(pl.pallas_call, interpret=True)
+
+
+def _fht_kernel(x_ref, o_ref, *, d):
+    x = x_ref[...]
+    t = x.shape[0]
+    stages = int(math.log2(d))
+    # Iterative radix-2 butterflies: view the channel axis as
+    # [pairs, 2, stride] and combine (a+b, a-b) at each stage.
+    h = 1
+    for _ in range(stages):
+        xv = x.reshape(t, d // (2 * h), 2, h)
+        a = xv[:, :, 0, :]
+        b = xv[:, :, 1, :]
+        x = jnp.concatenate([(a + b)[:, :, None, :], (a - b)[:, :, None, :]],
+                            axis=2).reshape(t, d)
+        h *= 2
+    o_ref[...] = x * (1.0 / jnp.sqrt(jnp.float32(d)))
+
+
+def fht(x, token_parallelism: int = 8):
+    """Normalized Hadamard transform over the last axis of x [T, D].
+
+    D must be a power of two. Matches ``ref.ref_fht`` (explicit H matmul)
+    to float32 accuracy.
+    """
+    t, d = x.shape
+    assert d & (d - 1) == 0, "FHT size must be a power of two"
+    tile = min(token_parallelism, t)
+    while t % tile != 0:
+        tile -= 1
+    kernel = functools.partial(_fht_kernel, d=d)
+    return pallas_call(
+        kernel,
+        grid=(t // tile,),
+        in_specs=[pl.BlockSpec((tile, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+    )(x)

@@ -1,0 +1,99 @@
+"""Pallas integer linear-layer kernels (FlexLLM Kernel Library, L1).
+
+Two stage-customized datapaths, mirroring the paper's Fig. 3(a)/(b):
+
+* ``prefill_linear`` — the TP×WP 2-D systolic array. On TPU the systolic
+  array *is* the MXU, so the kernel tiles the token axis by TP and the
+  output-channel axis by WP via BlockSpec; the HBM→VMEM block schedule
+  plays the role of the paper's ``w_stream`` weight streaming channel.
+* ``decode_linear`` — the BP × (WP/BP) 1-D systolic arrays. The Pallas
+  grid dimension is BP (one program per output block); each program
+  reduces its (K × N/BP) weight tile locally — the paper's intra-token
+  block parallelism with on-chip reduction.
+
+Inputs/weights are integer-grid float32 (see ref.py); the kernels compute
+pure integer accumulators so the downstream dequantizer (quant.py) can
+apply scales/zeros — identical to the FPGA int datapath.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+pallas_call = functools.partial(pl.pallas_call, interpret=True)
+
+
+def _largest_divisor_tile(n: int, want: int) -> int:
+    t = min(want, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (TP-tile × WP-tile) output block; the full K reduction happens
+    # in-block (on TPU this is the MXU contraction; II=1 per the paper).
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...])
+
+
+def prefill_linear(qx, qw, token_parallelism: int = 8, weight_parallelism: int = 128):
+    """Prefill TP×WP integer matmul: qx [T, K] @ qw [K, N] → acc [T, N].
+
+    Grid = (T/TP, N/WP): each program computes one output tile, streaming
+    the shared activation tile against a fresh weight tile — the 2-D
+    systolic dataflow of Fig. 3(a). Latency model: T·K·N / (TP·WP) cycles
+    (paper Eq. 1), reproduced by the Rust hls simulator.
+    """
+    t, k = qx.shape
+    k2, n = qw.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    tp = _largest_divisor_tile(t, token_parallelism)
+    wp = _largest_divisor_tile(n, weight_parallelism)
+    grid = (t // tp, n // wp)
+    return pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tp, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, wp), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tp, wp), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+    )(qx, qw)
+
+
+def _decode_block_kernel(x_ref, w_ref, o_ref):
+    # One output block of the single token: 1-D systolic reduction over K.
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...])
+
+
+def decode_linear(qx, qw, block_parallelism: int = 4):
+    """Decode BP-way blocked integer matvec: qx [B, K] @ qw [K, N] → [B, N].
+
+    Grid = (BP,): program ``b`` produces output channels
+    [b·N/BP, (b+1)·N/BP) for every sequence in the (small) decode batch —
+    the paper's intra-token block parallelism (Fig. 3(b), Eq. 3 latency
+    T·K·N / WP with WP spread over BP block engines).
+    """
+    b, k = qx.shape
+    k2, n = qw.shape
+    assert k == k2
+    bp = _largest_divisor_tile(n, block_parallelism)
+    if n % bp != 0:  # _largest_divisor_tile guarantees divisibility
+        raise AssertionError("unreachable")
+    blk = n // bp
+    grid = (bp,)
+    return pallas_call(
+        _decode_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+    )(qx, qw)

@@ -1,0 +1,96 @@
+"""Pallas non-linear layer kernels (FlexLLM Non-Linear Library, L1).
+
+The paper's non-linear module templates (Table III: RoPE, Softmax,
+LayerNorm, Swish, Gate, Residual) scale with TP in prefill and BP in
+decode. Here each kernel's grid walks token tiles (the TP/BP analog);
+the channel reduction (RMSNorm mean-square, softmax row-sum) happens in
+VMEM. Softmax lives inside the attention kernels; Residual is a trivial
+jnp add in the model graph (no reduction, nothing to tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+pallas_call = functools.partial(pl.pallas_call, interpret=True)
+
+
+def _token_tile(n_tokens: int, parallelism: int) -> int:
+    t = min(parallelism, n_tokens)
+    while n_tokens % t != 0:
+        t -= 1
+    return t
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(var + eps)) * w_ref[...]
+
+
+def rmsnorm(x, weight, token_parallelism: int = 8, eps: float = 1e-5):
+    """RMSNorm over the channel axis; x [T, D], weight [D]."""
+    t, d = x.shape
+    tile = _token_tile(t, token_parallelism)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pallas_call(
+        kernel,
+        grid=(t // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+    )(x, weight.reshape(1, d))
+
+
+def _swiglu_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...]
+    o_ref[...] = (g * (1.0 / (1.0 + jnp.exp(-g)))) * u_ref[...]
+
+
+def swiglu(gate, up, token_parallelism: int = 8):
+    """SwiGLU (Swish ⊗ Gate modules): gate/up [T, F] → [T, F]."""
+    t, f = gate.shape
+    tile = _token_tile(t, token_parallelism)
+    return pallas_call(
+        _swiglu_kernel,
+        grid=(t // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, f), lambda i: (i, 0)),
+            pl.BlockSpec((tile, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, f), jnp.float32),
+    )(gate, up)
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[0]            # [S, hd]
+    cos = cos_ref[...]      # [S, hd/2]
+    sin = sin_ref[...]
+    half = x.shape[-1] // 2
+    x1 = x[:, :half]
+    x2 = x[:, half:]
+    o_ref[0] = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def rope(x, cos, sin):
+    """Rotary embedding; x [H, S, hd], tables [S, hd/2]. Grid = heads."""
+    h, s, hd = x.shape
+    return pallas_call(
+        _rope_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((s, hd // 2), lambda i: (0, 0)),
+            pl.BlockSpec((s, hd // 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, hd), jnp.float32),
+    )(x, cos, sin)

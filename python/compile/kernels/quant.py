@@ -1,0 +1,161 @@
+"""Pallas quantization / dequantization kernels (FlexLLM Quant Library, L1).
+
+Mirrors the paper's quantizer/dequantizer module templates (Fig. 3(c),
+Table III):
+
+* static / dynamic scale+zero computation,
+* symmetric / asymmetric grids,
+* per-tensor / per-token granularity,
+* the dequantizer consumes per-channel weight scales + column sums
+  ("auxiliary data buffered on-chip").
+
+Hardware adaptation (DESIGN.md §3): the paper's TP-parallel (prefill) /
+BP-parallel (decode) quantizer lanes become the Pallas grid over token
+tiles; the per-token reduction the FPGA does in a systolic reduction tree
+is a VMEM-local row reduction here. All kernels are lowered with
+``interpret=True`` — CPU PJRT cannot run Mosaic custom-calls — so they
+trace to plain HLO while keeping the Pallas tiling structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import qrange
+
+# Every pallas_call in this package is interpret-mode (see module docstring).
+pallas_call = functools.partial(pl.pallas_call, interpret=True)
+
+
+def _token_tile(n_tokens: int, parallelism: int) -> int:
+    """Pick the token-tile (TP / BP analog): largest divisor ≤ parallelism."""
+    t = min(parallelism, n_tokens)
+    while n_tokens % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Dynamic quantizer (per-token / per-tensor, sym / asym)
+# ---------------------------------------------------------------------------
+
+def _dyn_quant_kernel(x_ref, q_ref, s_ref, z_ref, *, bits, symmetric, eps):
+    x = x_ref[...]
+    lo, hi = qrange(bits, symmetric)
+    if symmetric:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, eps) / hi
+        zero = jnp.zeros_like(scale)
+    else:
+        xmax = jnp.max(x, axis=-1, keepdims=True)
+        xmin = jnp.min(x, axis=-1, keepdims=True)
+        scale = jnp.maximum(xmax - xmin, eps) / hi
+        zero = xmin
+    q_ref[...] = jnp.clip(jnp.round((x - zero) / scale), lo, hi)
+    s_ref[...] = scale
+    z_ref[...] = zero
+
+
+def quantize_dynamic(x, bits: int, symmetric: bool, token_parallelism: int = 8,
+                     eps: float = 1e-8):
+    """Dynamic per-token quantization of ``x`` [T, D].
+
+    Returns (q, scale, zero) with scale/zero shaped [T, 1]. The grid walks
+    token tiles of size ``token_parallelism`` — the paper's TP (prefill) or
+    BP (decode) quantizer lanes.
+    """
+    n_tokens, d = x.shape
+    tile = _token_tile(n_tokens, token_parallelism)
+    grid = (n_tokens // tile,)
+    kernel = functools.partial(_dyn_quant_kernel, bits=bits,
+                               symmetric=symmetric, eps=eps)
+    return pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tokens, d), jnp.float32),
+            jax.ShapeDtypeStruct((n_tokens, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_tokens, 1), jnp.float32),
+        ],
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Static quantizer (preloaded scale/zero — per-tensor)
+# ---------------------------------------------------------------------------
+
+def _static_quant_kernel(x_ref, s_ref, z_ref, q_ref, *, bits, symmetric):
+    lo, hi = qrange(bits, symmetric)
+    scale = s_ref[0, 0]
+    zero = z_ref[0, 0]
+    q_ref[...] = jnp.clip(jnp.round((x_ref[...] - zero) / scale), lo, hi)
+
+
+def quantize_static(x, scale, zero, bits: int, symmetric: bool,
+                    token_parallelism: int = 8):
+    """Static per-tensor quantization: scale/zero are precomputed scalars
+    (offline calibration), exactly the paper's hardware-friendly static mode.
+    ``x`` is [T, D]; scale/zero are rank-0 or [1, 1] arrays.
+    """
+    n_tokens, d = x.shape
+    tile = _token_tile(n_tokens, token_parallelism)
+    grid = (n_tokens // tile,)
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    z = jnp.asarray(zero, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_static_quant_kernel, bits=bits, symmetric=symmetric)
+    return pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tokens, d), jnp.float32),
+    )(x, s, z)
+
+
+# ---------------------------------------------------------------------------
+# Dequantizer (consumes per-channel weight scale + column sums)
+# ---------------------------------------------------------------------------
+
+def _dequant_kernel(acc_ref, s_ref, z_ref, ws_ref, wc_ref, out_ref):
+    acc = acc_ref[...]
+    out_ref[...] = s_ref[...] * (acc * ws_ref[...]) + z_ref[...] * (ws_ref[...] * wc_ref[...])
+
+
+def dequantize_linear(acc, in_scale, in_zero, w_scale, w_col_sum,
+                      token_parallelism: int = 8):
+    """Dequantize an integer matmul accumulator back to FP.
+
+    acc [T, N]; in_scale/in_zero [T, 1] (per-token, from the dynamic
+    quantizer); w_scale/w_col_sum [1, N] (per-channel auxiliary data).
+    Implements  y = sx·sw·acc + zx·sw·colsum(qw)  — see ref.ref_linear_dequant.
+    """
+    n_tokens, n = acc.shape
+    tile = _token_tile(n_tokens, token_parallelism)
+    grid = (n_tokens // tile,)
+    return pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tokens, n), jnp.float32),
+    )(acc, in_scale, in_zero, w_scale, w_col_sum)

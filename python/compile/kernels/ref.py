@@ -1,0 +1,208 @@
+"""Pure-jnp reference oracles for every FlexLLM Pallas kernel.
+
+These are the CORE correctness signal: every kernel in this package is
+checked against its oracle here by ``python/tests/``. The oracles are
+written for clarity, not speed, and mirror the paper's quantization math
+(Sec. II-B) exactly:
+
+  symmetric:   s = max|X| / (2^{N-1} - 1),            b = 0
+  asymmetric:  s = (max X - min X) / (2^N - 1),       b = min X
+  X_q = clip(round((X - b) / s)) ;  X ≈ s * X_q + b
+
+Quantized tensors are carried as float32 arrays holding exact integer
+values ("integer-on-float-grid"). All arithmetic on them is integer-exact
+(|q| ≤ 2^23 stays exactly representable), so results are bit-identical to
+an int datapath while remaining matmul-friendly on every PJRT backend.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Quantization grids
+# ---------------------------------------------------------------------------
+
+def qrange(bits: int, symmetric: bool) -> tuple[float, float]:
+    """Integer grid limits for a ``bits``-bit quantizer."""
+    if symmetric:
+        lim = float(2 ** (bits - 1) - 1)
+        return -lim, lim
+    return 0.0, float(2**bits - 1)
+
+
+def ref_quant_params_dynamic(x, bits: int, symmetric: bool, axis=None, eps=1e-8):
+    """Scale/zero computed from the data (dynamic quantization).
+
+    ``axis=None`` → per-tensor; ``axis=-1`` → per-token when x is
+    [tokens, channels]; ``axis=0`` → per-channel for weights [in, out].
+    Reduced axes keep dims so results broadcast against ``x``.
+    """
+    if symmetric:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+        scale = jnp.maximum(amax, eps) / (2 ** (bits - 1) - 1)
+        zero = jnp.zeros_like(scale)
+    else:
+        xmax = jnp.max(x, axis=axis, keepdims=axis is not None)
+        xmin = jnp.min(x, axis=axis, keepdims=axis is not None)
+        scale = jnp.maximum(xmax - xmin, eps) / (2**bits - 1)
+        zero = xmin
+    return scale, zero
+
+
+def ref_quantize(x, scale, zero, bits: int, symmetric: bool):
+    """Quantize to the integer grid (returned on the float grid)."""
+    lo, hi = qrange(bits, symmetric)
+    q = jnp.round((x - zero) / scale)
+    return jnp.clip(q, lo, hi)
+
+
+def ref_dequantize(q, scale, zero):
+    return q * scale + zero
+
+
+def ref_fake_quant(x, bits: int, symmetric: bool, axis=None):
+    """quantize → dequantize round trip (used to fold static calibration)."""
+    scale, zero = ref_quant_params_dynamic(x, bits, symmetric, axis)
+    return ref_dequantize(ref_quantize(x, scale, zero, bits, symmetric), scale, zero)
+
+
+# ---------------------------------------------------------------------------
+# Integer linear layers (prefill TP×WP / decode BP×WP datapaths)
+# ---------------------------------------------------------------------------
+
+def ref_linear_int(qx, qw):
+    """Integer matmul accumulator: qx [T, K] (int grid) @ qw [K, N] → [T, N]."""
+    return jnp.matmul(qx, qw)
+
+
+def ref_linear_dequant(acc, in_scale, in_zero, w_scale, w_col_sum):
+    """Reconstruct the FP output of an asym-activation × sym-weight matmul.
+
+    With the additive convention x ≈ sx·qx + zx (row-wise) and w = sw·qw
+    (column-wise):
+
+        y = x @ w = sx · sw · (qx @ qw)  +  zx · sw · colsum(qw)
+
+    ``in_scale``/``in_zero`` broadcast per token (rows [T, 1]); ``w_scale``/
+    ``w_col_sum`` per output channel (cols [1, N]). These are exactly the
+    auxiliary per-channel weight scales and sums the paper buffers on-chip
+    for its dequantizer module (Fig. 3(c)).
+    """
+    return in_scale * (acc * w_scale) + in_zero * (w_scale * w_col_sum)
+
+
+def ref_quant_linear(x, w, a_bits: int, w_bits: int, a_symmetric: bool = False):
+    """End-to-end dynamic per-token activation × per-channel symmetric weight
+    quantized linear — the paper's W{w_bits}A{a_bits} datapath."""
+    sx, zx = ref_quant_params_dynamic(x, a_bits, a_symmetric, axis=-1)
+    qx = ref_quantize(x, sx, zx, a_bits, a_symmetric)
+    sw, _ = ref_quant_params_dynamic(w, w_bits, True, axis=0)
+    qw = ref_quantize(w, sw, jnp.zeros_like(sw), w_bits, True)
+    acc = ref_linear_int(qx, qw)
+    return ref_linear_dequant(acc, sx, zx, sw, jnp.sum(qw, axis=0, keepdims=True))
+
+
+# ---------------------------------------------------------------------------
+# INT4 packing (two nibbles per int8 byte, mirroring B_W^{int4} accounting)
+# ---------------------------------------------------------------------------
+
+def ref_pack_int4(q):
+    """Pack int4-grid values (in [-8, 7], float grid) pairwise into bytes.
+
+    q [..., 2k] → uint8-grid [..., k]: low nibble = even index, high = odd.
+    """
+    u = (q + 8.0).astype(jnp.int32)  # → [0, 15]
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return (lo + hi * 16).astype(jnp.float32)
+
+
+def ref_unpack_int4(packed):
+    """Inverse of :func:`ref_pack_int4`."""
+    p = packed.astype(jnp.int32)
+    lo = p % 16
+    hi = p // 16
+    out = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    return out.astype(jnp.float32) - 8.0
+
+
+# ---------------------------------------------------------------------------
+# Fast Hadamard Transform (outlier-handling module)
+# ---------------------------------------------------------------------------
+
+def hadamard_matrix(n: int):
+    """Explicit (normalized) Hadamard matrix, n a power of two."""
+    assert n & (n - 1) == 0, "FHT size must be a power of two"
+    h = jnp.ones((1, 1), dtype=jnp.float32)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return h / jnp.sqrt(jnp.float32(n))
+
+
+def ref_fht(x):
+    """Normalized Hadamard transform over the last axis via explicit matmul."""
+    return jnp.matmul(x, hadamard_matrix(x.shape[-1]))
+
+
+# ---------------------------------------------------------------------------
+# Non-linear layers
+# ---------------------------------------------------------------------------
+
+def ref_rmsnorm(x, weight, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * weight
+
+
+def ref_softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def ref_swiglu(gate, up):
+    return (gate * (1.0 / (1.0 + jnp.exp(-gate)))) * up
+
+
+def rope_angles(positions, head_dim: int, theta: float = 10000.0):
+    """cos/sin tables for rotary embeddings; positions [S] → [S, head_dim/2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / head_dim)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def ref_rope(x, cos, sin):
+    """Rotary position embedding; x [..., S, head_dim], tables [S, hd/2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (int8 static-symmetric MHA/GQA, the KV8 datapath)
+# ---------------------------------------------------------------------------
+
+def ref_attention_int8(qq, sq, qk, sk, qv, sv, mask, p_scale=1.0 / 127.0):
+    """Quantized GQA core: integer-grid q/k/v with static symmetric scales.
+
+    qq [H, Tq, hd], qk/qv [H, Tk, hd] (KV heads already repeated to H).
+    scores = (sq·sk/√hd)·(qq@qkᵀ); softmax in FP; P statically quantized
+    to int8 on [0, 1] (scale 1/127); out = sp·sv·(qp@qv).
+    """
+    hd = qq.shape[-1]
+    acc = jnp.einsum("htd,hsd->hts", qq, qk)
+    scores = acc * (sq * sk / jnp.sqrt(jnp.float32(hd)))
+    scores = jnp.where(mask, scores, -1e30)
+    p = ref_softmax(scores, axis=-1)
+    qp = jnp.clip(jnp.round(p / p_scale), 0.0, 127.0)
+    out = jnp.einsum("hts,hsd->htd", qp, qv)
+    return out * (p_scale * sv)
+
+
+def ref_attention_fp(q, k, v, mask):
+    """FP attention oracle (No_Quant and the Q0 query-in-FP path)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask, scores, -1e30)
+    p = ref_softmax(scores, axis=-1)
+    return jnp.einsum("hts,hsd->htd", p, v)

@@ -1,0 +1,491 @@
+"""L2: quantized Llama-architecture model graphs (prefill / decode / HMT).
+
+This is the paper's Llama-3.2 1B case study scaled to a CPU-executable
+size (DESIGN.md §7): identical architecture — GQA attention with RoPE,
+SwiGLU FFN, RMSNorm, tied datapaths to the FlexLLM L1 Pallas kernels —
+with smaller dimensions. The full-size config (``llama32_1b``) feeds the
+Rust performance simulator; the tiny config is what the AOT artifacts
+actually execute.
+
+Three exported graphs (each AOT-lowered by ``aot.py``):
+
+* :func:`prefill_logits` — full-sequence logits (perplexity ablation,
+  Table V).
+* :func:`prefill_serve`  — last-token logits + populated INT8 KV cache
+  (serving prefill stage).
+* :func:`decode_step`    — single-token autoregressive step with KV cache
+  read/update (serving decode stage).
+* :func:`hmt_memattn`    — the HMT plug-in's memory cross-attention
+  (Case Study 2), built by reusing the backbone's layer-0 attention
+  weights — mirroring the paper's "reuse existing linear and attention
+  modules" integration.
+
+Quantization behavior is driven by :class:`..quantize.QuantScheme`; all
+integer arithmetic happens inside the L1 kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    attention_fp,
+    attention_int8,
+    decode_linear,
+    dequantize_linear,
+    fht,
+    prefill_linear,
+    quantize_dynamic,
+    quantize_static,
+    rmsnorm,
+    rope,
+    swiglu,
+)
+from .kernels.ref import (
+    ref_dequantize,
+    ref_quant_params_dynamic,
+    ref_quantize,
+    rope_angles,
+)
+from .quantize import QuantScheme, static_scale
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Llama-architecture hyperparameters."""
+
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ffn: int
+    vocab: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    # stage-customized parallelism knobs used when invoking L1 kernels
+    prefill_tp: int = 8
+    prefill_wp: int = 128
+    decode_bp: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def n_params(self) -> int:
+        per_layer = (
+            self.d_model * self.d_model          # wq
+            + 2 * self.d_model * self.kv_dim     # wk, wv
+            + self.d_model * self.d_model        # wo
+            + 3 * self.d_model * self.d_ffn      # wg, wu, wd
+            + 2 * self.d_model                   # norms
+        )
+        return (
+            self.vocab * self.d_model * 2        # embed + lm_head
+            + self.n_layers * per_layer
+            + self.d_model
+        )
+
+
+def tiny() -> ModelConfig:
+    """CPU-executable config for artifacts (power-of-two dims for FHT).
+
+    Perf note (EXPERIMENTS.md §Perf): interpret-mode Pallas lowers each
+    grid program to a loop iteration in the HLO, so CPU execution time
+    scales with grid size. TP=64 / WP=512 keeps a real multi-tile grid
+    (8 token tiles per 512-row prefill) while cutting artifact execution
+    3.3× vs the original TP=8 / WP=128 tiling. On a real TPU the same
+    knobs would instead be tuned to the MXU/VMEM geometry (DESIGN.md §3).
+    """
+    return ModelConfig(n_layers=4, d_model=256, n_heads=8, n_kv_heads=2,
+                       d_ffn=512, vocab=512, max_seq=320,
+                       prefill_tp=64, prefill_wp=512)
+
+
+def llama32_1b() -> ModelConfig:
+    """The paper's target model (Table VI row 1); simulator-only."""
+    return ModelConfig(n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8,
+                       d_ffn=8192, vocab=128256, max_seq=131072,
+                       rope_theta=500000.0)
+
+
+# ---------------------------------------------------------------------------
+# Initialization and the FP training/reference forward
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    """Standard scaled-normal init; layout matches quantize.fold_rotation."""
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    d, hd = cfg.d_model, cfg.head_dim
+
+    def dense(k, fan_in, fan_out):
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) / jnp.sqrt(fan_in)
+
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + i], 7)
+        layers.append({
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "wq": dense(lk[0], d, cfg.n_heads * hd),
+            "wk": dense(lk[1], d, cfg.kv_dim),
+            "wv": dense(lk[2], d, cfg.kv_dim),
+            "wo": dense(lk[3], cfg.n_heads * hd, d),
+            "ffn_norm": jnp.ones((d,), jnp.float32),
+            "wg": dense(lk[4], d, cfg.d_ffn),
+            "wu": dense(lk[5], d, cfg.d_ffn),
+            "wd": dense(lk[6], cfg.d_ffn, d),
+        })
+    return {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, d), jnp.float32) * 0.02,
+        "layers": layers,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": dense(keys[1], d, cfg.vocab),
+    }
+
+
+def forward_fp(params, cfg: ModelConfig, tokens):
+    """Pure-jnp FP forward (training + the No_Quant oracle); tokens [B,S]."""
+    b, s = tokens.shape
+    hd = cfg.head_dim
+    x = params["embed"][tokens]                                   # [B,S,d]
+    cos, sin = rope_angles(jnp.arange(s), hd, cfg.rope_theta)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+
+    def norm(h, w):
+        var = jnp.mean(h * h, axis=-1, keepdims=True)
+        return h * jax.lax.rsqrt(var + 1e-5) * w
+
+    def rope_j(t):  # [B,H,S,hd]
+        t1, t2 = jnp.split(t, 2, axis=-1)
+        return jnp.concatenate([t1 * cos - t2 * sin, t1 * sin + t2 * cos], -1)
+
+    for lp in params["layers"]:
+        h = norm(x, lp["attn_norm"])
+        q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        q, k = rope_j(q), rope_j(k)
+        rep = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+        scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.float32(hd))
+        scores = jnp.where(mask, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhts,bhsd->bhtd", p, v).transpose(0, 2, 1, 3)
+        x = x + attn.reshape(b, s, -1) @ lp["wo"]
+        hf = norm(x, lp["ffn_norm"])
+        gate = hf @ lp["wg"]
+        x = x + ((gate * jax.nn.sigmoid(gate)) * (hf @ lp["wu"])) @ lp["wd"]
+
+    return norm(x, params["final_norm"]) @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Quantized datapath helpers (everything routes through L1 kernels)
+# ---------------------------------------------------------------------------
+
+def _linear(qp, x, scheme: QuantScheme, cfg: ModelConfig, stage: str):
+    """One FlexLLM linear module instance: [quant] → matmul → [dequant].
+
+    ``qp`` is either {"q","scale","col_sum"} (INT path) or a raw FP array.
+    ``stage`` selects the prefill TP×WP or decode BP datapath.
+    """
+    if isinstance(qp, dict) and "q" in qp:
+        tp = cfg.prefill_tp if stage == "prefill" else max(x.shape[0], 1)
+        qx, sx, zx = quantize_dynamic(x, scheme.linear_a_bits, symmetric=False,
+                                      token_parallelism=tp)
+        if stage == "prefill":
+            acc = prefill_linear(qx, qp["q"], cfg.prefill_tp, cfg.prefill_wp)
+        else:
+            acc = decode_linear(qx, qp["q"], cfg.decode_bp)
+        return dequantize_linear(acc, sx, zx, qp["scale"], qp["col_sum"],
+                                 token_parallelism=tp)
+    w = qp["fp"] if isinstance(qp, dict) else qp
+    if stage == "prefill":
+        return prefill_linear(x, w, cfg.prefill_tp, cfg.prefill_wp)
+    return decode_linear(x, w, cfg.decode_bp)
+
+
+def _layer_weights(lp, name, scheme):
+    """Weight operand for module ``name``: quant triple or raw FP matrix."""
+    entry = lp[name]
+    return entry
+
+
+def _attn_scales(calib_entry, bits: int = 8):
+    return (static_scale(calib_entry["q_amax"], bits),
+            static_scale(calib_entry["k_amax"], bits),
+            static_scale(calib_entry["v_amax"], bits))
+
+
+# ---------------------------------------------------------------------------
+# Prefill graphs
+# ---------------------------------------------------------------------------
+
+def _prefill_body(qparams, cfg: ModelConfig, scheme: QuantScheme, tokens,
+                  want_cache: bool):
+    """Shared prefill pipeline; returns (hidden [B,S,d], caches or None)."""
+    b, s = tokens.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = nh // nkv
+    fp = not scheme.is_quantized
+
+    x = qparams.get("params", qparams)["embed"][tokens].reshape(b * s, cfg.d_model)
+    layers = qparams.get("params", qparams)["layers"]
+    calib = qparams["calib"]
+    cos, sin = rope_angles(jnp.arange(s), hd, cfg.rope_theta)
+    causal = jnp.where(jnp.tril(jnp.ones((s, s), bool)), 0.0, NEG_INF)
+
+    k_slices, v_slices = [], []
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"], cfg.prefill_tp)
+        q = _linear(lp["wq"], h, scheme, cfg, "prefill")
+        k = _linear(lp["wk"], h, scheme, cfg, "prefill")
+        v = _linear(lp["wv"], h, scheme, cfg, "prefill")
+        # [B*S, H*hd] → [B*H, S, hd] for the head-parallel kernels
+        q = q.reshape(b, s, nh, hd).transpose(0, 2, 1, 3).reshape(b * nh, s, hd)
+        k = k.reshape(b, s, nkv, hd).transpose(0, 2, 1, 3).reshape(b * nkv, s, hd)
+        v = v.reshape(b, s, nkv, hd).transpose(0, 2, 1, 3).reshape(b * nkv, s, hd)
+        q = rope(q, cos, sin)
+        k = rope(k, cos, sin)
+
+        sq = sk = sv = None
+        if scheme.attn_mode == "fp":
+            kq, vq = k, v
+        elif scheme.attn_mode == "fp_kv4":
+            # Q0: FP query, dynamic asym per-token INT4 KV (fake-quant)
+            kf = k.reshape(b * nkv * s, hd)
+            vf = v.reshape(b * nkv * s, hd)
+            skd, zkd = ref_quant_params_dynamic(kf, 4, False, axis=-1)
+            svd, zvd = ref_quant_params_dynamic(vf, 4, False, axis=-1)
+            kq = ref_dequantize(ref_quantize(kf, skd, zkd, 4, False), skd, zkd).reshape(k.shape)
+            vq = ref_dequantize(ref_quantize(vf, svd, zvd, 4, False), svd, zvd).reshape(v.shape)
+        elif scheme.attn_mode == "dyn8":
+            # Q1: dynamic per-tensor symmetric INT8 (scales traced)
+            sq = jnp.maximum(jnp.max(jnp.abs(q)), 1e-8) / 127.0
+            sk = jnp.maximum(jnp.max(jnp.abs(k)), 1e-8) / 127.0
+            sv = jnp.maximum(jnp.max(jnp.abs(v)), 1e-8) / 127.0
+            kq = jnp.clip(jnp.round(k / sk), -127, 127)
+            vq = jnp.clip(jnp.round(v / sv), -127, 127)
+        else:  # "sta8": static calibrated scales (baked constants)
+            sq, sk, sv = _attn_scales(calib[li])
+            kq = quantize_static(k.reshape(-1, hd), sk, 0.0, 8, True).reshape(k.shape)
+            vq = quantize_static(v.reshape(-1, hd), sv, 0.0, 8, True).reshape(v.shape)
+
+        # Grouped-query attention without materializing repeated K/V:
+        # queries of the `rep` heads sharing one KV head are stacked on
+        # the Tq axis ([B·KV, rep·S, hd]) and the causal mask is tiled —
+        # exact same math, `rep`× fewer kernel programs and no repeated
+        # KV copies (EXPERIMENTS.md §Perf iteration 3).
+        def group_q(t):   # [B*H, S, hd] → [B*KV, rep*S, hd]
+            return (t.reshape(b, nkv, rep, s, hd)
+                     .reshape(b * nkv, rep * s, hd))
+
+        def ungroup(t):   # inverse of group_q
+            return t.reshape(b, nkv, rep, s, hd).reshape(b * nh, s, hd)
+
+        causal_rep = jnp.tile(causal, (rep, 1))
+        if scheme.attn_mode in ("fp", "fp_kv4"):
+            attn = ungroup(attention_fp(group_q(q), kq, vq, causal_rep))
+        else:
+            if scheme.attn_mode == "dyn8":
+                qq = jnp.clip(jnp.round(q / sq), -127, 127)
+            else:
+                qq = quantize_static(q.reshape(-1, hd), sq, 0.0, 8, True).reshape(q.shape)
+            attn = ungroup(attention_int8(group_q(qq), kq, vq, causal_rep, sq, sk, sv))
+
+        attn = attn.reshape(b, nh, s, hd).transpose(0, 2, 1, 3).reshape(b * s, nh * hd)
+        x = x + _linear(lp["wo"], attn, scheme, cfg, "prefill")
+
+        hf = rmsnorm(x, lp["ffn_norm"], cfg.prefill_tp)
+        gate = _linear(lp["wg"], hf, scheme, cfg, "prefill")
+        up = _linear(lp["wu"], hf, scheme, cfg, "prefill")
+        act = swiglu(gate, up, cfg.prefill_tp)
+        if scheme.fht_down:
+            act = fht(act, cfg.prefill_tp)
+        x = x + _linear(lp["wd"], act, scheme, cfg, "prefill")
+
+        if want_cache:
+            # Cache stores the integer-grid (or fake-quant FP for q0/noquant)
+            # values the decode attention consumes — KV8 traffic.
+            kc = kq.reshape(b, nkv, s, hd)
+            vc = vq.reshape(b, nkv, s, hd)
+            pad = cfg.max_seq - s
+            k_slices.append(jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0))))
+            v_slices.append(jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0))))
+
+    if want_cache:
+        k_cache = jnp.stack(k_slices)   # [L,B,KV,max_seq,hd]
+        v_cache = jnp.stack(v_slices)
+    else:
+        k_cache = v_cache = None
+    return x.reshape(b, s, cfg.d_model), k_cache, v_cache
+
+
+def _lm_head(qparams, cfg, scheme, h2d, stage):
+    params = qparams.get("params", qparams)
+    h2d = rmsnorm(h2d, params["final_norm"],
+                  cfg.prefill_tp if stage == "prefill" else h2d.shape[0])
+    lm = qparams.get("lm_head", params.get("lm_head"))
+    return _linear(lm, h2d, scheme, cfg, stage)
+
+
+def prefill_logits(qparams, cfg: ModelConfig, scheme: QuantScheme, tokens):
+    """Full-sequence logits [B, S, V] — the perplexity-ablation graph."""
+    b, s = tokens.shape
+    x, _, _ = _prefill_body(qparams, cfg, scheme, tokens, want_cache=False)
+    logits = _lm_head(qparams, cfg, scheme, x.reshape(b * s, cfg.d_model), "prefill")
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def summary_embedding(qparams, cfg: ModelConfig, scheme: QuantScheme, tokens):
+    """HMT summary pass: final-norm'd hidden state of the LAST position.
+
+    The HMT segment processor sends a summary prompt (half segment +
+    topic-token slot) through the backbone and reads the topic position's
+    hidden state as the summary vector S_n (Fig. 5(c)).
+    """
+    b, s = tokens.shape
+    x, _, _ = _prefill_body(qparams, cfg, scheme, tokens, want_cache=False)
+    last = x[:, -1, :]
+    params = qparams.get("params", qparams)
+    return rmsnorm(last, params["final_norm"], b)
+
+
+def prefill_serve(qparams, cfg: ModelConfig, scheme: QuantScheme, tokens):
+    """Serving prefill: (last-token logits [B, V], k_cache, v_cache)."""
+    b, s = tokens.shape
+    x, kc, vc = _prefill_body(qparams, cfg, scheme, tokens, want_cache=True)
+    last = x[:, -1, :]
+    logits = _lm_head(qparams, cfg, scheme, last, "decode")
+    return logits, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(qparams, cfg: ModelConfig, scheme: QuantScheme, token, pos,
+                k_cache, v_cache):
+    """One autoregressive step.
+
+    token [B] i32, pos scalar i32 (next write position, uniform across the
+    aligned batch — the coordinator guarantees alignment), caches
+    [L,B,KV,max_seq,hd]. Returns (logits [B,V], k_cache', v_cache').
+    """
+    b = token.shape[0]
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = nh // nkv
+    params = qparams.get("params", qparams)
+    layers = params["layers"]
+    calib = qparams["calib"]
+
+    x = params["embed"][token]                                  # [B, d]
+    cos, sin = rope_angles(pos[None].astype(jnp.float32), hd, cfg.rope_theta)
+    positions = jnp.arange(cfg.max_seq)
+    dec_mask = jnp.where(positions[None, :] <= pos, 0.0, NEG_INF)  # [1, max_seq]
+
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"], b)
+        q = _linear(lp["wq"], h, scheme, cfg, "decode")
+        k = _linear(lp["wk"], h, scheme, cfg, "decode")
+        v = _linear(lp["wv"], h, scheme, cfg, "decode")
+        q = q.reshape(b * nh, 1, hd)
+        k = k.reshape(b * nkv, 1, hd)
+        v = v.reshape(b * nkv, 1, hd)
+        q = rope(q, cos, sin)
+        k = rope(k, cos, sin)
+
+        if scheme.attn_mode == "sta8":
+            sq, sk, sv = _attn_scales(calib[li])
+            kq = quantize_static(k.reshape(-1, hd), sk, 0.0, 8, True).reshape(k.shape)
+            vq = quantize_static(v.reshape(-1, hd), sv, 0.0, 8, True).reshape(v.shape)
+        elif scheme.attn_mode == "fp":
+            sq = sk = sv = None
+            kq, vq = k, v
+        else:
+            raise NotImplementedError(
+                f"decode_step supports sta8/fp schemes, not {scheme.attn_mode}")
+
+        # cache update at [li, :, :, pos, :]
+        knew = kq.reshape(b, nkv, 1, hd)[None]
+        vnew = vq.reshape(b, nkv, 1, hd)[None]
+        k_cache = jax.lax.dynamic_update_slice(k_cache, knew, (li, 0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, vnew, (li, 0, 0, pos, 0))
+
+        # grouped-query decode: no repeated-KV materialization; the `rep`
+        # queries sharing a KV head ride the Tq axis
+        kall = k_cache[li].reshape(b * nkv, cfg.max_seq, hd)
+        vall = v_cache[li].reshape(b * nkv, cfg.max_seq, hd)
+        dec_mask_rep = jnp.broadcast_to(dec_mask, (rep, cfg.max_seq))
+
+        def group_q(t):   # [B*H, 1, hd] → [B*KV, rep, hd]
+            return t.reshape(b * nkv, rep, hd)
+
+        if scheme.attn_mode == "sta8":
+            qq = quantize_static(q.reshape(-1, hd), sq, 0.0, 8, True).reshape(q.shape)
+            attn = attention_int8(group_q(qq), kall, vall, dec_mask_rep, sq, sk, sv)
+        else:
+            attn = attention_fp(group_q(q), kall, vall, dec_mask_rep)
+
+        attn = attn.reshape(b, nh * hd)
+        x = x + _linear(lp["wo"], attn, scheme, cfg, "decode")
+
+        hf = rmsnorm(x, lp["ffn_norm"], b)
+        gate = _linear(lp["wg"], hf, scheme, cfg, "decode")
+        up = _linear(lp["wu"], hf, scheme, cfg, "decode")
+        act = swiglu(gate, up, b)
+        if scheme.fht_down:
+            act = fht(act, b)
+        x = x + _linear(lp["wd"], act, scheme, cfg, "decode")
+
+    logits = _lm_head(qparams, cfg, scheme, x, "decode")
+    return logits, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# HMT plug-in: memory cross-attention (Case Study 2)
+# ---------------------------------------------------------------------------
+
+def hmt_memattn(params, cfg: ModelConfig, summary, memories):
+    """Cross-attention between a segment summary and the memory queue.
+
+    summary [B, d] (topic summary vector S_n), memories [N, d] (the most
+    recent N memory embeddings). Reuses the backbone's layer-0 attention
+    weights — the paper's module-reuse integration. Returns the retrieved
+    prompt embedding P_n [B, d].
+    """
+    b = summary.shape[0]
+    n = memories.shape[0]
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = nh // nkv
+    lp = params["layers"][0]
+
+    hq = rmsnorm(summary, lp["attn_norm"], b)
+    hm = rmsnorm(memories, lp["attn_norm"], min(n, 8))
+    q = decode_linear(hq, lp["wq"], cfg.decode_bp).reshape(b, nh, 1, hd)
+    k = decode_linear(hm, lp["wk"], cfg.decode_bp).reshape(n, nkv, 1, hd)
+    v = decode_linear(hm, lp["wv"], cfg.decode_bp).reshape(n, nkv, 1, hd)
+    # memories form the Tk axis; no positional encoding (set semantics)
+    k = k.transpose(1, 2, 0, 3).reshape(nkv, n, hd)
+    v = v.transpose(1, 2, 0, 3).reshape(nkv, n, hd)
+    k = jnp.repeat(k, rep, axis=0)   # [H, N, hd]
+    v = jnp.repeat(v, rep, axis=0)
+    # queries: [B*H, 1, hd] against shared memory keys per head
+    q = q.reshape(b, nh, hd)
+    out = []
+    zero_mask = jnp.zeros((1, n), jnp.float32)
+    for bi in range(b):  # B is tiny (≤4) in the HMT pathway
+        o = attention_fp(q[bi][:, None, :], k, v, zero_mask)
+        out.append(o.reshape(nh * hd))
+    attn = jnp.stack(out)            # [B, H*hd]
+    return summary + decode_linear(attn, lp["wo"], cfg.decode_bp)

@@ -1,0 +1,222 @@
+"""SpinQuant-style quantization flow (paper Sec. IV-A, Table V).
+
+Implements the paper's hardware-oriented refinements on top of a
+SpinQuant-like rotation scheme:
+
+* **Residual rotation (R1), folded** — an orthogonal Hadamard rotation of
+  the residual stream absorbed exactly into adjacent weights. RMSNorm
+  weights are first folded into the following projections (plain RMSNorm
+  commutes with orthogonal rotations), so no boundary FP rotations remain
+  at runtime — the paper's "remove boundary rotations" refinement.
+* **Online FHT (R4)** before ``down_proj`` — the only rotation kept at
+  runtime, implemented by the L1 FHT butterfly kernel (d·log d adds).
+* **Ablation grid Q0–Q3** (Table V):
+
+  ==========  =========  =========  ==================  ==========
+  config      W          A          attention           lm_head
+  ==========  =========  =========  ==================  ==========
+  no_quant    FP         FP         FP                  FP
+  q0          INT4       INT4       FP query + KV4      FP
+  q1          INT4       INT4       Dynamic INT8        FP
+  q2          INT4       INT4       Static INT8         FP
+  q3 (final)  INT4       INT4       Static INT8         INT4
+  ==========  =========  =========  ==================  ==========
+
+Weights: symmetric per-channel INT4. Activations: dynamic asymmetric
+per-token INT4 (projection/FFN inputs). KV cache: static symmetric INT8
+per (layer, tensor) for q1–q3 (the paper's KV8), dynamic per-token INT4
+for q0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import (
+    hadamard_matrix,
+    ref_attention_fp,
+    ref_quant_params_dynamic,
+    ref_quantize,
+    ref_rmsnorm,
+    ref_rope,
+    rope_angles,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantScheme:
+    """One column of Table V, as a machine-readable scheme."""
+
+    name: str
+    linear_w_bits: int | None      # None → FP weights
+    linear_a_bits: int | None      # None → FP activations
+    attn_mode: str                 # "fp" | "fp_kv4" | "dyn8" | "sta8"
+    lm_head_quant: bool            # INT4 vocab projection (Q3)
+    rotate: bool                   # folded residual rotation (all q*)
+    fht_down: bool                 # online FHT before down_proj
+
+    @property
+    def kv_bits(self) -> int | None:
+        return {"fp": None, "fp_kv4": 4, "dyn8": 8, "sta8": 8}[self.attn_mode]
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.linear_w_bits is not None
+
+
+SCHEMES: dict[str, QuantScheme] = {
+    "noquant": QuantScheme("noquant", None, None, "fp", False, False, False),
+    "q0": QuantScheme("q0", 4, 4, "fp_kv4", False, True, True),
+    "q1": QuantScheme("q1", 4, 4, "dyn8", False, True, True),
+    "q2": QuantScheme("q2", 4, 4, "sta8", False, True, True),
+    "q3": QuantScheme("q3", 4, 4, "sta8", True, True, True),
+}
+
+
+# ---------------------------------------------------------------------------
+# Rotation folding
+# ---------------------------------------------------------------------------
+
+def fold_rotation(params, cfg):
+    """Fold RMSNorm weights into adjacent projections, then rotate the
+    residual stream by a fixed Hadamard matrix R (exact, FP-equivalent).
+
+    Returns a new param pytree with every norm weight = 1 and:
+      embed' = embed·R, wq' = Rᵀ(diag(n)·wq), ..., wo' = wo·R,
+      wd' = wd·R, lm_head' = Rᵀ(diag(n_f)·lm_head).
+    """
+    r = hadamard_matrix(cfg.d_model)
+    out = {"embed": params["embed"] @ r, "layers": [], "final_norm": jnp.ones_like(params["final_norm"])}
+    for lp in params["layers"]:
+        n_attn = lp["attn_norm"][:, None]
+        n_ffn = lp["ffn_norm"][:, None]
+        out["layers"].append({
+            "attn_norm": jnp.ones_like(lp["attn_norm"]),
+            "wq": r.T @ (n_attn * lp["wq"]),
+            "wk": r.T @ (n_attn * lp["wk"]),
+            "wv": r.T @ (n_attn * lp["wv"]),
+            "wo": lp["wo"] @ r,
+            "ffn_norm": jnp.ones_like(lp["ffn_norm"]),
+            "wg": r.T @ (n_ffn * lp["wg"]),
+            "wu": r.T @ (n_ffn * lp["wu"]),
+            "wd": lp["wd"] @ r,
+        })
+    n_final = params["final_norm"][:, None]
+    out["lm_head"] = r.T @ (n_final * params["lm_head"])
+    return out
+
+
+def fold_fht_down(params, cfg):
+    """Absorb the online FHT into down_proj: wd' = H·wd (H symmetric,
+    H·H = I), so quant(FHT(x)) @ wd' ≈ x @ wd exactly in FP."""
+    h = hadamard_matrix(cfg.d_ffn)
+    out = dict(params)
+    out["layers"] = [dict(lp, wd=h @ lp["wd"]) for lp in params["layers"]]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (symmetric per-channel INT4)
+# ---------------------------------------------------------------------------
+
+def quantize_weight(w, bits: int):
+    """→ (q int-grid [K,N], scale [1,N], col_sum [1,N]) per-channel sym."""
+    scale, _ = ref_quant_params_dynamic(w, bits, True, axis=0)
+    q = ref_quantize(w, scale, jnp.zeros_like(scale), bits, True)
+    return q, scale, jnp.sum(q, axis=0, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Static calibration (attention INT8 scales, per layer)
+# ---------------------------------------------------------------------------
+
+def calibrate(params, cfg, tokens):
+    """Run the FP model over a calibration batch recording max-|x| at the
+    attention q/k/v sites of every layer (post-RoPE for q/k, matching the
+    hardware insertion point). Returns per-layer static symmetric scales.
+    """
+    b, s = tokens.shape
+    hd = cfg.head_dim
+    x = params["embed"][tokens].reshape(b * s, cfg.d_model)
+    pos = jnp.arange(s)
+    cos, sin = rope_angles(pos, hd, cfg.rope_theta)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    stats = []
+    for lp in params["layers"]:
+        h = ref_rmsnorm(x, lp["attn_norm"])
+        q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, hd)
+        k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        q = ref_rope(q.transpose(0, 2, 1, 3), cos, sin)
+        k = ref_rope(k.transpose(0, 2, 1, 3), cos, sin)
+        v = v.transpose(0, 2, 1, 3)
+        stats.append({
+            "q_amax": float(jnp.max(jnp.abs(q))),
+            "k_amax": float(jnp.max(jnp.abs(k))),
+            "v_amax": float(jnp.max(jnp.abs(v))),
+        })
+        rep = cfg.n_heads // cfg.n_kv_heads
+        kr = jnp.repeat(k, rep, axis=1)
+        vr = jnp.repeat(v, rep, axis=1)
+        attn = jax.vmap(lambda qq, kk, vv: ref_attention_fp(qq, kk, vv, mask))(q, kr, vr)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b * s, cfg.n_heads * hd)
+        x = x + attn @ lp["wo"]
+        hf = ref_rmsnorm(x, lp["ffn_norm"])
+        gate = hf @ lp["wg"]
+        up = hf @ lp["wu"]
+        act = (gate * jax.nn.sigmoid(gate)) * up
+        x = x + act @ lp["wd"]
+    return stats
+
+
+def static_scale(amax: float, bits: int) -> float:
+    return max(amax, 1e-8) / (2 ** (bits - 1) - 1)
+
+
+# ---------------------------------------------------------------------------
+# Full scheme preparation
+# ---------------------------------------------------------------------------
+
+def prepare(params, cfg, scheme: QuantScheme, calib_tokens):
+    """Produce the deploy-time parameter pytree for ``scheme``.
+
+    FP schemes pass weights through; quantized schemes fold rotations,
+    quantize every linear to (q, scale, col_sum) triples and attach the
+    calibrated static attention scales.
+    """
+    p = params
+    if scheme.rotate:
+        p = fold_rotation(p, cfg)
+    if scheme.fht_down:
+        p = fold_fht_down(p, cfg)
+
+    calib = calibrate(p, cfg, calib_tokens)
+
+    if not scheme.is_quantized:
+        return {"params": p, "calib": calib, "scheme": scheme.name}
+
+    wb = scheme.linear_w_bits
+    qlayers = []
+    for lp in p["layers"]:
+        ql = {"attn_norm": lp["attn_norm"], "ffn_norm": lp["ffn_norm"]}
+        for name in ("wq", "wk", "wv", "wo", "wg", "wu", "wd"):
+            q, s, c = quantize_weight(lp[name], wb)
+            ql[name] = {"q": q, "scale": s, "col_sum": c}
+        qlayers.append(ql)
+    out = {
+        "embed": p["embed"],
+        "layers": qlayers,
+        "final_norm": p["final_norm"],
+        "calib": calib,
+        "scheme": scheme.name,
+    }
+    if scheme.lm_head_quant:
+        q, s, c = quantize_weight(p["lm_head"], wb)
+        out["lm_head"] = {"q": q, "scale": s, "col_sum": c}
+    else:
+        out["lm_head"] = {"fp": p["lm_head"]}
+    return out

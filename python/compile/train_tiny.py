@@ -1,0 +1,82 @@
+"""Build-time trainer for the tiny Llama-architecture model (DESIGN.md §7).
+
+Trains the CPU-executable model on the synthetic Markov corpus so the
+quantization ablation (Table V) measures perplexity of a *trained* model,
+not noise. Hand-rolled Adam keeps the build dependency-free (no optax).
+
+Run time: a few hundred jitted steps on CPU — tens of seconds; results
+are cached in ``artifacts/`` by aot.py so incremental builds skip it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, forward_fp, init_params
+
+
+def loss_fn(params, cfg: ModelConfig, tokens):
+    """Next-token cross-entropy over [B, S] token windows."""
+    logits = forward_fp(params, cfg, tokens)           # [B,S,V]
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    corr = jnp.sqrt(1 - b2**tf) / (1 - b1**tf)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * corr * m_ / (jnp.sqrt(v_) + eps), params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def train_step(params, state, tokens, cfg: ModelConfig, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, tokens)
+    params, state = adam_update(grads, state, params, lr)
+    return params, state, loss
+
+
+def eval_ppl_fp(params, cfg: ModelConfig, batches):
+    """FP perplexity over deterministic eval batches [n, B, S]."""
+    total, count = 0.0, 0
+    fwd = jax.jit(functools.partial(loss_fn, cfg=cfg))
+    for b in batches:
+        total += float(fwd(params, tokens=jnp.asarray(b))) * b[:, 1:].size
+        count += b[:, 1:].size
+    return float(np.exp(total / count))
+
+
+def train(cfg: ModelConfig, steps: int = 600, batch: int = 32, seq: int = 64,
+          lr: float = 3e-3, seed: int = 0, log_every: int = 100,
+          n_train_tokens: int = 200_000):
+    """Train from scratch; returns (params, loss_curve)."""
+    train_tokens = corpus.generate(n_train_tokens, stream_seed=7)
+    rng = np.random.default_rng(seed)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    state = adam_init(params)
+    curve = []
+    for step in range(steps):
+        # cosine decay to 10% of peak
+        cur_lr = lr * (0.1 + 0.9 * 0.5 * (1 + np.cos(np.pi * step / steps)))
+        toks = jnp.asarray(corpus.windows(train_tokens, batch, seq, rng))
+        params, state, loss = train_step(params, state, toks, cfg, cur_lr)
+        if step % log_every == 0 or step == steps - 1:
+            curve.append((step, float(loss)))
+            print(f"  train step {step:4d}  loss {float(loss):.4f}  ppl {np.exp(float(loss)):.2f}")
+    return params, curve

@@ -1,0 +1,274 @@
+"""Kernel vs pure-jnp oracle — the CORE correctness signal (L1).
+
+Every Pallas kernel is checked against its ref.py oracle across the
+parallelism knobs (TP/BP/WP tilings) the FlexLLM templates expose.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    attention_fp,
+    attention_int8,
+    decode_linear,
+    dequantize_linear,
+    fht,
+    prefill_linear,
+    quantize_dynamic,
+    quantize_static,
+    rmsnorm,
+    rope,
+    swiglu,
+)
+from compile.kernels.ref import (
+    ref_attention_fp,
+    ref_attention_int8,
+    ref_dequantize,
+    ref_fht,
+    ref_linear_dequant,
+    ref_linear_int,
+    ref_pack_int4,
+    ref_quant_linear,
+    ref_quant_params_dynamic,
+    ref_quantize,
+    ref_rmsnorm,
+    ref_rope,
+    ref_swiglu,
+    ref_unpack_int4,
+    rope_angles,
+)
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("symmetric", [True, False])
+@pytest.mark.parametrize("tp", [1, 4, 8, 16])
+def test_quantize_dynamic_matches_ref(bits, symmetric, tp):
+    x = rand(0, 16, 32, scale=3.0)
+    q, s, z = quantize_dynamic(x, bits, symmetric, token_parallelism=tp)
+    sr, zr = ref_quant_params_dynamic(x, bits, symmetric, axis=-1)
+    qr = ref_quantize(x, sr, zr, bits, symmetric)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+
+
+@pytest.mark.parametrize("bits,symmetric", [(8, True), (8, False), (4, True)])
+def test_quantize_static_matches_ref(bits, symmetric):
+    x = rand(1, 12, 24, scale=2.0)
+    scale, zero = (0.05, 0.0) if symmetric else (0.05, -1.5)
+    q = quantize_static(x, scale, zero, bits, symmetric, token_parallelism=4)
+    qr = ref_quantize(x, jnp.float32(scale), jnp.float32(zero), bits, symmetric)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+
+
+def test_quantize_roundtrip_error_bound():
+    """|x - dequant(quant(x))| ≤ scale/2 on the representable range."""
+    x = rand(2, 8, 64, scale=4.0)
+    for bits in (4, 8):
+        q, s, z = quantize_dynamic(x, bits, symmetric=False)
+        err = jnp.abs(ref_dequantize(q, s, z) - x)
+        assert float(jnp.max(err - s / 2)) <= 1e-5
+
+
+def test_dequantize_linear_matches_ref():
+    x = rand(3, 16, 32, scale=2.0)
+    w = rand(4, 32, 24)
+    sx, zx = ref_quant_params_dynamic(x, 4, False, axis=-1)
+    qx = ref_quantize(x, sx, zx, 4, False)
+    sw, _ = ref_quant_params_dynamic(w, 4, True, axis=0)
+    qw = ref_quantize(w, sw, jnp.zeros_like(sw), 4, True)
+    acc = ref_linear_int(qx, qw)
+    wc = jnp.sum(qw, axis=0, keepdims=True)
+    got = dequantize_linear(acc, sx, zx, sw, wc, token_parallelism=8)
+    want = ref_linear_dequant(acc, sx, zx, sw, wc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-6)
+
+
+def test_quantized_linear_approximates_fp():
+    """The W4A4 datapath approximates the FP matmul (sanity on error scale)."""
+    x = rand(5, 32, 64)
+    w = rand(6, 64, 48, scale=0.1)
+    y_fp = x @ w
+    y_q = ref_quant_linear(x, w, 4, 4)
+    rel = float(jnp.linalg.norm(y_q - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.15, f"W4A4 relative error {rel} unexpectedly large"
+    y_q8 = ref_quant_linear(x, w, 8, 8)
+    rel8 = float(jnp.linalg.norm(y_q8 - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel8 < rel / 4, "INT8 should be much closer than INT4"
+
+
+# ---------------------------------------------------------------------------
+# Linear datapaths (TP×WP / BP tilings)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tp,wp", [(1, 16), (4, 16), (8, 64), (16, 128), (5, 7)])
+def test_prefill_linear_tilings(tp, wp):
+    qx = jnp.round(rand(7, 20, 48, scale=7.0))
+    qw = jnp.round(rand(8, 48, 56, scale=7.0))
+    got = prefill_linear(qx, qw, token_parallelism=tp, weight_parallelism=wp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(qx @ qw), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bp", [1, 2, 4, 8])
+def test_decode_linear_blockings(bp):
+    qx = jnp.round(rand(9, 4, 32, scale=7.0))
+    qw = jnp.round(rand(10, 32, 64, scale=7.0))
+    got = decode_linear(qx, qw, block_parallelism=bp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(qx @ qw), rtol=1e-6)
+
+
+def test_linear_integer_exactness():
+    """Integer-grid inputs must produce exact integer accumulators."""
+    qx = jnp.round(rand(11, 8, 16, scale=7.0))
+    qw = jnp.round(rand(12, 16, 8, scale=7.0))
+    acc = prefill_linear(qx, qw, 4, 8)
+    assert float(jnp.max(jnp.abs(acc - jnp.round(acc)))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# INT4 packing
+# ---------------------------------------------------------------------------
+
+def test_int4_pack_roundtrip():
+    q = jnp.round(rand(13, 6, 32, scale=7.0)).clip(-8, 7)
+    np.testing.assert_array_equal(np.asarray(ref_unpack_int4(ref_pack_int4(q))),
+                                  np.asarray(q))
+
+
+def test_int4_pack_range():
+    q = jnp.round(rand(14, 4, 16, scale=7.0)).clip(-8, 7)
+    p = ref_pack_int4(q)
+    assert float(jnp.min(p)) >= 0.0 and float(jnp.max(p)) <= 255.0
+    assert p.shape == (4, 8)
+
+
+# ---------------------------------------------------------------------------
+# FHT
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [2, 8, 64, 512])
+def test_fht_matches_hadamard_matmul(d):
+    x = rand(15, 8, d, scale=2.0)
+    np.testing.assert_allclose(np.asarray(fht(x)), np.asarray(ref_fht(x)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fht_is_involution():
+    x = rand(16, 4, 128)
+    np.testing.assert_allclose(np.asarray(fht(fht(x))), np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fht_preserves_norm():
+    x = rand(17, 4, 256)
+    np.testing.assert_allclose(float(jnp.linalg.norm(fht(x))),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+
+
+def test_fht_spreads_outliers():
+    """The outlier-mitigation property SpinQuant relies on: a single huge
+    channel spike gets spread across all channels, shrinking max/rms."""
+    x = jnp.zeros((1, 256)).at[0, 3].set(100.0)
+    y = fht(x)
+    assert float(jnp.max(jnp.abs(y))) < float(jnp.max(jnp.abs(x))) / 10
+
+
+# ---------------------------------------------------------------------------
+# Non-linear modules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tp", [1, 4, 8])
+def test_rmsnorm_matches_ref(tp):
+    x = rand(18, 16, 32, scale=3.0)
+    w = rand(19, 32) + 1.0
+    np.testing.assert_allclose(np.asarray(rmsnorm(x, w, tp)),
+                               np.asarray(ref_rmsnorm(x, w)), rtol=1e-5, atol=1e-6)
+
+
+def test_swiglu_matches_ref():
+    g, u = rand(20, 8, 64), rand(21, 8, 64)
+    np.testing.assert_allclose(np.asarray(swiglu(g, u)),
+                               np.asarray(ref_swiglu(g, u)), rtol=1e-5, atol=1e-6)
+
+
+def test_rope_matches_ref():
+    x = rand(22, 6, 10, 32)
+    cos, sin = rope_angles(jnp.arange(10), 32)
+    np.testing.assert_allclose(np.asarray(rope(x, cos, sin)),
+                               np.asarray(ref_rope(x, cos, sin)), rtol=1e-5, atol=1e-6)
+
+
+def test_rope_preserves_norm():
+    x = rand(23, 4, 8, 16)
+    cos, sin = rope_angles(jnp.arange(8), 16)
+    np.testing.assert_allclose(float(jnp.linalg.norm(rope(x, cos, sin))),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+def _mk_attention_inputs(key, h, tq, tk, hd):
+    q = rand(key, h, tq, hd)
+    k = rand(key + 1, h, tk, hd)
+    v = rand(key + 2, h, tk, hd)
+    mask_bool = jnp.tril(jnp.ones((tq, tk), bool), k=tk - tq)
+    mask_add = jnp.where(mask_bool, 0.0, -1e30)
+    return q, k, v, mask_bool, mask_add
+
+
+def test_attention_fp_matches_ref():
+    q, k, v, mb, ma = _mk_attention_inputs(24, 4, 8, 8, 16)
+    got = attention_fp(q, k, v, ma)
+    want = ref_attention_fp(q, k, v, mb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_attention_int8_matches_ref():
+    q, k, v, mb, ma = _mk_attention_inputs(27, 4, 6, 12, 16)
+    sq = sk = sv = 1.0 / 32.0
+    qq = jnp.clip(jnp.round(q / sq), -127, 127)
+    qk = jnp.clip(jnp.round(k / sk), -127, 127)
+    qv = jnp.clip(jnp.round(v / sv), -127, 127)
+    got = attention_int8(qq, qk, qv, ma, sq, sk, sv)
+    want = ref_attention_int8(qq, sq, qk, sk, qv, sv, mb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_attention_int8_approximates_fp():
+    q, k, v, mb, ma = _mk_attention_inputs(30, 2, 8, 8, 32)
+    sq = float(jnp.max(jnp.abs(q))) / 127
+    sk = float(jnp.max(jnp.abs(k))) / 127
+    sv = float(jnp.max(jnp.abs(v))) / 127
+    qq = jnp.clip(jnp.round(q / sq), -127, 127)
+    qk = jnp.clip(jnp.round(k / sk), -127, 127)
+    qv = jnp.clip(jnp.round(v / sv), -127, 127)
+    got = attention_int8(qq, qk, qv, ma, sq, sk, sv)
+    want = ref_attention_fp(q, k, v, mb)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.05, f"INT8 attention relative error {rel}"
+
+
+def test_attention_decode_mask():
+    """Single-query decode masking: only positions ≤ pos contribute."""
+    h, tk, hd = 2, 16, 8
+    q = rand(33, h, 1, hd)
+    k = rand(34, h, tk, hd)
+    v = rand(35, h, tk, hd)
+    pos = 5
+    ma = jnp.where(jnp.arange(tk)[None, :] <= pos, 0.0, -1e30)
+    got = attention_fp(q, k, v, ma)
+    want = ref_attention_fp(q, k[:, : pos + 1], v[:, : pos + 1],
+                            jnp.ones((1, pos + 1), bool))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)

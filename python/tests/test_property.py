@@ -1,0 +1,184 @@
+"""Hypothesis property sweeps over the Pallas kernels (L1).
+
+Sweeps shapes / dtypes / parallelism knobs and asserts allclose against
+the pure-jnp oracles in ref.py — the paper's template-parameter surface
+(Table III) exercised adversarially rather than pointwise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention_int8,
+    decode_linear,
+    dequantize_linear,
+    fht,
+    prefill_linear,
+    quantize_dynamic,
+    quantize_static,
+    rmsnorm,
+    swiglu,
+)
+from compile.kernels.ref import (
+    ref_attention_int8,
+    ref_fht,
+    ref_linear_dequant,
+    ref_quant_params_dynamic,
+    ref_quantize,
+    ref_rmsnorm,
+    ref_swiglu,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def arr(seed, *shape, scale=2.0):
+    return jax.random.normal(jax.random.PRNGKey(seed % (2**31)), shape, jnp.float32) * scale
+
+
+@settings(**SETTINGS)
+@given(
+    tokens=st.integers(1, 24),
+    dim=st.integers(1, 48),
+    bits=st.sampled_from([2, 4, 8]),
+    symmetric=st.booleans(),
+    tp=st.integers(1, 16),
+    seed=st.integers(0, 10_000),
+)
+def test_dynamic_quantizer_sweep(tokens, dim, bits, symmetric, tp, seed):
+    x = arr(seed, tokens, dim, scale=5.0)
+    q, s, z = quantize_dynamic(x, bits, symmetric, token_parallelism=tp)
+    sr, zr = ref_quant_params_dynamic(x, bits, symmetric, axis=-1)
+    qr = ref_quantize(x, sr, zr, bits, symmetric)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    # range invariant: quantized values live on the bits-bit grid
+    lo = -(2 ** (bits - 1) - 1) if symmetric else 0
+    hi = 2 ** (bits - 1) - 1 if symmetric else 2**bits - 1
+    assert float(jnp.min(q)) >= lo and float(jnp.max(q)) <= hi
+    # reconstruction error bound: |x - (s·q + z)| ≤ s/2 (+ clip slack)
+    if not symmetric:
+        err = jnp.abs(q * s + z - x)
+        assert float(jnp.max(err - s / 2)) <= 1e-5
+
+
+@settings(**SETTINGS)
+@given(
+    tokens=st.integers(1, 20),
+    dim=st.integers(1, 40),
+    bits=st.sampled_from([4, 8]),
+    scale=st.floats(0.01, 2.0),
+    tp=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_static_quantizer_sweep(tokens, dim, bits, scale, tp, seed):
+    x = arr(seed, tokens, dim)
+    q = quantize_static(x, scale, 0.0, bits, True, token_parallelism=tp)
+    qr = ref_quantize(x, jnp.float32(scale), jnp.float32(0.0), bits, True)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 24),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    tp=st.integers(1, 16),
+    wp=st.integers(1, 64),
+    seed=st.integers(0, 10_000),
+)
+def test_prefill_linear_sweep(t, k, n, tp, wp, seed):
+    qx = jnp.round(arr(seed, t, k, scale=7.0))
+    qw = jnp.round(arr(seed + 1, k, n, scale=7.0))
+    got = prefill_linear(qx, qw, token_parallelism=tp, weight_parallelism=wp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(qx @ qw), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 8),
+    k=st.integers(1, 48),
+    n=st.integers(1, 64),
+    bp=st.integers(1, 16),
+    seed=st.integers(0, 10_000),
+)
+def test_decode_linear_sweep(b, k, n, bp, seed):
+    qx = jnp.round(arr(seed, b, k, scale=7.0))
+    qw = jnp.round(arr(seed + 1, k, n, scale=7.0))
+    got = decode_linear(qx, qw, block_parallelism=bp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(qx @ qw), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 16),
+    n=st.integers(1, 32),
+    tp=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_dequantizer_sweep(t, n, tp, seed):
+    acc = jnp.round(arr(seed, t, n, scale=50.0))
+    sx = jnp.abs(arr(seed + 1, t, 1, scale=0.1)) + 1e-3
+    zx = arr(seed + 2, t, 1, scale=0.5)
+    ws = jnp.abs(arr(seed + 3, 1, n, scale=0.1)) + 1e-3
+    wc = jnp.round(arr(seed + 4, 1, n, scale=20.0))
+    got = dequantize_linear(acc, sx, zx, ws, wc, token_parallelism=tp)
+    want = ref_linear_dequant(acc, sx, zx, ws, wc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 12),
+    logd=st.integers(0, 9),
+    tp=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_fht_sweep(t, logd, tp, seed):
+    d = 1 << logd
+    x = arr(seed, t, d)
+    got = fht(x, token_parallelism=tp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref_fht(x)),
+                               rtol=2e-4, atol=1e-5)
+    # orthogonality: norm preserved
+    np.testing.assert_allclose(float(jnp.linalg.norm(got)),
+                               float(jnp.linalg.norm(x)), rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 16),
+    d=st.integers(1, 48),
+    tp=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_nonlinear_sweep(t, d, tp, seed):
+    x = arr(seed, t, d)
+    w = arr(seed + 1, d) + 1.0
+    np.testing.assert_allclose(np.asarray(rmsnorm(x, w, tp)),
+                               np.asarray(ref_rmsnorm(x, w)), rtol=1e-4, atol=1e-5)
+    g, u = arr(seed + 2, t, d), arr(seed + 3, t, d)
+    np.testing.assert_allclose(np.asarray(swiglu(g, u, tp)),
+                               np.asarray(ref_swiglu(g, u)), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 6),
+    tq=st.integers(1, 8),
+    tk=st.integers(1, 12),
+    hd=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 10_000),
+)
+def test_attention_int8_sweep(h, tq, tk, hd, seed):
+    scale = 1.0 / 16.0
+    q = jnp.clip(jnp.round(arr(seed, h, tq, hd, scale=20.0)), -127, 127)
+    k = jnp.clip(jnp.round(arr(seed + 1, h, tk, hd, scale=20.0)), -127, 127)
+    v = jnp.clip(jnp.round(arr(seed + 2, h, tk, hd, scale=20.0)), -127, 127)
+    mask_bool = jnp.tril(jnp.ones((tq, tk), bool), k=tk - tq)
+    mask_add = jnp.where(mask_bool, 0.0, -1e30)
+    got = attention_int8(q, k, v, mask_add, scale, scale, scale)
+    want = ref_attention_int8(q, scale, k, scale, v, scale, mask_bool)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

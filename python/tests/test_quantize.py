@@ -1,0 +1,124 @@
+"""Quantization-flow tests: rotation folding exactness, calibration, schemes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ModelConfig, forward_fp, init_params
+from compile.quantize import (
+    SCHEMES,
+    calibrate,
+    fold_fht_down,
+    fold_rotation,
+    prepare,
+    quantize_weight,
+    static_scale,
+)
+from compile.kernels.ref import hadamard_matrix, ref_fht
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ffn=128, vocab=64, max_seq=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    # give norms non-trivial weights so folding is actually exercised
+    params["final_norm"] = params["final_norm"] * 1.3
+    for lp in params["layers"]:
+        lp["attn_norm"] = lp["attn_norm"] * 0.8
+        lp["ffn_norm"] = lp["ffn_norm"] * 1.1
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    return cfg, params, tokens
+
+
+def test_fold_rotation_is_fp_exact(small):
+    """The folded-rotation model must be FP-equivalent to the original —
+    the paper's 'remove boundary rotations' refinement relies on this."""
+    cfg, params, tokens = small
+    base = forward_fp(params, cfg, tokens)
+    rot = forward_fp(fold_rotation(params, cfg), cfg, tokens)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(rot),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_fold_rotation_normalizes_norms(small):
+    cfg, params, _ = small
+    rot = fold_rotation(params, cfg)
+    for lp in rot["layers"]:
+        np.testing.assert_array_equal(np.asarray(lp["attn_norm"]),
+                                      np.ones(cfg.d_model, np.float32))
+
+
+def test_fold_fht_matches_online_fht(small):
+    """quant-free check: FHT(x) @ (H·wd) == x @ wd since H·H = I."""
+    cfg, params, _ = small
+    folded = fold_fht_down(params, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, cfg.d_ffn))
+    for lp, lf in zip(params["layers"], folded["layers"]):
+        want = x @ lp["wd"]
+        got = ref_fht(x) @ lf["wd"]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_rotation_reduces_outlier_ratio(small):
+    """The point of SpinQuant: rotation shrinks max/rms of the hidden
+    stream, making INT4 activation grids usable."""
+    cfg, params, tokens = small
+    x = params["embed"][tokens].reshape(-1, cfg.d_model)
+    # plant outlier channels (LLM-style systematic outliers)
+    x = x.at[:, 5].multiply(80.0)
+    r = hadamard_matrix(cfg.d_model)
+    xr = x @ r
+    ratio = lambda t: float(jnp.max(jnp.abs(t)) / jnp.sqrt(jnp.mean(t * t)))
+    assert ratio(xr) < ratio(x) / 2
+
+
+def test_quantize_weight_per_channel():
+    w = jax.random.normal(jax.random.PRNGKey(3), (32, 16)) * jnp.linspace(0.1, 4.0, 16)
+    q, s, c = quantize_weight(w, 4)
+    assert q.shape == w.shape and s.shape == (1, 16) and c.shape == (1, 16)
+    assert float(jnp.max(jnp.abs(q))) <= 7.0
+    np.testing.assert_allclose(np.asarray(jnp.sum(q, 0, keepdims=True)), np.asarray(c))
+    # reconstruction error bounded by scale/2 per element
+    err = jnp.abs(q * s - w)
+    assert float(jnp.max(err - s / 2)) <= 1e-6
+
+
+def test_calibrate_produces_positive_scales(small):
+    cfg, params, tokens = small
+    stats = calibrate(params, cfg, tokens)
+    assert len(stats) == cfg.n_layers
+    for st in stats:
+        for k in ("q_amax", "k_amax", "v_amax"):
+            assert st[k] > 0.0
+            assert static_scale(st[k], 8) > 0.0
+
+
+def test_prepare_all_schemes(small):
+    cfg, params, tokens = small
+    for name, scheme in SCHEMES.items():
+        qp = prepare(params, cfg, scheme, tokens)
+        assert qp["scheme"] == name
+        if scheme.is_quantized:
+            for lp in qp["layers"]:
+                for w in ("wq", "wk", "wv", "wo", "wg", "wu", "wd"):
+                    assert {"q", "scale", "col_sum"} <= set(lp[w])
+                    assert float(jnp.max(jnp.abs(lp[w]["q"]))) <= 7.0
+            if scheme.lm_head_quant:
+                assert "q" in qp["lm_head"]
+            else:
+                assert "fp" in qp["lm_head"]
+
+
+def test_scheme_table_v_structure():
+    """The ablation grid matches Table V's columns."""
+    assert SCHEMES["q0"].attn_mode == "fp_kv4" and SCHEMES["q0"].kv_bits == 4
+    assert SCHEMES["q1"].attn_mode == "dyn8"
+    assert SCHEMES["q2"].attn_mode == "sta8"
+    assert SCHEMES["q3"].lm_head_quant and SCHEMES["q3"].attn_mode == "sta8"
+    assert not SCHEMES["noquant"].is_quantized
+    for s in ("q0", "q1", "q2", "q3"):
+        assert SCHEMES[s].linear_w_bits == 4 and SCHEMES[s].linear_a_bits == 4
+        assert SCHEMES[s].rotate and SCHEMES[s].fht_down

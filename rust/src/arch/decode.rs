@@ -1,0 +1,280 @@
+//! Stage-customized **decode** architecture (paper Fig. 5(b), Eq. 6/7).
+//!
+//! Autoregressive dependencies kill inter-token parallelism, so the
+//! design temporally reuses one wide INT4 linear engine for every
+//! projection / FFN / lm_head computation across all layers, keeps two
+//! INT8 MHA engines streaming the KV cache, and exploits intra-token
+//! block parallelism (BP) plus inter-head overlap. The wide engine is
+//! partitioned into identical submodules for floorplanning (Sec. IV-B).
+
+use std::sync::Arc;
+
+use crate::config::{DeviceConfig, ModelDims, Precision};
+use crate::hls::calibration::MEASURED_OVERHEAD_DECODE;
+use crate::hls::{
+    achieved_frequency, partition_for_frequency, simulate, DataflowGraph, DecodeLinear,
+    Dependency, Dequantizer, FhtModule, KvCache, MhaEngine, NonLinear, NonLinearKind,
+    Quantizer, Resources, Sampling, SimResult, StreamEdge,
+};
+
+/// The tunable knobs of the decode architecture (Table VI rows 3/6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeConfig {
+    pub bp: u64,
+    pub wp_int4: u64,
+    pub wp_mha: u64,
+}
+
+impl DecodeConfig {
+    /// The paper's U280 configuration.
+    pub fn u280_paper() -> Self {
+        DecodeConfig { bp: 16, wp_int4: 1024, wp_mha: 256 }
+    }
+
+    /// The paper's V80 configuration.
+    pub fn v80_paper() -> Self {
+        DecodeConfig { bp: 64, wp_int4: 4096, wp_mha: 1024 }
+    }
+}
+
+/// A composed decode accelerator instance.
+pub struct DecodeArch {
+    pub cfg: DecodeConfig,
+    pub model: ModelDims,
+    pub device: DeviceConfig,
+    pub resources: Resources,
+    pub freq_hz: f64,
+    pub partitions: u64,
+}
+
+impl DecodeArch {
+    pub fn new(cfg: DecodeConfig, model: ModelDims, device: DeviceConfig) -> Self {
+        let partitions = partition_for_frequency(cfg.wp_int4);
+        let graph = build_graph(&cfg, &model, 1024, partitions);
+        let resources = (graph.resources() + crate::hls::calibration::platform_overhead())
+            .with_derived_clb();
+        let util = device.utilization(&resources).max_class();
+        let freq_hz = achieved_frequency(&device, util, cfg.wp_int4 / partitions);
+        DecodeArch { cfg, model, device, resources, freq_hz, partitions }
+    }
+
+    /// Serial integer-linear MACs per token (numerator of Eq. 6 term 1:
+    /// q/k/v projections + FFN + lm_head; the O projection overlaps with
+    /// MHA and lives in the max term).
+    fn linear_macs(&self) -> f64 {
+        let m = &self.model;
+        (m.n_layers * (2 * m.d_model * m.d_kv + m.d_model * m.d_model
+            + 3 * m.d_model * m.d_ffn) + m.d_model * m.vocab) as f64
+    }
+
+    /// Eq. 6 per-token decode latency at a given attention context.
+    pub fn per_token_latency_s(&self, avg_ctx: u64) -> f64 {
+        let m = &self.model;
+        let c = &self.cfg;
+        let d = m.d_model as f64;
+        let n = m.n_layers as f64;
+        let serial = self.linear_macs() / c.wp_int4 as f64;
+        let overlap = (n * d * d / c.wp_int4 as f64)
+            .max(n * d * avg_ctx as f64 / c.wp_mha as f64);
+        (serial + overlap) / self.freq_hz * MEASURED_OVERHEAD_DECODE
+    }
+
+    /// Eq. 6 closed-form decode latency, seconds, for `l_d` generated
+    /// tokens after a prompt of `l_p` (avg context l_p + l_d/2).
+    pub fn analytic_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        l_d as f64 * self.per_token_latency_s(l_p + l_d / 2)
+    }
+
+    /// Tokens/second at the given context (1 / per-token latency).
+    pub fn decode_throughput(&self, l_p: u64, l_d: u64) -> f64 {
+        l_d as f64 / self.analytic_latency_s(l_p, l_d)
+    }
+
+    /// Eq. 7 peak bandwidth demand, bytes/second.
+    pub fn peak_bandwidth(&self) -> f64 {
+        self.freq_hz
+            * (Precision::Int4.bytes() * self.cfg.wp_int4 as f64
+                + 2.0 * Precision::Int8.bytes() * self.cfg.wp_mha as f64)
+    }
+
+    /// Effective decode bandwidth utilization (the Sec. VI-B1 comparison:
+    /// bytes actually moved per second / device peak).
+    pub fn bandwidth_utilization(&self, l_p: u64, l_d: u64) -> f64 {
+        let m = &self.model;
+        let weights = m.decode_weight_bytes(Precision::Int4.bytes(), Precision::Int4.bytes());
+        let kv = m.kv_bytes_per_token(l_p + l_d / 2, Precision::Int8.bytes());
+        let per_token_s = self.analytic_latency_s(l_p, l_d) / l_d as f64;
+        ((weights + kv) / per_token_s) / self.device.hbm_bw
+    }
+
+    /// Stall-aware latency from the dataflow simulator, seconds.
+    pub fn simulated_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        self.simulate(l_p, l_d).makespan_cycles / self.freq_hz
+    }
+
+    /// Simulate `l_d` autoregressive steps (recurrence lag 1).
+    pub fn simulate(&self, l_p: u64, l_d: u64) -> SimResult {
+        let avg_ctx = l_p + l_d / 2;
+        let graph = build_graph(&self.cfg, &self.model, avg_ctx, self.partitions);
+        // sampling output feeds the next token's first module
+        let last = graph.nodes.len() - 1;
+        let dep = Dependency { from: last, to: 0, lag: 1 };
+        simulate(&graph, l_d, &[dep])
+    }
+
+    pub fn utilization(&self) -> Resources {
+        self.device.utilization(&self.resources)
+    }
+
+    pub fn graph(&self, avg_ctx: u64) -> DataflowGraph {
+        build_graph(&self.cfg, &self.model, avg_ctx, self.partitions)
+    }
+}
+
+/// Compose the Fig. 5(b) graph: one full token step across all layers.
+fn build_graph(cfg: &DecodeConfig, m: &ModelDims, avg_ctx: u64, partitions: u64) -> DataflowGraph {
+    let mut g = DataflowGraph::new();
+    let d = m.d_model;
+    let n = m.n_layers as f64;
+    let bp = cfg.bp;
+
+    // dynamic INT4 quantizer: attention input + FFN input + FHT output per layer
+    let quant_in = g.invoke_reused(
+        Arc::new(Quantizer::new("dec_quant_dyn_int4", true, false, true, bp, d, 4)),
+        3.0 * n, 1);
+
+    // THE shared INT4 linear engine: all projections + FFN + lm_head.
+    // Aggregate reuse = total MACs / (d·d) with a d×d-dim template.
+    let total_macs = (m.n_layers * (2 * d * m.d_kv + 2 * d * d + 3 * d * m.d_ffn)
+        + d * m.vocab) as f64;
+    let linear = g.invoke_reused(
+        Arc::new(DecodeLinear::new("dec_linear_int4", bp, cfg.wp_int4, d, d, Precision::Int4)
+            .with_partitions(partitions)),
+        total_macs / (d * d) as f64, 1);
+
+    let rope = g.invoke_reused(
+        Arc::new(NonLinear::new("dec_rope", NonLinearKind::RoPE, bp, d)), 2.0 * n, 1);
+    let quant_kv = g.invoke_reused(
+        Arc::new(Quantizer::new("dec_quant_sta_int8", false, true, false, bp, d, 8)),
+        3.0 * n, 1);
+    let kv_store = g.invoke_reused(
+        Arc::new(KvCache::new("dec_kv_cache", m.d_kv, Precision::Int8)), n, 1);
+
+    // two INT8 MHA engines per the paper (QKᵀ and PV), reused across layers
+    let mha_qk = g.invoke_reused(
+        Arc::new(MhaEngine::decode("dec_mha_qk", cfg.wp_mha, d, m.d_kv, avg_ctx, m.n_heads)),
+        n, 1);
+    let softmax = g.invoke_reused(
+        Arc::new(NonLinear::new("dec_softmax", NonLinearKind::Softmax, bp, avg_ctx.max(1))),
+        n, 1);
+    let mha_pv = g.invoke_reused(
+        Arc::new(MhaEngine::decode("dec_mha_pv", cfg.wp_mha, d, m.d_kv, avg_ctx, m.n_heads)),
+        n, 1);
+
+    let dequant = g.invoke_reused(
+        Arc::new(Dequantizer::new("dec_dequant", bp, d.max(m.d_ffn), true)), 4.0 * n, 1);
+    let norm = g.invoke_reused(
+        Arc::new(NonLinear::new("dec_rmsnorm", NonLinearKind::RmsNorm, bp, d)), 2.0 * n, 1);
+    let resid = g.invoke_reused(
+        Arc::new(NonLinear::new("dec_residual", NonLinearKind::Residual, bp, d)), 2.0 * n, 1);
+    let swish = g.invoke_reused(
+        Arc::new(NonLinear::new("dec_swish", NonLinearKind::Swish, bp, m.d_ffn)), n, 1);
+    let gate = g.invoke_reused(
+        Arc::new(NonLinear::new("dec_gate", NonLinearKind::Gate, bp, m.d_ffn)), n, 1);
+    let fht = g.invoke_reused(
+        Arc::new(FhtModule::new("dec_fht", bp, m.d_ffn.next_power_of_two())), n, 1);
+    let sampling = g.invoke(Arc::new(Sampling::new("dec_sampling", m.vocab, bp)));
+
+    let s = || StreamEdge::activation(bp);
+    g.connect(quant_in, linear, s());
+    g.connect(linear, rope, s());
+    g.connect(rope, quant_kv, s());
+    g.connect(quant_kv, kv_store, s());
+    g.connect(kv_store, mha_qk, s());
+    g.connect(mha_qk, softmax, s());
+    g.connect(softmax, mha_pv, s());
+    g.connect(mha_pv, dequant, s());
+    g.connect(dequant, resid, s());
+    g.connect(resid, norm, s());
+    g.connect(norm, swish, s());
+    g.connect(swish, gate, s());
+    g.connect(gate, fht, s());
+    g.connect(fht, sampling, s());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u280_arch() -> DecodeArch {
+        DecodeArch::new(DecodeConfig::u280_paper(), ModelDims::llama32_1b(),
+                        DeviceConfig::u280())
+    }
+
+    #[test]
+    fn table_vi_u280_decode_latency() {
+        // Paper: 6.94 s / 1k tokens (l_p = 1024 workload). Accept ±25%
+        // (the paper's measured number includes board effects the model
+        // can only approximate).
+        let a = u280_arch();
+        let t = a.analytic_latency_s(1024, 1024);
+        assert!(t > 6.94 * 0.7 && t < 6.94 * 1.3, "latency = {t}");
+    }
+
+    #[test]
+    fn eq7_bandwidth_near_but_under_cap() {
+        // Decode is tuned to saturate bandwidth: close to, but below, 460 GB/s.
+        let a = u280_arch();
+        let bw = a.peak_bandwidth();
+        assert!(bw < a.device.hbm_bw, "BW {bw} exceeds cap");
+        assert!(bw > 0.5 * a.device.hbm_bw, "decode should stress HBM, bw = {bw}");
+    }
+
+    #[test]
+    fn resources_fit_u280() {
+        let a = u280_arch();
+        let u = a.utilization();
+        assert!(u.max_class() < 0.92, "binding util = {}", u.max_class());
+        assert!(u.max_class() > 0.35);
+    }
+
+    #[test]
+    fn decode_engine_partitioned() {
+        let a = u280_arch();
+        assert!(a.partitions >= 2, "WP=1024 engine must be partitioned");
+    }
+
+    #[test]
+    fn throughput_falls_with_context() {
+        let a = u280_arch();
+        assert!(a.decode_throughput(512, 512) > a.decode_throughput(4096, 512));
+    }
+
+    #[test]
+    fn sim_close_to_analytic() {
+        let a = u280_arch();
+        let sim = a.simulated_latency_s(1024, 256);
+        let ana = a.analytic_latency_s(1024, 256);
+        let ratio = sim / ana;
+        assert!(ratio > 0.6 && ratio < 1.7, "sim/analytic = {ratio}");
+    }
+
+    #[test]
+    fn v80_decode_much_faster() {
+        let u = u280_arch();
+        let v = DecodeArch::new(DecodeConfig::v80_paper(), ModelDims::llama32_1b(),
+                                DeviceConfig::v80());
+        // paper: 1.68 vs 6.94 s/1k → ~4×
+        let ru = u.analytic_latency_s(1024, 1024);
+        let rv = v.analytic_latency_s(1024, 1024);
+        assert!(ru / rv > 2.5, "U280/V80 = {}", ru / rv);
+    }
+
+    #[test]
+    fn bandwidth_utilization_sane() {
+        let a = u280_arch();
+        let u = a.bandwidth_utilization(1024, 1024);
+        assert!(u > 0.15 && u < 1.0, "bw util = {u}");
+    }
+}

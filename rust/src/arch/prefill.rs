@@ -1,0 +1,258 @@
+//! Stage-customized **prefill** architecture (paper Fig. 5(a), Eq. 4/5).
+//!
+//! Hybrid composition: K/V are computed first and stored to HBM; the
+//! remaining kernels run as a streaming dataflow pipeline across token
+//! tiles, with Q/K sharing one linear+RoPE instance and V/O sharing
+//! another (selective temporal reuse inside a spatial pipeline).
+
+use std::sync::Arc;
+
+use crate::config::{DeviceConfig, ModelDims, Precision};
+use crate::hls::calibration::MEASURED_OVERHEAD_PREFILL;
+use crate::hls::{
+    achieved_frequency, simulate, DataflowGraph, Dequantizer, FhtModule, KvCache, MhaEngine,
+    NonLinear, NonLinearKind, PrefillLinear, Quantizer, Resources, SimResult, StreamEdge,
+};
+
+/// The tunable knobs of the prefill architecture (Table VI rows 2/5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillConfig {
+    pub tp: u64,
+    pub wp_kqvo: u64,
+    pub wp_mha: u64,
+    pub wp_ffn: u64,
+}
+
+impl PrefillConfig {
+    /// The paper's U280 configuration.
+    pub fn u280_paper() -> Self {
+        PrefillConfig { tp: 8, wp_kqvo: 24, wp_mha: 16, wp_ffn: 96 }
+    }
+
+    /// The paper's V80 configuration.
+    pub fn v80_paper() -> Self {
+        PrefillConfig { tp: 16, wp_kqvo: 32, wp_mha: 32, wp_ffn: 128 }
+    }
+}
+
+/// A composed prefill accelerator instance on a device.
+pub struct PrefillArch {
+    pub cfg: PrefillConfig,
+    pub model: ModelDims,
+    pub device: DeviceConfig,
+    pub resources: Resources,
+    pub freq_hz: f64,
+}
+
+impl PrefillArch {
+    pub fn new(cfg: PrefillConfig, model: ModelDims, device: DeviceConfig) -> Self {
+        // resources are context-independent; use a nominal ctx for sizing
+        let graph = build_graph(&cfg, &model, 1024);
+        let resources = (graph.resources() + crate::hls::calibration::platform_overhead())
+            .with_derived_clb();
+        let util = device.utilization(&resources).max_class();
+        let widest = cfg.wp_ffn.max(cfg.wp_kqvo).max(cfg.wp_mha);
+        let freq_hz = achieved_frequency(&device, util, widest);
+        PrefillArch { cfg, model, device, resources, freq_hz }
+    }
+
+    /// Eq. 4 closed-form prefill latency bound, seconds.
+    pub fn analytic_latency_s(&self, l_p: u64) -> f64 {
+        let m = &self.model;
+        let c = &self.cfg;
+        let d = m.d_model as f64;
+        let per_tile = d * m.d_kv as f64 / c.wp_kqvo as f64
+            + (d * d / c.wp_kqvo as f64)
+                .max(d * l_p as f64 / c.wp_mha as f64)
+                .max(d * m.d_ffn as f64 / c.wp_ffn as f64);
+        let cycles = m.n_layers as f64 * l_p as f64 / c.tp as f64 * per_tile
+            // final-token lm_head on the FFN engine
+            + d * m.vocab as f64 / c.wp_ffn as f64;
+        cycles / self.freq_hz * MEASURED_OVERHEAD_PREFILL
+    }
+
+    /// Eq. 5 peak bandwidth demand, bytes/second.
+    pub fn peak_bandwidth(&self) -> f64 {
+        let c = &self.cfg;
+        self.freq_hz
+            * (Precision::Int4.bytes() * (2 * c.wp_kqvo + 3 * c.wp_ffn) as f64
+                + Precision::Int8.bytes() * 2.0 * c.wp_mha as f64)
+    }
+
+    /// Stall-aware latency from the dataflow simulator, seconds.
+    pub fn simulated_latency_s(&self, l_p: u64) -> f64 {
+        let r = self.simulate(l_p);
+        (r.makespan_cycles * self.model.n_layers as f64
+            + self.model.d_model as f64 * self.model.vocab as f64 / self.cfg.wp_ffn as f64)
+            / self.freq_hz
+    }
+
+    /// Simulate one decoder layer over `l_p` tokens.
+    pub fn simulate(&self, l_p: u64) -> SimResult {
+        let graph = build_graph(&self.cfg, &self.model, l_p);
+        simulate(&graph, l_p, &[])
+    }
+
+    pub fn utilization(&self) -> Resources {
+        self.device.utilization(&self.resources)
+    }
+
+    /// Table IV-style module inventory for this design.
+    pub fn graph(&self, l_p: u64) -> DataflowGraph {
+        build_graph(&self.cfg, &self.model, l_p)
+    }
+}
+
+/// Compose the Fig. 5(a) graph for one decoder layer at context `ctx`.
+fn build_graph(cfg: &PrefillConfig, m: &ModelDims, ctx: u64) -> DataflowGraph {
+    let mut g = DataflowGraph::new();
+    let d = m.d_model;
+    let tp = cfg.tp;
+
+    // input dynamic INT4 quantizer (per-token asym) — feeds every linear:
+    // reused for attention input, FFN input and FHT output (3 sites)
+    let quant_in = g.invoke_reused(
+        Arc::new(Quantizer::new("pref_quant_dyn_int4", true, false, true, tp, d, 4)),
+        3.0, 1);
+
+    // Q/K shared linear (Fig. 4 / Fig. 5(a)): roles K (d→d_kv) and Q (d→d)
+    let lin_kq = g.invoke_reused(
+        Arc::new(PrefillLinear::new("pref_linear_kq", tp, cfg.wp_kqvo, d,
+                                    (d + m.d_kv) / 2, Precision::Int4)),
+        2.0, 1);
+    // V/O shared linear: roles V (d→d_kv) and O (d→d)
+    let lin_vo = g.invoke_reused(
+        Arc::new(PrefillLinear::new("pref_linear_vo", tp, cfg.wp_kqvo, d,
+                                    (d + m.d_kv) / 2, Precision::Int4)),
+        2.0, 1);
+    // shared RoPE for Q and K
+    let rope = g.invoke_reused(
+        Arc::new(NonLinear::new("pref_rope_kq", NonLinearKind::RoPE, tp, d)), 2.0, 1);
+    // static INT8 quantizers for q/k/v (KV8)
+    let quant_kv = g.invoke_reused(
+        Arc::new(Quantizer::new("pref_quant_sta_int8", false, true, false, tp, d, 8)),
+        3.0, 1);
+    let kv_store = g.invoke(Arc::new(KvCache::new("pref_kv_cache", m.d_kv, Precision::Int8)));
+
+    // MHA: two INT8 engines streaming KV from HBM
+    let mha_qk = g.invoke(Arc::new(MhaEngine::prefill(
+        "pref_mha_qk", tp, cfg.wp_mha, d, m.d_kv, ctx, m.n_heads)));
+    let softmax = g.invoke(Arc::new(NonLinear::new("pref_softmax", NonLinearKind::Softmax,
+                                                   tp, ctx.max(1))));
+    let mha_pv = g.invoke(Arc::new(MhaEngine::prefill(
+        "pref_mha_pv", tp, cfg.wp_mha, d, m.d_kv, ctx, m.n_heads)));
+
+    // dequantizer shared across all integer linears (7 sites/layer)
+    let dequant = g.invoke_reused(
+        Arc::new(Dequantizer::new("pref_dequant", tp, d.max(m.d_ffn), true)), 4.0, 1);
+
+    // norms and residuals (2 sites each per layer)
+    let norm = g.invoke_reused(
+        Arc::new(NonLinear::new("pref_rmsnorm", NonLinearKind::RmsNorm, tp, d)), 2.0, 1);
+    let resid = g.invoke_reused(
+        Arc::new(NonLinear::new("pref_residual", NonLinearKind::Residual, tp, d)), 2.0, 1);
+
+    // FFN: three dedicated INT4 linears + swish/gate + FHT
+    let lin_gate = g.invoke(Arc::new(PrefillLinear::new(
+        "pref_linear_gate", tp, cfg.wp_ffn, d, m.d_ffn, Precision::Int4)));
+    let lin_up = g.invoke(Arc::new(PrefillLinear::new(
+        "pref_linear_up", tp, cfg.wp_ffn, d, m.d_ffn, Precision::Int4)));
+    let swish = g.invoke(Arc::new(NonLinear::new("pref_swish", NonLinearKind::Swish,
+                                                 tp, m.d_ffn)));
+    let gate = g.invoke(Arc::new(NonLinear::new("pref_gate", NonLinearKind::Gate,
+                                                tp, m.d_ffn)));
+    let fht = g.invoke(Arc::new(FhtModule::new("pref_fht",
+                                               tp, m.d_ffn.next_power_of_two())));
+    let lin_down = g.invoke(Arc::new(PrefillLinear::new(
+        "pref_linear_down", tp, cfg.wp_ffn, m.d_ffn, d, Precision::Int4)));
+
+    // streaming topology (token-granularity chain; K/V precede attention)
+    let s = || StreamEdge::activation(tp);
+    g.connect(quant_in, lin_kq, s());
+    g.connect(quant_in, lin_vo, s());
+    g.connect(lin_kq, rope, s());
+    g.connect(rope, quant_kv, s());
+    g.connect(quant_kv, kv_store, s());
+    g.connect(kv_store, mha_qk, s());
+    g.connect(mha_qk, softmax, s());
+    g.connect(softmax, mha_pv, s());
+    g.connect(mha_pv, dequant, s());
+    g.connect(dequant, resid, s());
+    g.connect(resid, norm, s());
+    g.connect(norm, lin_gate, s());
+    g.connect(norm, lin_up, s());
+    g.connect(lin_gate, swish, s());
+    g.connect(lin_up, gate, s());
+    g.connect(swish, gate, s());
+    g.connect(gate, fht, s());
+    g.connect(fht, lin_down, s());
+    g.connect(lin_vo, resid, s());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u280_arch() -> PrefillArch {
+        PrefillArch::new(PrefillConfig::u280_paper(), ModelDims::llama32_1b(),
+                         DeviceConfig::u280())
+    }
+
+    #[test]
+    fn table_vi_u280_prefill_latency() {
+        // Paper: 1.65 s / 1k tokens at 304 MHz. Accept ±15%.
+        let a = u280_arch();
+        let t = a.analytic_latency_s(1024);
+        assert!(t > 1.65 * 0.85 && t < 1.65 * 1.15, "latency = {t}");
+    }
+
+    #[test]
+    fn table_vi_u280_prefill_frequency() {
+        let a = u280_arch();
+        let mhz = a.freq_hz / 1e6;
+        assert!(mhz > 285.0 && mhz < 320.0, "freq = {mhz} MHz");
+    }
+
+    #[test]
+    fn eq5_bandwidth_under_device_cap() {
+        let a = u280_arch();
+        assert!(a.peak_bandwidth() < a.device.hbm_bw,
+                "prefill BW {} exceeds U280 {}", a.peak_bandwidth(), a.device.hbm_bw);
+    }
+
+    #[test]
+    fn resources_fit_u280() {
+        let a = u280_arch();
+        let u = a.utilization();
+        assert!(u.max_class() < 0.9, "binding util = {}", u.max_class());
+        assert!(u.max_class() > 0.3, "implausibly small design: {}", u.max_class());
+    }
+
+    #[test]
+    fn sim_close_to_analytic() {
+        let a = u280_arch();
+        let sim = a.simulated_latency_s(512);
+        let ana = a.analytic_latency_s(512);
+        let ratio = sim / ana;
+        assert!(ratio > 0.7 && ratio < 1.6, "sim/analytic = {ratio}");
+    }
+
+    #[test]
+    fn latency_scales_superlinearly_with_context() {
+        // attention term grows with l_p → >2× latency at 2× tokens once
+        // MHA dominates
+        let a = u280_arch();
+        let t1 = a.analytic_latency_s(4096);
+        let t2 = a.analytic_latency_s(8192);
+        assert!(t2 > 2.0 * t1);
+    }
+
+    #[test]
+    fn v80_faster_than_u280() {
+        let u = u280_arch();
+        let v = PrefillArch::new(PrefillConfig::v80_paper(), ModelDims::llama32_1b(),
+                                 DeviceConfig::v80());
+        assert!(v.analytic_latency_s(1024) < u.analytic_latency_s(1024) / 2.0);
+    }
+}

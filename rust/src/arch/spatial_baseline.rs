@@ -1,0 +1,247 @@
+//! Spatial-dataflow baseline (Allo-like, Fig. 1(d)(e); W4A8KV8 per the
+//! paper's SOTA-accelerator comparison in Sec. VI-A).
+//!
+//! A *unified* spatial design: every kernel gets a dedicated module and
+//! the same pipeline serves both prefill and decode. It streams well in
+//! prefill, but in decode the autoregressive dependency leaves the
+//! per-kernel modules idle most of the time (pipeline stalls), and the
+//! unified sizing can't shift resources toward the decode bottleneck —
+//! exactly the gap stage-customization closes (paper: FlexLLM surpasses
+//! Allo by 1.46× E2E / 1.35× decode throughput / 1.10× tokens-per-J).
+
+use std::sync::Arc;
+
+use crate::config::{DeviceConfig, ModelDims, Precision};
+use crate::hls::{
+    achieved_frequency, simulate, DataflowGraph, Dependency, MhaEngine, NonLinear,
+    NonLinearKind, PrefillLinear, Quantizer, Resources, StreamEdge,
+};
+
+/// Unified spatial design: one TP/WP point serves both stages.
+pub struct SpatialBaseline {
+    pub model: ModelDims,
+    pub device: DeviceConfig,
+    /// Inter-token parallelism of the unified pipeline (prefill-oriented).
+    pub tp: u64,
+    /// Per-kernel weight parallelism of the dedicated modules.
+    pub wp: u64,
+    pub freq_hz: f64,
+    pub resources: Resources,
+}
+
+impl SpatialBaseline {
+    pub fn new(model: ModelDims, device: DeviceConfig, tp: u64, wp: u64) -> Self {
+        let graph = build_graph(&model, tp, wp, 1024);
+        let resources = (graph.resources() + crate::hls::calibration::platform_overhead())
+            .with_derived_clb();
+        let util = device.utilization(&resources).max_class();
+        let freq_hz = achieved_frequency(&device, util, wp);
+        SpatialBaseline { model, device, tp, wp, freq_hz, resources }
+    }
+
+    /// Allo-like W4A8KV8 design sized for U280 (resource-comparable to
+    /// the FlexLLM hybrid).
+    pub fn u280_allo() -> Self {
+        Self::new(ModelDims::llama32_1b(), DeviceConfig::u280(), 8, 56)
+    }
+
+    /// Prefill streams well: throughput ≈ slowest dedicated stage.
+    pub fn prefill_latency_s(&self, l_p: u64) -> f64 {
+        let g = build_graph(&self.model, self.tp, self.wp, l_p);
+        let r = simulate(&g, l_p, &[]);
+        r.makespan_cycles * self.model.n_layers as f64 / self.freq_hz
+    }
+
+    /// Decode suffers the recurrence: simulate with lag-1 dependency from
+    /// pipeline tail to head. TP > 1 lanes are idle (single token).
+    pub fn decode_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        let avg_ctx = l_p + l_d / 2;
+        let g = build_graph(&self.model, 1, self.wp, avg_ctx);
+        let last = g.nodes.len() - 1;
+        let dep = Dependency { from: last, to: 0, lag: 1 };
+        let r = simulate(&g, l_d.max(2), &[dep]);
+        r.makespan_cycles * self.model.n_layers as f64 / self.freq_hz
+    }
+
+    /// Decode-stage utilization (the Fig. 1(e) stall story, measurable).
+    pub fn decode_utilization(&self, l_p: u64, l_d: u64) -> f64 {
+        let avg_ctx = l_p + l_d / 2;
+        let g = build_graph(&self.model, 1, self.wp, avg_ctx);
+        let last = g.nodes.len() - 1;
+        let dep = Dependency { from: last, to: 0, lag: 1 };
+        simulate(&g, l_d.max(2), &[dep]).mean_utilization
+    }
+}
+
+/// Allo-deployment baseline for Fig. 7 (the paper's SOTA accelerator
+/// comparison, Sec. VI-A: Allo with W4A8KV8 SmoothQuant on U280).
+///
+/// Allo's published U280 LLM design is itself engine-reused, so the fair
+/// model is the same hybrid composition **without FlexLLM's
+/// stage-customized refinements**: INT8 activations mean every linear PE
+/// costs an INT8 MAC (0.55 DSP vs 0.42 LUT-heavy INT4), so under the
+/// same fabric budget every engine is narrower by that ratio, and the
+/// static-SmoothQuant pipeline lacks the dynamic-quant/FHT datapath that
+/// lets FlexLLM hold INT4 activations. Net effect: engine widths scale
+/// by ≈3/4 in both stages — which the paper measures as 1.46× E2E /
+/// 1.35× decode / 1.10× energy in FlexLLM's favor.
+pub struct AlloBaseline {
+    pub prefill: crate::arch::PrefillArch,
+    pub decode: crate::arch::DecodeArch,
+}
+
+impl AlloBaseline {
+    pub fn u280() -> Self {
+        let model = ModelDims::llama32_1b();
+        // FlexLLM's paper configs scaled by the INT8/INT4 PE-cost ratio
+        let pcfg = crate::arch::PrefillConfig { tp: 8, wp_kqvo: 18, wp_mha: 12, wp_ffn: 72 };
+        let dcfg = crate::arch::DecodeConfig { bp: 16, wp_int4: 768, wp_mha: 192 };
+        AlloBaseline {
+            prefill: crate::arch::PrefillArch::new(pcfg, model.clone(), DeviceConfig::u280()),
+            decode: crate::arch::DecodeArch::new(dcfg, model, DeviceConfig::u280()),
+        }
+    }
+
+    pub fn prefill_latency_s(&self, l_p: u64) -> f64 {
+        self.prefill.analytic_latency_s(l_p)
+    }
+
+    pub fn decode_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        self.decode.analytic_latency_s(l_p, l_d)
+    }
+
+    pub fn e2e_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        self.prefill_latency_s(l_p) + 0.3 + self.decode_latency_s(l_p, l_d)
+    }
+}
+
+/// Stage-customization ablation: the FlexLLM **prefill** architecture
+/// forced to serve decode too (one unified configuration). One token
+/// flows through the prefill engines, so TP−1 lanes idle and the
+/// FFN-sized engines must also carry the lm_head — this quantifies what
+/// the paper's stage customization is worth on its own.
+pub struct UnifiedAlloBaseline {
+    pub prefill: crate::arch::PrefillArch,
+}
+
+impl UnifiedAlloBaseline {
+    pub fn u280() -> Self {
+        UnifiedAlloBaseline {
+            prefill: crate::arch::PrefillArch::new(
+                crate::arch::PrefillConfig::u280_paper(),
+                ModelDims::llama32_1b(),
+                DeviceConfig::u280(),
+            ),
+        }
+    }
+
+    /// Prefill matches the hybrid design (this stage is what the unified
+    /// point was sized for).
+    pub fn prefill_latency_s(&self, l_p: u64) -> f64 {
+        self.prefill.analytic_latency_s(l_p)
+    }
+
+    /// Decode on the unified prefill engines, single token (TP lanes
+    /// idle), serialized kernel chain per layer + lm_head on the FFN
+    /// engine. W4A8KV8 per the paper's Allo setup.
+    pub fn decode_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        let m = &self.prefill.model;
+        let c = &self.prefill.cfg;
+        let d = m.d_model as f64;
+        let avg_ctx = l_p as f64 + 0.5 * l_d as f64;
+        let per_layer =
+            d * m.d_kv as f64 / c.wp_kqvo as f64            // K (V parallel)
+            + d * d / c.wp_kqvo as f64                       // Q
+            + 2.0 * d * avg_ctx / c.wp_mha as f64            // QKᵀ + PV
+            + d * d / c.wp_kqvo as f64                       // O
+            + 2.0 * d * m.d_ffn as f64 / c.wp_ffn as f64;    // gate/up ∥, then down
+        let lm_head = d * m.vocab as f64 / c.wp_ffn as f64;
+        let cycles = l_d as f64 * (m.n_layers as f64 * per_layer + lm_head);
+        cycles / self.prefill.freq_hz
+            * crate::hls::calibration::MEASURED_OVERHEAD_DECODE
+    }
+
+    pub fn e2e_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        self.prefill_latency_s(l_p) + self.decode_latency_s(l_p, l_d)
+    }
+}
+
+/// Unified per-layer pipeline: a dedicated module per kernel (no reuse —
+/// the defining property of the fully spatial style).
+fn build_graph(m: &ModelDims, tp: u64, wp: u64, ctx: u64) -> DataflowGraph {
+    let mut g = DataflowGraph::new();
+    let d = m.d_model;
+    let mk = |label: &str, d_in: u64, d_out: u64| {
+        Arc::new(PrefillLinear::new(label, tp, wp, d_in, d_out, Precision::Int4))
+    };
+    let quant = g.invoke(Arc::new(Quantizer::new("allo_quant_int8", false, true, false,
+                                                 tp, d, 8)));
+    let q = g.invoke(mk("allo_linear_q", d, d));
+    let k = g.invoke(mk("allo_linear_k", d, m.d_kv));
+    let v = g.invoke(mk("allo_linear_v", d, m.d_kv));
+    let rope = g.invoke(Arc::new(NonLinear::new("allo_rope", NonLinearKind::RoPE, tp, d)));
+    let qk = g.invoke(Arc::new(MhaEngine::prefill("allo_mha_qk", tp, wp, d, m.d_kv,
+                                                  ctx, m.n_heads)));
+    let sm = g.invoke(Arc::new(NonLinear::new("allo_softmax", NonLinearKind::Softmax,
+                                              tp, ctx.max(1))));
+    let pv = g.invoke(Arc::new(MhaEngine::prefill("allo_mha_pv", tp, wp, d, m.d_kv,
+                                                  ctx, m.n_heads)));
+    let o = g.invoke(mk("allo_linear_o", d, d));
+    let norm = g.invoke(Arc::new(NonLinear::new("allo_rmsnorm", NonLinearKind::RmsNorm,
+                                                tp, d)));
+    let gate = g.invoke(mk("allo_linear_gate", d, m.d_ffn));
+    let up = g.invoke(mk("allo_linear_up", d, m.d_ffn));
+    let swish = g.invoke(Arc::new(NonLinear::new("allo_swish", NonLinearKind::Swish,
+                                                 tp, m.d_ffn)));
+    let down = g.invoke(mk("allo_linear_down", m.d_ffn, d));
+
+    let s = || StreamEdge::activation(tp);
+    g.connect(quant, q, s());
+    g.connect(q, k, s());
+    g.connect(k, v, s());
+    g.connect(v, rope, s());
+    g.connect(rope, qk, s());
+    g.connect(qk, sm, s());
+    g.connect(sm, pv, s());
+    g.connect(pv, o, s());
+    g.connect(o, norm, s());
+    g.connect(norm, gate, s());
+    g.connect(gate, up, s());
+    g.connect(up, swish, s());
+    g.connect(swish, down, s());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DecodeArch, DecodeConfig};
+
+    #[test]
+    fn spatial_fits_u280() {
+        let a = SpatialBaseline::u280_allo();
+        let u = a.device.utilization(&a.resources).max_class();
+        assert!(u < 0.92, "util = {u}");
+    }
+
+    #[test]
+    fn decode_stalls_dominate_spatial() {
+        // the defining pathology: unified spatial decode runs well below
+        // 50% utilization under the autoregressive recurrence
+        let a = SpatialBaseline::u280_allo();
+        let u = a.decode_utilization(1024, 64);
+        assert!(u < 0.5, "spatial decode util = {u}");
+    }
+
+    #[test]
+    fn stage_customized_beats_spatial_decode() {
+        // paper: 1.35× decode throughput over Allo
+        let allo = SpatialBaseline::u280_allo();
+        let flex = DecodeArch::new(DecodeConfig::u280_paper(), ModelDims::llama32_1b(),
+                                   DeviceConfig::u280());
+        let t_allo = allo.decode_latency_s(1024, 256);
+        let t_flex = flex.analytic_latency_s(1024, 256);
+        let speedup = t_allo / t_flex;
+        assert!(speedup > 1.1, "speedup over Allo = {speedup}");
+    }
+}

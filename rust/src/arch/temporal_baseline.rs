@@ -1,0 +1,108 @@
+//! Temporal-architecture baseline (FlightLLM-like, Fig. 1(b)(c)).
+//!
+//! One monolithic compute engine is reused for every kernel in every
+//! layer. Utilization of the engine itself is high, but (a) nothing
+//! overlaps — every kernel is serialized through the shared engine — and
+//! (b) limited on-chip buffering forces intermediate activations off-chip
+//! in prefill, adding HBM round-trips the spatial/hybrid designs stream
+//! through FIFOs.
+
+use crate::config::{DeviceConfig, ModelDims, Precision};
+use crate::hls::{achieved_frequency, Resources};
+use crate::hls::calibration as cal;
+
+/// A FlightLLM-style monolithic engine sized to a device.
+pub struct TemporalBaseline {
+    pub model: ModelDims,
+    pub device: DeviceConfig,
+    /// MACs per cycle of the shared engine (its only parallelism knob).
+    pub engine_macs: u64,
+    pub freq_hz: f64,
+    pub resources: Resources,
+}
+
+impl TemporalBaseline {
+    /// Size the engine to roughly the same fabric budget as the hybrid
+    /// design (fair comparison: equal resources, different organization).
+    pub fn new(model: ModelDims, device: DeviceConfig, engine_macs: u64) -> Self {
+        let pe = cal::pe_cost(Precision::Int8); // monolithic engines run one precision
+        let resources = (pe * engine_macs as f64
+            + cal::platform_overhead()
+            + cal::weight_stream_buffers(engine_macs.min(2048), Precision::Int8))
+            .with_derived_clb();
+        let util = device.utilization(&resources).max_class();
+        let freq_hz = achieved_frequency(&device, util, engine_macs.min(2048));
+        TemporalBaseline { model, device, engine_macs, freq_hz, resources }
+    }
+
+    pub fn u280() -> Self {
+        Self::new(ModelDims::llama32_1b(), DeviceConfig::u280(), 4096)
+    }
+
+    /// Effective compute utilization of the monolithic engine: every
+    /// kernel switch drains/refills the rigid array and differently-shaped
+    /// ops (attention vs FFN vs projections) cannot all map efficiently —
+    /// the Fig. 1(b,c) pathology. FlightLLM-class designs report well
+    /// under half of peak on mixed prefill kernels.
+    const PREFILL_ENGINE_UTIL: f64 = 0.42;
+    /// Effective HBM utilization in decode: activation spill/refill and
+    /// weight re-fetch compete on the same channels ("frequent off-chip
+    /// memory access", Fig. 1(c)).
+    const DECODE_BW_UTIL: f64 = 0.35;
+
+    /// Prefill: all kernels serialized through the engine + activation
+    /// spill/refill traffic per layer (limited buffering).
+    pub fn prefill_latency_s(&self, l_p: u64) -> f64 {
+        let m = &self.model;
+        let macs = m.flops_per_token() / 2.0 * l_p as f64
+            + (m.n_layers * m.d_model * l_p * l_p) as f64; // attention
+        let compute_cycles = macs / (self.engine_macs as f64 * Self::PREFILL_ENGINE_UTIL);
+        // activation spills: 2 round trips of [l_p, d] per layer at INT8
+        let spill_bytes = (2 * m.n_layers * l_p * m.d_model) as f64 * 2.0;
+        let spill_s = spill_bytes / self.device.hbm_bw * 4.0; // effective BW ~25%
+        compute_cycles / self.freq_hz + spill_s
+    }
+
+    /// Decode: same engine, weights at INT8 (FlightLLM-class precision),
+    /// fully serialized; bandwidth-bound on weight streaming.
+    pub fn decode_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        let m = &self.model;
+        let avg_ctx = l_p as f64 + 0.5 * l_d as f64;
+        let weight_bytes = m.decode_weight_bytes(1.0, 1.0); // INT8
+        let kv_bytes = m.kv_bytes_per_token(avg_ctx as u64, 1.0);
+        let bw_s = (weight_bytes + kv_bytes) / (self.device.hbm_bw * Self::DECODE_BW_UTIL);
+        let compute_s =
+            (m.flops_per_token() / 2.0) / self.engine_macs as f64 / self.freq_hz;
+        l_d as f64 * bw_s.max(compute_s) * 1.15
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DecodeArch, DecodeConfig, PrefillArch, PrefillConfig};
+
+    #[test]
+    fn hybrid_beats_temporal_prefill() {
+        // Fig. 1's argument: the stage-customized hybrid outperforms the
+        // monolithic temporal engine on prefill (streaming + no spills).
+        let t = TemporalBaseline::u280();
+        let h = PrefillArch::new(PrefillConfig::u280_paper(), ModelDims::llama32_1b(),
+                                 DeviceConfig::u280());
+        assert!(h.analytic_latency_s(1024) < t.prefill_latency_s(1024));
+    }
+
+    #[test]
+    fn hybrid_beats_temporal_decode() {
+        let t = TemporalBaseline::u280();
+        let h = DecodeArch::new(DecodeConfig::u280_paper(), ModelDims::llama32_1b(),
+                                DeviceConfig::u280());
+        assert!(h.analytic_latency_s(1024, 1024) < t.decode_latency_s(1024, 1024));
+    }
+
+    #[test]
+    fn temporal_fits_device() {
+        let t = TemporalBaseline::u280();
+        assert!(t.device.utilization(&t.resources).max_class() < 0.95);
+    }
+}

@@ -1,0 +1,162 @@
+//! Hardware platform descriptions (paper Table I).
+//!
+//! The FPGA resource pools are taken from the public AMD datasheets the
+//! paper cites ([32], [33]); the A100 numbers from the NVIDIA datasheet
+//! [34]. These caps bound the design-space exploration (`dse`) and the
+//! resource accounting of every composed architecture.
+
+
+use crate::hls::Resources;
+
+/// Which platform a config describes (drives frequency + power models).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    U280,
+    V80,
+    A100,
+}
+
+/// One row of Table I plus the FPGA resource pool.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub kind: DeviceKind,
+    pub name: &'static str,
+    pub tech_node_nm: u32,
+    /// Peak compute in FP32 TFLOPS (Table I convention).
+    pub peak_tflops: f64,
+    /// Peak HBM bandwidth, bytes/second.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_capacity: u64,
+    /// Peak (board) power, watts.
+    pub peak_power_w: f64,
+    /// Average measured power under LLM inference load, watts.
+    /// (On-board sampling for U280 / synthesis estimate for V80 per the
+    /// paper; A100 from nvidia-smi-style sampling under vLLM.)
+    pub avg_power_w: f64,
+    /// FPGA fabric resource pool; zeroed for GPUs.
+    pub resources: Resources,
+    /// Nominal target clock before floorplan derating, Hz (FPGA only).
+    pub target_clock_hz: f64,
+}
+
+impl DeviceConfig {
+    /// AMD Alveo U280 (TSMC 16nm) — Table I column 1.
+    pub fn u280() -> Self {
+        DeviceConfig {
+            kind: DeviceKind::U280,
+            name: "AMD Alveo U280",
+            tech_node_nm: 16,
+            peak_tflops: 8.0,
+            hbm_bw: 460e9,
+            hbm_capacity: 8 << 30,
+            peak_power_w: 75.0,
+            avg_power_w: 58.0,
+            resources: Resources {
+                clb: 163_320.0,
+                dsp: 9_024.0,
+                lut: 1_304_000.0,
+                ff: 2_607_000.0,
+                bram: 2_016.0,
+                uram: 960.0,
+            },
+            target_clock_hz: 320e6,
+        }
+    }
+
+    /// AMD Versal V80 (TSMC 7nm) — Table I column 2.
+    pub fn v80() -> Self {
+        DeviceConfig {
+            kind: DeviceKind::V80,
+            name: "AMD Versal V80",
+            tech_node_nm: 7,
+            peak_tflops: 58.0,
+            hbm_bw: 820e9,
+            hbm_capacity: 32 << 30,
+            peak_power_w: 190.0,
+            avg_power_w: 140.0,
+            resources: Resources {
+                clb: 449_000.0,
+                dsp: 10_848.0,
+                lut: 2_574_000.0,
+                ff: 5_148_000.0,
+                bram: 3_741.0,
+                uram: 1_301.0,
+            },
+            target_clock_hz: 320e6,
+        }
+    }
+
+    /// NVIDIA A100 80GB PCIe (TSMC 7nm) — Table I column 3.
+    pub fn a100() -> Self {
+        DeviceConfig {
+            kind: DeviceKind::A100,
+            name: "NVIDIA A100 80GB PCIe",
+            tech_node_nm: 7,
+            peak_tflops: 312.0,
+            hbm_bw: 1_935e9,
+            hbm_capacity: 80 << 30,
+            peak_power_w: 300.0,
+            avg_power_w: 240.0,
+            resources: Resources::zero(),
+            target_clock_hz: 0.0,
+        }
+    }
+
+    /// Fraction of the resource pool a composed design consumes (0..1 per
+    /// class); the max over classes is the binding constraint.
+    pub fn utilization(&self, used: &Resources) -> Resources {
+        Resources {
+            clb: used.clb / self.resources.clb.max(1.0),
+            dsp: used.dsp / self.resources.dsp.max(1.0),
+            lut: used.lut / self.resources.lut.max(1.0),
+            ff: used.ff / self.resources.ff.max(1.0),
+            bram: used.bram / self.resources.bram.max(1.0),
+            uram: used.uram / self.resources.uram.max(1.0),
+        }
+    }
+
+    /// True iff `used` fits the pool with the given headroom (e.g. 0.85 →
+    /// ≤85% of every class, the practical P&R closure limit).
+    pub fn fits(&self, used: &Resources, headroom: f64) -> bool {
+        let u = self.utilization(used);
+        u.max_class() <= headroom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let u = DeviceConfig::u280();
+        assert_eq!(u.tech_node_nm, 16);
+        assert_eq!(u.peak_tflops, 8.0);
+        assert_eq!(u.hbm_capacity, 8 << 30);
+        let v = DeviceConfig::v80();
+        assert_eq!(v.tech_node_nm, 7);
+        assert!((v.hbm_bw - 820e9).abs() < 1.0);
+        let a = DeviceConfig::a100();
+        assert_eq!(a.peak_power_w, 300.0);
+        assert_eq!(a.hbm_capacity, 80 << 30);
+    }
+
+    #[test]
+    fn v80_strictly_larger_than_u280() {
+        let (u, v) = (DeviceConfig::u280(), DeviceConfig::v80());
+        assert!(v.peak_tflops > u.peak_tflops);
+        assert!(v.hbm_bw > u.hbm_bw);
+        assert!(v.resources.dsp > u.resources.dsp);
+        assert!(v.resources.lut > u.resources.lut);
+    }
+
+    #[test]
+    fn fits_respects_headroom() {
+        let u = DeviceConfig::u280();
+        let mut used = Resources::zero();
+        used.dsp = u.resources.dsp * 0.8;
+        assert!(u.fits(&used, 0.85));
+        assert!(!u.fits(&used, 0.75));
+    }
+}

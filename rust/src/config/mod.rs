@@ -1,0 +1,9 @@
+//! Device, model and precision configuration (paper Table I + Table VI row 1).
+
+mod device;
+mod model;
+mod precision;
+
+pub use device::{DeviceConfig, DeviceKind};
+pub use model::ModelDims;
+pub use precision::Precision;

@@ -1,0 +1,120 @@
+//! Model dimension sets: the paper's Llama-3.2 1B target and the tiny
+//! CPU-executable model baked into the AOT artifacts.
+
+
+/// Transformer dimensions (paper Table VI row 1 notation).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    /// N — number of decoder layers.
+    pub n_layers: u64,
+    /// d_h — hidden dimension.
+    pub d_model: u64,
+    pub n_heads: u64,
+    pub n_kv_heads: u64,
+    /// d_kv — total KV projection width (n_kv_heads × head_dim).
+    pub d_kv: u64,
+    /// d_ffn — FFN intermediate dimension.
+    pub d_ffn: u64,
+    /// d_lm_head — vocabulary size.
+    pub vocab: u64,
+    pub max_seq: u64,
+}
+
+impl ModelDims {
+    /// Llama-3.2 1B: L=16, d=2048, d_kv=512, d_ffn=8192, vocab=128256.
+    pub fn llama32_1b() -> Self {
+        ModelDims {
+            name: "Llama-3.2-1B".into(),
+            n_layers: 16,
+            d_model: 2048,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_kv: 512,
+            d_ffn: 8192,
+            vocab: 128_256,
+            max_seq: 131_072,
+        }
+    }
+
+    /// The tiny artifact model (must match python/compile/model.py::tiny).
+    pub fn tiny() -> Self {
+        ModelDims {
+            name: "tiny-llama-arch".into(),
+            n_layers: 4,
+            d_model: 256,
+            n_heads: 8,
+            n_kv_heads: 2,
+            d_kv: 64,
+            d_ffn: 512,
+            vocab: 512,
+            max_seq: 320,
+        }
+    }
+
+    pub fn head_dim(&self) -> u64 {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embedding + per-layer + lm_head).
+    pub fn n_params(&self) -> u64 {
+        let per_layer = self.d_model * self.d_model          // wq
+            + 2 * self.d_model * self.d_kv                   // wk, wv
+            + self.d_model * self.d_model                    // wo
+            + 3 * self.d_model * self.d_ffn                  // wg, wu, wd
+            + 2 * self.d_model;                              // norms
+        2 * self.vocab * self.d_model + self.n_layers * per_layer + self.d_model
+    }
+
+    /// Weight bytes touched per generated token during decode (all weights
+    /// are streamed once per token), given per-site precisions.
+    pub fn decode_weight_bytes(&self, linear_bytes: f64, lm_head_bytes: f64) -> f64 {
+        let linear = self.n_layers
+            * (2 * self.d_model * self.d_kv      // wk, wv
+                + 2 * self.d_model * self.d_model // wq, wo
+                + 3 * self.d_model * self.d_ffn); // wg, wu, wd
+        linear as f64 * linear_bytes + (self.d_model * self.vocab) as f64 * lm_head_bytes
+    }
+
+    /// KV-cache bytes per token at context length `ctx` (read K and V for
+    /// every layer) with `kv_bytes` per element.
+    pub fn kv_bytes_per_token(&self, ctx: u64, kv_bytes: f64) -> f64 {
+        (2 * self.n_layers * self.d_kv * ctx) as f64 * kv_bytes
+    }
+
+    /// FLOPs for one token of dense forward (2 × params, the standard
+    /// decoder estimate the GPU roofline uses).
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.n_params() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_1b_is_about_1b_params() {
+        let m = ModelDims::llama32_1b();
+        let p = m.n_params() as f64;
+        assert!(p > 1.0e9 && p < 1.6e9, "params = {p}");
+        assert_eq!(m.head_dim(), 64);
+    }
+
+    #[test]
+    fn tiny_matches_python_config() {
+        let t = ModelDims::tiny();
+        assert_eq!(t.head_dim(), 32);
+        assert_eq!(t.d_kv, t.n_kv_heads * t.head_dim());
+        // ~2.6M params, small enough for CPU execution
+        assert!(t.n_params() < 4_000_000);
+    }
+
+    #[test]
+    fn decode_weight_traffic_int4() {
+        let m = ModelDims::llama32_1b();
+        // INT4 linears + INT4 lm_head: roughly half the param count in bytes
+        let b = m.decode_weight_bytes(0.5, 0.5);
+        assert!(b > 0.4 * m.n_params() as f64 && b < 0.6 * m.n_params() as f64);
+    }
+}

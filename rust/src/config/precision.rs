@@ -1,0 +1,70 @@
+//! Numeric precision descriptors used across the module library.
+//!
+//! The paper's bandwidth equations (Eq. 2/5/7) depend only on
+//! bytes-per-element (B_W); the resource models additionally distinguish
+//! how a multiply-accumulate of each precision maps onto FPGA fabric
+//! (LUT-based INT4 MACs vs DSP-packed INT8 vs full-DSP FP).
+
+
+/// Element precision of a datapath or stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 4-bit integer (packed two-per-byte in HBM, LUT MACs on fabric).
+    Int4,
+    /// 8-bit integer (DSP-packed MACs).
+    Int8,
+    /// bfloat16 / fp16 — 2 bytes.
+    Fp16,
+    /// float32 — 4 bytes.
+    Fp32,
+}
+
+impl Precision {
+    /// Bytes per element as seen by the HBM interface (B_W in Eq. 2).
+    /// INT4 is 0.5 — the paper packs two nibbles per byte.
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::Int4 => 0.5,
+            Precision::Int8 => 1.0,
+            Precision::Fp16 => 2.0,
+            Precision::Fp32 => 4.0,
+        }
+    }
+
+    /// Bits per element.
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Int4 => 4,
+            Precision::Int8 => 8,
+            Precision::Fp16 => 16,
+            Precision::Fp32 => 32,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Int4 => "INT4",
+            Precision::Int8 => "INT8",
+            Precision::Fp16 => "FP16",
+            Precision::Fp32 => "FP32",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int4_packs_two_per_byte() {
+        assert_eq!(Precision::Int4.bytes(), 0.5);
+        assert_eq!(Precision::Int4.bits(), 4);
+    }
+
+    #[test]
+    fn bytes_match_bits() {
+        for p in [Precision::Int4, Precision::Int8, Precision::Fp16, Precision::Fp32] {
+            assert!((p.bytes() * 8.0 - p.bits() as f64).abs() < 1e-9);
+        }
+    }
+}

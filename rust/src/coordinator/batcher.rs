@@ -1,0 +1,131 @@
+//! Iteration-level batcher: groups requests into fixed-shape batches.
+//!
+//! The AOT artifacts have static shapes (batch B, prefill length S), so
+//! the batcher's job is to (a) validate prompts against the artifact
+//! shape, (b) fill partial batches by duplicating a real lane and
+//! marking the duplicates as padding, and (c) align `max_new_tokens`
+//! within a batch (the decode artifact advances one shared position).
+
+use anyhow::{anyhow, Result};
+
+use super::request::GenRequest;
+
+/// One dispatchable batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Exactly `batch_size` requests; `padding[i]` marks duplicated lanes.
+    pub requests: Vec<GenRequest>,
+    pub padding: Vec<bool>,
+    /// Aligned decode length: max over the real lanes.
+    pub new_tokens: usize,
+}
+
+/// Fixed-shape batching policy.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pub batch_size: usize,
+    pub prefill_len: usize,
+    pub max_seq: usize,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, prefill_len: usize, max_seq: usize) -> Self {
+        assert!(batch_size > 0 && prefill_len > 0 && max_seq > prefill_len);
+        Batcher { batch_size, prefill_len, max_seq }
+    }
+
+    /// Validate a single request against the artifact shapes.
+    pub fn validate(&self, req: &GenRequest) -> Result<()> {
+        if req.prompt.len() != self.prefill_len {
+            return Err(anyhow!(
+                "request {}: prompt length {} != artifact prefill length {} \
+                 (fixed-shape AOT artifacts)",
+                req.id, req.prompt.len(), self.prefill_len
+            ));
+        }
+        if req.max_new_tokens == 0 {
+            return Err(anyhow!("request {}: max_new_tokens must be > 0", req.id));
+        }
+        if self.prefill_len + req.max_new_tokens > self.max_seq {
+            return Err(anyhow!(
+                "request {}: {} prompt + {} new tokens exceeds max_seq {}",
+                req.id, self.prefill_len, req.max_new_tokens, self.max_seq
+            ));
+        }
+        Ok(())
+    }
+
+    /// Partition a queue of validated requests into dispatchable batches.
+    /// Partial final batches are padded by duplicating the first lane.
+    pub fn plan(&self, queue: &[GenRequest]) -> Result<Vec<Batch>> {
+        for r in queue {
+            self.validate(r)?;
+        }
+        let mut batches = Vec::new();
+        for chunk in queue.chunks(self.batch_size) {
+            let mut requests: Vec<GenRequest> = chunk.to_vec();
+            let mut padding = vec![false; chunk.len()];
+            while requests.len() < self.batch_size {
+                let mut dup = requests[0].clone();
+                dup.id = u64::MAX; // sentinel
+                requests.push(dup);
+                padding.push(true);
+            }
+            let new_tokens = chunk.iter().map(|r| r.max_new_tokens).max().unwrap_or(1);
+            batches.push(Batch { requests, padding, new_tokens });
+        }
+        Ok(batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize, new: usize) -> GenRequest {
+        GenRequest { id, prompt: vec![0; len], max_new_tokens: new }
+    }
+
+    fn batcher() -> Batcher {
+        Batcher::new(4, 128, 320)
+    }
+
+    #[test]
+    fn pads_partial_batches() {
+        let b = batcher();
+        let batches = b.plan(&[req(1, 128, 8), req(2, 128, 4)]).unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 4);
+        assert_eq!(batches[0].padding, vec![false, false, true, true]);
+        assert_eq!(batches[0].new_tokens, 8);
+    }
+
+    #[test]
+    fn splits_over_batch_size() {
+        let b = batcher();
+        let queue: Vec<_> = (0..9).map(|i| req(i, 128, 2)).collect();
+        let batches = b.plan(&queue).unwrap();
+        assert_eq!(batches.len(), 3);
+        assert!(batches[2].padding[1..].iter().all(|&p| p));
+    }
+
+    #[test]
+    fn rejects_wrong_prompt_length() {
+        let b = batcher();
+        assert!(b.plan(&[req(1, 100, 4)]).is_err());
+    }
+
+    #[test]
+    fn rejects_overlong_generation() {
+        let b = batcher();
+        assert!(b.plan(&[req(1, 128, 320)]).is_err());
+        assert!(b.plan(&[req(1, 128, 0)]).is_err());
+    }
+
+    #[test]
+    fn aligned_new_tokens_is_max_of_real_lanes() {
+        let b = batcher();
+        let batches = b.plan(&[req(1, 128, 3), req(2, 128, 17), req(3, 128, 5)]).unwrap();
+        assert_eq!(batches[0].new_tokens, 17);
+    }
+}

@@ -1,0 +1,122 @@
+//! Serving engine: drives the prefill → decode artifact loop for batches.
+//!
+//! This is the request-path core: tokens in, tokens out, no Python. The
+//! engine owns the [`Runtime`] (single-threaded PJRT client) and exposes
+//! a synchronous `generate` used either directly (examples, benches) or
+//! behind the router's channel (the async CLI server).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{argmax_rows, lit_i32, lit_scalar_i32, Runtime};
+
+use super::batcher::{Batch, Batcher};
+use super::kv::KvState;
+use super::request::{GenResult, ServeMetrics};
+
+/// Artifact names the engine drives.
+const PREFILL: &str = "prefill_serve_q3";
+const DECODE: &str = "decode_step_q3";
+
+pub struct Engine {
+    pub runtime: Runtime,
+    pub batcher: Batcher,
+    pub metrics: ServeMetrics,
+    vocab: usize,
+}
+
+impl Engine {
+    pub fn new(runtime: Runtime) -> Self {
+        let m = &runtime.manifest;
+        let batcher = Batcher::new(m.serving.batch, m.serving.prefill_len,
+                                   m.model.max_seq as usize);
+        let vocab = m.model.vocab as usize;
+        Engine { runtime, batcher, metrics: ServeMetrics::default(), vocab }
+    }
+
+    /// Run one batch to completion (prefill + aligned greedy decode).
+    pub fn generate(&mut self, batch: &Batch) -> Result<Vec<GenResult>> {
+        let b = self.batcher.batch_size;
+        let s = self.batcher.prefill_len;
+
+        // ---- prefill -----------------------------------------------------
+        let mut flat = Vec::with_capacity(b * s);
+        for r in &batch.requests {
+            flat.extend_from_slice(&r.prompt);
+        }
+        let tokens = lit_i32(&flat, &[b as i64, s as i64])?;
+        let t0 = Instant::now();
+        let mut out = self.runtime.execute(PREFILL, &[tokens])?;
+        if out.len() != 3 {
+            return Err(anyhow!("prefill artifact returned {} outputs", out.len()));
+        }
+        let v_cache = out.pop().unwrap();
+        let k_cache = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+        let prefill_t = t0.elapsed();
+
+        let mut kv = KvState::from_prefill(k_cache, v_cache, s,
+                                           self.batcher.max_seq)?;
+        let mut next = argmax_rows(&logits, b, self.vocab)?;
+        let mut generated: Vec<Vec<i32>> = next.iter().map(|&t| vec![t]).collect();
+        let ttft = t0.elapsed();
+
+        // ---- aligned greedy decode ----------------------------------------
+        let t1 = Instant::now();
+        for _ in 1..batch.new_tokens {
+            if kv.remaining() == 0 {
+                return Err(anyhow!("KV capacity exhausted mid-batch"));
+            }
+            let tok = lit_i32(&next, &[b as i64])?;
+            let pos = lit_scalar_i32(kv.pos as i32);
+            let mut out = self.runtime.execute(
+                DECODE, &[tok, pos, kv.k.clone(), kv.v.clone()])?;
+            if out.len() != 3 {
+                return Err(anyhow!("decode artifact returned {} outputs", out.len()));
+            }
+            let v_new = out.pop().unwrap();
+            let k_new = out.pop().unwrap();
+            let logits = out.pop().unwrap();
+            kv.advance(k_new, v_new)?;
+            next = argmax_rows(&logits, b, self.vocab)?;
+            for (lane, &t) in next.iter().enumerate() {
+                generated[lane].push(t);
+            }
+        }
+        let decode_t = t1.elapsed();
+
+        // ---- metrics + results ---------------------------------------------
+        self.metrics.batches += 1;
+        self.metrics.total_prefill += prefill_t;
+        self.metrics.total_decode += decode_t;
+        self.metrics.prefill_tokens += b * s;
+        let real_lanes = batch.padding.iter().filter(|&&p| !p).count();
+        self.metrics.requests += real_lanes;
+        self.metrics.tokens_generated += batch.new_tokens * real_lanes;
+
+        Ok(batch
+            .requests
+            .iter()
+            .zip(&batch.padding)
+            .enumerate()
+            .map(|(lane, (req, &padding))| GenResult {
+                id: req.id,
+                tokens: generated[lane]
+                    [..batch.new_tokens.min(req.max_new_tokens)].to_vec(),
+                ttft,
+                decode_time: decode_t,
+                padding,
+            })
+            .collect())
+    }
+
+    /// Serve a whole queue: plan batches, run each, return real results.
+    pub fn serve(&mut self, queue: &[super::request::GenRequest]) -> Result<Vec<GenResult>> {
+        let mut results = Vec::new();
+        for batch in self.batcher.plan(queue)? {
+            results.extend(self.generate(&batch)?.into_iter().filter(|r| !r.padding));
+        }
+        Ok(results)
+    }
+}

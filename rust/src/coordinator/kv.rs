@@ -1,0 +1,78 @@
+//! KV-cache manager: owns the cache buffers between prefill and decode
+//! steps and tracks the shared write position of the aligned batch.
+//!
+//! The caches are the INT8 (integer-grid) K/V tensors produced by the
+//! prefill artifact and threaded through every decode step — the KV8
+//! datapath of the paper's W4A4KV8 scheme.
+
+use anyhow::{anyhow, Result};
+
+/// Cache state for one in-flight batch.
+pub struct KvState {
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+    /// Next write position (= number of populated cache slots).
+    pub pos: usize,
+    pub max_seq: usize,
+}
+
+impl KvState {
+    /// Wrap the caches returned by the prefill artifact.
+    pub fn from_prefill(k: xla::Literal, v: xla::Literal, prefill_len: usize,
+                        max_seq: usize) -> Result<Self> {
+        if k.element_count() != v.element_count() {
+            return Err(anyhow!("K/V cache element counts differ"));
+        }
+        if prefill_len >= max_seq {
+            return Err(anyhow!("prefill {prefill_len} leaves no decode room (max {max_seq})"));
+        }
+        Ok(KvState { k, v, pos: prefill_len, max_seq })
+    }
+
+    /// Remaining decode capacity.
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.pos
+    }
+
+    /// Consume one decode step's updated caches.
+    pub fn advance(&mut self, k: xla::Literal, v: xla::Literal) -> Result<()> {
+        if self.pos + 1 > self.max_seq {
+            return Err(anyhow!("KV cache overflow at pos {}", self.pos));
+        }
+        self.k = k;
+        self.v = v;
+        self.pos += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::lit_f32;
+
+    fn lit(n: usize) -> xla::Literal {
+        lit_f32(&vec![0.0; n], &[n as i64]).unwrap()
+    }
+
+    #[test]
+    fn tracks_position() {
+        let mut s = KvState::from_prefill(lit(8), lit(8), 2, 5).unwrap();
+        assert_eq!(s.remaining(), 3);
+        s.advance(lit(8), lit(8)).unwrap();
+        assert_eq!(s.pos, 3);
+        assert_eq!(s.remaining(), 2);
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let mut s = KvState::from_prefill(lit(4), lit(4), 4, 5).unwrap();
+        s.advance(lit(4), lit(4)).unwrap();
+        assert!(s.advance(lit(4), lit(4)).is_err());
+    }
+
+    #[test]
+    fn full_prefill_rejected() {
+        assert!(KvState::from_prefill(lit(4), lit(4), 5, 5).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Serving coordinator (L3 request path): router → batcher → engine.
+//!
+//! The engine owns the single-threaded PJRT runtime; the [`Router`]
+//! exposes it to async callers over std channels (the `xla` client is
+//! `Rc`-based, so all execution stays on one dedicated thread).
+
+mod batcher;
+mod engine;
+mod hmt;
+mod kv;
+mod request;
+
+pub use batcher::{Batch, Batcher};
+pub use engine::Engine;
+pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
+pub use kv::KvState;
+pub use request::{GenRequest, GenResult, ServeMetrics};
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+enum Cmd {
+    Generate(Vec<GenRequest>, mpsc::Sender<Result<Vec<GenResult>>>),
+    Metrics(mpsc::Sender<ServeMetrics>),
+    Shutdown,
+}
+
+/// Thread-backed request router: spawn once, submit from anywhere.
+pub struct Router {
+    tx: mpsc::Sender<Cmd>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Spawn the engine thread over the artifact directory.
+    pub fn spawn(artifact_dir: String) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("flexllm-engine".into())
+            .spawn(move || {
+                let mut engine = match crate::runtime::Runtime::open(&artifact_dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        Engine::new(rt)
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Generate(queue, reply) => {
+                            let _ = reply.send(engine.serve(&queue));
+                        }
+                        Cmd::Metrics(reply) => {
+                            let _ = reply.send(engine.metrics.clone());
+                        }
+                        Cmd::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Router { tx, handle: Some(handle) })
+    }
+
+    /// Submit a queue of requests and wait for all results.
+    pub fn generate(&self, queue: Vec<GenRequest>) -> Result<Vec<GenResult>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Generate(queue, reply_tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    /// Snapshot aggregate serving metrics.
+    pub fn metrics(&self) -> Result<ServeMetrics> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Metrics(reply_tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Request / response types for the serving coordinator.
+
+use std::time::Duration;
+
+/// A generation request entering the router.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    /// Prompt token ids; must be exactly the AOT prefill length (the
+    /// batcher validates — fixed-shape artifacts, DESIGN.md §7).
+    pub prompt: Vec<i32>,
+    /// Number of tokens to generate (greedy).
+    pub max_new_tokens: usize,
+}
+
+/// Per-request generation result with serving metrics.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: u64,
+    /// Generated tokens (first = token produced from the prompt).
+    pub tokens: Vec<i32>,
+    /// Time to first token (prefill + first sample).
+    pub ttft: Duration,
+    /// Total decode wall time (excludes prefill).
+    pub decode_time: Duration,
+    /// Whether this lane was batch padding (result should be discarded).
+    pub padding: bool,
+}
+
+impl GenResult {
+    /// Decode throughput for this request, tokens/second.
+    pub fn decode_tps(&self) -> f64 {
+        if self.tokens.len() <= 1 || self.decode_time.is_zero() {
+            return 0.0;
+        }
+        (self.tokens.len() - 1) as f64 / self.decode_time.as_secs_f64()
+    }
+}
+
+/// Aggregate serving metrics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub batches: usize,
+    pub total_prefill: Duration,
+    pub total_decode: Duration,
+    pub tokens_generated: usize,
+    pub prefill_tokens: usize,
+}
+
+impl ServeMetrics {
+    /// Aggregate decode throughput, tokens/second.
+    pub fn decode_tps(&self) -> f64 {
+        if self.total_decode.is_zero() {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.total_decode.as_secs_f64()
+    }
+
+    /// Prefill throughput, tokens/second.
+    pub fn prefill_tps(&self) -> f64 {
+        if self.total_prefill.is_zero() {
+            return 0.0;
+        }
+        self.prefill_tokens as f64 / self.total_prefill.as_secs_f64()
+    }
+
+    /// Mean end-to-end latency per batch.
+    pub fn mean_batch_latency(&self) -> Duration {
+        if self.batches == 0 {
+            return Duration::ZERO;
+        }
+        (self.total_prefill + self.total_decode) / self.batches as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_tps_counts_continuation_tokens() {
+        let r = GenResult { id: 0, tokens: vec![1, 2, 3, 4, 5], ttft: Duration::ZERO,
+                            decode_time: Duration::from_secs(2), padding: false };
+        assert!((r.decode_tps() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_zero_safe() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.decode_tps(), 0.0);
+        assert_eq!(m.mean_batch_latency(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,163 @@
+//! Design-space exploration: the paper's ILP parameter tuning.
+//!
+//! "We tune these parameters via Integer Linear Programming (ILP) under
+//! hardware constraints (resources and memory bandwidth) to minimize T_p
+//! / T_d" (Sec. IV-B). The objective (Eqs. 4/6) is linear in the
+//! reciprocal parallelism variables over a small discrete grid, so exact
+//! minimization by enumeration with constraint pruning ("branch and
+//! bound" degenerate case) matches the ILP optimum. We implement exactly
+//! that: exhaustive search with feasibility pruning, which is both exact
+//! and fast (< 1 ms per stage) on the paper's grid sizes.
+
+use crate::arch::{DecodeArch, DecodeConfig, PrefillArch, PrefillConfig};
+use crate::config::{DeviceConfig, ModelDims};
+
+/// Resource headroom for P&R closure (fraction of each class usable).
+pub const HEADROOM: f64 = 0.88;
+
+/// Decode bandwidth oversubscription: Eq. 7 sums the *peak* demand of the
+/// INT4 linear engine and both MHA engines, but they alternate within a
+/// token (the linear engine stalls during the attention phase), so the
+/// sustained demand is lower. The paper's own V80 point (WPint4=4096,
+/// WPmha=1024 → 1.23 TB/s peak vs 820 GB/s HBM) is only feasible under
+/// this interpretation; 1.6× covers it with margin.
+pub const DECODE_BW_OVERSUB: f64 = 1.6;
+
+/// Outcome of a DSE run.
+#[derive(Debug, Clone)]
+pub struct DseResult<C> {
+    pub best: C,
+    pub latency_s: f64,
+    pub evaluated: usize,
+    pub feasible: usize,
+    /// (config, latency) Pareto-ish trail for reporting.
+    pub trail: Vec<(C, f64)>,
+}
+
+/// Candidate grids (multiples the paper's configs live on).
+fn tp_grid() -> Vec<u64> {
+    vec![2, 4, 8, 16, 32]
+}
+fn wp_grid() -> Vec<u64> {
+    vec![8, 16, 24, 32, 48, 64, 96, 128, 192, 256]
+}
+fn wide_wp_grid() -> Vec<u64> {
+    vec![128, 256, 512, 1024, 2048, 4096, 8192]
+}
+fn bp_grid() -> Vec<u64> {
+    vec![4, 8, 16, 32, 64]
+}
+
+/// Tune the prefill architecture for `l_p`-token prompts on `device`.
+pub fn tune_prefill(model: &ModelDims, device: &DeviceConfig, l_p: u64) -> DseResult<PrefillConfig> {
+    let mut best: Option<(PrefillConfig, f64)> = None;
+    let mut evaluated = 0;
+    let mut feasible = 0;
+    let mut trail = Vec::new();
+    for &tp in &tp_grid() {
+        for &wp_kqvo in &wp_grid() {
+            for &wp_mha in &wp_grid() {
+                for &wp_ffn in &wp_grid() {
+                    evaluated += 1;
+                    let cfg = PrefillConfig { tp, wp_kqvo, wp_mha, wp_ffn };
+                    let arch = PrefillArch::new(cfg, model.clone(), device.clone());
+                    // constraints: resources fit + Eq. 5 bandwidth under cap
+                    if !device.fits(&arch.resources, HEADROOM)
+                        || arch.peak_bandwidth() > device.hbm_bw
+                    {
+                        continue;
+                    }
+                    feasible += 1;
+                    let t = arch.analytic_latency_s(l_p);
+                    if best.as_ref().map(|(_, b)| t < *b).unwrap_or(true) {
+                        trail.push((cfg, t));
+                        best = Some((cfg, t));
+                    }
+                }
+            }
+        }
+    }
+    let (best, latency_s) = best.expect("no feasible prefill configuration");
+    DseResult { best, latency_s, evaluated, feasible, trail }
+}
+
+/// Tune the decode architecture for a [l_p, l_d] workload on `device`.
+pub fn tune_decode(
+    model: &ModelDims,
+    device: &DeviceConfig,
+    l_p: u64,
+    l_d: u64,
+) -> DseResult<DecodeConfig> {
+    let mut best: Option<(DecodeConfig, f64)> = None;
+    let mut evaluated = 0;
+    let mut feasible = 0;
+    let mut trail = Vec::new();
+    for &bp in &bp_grid() {
+        for &wp_int4 in &wide_wp_grid() {
+            if wp_int4 < bp {
+                continue;
+            }
+            for &wp_mha in &wp_grid().iter().copied().chain([512, 1024]).collect::<Vec<_>>() {
+                evaluated += 1;
+                let cfg = DecodeConfig { bp, wp_int4, wp_mha };
+                let arch = DecodeArch::new(cfg, model.clone(), device.clone());
+                if !device.fits(&arch.resources, HEADROOM)
+                    || arch.peak_bandwidth() > device.hbm_bw * DECODE_BW_OVERSUB
+                {
+                    continue;
+                }
+                feasible += 1;
+                let t = arch.analytic_latency_s(l_p, l_d);
+                if best.as_ref().map(|(_, b)| t < *b).unwrap_or(true) {
+                    trail.push((cfg, t));
+                    best = Some((cfg, t));
+                }
+            }
+        }
+    }
+    let (best, latency_s) = best.expect("no feasible decode configuration");
+    DseResult { best, latency_s, evaluated, feasible, trail }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_dse_finds_near_paper_point() {
+        let model = ModelDims::llama32_1b();
+        let dev = DeviceConfig::u280();
+        let r = tune_prefill(&model, &dev, 1024);
+        // the found optimum must be at least as good as the paper's config
+        let paper = PrefillArch::new(PrefillConfig::u280_paper(), model.clone(), dev.clone());
+        assert!(r.latency_s <= paper.analytic_latency_s(1024) * 1.02,
+                "dse {} vs paper {}", r.latency_s, paper.analytic_latency_s(1024));
+        assert!(r.feasible > 0 && r.feasible <= r.evaluated);
+    }
+
+    #[test]
+    fn decode_dse_finds_near_paper_point() {
+        let model = ModelDims::llama32_1b();
+        let dev = DeviceConfig::u280();
+        let r = tune_decode(&model, &dev, 1024, 1024);
+        let paper = DecodeArch::new(DecodeConfig::u280_paper(), model.clone(), dev.clone());
+        assert!(r.latency_s <= paper.analytic_latency_s(1024, 1024) * 1.02);
+    }
+
+    #[test]
+    fn dse_respects_bandwidth_constraint() {
+        let model = ModelDims::llama32_1b();
+        let dev = DeviceConfig::u280();
+        let r = tune_decode(&model, &dev, 512, 512);
+        let arch = DecodeArch::new(r.best, model, dev.clone());
+        assert!(arch.peak_bandwidth() <= dev.hbm_bw * DECODE_BW_OVERSUB);
+    }
+
+    #[test]
+    fn v80_optimum_wider_than_u280() {
+        let model = ModelDims::llama32_1b();
+        let u = tune_decode(&model, &DeviceConfig::u280(), 1024, 1024);
+        let v = tune_decode(&model, &DeviceConfig::v80(), 1024, 1024);
+        assert!(v.best.wp_int4 >= u.best.wp_int4);
+    }
+}

@@ -1,0 +1,65 @@
+//! Table V harness core: execute the per-scheme PPL artifacts on the
+//! held-out corpus and compute perplexity in Rust (cross-checked against
+//! the build-time Python numbers within 2%).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{lit_i32, nll_from_logits, to_f32, Runtime};
+
+/// Load the held-out eval batches baked by aot.py.
+pub fn load_eval_tokens(rt: &Runtime) -> Result<Vec<Vec<i32>>> {
+    let e = &rt.manifest.eval;
+    let path = rt.dir().join("eval_tokens.bin");
+    let bytes = std::fs::read(&path).map_err(|err| anyhow!("reading {path:?}: {err}"))?;
+    let want = e.n_batches * e.batch * e.seq * 4;
+    if bytes.len() != want {
+        return Err(anyhow!("eval_tokens.bin: {} bytes, want {want}", bytes.len()));
+    }
+    let all: Vec<i32> = bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(all
+        .chunks_exact(e.batch * e.seq)
+        .map(|c| c.to_vec())
+        .collect())
+}
+
+/// Perplexity of one scheme over the eval batches.
+pub fn scheme_ppl(rt: &Runtime, scheme: &str) -> Result<f64> {
+    let e = &rt.manifest.eval;
+    let v = rt.manifest.model.vocab as usize;
+    let name = format!("ppl_{scheme}");
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for batch in load_eval_tokens(rt)? {
+        let tokens = lit_i32(&batch, &[e.batch as i64, e.seq as i64])?;
+        let out = rt.execute(&name, &[tokens])?;
+        let logits = to_f32(&out[0])?;
+        let (t, c) = nll_from_logits(&logits, &batch, e.batch, e.seq, v);
+        total += t;
+        count += c;
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Run the full ablation; returns (scheme, measured ppl) in Table V order
+/// and verifies each against the build-time Python value (2% tolerance).
+pub fn run(rt: &Runtime) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for scheme in crate::runtime::Manifest::scheme_order() {
+        let ppl = scheme_ppl(rt, scheme)?;
+        if let Some(stats) = rt.manifest.schemes.get(scheme) {
+            let rel = (ppl - stats.ppl).abs() / stats.ppl;
+            if rel > 0.02 {
+                return Err(anyhow!(
+                    "{scheme}: rust ppl {ppl:.3} deviates {rel:.1}% from build-time {:.3} — \
+                     artifact/runtime mismatch",
+                    stats.ppl
+                ));
+            }
+        }
+        out.push((scheme.to_string(), ppl));
+    }
+    Ok(out)
+}

@@ -1,0 +1,370 @@
+//! Figure generators (paper Figs. 1, 2, 6, 7, 8) — printed as tables /
+//! CSV series carrying the same data the paper plots.
+
+use crate::arch::{AcceleratorSystem, AlloBaseline, SpatialBaseline, TemporalBaseline,
+                  UnifiedAlloBaseline};
+use crate::config::ModelDims;
+use crate::gpu_model::{GpuBaseline, GpuMode};
+use crate::report::{csv, fmt_pct, fmt_ratio, fmt_secs, table};
+
+/// The Fig. 7 workload grid: [prefill, decode] length pairs.
+pub const FIG7_GRID: [(u64, u64); 8] = [
+    (512, 256), (512, 512), (512, 1024), (512, 2048),
+    (1024, 256), (1024, 512), (1024, 1024), (1024, 2048),
+];
+
+/// Fig. 1: temporal / spatial / hybrid behaviour on the same workload —
+/// pipeline utilization and relative latency from the dataflow simulator.
+pub fn fig1() -> String {
+    let model = ModelDims::llama32_1b();
+    let sys = AcceleratorSystem::u280();
+    let temporal = TemporalBaseline::u280();
+    let spatial = SpatialBaseline::u280_allo();
+    let unified = UnifiedAlloBaseline::u280();
+    let (lp, ld) = (1024, 256);
+
+    let rows = vec![
+        vec!["Temporal (FlightLLM-like)".into(),
+             fmt_secs(temporal.prefill_latency_s(lp)),
+             fmt_secs(temporal.decode_latency_s(lp, ld)),
+             "high engine util, off-chip spills".into()],
+        vec!["Spatial unified (Allo-like)".into(),
+             fmt_secs(spatial.prefill_latency_s(lp)),
+             fmt_secs(spatial.decode_latency_s(lp, ld)),
+             format!("decode pipeline util {}",
+                     fmt_pct(spatial.decode_utilization(lp, ld)))],
+        vec!["Hybrid unified config (ablation)".into(),
+             fmt_secs(unified.prefill_latency_s(lp)),
+             fmt_secs(unified.decode_latency_s(lp, ld)),
+             "one config for both stages".into()],
+        vec!["Hybrid stage-customized (FlexLLM)".into(),
+             fmt_secs(sys.prefill.analytic_latency_s(lp)),
+             fmt_secs(sys.decode.analytic_latency_s(lp, ld)),
+             format!("prefill sim util {}",
+                     fmt_pct(sys.prefill.simulate(256).mean_utilization))],
+    ];
+    let _ = model;
+    table(&format!("Fig. 1 — architecture styles on [{lp}, {ld}] (U280)"),
+          &["Architecture", "Prefill", "Decode", "Notes"], &rows)
+}
+
+/// Fig. 2: A100 compute / bandwidth utilization in prefill vs decode.
+pub fn fig2() -> String {
+    let g = GpuBaseline::a100(ModelDims::llama32_1b(), GpuMode::Bf16);
+    let f = g.fig2_utilization(1024, 1024);
+    let rows = vec![
+        vec!["Prefill (1k tokens)".into(), fmt_pct(f.prefill_compute), fmt_pct(f.prefill_bw)],
+        vec!["Decode (1k tokens)".into(), fmt_pct(f.decode_compute), fmt_pct(f.decode_bw)],
+    ];
+    table("Fig. 2 — A100 BF16 Llama-3.2 1B stage utilization (modeled)",
+          &["Stage", "Compute util", "HBM BW util"], &rows)
+}
+
+/// Fig. 6: implementation layout — rendered as per-kind resource shares.
+pub fn fig6() -> String {
+    let sys = AcceleratorSystem::u280();
+    let mut rows = Vec::new();
+    for (stage, graph) in [("Prefill", sys.prefill.graph(1024)),
+                           ("Decode", sys.decode.graph(1024))] {
+        for (kind, count, res) in graph.kind_breakdown() {
+            rows.push(vec![
+                stage.to_string(),
+                kind.name().to_string(),
+                count.to_string(),
+                format!("{:.0}", res.lut),
+                format!("{:.0}", res.dsp),
+                format!("{:.0}", res.bram),
+            ]);
+        }
+    }
+    table("Fig. 6 — U280 layout (module-kind resource breakdown)",
+          &["Stage", "Module kind", "Instances", "LUT", "DSP", "BRAM"], &rows)
+}
+
+/// One Fig. 7 measurement row across all five systems.
+pub struct Fig7Row {
+    pub lp: u64,
+    pub ld: u64,
+    pub e2e: [f64; 5],
+    pub tput: [f64; 5],
+    pub tpj: [f64; 5],
+}
+
+pub const FIG7_SYSTEMS: [&str; 5] =
+    ["A100 BF16", "A100 GPTQ-Marlin", "Allo (U280)", "FlexLLM U280", "FlexLLM V80"];
+
+/// Compute the Fig. 7 grid.
+pub fn fig7_data() -> Vec<Fig7Row> {
+    let model = ModelDims::llama32_1b();
+    let bf16 = GpuBaseline::a100(model.clone(), GpuMode::Bf16);
+    let gptq = GpuBaseline::a100(model.clone(), GpuMode::GptqMarlinInt4);
+    let allo = AlloBaseline::u280();
+    let u280 = AcceleratorSystem::u280();
+    let v80 = AcceleratorSystem::v80();
+    // Allo board power comparable to the FlexLLM U280 design
+    let allo_power = allo.decode.device.avg_power_w * 1.02;
+
+    FIG7_GRID
+        .iter()
+        .map(|&(lp, ld)| {
+            let allo_e2e = allo.e2e_latency_s(lp, ld);
+            let allo_tput = ld as f64 / allo.decode_latency_s(lp, ld);
+            let allo_tpj = ld as f64 / (allo_e2e * allo_power);
+            Fig7Row {
+                lp,
+                ld,
+                e2e: [bf16.e2e_latency_s(lp, ld), gptq.e2e_latency_s(lp, ld), allo_e2e,
+                      u280.e2e_latency_s(lp, ld), v80.e2e_latency_s(lp, ld)],
+                tput: [bf16.decode_throughput(lp, ld), gptq.decode_throughput(lp, ld),
+                       allo_tput, u280.decode_throughput(lp, ld),
+                       v80.decode_throughput(lp, ld)],
+                tpj: [bf16.tokens_per_joule(lp, ld), gptq.tokens_per_joule(lp, ld), allo_tpj,
+                      u280.tokens_per_joule(lp, ld), v80.tokens_per_joule(lp, ld)],
+            }
+        })
+        .collect()
+}
+
+/// Fig. 7 rendered: three panels (E2E latency, decode throughput,
+/// energy efficiency) + the headline average ratios.
+pub fn fig7() -> String {
+    let data = fig7_data();
+    let mut out = String::new();
+    let panel = |title: &str, pick: &dyn Fn(&Fig7Row) -> [f64; 5], fmt: &dyn Fn(f64) -> String| {
+        let rows: Vec<Vec<String>> = data
+            .iter()
+            .map(|r| {
+                let vals = pick(r);
+                let mut row = vec![format!("[{}, {}]", r.lp, r.ld)];
+                row.extend(vals.iter().map(|&v| fmt(v)));
+                row
+            })
+            .collect();
+        let headers: Vec<&str> = std::iter::once("[l_p, l_d]").chain(FIG7_SYSTEMS).collect();
+        table(title, &headers, &rows)
+    };
+    out.push_str(&panel("Fig. 7a — end-to-end latency", &|r| r.e2e, &fmt_secs));
+    out.push('\n');
+    out.push_str(&panel("Fig. 7b — decode throughput (tok/s)", &|r| r.tput,
+                        &|v| format!("{v:.1}")));
+    out.push('\n');
+    out.push_str(&panel("Fig. 7c — energy efficiency (tok/J)", &|r| r.tpj,
+                        &|v| format!("{v:.3}")));
+    out.push('\n');
+
+    let h = fig7_headline();
+    out.push_str(&table(
+        "Fig. 7 headline — average ratios vs A100 BF16 (paper: U280 1.29×/1.64×/3.14×, \
+         V80 4.71×/6.55×/4.13×; vs Allo 1.46×/1.35×/1.10×)",
+        &["System", "E2E speedup", "Decode tput", "Tokens/J"],
+        &[
+            vec!["FlexLLM U280".into(), fmt_ratio(h.u280_e2e), fmt_ratio(h.u280_tput),
+                 fmt_ratio(h.u280_tpj)],
+            vec!["FlexLLM V80".into(), fmt_ratio(h.v80_e2e), fmt_ratio(h.v80_tput),
+                 fmt_ratio(h.v80_tpj)],
+            vec!["U280 vs Allo".into(), fmt_ratio(h.allo_e2e), fmt_ratio(h.allo_tput),
+                 fmt_ratio(h.allo_tpj)],
+        ],
+    ));
+    out
+}
+
+/// Headline average ratios (the abstract's numbers).
+pub struct Fig7Headline {
+    pub u280_e2e: f64,
+    pub u280_tput: f64,
+    pub u280_tpj: f64,
+    pub v80_e2e: f64,
+    pub v80_tput: f64,
+    pub v80_tpj: f64,
+    pub allo_e2e: f64,
+    pub allo_tput: f64,
+    pub allo_tpj: f64,
+}
+
+pub fn fig7_headline() -> Fig7Headline {
+    let data = fig7_data();
+    let n = data.len() as f64;
+    let mean = |f: &dyn Fn(&Fig7Row) -> f64| data.iter().map(f).sum::<f64>() / n;
+    Fig7Headline {
+        u280_e2e: mean(&|r| r.e2e[0] / r.e2e[3]),
+        u280_tput: mean(&|r| r.tput[3] / r.tput[0]),
+        u280_tpj: mean(&|r| r.tpj[3] / r.tpj[0]),
+        v80_e2e: mean(&|r| r.e2e[0] / r.e2e[4]),
+        v80_tput: mean(&|r| r.tput[4] / r.tput[0]),
+        v80_tpj: mean(&|r| r.tpj[4] / r.tpj[0]),
+        allo_e2e: mean(&|r| r.e2e[2] / r.e2e[3]),
+        allo_tput: mean(&|r| r.tput[3] / r.tput[2]),
+        allo_tpj: mean(&|r| r.tpj[3] / r.tpj[2]),
+    }
+}
+
+/// Fig. 7 as CSV (for external plotting).
+pub fn fig7_csv() -> String {
+    let data = fig7_data();
+    let mut rows = Vec::new();
+    for r in &data {
+        for (i, sys) in FIG7_SYSTEMS.iter().enumerate() {
+            rows.push(vec![r.lp.to_string(), r.ld.to_string(), sys.to_string(),
+                           format!("{:.6}", r.e2e[i]), format!("{:.3}", r.tput[i]),
+                           format!("{:.6}", r.tpj[i])]);
+        }
+    }
+    csv(&["l_p", "l_d", "system", "e2e_s", "decode_tps", "tokens_per_joule"], &rows)
+}
+
+/// The Fig. 8 long-context grid.
+pub const FIG8_CONTEXTS: [u64; 6] = [2048, 4096, 8192, 16384, 32768, 65536];
+
+/// Long-context generation length scales with the prompt (summarization /
+/// long-form continuation workloads): l_d = ctx/4. This is the regime the
+/// paper's Fig. 8 end-to-end claims live in — decode dominates both
+/// systems and HMT's linear-vs-quadratic scaling decides the winner.
+fn fig8_decode_len(ctx: u64) -> u64 {
+    (ctx / 4).max(512)
+}
+
+pub struct Fig8Row {
+    pub ctx: u64,
+    /// prefill seconds: [A100 full, U280 full (theoretical), U280+HMT, V80+HMT]
+    pub prefill: [f64; 4],
+    /// e2e seconds: [A100 BF16, A100 GPTQ, U280+HMT, V80+HMT]
+    pub e2e: [f64; 4],
+    /// tokens/J: same systems as e2e
+    pub tpj: [f64; 4],
+}
+
+pub fn fig8_data() -> Vec<Fig8Row> {
+    let model = ModelDims::llama32_1b();
+    let bf16 = GpuBaseline::a100(model.clone(), GpuMode::Bf16);
+    let gptq = GpuBaseline::a100(model.clone(), GpuMode::GptqMarlinInt4);
+    let u280 = AcceleratorSystem::u280();
+    let v80 = AcceleratorSystem::v80();
+
+    FIG8_CONTEXTS
+        .iter()
+        .map(|&ctx| {
+            let ld = fig8_decode_len(ctx);
+            let u_hmt_pre = u280.hmt_prefill_s(ctx);
+            let v_hmt_pre = v80.hmt_prefill_s(ctx);
+            let u_e2e = u_hmt_pre + u280.reconfig_s + u280.hmt_decode_latency_s(ld);
+            let v_e2e = v_hmt_pre + v80.reconfig_s + v80.hmt_decode_latency_s(ld);
+            let u_tpj = ld as f64 / (u_e2e * u280.decode.device.avg_power_w);
+            let v_tpj = ld as f64 / (v_e2e * v80.decode.device.avg_power_w);
+            Fig8Row {
+                ctx,
+                prefill: [bf16.prefill_latency_s(ctx),
+                          u280.prefill.analytic_latency_s(ctx), u_hmt_pre, v_hmt_pre],
+                e2e: [bf16.e2e_latency_s(ctx, ld), gptq.e2e_latency_s(ctx, ld), u_e2e, v_e2e],
+                tpj: [bf16.tokens_per_joule(ctx, ld), gptq.tokens_per_joule(ctx, ld),
+                      u_tpj, v_tpj],
+            }
+        })
+        .collect()
+}
+
+/// Fig. 8 rendered with the headline HMT gains.
+pub fn fig8() -> String {
+    let data = fig8_data();
+    let mut out = String::new();
+
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|r| vec![
+            r.ctx.to_string(),
+            fmt_secs(r.prefill[0]), fmt_secs(r.prefill[1]), fmt_secs(r.prefill[2]),
+            fmt_secs(r.prefill[3]),
+            fmt_ratio(r.prefill[1] / r.prefill[2]),
+        ])
+        .collect();
+    out.push_str(&table(
+        "Fig. 8a — long-context prefill latency (paper: HMT cuts U280 prefill up to 23.23×)",
+        &["Context", "A100 full", "U280 full(theor.)", "U280+HMT", "V80+HMT", "HMT gain"],
+        &rows,
+    ));
+    out.push('\n');
+
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|r| vec![
+            r.ctx.to_string(),
+            fmt_secs(r.e2e[0]), fmt_secs(r.e2e[1]), fmt_secs(r.e2e[2]), fmt_secs(r.e2e[3]),
+            fmt_ratio(r.e2e[0] / r.e2e[2]), fmt_ratio(r.e2e[0] / r.e2e[3]),
+        ])
+        .collect();
+    out.push_str(&table(
+        "Fig. 8b — long-context end-to-end latency (l_d = ctx/4; paper: U280 1.10×, V80 3.70×)",
+        &["Context", "A100 BF16", "A100 GPTQ", "U280+HMT", "V80+HMT", "U280 gain", "V80 gain"],
+        &rows,
+    ));
+    out.push('\n');
+
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|r| vec![
+            r.ctx.to_string(),
+            format!("{:.4}", r.tpj[0]), format!("{:.4}", r.tpj[1]),
+            format!("{:.4}", r.tpj[2]), format!("{:.4}", r.tpj[3]),
+            fmt_ratio(r.tpj[2] / r.tpj[0]), fmt_ratio(r.tpj[3] / r.tpj[0]),
+        ])
+        .collect();
+    out.push_str(&table(
+        "Fig. 8c — long-context energy efficiency (paper: up to 5.21× U280 / 6.27× V80 vs BF16)",
+        &["Context", "A100 BF16", "A100 GPTQ", "U280+HMT", "V80+HMT", "U280 gain", "V80 gain"],
+        &rows,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_headline_shape_matches_paper() {
+        let h = fig7_headline();
+        // who-wins must match; factors within loose bands around the paper
+        assert!(h.u280_e2e > 1.0, "U280 must beat A100 BF16 E2E: {}", h.u280_e2e);
+        assert!(h.u280_tput > 1.2, "decode tput ratio {}", h.u280_tput);
+        assert!(h.u280_tpj > 2.0, "tokens/J ratio {}", h.u280_tpj);
+        assert!(h.v80_e2e > 2.5 && h.v80_tput > 4.0 && h.v80_tpj > 2.5,
+                "V80 ratios: {} {} {}", h.v80_e2e, h.v80_tput, h.v80_tpj);
+        assert!(h.allo_e2e > 1.1 && h.allo_tput > 1.1,
+                "Allo ratios: {} {}", h.allo_e2e, h.allo_tput);
+    }
+
+    #[test]
+    fn fig7_gpu_wins_prefill_heavy_short_decode() {
+        // paper: GPU has a clear advantage at [1024, 256]-style workloads
+        let data = fig7_data();
+        let r = data.iter().find(|r| r.lp == 1024 && r.ld == 256).unwrap();
+        // A100 prefill advantage shows in E2E at short decode: ratio near 1
+        let ratio = r.e2e[0] / r.e2e[3];
+        assert!(ratio < 1.3, "FPGA should not dominate short-decode: {ratio}");
+    }
+
+    #[test]
+    fn fig8_hmt_prefill_gain_grows_with_context() {
+        let data = fig8_data();
+        let g0 = data[0].prefill[1] / data[0].prefill[2];
+        let gn = data.last().unwrap().prefill[1] / data.last().unwrap().prefill[2];
+        assert!(gn > g0, "HMT gain must grow with context: {g0} → {gn}");
+        assert!(gn > 10.0, "64K HMT gain = {gn} (paper 23.23×)");
+    }
+
+    #[test]
+    fn fig8_hmt_restores_fpga_advantage() {
+        let data = fig8_data();
+        let last = data.last().unwrap();
+        assert!(last.e2e[2] < last.e2e[0], "U280+HMT must beat A100 at 64K");
+        assert!(last.tpj[2] / last.tpj[0] > 2.0, "energy gain at 64K");
+    }
+
+    #[test]
+    fn figures_render() {
+        assert!(fig1().contains("Hybrid"));
+        assert!(fig2().contains("Decode"));
+        assert!(fig6().contains("Linear"));
+        assert!(fig7_csv().lines().count() > 40);
+    }
+}

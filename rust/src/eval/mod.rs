@@ -1,0 +1,10 @@
+//! Evaluation harness: regenerates every table and figure in the paper
+//! (see DESIGN.md §6 for the experiment index).
+
+pub mod ablation;
+pub mod figures;
+pub mod tables;
+
+pub use figures::{fig1, fig2, fig6, fig7, fig7_csv, fig7_data, fig7_headline, fig8,
+                  fig8_data, FIG7_GRID, FIG8_CONTEXTS};
+pub use tables::{table1, table2, table3, table4, table5, table6, table6_deltas};

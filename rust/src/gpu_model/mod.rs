@@ -1,0 +1,204 @@
+//! A100 GPU roofline baselines (paper Sec. VI-A: HuggingFace BF16 under
+//! vLLM, and INT4 GPTQ with Marlin kernels under vLLM).
+//!
+//! Substitution argument (DESIGN.md §2): the paper's GPU comparisons rest
+//! on two measured facts — prefill is compute-bound at high utilization,
+//! decode is bandwidth-bound at *low effective* bandwidth utilization
+//! (13.06% average for A100+vLLM on this 1B model, Sec. VI-B1). We model
+//! exactly those two regimes with the utilization constants the paper
+//! reports, plus a per-step launch floor that dominates tiny models.
+
+use crate::config::{DeviceConfig, ModelDims};
+
+/// GPU weight/KV precision mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuMode {
+    /// HuggingFace BF16 weights under vLLM.
+    Bf16,
+    /// INT4 GPTQ + Marlin kernels under vLLM.
+    GptqMarlinInt4,
+}
+
+impl GpuMode {
+    pub fn weight_bytes(self) -> f64 {
+        match self {
+            GpuMode::Bf16 => 2.0,
+            GpuMode::GptqMarlinInt4 => 0.5,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            GpuMode::Bf16 => "A100 BF16 (vLLM)",
+            GpuMode::GptqMarlinInt4 => "A100 INT4 GPTQ-Marlin (vLLM)",
+        }
+    }
+}
+
+/// Calibration constants (documented in DESIGN.md §2 / EXPERIMENTS.md).
+mod cal {
+    /// Prefill model-FLOPs utilization for a 1B model under vLLM.
+    /// (Small models can't fill the A100; Fig. 2 shows ~45-55% compute
+    /// utilization during prefill.)
+    pub const PREFILL_MFU: f64 = 0.48;
+    /// Effective HBM bandwidth utilization during single-stream decode —
+    /// the paper measures 13.06% average for A100+vLLM.
+    pub const DECODE_BW_UTIL: f64 = 0.1306;
+    /// Marlin's fused dequant kernels sustain somewhat better effective
+    /// bandwidth on the weight stream.
+    pub const MARLIN_BW_UTIL: f64 = 0.16;
+    /// Per-decode-step launch/sync floor (CUDA graphs reduce but don't
+    /// eliminate it for a 16-layer model).
+    pub const STEP_FLOOR_S: f64 = 3.5e-4;
+    /// Average device power during prefill/decode (W) — A100 boards run
+    /// well below TDP on memory-bound decode.
+    pub const PREFILL_POWER_W: f64 = 265.0;
+    pub const DECODE_POWER_W: f64 = 165.0;
+}
+
+/// An A100 running the target model in a given mode.
+pub struct GpuBaseline {
+    pub device: DeviceConfig,
+    pub model: ModelDims,
+    pub mode: GpuMode,
+}
+
+impl GpuBaseline {
+    pub fn a100(model: ModelDims, mode: GpuMode) -> Self {
+        GpuBaseline { device: DeviceConfig::a100(), model, mode }
+    }
+
+    /// Prefill latency: compute-bound at PREFILL_MFU (plus attention
+    /// FLOPs, which matter at long context).
+    pub fn prefill_latency_s(&self, l_p: u64) -> f64 {
+        let dense = self.model.flops_per_token() * l_p as f64;
+        let attn = 2.0 * (self.model.n_layers * self.model.d_model) as f64
+            * (l_p as f64).powi(2);
+        (dense + attn) / (self.device.peak_tflops * 1e12 * cal::PREFILL_MFU)
+    }
+
+    /// Decode latency: bandwidth-bound on weights + KV traffic at the
+    /// measured effective utilization, floored by launch overhead.
+    pub fn decode_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        let avg_ctx = l_p + l_d / 2;
+        let weights = self.model.decode_weight_bytes(self.mode.weight_bytes(),
+                                                     self.mode.weight_bytes());
+        let kv = self.model.kv_bytes_per_token(avg_ctx, 2.0); // BF16 KV under vLLM
+        let util = match self.mode {
+            GpuMode::Bf16 => cal::DECODE_BW_UTIL,
+            GpuMode::GptqMarlinInt4 => cal::MARLIN_BW_UTIL,
+        };
+        let per_token = ((weights + kv) / (self.device.hbm_bw * util))
+            .max(cal::STEP_FLOOR_S);
+        l_d as f64 * per_token
+    }
+
+    pub fn e2e_latency_s(&self, l_p: u64, l_d: u64) -> f64 {
+        self.prefill_latency_s(l_p) + self.decode_latency_s(l_p, l_d)
+    }
+
+    pub fn decode_throughput(&self, l_p: u64, l_d: u64) -> f64 {
+        l_d as f64 / self.decode_latency_s(l_p, l_d)
+    }
+
+    /// Tokens per joule over the full request.
+    pub fn tokens_per_joule(&self, l_p: u64, l_d: u64) -> f64 {
+        let e = self.prefill_latency_s(l_p) * cal::PREFILL_POWER_W
+            + self.decode_latency_s(l_p, l_d) * cal::DECODE_POWER_W;
+        l_d as f64 / e
+    }
+
+    /// Fig. 2: (compute utilization, bandwidth utilization) per stage.
+    pub fn fig2_utilization(&self, l_p: u64, l_d: u64) -> Fig2 {
+        let pre_t = self.prefill_latency_s(l_p);
+        let pre_flops = self.model.flops_per_token() * l_p as f64
+            + 2.0 * (self.model.n_layers * self.model.d_model) as f64 * (l_p as f64).powi(2);
+        let pre_compute = pre_flops / pre_t / (self.device.peak_tflops * 1e12);
+        // prefill reads weights once + writes KV
+        let pre_bytes = self.model.n_params() as f64 * self.mode.weight_bytes()
+            + self.model.kv_bytes_per_token(1, 2.0) * l_p as f64;
+        let pre_bw = pre_bytes / pre_t / self.device.hbm_bw;
+
+        let dec_t = self.decode_latency_s(l_p, l_d);
+        let dec_flops = self.model.flops_per_token() * l_d as f64;
+        let dec_compute = dec_flops / dec_t / (self.device.peak_tflops * 1e12);
+        let dec_bytes = (self.model.decode_weight_bytes(self.mode.weight_bytes(),
+                                                        self.mode.weight_bytes())
+            + self.model.kv_bytes_per_token(l_p + l_d / 2, 2.0))
+            * l_d as f64;
+        let dec_bw = dec_bytes / dec_t / self.device.hbm_bw;
+        Fig2 { prefill_compute: pre_compute, prefill_bw: pre_bw,
+               decode_compute: dec_compute, decode_bw: dec_bw }
+    }
+}
+
+/// Fig. 2 datapoint: stage utilization of compute and memory bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig2 {
+    pub prefill_compute: f64,
+    pub prefill_bw: f64,
+    pub decode_compute: f64,
+    pub decode_bw: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bf16() -> GpuBaseline {
+        GpuBaseline::a100(ModelDims::llama32_1b(), GpuMode::Bf16)
+    }
+
+    #[test]
+    fn prefill_is_fast_decode_is_slow() {
+        // the stage divergence that motivates the paper (Fig. 2)
+        let g = bf16();
+        let pre = g.prefill_latency_s(1024);
+        let dec = g.decode_latency_s(1024, 1024);
+        assert!(pre < 0.2, "prefill = {pre}");
+        assert!(dec > 5.0, "decode = {dec}");
+    }
+
+    #[test]
+    fn fig2_stage_divergence() {
+        let g = bf16();
+        let f = g.fig2_utilization(1024, 1024);
+        // prefill: compute-dominated; decode: bandwidth-dominated
+        assert!(f.prefill_compute > 0.3 && f.prefill_compute <= 1.0);
+        assert!(f.decode_compute < 0.05, "decode compute = {}", f.decode_compute);
+        assert!(f.decode_bw > 0.08 && f.decode_bw < 0.3);
+        assert!(f.decode_bw > f.decode_compute * 3.0);
+    }
+
+    #[test]
+    fn marlin_faster_than_bf16_decode() {
+        let b = bf16();
+        let m = GpuBaseline::a100(ModelDims::llama32_1b(), GpuMode::GptqMarlinInt4);
+        assert!(m.decode_latency_s(1024, 1024) < b.decode_latency_s(1024, 1024) / 2.0);
+    }
+
+    #[test]
+    fn paper_headline_u280_ratios() {
+        // Fig. 7 headline: U280 ≈ 1.29× E2E, 1.64× decode tput, 3.14×
+        // tokens/J over A100 BF16 (averaged over the workload grid).
+        use crate::arch::AcceleratorSystem;
+        let gpu = bf16();
+        let fpga = AcceleratorSystem::u280();
+        let grid = [(512u64, 256u64), (512, 512), (512, 1024), (512, 2048),
+                    (1024, 256), (1024, 512), (1024, 1024), (1024, 2048)];
+        let mut e2e = 0.0;
+        let mut tput = 0.0;
+        let mut energy = 0.0;
+        for (lp, ld) in grid {
+            e2e += gpu.e2e_latency_s(lp, ld) / fpga.e2e_latency_s(lp, ld);
+            tput += fpga.decode_throughput(lp, ld) / gpu.decode_throughput(lp, ld);
+            energy += fpga.tokens_per_joule(lp, ld) / gpu.tokens_per_joule(lp, ld);
+        }
+        let n = grid.len() as f64;
+        let (e2e, tput, energy) = (e2e / n, tput / n, energy / n);
+        // who-wins and rough factors must match the paper
+        assert!(e2e > 1.0 && e2e < 1.8, "E2E speedup = {e2e} (paper 1.29)");
+        assert!(tput > 1.2 && tput < 2.2, "decode tput ratio = {tput} (paper 1.64)");
+        assert!(energy > 2.2 && energy < 4.5, "tokens/J ratio = {energy} (paper 3.14)");
+    }
+}

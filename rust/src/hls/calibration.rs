@@ -1,0 +1,105 @@
+//! Calibration constants for the resource / timing models.
+//!
+//! The paper reports *measured* post-P&R utilization for its U280/V80
+//! designs (Table VI). We cannot run Vivado, so the per-PE and per-lane
+//! fabric costs below are fitted so the paper's exact architecture
+//! configurations land near the reported utilization rows (the
+//! calibration test in `arch::tests` asserts the fit). They are kept in
+//! one place so the fit is auditable and re-tunable.
+
+use crate::config::Precision;
+use crate::hls::Resources;
+
+/// Fabric cost of one multiply-accumulate PE at a given precision.
+///
+/// INT4 MACs map to LUT fabric (two per LUT6-pair cluster) with a small
+/// amortized DSP share from the reduction tree; INT8 packs two MACs per
+/// DSP48/DSP58; FP16/FP32 consume whole DSP cascades.
+pub fn pe_cost(p: Precision) -> Resources {
+    match p {
+        Precision::Int4 => Resources { lut: 68.0, ff: 52.0, dsp: 0.42, ..Resources::zero() },
+        Precision::Int8 => Resources { lut: 34.0, ff: 44.0, dsp: 0.55, ..Resources::zero() },
+        Precision::Fp16 => Resources { lut: 90.0, ff: 110.0, dsp: 1.0, ..Resources::zero() },
+        Precision::Fp32 => Resources { lut: 180.0, ff: 220.0, dsp: 2.0, ..Resources::zero() },
+    }
+}
+
+/// Lane-count scaling for multi-lane (TP/BP) elementwise modules: control
+/// logic, LUTROM function tables and schedulers are shared across lanes,
+/// so fabric grows sub-linearly. Fitted exponent 0.8 reconciles the U280
+/// (BP=16) and V80 (BP=64) decode rows of Table VI with one coefficient
+/// set.
+pub fn lane_scale(lanes: u64) -> f64 {
+    (lanes.max(1) as f64).powf(0.8)
+}
+
+/// Fabric cost of one non-linear lane (one token-lane of softmax / norm /
+/// RoPE / Swish datapath): FP16 exp/div/sqrt pipelines are DSP-heavy.
+pub fn nonlinear_lane_cost() -> Resources {
+    Resources { lut: 3_100.0, ff: 3_400.0, dsp: 11.0, bram: 0.6, ..Resources::zero() }
+}
+
+/// One quantizer / dequantizer lane (comparators, round, clip, plus the
+/// per-channel auxiliary-data buffers for the dequantizer).
+pub fn quant_lane_cost(dynamic: bool) -> Resources {
+    let base = Resources { lut: 900.0, ff: 1_050.0, dsp: 2.0, bram: 0.4, ..Resources::zero() };
+    if dynamic {
+        // dynamic adds the online min/max reduction tree
+        base + Resources { lut: 450.0, ff: 380.0, dsp: 0.5, ..Resources::zero() }
+    } else {
+        base
+    }
+}
+
+/// FHT butterfly lane (adders only — the paper's motivation for FHT over
+/// explicit rotations).
+pub fn fht_lane_cost(dim: u64) -> Resources {
+    let stages = (dim as f64).log2().ceil();
+    Resources {
+        lut: 140.0 * stages,
+        ff: 160.0 * stages,
+        bram: 0.25 * stages,
+        ..Resources::zero()
+    }
+}
+
+/// Static platform infrastructure: HBM AXI adapters, host DMA, control.
+/// (Vitis platform region on U280 occupies a comparable share.)
+pub fn platform_overhead() -> Resources {
+    Resources {
+        lut: 118_000.0,
+        ff: 180_000.0,
+        dsp: 12.0,
+        bram: 210.0,
+        uram: 0.0,
+        ..Resources::zero()
+    }
+}
+
+/// On-chip buffering for a streamed weight channel of width `wp` at
+/// precision `p` (double-buffered BRAM FIFO per channel).
+pub fn weight_stream_buffers(wp: u64, p: Precision) -> Resources {
+    Resources {
+        bram: 0.09 * wp as f64 * p.bytes().max(0.5),
+        lut: 14.0 * wp as f64,
+        ff: 20.0 * wp as f64,
+        ..Resources::zero()
+    }
+}
+
+/// Activation / KV tile buffering in URAM for a module holding `bytes`
+/// of working set on-chip (URAM = 288 Kb = 36 KiB per block).
+pub fn uram_for_bytes(bytes: f64) -> Resources {
+    Resources { uram: (bytes / 36_864.0).ceil(), ..Resources::zero() }
+}
+
+/// Measurement gap: the paper's on-board latencies exceed the closed-form
+/// bounds (Eqs. 1–7). Prefill runs close to its bound (streaming hides
+/// most stalls: 1.65 s measured vs ~1.48 s Eq. 4 on U280 → ×1.12).
+/// Decode pays dependency stalls, HBM bank conflicts on KV fetch and
+/// per-token control overhead that the bound ignores (6.94 s measured vs
+/// ~4.7 s Eq. 6 → ×1.45; the same factor lands the V80 estimate at the
+/// paper's 1.68 s). Both factors are fitted once against Table VI and
+/// applied uniformly — never per-experiment.
+pub const MEASURED_OVERHEAD_PREFILL: f64 = 1.12;
+pub const MEASURED_OVERHEAD_DECODE: f64 = 1.45;

@@ -1,0 +1,192 @@
+//! Composition graph: the `tapa::task().invoke(...)` analog.
+//!
+//! A [`DataflowGraph`] holds module *instances* (nodes) connected by
+//! FIFO streams (edges). Two composition styles, mirroring Fig. 4:
+//!
+//! * **spatial** — distinct instances connected by streams run
+//!   concurrently, pipelined at token granularity;
+//! * **temporal reuse** — one instance serves several logical roles
+//!   sequentially; model it by adding the node once with
+//!   `invocations_per_token > 1` (e.g. the shared KQ linear of Fig. 4
+//!   processes each token twice: once for K, once for Q).
+
+use std::collections::HashMap;
+
+use crate::hls::module::{ModuleKind, ModuleRef};
+use crate::hls::stream::StreamEdge;
+use crate::hls::Resources;
+
+/// Node id in a dataflow graph.
+pub type NodeId = usize;
+
+/// One hardware instance in the composed design.
+pub struct Node {
+    pub id: NodeId,
+    pub module: ModuleRef,
+    /// How many times this instance processes each token (temporal reuse:
+    /// the Fig. 4 KQ linear has 2; a dedicated instance has 1).
+    pub invocations_per_token: f64,
+    /// Instance multiplicity: identical copies working in parallel
+    /// (e.g. K-engine and V-engine). Scales resources and divides load.
+    pub copies: u64,
+}
+
+impl Node {
+    /// Effective steady-state cycles this node spends per pipeline token.
+    pub fn service_per_token(&self) -> f64 {
+        self.module.service_cycles_per_token() * self.invocations_per_token
+            / self.copies as f64
+    }
+}
+
+/// The composed accelerator graph.
+#[derive(Default)]
+pub struct DataflowGraph {
+    pub nodes: Vec<Node>,
+    /// (producer, consumer, stream) triples.
+    pub edges: Vec<(NodeId, NodeId, StreamEdge)>,
+    names: HashMap<String, NodeId>,
+}
+
+impl DataflowGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a spatially-instantiated module (the `invoke` of Fig. 4).
+    pub fn invoke(&mut self, module: ModuleRef) -> NodeId {
+        self.invoke_reused(module, 1.0, 1)
+    }
+
+    /// Add a temporally-reused module: one instance, `reuse` sequential
+    /// roles per token (Fig. 4's `Linear_Layer_KQ_reused` has reuse = 2).
+    pub fn invoke_reused(&mut self, module: ModuleRef, reuse: f64, copies: u64) -> NodeId {
+        let id = self.nodes.len();
+        self.names.insert(module.name().to_string(), id);
+        self.nodes.push(Node { id, module, invocations_per_token: reuse, copies: copies.max(1) });
+        id
+    }
+
+    /// Connect two nodes with a FIFO stream.
+    pub fn connect(&mut self, from: NodeId, to: NodeId, stream: StreamEdge) {
+        assert!(from < self.nodes.len() && to < self.nodes.len(), "bad node id");
+        assert_ne!(from, to, "self-loops are not streamable");
+        self.edges.push((from, to, stream));
+    }
+
+    pub fn node_by_name(&self, name: &str) -> Option<&Node> {
+        self.names.get(name).map(|&id| &self.nodes[id])
+    }
+
+    /// Total fabric cost: module instances × copies + FIFO glue.
+    pub fn resources(&self) -> Resources {
+        let mut total = Resources::zero();
+        for n in &self.nodes {
+            total += n.module.resources() * n.copies as f64;
+        }
+        for (_, _, s) in &self.edges {
+            total += s.resources();
+        }
+        total
+    }
+
+    /// Aggregate HBM traffic per token across all nodes.
+    pub fn hbm_bytes_per_token(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| n.module.hbm_bytes_per_token() * n.invocations_per_token)
+            .sum()
+    }
+
+    /// The steady-state pipeline bottleneck: max node service per token.
+    /// (Spatial pipeline throughput = 1 / bottleneck.)
+    pub fn bottleneck_cycles_per_token(&self) -> f64 {
+        self.nodes.iter().map(|n| n.service_per_token()).fold(0.0, f64::max)
+    }
+
+    /// Sum of service times — the fully-serialized (temporal) latency per
+    /// token; the spatial/temporal gap of Fig. 1 is the ratio of this to
+    /// the bottleneck.
+    pub fn serialized_cycles_per_token(&self) -> f64 {
+        self.nodes.iter().map(|n| n.service_per_token()).sum()
+    }
+
+    /// Per-kind resource breakdown for Table IV-style reporting.
+    pub fn kind_breakdown(&self) -> Vec<(ModuleKind, usize, Resources)> {
+        let mut by_kind: HashMap<u8, (ModuleKind, usize, Resources)> = HashMap::new();
+        for n in &self.nodes {
+            let k = n.module.kind();
+            let entry = by_kind
+                .entry(k as u8)
+                .or_insert((k, 0, Resources::zero()));
+            entry.1 += n.copies as usize;
+            entry.2 += n.module.resources() * n.copies as f64;
+        }
+        let mut v: Vec<_> = by_kind.into_values().collect();
+        v.sort_by_key(|(k, _, _)| *k as u8);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::config::Precision;
+    use crate::hls::module::{NonLinear, NonLinearKind, PrefillLinear};
+
+    fn linear(label: &str, tp: u64, wp: u64) -> ModuleRef {
+        Arc::new(PrefillLinear::new(label, tp, wp, 256, 256, Precision::Int4))
+    }
+
+    #[test]
+    fn temporal_reuse_halves_throughput_not_resources() {
+        let mut spatial = DataflowGraph::new();
+        let a = spatial.invoke(linear("a", 8, 32));
+        let b = spatial.invoke(linear("b", 8, 32));
+        spatial.connect(a, b, StreamEdge::activation(8));
+
+        let mut temporal = DataflowGraph::new();
+        temporal.invoke_reused(linear("ab", 8, 32), 2.0, 1);
+
+        // same work per token when serialized…
+        assert!((spatial.serialized_cycles_per_token()
+            - temporal.serialized_cycles_per_token())
+            .abs()
+            < 1e-9);
+        // …but the temporal design has half the PE resources
+        assert!(temporal.resources().lut < 0.75 * spatial.resources().lut);
+        // …and half the pipeline throughput
+        assert!(temporal.bottleneck_cycles_per_token()
+            > 1.9 * spatial.bottleneck_cycles_per_token());
+    }
+
+    #[test]
+    fn bottleneck_is_slowest_stage() {
+        let mut g = DataflowGraph::new();
+        let a = g.invoke(linear("fast", 8, 64));
+        let b = g.invoke(linear("slow", 8, 8));
+        g.connect(a, b, StreamEdge::activation(8));
+        let slow = g.node_by_name("slow").unwrap().service_per_token();
+        assert_eq!(g.bottleneck_cycles_per_token(), slow);
+    }
+
+    #[test]
+    fn copies_divide_load() {
+        let mut g = DataflowGraph::new();
+        g.invoke_reused(linear("dual", 8, 32), 1.0, 2);
+        let single = linear("x", 8, 32).service_cycles_per_token();
+        assert!((g.bottleneck_cycles_per_token() - single / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nonlinear_nodes_compose() {
+        let mut g = DataflowGraph::new();
+        let l = g.invoke(linear("l", 8, 32));
+        let r = g.invoke(Arc::new(NonLinear::new("rope", NonLinearKind::RoPE, 8, 64)));
+        g.connect(l, r, StreamEdge::activation(8));
+        assert_eq!(g.nodes.len(), 2);
+        assert!(g.resources().dsp > 0.0);
+    }
+}

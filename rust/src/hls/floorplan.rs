@@ -1,0 +1,77 @@
+//! Floorplan / achieved-frequency model (the AutoBridge stand-in).
+//!
+//! The paper closes timing with AutoBridge-style coarse floorplanning and
+//! reports 304 / 292 / 290 MHz for the U280 prefill / decode / HMT
+//! designs against a ~320 MHz HLS target, and estimates 300 MHz on V80.
+//! We model the two effects that dominate achieved frequency on multi-die
+//! Alveo parts:
+//!
+//! * **congestion derating** — routing delay grows once utilization
+//!   crosses ~55% of the binding resource class;
+//! * **fan-out derating** — very wide engines (the decode WP=1024 linear)
+//!   lose frequency to high-fanout nets unless partitioned into identical
+//!   submodules (the paper's mitigation, Sec. IV-B).
+
+use crate::config::{DeviceConfig, DeviceKind};
+
+/// Achieved post-P&R clock for a composed design.
+///
+/// * `util` — binding (max-class) resource utilization in 0..1;
+/// * `widest_engine` — WP of the widest single engine after partitioning
+///   (`wp / partitions`).
+pub fn achieved_frequency(dev: &DeviceConfig, util: f64, widest_engine: u64) -> f64 {
+    match dev.kind {
+        DeviceKind::A100 => 1.41e9, // GPU boost clock; unused by FPGA paths
+        DeviceKind::U280 | DeviceKind::V80 => {
+            let congestion = 0.12 * ((util - 0.45).max(0.0) / 0.45).powf(1.5);
+            let fanout = 0.035 * ((widest_engine as f64 / 256.0).log2().max(0.0));
+            let derate = 1.0 - congestion.min(0.30) - fanout.min(0.15);
+            dev.target_clock_hz * derate.max(0.5)
+        }
+    }
+}
+
+/// Choose the partition count for a wide decode engine: the smallest
+/// split whose submodule width no longer costs more than ~2% frequency.
+pub fn partition_for_frequency(wp: u64) -> u64 {
+    let mut parts = 1;
+    while wp / parts > 512 && parts < 32 {
+        parts *= 2;
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+
+    #[test]
+    fn matches_paper_u280_prefill_band() {
+        // Table VI: prefill util max 66% (CLB), widest engine WP_ffn=96
+        let f = achieved_frequency(&DeviceConfig::u280(), 0.66, 96);
+        assert!(f > 295e6 && f < 315e6, "f = {}", f / 1e6);
+    }
+
+    #[test]
+    fn matches_paper_u280_decode_band() {
+        // Table VI: decode util max 76% (CLB), WP_int4=1024 partitioned ×4
+        let parts = partition_for_frequency(1024);
+        let f = achieved_frequency(&DeviceConfig::u280(), 0.76, 1024 / parts);
+        assert!(f > 280e6 && f < 300e6, "f = {}", f / 1e6);
+    }
+
+    #[test]
+    fn frequency_decreases_with_congestion() {
+        let d = DeviceConfig::u280();
+        assert!(achieved_frequency(&d, 0.9, 64) < achieved_frequency(&d, 0.6, 64));
+    }
+
+    #[test]
+    fn partitioning_recovers_frequency() {
+        let d = DeviceConfig::u280();
+        let whole = achieved_frequency(&d, 0.7, 4096);
+        let split = achieved_frequency(&d, 0.7, 4096 / partition_for_frequency(4096));
+        assert!(split > whole);
+    }
+}

@@ -1,0 +1,27 @@
+//! The FlexLLM HLS module library **simulator** — the FPGA substrate.
+//!
+//! The paper's artifact is a TAPA C++ template library plus bitstreams;
+//! neither Vivado nor an Alveo card is available here, so this module
+//! implements the library's *semantics*: every template in Table III with
+//! its parallelism knobs, and for each composed design the cycle count
+//! (Eqs. 1–7), the fabric resources, the HBM traffic, and the dataflow
+//! pipeline behaviour (Fig. 1). See DESIGN.md §2 for the substitution
+//! argument.
+
+pub mod calibration;
+pub mod dataflow;
+pub mod floorplan;
+pub mod module;
+pub mod pipeline_sim;
+pub mod resource;
+pub mod stream;
+
+pub use dataflow::{DataflowGraph, Node, NodeId};
+pub use floorplan::{achieved_frequency, partition_for_frequency};
+pub use module::{
+    Dequantizer, DecodeLinear, FhtModule, KvCache, MhaEngine, ModuleKind, ModuleRef,
+    ModuleTemplate, NonLinear, NonLinearKind, PrefillLinear, Quantizer, Sampling,
+};
+pub use pipeline_sim::{simulate, Dependency, NodeStats, SimResult};
+pub use resource::Resources;
+pub use stream::StreamEdge;

@@ -1,0 +1,632 @@
+//! Module templates — the core of the FlexLLM library (paper Table III).
+//!
+//! Each template exposes the paper's configurable parameters
+//! (`token_parallelism`, `block_parallelism`, `weight_parallelism`,
+//! `head_parallelism`, dtypes, dims) and reports three models:
+//!
+//! * **timing** — cycles per token-tile, assuming II=1 pipelines (the
+//!   paper's stated optimization level), Eqs. 1 and 3;
+//! * **resources** — fabric cost (see [`super::calibration`]);
+//! * **bandwidth** — HBM bytes per processed token (Eq. 2).
+//!
+//! The dataflow simulator consumes these through the [`ModuleTemplate`]
+//! trait at *token* granularity: `service_cycles_per_token` is the
+//! steady-state initiation interval of the module for one token.
+
+use std::sync::Arc;
+
+use crate::config::Precision;
+use crate::hls::calibration as cal;
+use crate::hls::Resources;
+
+/// Coarse classification used by the composition/report layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModuleKind {
+    Linear,
+    Attention,
+    NonLinear,
+    Quant,
+    Dequant,
+    Fht,
+    KvCache,
+    Sampling,
+}
+
+impl ModuleKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModuleKind::Linear => "Linear",
+            ModuleKind::Attention => "MHA",
+            ModuleKind::NonLinear => "NonLinear",
+            ModuleKind::Quant => "Quant",
+            ModuleKind::Dequant => "Dequant",
+            ModuleKind::Fht => "FHT",
+            ModuleKind::KvCache => "KV_cache",
+            ModuleKind::Sampling => "Sampling",
+        }
+    }
+}
+
+/// The common interface every FlexLLM module template implements.
+pub trait ModuleTemplate: Send + Sync {
+    /// Instance label (e.g. "pref_linear_kqvo").
+    fn name(&self) -> &str;
+    fn kind(&self) -> ModuleKind;
+    /// Steady-state cycles to process ONE token through this module
+    /// (fractional: a TP=8 module at 100 cycles/tile is 12.5 cy/token).
+    fn service_cycles_per_token(&self) -> f64;
+    /// Pipeline fill latency in cycles (first-token latency adder).
+    fn fill_cycles(&self) -> u64 {
+        64
+    }
+    /// Fabric cost of one hardware instance.
+    fn resources(&self) -> Resources;
+    /// Off-chip HBM bytes moved per processed token.
+    fn hbm_bytes_per_token(&self) -> f64 {
+        0.0
+    }
+    /// (parameter, value) pairs for Table III-style introspection.
+    fn params(&self) -> Vec<(&'static str, String)>;
+}
+
+/// Shared handle used by composition graphs.
+pub type ModuleRef = Arc<dyn ModuleTemplate>;
+
+fn div_ceil(a: u64, b: u64) -> u64 {
+    a.div_ceil(b.max(1))
+}
+
+// ---------------------------------------------------------------------------
+// Linear layers
+// ---------------------------------------------------------------------------
+
+/// Prefill linear module: a TP×WP 2-D systolic array (paper Fig. 3(a)).
+///
+/// Timing: Eq. 1 — `T = tokens · d_in · d_out / (TP·WP)` cycles.
+/// Bandwidth: Eq. 2 — weights stream at `B_W · WP` bytes/cycle; per token
+/// that amortizes to `d_in·d_out·B_W / TP`.
+#[derive(Debug, Clone)]
+pub struct PrefillLinear {
+    pub label: String,
+    pub tp: u64,
+    pub wp: u64,
+    pub d_in: u64,
+    pub d_out: u64,
+    pub w_prec: Precision,
+}
+
+impl PrefillLinear {
+    pub fn new(label: &str, tp: u64, wp: u64, d_in: u64, d_out: u64, w_prec: Precision) -> Self {
+        assert!(tp > 0 && wp > 0, "parallelism must be positive");
+        PrefillLinear { label: label.into(), tp, wp, d_in, d_out, w_prec }
+    }
+
+    /// Eq. 1 latency for a full tensor of `tokens` tokens, in cycles.
+    pub fn latency_cycles(&self, tokens: u64) -> u64 {
+        div_ceil(tokens, self.tp) * div_ceil(self.d_in * self.d_out, self.wp)
+            + self.fill_cycles()
+    }
+}
+
+impl ModuleTemplate for PrefillLinear {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::Linear
+    }
+    fn service_cycles_per_token(&self) -> f64 {
+        (self.d_in * self.d_out) as f64 / (self.tp * self.wp) as f64
+    }
+    fn fill_cycles(&self) -> u64 {
+        self.d_in + self.wp.min(64) + 32
+    }
+    fn resources(&self) -> Resources {
+        let pes = (self.tp * self.wp) as f64;
+        let act_tile_bytes = (self.tp * self.d_in) as f64 * 2.0 * 2.0; // double-buffered fp16
+        cal::pe_cost(self.w_prec) * pes
+            + cal::weight_stream_buffers(self.wp, self.w_prec)
+            + cal::uram_for_bytes(act_tile_bytes)
+    }
+    fn hbm_bytes_per_token(&self) -> f64 {
+        (self.d_in * self.d_out) as f64 * self.w_prec.bytes() / self.tp as f64
+    }
+    fn params(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("dtype", self.w_prec.name().into()),
+            ("token_parallelism", self.tp.to_string()),
+            ("weight_parallelism", self.wp.to_string()),
+            ("max_in_dim", self.d_in.to_string()),
+            ("max_out_dim", self.d_out.to_string()),
+        ]
+    }
+}
+
+/// Decode linear module: BP sets of 1-D systolic arrays with WP/BP PEs
+/// each (paper Fig. 3(b)). Timing: Eq. 3 — `T = tokens·d_in·d_out / WP`.
+/// Weights cannot be shared across tokens, so every token streams the
+/// full weight matrix: `d_in·d_out·B_W` bytes/token.
+#[derive(Debug, Clone)]
+pub struct DecodeLinear {
+    pub label: String,
+    pub bp: u64,
+    pub wp: u64,
+    pub d_in: u64,
+    pub d_out: u64,
+    pub w_prec: Precision,
+    /// Number of identical submodules the engine is partitioned into for
+    /// floorplanning (paper Sec. IV-B last paragraph).
+    pub partitions: u64,
+}
+
+impl DecodeLinear {
+    pub fn new(label: &str, bp: u64, wp: u64, d_in: u64, d_out: u64, w_prec: Precision) -> Self {
+        assert!(bp > 0 && wp >= bp, "need WP ≥ BP ≥ 1");
+        DecodeLinear { label: label.into(), bp, wp, d_in, d_out, w_prec, partitions: 1 }
+    }
+
+    pub fn with_partitions(mut self, parts: u64) -> Self {
+        self.partitions = parts.max(1);
+        self
+    }
+
+    pub fn latency_cycles(&self, tokens: u64) -> u64 {
+        tokens * div_ceil(self.d_in * self.d_out, self.wp) + self.fill_cycles()
+    }
+}
+
+impl ModuleTemplate for DecodeLinear {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::Linear
+    }
+    fn service_cycles_per_token(&self) -> f64 {
+        (self.d_in * self.d_out) as f64 / self.wp as f64
+    }
+    fn fill_cycles(&self) -> u64 {
+        self.d_in / self.bp.max(1) + 64
+    }
+    fn resources(&self) -> Resources {
+        let pes = self.wp as f64;
+        // BP-way reduction trees: log2(WP/BP) adder stages per block
+        let tree_luts = self.bp as f64
+            * (self.wp / self.bp.max(1)) as f64
+            * ((self.wp / self.bp.max(1)) as f64).log2().max(1.0)
+            * 0.9;
+        // partitioning duplicates stream plumbing per submodule
+        let part_overhead =
+            cal::weight_stream_buffers(self.wp / self.partitions, self.w_prec) * (self.partitions as f64);
+        cal::pe_cost(self.w_prec) * pes
+            + Resources { lut: tree_luts, ff: tree_luts * 1.1, ..Resources::zero() }
+            + part_overhead
+    }
+    fn hbm_bytes_per_token(&self) -> f64 {
+        (self.d_in * self.d_out) as f64 * self.w_prec.bytes()
+    }
+    fn params(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("dtype", self.w_prec.name().into()),
+            ("block_parallelism", self.bp.to_string()),
+            ("weight_parallelism", self.wp.to_string()),
+            ("max_in_dim", self.d_in.to_string()),
+            ("max_out_dim", self.d_out.to_string()),
+            ("partitions", self.partitions.to_string()),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Attention
+// ---------------------------------------------------------------------------
+
+/// One MHA matmul engine (QKᵀ or PV) over the KV cache.
+///
+/// Prefill: per TP-tile the engine scans the full context —
+/// `d_model·ctx / WP` cycles (the Eq. 4 max-term). Decode: one token scans
+/// `ctx` — `d_model·ctx / WP` cycles (Eq. 6 max-term). KV stream traffic:
+/// `ctx · d_kv · B_kv` bytes per token-tile element.
+#[derive(Debug, Clone)]
+pub struct MhaEngine {
+    pub label: String,
+    /// Tokens per tile: TP in prefill, 1 in decode.
+    pub tile_tokens: u64,
+    pub wp: u64,
+    pub d_model: u64,
+    pub d_kv: u64,
+    /// Context length this engine is evaluated at (l_p, or l_p + l_d/2).
+    pub ctx: u64,
+    pub kv_prec: Precision,
+    pub head_parallelism: u64,
+}
+
+impl MhaEngine {
+    pub fn prefill(label: &str, tp: u64, wp: u64, d_model: u64, d_kv: u64, ctx: u64, hp: u64) -> Self {
+        MhaEngine { label: label.into(), tile_tokens: tp, wp, d_model, d_kv, ctx,
+                    kv_prec: Precision::Int8, head_parallelism: hp }
+    }
+
+    pub fn decode(label: &str, wp: u64, d_model: u64, d_kv: u64, avg_ctx: u64, hp: u64) -> Self {
+        MhaEngine { label: label.into(), tile_tokens: 1, wp, d_model, d_kv, ctx: avg_ctx,
+                    kv_prec: Precision::Int8, head_parallelism: hp }
+    }
+}
+
+impl ModuleTemplate for MhaEngine {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::Attention
+    }
+    fn service_cycles_per_token(&self) -> f64 {
+        (self.d_model * self.ctx) as f64 / (self.wp * self.tile_tokens) as f64
+    }
+    fn fill_cycles(&self) -> u64 {
+        self.d_model / self.head_parallelism.max(1) + 64
+    }
+    fn resources(&self) -> Resources {
+        let pes = (self.tile_tokens * self.wp) as f64;
+        let kv_tile = (self.d_kv * 512) as f64 * self.kv_prec.bytes(); // staging window
+        cal::pe_cost(self.kv_prec) * pes
+            + cal::weight_stream_buffers(self.wp, self.kv_prec)
+            + cal::uram_for_bytes(kv_tile)
+    }
+    fn hbm_bytes_per_token(&self) -> f64 {
+        (self.ctx * self.d_kv) as f64 * self.kv_prec.bytes() / self.tile_tokens as f64
+    }
+    fn params(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("dtype", self.kv_prec.name().into()),
+            ("weight_parallelism", self.wp.to_string()),
+            ("head_parallelism", self.head_parallelism.to_string()),
+            ("max_seq_len", self.ctx.to_string()),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-linear layers
+// ---------------------------------------------------------------------------
+
+/// Which non-linear template (paper Table III row 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NonLinearKind {
+    RoPE,
+    Softmax,
+    RmsNorm,
+    Swish,
+    Gate,
+    Residual,
+}
+
+impl NonLinearKind {
+    /// Pipelined passes over the channel dim (II=1 per element per lane).
+    fn passes(self) -> f64 {
+        match self {
+            NonLinearKind::RoPE => 0.5,     // hd/2 rotations
+            NonLinearKind::Softmax => 3.0,  // max, exp+sum, normalize
+            NonLinearKind::RmsNorm => 2.0,  // reduce, scale
+            NonLinearKind::Swish => 1.0,
+            NonLinearKind::Gate => 1.0,
+            NonLinearKind::Residual => 1.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NonLinearKind::RoPE => "RoPE",
+            NonLinearKind::Softmax => "Softmax",
+            NonLinearKind::RmsNorm => "RMSNorm",
+            NonLinearKind::Swish => "Swish",
+            NonLinearKind::Gate => "Gate",
+            NonLinearKind::Residual => "Residual",
+        }
+    }
+}
+
+/// A non-linear module with `lanes` parallel token lanes (TP in prefill,
+/// BP in decode — "non-linear overheads scale mainly with TP", Sec. IV-B).
+#[derive(Debug, Clone)]
+pub struct NonLinear {
+    pub label: String,
+    pub which: NonLinearKind,
+    pub lanes: u64,
+    pub io_dim: u64,
+}
+
+impl NonLinear {
+    pub fn new(label: &str, which: NonLinearKind, lanes: u64, io_dim: u64) -> Self {
+        NonLinear { label: label.into(), which, lanes: lanes.max(1), io_dim }
+    }
+}
+
+impl ModuleTemplate for NonLinear {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::NonLinear
+    }
+    fn service_cycles_per_token(&self) -> f64 {
+        self.which.passes() * self.io_dim as f64 / self.lanes as f64
+    }
+    fn fill_cycles(&self) -> u64 {
+        32
+    }
+    fn resources(&self) -> Resources {
+        cal::nonlinear_lane_cost() * cal::lane_scale(self.lanes)
+    }
+    fn params(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("kind", self.which.name().into()),
+            ("lanes(TP/BP)", self.lanes.to_string()),
+            ("io_dim", self.io_dim.to_string()),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantization modules
+// ---------------------------------------------------------------------------
+
+/// Quantizer template (paper Fig. 3(c), Quant Library row 1).
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    pub label: String,
+    pub dynamic: bool,
+    pub symmetric: bool,
+    pub per_token: bool,
+    pub lanes: u64,
+    pub io_dim: u64,
+    pub out_bits: u32,
+}
+
+impl Quantizer {
+    pub fn new(label: &str, dynamic: bool, symmetric: bool, per_token: bool,
+               lanes: u64, io_dim: u64, out_bits: u32) -> Self {
+        Quantizer { label: label.into(), dynamic, symmetric, per_token,
+                    lanes: lanes.max(1), io_dim, out_bits }
+    }
+}
+
+impl ModuleTemplate for Quantizer {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::Quant
+    }
+    fn service_cycles_per_token(&self) -> f64 {
+        // dynamic needs an extra min/max pass before the rounding pass
+        let passes = if self.dynamic { 2.0 } else { 1.0 };
+        passes * self.io_dim as f64 / self.lanes as f64
+    }
+    fn resources(&self) -> Resources {
+        cal::quant_lane_cost(self.dynamic) * cal::lane_scale(self.lanes)
+    }
+    fn params(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("in_quant_bit", self.out_bits.to_string()),
+            ("in_quant_type", if self.symmetric { "sym" } else { "asym" }.into()),
+            ("in_quant_granularity", if self.per_token { "per-token" } else { "per-tensor" }.into()),
+            ("dynamic", self.dynamic.to_string()),
+            ("lanes(TP/BP)", self.lanes.to_string()),
+        ]
+    }
+}
+
+/// Dequantizer template (Quant Library row 2): reconstructs FP from the
+/// integer accumulator using per-channel weight scales and column sums.
+#[derive(Debug, Clone)]
+pub struct Dequantizer {
+    pub label: String,
+    pub lanes: u64,
+    pub io_dim: u64,
+    pub w_per_channel: bool,
+}
+
+impl Dequantizer {
+    pub fn new(label: &str, lanes: u64, io_dim: u64, w_per_channel: bool) -> Self {
+        Dequantizer { label: label.into(), lanes: lanes.max(1), io_dim, w_per_channel }
+    }
+}
+
+impl ModuleTemplate for Dequantizer {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::Dequant
+    }
+    fn service_cycles_per_token(&self) -> f64 {
+        self.io_dim as f64 / self.lanes as f64
+    }
+    fn resources(&self) -> Resources {
+        // aux-data buffers (w_scale + col_sum per channel) in BRAM
+        let aux = Resources { bram: (self.io_dim as f64 * 8.0 / 4096.0).ceil(), ..Resources::zero() };
+        cal::quant_lane_cost(false) * cal::lane_scale(self.lanes) + aux
+    }
+    fn params(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("w_quant_granularity", if self.w_per_channel { "per-channel" } else { "per-tensor" }.into()),
+            ("lanes(TP/BP)", self.lanes.to_string()),
+            ("io_dim", self.io_dim.to_string()),
+        ]
+    }
+}
+
+/// Fast Hadamard Transform module (outlier handling; fully pipelined
+/// butterfly network, one token per `io_dim/lanes` cycles).
+#[derive(Debug, Clone)]
+pub struct FhtModule {
+    pub label: String,
+    pub lanes: u64,
+    pub io_dim: u64,
+}
+
+impl FhtModule {
+    pub fn new(label: &str, lanes: u64, io_dim: u64) -> Self {
+        assert!(io_dim.is_power_of_two(), "FHT dim must be a power of two");
+        FhtModule { label: label.into(), lanes: lanes.max(1), io_dim }
+    }
+}
+
+impl ModuleTemplate for FhtModule {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::Fht
+    }
+    fn service_cycles_per_token(&self) -> f64 {
+        self.io_dim as f64 / self.lanes as f64
+    }
+    fn fill_cycles(&self) -> u64 {
+        (self.io_dim as f64).log2() as u64 + 16
+    }
+    fn resources(&self) -> Resources {
+        cal::fht_lane_cost(self.io_dim) * cal::lane_scale(self.lanes)
+    }
+    fn params(&self) -> Vec<(&'static str, String)> {
+        vec![("lanes(TP/BP)", self.lanes.to_string()), ("io_dim", self.io_dim.to_string())]
+    }
+}
+
+/// KV-cache streaming module: writes new K/V to HBM and feeds the MHA
+/// engines. Pure traffic/buffering; negligible compute.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub label: String,
+    pub d_kv: u64,
+    pub kv_prec: Precision,
+}
+
+impl KvCache {
+    pub fn new(label: &str, d_kv: u64, kv_prec: Precision) -> Self {
+        KvCache { label: label.into(), d_kv, kv_prec }
+    }
+}
+
+impl ModuleTemplate for KvCache {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::KvCache
+    }
+    fn service_cycles_per_token(&self) -> f64 {
+        // write K and V rows for one token through a wide AXI port
+        (2 * self.d_kv) as f64 * self.kv_prec.bytes() / 64.0
+    }
+    fn resources(&self) -> Resources {
+        Resources { lut: 6_000.0, ff: 9_000.0, bram: 16.0, ..Resources::zero() }
+    }
+    fn hbm_bytes_per_token(&self) -> f64 {
+        (2 * self.d_kv) as f64 * self.kv_prec.bytes()
+    }
+    fn params(&self) -> Vec<(&'static str, String)> {
+        vec![("dtype", self.kv_prec.name().into()), ("d_kv", self.d_kv.to_string())]
+    }
+}
+
+/// Greedy / top-k sampling over the vocabulary logits.
+#[derive(Debug, Clone)]
+pub struct Sampling {
+    pub label: String,
+    pub vocab: u64,
+    pub lanes: u64,
+}
+
+impl Sampling {
+    pub fn new(label: &str, vocab: u64, lanes: u64) -> Self {
+        Sampling { label: label.into(), vocab, lanes: lanes.max(1) }
+    }
+}
+
+impl ModuleTemplate for Sampling {
+    fn name(&self) -> &str {
+        &self.label
+    }
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::Sampling
+    }
+    fn service_cycles_per_token(&self) -> f64 {
+        self.vocab as f64 / self.lanes as f64
+    }
+    fn resources(&self) -> Resources {
+        Resources { lut: 2_500.0 * cal::lane_scale(self.lanes),
+                    ff: 2_000.0 * cal::lane_scale(self.lanes),
+                    ..Resources::zero() }
+    }
+    fn params(&self) -> Vec<(&'static str, String)> {
+        vec![("vocab", self.vocab.to_string()), ("lanes", self.lanes.to_string())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_prefill_linear_latency() {
+        // Eq. 1: tokens·d_in·d_out/(TP·WP)
+        let m = PrefillLinear::new("l", 8, 24, 2048, 512, Precision::Int4);
+        let t = m.latency_cycles(1024) - m.fill_cycles();
+        assert_eq!(t, (1024 / 8) * (2048 * 512 / 24 + 1)); // ceil division
+        assert!((m.service_cycles_per_token() - 2048.0 * 512.0 / (8.0 * 24.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq3_decode_linear_latency() {
+        let m = DecodeLinear::new("l", 16, 1024, 2048, 8192, Precision::Int4);
+        let t = m.latency_cycles(1) - m.fill_cycles();
+        assert_eq!(t, 2048 * 8192 / 1024);
+    }
+
+    #[test]
+    fn eq2_bandwidth_per_cycle() {
+        // BW = B_W · WP bytes/cycle ⇒ per token: d_in·d_out·B_W/TP over
+        // d_in·d_out/(TP·WP) cycles.
+        let m = PrefillLinear::new("l", 8, 96, 2048, 8192, Precision::Int4);
+        let bytes_per_cycle = m.hbm_bytes_per_token() / m.service_cycles_per_token();
+        assert!((bytes_per_cycle - 0.5 * 96.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_streams_full_weights_every_token() {
+        let m = DecodeLinear::new("l", 16, 1024, 2048, 2048, Precision::Int4);
+        assert!((m.hbm_bytes_per_token() - 2048.0 * 2048.0 * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mha_scales_with_context() {
+        let a = MhaEngine::decode("m", 256, 2048, 512, 1024, 8);
+        let b = MhaEngine::decode("m", 256, 2048, 512, 2048, 8);
+        assert!((b.service_cycles_per_token() / a.service_cycles_per_token() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dynamic_quant_costs_more_than_static() {
+        let dy = Quantizer::new("q", true, false, true, 8, 2048, 4);
+        let st = Quantizer::new("q", false, true, false, 8, 2048, 8);
+        assert!(dy.service_cycles_per_token() > st.service_cycles_per_token());
+        assert!(dy.resources().lut > st.resources().lut);
+    }
+
+    #[test]
+    fn int4_pe_cheaper_in_dsp_than_fp16() {
+        let i4 = PrefillLinear::new("a", 8, 32, 256, 256, Precision::Int4);
+        let f16 = PrefillLinear::new("b", 8, 32, 256, 256, Precision::Fp16);
+        assert!(i4.resources().dsp < f16.resources().dsp);
+    }
+
+    #[test]
+    fn fht_requires_power_of_two() {
+        let ok = std::panic::catch_unwind(|| FhtModule::new("f", 4, 8192));
+        assert!(ok.is_ok());
+        let bad = std::panic::catch_unwind(|| FhtModule::new("f", 4, 8191));
+        assert!(bad.is_err());
+    }
+}

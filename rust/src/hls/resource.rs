@@ -1,0 +1,108 @@
+//! FPGA fabric resource accounting (CLB / DSP / LUT / FF / BRAM / URAM).
+//!
+//! Every module template reports a [`Resources`] vector; composition sums
+//! them; [`crate::config::DeviceConfig::utilization`] normalizes against
+//! the device pool. Units match the AMD datasheets: BRAM in 36Kb blocks,
+//! URAM in 288Kb blocks, CLB as slice count.
+
+use std::ops::{Add, AddAssign, Mul};
+
+
+/// A resource vector (usage or capacity).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub clb: f64,
+    pub dsp: f64,
+    pub lut: f64,
+    pub ff: f64,
+    pub bram: f64,
+    pub uram: f64,
+}
+
+impl Resources {
+    pub const fn zero() -> Self {
+        Resources { clb: 0.0, dsp: 0.0, lut: 0.0, ff: 0.0, bram: 0.0, uram: 0.0 }
+    }
+
+    /// The binding (maximum) utilization across classes — used for fit
+    /// checks after normalization.
+    pub fn max_class(&self) -> f64 {
+        self.clb
+            .max(self.dsp)
+            .max(self.lut)
+            .max(self.ff)
+            .max(self.bram)
+            .max(self.uram)
+    }
+
+    /// CLBs are not modeled independently: AMD packs 8 LUTs + 16 FFs per
+    /// CLB slice; observed designs close at ~55% LUT packing efficiency.
+    /// Calling this derives the CLB estimate from LUT/FF pressure.
+    pub fn with_derived_clb(mut self) -> Self {
+        let by_lut = self.lut / (8.0 * 0.55);
+        let by_ff = self.ff / (16.0 * 0.70);
+        self.clb = by_lut.max(by_ff);
+        self
+    }
+
+    pub fn is_finite(&self) -> bool {
+        [self.clb, self.dsp, self.lut, self.ff, self.bram, self.uram]
+            .iter()
+            .all(|v| v.is_finite() && *v >= 0.0)
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            clb: self.clb + o.clb,
+            dsp: self.dsp + o.dsp,
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram: self.bram + o.bram,
+            uram: self.uram + o.uram,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        *self = *self + o;
+    }
+}
+
+impl Mul<f64> for Resources {
+    type Output = Resources;
+    fn mul(self, k: f64) -> Resources {
+        Resources {
+            clb: self.clb * k,
+            dsp: self.dsp * k,
+            lut: self.lut * k,
+            ff: self.ff * k,
+            bram: self.bram * k,
+            uram: self.uram * k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_scale() {
+        let a = Resources { clb: 1.0, dsp: 2.0, lut: 3.0, ff: 4.0, bram: 5.0, uram: 6.0 };
+        let b = a * 2.0 + a;
+        assert_eq!(b.dsp, 6.0);
+        assert_eq!(b.uram, 18.0);
+        assert_eq!(b.max_class(), 18.0);
+    }
+
+    #[test]
+    fn derived_clb_tracks_lut_pressure() {
+        let r = Resources { lut: 440_000.0, ff: 100_000.0, ..Resources::zero() }
+            .with_derived_clb();
+        assert!(r.clb > 90_000.0 && r.clb < 110_000.0, "clb = {}", r.clb);
+    }
+}

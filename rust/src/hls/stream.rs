@@ -1,0 +1,65 @@
+//! On-chip FIFO stream model (the `tapa::stream` analog).
+//!
+//! Streams connect module instances in spatial-dataflow composition. The
+//! simulator treats them as depth-bounded queues only for resource
+//! accounting (BRAM/LUTRAM); throughput analysis uses the steady-state
+//! service rates (see `pipeline_sim`), where a deeper FIFO only shifts
+//! transients, not the bottleneck.
+
+use crate::hls::Resources;
+
+/// A typed stream edge between two module instances.
+#[derive(Debug, Clone)]
+pub struct StreamEdge {
+    /// Vector width in elements per beat (e.g. `vector<float, TP>`).
+    pub width_elems: u64,
+    /// Bytes per element.
+    pub elem_bytes: f64,
+    /// FIFO depth in beats.
+    pub depth: u64,
+}
+
+impl StreamEdge {
+    pub fn new(width_elems: u64, elem_bytes: f64, depth: u64) -> Self {
+        StreamEdge { width_elems, elem_bytes, depth: depth.max(2) }
+    }
+
+    /// Default stream sizing used by composed architectures.
+    pub fn activation(width_elems: u64) -> Self {
+        StreamEdge::new(width_elems, 2.0, 64)
+    }
+
+    /// FIFO storage in bytes.
+    pub fn bytes(&self) -> f64 {
+        self.width_elems as f64 * self.elem_bytes * self.depth as f64
+    }
+
+    /// Fabric cost: shallow FIFOs map to LUTRAM, deep ones to BRAM.
+    pub fn resources(&self) -> Resources {
+        let bytes = self.bytes();
+        if self.depth <= 32 {
+            Resources { lut: bytes / 32.0 + 24.0, ff: 48.0, ..Resources::zero() }
+        } else {
+            Resources { bram: (bytes / 4_608.0).ceil().max(0.5), lut: 40.0, ff: 60.0,
+                        ..Resources::zero() }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deep_fifos_use_bram() {
+        let shallow = StreamEdge::new(8, 2.0, 16);
+        let deep = StreamEdge::new(8, 2.0, 512);
+        assert_eq!(shallow.resources().bram, 0.0);
+        assert!(deep.resources().bram >= 1.0);
+    }
+
+    #[test]
+    fn depth_clamped_to_two() {
+        assert_eq!(StreamEdge::new(1, 1.0, 0).depth, 2);
+    }
+}

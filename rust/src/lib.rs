@@ -1,0 +1,36 @@
+//! # FlexLLM (reproduction) — composable library for stage-customized hybrid
+//! LLM accelerator design.
+//!
+//! This crate is the L3 layer of the three-layer reproduction (see
+//! `DESIGN.md`): it contains
+//!
+//! * the **HLS module-template library simulator** ([`hls`]) — the paper's
+//!   composable kernel/quant libraries with cycle, resource, bandwidth and
+//!   dataflow models (the FPGA substrate we cannot run is simulated here);
+//! * the **stage-customized architectures** ([`arch`]) for prefill, decode,
+//!   the HMT plug-in, and the temporal/spatial baselines;
+//! * the **design-space explorer** ([`dse`]) tuning TP/WP/BP under resource
+//!   and bandwidth constraints (the paper's ILP);
+//! * the **GPU roofline baselines** ([`gpu_model`]) for the A100
+//!   comparisons;
+//! * the **PJRT runtime** ([`runtime`]) that loads the AOT-compiled JAX /
+//!   Pallas artifacts (HLO text) and executes real quantized-model
+//!   numerics on CPU;
+//! * the **serving coordinator** ([`coordinator`]) — router, batcher,
+//!   prefill/decode scheduler, KV-cache manager, HMT segment driver;
+//! * the **evaluation harness** ([`eval`]) regenerating every table and
+//!   figure of the paper.
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod dse;
+pub mod eval;
+pub mod gpu_model;
+pub mod hls;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+pub use config::{DeviceConfig, ModelDims, Precision};

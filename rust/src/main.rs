@@ -1,0 +1,321 @@
+//! FlexLLM leader binary: report generation, serving, ablation, DSE.
+//!
+//! ```text
+//! flexllm report [--table N] [--fig N] [--all] [--csv PATH] [--artifacts DIR]
+//! flexllm serve [--requests N] [--new-tokens N] [--artifacts DIR]
+//! flexllm ablate [--artifacts DIR]
+//! flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
+//! flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
+//! ```
+//!
+//! (CLI is hand-rolled: the offline vendored crate set has no clap.)
+
+use anyhow::{anyhow, bail, Result};
+
+use flexllm::arch::{AcceleratorSystem, DecodeArch, PrefillArch};
+use flexllm::config::{DeviceConfig, ModelDims};
+use flexllm::coordinator::{GenRequest, Router};
+use flexllm::eval;
+use flexllm::report::fmt_secs;
+use flexllm::runtime::Runtime;
+
+const USAGE: &str = "\
+FlexLLM reproduction — stage-customized hybrid LLM accelerator design
+
+USAGE:
+  flexllm report [--table N] [--fig N] [--all] [--csv PATH] [--artifacts DIR]
+      Regenerate paper tables (1-6) and figures (1,2,6,7,8).
+  flexllm serve [--requests N] [--new-tokens N] [--artifacts DIR]
+      Serve batched generation requests through the AOT artifacts.
+  flexllm ablate [--artifacts DIR]
+      Run the Table V quantization ablation on the real artifacts.
+  flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
+      ILP-style design-space exploration for TP/WP/BP.
+  flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
+      Run the dataflow pipeline simulator on a stage architecture.
+";
+
+/// Minimal flag parser: --key value pairs plus boolean --flags.
+struct Args {
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String], bools: &[&str]) -> Result<Args> {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument '{a}'\n\n{USAGE}"))?;
+            if bools.contains(&key) {
+                flags.push((key.to_string(), None));
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+                flags.push((key.to_string(), Some(v.clone())));
+                i += 2;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number '{v}'")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+fn device_of(name: &str) -> Result<DeviceConfig> {
+    match name {
+        "u280" => Ok(DeviceConfig::u280()),
+        "v80" => Ok(DeviceConfig::v80()),
+        other => bail!("unknown device '{other}' (u280|v80)"),
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "report" => {
+            let a = Args::parse(rest, &["all"])?;
+            report(&a)
+        }
+        "serve" => {
+            let a = Args::parse(rest, &[])?;
+            serve(
+                a.get_u64("requests", 8)? as usize,
+                a.get_u64("new-tokens", 32)? as usize,
+                &a.get_str("artifacts", "artifacts"),
+            )
+        }
+        "ablate" => {
+            let a = Args::parse(rest, &[])?;
+            let rt = Runtime::open(a.get_str("artifacts", "artifacts"))?;
+            println!("{}", eval::table5(&rt)?);
+            Ok(())
+        }
+        "dse" => {
+            let a = Args::parse(rest, &[])?;
+            dse(
+                &a.get_str("device", "u280"),
+                &a.get_str("stage", "decode"),
+                a.get_u64("prefill", 1024)?,
+                a.get_u64("decode", 1024)?,
+            )
+        }
+        "simulate" => {
+            let a = Args::parse(rest, &[])?;
+            simulate(
+                &a.get_str("device", "u280"),
+                &a.get_str("stage", "prefill"),
+                a.get_u64("tokens", 1024)?,
+            )
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn report(a: &Args) -> Result<()> {
+    let all = a.has("all");
+    let artifacts = a.get_str("artifacts", "artifacts");
+    let tables: Vec<u64> = if all {
+        vec![1, 2, 3, 4, 5, 6]
+    } else {
+        a.get("table").map(|v| v.parse()).transpose()?.into_iter().collect()
+    };
+    let figs: Vec<u64> = if all {
+        vec![1, 2, 6, 7, 8]
+    } else {
+        a.get("fig").map(|v| v.parse()).transpose()?.into_iter().collect()
+    };
+    let mut printed = false;
+    for t in tables {
+        printed = true;
+        match t {
+            1 => println!("{}", eval::table1()),
+            2 => println!("{}", eval::table2()),
+            3 => println!("{}", eval::table3()),
+            4 => {
+                let (py, rs) = count_loc();
+                println!("{}", eval::table4(py, rs));
+            }
+            5 => {
+                let rt = Runtime::open(&artifacts)?;
+                println!("{}", eval::table5(&rt)?);
+            }
+            6 => println!("{}", eval::table6()),
+            _ => bail!("no table {t} in the paper"),
+        }
+    }
+    for f in figs {
+        printed = true;
+        match f {
+            1 => println!("{}", eval::fig1()),
+            2 => println!("{}", eval::fig2()),
+            6 => println!("{}", eval::fig6()),
+            7 => println!("{}", eval::fig7()),
+            8 => println!("{}", eval::fig8()),
+            _ => bail!("figure {f} is schematic-only in the paper (1,2,6,7,8 supported)"),
+        }
+    }
+    if let Some(path) = a.get("csv") {
+        std::fs::write(path, eval::fig7_csv())?;
+        println!("wrote Fig. 7 series to {path}");
+        printed = true;
+    }
+    if !printed {
+        bail!("nothing to report: pass --table N, --fig N or --all");
+    }
+    Ok(())
+}
+
+fn serve(n_requests: usize, new_tokens: usize, artifacts: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let s = rt.manifest.serving.prefill_len;
+    let bytes = std::fs::read(rt.dir().join("prompt_tokens.bin"))?;
+    let toks: Vec<i32> = bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let base: Vec<Vec<i32>> = toks.chunks_exact(s).map(|c| c.to_vec()).collect();
+    drop(rt);
+
+    let router = Router::spawn(artifacts.to_string())?;
+    let queue: Vec<GenRequest> = (0..n_requests)
+        .map(|i| GenRequest {
+            id: i as u64,
+            prompt: base[i % base.len()].clone(),
+            max_new_tokens: new_tokens,
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let results = router.generate(queue)?;
+    let wall = t0.elapsed();
+    let m = router.metrics()?;
+    println!("served {} requests in {}", results.len(), fmt_secs(wall.as_secs_f64()));
+    println!("  prefill: {} tok/s   decode: {:.1} tok/s   mean batch latency {}",
+             m.prefill_tps() as u64, m.decode_tps(),
+             fmt_secs(m.mean_batch_latency().as_secs_f64()));
+    for r in results.iter().take(2) {
+        println!("  req {}: ttft {} first tokens {:?}",
+                 r.id, fmt_secs(r.ttft.as_secs_f64()), &r.tokens[..r.tokens.len().min(8)]);
+    }
+    Ok(())
+}
+
+fn dse(device: &str, stage: &str, prefill: u64, decode: u64) -> Result<()> {
+    let model = ModelDims::llama32_1b();
+    let dev = device_of(device)?;
+    match stage {
+        "prefill" => {
+            let r = flexllm::dse::tune_prefill(&model, &dev, prefill);
+            println!("prefill DSE on {}: best TP={} WPkqvo={} WPmha={} WPffn={} → {}",
+                     dev.name, r.best.tp, r.best.wp_kqvo, r.best.wp_mha, r.best.wp_ffn,
+                     fmt_secs(r.latency_s));
+            println!("  evaluated {} candidates, {} feasible", r.evaluated, r.feasible);
+            let arch = PrefillArch::new(r.best, model, dev);
+            println!("  binding util {:.1}%  peak BW {:.0} GB/s",
+                     arch.utilization().max_class() * 100.0,
+                     arch.peak_bandwidth() / 1e9);
+        }
+        "decode" => {
+            let r = flexllm::dse::tune_decode(&model, &dev, prefill, decode);
+            println!("decode DSE on {}: best BP={} WPint4={} WPmha={} → {}",
+                     dev.name, r.best.bp, r.best.wp_int4, r.best.wp_mha,
+                     fmt_secs(r.latency_s));
+            println!("  evaluated {} candidates, {} feasible", r.evaluated, r.feasible);
+            let arch = DecodeArch::new(r.best, model, dev);
+            println!("  binding util {:.1}%  peak BW {:.0} GB/s  partitions {}",
+                     arch.utilization().max_class() * 100.0,
+                     arch.peak_bandwidth() / 1e9, arch.partitions);
+        }
+        other => bail!("unknown stage '{other}' (prefill|decode)"),
+    }
+    Ok(())
+}
+
+fn simulate(device: &str, stage: &str, tokens: u64) -> Result<()> {
+    let sys = match device {
+        "u280" => AcceleratorSystem::u280(),
+        "v80" => AcceleratorSystem::v80(),
+        other => bail!("unknown device '{other}' (u280|v80)"),
+    };
+    match stage {
+        "prefill" => {
+            let r = sys.prefill.simulate(tokens);
+            println!("prefill sim ({} tokens/layer): {:.0} cycles/layer, mean util {:.1}%",
+                     tokens, r.makespan_cycles, r.mean_utilization * 100.0);
+            println!("  analytic {}  simulated {}",
+                     fmt_secs(sys.prefill.analytic_latency_s(tokens)),
+                     fmt_secs(sys.prefill.simulated_latency_s(tokens)));
+            for n in &r.nodes {
+                println!("  {:<24} busy {:>12.0}  stall {:>12.0}  util {:>5.1}%",
+                         n.name, n.busy_cycles, n.stall_cycles, n.utilization * 100.0);
+            }
+        }
+        "decode" => {
+            let r = sys.decode.simulate(1024, tokens);
+            println!("decode sim ({} tokens): {:.0} cycles, mean util {:.1}%",
+                     tokens, r.makespan_cycles, r.mean_utilization * 100.0);
+            println!("  analytic {}  simulated {}",
+                     fmt_secs(sys.decode.analytic_latency_s(1024, tokens)),
+                     fmt_secs(sys.decode.simulated_latency_s(1024, tokens)));
+        }
+        other => bail!("unknown stage '{other}' (prefill|decode)"),
+    }
+    Ok(())
+}
+
+/// Rough LoC counter for Table IV (this repo's own code sizes).
+fn count_loc() -> (usize, usize) {
+    fn count_dir(dir: &str, ext: &str) -> usize {
+        let mut total = 0;
+        let mut stack = vec![std::path::PathBuf::from(dir)];
+        while let Some(d) = stack.pop() {
+            let Ok(entries) = std::fs::read_dir(&d) else { continue };
+            for e in entries.flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else if p.extension().map(|x| x == ext).unwrap_or(false) {
+                    if let Ok(s) = std::fs::read_to_string(&p) {
+                        total += s.lines().filter(|l| !l.trim().is_empty()).count();
+                    }
+                }
+            }
+        }
+        total
+    }
+    (count_dir("python", "py"), count_dir("rust", "rs") + count_dir("examples", "rs"))
+}

@@ -1,0 +1,124 @@
+//! Quantization scheme descriptors (Rust mirror of
+//! `python/compile/quantize.py::SCHEMES`, paper Table V).
+//!
+//! The L3 side needs schemes for two things: sizing the datapaths of
+//! composed architectures (bytes per weight at each site → bandwidth and
+//! HBM capacity) and labelling the ablation harness. The actual
+//! quantization *numerics* live in the L1 kernels.
+
+
+use crate::config::Precision;
+
+/// How attention (QKᵀ/PV + KV cache) is quantized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnMode {
+    /// Full precision (No_Quant).
+    Fp,
+    /// FP query path + dynamic INT4 KV (original SpinQuant setup, Q0).
+    FpKv4,
+    /// Dynamic symmetric INT8 (Q1).
+    Dyn8,
+    /// Static symmetric INT8 (Q2/Q3) — the hardware-friendly final form.
+    Sta8,
+}
+
+impl AttnMode {
+    pub fn kv_precision(self) -> Precision {
+        match self {
+            AttnMode::Fp => Precision::Fp16,
+            AttnMode::FpKv4 => Precision::Int4,
+            AttnMode::Dyn8 | AttnMode::Sta8 => Precision::Int8,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            AttnMode::Fp => "BF16",
+            AttnMode::FpKv4 => "BF16-INT4",
+            AttnMode::Dyn8 => "Dyn. INT8",
+            AttnMode::Sta8 => "Sta. INT8",
+        }
+    }
+}
+
+/// One row of Table V.
+#[derive(Debug, Clone)]
+pub struct Scheme {
+    pub name: &'static str,
+    pub display: &'static str,
+    pub linear_w: Precision,
+    pub linear_a: Precision,
+    pub attn: AttnMode,
+    pub lm_head: Precision,
+    /// Paper-reported WikiText-2 perplexity for Llama-3.2 1B.
+    pub paper_ppl: f64,
+}
+
+impl Scheme {
+    pub fn no_quant() -> Self {
+        Scheme { name: "noquant", display: "No_Quant", linear_w: Precision::Fp16,
+                 linear_a: Precision::Fp16, attn: AttnMode::Fp,
+                 lm_head: Precision::Fp16, paper_ppl: 8.94 }
+    }
+
+    pub fn q0() -> Self {
+        Scheme { name: "q0", display: "Q0 (SpinQuant)", linear_w: Precision::Int4,
+                 linear_a: Precision::Int4, attn: AttnMode::FpKv4,
+                 lm_head: Precision::Fp16, paper_ppl: 13.30 }
+    }
+
+    pub fn q1() -> Self {
+        Scheme { name: "q1", display: "Q1", linear_w: Precision::Int4,
+                 linear_a: Precision::Int4, attn: AttnMode::Dyn8,
+                 lm_head: Precision::Fp16, paper_ppl: 12.07 }
+    }
+
+    pub fn q2() -> Self {
+        Scheme { name: "q2", display: "Q2", linear_w: Precision::Int4,
+                 linear_a: Precision::Int4, attn: AttnMode::Sta8,
+                 lm_head: Precision::Fp16, paper_ppl: 12.28 }
+    }
+
+    /// The deployed W4A4KV8 scheme.
+    pub fn q3() -> Self {
+        Scheme { name: "q3", display: "Q3 (Final)", linear_w: Precision::Int4,
+                 linear_a: Precision::Int4, attn: AttnMode::Sta8,
+                 lm_head: Precision::Int4, paper_ppl: 12.68 }
+    }
+
+    pub fn all() -> Vec<Scheme> {
+        vec![Self::no_quant(), Self::q0(), Self::q1(), Self::q2(), Self::q3()]
+    }
+
+    /// Allo baseline scheme (W4A8KV8 SmoothQuant, Sec. VI-A).
+    pub fn allo_w4a8() -> Self {
+        Scheme { name: "allo_w4a8", display: "Allo W4A8KV8", linear_w: Precision::Int4,
+                 linear_a: Precision::Int8, attn: AttnMode::Sta8,
+                 lm_head: Precision::Fp16, paper_ppl: f64::NAN }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_v_rows() {
+        let all = Scheme::all();
+        assert_eq!(all.len(), 5);
+        assert_eq!(Scheme::q3().paper_ppl, 12.68);
+        assert_eq!(Scheme::q0().attn.kv_precision(), Precision::Int4);
+        assert_eq!(Scheme::q3().attn.kv_precision(), Precision::Int8);
+        assert_eq!(Scheme::q3().lm_head, Precision::Int4);
+        assert_eq!(Scheme::q2().lm_head, Precision::Fp16);
+    }
+
+    #[test]
+    fn paper_ordering() {
+        // No_Quant < Q1 < Q2 < Q3 < Q0 on WikiText-2
+        let (nq, q0, q1, q2, q3) = (Scheme::no_quant().paper_ppl, Scheme::q0().paper_ppl,
+                                    Scheme::q1().paper_ppl, Scheme::q2().paper_ppl,
+                                    Scheme::q3().paper_ppl);
+        assert!(nq < q1 && q1 < q2 && q2 < q3 && q3 < q0);
+    }
+}

@@ -1,0 +1,299 @@
+//! `artifacts/manifest.json` schema (written by python/compile/aot.py),
+//! parsed with the in-tree JSON parser (offline build — no serde).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// Tensor shape/dtype descriptor for artifact I/O.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<u64>,
+}
+
+/// One AOT-compiled HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Build-time stats for one quantization scheme (Table V row).
+#[derive(Debug, Clone)]
+pub struct SchemeStats {
+    /// Build-time (Python) perplexity — Rust cross-checks within 2%.
+    pub ppl: f64,
+    pub w_bits: Option<u64>,
+    pub a_bits: Option<u64>,
+    pub attn_mode: String,
+    pub kv_bits: Option<u64>,
+    pub lm_head_quant: bool,
+}
+
+/// Tiny-model configuration baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub n_layers: u64,
+    pub d_model: u64,
+    pub n_heads: u64,
+    pub n_kv_heads: u64,
+    pub d_ffn: u64,
+    pub vocab: u64,
+    pub max_seq: u64,
+}
+
+/// Serving shapes fixed at AOT time.
+#[derive(Debug, Clone)]
+pub struct ServingInfo {
+    pub batch: usize,
+    pub prefill_len: usize,
+    pub cache_shape: Vec<u64>,
+}
+
+/// Held-out eval batch layout (`eval_tokens.bin`).
+#[derive(Debug, Clone)]
+pub struct EvalInfo {
+    pub n_batches: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// HMT artifact shapes.
+#[derive(Debug, Clone)]
+pub struct HmtInfo {
+    pub batch: usize,
+    pub n_memories: usize,
+}
+
+/// Deterministic kernel-smoke vector for runtime unit tests.
+#[derive(Debug, Clone)]
+pub struct SmokeInfo {
+    pub x: Vec<f32>,
+    pub w: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub artifacts: HashMap<String, ArtifactEntry>,
+    pub schemes: HashMap<String, SchemeStats>,
+    pub serving: ServingInfo,
+    pub eval: EvalInfo,
+    pub hmt: HmtInfo,
+    pub smoke: SmokeInfo,
+    pub fp_ppl: f64,
+    /// Greedy generation reference [batch][steps] from build time.
+    pub greedy_reference: Vec<Vec<i32>>,
+}
+
+// ---- JSON → struct helpers -------------------------------------------
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest missing key '{key}'"))
+}
+
+fn u64_of(j: &Json, key: &str) -> Result<u64> {
+    req(j, key)?.as_u64().ok_or_else(|| anyhow!("'{key}' is not a u64"))
+}
+
+fn usize_of(j: &Json, key: &str) -> Result<usize> {
+    Ok(u64_of(j, key)? as usize)
+}
+
+fn f64_of(j: &Json, key: &str) -> Result<f64> {
+    req(j, key)?.as_f64().ok_or_else(|| anyhow!("'{key}' is not a number"))
+}
+
+fn str_of(j: &Json, key: &str) -> Result<String> {
+    Ok(req(j, key)?.as_str().ok_or_else(|| anyhow!("'{key}' is not a string"))?.into())
+}
+
+fn u64_vec(j: &Json, key: &str) -> Result<Vec<u64>> {
+    req(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{key}' is not an array"))?
+        .iter()
+        .map(|v| v.as_u64().ok_or_else(|| anyhow!("'{key}' element not u64")))
+        .collect()
+}
+
+fn f32_vec(j: &Json, key: &str) -> Result<Vec<f32>> {
+    req(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{key}' is not an array"))?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32).ok_or_else(|| anyhow!("'{key}' element not f32")))
+        .collect()
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: str_of(j, "name")?,
+        dtype: str_of(j, "dtype")?,
+        shape: u64_vec(j, "shape")?,
+    })
+}
+
+impl Manifest {
+    /// Parse the manifest document.
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src).map_err(|e| anyhow!("{e}"))?;
+
+        let m = req(&j, "model")?;
+        let model = ModelInfo {
+            n_layers: u64_of(m, "n_layers")?,
+            d_model: u64_of(m, "d_model")?,
+            n_heads: u64_of(m, "n_heads")?,
+            n_kv_heads: u64_of(m, "n_kv_heads")?,
+            d_ffn: u64_of(m, "d_ffn")?,
+            vocab: u64_of(m, "vocab")?,
+            max_seq: u64_of(m, "max_seq")?,
+        };
+
+        let mut artifacts = HashMap::new();
+        for (name, entry) in req(&j, "artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("'artifacts' not an object"))?
+        {
+            let inputs = req(entry, "inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs not array"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("artifact {name}"))?;
+            let outputs = req(entry, "outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs not array"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry { path: str_of(entry, "path")?, inputs, outputs },
+            );
+        }
+
+        let mut schemes = HashMap::new();
+        for (name, s) in req(&j, "schemes")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("'schemes' not an object"))?
+        {
+            schemes.insert(
+                name.clone(),
+                SchemeStats {
+                    ppl: f64_of(s, "ppl")?,
+                    w_bits: s.get("w_bits").and_then(|v| v.as_u64()),
+                    a_bits: s.get("a_bits").and_then(|v| v.as_u64()),
+                    attn_mode: str_of(s, "attn_mode")?,
+                    kv_bits: s.get("kv_bits").and_then(|v| v.as_u64()),
+                    lm_head_quant: req(s, "lm_head_quant")?
+                        .as_bool()
+                        .ok_or_else(|| anyhow!("lm_head_quant not bool"))?,
+                },
+            );
+        }
+
+        let sv = req(&j, "serving")?;
+        let serving = ServingInfo {
+            batch: usize_of(sv, "batch")?,
+            prefill_len: usize_of(sv, "prefill_len")?,
+            cache_shape: u64_vec(sv, "cache_shape")?,
+        };
+
+        let ev = req(&j, "eval")?;
+        let eval = EvalInfo {
+            n_batches: usize_of(ev, "n_batches")?,
+            batch: usize_of(ev, "batch")?,
+            seq: usize_of(ev, "seq")?,
+        };
+
+        let h = req(&j, "hmt")?;
+        let hmt = HmtInfo {
+            batch: usize_of(h, "batch")?,
+            n_memories: usize_of(h, "n_memories")?,
+        };
+
+        let sm = req(&j, "smoke")?;
+        let smoke = SmokeInfo {
+            x: f32_vec(sm, "x")?,
+            w: f32_vec(sm, "w")?,
+            y: f32_vec(sm, "y")?,
+        };
+
+        let greedy_reference = req(&j, "greedy_reference")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("greedy_reference not array"))?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .ok_or_else(|| anyhow!("greedy row not array"))?
+                    .iter()
+                    .map(|v| v.as_i64().map(|x| x as i32)
+                        .ok_or_else(|| anyhow!("greedy token not int")))
+                    .collect::<Result<Vec<i32>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            model,
+            artifacts,
+            schemes,
+            serving,
+            eval,
+            hmt,
+            smoke,
+            fp_ppl: f64_of(&j, "fp_ppl")?,
+            greedy_reference,
+        })
+    }
+
+    /// Ablation scheme names ordered as Table V.
+    pub fn scheme_order() -> [&'static str; 5] {
+        ["noquant", "q0", "q1", "q2", "q3"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "model": {"n_layers": 2, "d_model": 8, "n_heads": 2, "n_kv_heads": 1,
+                "d_ffn": 16, "vocab": 32, "max_seq": 24},
+      "artifacts": {"a": {"path": "a.hlo.txt",
+                          "inputs": [{"name": "x", "dtype": "f32", "shape": [2, 3]}],
+                          "outputs": [{"name": "y", "dtype": "f32", "shape": [2]}]}},
+      "schemes": {"q3": {"ppl": 7.9, "w_bits": 4, "a_bits": 4,
+                         "attn_mode": "sta8", "kv_bits": 8, "lm_head_quant": true}},
+      "serving": {"batch": 4, "prefill_len": 16, "cache_shape": [2, 4, 1, 24, 4]},
+      "eval": {"n_batches": 2, "batch": 4, "seq": 8},
+      "hmt": {"batch": 1, "n_memories": 8},
+      "smoke": {"x": [1.0], "w": [2.0], "y": [2.0]},
+      "fp_ppl": 7.6,
+      "greedy_reference": [[1, 2], [3, 4]]
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.model.d_model, 8);
+        assert_eq!(m.artifacts["a"].inputs[0].shape, vec![2, 3]);
+        assert_eq!(m.schemes["q3"].kv_bits, Some(8));
+        assert!(m.schemes["q3"].lm_head_quant);
+        assert_eq!(m.serving.cache_shape.len(), 5);
+        assert_eq!(m.greedy_reference[1], vec![3, 4]);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python lowers every L2 graph to **HLO text** at build time
+//! (`make artifacts`); this module loads the text through
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and executes it from the serving hot path. Python is never on the
+//! request path.
+//!
+//! NOTE: the `xla` crate's client is `Rc`-based (not `Send`), so a
+//! [`Runtime`] must be owned by a single thread; the coordinator runs it
+//! on a dedicated engine thread behind channels.
+
+mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest, SchemeStats, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A loaded-and-compiled artifact cache over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?,
+        )
+        .context("parsing manifest.json")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Path of the artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile an artifact (cached after the first call).
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns the flattened tuple
+    /// elements (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        if entry.inputs.len() != inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (spec, lit) in entry.inputs.iter().zip(inputs) {
+            let n: usize = spec.shape.iter().product::<u64>() as usize;
+            if lit.element_count() != n {
+                return Err(anyhow!(
+                    "{name}: input {} expects {} elements ({:?}), got {}",
+                    spec.name, n, spec.shape, lit.element_count()
+                ));
+            }
+        }
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+        result.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("shape {shape:?} wants {n} elems, got {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(shape)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("shape {shape:?} wants {n} elems, got {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(shape)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Scalar i32 literal (e.g. the decode position).
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract f32 data from a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e}"))
+}
+
+/// Row-wise argmax over a [rows, cols] f32 literal.
+pub fn argmax_rows(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Vec<i32>> {
+    let data = to_f32(lit)?;
+    if data.len() != rows * cols {
+        return Err(anyhow!("argmax: want {}x{}={} elems, got {}", rows, cols,
+                         rows * cols, data.len()));
+    }
+    Ok((0..rows)
+        .map(|r| {
+            let row = &data[r * cols..(r + 1) * cols];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0)
+        })
+        .collect())
+}
+
+/// Summed negative log-likelihood of next-token targets from
+/// full-sequence logits [b, s, v] — the perplexity harness core.
+/// Returns (total NLL, prediction count).
+pub fn nll_from_logits(logits: &[f32], tokens: &[i32], b: usize, s: usize, v: usize)
+    -> (f64, usize)
+{
+    assert_eq!(logits.len(), b * s * v, "logits size");
+    assert_eq!(tokens.len(), b * s, "tokens size");
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for bi in 0..b {
+        for si in 0..s - 1 {
+            let row = &logits[(bi * s + si) * v..(bi * s + si + 1) * v];
+            let target = tokens[bi * s + si + 1] as usize;
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let lse: f64 = row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln()
+                + m as f64;
+            total += lse - row[target] as f64;
+            count += 1;
+        }
+    }
+    (total, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+    }
+
+    #[test]
+    fn lit_shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+        assert!(lit_i32(&[1, 2, 3, 4, 5], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let l = lit_f32(&[0.1, 0.9, 0.5, 2.0, -1.0, 0.0], &[2, 3]).unwrap();
+        assert_eq!(argmax_rows(&l, 2, 3).unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn nll_uniform_logits_is_log_v() {
+        // uniform logits → NLL = ln(v) per position
+        let (b, s, v) = (1, 3, 8);
+        let logits = vec![0.0f32; b * s * v];
+        let tokens = vec![1i32, 2, 3];
+        let (total, count) = nll_from_logits(&logits, &tokens, b, s, v);
+        assert_eq!(count, 2);
+        assert!((total / count as f64 - (v as f64).ln()).abs() < 1e-9);
+    }
+}

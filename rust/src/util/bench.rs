@@ -1,0 +1,142 @@
+//! Tiny benchmark harness (offline build: criterion is not in the
+//! vendored set). Used by the `benches/` targets (`harness = false`).
+//!
+//! Reports min / mean / p50 / p95 wall time per iteration, with an
+//! automatic warm-up and sample-count selection aiming at ~0.5 s per
+//! benchmark (overridable).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub min: Duration,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}   ({} samples)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            self.samples
+        );
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// A bench group with a shared time budget per benchmark.
+pub struct Bench {
+    budget: Duration,
+    min_samples: usize,
+    max_samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench {
+            budget: Duration::from_millis(500),
+            min_samples: 5,
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+
+    /// Lower the sample budget for expensive benchmarks.
+    pub fn heavy(mut self) -> Self {
+        self.budget = Duration::from_secs(2);
+        self.max_samples = 20;
+        self
+    }
+
+    /// Run one benchmark: `f` is invoked repeatedly, its result black-boxed.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warm-up: one untimed call
+        std::hint::black_box(f());
+        // pilot to estimate per-iter cost
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let pilot = t0.elapsed().max(Duration::from_nanos(50));
+        let samples = ((self.budget.as_secs_f64() / pilot.as_secs_f64()) as usize)
+            .clamp(self.min_samples, self.max_samples);
+
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed());
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        let r = BenchResult {
+            name: name.to_string(),
+            samples,
+            min: times[0],
+            mean: total / samples as u32,
+            p50: times[samples / 2],
+            p95: times[(samples as f64 * 0.95) as usize % samples],
+        };
+        r.report();
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Print the header row once at the start of a bench binary.
+    pub fn header(title: &str) {
+        println!("\n### {title}");
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}",
+            "benchmark", "min", "mean", "p50", "p95"
+        );
+        println!("{}", "-".repeat(92));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut b = Bench::new();
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.samples >= 5);
+        assert!(r.min <= r.mean);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree infrastructure for the offline build (the vendored crate set
+//! carries only `xla` + `anyhow`): JSON parsing, a bench harness, and
+//! property-testing helpers.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+
+pub use json::{Json, JsonError};

@@ -1,0 +1,112 @@
+//! Tiny property-testing helper (offline build: proptest is not in the
+//! vendored set). Deterministic xorshift generator + a `forall` driver
+//! that reports the failing case and its seed.
+
+/// Deterministic xorshift64* PRNG — reproducible across runs.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.next_u64() % (hi - lo + 1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_in(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform float in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform float in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick a random element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// Vector of random i32 tokens.
+    pub fn tokens(&mut self, len: usize, vocab: i32) -> Vec<i32> {
+        (0..len).map(|_| self.u64_in(0, vocab as u64 - 1) as i32).collect()
+    }
+}
+
+/// Run `cases` random cases of a property; panics with the seed and case
+/// index on the first failure so it can be replayed.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let base_seed = 0x5EED_0000u64;
+    for i in 0..cases {
+        let seed = base_seed + i as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::new(42);
+        for _ in 0..1000 {
+            let v = r.u64_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = r.f64_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn forall_reports_failure() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always-fails", 3, |_| Err("nope".into()));
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn forall_passes_good_property() {
+        forall("u64_in bounds", 50, |rng| {
+            let v = rng.u64_in(1, 6);
+            if (1..=6).contains(&v) { Ok(()) } else { Err(format!("{v} out of range")) }
+        });
+    }
+}

@@ -1,0 +1,220 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! These exercise runtime + coordinator + eval together: artifact loading,
+//! kernel-smoke numerics against the Python-computed vector, perplexity
+//! cross-checks, end-to-end serving, and the HMT segment pipeline.
+
+use flexllm::coordinator::{Engine, GenRequest, HmtDriver, Router};
+use flexllm::eval::ablation;
+use flexllm::runtime::{argmax_rows, lit_f32, to_f32, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::open("../artifacts")
+        .or_else(|_| Runtime::open("artifacts"))
+        .expect("artifacts missing — run `make artifacts` first")
+}
+
+fn artifact_dir() -> String {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        "artifacts".into()
+    } else {
+        "../artifacts".into()
+    }
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    let rt = runtime();
+    let names = rt.artifact_names();
+    for expected in ["prefill_serve_q3", "decode_step_q3", "hmt_memattn", "hmt_summary",
+                     "kernel_smoke", "ppl_noquant", "ppl_q0", "ppl_q1", "ppl_q2", "ppl_q3"] {
+        assert!(names.iter().any(|n| n == expected), "missing artifact {expected}");
+    }
+    assert_eq!(rt.manifest.model.d_model, 256);
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn kernel_smoke_matches_python_numerics() {
+    // the W4A4 quantized-linear smoke kernel must reproduce the Python
+    // reference vector bit-close (same HLO, same CPU backend)
+    let rt = runtime();
+    let sm = rt.manifest.smoke.clone();
+    let x = lit_f32(&sm.x, &[8, 16]).unwrap();
+    let w = lit_f32(&sm.w, &[16, 8]).unwrap();
+    let out = rt.execute("kernel_smoke", &[x, w]).unwrap();
+    let y = to_f32(&out[0]).unwrap();
+    assert_eq!(y.len(), sm.y.len());
+    for (a, b) in y.iter().zip(sm.y.iter()) {
+        assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                "smoke mismatch: {a} vs {b}");
+    }
+}
+
+#[test]
+fn unknown_artifact_rejected() {
+    let rt = runtime();
+    assert!(rt.execute("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn wrong_arity_rejected() {
+    let rt = runtime();
+    assert!(rt.execute("kernel_smoke", &[]).is_err());
+}
+
+#[test]
+fn wrong_shape_rejected() {
+    let rt = runtime();
+    let bad = lit_f32(&vec![0.0; 4], &[2, 2]).unwrap();
+    let w = lit_f32(&vec![0.0; 128], &[16, 8]).unwrap();
+    assert!(rt.execute("kernel_smoke", &[bad, w]).is_err());
+}
+
+#[test]
+fn noquant_ppl_matches_buildtime_fp() {
+    let rt = runtime();
+    let ppl = ablation::scheme_ppl(&rt, "noquant").unwrap();
+    let rel = (ppl - rt.manifest.fp_ppl).abs() / rt.manifest.fp_ppl;
+    assert!(rel < 0.02, "rust ppl {ppl} vs python {} ({rel})", rt.manifest.fp_ppl);
+}
+
+#[test]
+fn quantized_ppl_ordering() {
+    // every quantized scheme must be worse than FP on held-out data, and
+    // all five schemes must cross-check the build-time values
+    let rt = runtime();
+    let all = ablation::run(&rt).unwrap();
+    let get = |n: &str| all.iter().find(|(name, _)| name == n).unwrap().1;
+    let fp = get("noquant");
+    for q in ["q0", "q1", "q2", "q3"] {
+        assert!(get(q) > fp, "{q} ppl {} should exceed FP {fp}", get(q));
+    }
+    // Q3 adds lm_head quantization on top of Q2 → strictly more error
+    assert!(get("q3") > get("q2"));
+}
+
+#[test]
+fn serving_deterministic_across_batches() {
+    // same prompt in two different batches must produce identical tokens
+    // (stateless artifacts + greedy decoding)
+    let rt = runtime();
+    let s = rt.manifest.serving.prefill_len;
+    drop(rt);
+    let mut engine = Engine::new(runtime());
+    let prompt: Vec<i32> = (0..s as i32).map(|i| (i * 7 + 3) % 512).collect();
+    let mk = |id| GenRequest { id, prompt: prompt.clone(), max_new_tokens: 6 };
+    let r1 = engine.serve(&[mk(1)]).unwrap();
+    let r2 = engine.serve(&[mk(2), mk(3)]).unwrap();
+    assert_eq!(r1[0].tokens, r2[0].tokens);
+    assert_eq!(r2[0].tokens, r2[1].tokens);
+    assert_eq!(r1[0].tokens.len(), 6);
+}
+
+#[test]
+fn serving_metrics_accumulate() {
+    let mut engine = Engine::new(runtime());
+    let s = engine.batcher.prefill_len;
+    let prompt = vec![1i32; s];
+    let q: Vec<GenRequest> = (0..2)
+        .map(|id| GenRequest { id, prompt: prompt.clone(), max_new_tokens: 3 })
+        .collect();
+    engine.serve(&q).unwrap();
+    let m = engine.metrics.clone();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.batches, 1);
+    assert_eq!(m.tokens_generated, 6);
+    assert!(m.decode_tps() > 0.0);
+    assert!(m.prefill_tps() > 0.0);
+}
+
+#[test]
+fn router_thread_roundtrip() {
+    let router = Router::spawn(artifact_dir()).unwrap();
+    let rt = runtime();
+    let s = rt.manifest.serving.prefill_len;
+    drop(rt);
+    let q = vec![GenRequest { id: 9, prompt: vec![2i32; s], max_new_tokens: 2 }];
+    let results = router.generate(q).unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].id, 9);
+    assert_eq!(results[0].tokens.len(), 2);
+    let m = router.metrics().unwrap();
+    assert_eq!(m.requests, 1);
+}
+
+#[test]
+fn router_rejects_bad_prompt() {
+    let router = Router::spawn(artifact_dir()).unwrap();
+    let q = vec![GenRequest { id: 0, prompt: vec![0i32; 3], max_new_tokens: 2 }];
+    assert!(router.generate(q).is_err());
+    // the engine thread must survive the error
+    let rt = runtime();
+    let s = rt.manifest.serving.prefill_len;
+    drop(rt);
+    let ok = vec![GenRequest { id: 1, prompt: vec![0i32; s], max_new_tokens: 1 }];
+    assert!(router.generate(ok).is_ok());
+}
+
+#[test]
+fn hmt_pipeline_over_artifacts() {
+    let rt = runtime();
+    let mut driver = HmtDriver::new(&rt, 64);
+    let stream: Vec<i32> = (0..256).map(|i| (i * 13 + 1) % 512).collect();
+    let traces = driver.process_stream(&stream).unwrap();
+    assert_eq!(traces.len(), 4);
+    // queue grows by one per segment until capacity
+    for (i, t) in traces.iter().enumerate() {
+        assert_eq!(t.queue_len, (i + 1).min(rt.manifest.hmt.n_memories));
+        assert!(t.summary_norm.is_finite() && t.summary_norm > 0.0);
+        assert!(t.retrieved_norm.is_finite() && t.retrieved_norm > 0.0);
+    }
+}
+
+#[test]
+fn hmt_retrieval_depends_on_memory_state() {
+    // the same segment retrieved at different queue states must differ —
+    // cross-attention actually reads the memories
+    let rt = runtime();
+    let mut driver = HmtDriver::new(&rt, 64);
+    let seg: Vec<i32> = (0..64).map(|i| (i * 3) % 512).collect();
+    let t1 = driver.process_segment(0, &seg).unwrap();
+    let t2 = driver.process_segment(1, &seg).unwrap();
+    assert!((t1.retrieved_norm - t2.retrieved_norm).abs() > 1e-6,
+            "retrieval ignored the memory queue");
+}
+
+#[test]
+fn decode_cache_positions_advance() {
+    // drive prefill + 3 decode steps manually and verify logits change
+    // across steps (cache is actually being consumed)
+    use flexllm::runtime::{lit_i32, lit_scalar_i32};
+    let rt = runtime();
+    let b = rt.manifest.serving.batch;
+    let s = rt.manifest.serving.prefill_len;
+    let v = rt.manifest.model.vocab as usize;
+    let flat: Vec<i32> = (0..b * s).map(|i| (i as i32 * 5 + 2) % 512).collect();
+    let mut out = rt.execute("prefill_serve_q3",
+                             &[lit_i32(&flat, &[b as i64, s as i64]).unwrap()]).unwrap();
+    let mut vc = out.pop().unwrap();
+    let mut kc = out.pop().unwrap();
+    let logits0 = to_f32(&out.pop().unwrap()).unwrap();
+
+    let mut prev = logits0;
+    for step in 0..3 {
+        let tok: Vec<i32> = vec![(step * 11 + 4) as i32; b];
+        let mut out = rt.execute("decode_step_q3", &[
+            lit_i32(&tok, &[b as i64]).unwrap(),
+            lit_scalar_i32((s + step) as i32),
+            kc.clone(), vc.clone(),
+        ]).unwrap();
+        vc = out.pop().unwrap();
+        kc = out.pop().unwrap();
+        let logits = to_f32(&out.pop().unwrap()).unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()));
+        let diff: f32 = logits.iter().zip(&prev).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3, "decode step {step} produced identical logits");
+        let _ = argmax_rows(&lit_f32(&logits, &[b as i64, v as i64]).unwrap(), b, v).unwrap();
+        prev = logits;
+    }
+}

@@ -1,0 +1,264 @@
+//! Property-based tests on coordinator and simulator invariants
+//! (in-tree `forall` driver; see rust/src/util/prop.rs).
+
+use std::sync::Arc;
+
+use flexllm::arch::{DecodeArch, DecodeConfig, PrefillArch, PrefillConfig};
+use flexllm::config::{DeviceConfig, ModelDims, Precision};
+use flexllm::coordinator::{Batcher, GenRequest};
+use flexllm::hls::{
+    simulate, DataflowGraph, DecodeLinear, Dependency, ModuleTemplate, PrefillLinear,
+    StreamEdge,
+};
+use flexllm::util::json::Json;
+use flexllm::util::prop::{forall, Rng};
+
+// ---------------------------------------------------------------------------
+// Batcher invariants (routing/batching state)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_covers_every_request_exactly_once() {
+    forall("batcher coverage", 200, |rng| {
+        let batch_size = rng.usize_in(1, 8);
+        let prefill = rng.usize_in(4, 64);
+        let max_seq = prefill + rng.usize_in(8, 128);
+        let b = Batcher::new(batch_size, prefill, max_seq);
+        let n = rng.usize_in(0, 30);
+        let queue: Vec<GenRequest> = (0..n)
+            .map(|i| GenRequest {
+                id: i as u64,
+                prompt: vec![0; prefill],
+                max_new_tokens: rng.usize_in(1, max_seq - prefill),
+            })
+            .collect();
+        let batches = b.plan(&queue).map_err(|e| e.to_string())?;
+        // every batch exactly batch_size lanes
+        for batch in &batches {
+            if batch.requests.len() != batch_size || batch.padding.len() != batch_size {
+                return Err("batch not full-size".into());
+            }
+            // aligned length within cache capacity
+            if prefill + batch.new_tokens > max_seq {
+                return Err("aligned new_tokens overflows max_seq".into());
+            }
+        }
+        // real (non-padding) ids = original queue, in order, exactly once
+        let real: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| {
+                b.requests
+                    .iter()
+                    .zip(&b.padding)
+                    .filter(|(_, &pad)| !pad)
+                    .map(|(r, _)| r.id)
+            })
+            .collect();
+        let want: Vec<u64> = (0..n as u64).collect();
+        if real != want {
+            return Err(format!("coverage mismatch: {real:?}"));
+        }
+        // aligned new_tokens ≥ every real lane's request
+        for batch in &batches {
+            let max_real = batch
+                .requests
+                .iter()
+                .zip(&batch.padding)
+                .filter(|(_, &p)| !p)
+                .map(|(r, _)| r.max_new_tokens)
+                .max()
+                .unwrap_or(0);
+            if batch.new_tokens != max_real {
+                return Err("new_tokens != max over real lanes".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_rejects_invalid() {
+    forall("batcher validation", 100, |rng| {
+        let b = Batcher::new(4, 32, 64);
+        // wrong prompt length
+        let wrong_len = rng.usize_in(0, 64);
+        let r = GenRequest { id: 0, prompt: vec![0; wrong_len], max_new_tokens: 4 };
+        let should_fail = wrong_len != 32;
+        if b.plan(std::slice::from_ref(&r)).is_err() != should_fail {
+            return Err(format!("validation wrong for len {wrong_len}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline simulator invariants (conservation laws)
+// ---------------------------------------------------------------------------
+
+fn random_chain(rng: &mut Rng) -> DataflowGraph {
+    let mut g = DataflowGraph::new();
+    let n_nodes = rng.usize_in(2, 8);
+    let mut prev = None;
+    for i in 0..n_nodes {
+        let tp = *rng.pick(&[1u64, 2, 4, 8]);
+        let wp = *rng.pick(&[4u64, 8, 16, 32]);
+        let d = *rng.pick(&[16u64, 32, 64]);
+        let reuse = *rng.pick(&[1.0f64, 1.0, 2.0]);
+        let id = g.invoke_reused(
+            Arc::new(PrefillLinear::new(&format!("n{i}"), tp, wp, d, d, Precision::Int4)),
+            reuse, 1);
+        if let Some(p) = prev {
+            g.connect(p, id, StreamEdge::activation(tp));
+        }
+        prev = Some(id);
+    }
+    g
+}
+
+#[test]
+fn prop_sim_conservation_laws() {
+    forall("pipeline sim invariants", 120, |rng| {
+        let g = random_chain(rng);
+        let n_tokens = rng.u64_in(4, 256);
+        let r = simulate(&g, n_tokens, &[]);
+
+        // makespan is at least the busiest node's busy time
+        let max_busy = r.nodes.iter().map(|n| n.busy_cycles).fold(0.0, f64::max);
+        if r.makespan_cycles + 1e-9 < max_busy {
+            return Err(format!("makespan {} < max busy {max_busy}", r.makespan_cycles));
+        }
+        // makespan is at least tokens × bottleneck service
+        let bound = n_tokens as f64 * g.bottleneck_cycles_per_token();
+        if r.makespan_cycles + 1e-6 < bound {
+            return Err(format!("makespan {} < throughput bound {bound}", r.makespan_cycles));
+        }
+        // makespan never exceeds fully-serial execution (+ fills)
+        let fills: f64 = g.nodes.iter().map(|n| n.module.fill_cycles() as f64).sum();
+        let serial = n_tokens as f64 * g.serialized_cycles_per_token() + fills;
+        if r.makespan_cycles > serial + 1e-6 {
+            return Err(format!("makespan {} > serial bound {serial}", r.makespan_cycles));
+        }
+        // busy time = tokens × service for every node (work conservation)
+        for (node, stats) in g.nodes.iter().zip(&r.nodes) {
+            let want = n_tokens as f64 * node.service_per_token();
+            if (stats.busy_cycles - want).abs() > 1e-6 * want.max(1.0) {
+                return Err(format!("{}: busy {} != {}", stats.name, stats.busy_cycles, want));
+            }
+            if !(0.0..=1.0 + 1e-9).contains(&stats.utilization) {
+                return Err(format!("util out of range: {}", stats.utilization));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_recurrence_never_faster() {
+    forall("autoregressive lag slows pipelines", 60, |rng| {
+        let g = random_chain(rng);
+        let n = rng.u64_in(4, 64);
+        let free = simulate(&g, n, &[]);
+        let last = g.nodes.len() - 1;
+        let dep = Dependency { from: last, to: 0, lag: 1 };
+        let locked = simulate(&g, n, &[dep]);
+        if locked.makespan_cycles + 1e-9 < free.makespan_cycles {
+            return Err(format!("recurrence sped the pipeline up: {} < {}",
+                               locked.makespan_cycles, free.makespan_cycles));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Module / architecture model invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_more_parallelism_never_slower() {
+    forall("WP monotonicity", 100, |rng| {
+        let d_in = rng.u64_in(32, 4096);
+        let d_out = rng.u64_in(32, 4096);
+        let wp = rng.u64_in(1, 512);
+        let a = DecodeLinear::new("a", 1, wp, d_in, d_out, Precision::Int4);
+        let b = DecodeLinear::new("b", 1, wp * 2, d_in, d_out, Precision::Int4);
+        if b.service_cycles_per_token() > a.service_cycles_per_token() + 1e-9 {
+            return Err("doubling WP slowed the module".into());
+        }
+        if b.resources().lut < a.resources().lut {
+            return Err("doubling WP shrank resources".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq4_eq6_monotone_in_workload() {
+    let model = ModelDims::llama32_1b();
+    forall("latency monotone in workload", 60, |rng| {
+        let dev = if rng.bool() { DeviceConfig::u280() } else { DeviceConfig::v80() };
+        let pre = PrefillArch::new(PrefillConfig::u280_paper(), model.clone(), dev.clone());
+        let lp = rng.u64_in(64, 8192);
+        if pre.analytic_latency_s(lp * 2) <= pre.analytic_latency_s(lp) {
+            return Err("prefill latency not increasing in l_p".into());
+        }
+        let dec = DecodeArch::new(DecodeConfig::u280_paper(), model.clone(), dev);
+        let ld = rng.u64_in(16, 2048);
+        if dec.analytic_latency_s(1024, ld * 2) <= dec.analytic_latency_s(1024, ld) {
+            return Err("decode latency not increasing in l_d".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bandwidth_scales_with_wp() {
+    forall("Eq. 5/7 linear in WP", 50, |rng| {
+        let model = ModelDims::llama32_1b();
+        let dev = DeviceConfig::u280();
+        let k = rng.u64_in(1, 4);
+        let a = DecodeArch::new(DecodeConfig { bp: 4, wp_int4: 256, wp_mha: 64 },
+                                model.clone(), dev.clone());
+        let b = DecodeArch::new(DecodeConfig { bp: 4, wp_int4: 256 * k, wp_mha: 64 * k },
+                                model.clone(), dev);
+        let ratio = b.peak_bandwidth() / a.peak_bandwidth()
+            / (b.freq_hz / a.freq_hz);
+        if (ratio - k as f64).abs() > 1e-6 {
+            return Err(format!("BW not linear in WP: ratio {ratio} vs k {k}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON parser round-trip on random documents
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> String {
+    match if depth == 0 { rng.usize_in(0, 3) } else { rng.usize_in(0, 5) } {
+        0 => format!("{}", rng.u64_in(0, 1_000_000)),
+        1 => format!("{:.6}", rng.f64_in(-1e6, 1e6)),
+        2 => if rng.bool() { "true".into() } else { "null".into() },
+        3 => format!("\"s{}\"", rng.u64_in(0, 999)),
+        4 => {
+            let n = rng.usize_in(0, 4);
+            let items: Vec<String> = (0..n).map(|_| random_json(rng, depth - 1)).collect();
+            format!("[{}]", items.join(","))
+        }
+        _ => {
+            let n = rng.usize_in(0, 4);
+            let items: Vec<String> = (0..n)
+                .map(|i| format!("\"k{i}\": {}", random_json(rng, depth - 1)))
+                .collect();
+            format!("{{{}}}", items.join(","))
+        }
+    }
+}
+
+#[test]
+fn prop_json_parses_generated_documents() {
+    forall("json accepts valid docs", 300, |rng| {
+        let doc = random_json(rng, 3);
+        Json::parse(&doc).map_err(|e| format!("{e} on {doc}"))?;
+        Ok(())
+    });
+}
