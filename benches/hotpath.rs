@@ -4,10 +4,25 @@
 
 use flexllm::arch::{AcceleratorSystem, DecodeConfig, PrefillConfig};
 use flexllm::config::{DeviceConfig, ModelDims};
-use flexllm::coordinator::{Engine, GenRequest};
+use flexllm::coordinator::{Engine, GenRequest, MockBackend};
 use flexllm::dse;
 use flexllm::runtime::Runtime;
 use flexllm::util::bench::Bench;
+
+/// One skewed continuous-batching serve on the mock backend: 32 requests
+/// with a 4× budget spread through a 4-lane pool.
+fn mock_skewed_serve() -> usize {
+    let mut engine = Engine::new(MockBackend::new(4, 32, 320, 512));
+    let queue: Vec<GenRequest> = (0..32)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..32).map(|j| ((i * 11 + j) % 512) as i32).collect();
+            GenRequest::new(i as u64, prompt, 16 * (i as usize % 4 + 1) / 4)
+        })
+        .collect();
+    let results = engine.serve(&queue).expect("mock serve");
+    assert_eq!(results.len(), 32);
+    engine.metrics.lane_steps
+}
 
 fn main() {
     let sys = AcceleratorSystem::u280();
@@ -37,12 +52,16 @@ fn main() {
     b.run("tune_prefill_u280", || dse::tune_prefill(&model, &dev, 1024));
     b.run("tune_decode_u280", || dse::tune_decode(&model, &dev, 1024, 1024));
 
+    Bench::header("iteration-level scheduler (mock backend)");
+    let mut b = Bench::new();
+    b.run("skewed_serve_32_reqs_4_lanes", mock_skewed_serve);
+
     Bench::header("serving path (PJRT artifacts)");
     match Runtime::open("artifacts") {
         Ok(rt) => {
-            let mut engine = Engine::new(rt);
-            let s = engine.batcher.prefill_len;
-            let queue = vec![GenRequest { id: 0, prompt: vec![3i32; s], max_new_tokens: 4 }];
+            let mut engine = Engine::pjrt(rt);
+            let s = engine.prefill_len();
+            let queue = vec![GenRequest::new(0, vec![3i32; s], 4)];
             let mut b = Bench::new().heavy();
             b.run("prefill_plus_4_decode_steps", || engine.serve(&queue).expect("serve"));
         }

@@ -1,7 +1,9 @@
-//! END-TO-END driver (DESIGN.md §7): serve batched generation requests
-//! through the full stack — router → batcher → engine → PJRT artifacts
-//! (quantized Llama-architecture model, W4A4KV8 Q3 scheme) — and verify
-//! the generations against the build-time Python reference.
+//! END-TO-END driver (DESIGN.md §7): serve generation requests through
+//! the full stack — router → iteration-level scheduler → engine →
+//! PJRT artifacts (quantized Llama-architecture model, W4A4KV8 Q3
+//! scheme) — and verify the generations against the build-time Python
+//! reference. A second phase runs a skewed workload to show lanes
+//! finishing independently and being backfilled mid-flight.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_llama
@@ -31,14 +33,10 @@ fn main() -> Result<()> {
 
     let router = Router::spawn(artifacts.clone())?;
 
-    // ---- workload: 3 batches of real requests -------------------------
+    // ---- workload: 3 pool-fulls of real requests ------------------------
     let n_requests = 3 * batch;
     let queue: Vec<GenRequest> = (0..n_requests)
-        .map(|i| GenRequest {
-            id: i as u64,
-            prompt: prompts[i % prompts.len()].clone(),
-            max_new_tokens: ref_steps,
-        })
+        .map(|i| GenRequest::new(i as u64, prompts[i % prompts.len()].clone(), ref_steps))
         .collect();
 
     let t0 = std::time::Instant::now();
@@ -46,12 +44,15 @@ fn main() -> Result<()> {
     let wall = t0.elapsed();
     let m = router.metrics()?;
 
-    println!("\nserved {} requests ({} batches) in {}", results.len(), m.batches,
-             fmt_secs(wall.as_secs_f64()));
+    println!("\nserved {} requests ({} prefills, {} decode iterations) in {}",
+             results.len(), m.prefill_calls, m.iterations, fmt_secs(wall.as_secs_f64()));
     println!("  prefill throughput : {:>8.0} tok/s", m.prefill_tps());
     println!("  decode  throughput : {:>8.1} tok/s", m.decode_tps());
-    println!("  mean batch latency : {}", fmt_secs(m.mean_batch_latency().as_secs_f64()));
-    println!("  ttft (first batch) : {}", fmt_secs(results[0].ttft.as_secs_f64()));
+    println!("  ttft p50 / p95     : {} / {}",
+             fmt_secs(m.ttft_p50()), fmt_secs(m.ttft_p95()));
+    println!("  tpot p50 / p95     : {} / {}",
+             fmt_secs(m.tpot_p50()), fmt_secs(m.tpot_p95()));
+    println!("  lane utilization   : {:>7.1}%", m.lane_utilization(batch) * 100.0);
 
     // ---- free-running agreement (informational) -------------------------
     // Self-fed greedy decoding compounds tiny cross-XLA-version float
@@ -123,6 +124,32 @@ fn main() -> Result<()> {
             "teacher-forced tokens diverge from the Python reference \
              ({:.1}% < 95%) — runtime numerics mismatch", rate * 100.0));
     }
+
+    // ---- skewed workload: continuous batching at work -------------------
+    // Budgets spread 4×: lanes finish at different iterations and freed
+    // lanes are backfilled from the queue, so the decode-slot bill tracks
+    // the requested tokens instead of the per-group max.
+    let skew: Vec<GenRequest> = (0..2 * batch)
+        .map(|i| GenRequest::new(1000 + i as u64, prompts[i % prompts.len()].clone(),
+                                 (ref_steps * (i % 4 + 1) / 4).max(1)))
+        .collect();
+    let budgets: Vec<usize> = skew.iter().map(|r| r.max_new_tokens).collect();
+    let before = router.metrics()?;
+    let skew_results = router.generate(skew)?;
+    let after = router.metrics()?;
+    let lane_steps = after.lane_steps - before.lane_steps;
+    // what the old max-aligned batcher would have spent on the same queue
+    let aligned: usize = budgets
+        .chunks(batch)
+        .map(|c| batch * (c.iter().max().unwrap() - 1))
+        .sum();
+    println!("\nskewed workload ({} requests, 4x budget spread):", skew_results.len());
+    println!("  decode lane-steps  : {lane_steps}  (max-aligned batching: {aligned})");
+    println!("  slot saving        : {:.2}x", aligned as f64 / lane_steps.max(1) as f64);
+    for r in skew_results.iter().take(4) {
+        println!("  req {}: {} tokens ({:?})", r.id, r.tokens.len(), r.finish_reason);
+    }
+
     println!("serve_llama E2E OK");
     Ok(())
 }

@@ -11,7 +11,9 @@ Outputs (``artifacts/``):
 
 * ``ppl_<scheme>.hlo.txt``       — Table V ablation graphs (5 schemes)
 * ``prefill_serve_q3.hlo.txt``   — serving prefill (logits + KV cache)
-* ``decode_step_q3.hlo.txt``     — serving decode step
+* ``decode_step_q3.hlo.txt``     — serving decode step (aligned batch)
+* ``decode_lanes_q3.hlo.txt``    — continuous-batching decode step
+  (per-lane cache positions, consumed by the Rust scheduler's backfill)
 * ``hmt_memattn.hlo.txt``        — HMT plug-in memory attention
 * ``kernel_smoke.hlo.txt``       — tiny kernel for runtime unit tests
 * ``eval_tokens.bin``            — held-out eval batches (i32 LE)
@@ -36,8 +38,9 @@ import numpy as np
 from jax._src.lib import xla_client as xc
 
 from . import corpus
-from .model import (ModelConfig, decode_step, hmt_memattn, llama32_1b, prefill_logits,
-                    prefill_serve, summary_embedding, tiny)
+from .model import (ModelConfig, decode_step, decode_step_lanes, hmt_memattn,
+                    llama32_1b, prefill_logits, prefill_serve, summary_embedding,
+                    tiny)
 from .quantize import SCHEMES, prepare
 from .train_tiny import eval_ppl_fp, train
 
@@ -188,6 +191,21 @@ def main() -> None:
     manifest["artifacts"]["decode_step_q3"] = dump(
         fn_dec, dec_specs, out / "decode_step_q3.hlo.txt",
         [tensor("token", "i32", (SERVE_BATCH,)), tensor("pos", "i32", ()),
+         tensor("k_cache", "f32", cache_shape), tensor("v_cache", "f32", cache_shape)],
+        [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
+         tensor("k_cache", "f32", cache_shape),
+         tensor("v_cache", "f32", cache_shape)])
+
+    # continuous-batching decode: per-lane positions so the Rust scheduler
+    # can backfill freed lanes mid-flight (iteration-level scheduling)
+    fn_lanes = functools.partial(decode_step_lanes, qp_q3, cfg, scheme_q3)
+    lanes_specs = [jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                   jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                   jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+                   jax.ShapeDtypeStruct(cache_shape, jnp.float32)]
+    manifest["artifacts"]["decode_lanes_q3"] = dump(
+        fn_lanes, lanes_specs, out / "decode_lanes_q3.hlo.txt",
+        [tensor("token", "i32", (SERVE_BATCH,)), tensor("pos", "i32", (SERVE_BATCH,)),
          tensor("k_cache", "f32", cache_shape), tensor("v_cache", "f32", cache_shape)],
         [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
          tensor("k_cache", "f32", cache_shape),

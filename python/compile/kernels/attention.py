@@ -29,12 +29,21 @@ pallas_call = functools.partial(pl.pallas_call, interpret=True)
 P_SCALE = 1.0 / 127.0  # static scale for probabilities in [0, 1]
 
 
+def _mask_spec(mask, tq, tk):
+    """BlockSpec for a shared [Tq, Tk] or per-program [H, Tq, Tk] mask."""
+    if mask.ndim == 2:
+        return pl.BlockSpec((tq, tk), lambda i: (0, 0))
+    return pl.BlockSpec((1, tq, tk), lambda i: (i, 0, 0))
+
+
 def _attn_int8_kernel(q_ref, k_ref, v_ref, m_ref, sq_ref, sk_ref, sv_ref,
                       o_ref, *, hd):
     q = q_ref[0]          # [Tq, hd] integer grid
     k = k_ref[0]          # [Tk, hd]
     v = v_ref[0]          # [Tk, hd]
-    mask = m_ref[...]     # [Tq, Tk] additive
+    mask = m_ref[...]     # [Tq, Tk] additive (shared or this program's slice)
+    if mask.ndim == 3:
+        mask = mask[0]
     sq = sq_ref[0, 0]
     sk = sk_ref[0, 0]
     sv = sv_ref[0, 0]
@@ -51,9 +60,11 @@ def attention_int8(qq, qk, qv, mask, sq, sk, sv):
     """Static/dynamic-symmetric INT8 GQA core.
 
     qq [H, Tq, hd], qk/qv [H, Tk, hd] — KV heads already repeated to H
-    (the coordinator's GQA head mapping). mask [Tq, Tk] additive FP.
-    sq/sk/sv: [1, 1] f32 symmetric scales (constant → static quant,
-    traced → dynamic quant). Returns FP output [H, Tq, hd].
+    (the coordinator's GQA head mapping). mask: additive FP, either
+    [Tq, Tk] shared across head programs or [H, Tq, Tk] per program (the
+    continuous-batching decode path, where lanes have distinct visible
+    context lengths). sq/sk/sv: [1, 1] f32 symmetric scales (constant →
+    static quant, traced → dynamic quant). Returns FP output [H, Tq, hd].
     Grid = heads (the paper's head_parallelism).
     """
     h, tq, hd = qq.shape
@@ -67,7 +78,7 @@ def attention_int8(qq, qk, qv, mask, sq, sk, sv):
             pl.BlockSpec((1, tq, hd), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, tk, hd), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, tk, hd), lambda i: (i, 0, 0)),
-            pl.BlockSpec((tq, tk), lambda i: (0, 0)),
+            _mask_spec(mask, tq, tk),
             scalar, scalar, scalar,
         ],
         out_specs=pl.BlockSpec((1, tq, hd), lambda i: (i, 0, 0)),
@@ -82,7 +93,10 @@ def _attn_fp_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, hd):
     q = q_ref[0]
     k = k_ref[0]
     v = v_ref[0]
-    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(hd)) + m_ref[...]
+    mask = m_ref[...]
+    if mask.ndim == 3:
+        mask = mask[0]
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(hd)) + mask
     mx = jnp.max(scores, axis=-1, keepdims=True)
     e = jnp.exp(scores - mx)
     p = e / jnp.sum(e, axis=-1, keepdims=True)
@@ -90,7 +104,10 @@ def _attn_fp_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, hd):
 
 
 def attention_fp(q, k, v, mask):
-    """FP attention core (No_Quant baseline and Q0's FP query path)."""
+    """FP attention core (No_Quant baseline and Q0's FP query path).
+
+    mask: [Tq, Tk] shared or [H, Tq, Tk] per head-program.
+    """
     h, tq, hd = q.shape
     _, tk, _ = k.shape
     kernel = functools.partial(_attn_fp_kernel, hd=hd)
@@ -101,7 +118,7 @@ def attention_fp(q, k, v, mask):
             pl.BlockSpec((1, tq, hd), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, tk, hd), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, tk, hd), lambda i: (i, 0, 0)),
-            pl.BlockSpec((tq, tk), lambda i: (0, 0)),
+            _mask_spec(mask, tq, tk),
         ],
         out_specs=pl.BlockSpec((1, tq, hd), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((h, tq, hd), jnp.float32),

@@ -72,8 +72,11 @@ def swiglu(gate, up, token_parallelism: int = 8):
 
 def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
     x = x_ref[0]            # [S, hd]
-    cos = cos_ref[...]      # [S, hd/2]
+    cos = cos_ref[...]      # [S, hd/2] (shared) or [1, S, hd/2][0] (per-head)
     sin = sin_ref[...]
+    if cos.ndim == 3:
+        cos = cos[0]
+        sin = sin[0]
     half = x.shape[-1] // 2
     x1 = x[:, :half]
     x2 = x[:, half:]
@@ -81,15 +84,25 @@ def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
 
 
 def rope(x, cos, sin):
-    """Rotary embedding; x [H, S, hd], tables [S, hd/2]. Grid = heads."""
+    """Rotary embedding; x [H, S, hd]. Grid = heads.
+
+    Tables are [S, hd/2] shared across heads (prefill / aligned decode) or
+    [H, S, hd/2] per head-program (continuous-batching decode, where each
+    lane sits at its own position).
+    """
     h, s, hd = x.shape
+    if cos.ndim == 2:
+        table_spec = pl.BlockSpec((s, hd // 2), lambda i: (0, 0))
+    else:
+        assert cos.shape[0] == h, f"per-head rope table {cos.shape} vs {h} heads"
+        table_spec = pl.BlockSpec((1, s, hd // 2), lambda i: (i, 0, 0))
     return pallas_call(
         _rope_kernel,
         grid=(h,),
         in_specs=[
             pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
-            pl.BlockSpec((s, hd // 2), lambda i: (0, 0)),
-            pl.BlockSpec((s, hd // 2), lambda i: (0, 0)),
+            table_spec,
+            table_spec,
         ],
         out_specs=pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((h, s, hd), jnp.float32),

@@ -14,7 +14,9 @@ Three exported graphs (each AOT-lowered by ``aot.py``):
 * :func:`prefill_serve`  — last-token logits + populated INT8 KV cache
   (serving prefill stage).
 * :func:`decode_step`    — single-token autoregressive step with KV cache
-  read/update (serving decode stage).
+  read/update (serving decode stage, position-aligned batch).
+* :func:`decode_step_lanes` — the continuous-batching variant: per-lane
+  cache positions so the coordinator can backfill freed lanes mid-flight.
 * :func:`hmt_memattn`    — the HMT plug-in's memory cross-attention
   (Case Study 2), built by reusing the backbone's layer-0 attention
   weights — mirroring the paper's "reuse existing linear and attention
@@ -436,6 +438,94 @@ def decode_step(qparams, cfg: ModelConfig, scheme: QuantScheme, token, pos,
             attn = attention_int8(group_q(qq), kall, vall, dec_mask_rep, sq, sk, sv)
         else:
             attn = attention_fp(group_q(q), kall, vall, dec_mask_rep)
+
+        attn = attn.reshape(b, nh * hd)
+        x = x + _linear(lp["wo"], attn, scheme, cfg, "decode")
+
+        hf = rmsnorm(x, lp["ffn_norm"], b)
+        gate = _linear(lp["wg"], hf, scheme, cfg, "decode")
+        up = _linear(lp["wu"], hf, scheme, cfg, "decode")
+        act = swiglu(gate, up, b)
+        if scheme.fht_down:
+            act = fht(act, b)
+        x = x + _linear(lp["wd"], act, scheme, cfg, "decode")
+
+    logits = _lm_head(qparams, cfg, scheme, x, "decode")
+    return logits, k_cache, v_cache
+
+
+def decode_step_lanes(qparams, cfg: ModelConfig, scheme: QuantScheme, token, pos,
+                      k_cache, v_cache):
+    """One decode iteration with PER-LANE cache positions.
+
+    token [B] i32, pos [B] i32 (each lane's next write position), caches
+    [L,B,KV,max_seq,hd]. Unlike :func:`decode_step`, lanes are NOT
+    position-aligned: the continuous-batching coordinator admits a new
+    request into a freed lane mid-flight, so RoPE angles, the
+    visible-context mask and the cache write offset are all per-lane.
+    Returns (logits [B,V], k_cache', v_cache').
+    """
+    b = token.shape[0]
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = nh // nkv
+    params = qparams.get("params", qparams)
+    layers = params["layers"]
+    calib = qparams["calib"]
+
+    x = params["embed"][token]                                  # [B, d]
+    cos_l, sin_l = rope_angles(pos.astype(jnp.float32), hd, cfg.rope_theta)  # [B, hd/2]
+    # per-head-program tables: program index of q is bi*nh + head
+    cos_q = jnp.repeat(cos_l, nh, axis=0)[:, None, :]           # [B*H, 1, hd/2]
+    sin_q = jnp.repeat(sin_l, nh, axis=0)[:, None, :]
+    cos_k = jnp.repeat(cos_l, nkv, axis=0)[:, None, :]          # [B*KV, 1, hd/2]
+    sin_k = jnp.repeat(sin_l, nkv, axis=0)[:, None, :]
+    positions = jnp.arange(cfg.max_seq)
+    lane_mask = jnp.where(positions[None, :] <= pos[:, None], 0.0, NEG_INF)  # [B, max_seq]
+    dec_mask = jnp.broadcast_to(
+        lane_mask[:, None, None, :], (b, nkv, rep, cfg.max_seq)
+    ).reshape(b * nkv, rep, cfg.max_seq)                        # per program
+
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"], b)
+        q = _linear(lp["wq"], h, scheme, cfg, "decode")
+        k = _linear(lp["wk"], h, scheme, cfg, "decode")
+        v = _linear(lp["wv"], h, scheme, cfg, "decode")
+        q = rope(q.reshape(b * nh, 1, hd), cos_q, sin_q)
+        k = rope(k.reshape(b * nkv, 1, hd), cos_k, sin_k)
+        v = v.reshape(b * nkv, 1, hd)
+
+        if scheme.attn_mode == "sta8":
+            sq, sk, sv = _attn_scales(calib[li])
+            kq = quantize_static(k.reshape(-1, hd), sk, 0.0, 8, True).reshape(k.shape)
+            vq = quantize_static(v.reshape(-1, hd), sv, 0.0, 8, True).reshape(v.shape)
+        elif scheme.attn_mode == "fp":
+            sq = sk = sv = None
+            kq, vq = k, v
+        else:
+            raise NotImplementedError(
+                f"decode_step_lanes supports sta8/fp schemes, not {scheme.attn_mode}")
+
+        # per-lane cache update at [li, bi, :, pos[bi], :] — one vmapped
+        # scatter over the lane axis (an unrolled per-lane loop would
+        # bloat the lowered artifact with 2·B ops per layer)
+        update_lanes = jax.vmap(
+            lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0)))
+        knew = kq.reshape(b, nkv, 1, hd)
+        vnew = vq.reshape(b, nkv, 1, hd)
+        k_cache = k_cache.at[li].set(update_lanes(k_cache[li], knew, pos))
+        v_cache = v_cache.at[li].set(update_lanes(v_cache[li], vnew, pos))
+
+        kall = k_cache[li].reshape(b * nkv, cfg.max_seq, hd)
+        vall = v_cache[li].reshape(b * nkv, cfg.max_seq, hd)
+
+        def group_q(t):   # [B*H, 1, hd] → [B*KV, rep, hd]
+            return t.reshape(b * nkv, rep, hd)
+
+        if scheme.attn_mode == "sta8":
+            qq = quantize_static(q.reshape(-1, hd), sq, 0.0, 8, True).reshape(q.shape)
+            attn = attention_int8(group_q(qq), kall, vall, dec_mask, sq, sk, sv)
+        else:
+            attn = attention_fp(group_q(q), kall, vall, dec_mask)
 
         attn = attn.reshape(b, nh * hd)
         x = x + _linear(lp["wo"], attn, scheme, cfg, "decode")

@@ -10,6 +10,7 @@ import pytest
 from compile.model import (
     ModelConfig,
     decode_step,
+    decode_step_lanes,
     forward_fp,
     hmt_memattn,
     init_params,
@@ -127,6 +128,50 @@ def test_decode_greedy_loop_is_finite(setup, q3):
         logits, kc, vc = step(tok, jnp.int32(8 + i), kc, vc)
         assert bool(jnp.all(jnp.isfinite(logits)))
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def test_decode_step_lanes_matches_aligned(setup, q3):
+    """With identical lane positions the per-lane graph must reproduce the
+    aligned decode_step numerics (same kernels, same math)."""
+    cfg, _, _ = setup
+    scheme = SCHEMES["q3"]
+    tokens = jax.random.randint(jax.random.PRNGKey(14), (2, 8), 0, cfg.vocab)
+    logits, kc, vc = prefill_serve(q3, cfg, scheme, tokens)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    want, kw, vw = decode_step(q3, cfg, scheme, nxt, jnp.int32(8), kc, vc)
+    got, kg, vg = decode_step_lanes(q3, cfg, scheme, nxt,
+                                    jnp.full((2,), 8, jnp.int32), kc, vc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kg), np.asarray(kw), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vg), np.asarray(vw), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_step_lanes_per_lane_positions(setup, q3):
+    """Lanes at DIFFERENT positions: each lane must match the single-lane
+    aligned decode at its own position — the backfill correctness story."""
+    cfg, _, _ = setup
+    scheme = SCHEMES["q3"]
+    t_a = jax.random.randint(jax.random.PRNGKey(15), (1, 8), 0, cfg.vocab)
+    t_b = jax.random.randint(jax.random.PRNGKey(16), (1, 6), 0, cfg.vocab)
+    la, ka, va = prefill_serve(q3, cfg, scheme, t_a)
+    lb, kb, vb = prefill_serve(q3, cfg, scheme, t_b)
+    tok = jnp.concatenate([jnp.argmax(la, -1), jnp.argmax(lb, -1)]).astype(jnp.int32)
+    kc = jnp.concatenate([ka, kb], axis=1)
+    vc = jnp.concatenate([va, vb], axis=1)
+    pos = jnp.asarray([8, 6], jnp.int32)
+    got, kg, vg = decode_step_lanes(q3, cfg, scheme, tok, pos, kc, vc)
+    want_a, ka2, _ = decode_step(q3, cfg, scheme, tok[:1], jnp.int32(8), ka, va)
+    want_b, kb2, _ = decode_step(q3, cfg, scheme, tok[1:], jnp.int32(6), kb, vb)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want_a[0]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want_b[0]),
+                               rtol=1e-4, atol=1e-4)
+    # per-lane cache writes landed at each lane's own position
+    np.testing.assert_allclose(np.asarray(kg[:, 0]), np.asarray(ka2[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kg[:, 1]), np.asarray(kb2[:, 0]),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_hmt_memattn_shapes_and_effect(setup):

@@ -1,0 +1,495 @@
+//! Execution backends: the scheduler's hardware abstraction (DESIGN.md §7).
+//!
+//! The iteration-level scheduler only needs two operations — "prefill a
+//! prompt into a lane" and "run one decode iteration across these lanes"
+//! — so that pair is the [`ExecBackend`] trait. Three implementations:
+//!
+//! * [`PjrtBackend`] — the real thing: drives the AOT PJRT artifacts
+//!   (`prefill_serve_q3` + the per-lane-position `decode_lanes_q3`).
+//! * [`MockBackend`] — deterministic token streams derived from the
+//!   prompt, plus call/slot counters; lets every scheduler invariant run
+//!   in tier-1 without XLA artifacts.
+//! * [`ModeledBackend`] — mock tokens + a virtual clock advanced by the
+//!   `hls::pipeline_sim` stage latencies of the paper's U280 decode
+//!   architecture, so serving composes with the accelerator model.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::AcceleratorSystem;
+use crate::runtime::{argmax_rows, lit_f32, lit_i32, lit_scalar_i32, to_f32, Runtime};
+
+/// Fixed shapes and capabilities of an execution backend.
+#[derive(Debug, Clone)]
+pub struct BackendSpec {
+    /// Decode lane pool size (= artifact batch dimension).
+    pub lanes: usize,
+    pub prefill_len: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    /// Whether decode supports per-lane cache positions. When false the
+    /// scheduler gang-schedules (admission only into an all-free pool);
+    /// when true freed lanes are backfilled mid-flight.
+    pub per_lane_pos: bool,
+}
+
+/// A prefill admission: a prompt going into a (free) lane.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillSlot<'a> {
+    pub lane: usize,
+    pub prompt: &'a [i32],
+}
+
+/// One lane's input to a decode iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneStep {
+    pub lane: usize,
+    /// Token fed this step (the lane's previously generated token).
+    pub token: i32,
+    /// The lane's next cache write position.
+    pub pos: usize,
+}
+
+/// The scheduler's view of execution hardware.
+pub trait ExecBackend {
+    fn spec(&self) -> &BackendSpec;
+
+    /// Prefill the given lanes in one hardware invocation, resetting each
+    /// lane's cache to positions `0..prefill_len`. Other lanes' caches
+    /// are untouched. Returns the first generated token per slot, in
+    /// slot order.
+    fn prefill(&mut self, slots: &[PrefillSlot]) -> Result<Vec<i32>>;
+
+    /// One decode iteration across the given lanes, each at its own
+    /// position. Returns the next token per entry, in entry order.
+    fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>>;
+}
+
+// ---------------------------------------------------------------------------
+// Mock backend
+// ---------------------------------------------------------------------------
+
+/// Deterministic artifact-free backend for scheduler tests and benches.
+///
+/// The token a lane emits depends ONLY on the prompt occupying it and on
+/// how many tokens that request has generated — never on which lane it
+/// landed in or what its neighbours are doing. Tests exploit this to
+/// prove a backfilled lane cannot leak another request's stream: the
+/// result must equal [`MockBackend::expected_tokens`] for its own prompt.
+pub struct MockBackend {
+    spec: BackendSpec,
+    /// Prompt fingerprint per occupied lane.
+    lane_seed: Vec<Option<u64>>,
+    pub prefill_calls: usize,
+    pub prefill_slots: usize,
+    pub decode_iterations: usize,
+    /// Decode slot-steps actually executed (iterations × lanes fed); the
+    /// quantity max-aligned batching wastes on finished lanes.
+    pub decode_lane_steps: usize,
+}
+
+impl MockBackend {
+    pub fn new(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize) -> Self {
+        assert!(lanes > 0 && vocab > 1 && max_seq > prefill_len);
+        MockBackend {
+            spec: BackendSpec { lanes, prefill_len, max_seq, vocab, per_lane_pos: true },
+            lane_seed: vec![None; lanes],
+            prefill_calls: 0,
+            prefill_slots: 0,
+            decode_iterations: 0,
+            decode_lane_steps: 0,
+        }
+    }
+
+    /// Aligned-only variant: like the scalar-position decode artifact, it
+    /// rejects decode iterations over lanes at mixed positions, so tests
+    /// can prove the gang-admission fallback never produces one.
+    pub fn aligned(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize) -> Self {
+        let mut m = Self::new(lanes, prefill_len, max_seq, vocab);
+        m.spec.per_lane_pos = false;
+        m
+    }
+
+    /// FNV-1a fingerprint of a prompt.
+    pub fn prompt_seed(prompt: &[i32]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &t in prompt {
+            h ^= t as u32 as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// The `index`-th token (0-based) of the stream a prompt produces.
+    pub fn token_at(seed: u64, index: usize, vocab: usize) -> i32 {
+        let mut x = seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        (x % vocab as u64) as i32
+    }
+
+    /// The full stream a prompt would produce over `n` tokens.
+    pub fn expected_tokens(prompt: &[i32], n: usize, vocab: usize) -> Vec<i32> {
+        let seed = Self::prompt_seed(prompt);
+        (0..n).map(|i| Self::token_at(seed, i, vocab)).collect()
+    }
+}
+
+impl ExecBackend for MockBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn prefill(&mut self, slots: &[PrefillSlot]) -> Result<Vec<i32>> {
+        self.prefill_calls += 1;
+        self.prefill_slots += slots.len();
+        let mut out = Vec::with_capacity(slots.len());
+        for s in slots {
+            if s.lane >= self.spec.lanes {
+                return Err(anyhow!("prefill lane {} out of range", s.lane));
+            }
+            if s.prompt.len() != self.spec.prefill_len {
+                return Err(anyhow!("prefill prompt length {} != {}",
+                                   s.prompt.len(), self.spec.prefill_len));
+            }
+            let seed = Self::prompt_seed(s.prompt);
+            self.lane_seed[s.lane] = Some(seed);
+            out.push(Self::token_at(seed, 0, self.spec.vocab));
+        }
+        Ok(out)
+    }
+
+    fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
+        if steps.is_empty() {
+            return Ok(Vec::new());
+        }
+        if !self.spec.per_lane_pos && steps.iter().any(|s| s.pos != steps[0].pos) {
+            return Err(anyhow!(
+                "aligned mock backend cannot step lanes at mixed positions"));
+        }
+        self.decode_iterations += 1;
+        self.decode_lane_steps += steps.len();
+        let mut out = Vec::with_capacity(steps.len());
+        for s in steps {
+            let seed = self
+                .lane_seed
+                .get(s.lane)
+                .copied()
+                .flatten()
+                .ok_or_else(|| anyhow!("decode on unprefilled lane {}", s.lane))?;
+            if s.pos < self.spec.prefill_len || s.pos >= self.spec.max_seq {
+                return Err(anyhow!("decode lane {} at invalid pos {}", s.lane, s.pos));
+            }
+            // the step at write position p produces generated token
+            // index (p - prefill_len + 1); index 0 came from prefill
+            out.push(Self::token_at(seed, s.pos - self.spec.prefill_len + 1,
+                                    self.spec.vocab));
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Modeled backend (pipeline-simulator clock)
+// ---------------------------------------------------------------------------
+
+/// Mock tokens + a virtual hardware clock from `hls::pipeline_sim`.
+///
+/// Each decode iteration costs one stall-aware decode-pipeline token at
+/// the max context among the stepped lanes; each prefill costs the
+/// simulated prefill makespan. `model_time_s` is what the serve CLI
+/// reports as modeled hardware time.
+pub struct ModeledBackend {
+    inner: MockBackend,
+    sys: AcceleratorSystem,
+    /// Simulated seconds-per-token cache keyed by context bucket.
+    step_cost: HashMap<u64, f64>,
+    prefill_cost_s: f64,
+    pub model_time_s: f64,
+}
+
+impl ModeledBackend {
+    pub fn new(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize,
+               sys: AcceleratorSystem) -> Self {
+        let prefill_cost_s = sys.prefill.simulated_latency_s(prefill_len as u64);
+        ModeledBackend {
+            inner: MockBackend::new(lanes, prefill_len, max_seq, vocab),
+            sys,
+            step_cost: HashMap::new(),
+            prefill_cost_s,
+            model_time_s: 0.0,
+        }
+    }
+
+    pub fn u280(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize) -> Self {
+        Self::new(lanes, prefill_len, max_seq, vocab, AcceleratorSystem::u280())
+    }
+
+    /// Stall-aware seconds per decode token at `ctx`, from the dataflow
+    /// pipeline simulator (amortized over a 32-token run, cached per
+    /// power-of-two context bucket).
+    fn decode_step_s(&mut self, ctx: u64) -> f64 {
+        let bucket = ctx.max(1).next_power_of_two();
+        if let Some(&c) = self.step_cost.get(&bucket) {
+            return c;
+        }
+        let cost = self.sys.decode.simulated_latency_s(bucket, 32) / 32.0;
+        self.step_cost.insert(bucket, cost);
+        cost
+    }
+}
+
+impl ExecBackend for ModeledBackend {
+    fn spec(&self) -> &BackendSpec {
+        self.inner.spec()
+    }
+
+    fn prefill(&mut self, slots: &[PrefillSlot]) -> Result<Vec<i32>> {
+        if !slots.is_empty() {
+            self.model_time_s += self.prefill_cost_s;
+        }
+        self.inner.prefill(slots)
+    }
+
+    fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
+        if let Some(ctx) = steps.iter().map(|s| s.pos as u64).max() {
+            self.model_time_s += self.decode_step_s(ctx);
+        }
+        self.inner.decode(steps)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (the real artifacts)
+// ---------------------------------------------------------------------------
+
+const PREFILL: &str = "prefill_serve_q3";
+const DECODE_LANES: &str = "decode_lanes_q3";
+const DECODE_ALIGNED: &str = "decode_step_q3";
+
+/// Execution over the AOT-compiled PJRT artifacts.
+///
+/// Cache tensors are the INT8 integer-grid K/V literals threaded through
+/// every step. Backfill admission runs the batch prefill artifact and
+/// host-merges only the admitted lanes' cache slices into the live pool
+/// cache, preserving in-flight lanes. When only the position-aligned
+/// `decode_step_q3` artifact exists (older artifact sets), the backend
+/// reports `per_lane_pos: false` and the scheduler falls back to gang
+/// admission.
+pub struct PjrtBackend {
+    pub runtime: Runtime,
+    spec: BackendSpec,
+    k: Option<xla::Literal>,
+    v: Option<xla::Literal>,
+    /// [layers, lanes, kv_heads, max_seq, head_dim]
+    cache_shape: Vec<usize>,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: Runtime) -> Self {
+        let m = &runtime.manifest;
+        let spec = BackendSpec {
+            lanes: m.serving.batch,
+            prefill_len: m.serving.prefill_len,
+            max_seq: m.model.max_seq as usize,
+            vocab: m.model.vocab as usize,
+            per_lane_pos: m.artifacts.contains_key(DECODE_LANES),
+        };
+        let cache_shape: Vec<usize> =
+            m.serving.cache_shape.iter().map(|&d| d as usize).collect();
+        PjrtBackend { runtime, spec, k: None, v: None, cache_shape }
+    }
+
+    fn cache_dims_i64(&self) -> Vec<i64> {
+        self.cache_shape.iter().map(|&d| d as i64).collect()
+    }
+
+    /// Copy `lane`'s slice of `fresh` into `pool` (host side). The cache
+    /// layout is [L, B, KV, S, hd]: one lane's per-layer block is
+    /// contiguous with stride KV·S·hd inside a layer block of B·KV·S·hd.
+    fn merge_lane(&self, pool: &mut [f32], fresh: &[f32], lane: usize) {
+        let layers = self.cache_shape[0];
+        let lanes = self.cache_shape[1];
+        let lane_block: usize = self.cache_shape[2..].iter().product();
+        for li in 0..layers {
+            let off = (li * lanes + lane) * lane_block;
+            pool[off..off + lane_block].copy_from_slice(&fresh[off..off + lane_block]);
+        }
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn prefill(&mut self, slots: &[PrefillSlot]) -> Result<Vec<i32>> {
+        let b = self.spec.lanes;
+        let s = self.spec.prefill_len;
+        let mut flat = vec![0i32; b * s];
+        for slot in slots {
+            if slot.lane >= b {
+                return Err(anyhow!("prefill lane {} out of range", slot.lane));
+            }
+            if slot.prompt.len() != s {
+                return Err(anyhow!("prefill prompt length {} != {}",
+                                   slot.prompt.len(), s));
+            }
+            flat[slot.lane * s..(slot.lane + 1) * s].copy_from_slice(slot.prompt);
+        }
+        let tokens = lit_i32(&flat, &[b as i64, s as i64])?;
+        let mut out = self.runtime.execute(PREFILL, &[tokens])?;
+        if out.len() != 3 {
+            return Err(anyhow!("prefill artifact returned {} outputs", out.len()));
+        }
+        let v_new = out.pop().unwrap();
+        let k_new = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+
+        if self.k.is_none() || slots.len() == b {
+            // empty pool or full re-admission: take the fresh caches
+            self.k = Some(k_new);
+            self.v = Some(v_new);
+        } else {
+            // backfill: splice only the admitted lanes, keep the rest.
+            // NOTE: this round-trips the whole pool cache through host
+            // memory (cheap at the tiny-model scale; a device-side
+            // lane-merge artifact is the ROADMAP follow-up for large
+            // caches — decode replaces the literals every step, so a
+            // persistent host mirror would go stale immediately)
+            let dims = self.cache_dims_i64();
+            let mut kh = to_f32(self.k.as_ref().unwrap())?;
+            let mut vh = to_f32(self.v.as_ref().unwrap())?;
+            let kf = to_f32(&k_new)?;
+            let vf = to_f32(&v_new)?;
+            for slot in slots {
+                self.merge_lane(&mut kh, &kf, slot.lane);
+                self.merge_lane(&mut vh, &vf, slot.lane);
+            }
+            self.k = Some(lit_f32(&kh, &dims)?);
+            self.v = Some(lit_f32(&vh, &dims)?);
+        }
+
+        let next = argmax_rows(&logits, b, self.spec.vocab)?;
+        Ok(slots.iter().map(|slot| next[slot.lane]).collect())
+    }
+
+    fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
+        if steps.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = self.spec.lanes;
+        let (k, v) = match (&self.k, &self.v) {
+            (Some(k), Some(v)) => (k.clone(), v.clone()),
+            _ => return Err(anyhow!("decode before any prefill")),
+        };
+        let mut tok = vec![0i32; b];
+        for st in steps {
+            if st.lane >= b {
+                return Err(anyhow!("decode lane {} out of range", st.lane));
+            }
+            tok[st.lane] = st.token;
+        }
+
+        let mut out = if self.spec.per_lane_pos {
+            // idle lanes get a harmless in-range position: whatever they
+            // write there is overwritten by the admission prefill (or the
+            // first decode step) before it can ever be attended
+            let mut pos = vec![self.spec.prefill_len as i32; b];
+            for st in steps {
+                pos[st.lane] = st.pos as i32;
+            }
+            self.runtime.execute(DECODE_LANES, &[
+                lit_i32(&tok, &[b as i64])?,
+                lit_i32(&pos, &[b as i64])?,
+                k, v,
+            ])?
+        } else {
+            // aligned fallback: the scheduler gang-schedules, so every
+            // stepped lane shares one position
+            let pos = steps[0].pos;
+            if steps.iter().any(|s| s.pos != pos) {
+                return Err(anyhow!(
+                    "aligned decode artifact cannot step lanes at mixed positions"));
+            }
+            self.runtime.execute(DECODE_ALIGNED, &[
+                lit_i32(&tok, &[b as i64])?,
+                lit_scalar_i32(pos as i32),
+                k, v,
+            ])?
+        };
+        if out.len() != 3 {
+            return Err(anyhow!("decode artifact returned {} outputs", out.len()));
+        }
+        self.v = Some(out.pop().unwrap());
+        self.k = Some(out.pop().unwrap());
+        let logits = out.pop().unwrap();
+        let next = argmax_rows(&logits, b, self.spec.vocab)?;
+        Ok(steps.iter().map(|st| next[st.lane]).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_stream_depends_only_on_prompt() {
+        let mut a = MockBackend::new(4, 8, 32, 64);
+        let mut b = MockBackend::new(4, 8, 32, 64);
+        let prompt: Vec<i32> = (0..8).collect();
+        // same prompt, different lanes → identical stream
+        let t0a = a.prefill(&[PrefillSlot { lane: 0, prompt: &prompt }]).unwrap();
+        let t0b = b.prefill(&[PrefillSlot { lane: 3, prompt: &prompt }]).unwrap();
+        assert_eq!(t0a, t0b);
+        let t1a = a.decode(&[LaneStep { lane: 0, token: t0a[0], pos: 8 }]).unwrap();
+        let t1b = b.decode(&[LaneStep { lane: 3, token: t0b[0], pos: 8 }]).unwrap();
+        assert_eq!(t1a, t1b);
+        let want = MockBackend::expected_tokens(&prompt, 2, 64);
+        assert_eq!(vec![t0a[0], t1a[0]], want);
+    }
+
+    #[test]
+    fn mock_counts_slots() {
+        let mut m = MockBackend::new(2, 4, 16, 32);
+        let p: Vec<i32> = vec![1; 4];
+        m.prefill(&[PrefillSlot { lane: 0, prompt: &p },
+                    PrefillSlot { lane: 1, prompt: &p }]).unwrap();
+        m.decode(&[LaneStep { lane: 0, token: 0, pos: 4 },
+                   LaneStep { lane: 1, token: 0, pos: 4 }]).unwrap();
+        m.decode(&[LaneStep { lane: 0, token: 0, pos: 5 }]).unwrap();
+        assert_eq!(m.prefill_calls, 1);
+        assert_eq!(m.prefill_slots, 2);
+        assert_eq!(m.decode_iterations, 2);
+        assert_eq!(m.decode_lane_steps, 3);
+    }
+
+    #[test]
+    fn mock_rejects_invalid_use() {
+        let mut m = MockBackend::new(2, 4, 16, 32);
+        let p = vec![1; 4];
+        assert!(m.prefill(&[PrefillSlot { lane: 5, prompt: &p }]).is_err());
+        assert!(m.prefill(&[PrefillSlot { lane: 0, prompt: &p[..2] }]).is_err());
+        assert!(m.decode(&[LaneStep { lane: 1, token: 0, pos: 4 }]).is_err());
+        m.prefill(&[PrefillSlot { lane: 0, prompt: &p }]).unwrap();
+        assert!(m.decode(&[LaneStep { lane: 0, token: 0, pos: 16 }]).is_err());
+    }
+
+    #[test]
+    fn modeled_clock_advances_monotonically() {
+        let mut m = ModeledBackend::u280(2, 8, 64, 32);
+        let p: Vec<i32> = (0..8).collect();
+        assert_eq!(m.model_time_s, 0.0);
+        m.prefill(&[PrefillSlot { lane: 0, prompt: &p }]).unwrap();
+        let after_prefill = m.model_time_s;
+        assert!(after_prefill > 0.0);
+        m.decode(&[LaneStep { lane: 0, token: 0, pos: 8 }]).unwrap();
+        assert!(m.model_time_s > after_prefill);
+        // longer context can never be modeled as cheaper
+        let c1 = m.decode_step_s(128);
+        let c2 = m.decode_step_s(4096);
+        assert!(c2 >= c1);
+    }
+}

@@ -1,122 +1,201 @@
-//! Serving engine: drives the prefill → decode artifact loop for batches.
+//! Serving engine: drives one decode iteration at a time over a lane pool.
 //!
 //! This is the request-path core: tokens in, tokens out, no Python. The
-//! engine owns the [`Runtime`] (single-threaded PJRT client) and exposes
-//! a synchronous `generate` used either directly (examples, benches) or
-//! behind the router's channel (the async CLI server).
+//! engine owns an [`ExecBackend`] (the PJRT artifacts in production, the
+//! mock/modeled backends in tests and what-if studies) and the
+//! [`Scheduler`]; [`Engine::step`] runs one iteration — admit into free
+//! lanes, prefill the admissions, decode the active lanes, retire
+//! finished requests — and [`Engine::serve`] loops it until the queue
+//! drains. The router calls `step` from its event loop so new requests
+//! can arrive between iterations (continuous batching).
 
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{argmax_rows, lit_i32, lit_scalar_i32, Runtime};
+use super::backend::{ExecBackend, PjrtBackend, PrefillSlot};
+use super::request::{GenRequest, GenResult, ServeMetrics};
+use super::scheduler::{Completion, Scheduler};
 
-use super::batcher::{Batch, Batcher};
-use super::kv::KvState;
-use super::request::{GenResult, ServeMetrics};
-
-/// Artifact names the engine drives.
-const PREFILL: &str = "prefill_serve_q3";
-const DECODE: &str = "decode_step_q3";
-
-pub struct Engine {
-    pub runtime: Runtime,
-    pub batcher: Batcher,
-    pub metrics: ServeMetrics,
-    vocab: usize,
+/// A token the engine just produced (streaming surface).
+#[derive(Debug, Clone, Copy)]
+pub struct TokenEvent {
+    pub id: u64,
+    pub token: i32,
+    /// 0-based index within the request's generated tokens.
+    pub index: usize,
+    /// True when this token retired the request.
+    pub done: bool,
 }
 
-impl Engine {
-    pub fn new(runtime: Runtime) -> Self {
-        let m = &runtime.manifest;
-        let batcher = Batcher::new(m.serving.batch, m.serving.prefill_len,
-                                   m.model.max_seq as usize);
-        let vocab = m.model.vocab as usize;
-        Engine { runtime, batcher, metrics: ServeMetrics::default(), vocab }
+/// What one `Engine::step` did.
+#[derive(Debug, Default)]
+pub struct StepReport {
+    /// Requests admitted (prefilled) this iteration.
+    pub admitted: usize,
+    /// Lanes stepped in the decode phase.
+    pub stepped: usize,
+    /// Requests retired this iteration, in admission order.
+    pub completed: Vec<Completion>,
+    /// Every token produced this iteration, in lane order.
+    pub events: Vec<TokenEvent>,
+}
+
+pub struct Engine<B: ExecBackend> {
+    pub backend: B,
+    pub scheduler: Scheduler,
+    pub metrics: ServeMetrics,
+}
+
+impl Engine<PjrtBackend> {
+    /// Engine over the real PJRT artifacts.
+    pub fn pjrt(runtime: crate::runtime::Runtime) -> Self {
+        let backend = PjrtBackend::new(runtime);
+        Engine::new(backend)
+    }
+}
+
+impl<B: ExecBackend> Engine<B> {
+    pub fn new(backend: B) -> Self {
+        let spec = backend.spec();
+        let scheduler = Scheduler::new(spec.lanes, spec.prefill_len, spec.max_seq,
+                                       !spec.per_lane_pos);
+        Engine { backend, scheduler, metrics: ServeMetrics::default() }
     }
 
-    /// Run one batch to completion (prefill + aligned greedy decode).
-    pub fn generate(&mut self, batch: &Batch) -> Result<Vec<GenResult>> {
-        let b = self.batcher.batch_size;
-        let s = self.batcher.prefill_len;
-
-        // ---- prefill -----------------------------------------------------
-        let mut flat = Vec::with_capacity(b * s);
-        for r in &batch.requests {
-            flat.extend_from_slice(&r.prompt);
-        }
-        let tokens = lit_i32(&flat, &[b as i64, s as i64])?;
-        let t0 = Instant::now();
-        let mut out = self.runtime.execute(PREFILL, &[tokens])?;
-        if out.len() != 3 {
-            return Err(anyhow!("prefill artifact returned {} outputs", out.len()));
-        }
-        let v_cache = out.pop().unwrap();
-        let k_cache = out.pop().unwrap();
-        let logits = out.pop().unwrap();
-        let prefill_t = t0.elapsed();
-
-        let mut kv = KvState::from_prefill(k_cache, v_cache, s,
-                                           self.batcher.max_seq)?;
-        let mut next = argmax_rows(&logits, b, self.vocab)?;
-        let mut generated: Vec<Vec<i32>> = next.iter().map(|&t| vec![t]).collect();
-        let ttft = t0.elapsed();
-
-        // ---- aligned greedy decode ----------------------------------------
-        let t1 = Instant::now();
-        for _ in 1..batch.new_tokens {
-            if kv.remaining() == 0 {
-                return Err(anyhow!("KV capacity exhausted mid-batch"));
-            }
-            let tok = lit_i32(&next, &[b as i64])?;
-            let pos = lit_scalar_i32(kv.pos as i32);
-            let mut out = self.runtime.execute(
-                DECODE, &[tok, pos, kv.k.clone(), kv.v.clone()])?;
-            if out.len() != 3 {
-                return Err(anyhow!("decode artifact returned {} outputs", out.len()));
-            }
-            let v_new = out.pop().unwrap();
-            let k_new = out.pop().unwrap();
-            let logits = out.pop().unwrap();
-            kv.advance(k_new, v_new)?;
-            next = argmax_rows(&logits, b, self.vocab)?;
-            for (lane, &t) in next.iter().enumerate() {
-                generated[lane].push(t);
-            }
-        }
-        let decode_t = t1.elapsed();
-
-        // ---- metrics + results ---------------------------------------------
-        self.metrics.batches += 1;
-        self.metrics.total_prefill += prefill_t;
-        self.metrics.total_decode += decode_t;
-        self.metrics.prefill_tokens += b * s;
-        let real_lanes = batch.padding.iter().filter(|&&p| !p).count();
-        self.metrics.requests += real_lanes;
-        self.metrics.tokens_generated += batch.new_tokens * real_lanes;
-
-        Ok(batch
-            .requests
-            .iter()
-            .zip(&batch.padding)
-            .enumerate()
-            .map(|(lane, (req, &padding))| GenResult {
-                id: req.id,
-                tokens: generated[lane]
-                    [..batch.new_tokens.min(req.max_new_tokens)].to_vec(),
-                ttft,
-                decode_time: decode_t,
-                padding,
-            })
-            .collect())
+    /// Artifact prefill length (prompt shape requests must match).
+    pub fn prefill_len(&self) -> usize {
+        self.backend.spec().prefill_len
     }
 
-    /// Serve a whole queue: plan batches, run each, return real results.
-    pub fn serve(&mut self, queue: &[super::request::GenRequest]) -> Result<Vec<GenResult>> {
-        let mut results = Vec::new();
-        for batch in self.batcher.plan(queue)? {
-            results.extend(self.generate(&batch)?.into_iter().filter(|r| !r.padding));
+    /// Decode lane pool size.
+    pub fn lanes(&self) -> usize {
+        self.backend.spec().lanes
+    }
+
+    /// Validate and enqueue one request.
+    pub fn submit(&mut self, req: GenRequest) -> Result<()> {
+        self.scheduler.submit(req)
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.scheduler.has_work()
+    }
+
+    /// One scheduler iteration: backfill free lanes from the queue (one
+    /// prefill invocation covers all admissions), then run one decode
+    /// iteration across every active lane, retiring finished requests.
+    pub fn step(&mut self) -> Result<StepReport> {
+        let mut report = StepReport::default();
+        let prefill_len = self.prefill_len();
+
+        // ---- admission / prefill -----------------------------------------
+        let admitted = self.scheduler.plan_admissions();
+        if !admitted.is_empty() {
+            let mut slots = Vec::with_capacity(admitted.len());
+            for &lane in &admitted {
+                slots.push(PrefillSlot { lane, prompt: self.scheduler.prompt(lane)? });
+            }
+            let t0 = Instant::now();
+            let first = self.backend.prefill(&slots)?;
+            drop(slots);
+            self.metrics.total_prefill += t0.elapsed();
+            self.metrics.prefill_calls += 1;
+            self.metrics.prefill_tokens += admitted.len() * prefill_len;
+            report.admitted = admitted.len();
+            for (&lane, &token) in admitted.iter().zip(&first) {
+                self.push_token(&mut report, lane, token)?;
+            }
         }
-        Ok(results)
+
+        // ---- one decode iteration ----------------------------------------
+        let steps = self.scheduler.decode_steps();
+        if !steps.is_empty() {
+            let t0 = Instant::now();
+            let next = self.backend.decode(&steps)?;
+            self.metrics.total_decode += t0.elapsed();
+            self.metrics.iterations += 1;
+            self.metrics.lane_steps += steps.len();
+            report.stepped = steps.len();
+            for (st, &token) in steps.iter().zip(&next) {
+                self.push_decoded(&mut report, st.lane, token)?;
+            }
+        }
+
+        report.completed.sort_by_key(|(seq, _)| *seq);
+        Ok(report)
+    }
+
+    fn push_token(&mut self, report: &mut StepReport, lane: usize, token: i32)
+        -> Result<()>
+    {
+        let id = self.scheduler.prompt_owner(lane);
+        let done = self.scheduler.record_prefill(lane, token)?;
+        self.emit(report, id, token, 0, done);
+        Ok(())
+    }
+
+    fn push_decoded(&mut self, report: &mut StepReport, lane: usize, token: i32)
+        -> Result<()>
+    {
+        let id = self.scheduler.prompt_owner(lane);
+        let index = self.scheduler.generated(lane);
+        let done = self.scheduler.record_decode(lane, token)?;
+        self.emit(report, id, token, index, done);
+        Ok(())
+    }
+
+    fn emit(&mut self, report: &mut StepReport, id: u64, token: i32, index: usize,
+            done: Option<Completion>)
+    {
+        report.events.push(TokenEvent { id, token, index, done: done.is_some() });
+        if let Some(completion) = done {
+            self.metrics.record(&completion.1);
+            report.completed.push(completion);
+        }
+    }
+
+    /// Step until the queue and lanes drain, handing every report to
+    /// `on_report` (streaming hook). On a backend error everything in
+    /// flight is aborted — the engine stays reusable and later calls
+    /// cannot collect strays — and the error is returned.
+    pub fn drive(&mut self, mut on_report: impl FnMut(&StepReport))
+        -> Result<Vec<Completion>>
+    {
+        let mut completed: Vec<Completion> = Vec::new();
+        while self.scheduler.has_work() {
+            let report = match self.step() {
+                Ok(r) => r,
+                Err(e) => {
+                    self.scheduler.abort_all();
+                    return Err(e);
+                }
+            };
+            on_report(&report);
+            completed.extend(report.completed);
+        }
+        completed.sort_by_key(|(seq, _)| *seq);
+        Ok(completed)
+    }
+
+    /// Serve a whole queue to completion; results in submission order.
+    /// Requires an idle engine — interleaved workloads go through
+    /// `submit` + `step` (or the `Router`), whose completion routing
+    /// keeps every request's result addressable.
+    pub fn serve(&mut self, queue: &[GenRequest]) -> Result<Vec<GenResult>> {
+        if self.scheduler.has_work() {
+            return Err(anyhow!(
+                "serve() requires an idle engine ({} active, {} queued); \
+                 use submit()+step() or the Router to interleave work",
+                self.scheduler.active(), self.scheduler.queued()));
+        }
+        for req in queue {
+            self.scheduler.validate(req)?;
+        }
+        for req in queue {
+            self.scheduler.submit(req.clone())?;
+        }
+        let completed = self.drive(|_| {})?;
+        Ok(completed.into_iter().map(|(_, r)| r).collect())
     }
 }

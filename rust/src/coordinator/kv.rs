@@ -1,78 +1,147 @@
-//! KV-cache manager: owns the cache buffers between prefill and decode
-//! steps and tracks the shared write position of the aligned batch.
+//! KV lane pool: per-lane cache position/capacity bookkeeping for the
+//! iteration-level scheduler.
 //!
-//! The caches are the INT8 (integer-grid) K/V tensors produced by the
-//! prefill artifact and threaded through every decode step — the KV8
-//! datapath of the paper's W4A4KV8 scheme.
+//! The old `KvState` tracked one shared write position for an aligned
+//! batch; continuous batching needs each decode lane at its own position
+//! (lanes finish and are backfilled independently). The actual cache
+//! tensors — the INT8 integer-grid K/V of the W4A4KV8 scheme — live
+//! inside the execution backend (the PJRT backend threads XLA literals
+//! through every step); the pool only answers "which lanes are live and
+//! where does each one write next".
 
 use anyhow::{anyhow, Result};
 
-/// Cache state for one in-flight batch.
-pub struct KvState {
-    pub k: xla::Literal,
-    pub v: xla::Literal,
-    /// Next write position (= number of populated cache slots).
+/// One occupied decode lane.
+#[derive(Debug, Clone)]
+pub struct LaneSlot {
+    pub request_id: u64,
+    /// Next cache write position (= populated slots so far).
     pub pos: usize,
+}
+
+/// Fixed pool of decode lanes with per-lane positions.
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    slots: Vec<Option<LaneSlot>>,
+    pub prefill_len: usize,
     pub max_seq: usize,
 }
 
-impl KvState {
-    /// Wrap the caches returned by the prefill artifact.
-    pub fn from_prefill(k: xla::Literal, v: xla::Literal, prefill_len: usize,
-                        max_seq: usize) -> Result<Self> {
-        if k.element_count() != v.element_count() {
-            return Err(anyhow!("K/V cache element counts differ"));
-        }
-        if prefill_len >= max_seq {
-            return Err(anyhow!("prefill {prefill_len} leaves no decode room (max {max_seq})"));
-        }
-        Ok(KvState { k, v, pos: prefill_len, max_seq })
+impl KvPool {
+    pub fn new(lanes: usize, prefill_len: usize, max_seq: usize) -> Self {
+        assert!(lanes > 0 && prefill_len > 0 && max_seq > prefill_len);
+        KvPool { slots: vec![None; lanes], prefill_len, max_seq }
     }
 
-    /// Remaining decode capacity.
-    pub fn remaining(&self) -> usize {
-        self.max_seq - self.pos
+    pub fn lanes(&self) -> usize {
+        self.slots.len()
     }
 
-    /// Consume one decode step's updated caches.
-    pub fn advance(&mut self, k: xla::Literal, v: xla::Literal) -> Result<()> {
-        if self.pos + 1 > self.max_seq {
-            return Err(anyhow!("KV cache overflow at pos {}", self.pos));
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active_count() == 0
+    }
+
+    /// Lanes currently free, lowest index first.
+    pub fn free_lanes(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.slots[i].is_none()).collect()
+    }
+
+    /// Lanes currently occupied, lowest index first.
+    pub fn active_lanes(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect()
+    }
+
+    pub fn slot(&self, lane: usize) -> Option<&LaneSlot> {
+        self.slots.get(lane).and_then(|s| s.as_ref())
+    }
+
+    /// Bind a request to a free lane; its cache holds `prefill_len`
+    /// populated positions after the admission prefill.
+    pub fn bind(&mut self, lane: usize, request_id: u64) -> Result<()> {
+        let slot = self
+            .slots
+            .get_mut(lane)
+            .ok_or_else(|| anyhow!("lane {lane} out of range"))?;
+        if slot.is_some() {
+            return Err(anyhow!("lane {lane} already bound"));
         }
-        self.k = k;
-        self.v = v;
-        self.pos += 1;
+        *slot = Some(LaneSlot { request_id, pos: self.prefill_len });
         Ok(())
+    }
+
+    /// Remaining decode capacity of a lane.
+    pub fn remaining(&self, lane: usize) -> usize {
+        self.slot(lane).map(|s| self.max_seq - s.pos).unwrap_or(0)
+    }
+
+    /// Consume one decode step's cache slot on `lane`.
+    pub fn advance(&mut self, lane: usize) -> Result<()> {
+        let max_seq = self.max_seq;
+        let slot = self
+            .slots
+            .get_mut(lane)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow!("advance on unbound lane {lane}"))?;
+        if slot.pos + 1 > max_seq {
+            return Err(anyhow!("KV overflow on lane {lane} at pos {}", slot.pos));
+        }
+        slot.pos += 1;
+        Ok(())
+    }
+
+    /// Free a lane for backfill.
+    pub fn release(&mut self, lane: usize) -> Result<LaneSlot> {
+        self.slots
+            .get_mut(lane)
+            .ok_or_else(|| anyhow!("lane {lane} out of range"))?
+            .take()
+            .ok_or_else(|| anyhow!("release of free lane {lane}"))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::lit_f32;
 
-    fn lit(n: usize) -> xla::Literal {
-        lit_f32(&vec![0.0; n], &[n as i64]).unwrap()
+    #[test]
+    fn bind_advance_release_cycle() {
+        let mut p = KvPool::new(2, 4, 8);
+        assert_eq!(p.free_lanes(), vec![0, 1]);
+        p.bind(0, 11).unwrap();
+        assert_eq!(p.slot(0).unwrap().pos, 4);
+        assert_eq!(p.remaining(0), 4);
+        p.advance(0).unwrap();
+        assert_eq!(p.slot(0).unwrap().pos, 5);
+        assert_eq!(p.active_lanes(), vec![0]);
+        let released = p.release(0).unwrap();
+        assert_eq!(released.request_id, 11);
+        assert!(p.is_empty());
     }
 
     #[test]
-    fn tracks_position() {
-        let mut s = KvState::from_prefill(lit(8), lit(8), 2, 5).unwrap();
-        assert_eq!(s.remaining(), 3);
-        s.advance(lit(8), lit(8)).unwrap();
-        assert_eq!(s.pos, 3);
-        assert_eq!(s.remaining(), 2);
+    fn double_bind_rejected() {
+        let mut p = KvPool::new(1, 2, 6);
+        p.bind(0, 1).unwrap();
+        assert!(p.bind(0, 2).is_err());
+        assert!(p.bind(7, 3).is_err());
     }
 
     #[test]
     fn overflow_rejected() {
-        let mut s = KvState::from_prefill(lit(4), lit(4), 4, 5).unwrap();
-        s.advance(lit(4), lit(4)).unwrap();
-        assert!(s.advance(lit(4), lit(4)).is_err());
+        let mut p = KvPool::new(1, 4, 5);
+        p.bind(0, 1).unwrap();
+        p.advance(0).unwrap();
+        assert!(p.advance(0).is_err());
     }
 
     #[test]
-    fn full_prefill_rejected() {
-        assert!(KvState::from_prefill(lit(4), lit(4), 5, 5).is_err());
+    fn release_of_free_lane_rejected() {
+        let mut p = KvPool::new(2, 2, 6);
+        assert!(p.release(1).is_err());
+        assert!(p.advance(1).is_err());
     }
 }

@@ -1,20 +1,29 @@
-//! Serving coordinator (L3 request path): router → batcher → engine.
+//! Serving coordinator (L3 request path): router → scheduler → engine →
+//! execution backend.
 //!
-//! The engine owns the single-threaded PJRT runtime; the [`Router`]
-//! exposes it to async callers over std channels (the `xla` client is
-//! `Rc`-based, so all execution stays on one dedicated thread).
+//! The engine owns the single-threaded PJRT runtime behind an
+//! [`ExecBackend`]; the [`Router`] exposes it to async callers over std
+//! channels (the `xla` client is `Rc`-based, so all execution stays on
+//! one dedicated thread). The engine thread runs an event loop: it
+//! blocks for commands while idle and interleaves command handling with
+//! [`Engine::step`] iterations while requests are in flight, so work
+//! submitted mid-flight is backfilled into freed decode lanes
+//! (iteration-level continuous batching — DESIGN.md §7).
 
-mod batcher;
+mod backend;
 mod engine;
 mod hmt;
 mod kv;
 mod request;
+mod scheduler;
 
-pub use batcher::{Batch, Batcher};
-pub use engine::Engine;
+pub use backend::{BackendSpec, ExecBackend, LaneStep, MockBackend, ModeledBackend,
+                  PjrtBackend, PrefillSlot};
+pub use engine::{Engine, StepReport, TokenEvent};
 pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
-pub use kv::KvState;
-pub use request::{GenRequest, GenResult, ServeMetrics};
+pub use kv::{KvPool, LaneSlot};
+pub use request::{FinishReason, GenRequest, GenResult, ServeMetrics};
+pub use scheduler::{Completion, Scheduler};
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -22,8 +31,18 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 enum Cmd {
+    /// Submit a queue and block until all of it completes (results in
+    /// submission order).
     Generate(Vec<GenRequest>, mpsc::Sender<Result<Vec<GenResult>>>),
+    /// Enqueue without waiting; the engine backfills lanes as they free.
+    Submit(Vec<GenRequest>, mpsc::Sender<Result<()>>),
+    /// Block until the engine is idle; returns everything completed
+    /// since the last drain, in submission order. If a backend error
+    /// aborted the window, the drain returns that error and the whole
+    /// window is void (no partial results — resubmit).
+    Drain(mpsc::Sender<Result<Vec<GenResult>>>),
     Metrics(mpsc::Sender<ServeMetrics>),
+    Subscribe(mpsc::Sender<TokenEvent>),
     Shutdown,
 }
 
@@ -41,27 +60,17 @@ impl Router {
         let handle = std::thread::Builder::new()
             .name("flexllm-engine".into())
             .spawn(move || {
-                let mut engine = match crate::runtime::Runtime::open(&artifact_dir) {
+                let engine = match crate::runtime::Runtime::open(&artifact_dir) {
                     Ok(rt) => {
                         let _ = ready_tx.send(Ok(()));
-                        Engine::new(rt)
+                        Engine::pjrt(rt)
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                while let Ok(cmd) = rx.recv() {
-                    match cmd {
-                        Cmd::Generate(queue, reply) => {
-                            let _ = reply.send(engine.serve(&queue));
-                        }
-                        Cmd::Metrics(reply) => {
-                            let _ = reply.send(engine.metrics.clone());
-                        }
-                        Cmd::Shutdown => break,
-                    }
-                }
+                engine_loop(engine, rx);
             })
             .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
         ready_rx
@@ -77,6 +86,36 @@ impl Router {
             .send(Cmd::Generate(queue, reply_tx))
             .map_err(|_| anyhow!("engine thread gone"))?;
         reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    /// Enqueue requests without waiting (continuous-batching ingestion).
+    pub fn submit(&self, queue: Vec<GenRequest>) -> Result<()> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Submit(queue, reply_tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    /// Wait for the engine to go idle; returns everything completed
+    /// since the last drain, in submission order. A backend error voids
+    /// the whole window: the error is returned and no partial results
+    /// are retained — resubmit anything that mattered.
+    pub fn drain(&self) -> Result<Vec<GenResult>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Drain(reply_tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    /// Receive every token the engine produces from now on.
+    pub fn subscribe(&self) -> Result<mpsc::Receiver<TokenEvent>> {
+        let (event_tx, event_rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Subscribe(event_tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        Ok(event_rx)
     }
 
     /// Snapshot aggregate serving metrics.
@@ -96,4 +135,159 @@ impl Drop for Router {
             let _ = h.join();
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Engine thread event loop
+// ---------------------------------------------------------------------------
+
+fn engine_loop<B: ExecBackend>(mut engine: Engine<B>, rx: mpsc::Receiver<Cmd>) {
+    let mut subscribers: Vec<mpsc::Sender<TokenEvent>> = Vec::new();
+    // completions buffered for the next Drain, and the first error hit
+    // while stepping submit-mode work
+    let mut completed: Vec<Completion> = Vec::new();
+    let mut pending_err: Option<anyhow::Error> = None;
+    let mut drain_waiters: Vec<mpsc::Sender<Result<Vec<GenResult>>>> = Vec::new();
+
+    loop {
+        // idle: settle drains, then block for the next command
+        if !engine.has_work() {
+            for tx in drain_waiters.drain(..) {
+                let reply = match pending_err.take() {
+                    // an error voids the whole drain window — drop the
+                    // pre-error completions too, so a retry of the lost
+                    // requests can never produce duplicates later
+                    Some(e) => {
+                        completed.clear();
+                        Err(e)
+                    }
+                    None => {
+                        completed.sort_by_key(|(seq, _)| *seq);
+                        Ok(completed.drain(..).map(|(_, r)| r).collect())
+                    }
+                };
+                let _ = tx.send(reply);
+            }
+            match rx.recv() {
+                Ok(cmd) => {
+                    if handle_cmd(cmd, &mut engine, &mut subscribers,
+                                  &mut drain_waiters, &mut completed,
+                                  &mut pending_err) {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+
+        // busy: consume whatever has queued up without blocking
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => {
+                    if handle_cmd(cmd, &mut engine, &mut subscribers,
+                                  &mut drain_waiters, &mut completed,
+                                  &mut pending_err) {
+                        return;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return,
+            }
+        }
+
+        if engine.has_work() {
+            match engine.step() {
+                Ok(report) => {
+                    broadcast(&mut subscribers, &report);
+                    completed.extend(report.completed);
+                }
+                Err(e) => {
+                    engine.scheduler.abort_all();
+                    // keep the FIRST error; later ones are usually fallout
+                    pending_err.get_or_insert(e);
+                }
+            }
+        }
+    }
+}
+
+/// Handle one command; returns true on shutdown. `Generate` runs the
+/// queue to completion inline (blocking semantics), isolating its
+/// completions from any submit-mode work already in flight.
+fn handle_cmd<B: ExecBackend>(
+    cmd: Cmd,
+    engine: &mut Engine<B>,
+    subscribers: &mut Vec<mpsc::Sender<TokenEvent>>,
+    drain_waiters: &mut Vec<mpsc::Sender<Result<Vec<GenResult>>>>,
+    completed: &mut Vec<Completion>,
+    pending_err: &mut Option<anyhow::Error>,
+) -> bool {
+    match cmd {
+        Cmd::Generate(queue, reply) => {
+            let _ = reply.send(run_generate(engine, queue, subscribers, completed,
+                                            pending_err));
+        }
+        Cmd::Submit(queue, reply) => {
+            let outcome = (|| -> Result<()> {
+                for r in &queue {
+                    engine.scheduler.validate(r)?;
+                }
+                for r in queue {
+                    engine.scheduler.submit(r)?;
+                }
+                Ok(())
+            })();
+            let _ = reply.send(outcome);
+        }
+        Cmd::Drain(reply) => drain_waiters.push(reply),
+        Cmd::Metrics(reply) => {
+            let _ = reply.send(engine.metrics.clone());
+        }
+        Cmd::Subscribe(tx) => subscribers.push(tx),
+        Cmd::Shutdown => return true,
+    }
+    false
+}
+
+fn run_generate<B: ExecBackend>(
+    engine: &mut Engine<B>,
+    queue: Vec<GenRequest>,
+    subscribers: &mut Vec<mpsc::Sender<TokenEvent>>,
+    completed: &mut Vec<Completion>,
+    pending_err: &mut Option<anyhow::Error>,
+) -> Result<Vec<GenResult>> {
+    for r in &queue {
+        engine.scheduler.validate(r)?;
+    }
+    // submit-mode work already in flight gets aborted too if we error
+    // below; remember so the next drain() hears about it
+    let had_foreign_work = engine.has_work();
+    let watermark = engine.scheduler.seq_watermark();
+    for r in queue {
+        engine.scheduler.submit(r)?;
+    }
+    let all = match engine.drive(|report| broadcast(subscribers, report)) {
+        Ok(all) => all,
+        Err(e) => {
+            if had_foreign_work && pending_err.is_none() {
+                *pending_err = Some(anyhow!("aborted by a failed generate call: {e:#}"));
+            }
+            return Err(e);
+        }
+    };
+    // completions below the watermark belong to earlier submit-mode
+    // requests and go to the drain buffer; generate returns its own
+    let mut done = Vec::new();
+    for c in all {
+        if c.0 >= watermark {
+            done.push(c.1);
+        } else {
+            completed.push(c);
+        }
+    }
+    Ok(done)
+}
+
+fn broadcast(subscribers: &mut Vec<mpsc::Sender<TokenEvent>>, report: &StepReport) {
+    subscribers.retain(|tx| report.events.iter().all(|&ev| tx.send(ev).is_ok()));
 }

@@ -7,10 +7,36 @@ use std::time::Duration;
 pub struct GenRequest {
     pub id: u64,
     /// Prompt token ids; must be exactly the AOT prefill length (the
-    /// batcher validates — fixed-shape artifacts, DESIGN.md §7).
+    /// scheduler validates — fixed-shape artifacts, DESIGN.md §7).
     pub prompt: Vec<i32>,
-    /// Number of tokens to generate (greedy).
+    /// Generation budget (greedy); the scheduler frees the lane early if
+    /// a stop token fires first.
     pub max_new_tokens: usize,
+    /// Stop tokens (EOS et al.): the lane is released the moment one is
+    /// generated. The stop token itself is kept as the final entry of
+    /// `GenResult::tokens`. Empty = run to `max_new_tokens`.
+    pub stop_tokens: Vec<i32>,
+}
+
+impl GenRequest {
+    /// Request with no stop tokens (runs to `max_new_tokens`).
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        GenRequest { id, prompt, max_new_tokens, stop_tokens: Vec::new() }
+    }
+
+    pub fn with_stop_tokens(mut self, stop_tokens: Vec<i32>) -> Self {
+        self.stop_tokens = stop_tokens;
+        self
+    }
+}
+
+/// Why a request left its decode lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// A stop token was generated.
+    Stop,
+    /// The `max_new_tokens` budget was exhausted.
+    Length,
 }
 
 /// Per-request generation result with serving metrics.
@@ -19,12 +45,12 @@ pub struct GenResult {
     pub id: u64,
     /// Generated tokens (first = token produced from the prompt).
     pub tokens: Vec<i32>,
-    /// Time to first token (prefill + first sample).
+    /// Time to first token: queue wait + prefill + first sample.
     pub ttft: Duration,
-    /// Total decode wall time (excludes prefill).
+    /// Wall time from the first token to the last (this request's decode
+    /// residency, not a batch aggregate).
     pub decode_time: Duration,
-    /// Whether this lane was batch padding (result should be discarded).
-    pub padding: bool,
+    pub finish_reason: FinishReason,
 }
 
 impl GenResult {
@@ -35,20 +61,64 @@ impl GenResult {
         }
         (self.tokens.len() - 1) as f64 / self.decode_time.as_secs_f64()
     }
+
+    /// Time per output token after the first (TPOT), seconds.
+    pub fn tpot_s(&self) -> f64 {
+        if self.tokens.len() <= 1 {
+            return 0.0;
+        }
+        self.decode_time.as_secs_f64() / (self.tokens.len() - 1) as f64
+    }
+}
+
+/// Nearest-rank percentile of an unsorted sample set; 0.0 when empty.
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// Aggregate serving metrics over a run.
+///
+/// The iteration-level scheduler retires requests at different times, so
+/// batch-granular aggregates are meaningless; per-request TTFT/TPOT
+/// samples carry the latency story and the totals carry throughput.
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
+    /// Completed requests.
     pub requests: usize,
-    pub batches: usize,
+    /// Prefill invocations (one may admit several lanes).
+    pub prefill_calls: usize,
+    /// Decode iterations executed (`Engine::step` decode phases).
+    pub iterations: usize,
+    /// Decode lane-steps: sum over iterations of lanes stepped. The
+    /// utilization denominator is `iterations × pool size`.
+    pub lane_steps: usize,
     pub total_prefill: Duration,
     pub total_decode: Duration,
     pub tokens_generated: usize,
     pub prefill_tokens: usize,
+    /// Per-request time-to-first-token samples, seconds.
+    pub ttft_s: Vec<f64>,
+    /// Per-request time-per-output-token samples, seconds.
+    pub tpot_s: Vec<f64>,
 }
 
 impl ServeMetrics {
+    /// Fold one completed request into the samples.
+    pub fn record(&mut self, result: &GenResult) {
+        self.requests += 1;
+        self.tokens_generated += result.tokens.len();
+        self.ttft_s.push(result.ttft.as_secs_f64());
+        if result.tokens.len() > 1 {
+            self.tpot_s.push(result.tpot_s());
+        }
+    }
+
     /// Aggregate decode throughput, tokens/second.
     pub fn decode_tps(&self) -> f64 {
         if self.total_decode.is_zero() {
@@ -65,12 +135,29 @@ impl ServeMetrics {
         self.prefill_tokens as f64 / self.total_prefill.as_secs_f64()
     }
 
-    /// Mean end-to-end latency per batch.
-    pub fn mean_batch_latency(&self) -> Duration {
-        if self.batches == 0 {
-            return Duration::ZERO;
+    pub fn ttft_p50(&self) -> f64 {
+        percentile(&self.ttft_s, 50.0)
+    }
+
+    pub fn ttft_p95(&self) -> f64 {
+        percentile(&self.ttft_s, 95.0)
+    }
+
+    pub fn tpot_p50(&self) -> f64 {
+        percentile(&self.tpot_s, 50.0)
+    }
+
+    pub fn tpot_p95(&self) -> f64 {
+        percentile(&self.tpot_s, 95.0)
+    }
+
+    /// Decode lane utilization: fraction of lane-iterations that carried
+    /// a live request (1.0 = every lane busy every iteration).
+    pub fn lane_utilization(&self, pool_lanes: usize) -> f64 {
+        if self.iterations == 0 || pool_lanes == 0 {
+            return 0.0;
         }
-        (self.total_prefill + self.total_decode) / self.batches as u32
+        self.lane_steps as f64 / (self.iterations * pool_lanes) as f64
     }
 }
 
@@ -81,14 +168,47 @@ mod tests {
     #[test]
     fn decode_tps_counts_continuation_tokens() {
         let r = GenResult { id: 0, tokens: vec![1, 2, 3, 4, 5], ttft: Duration::ZERO,
-                            decode_time: Duration::from_secs(2), padding: false };
+                            decode_time: Duration::from_secs(2),
+                            finish_reason: FinishReason::Length };
         assert!((r.decode_tps() - 2.0).abs() < 1e-9);
+        assert!((r.tpot_s() - 0.5).abs() < 1e-9);
     }
 
     #[test]
     fn metrics_zero_safe() {
         let m = ServeMetrics::default();
         assert_eq!(m.decode_tps(), 0.0);
-        assert_eq!(m.mean_batch_latency(), Duration::ZERO);
+        assert_eq!(m.ttft_p50(), 0.0);
+        assert_eq!(m.tpot_p95(), 0.0);
+        assert_eq!(m.lane_utilization(4), 0.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&samples, 50.0) - 50.0).abs() < 1e-9);
+        assert!((percentile(&samples, 95.0) - 95.0).abs() < 1e-9);
+        assert!((percentile(&[42.0], 95.0) - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_accumulates_samples() {
+        let mut m = ServeMetrics::default();
+        m.record(&GenResult { id: 1, tokens: vec![7, 8, 9],
+                              ttft: Duration::from_millis(10),
+                              decode_time: Duration::from_millis(20),
+                              finish_reason: FinishReason::Stop });
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.tokens_generated, 3);
+        assert_eq!(m.ttft_s.len(), 1);
+        assert_eq!(m.tpot_s.len(), 1);
+        assert!((m.ttft_p50() - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stop_tokens_builder() {
+        let r = GenRequest::new(1, vec![0; 4], 8).with_stop_tokens(vec![2]);
+        assert_eq!(r.stop_tokens, vec![2]);
+        assert!(GenRequest::new(1, vec![], 1).stop_tokens.is_empty());
     }
 }

@@ -1,0 +1,395 @@
+//! Iteration-level continuous-batching scheduler.
+//!
+//! Replaces the old batch-at-a-time `Batcher` (which padded partial
+//! batches by duplicating a real lane and decoded every lane to the
+//! batch max). The scheduler owns an admission queue and the fixed
+//! [`KvPool`] of decode lanes; each [`Engine::step`](super::Engine::step)
+//! runs ONE decode iteration across the active lanes. Lanes finish
+//! independently — per-request `max_new_tokens` and stop tokens — and a
+//! freed lane is backfilled from the queue on the very next iteration,
+//! so no decode slot is ever spent on a finished or duplicated request.
+//!
+//! Admission policy is capability-driven: with a per-lane-position
+//! backend (`BackendSpec::per_lane_pos`) any free lane is backfilled
+//! immediately; with an aligned-only backend the scheduler gang-admits
+//! into an all-free pool (still padding-free, still stop-token aware).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::backend::LaneStep;
+use super::kv::KvPool;
+use super::request::{FinishReason, GenRequest, GenResult};
+
+/// A retired request paired with its admission sequence number, so
+/// drain-style callers can restore submission order across iterations.
+pub type Completion = (u64, GenResult);
+
+/// A queued request with its submission order and arrival time.
+#[derive(Debug, Clone)]
+struct Pending {
+    req: GenRequest,
+    seq: u64,
+    arrived: Instant,
+}
+
+/// A request occupying a decode lane.
+#[derive(Debug)]
+struct InFlight {
+    req: GenRequest,
+    seq: u64,
+    arrived: Instant,
+    tokens: Vec<i32>,
+    first_token_at: Instant,
+}
+
+impl InFlight {
+    fn finish_reason(&self) -> Option<FinishReason> {
+        match self.tokens.last() {
+            Some(last) if self.req.stop_tokens.contains(last) => Some(FinishReason::Stop),
+            Some(_) if self.tokens.len() >= self.req.max_new_tokens => {
+                Some(FinishReason::Length)
+            }
+            _ => None,
+        }
+    }
+
+    fn into_result(self, now: Instant) -> Completion {
+        let finish_reason = self.finish_reason().unwrap_or(FinishReason::Length);
+        (self.seq, GenResult {
+            id: self.req.id,
+            tokens: self.tokens,
+            ttft: self.first_token_at - self.arrived,
+            decode_time: now - self.first_token_at,
+            finish_reason,
+        })
+    }
+}
+
+/// Admission queue + lane pool + in-flight state.
+pub struct Scheduler {
+    pool: KvPool,
+    queue: VecDeque<Pending>,
+    lanes: Vec<Option<InFlight>>,
+    /// Gang admission (aligned-only backends): admit only when the pool
+    /// is completely free.
+    pub gang: bool,
+    next_seq: u64,
+}
+
+impl Scheduler {
+    pub fn new(lanes: usize, prefill_len: usize, max_seq: usize, gang: bool) -> Self {
+        Scheduler {
+            pool: KvPool::new(lanes, prefill_len, max_seq),
+            queue: VecDeque::new(),
+            lanes: (0..lanes).map(|_| None).collect(),
+            gang,
+            next_seq: 0,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.pool.lanes()
+    }
+
+    pub fn prefill_len(&self) -> usize {
+        self.pool.prefill_len
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.pool.max_seq
+    }
+
+    /// Validate a request against the artifact shapes.
+    pub fn validate(&self, req: &GenRequest) -> Result<()> {
+        if req.prompt.len() != self.pool.prefill_len {
+            return Err(anyhow!(
+                "request {}: prompt length {} != artifact prefill length {} \
+                 (fixed-shape AOT artifacts)",
+                req.id, req.prompt.len(), self.pool.prefill_len
+            ));
+        }
+        if req.max_new_tokens == 0 {
+            return Err(anyhow!("request {}: max_new_tokens must be > 0", req.id));
+        }
+        if self.pool.prefill_len + req.max_new_tokens > self.pool.max_seq {
+            return Err(anyhow!(
+                "request {}: {} prompt + {} new tokens exceeds max_seq {}",
+                req.id, self.pool.prefill_len, req.max_new_tokens, self.pool.max_seq
+            ));
+        }
+        Ok(())
+    }
+
+    /// Enqueue a validated request; its TTFT clock starts now.
+    pub fn submit(&mut self, req: GenRequest) -> Result<()> {
+        self.validate(&req)?;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(Pending { req, seq, arrived: Instant::now() });
+        Ok(())
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Sequence number the next submission will receive.
+    pub fn seq_watermark(&self) -> u64 {
+        self.next_seq
+    }
+
+    pub fn active(&self) -> usize {
+        self.pool.active_count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.pool.is_empty()
+    }
+
+    /// Pick the lanes to admit this iteration and bind them. Returns the
+    /// bound lanes; fetch each prompt with [`Scheduler::prompt`] to build
+    /// the backend's prefill slots.
+    pub fn plan_admissions(&mut self) -> Vec<usize> {
+        if self.queue.is_empty() || (self.gang && !self.pool.is_empty()) {
+            return Vec::new();
+        }
+        let free = self.pool.free_lanes();
+        let mut admitted = Vec::new();
+        for lane in free {
+            let Some(p) = self.queue.pop_front() else { break };
+            self.pool
+                .bind(lane, p.req.id)
+                .expect("free lane bind cannot fail");
+            self.lanes[lane] = Some(InFlight {
+                req: p.req,
+                seq: p.seq,
+                arrived: p.arrived,
+                // placeholder; overwritten when the prefill completes
+                first_token_at: p.arrived,
+                tokens: Vec::new(),
+            });
+            admitted.push(lane);
+        }
+        admitted
+    }
+
+    /// Request id bound to `lane` (0 when unbound; used for event labels).
+    pub fn prompt_owner(&self, lane: usize) -> u64 {
+        self.lanes
+            .get(lane)
+            .and_then(|l| l.as_ref())
+            .map(|f| f.req.id)
+            .unwrap_or(0)
+    }
+
+    /// Tokens the request on `lane` has generated so far.
+    pub fn generated(&self, lane: usize) -> usize {
+        self.lanes
+            .get(lane)
+            .and_then(|l| l.as_ref())
+            .map(|f| f.tokens.len())
+            .unwrap_or(0)
+    }
+
+    /// Prompt of the request bound to `lane`.
+    pub fn prompt(&self, lane: usize) -> Result<&[i32]> {
+        self.lanes
+            .get(lane)
+            .and_then(|l| l.as_ref())
+            .map(|f| f.req.prompt.as_slice())
+            .ok_or_else(|| anyhow!("no request bound to lane {lane}"))
+    }
+
+    /// Record a prefill's first token; completes immediately when the
+    /// budget is one token or the first token is a stop token.
+    pub fn record_prefill(&mut self, lane: usize, token: i32) -> Result<Option<Completion>> {
+        let now = Instant::now();
+        let flight = self
+            .lanes
+            .get_mut(lane)
+            .and_then(|l| l.as_mut())
+            .ok_or_else(|| anyhow!("prefill result for unbound lane {lane}"))?;
+        flight.first_token_at = now;
+        flight.tokens.push(token);
+        self.retire_if_finished(lane, now)
+    }
+
+    /// The decode iteration plan: every active lane with its last token
+    /// and write position.
+    pub fn decode_steps(&self) -> Vec<LaneStep> {
+        self.pool
+            .active_lanes()
+            .into_iter()
+            .filter_map(|lane| {
+                let flight = self.lanes[lane].as_ref()?;
+                let slot = self.pool.slot(lane)?;
+                Some(LaneStep { lane, token: *flight.tokens.last()?, pos: slot.pos })
+            })
+            .collect()
+    }
+
+    /// Record one decoded token on `lane`, advancing its cache position.
+    pub fn record_decode(&mut self, lane: usize, token: i32) -> Result<Option<Completion>> {
+        let now = Instant::now();
+        self.pool.advance(lane)?;
+        let flight = self
+            .lanes
+            .get_mut(lane)
+            .and_then(|l| l.as_mut())
+            .ok_or_else(|| anyhow!("decode result for unbound lane {lane}"))?;
+        flight.tokens.push(token);
+        self.retire_if_finished(lane, now)
+    }
+
+    fn retire_if_finished(&mut self, lane: usize, now: Instant) -> Result<Option<Completion>> {
+        let flight = self.lanes[lane].as_ref().expect("lane checked by caller");
+        let exhausted = self.pool.remaining(lane) == 0;
+        if flight.finish_reason().is_none() && !exhausted {
+            return Ok(None);
+        }
+        let flight = self.lanes[lane].take().expect("lane occupied");
+        self.pool.release(lane)?;
+        Ok(Some(flight.into_result(now)))
+    }
+
+    /// Drop everything — queued and in-flight — after a backend error so
+    /// the engine thread can keep serving subsequent requests.
+    pub fn abort_all(&mut self) {
+        self.queue.clear();
+        for lane in self.pool.active_lanes() {
+            let _ = self.pool.release(lane);
+        }
+        for slot in &mut self.lanes {
+            *slot = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Scheduler {
+        Scheduler::new(2, 4, 12, false)
+    }
+
+    fn req(id: u64, new: usize) -> GenRequest {
+        GenRequest::new(id, vec![id as i32; 4], new)
+    }
+
+    #[test]
+    fn validates_prompt_shape() {
+        let mut s = sched();
+        assert!(s.submit(GenRequest::new(1, vec![0; 3], 2)).is_err());
+        assert!(s.submit(GenRequest::new(1, vec![0; 4], 0)).is_err());
+        assert!(s.submit(GenRequest::new(1, vec![0; 4], 9)).is_err());
+        assert!(s.submit(req(1, 8)).is_ok());
+    }
+
+    #[test]
+    fn admits_up_to_pool_capacity() {
+        let mut s = sched();
+        for i in 0..3 {
+            s.submit(req(i, 2)).unwrap();
+        }
+        let admitted = s.plan_admissions();
+        assert_eq!(admitted, vec![0, 1]);
+        assert_eq!(s.queued(), 1);
+        assert_eq!(s.active(), 2);
+        assert!(s.plan_admissions().is_empty());
+    }
+
+    #[test]
+    fn lane_frees_and_backfills() {
+        let mut s = sched();
+        s.submit(req(1, 1)).unwrap();
+        s.submit(req(2, 3)).unwrap();
+        s.submit(req(3, 2)).unwrap();
+        let admitted = s.plan_admissions();
+        assert_eq!(admitted.len(), 2);
+        // request 1 has a 1-token budget: finishes at prefill
+        let (seq, done) = s.record_prefill(0, 7).unwrap().unwrap();
+        assert_eq!(seq, 0);
+        assert_eq!(done.id, 1);
+        assert_eq!(done.finish_reason, FinishReason::Length);
+        assert!(s.record_prefill(1, 8).unwrap().is_none());
+        // freed lane 0 is immediately backfillable
+        assert_eq!(s.plan_admissions(), vec![0]);
+    }
+
+    #[test]
+    fn stop_token_retires_lane() {
+        let mut s = sched();
+        s.submit(req(1, 8).with_stop_tokens(vec![42])).unwrap();
+        s.plan_admissions();
+        assert!(s.record_prefill(0, 5).unwrap().is_none());
+        let (_, done) = s.record_decode(0, 42).unwrap().unwrap();
+        assert_eq!(done.finish_reason, FinishReason::Stop);
+        assert_eq!(done.tokens, vec![5, 42]);
+        assert_eq!(s.active(), 0);
+    }
+
+    #[test]
+    fn gang_mode_waits_for_empty_pool() {
+        let mut s = Scheduler::new(2, 4, 12, true);
+        s.submit(req(1, 2)).unwrap();
+        s.submit(req(2, 2)).unwrap();
+        s.submit(req(3, 2)).unwrap();
+        assert_eq!(s.plan_admissions().len(), 2);
+        s.record_prefill(0, 1).unwrap();
+        s.record_prefill(1, 1).unwrap();
+        // one lane finishes; gang mode must NOT backfill yet
+        let done = s.record_decode(0, 1).unwrap();
+        assert!(done.is_some());
+        assert!(s.plan_admissions().is_empty());
+        let done = s.record_decode(1, 1).unwrap();
+        assert!(done.is_some());
+        assert_eq!(s.plan_admissions(), vec![0]);
+    }
+
+    #[test]
+    fn decode_steps_cover_exactly_active_lanes() {
+        let mut s = sched();
+        s.submit(req(1, 4)).unwrap();
+        s.submit(req(2, 4)).unwrap();
+        s.plan_admissions();
+        s.record_prefill(0, 1).unwrap();
+        s.record_prefill(1, 2).unwrap();
+        let steps = s.decode_steps();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].pos, 4);
+        assert_eq!(steps[0].token, 1);
+        s.record_decode(0, 9).unwrap();
+        let steps = s.decode_steps();
+        assert_eq!(steps[0].pos, 5);
+        assert_eq!(steps[0].token, 9);
+    }
+
+    #[test]
+    fn kv_exhaustion_forces_length_finish() {
+        // max_seq 6, prefill 4 → at most 2 generated tokens fit
+        let mut s = Scheduler::new(1, 4, 6, false);
+        s.submit(GenRequest::new(1, vec![0; 4], 2)).unwrap();
+        s.plan_admissions();
+        assert!(s.record_prefill(0, 1).unwrap().is_none());
+        let (_, done) = s.record_decode(0, 2).unwrap().unwrap();
+        assert_eq!(done.tokens.len(), 2);
+        assert_eq!(done.finish_reason, FinishReason::Length);
+    }
+
+    #[test]
+    fn abort_clears_everything() {
+        let mut s = sched();
+        s.submit(req(1, 4)).unwrap();
+        s.submit(req(2, 4)).unwrap();
+        s.submit(req(3, 4)).unwrap();
+        s.plan_admissions();
+        s.abort_all();
+        assert!(!s.has_work());
+        assert_eq!(s.queued(), 0);
+        assert_eq!(s.active(), 0);
+    }
+}

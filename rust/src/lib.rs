@@ -16,8 +16,10 @@
 //! * the **PJRT runtime** ([`runtime`]) that loads the AOT-compiled JAX /
 //!   Pallas artifacts (HLO text) and executes real quantized-model
 //!   numerics on CPU;
-//! * the **serving coordinator** ([`coordinator`]) — router, batcher,
-//!   prefill/decode scheduler, KV-cache manager, HMT segment driver;
+//! * the **serving coordinator** ([`coordinator`]) — router,
+//!   iteration-level continuous-batching scheduler, pluggable execution
+//!   backends (PJRT / mock / pipeline-sim-modeled), per-lane KV pool,
+//!   HMT segment driver;
 //! * the **evaluation harness** ([`eval`]) regenerating every table and
 //!   figure of the paper.
 

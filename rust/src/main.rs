@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! flexllm report [--table N] [--fig N] [--all] [--csv PATH] [--artifacts DIR]
-//! flexllm serve [--requests N] [--new-tokens N] [--artifacts DIR]
+//! flexllm serve [--requests N] [--new-tokens N] [--spread K] [--arrival-rate R]
+//!               [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
+//!               [--artifacts DIR]
 //! flexllm ablate [--artifacts DIR]
 //! flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
 //! flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
@@ -14,7 +16,8 @@ use anyhow::{anyhow, bail, Result};
 
 use flexllm::arch::{AcceleratorSystem, DecodeArch, PrefillArch};
 use flexllm::config::{DeviceConfig, ModelDims};
-use flexllm::coordinator::{GenRequest, Router};
+use flexllm::coordinator::{Engine, ExecBackend, GenRequest, GenResult, MockBackend,
+                           ModeledBackend, Router, ServeMetrics};
 use flexllm::eval;
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;
@@ -25,8 +28,17 @@ FlexLLM reproduction — stage-customized hybrid LLM accelerator design
 USAGE:
   flexllm report [--table N] [--fig N] [--all] [--csv PATH] [--artifacts DIR]
       Regenerate paper tables (1-6) and figures (1,2,6,7,8).
-  flexllm serve [--requests N] [--new-tokens N] [--artifacts DIR]
-      Serve batched generation requests through the AOT artifacts.
+  flexllm serve [--requests N] [--new-tokens N] [--spread K] [--arrival-rate R]
+                [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
+                [--artifacts DIR]
+      Serve generation requests through the iteration-level scheduler.
+      --spread K        skew budgets: request i gets ~new-tokens·(i%K+1)/K
+      --arrival-rate R  stagger submissions at R req/s (pjrt backend)
+      --stream          print every token as it is generated
+      --stop-token T    stop lanes early when token T is produced
+      --backend         pjrt (AOT artifacts, default), mock (deterministic,
+                        artifact-free) or modeled (mock tokens + pipeline-sim
+                        hardware clock of the paper's U280 decode design)
   flexllm ablate [--artifacts DIR]
       Run the Table V quantization ablation on the real artifacts.
   flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
@@ -107,12 +119,8 @@ fn main() -> Result<()> {
             report(&a)
         }
         "serve" => {
-            let a = Args::parse(rest, &[])?;
-            serve(
-                a.get_u64("requests", 8)? as usize,
-                a.get_u64("new-tokens", 32)? as usize,
-                &a.get_str("artifacts", "artifacts"),
-            )
+            let a = Args::parse(rest, &["stream"])?;
+            serve(&a)
         }
         "ablate" => {
             let a = Args::parse(rest, &[])?;
@@ -199,9 +207,87 @@ fn report(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn serve(n_requests: usize, new_tokens: usize, artifacts: &str) -> Result<()> {
-    let rt = Runtime::open(artifacts)?;
+/// Per-request generation budget under `--spread K` skew: request `i`
+/// gets roughly `new_tokens · (i % K + 1) / K` tokens, so a K=4 spread
+/// covers a 4× range — the workload where iteration-level scheduling
+/// beats max-aligned batching hardest.
+fn skewed_budget(i: usize, new_tokens: usize, spread: usize) -> usize {
+    if spread <= 1 {
+        return new_tokens.max(1);
+    }
+    (new_tokens * (i % spread + 1) / spread).max(1)
+}
+
+fn serve(a: &Args) -> Result<()> {
+    let n = a.get_u64("requests", 8)? as usize;
+    let new_tokens = a.get_u64("new-tokens", 32)? as usize;
+    let spread = a.get_u64("spread", 1)? as usize;
+    let stream = a.has("stream");
+    let stop: Vec<i32> = match a.get("stop-token") {
+        Some(v) => vec![v.parse().map_err(|_| anyhow!("--stop-token: bad token '{v}'"))?],
+        None => Vec::new(),
+    };
+    match a.get_str("backend", "pjrt").as_str() {
+        "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop),
+        "mock" => {
+            let mut engine = Engine::new(MockBackend::new(4, 128, 320, 512));
+            let results = drive_sim(&mut engine, n, new_tokens, spread, stream, &stop)?;
+            print_summary(&results, &engine.metrics, engine.lanes());
+            Ok(())
+        }
+        "modeled" => {
+            let mut engine = Engine::new(ModeledBackend::u280(4, 128, 320, 512));
+            let results = drive_sim(&mut engine, n, new_tokens, spread, stream, &stop)?;
+            print_summary(&results, &engine.metrics, engine.lanes());
+            let model_s = engine.backend.model_time_s;
+            let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
+            println!("  modeled U280 time: {}  ({:.1} tok/s on the paper's decode design)",
+                     fmt_secs(model_s), toks as f64 / model_s.max(1e-12));
+            Ok(())
+        }
+        other => bail!("unknown backend '{other}' (pjrt|mock|modeled)"),
+    }
+}
+
+/// Submit a synthetic workload and run the step loop inline (no engine
+/// thread needed for the artifact-free backends).
+fn drive_sim<B: ExecBackend>(engine: &mut Engine<B>, n: usize, new_tokens: usize,
+                             spread: usize, stream: bool, stop: &[i32])
+    -> Result<Vec<GenResult>>
+{
+    let s = engine.prefill_len();
+    for i in 0..n {
+        let prompt: Vec<i32> = (0..s).map(|j| ((i * 7 + j * 13) % 512) as i32).collect();
+        engine.submit(
+            GenRequest::new(i as u64, prompt, skewed_budget(i, new_tokens, spread))
+                .with_stop_tokens(stop.to_vec()),
+        )?;
+    }
+    let mut done = Vec::new();
+    while engine.has_work() {
+        let report = engine.step()?;
+        if stream {
+            for ev in &report.events {
+                println!("  [req {}] #{} tok {}{}", ev.id, ev.index, ev.token,
+                         if ev.done { "  <done>" } else { "" });
+            }
+        }
+        done.extend(report.completed);
+    }
+    done.sort_by_key(|(seq, _)| *seq);
+    Ok(done.into_iter().map(|(_, r)| r).collect())
+}
+
+fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool,
+              stop: Vec<i32>) -> Result<()> {
+    let artifacts = a.get_str("artifacts", "artifacts");
+    let arrival_rate: Option<f64> = match a.get("arrival-rate") {
+        Some(v) => Some(v.parse().map_err(|_| anyhow!("--arrival-rate: bad rate '{v}'"))?),
+        None => None,
+    };
+    let rt = Runtime::open(&artifacts)?;
     let s = rt.manifest.serving.prefill_len;
+    let lanes = rt.manifest.serving.batch;
     let bytes = std::fs::read(rt.dir().join("prompt_tokens.bin"))?;
     let toks: Vec<i32> = bytes
         .chunks_exact(4)
@@ -211,27 +297,67 @@ fn serve(n_requests: usize, new_tokens: usize, artifacts: &str) -> Result<()> {
     drop(rt);
 
     let router = Router::spawn(artifacts.to_string())?;
-    let queue: Vec<GenRequest> = (0..n_requests)
-        .map(|i| GenRequest {
-            id: i as u64,
-            prompt: base[i % base.len()].clone(),
-            max_new_tokens: new_tokens,
+    if stream {
+        let events = router.subscribe()?;
+        std::thread::spawn(move || {
+            while let Ok(ev) = events.recv() {
+                println!("  [req {}] #{} tok {}{}", ev.id, ev.index, ev.token,
+                         if ev.done { "  <done>" } else { "" });
+            }
+        });
+    }
+    let queue: Vec<GenRequest> = (0..n)
+        .map(|i| {
+            GenRequest::new(i as u64, base[i % base.len()].clone(),
+                            skewed_budget(i, new_tokens, spread))
+                .with_stop_tokens(stop.clone())
         })
         .collect();
 
     let t0 = std::time::Instant::now();
-    let results = router.generate(queue)?;
+    match arrival_rate {
+        // staggered arrivals: the engine steps between submissions and
+        // backfills freed lanes with the newly arrived requests
+        Some(rate) if rate > 0.0 => {
+            let gap = std::time::Duration::from_secs_f64(1.0 / rate);
+            let total = queue.len();
+            for (i, req) in queue.into_iter().enumerate() {
+                router.submit(vec![req])?;
+                if i + 1 < total {
+                    std::thread::sleep(gap);
+                }
+            }
+        }
+        _ => router.submit(queue)?,
+    }
+    let results = router.drain()?;
     let wall = t0.elapsed();
     let m = router.metrics()?;
-    println!("served {} requests in {}", results.len(), fmt_secs(wall.as_secs_f64()));
-    println!("  prefill: {} tok/s   decode: {:.1} tok/s   mean batch latency {}",
-             m.prefill_tps() as u64, m.decode_tps(),
-             fmt_secs(m.mean_batch_latency().as_secs_f64()));
+    print_summary(&results, &m, lanes);
+    println!("  wall time: {}", fmt_secs(wall.as_secs_f64()));
     for r in results.iter().take(2) {
         println!("  req {}: ttft {} first tokens {:?}",
                  r.id, fmt_secs(r.ttft.as_secs_f64()), &r.tokens[..r.tokens.len().min(8)]);
     }
     Ok(())
+}
+
+fn print_summary(results: &[GenResult], m: &ServeMetrics, lanes: usize) {
+    use flexllm::coordinator::FinishReason;
+    println!("served {} requests", results.len());
+    println!("  prefill: {:.0} tok/s ({} calls)   decode: {:.1} tok/s ({} iterations)",
+             m.prefill_tps(), m.prefill_calls, m.decode_tps(), m.iterations);
+    println!("  ttft p50/p95: {} / {}   tpot p50/p95: {} / {}",
+             fmt_secs(m.ttft_p50()), fmt_secs(m.ttft_p95()),
+             fmt_secs(m.tpot_p50()), fmt_secs(m.tpot_p95()));
+    println!("  lane utilization: {:.1}%  ({} lane-steps over {} iterations × {} lanes)",
+             m.lane_utilization(lanes) * 100.0, m.lane_steps, m.iterations, lanes);
+    let stopped = results.iter()
+        .filter(|r| r.finish_reason == FinishReason::Stop)
+        .count();
+    if stopped > 0 {
+        println!("  early stop: {stopped} requests hit a stop token");
+    }
 }
 
 fn dse(device: &str, stage: &str, prefill: u64, decode: u64) -> Result<()> {

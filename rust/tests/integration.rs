@@ -26,7 +26,8 @@ fn artifact_dir() -> String {
 fn manifest_lists_all_artifacts() {
     let rt = runtime();
     let names = rt.artifact_names();
-    for expected in ["prefill_serve_q3", "decode_step_q3", "hmt_memattn", "hmt_summary",
+    for expected in ["prefill_serve_q3", "decode_step_q3", "decode_lanes_q3",
+                     "hmt_memattn", "hmt_summary",
                      "kernel_smoke", "ppl_noquant", "ppl_q0", "ppl_q1", "ppl_q2", "ppl_q3"] {
         assert!(names.iter().any(|n| n == expected), "missing artifact {expected}");
     }
@@ -95,15 +96,15 @@ fn quantized_ppl_ordering() {
 }
 
 #[test]
-fn serving_deterministic_across_batches() {
-    // same prompt in two different batches must produce identical tokens
-    // (stateless artifacts + greedy decoding)
+fn serving_deterministic_across_pool_occupancies() {
+    // same prompt served alone and alongside a neighbour must produce
+    // identical tokens (row-independent artifacts + greedy decoding)
     let rt = runtime();
     let s = rt.manifest.serving.prefill_len;
     drop(rt);
-    let mut engine = Engine::new(runtime());
+    let mut engine = Engine::pjrt(runtime());
     let prompt: Vec<i32> = (0..s as i32).map(|i| (i * 7 + 3) % 512).collect();
-    let mk = |id| GenRequest { id, prompt: prompt.clone(), max_new_tokens: 6 };
+    let mk = |id| GenRequest::new(id, prompt.clone(), 6);
     let r1 = engine.serve(&[mk(1)]).unwrap();
     let r2 = engine.serve(&[mk(2), mk(3)]).unwrap();
     assert_eq!(r1[0].tokens, r2[0].tokens);
@@ -113,19 +114,71 @@ fn serving_deterministic_across_batches() {
 
 #[test]
 fn serving_metrics_accumulate() {
-    let mut engine = Engine::new(runtime());
-    let s = engine.batcher.prefill_len;
+    let mut engine = Engine::pjrt(runtime());
+    let s = engine.prefill_len();
     let prompt = vec![1i32; s];
     let q: Vec<GenRequest> = (0..2)
-        .map(|id| GenRequest { id, prompt: prompt.clone(), max_new_tokens: 3 })
+        .map(|id| GenRequest::new(id, prompt.clone(), 3))
         .collect();
     engine.serve(&q).unwrap();
     let m = engine.metrics.clone();
     assert_eq!(m.requests, 2);
-    assert_eq!(m.batches, 1);
+    assert_eq!(m.prefill_calls, 1);
     assert_eq!(m.tokens_generated, 6);
+    assert_eq!(m.ttft_s.len(), 2);
+    assert_eq!(m.tpot_s.len(), 2);
     assert!(m.decode_tps() > 0.0);
     assert!(m.prefill_tps() > 0.0);
+}
+
+#[test]
+fn serving_stop_token_ends_lane_early() {
+    let mut engine = Engine::pjrt(runtime());
+    let s = engine.prefill_len();
+    let prompt: Vec<i32> = (0..s as i32).map(|i| (i * 5 + 1) % 512).collect();
+    // discover the deterministic greedy stream, then stop on its 3rd token
+    let free = engine.serve(&[GenRequest::new(1, prompt.clone(), 8)]).unwrap();
+    assert_eq!(free[0].finish_reason, flexllm::coordinator::FinishReason::Length);
+    let stop = free[0].tokens[2];
+    let first_hit = free[0].tokens.iter().position(|&t| t == stop).unwrap();
+    let stopped = engine
+        .serve(&[GenRequest::new(2, prompt.clone(), 8).with_stop_tokens(vec![stop])])
+        .unwrap();
+    assert_eq!(stopped[0].finish_reason, flexllm::coordinator::FinishReason::Stop);
+    assert_eq!(stopped[0].tokens, &free[0].tokens[..first_hit + 1]);
+}
+
+#[test]
+fn skewed_queue_backfills_and_matches_uniform_streams() {
+    // 2 pool-fulls with a 4× budget spread: freed lanes are backfilled
+    // mid-flight, the decode-slot bill is exact, and every request's
+    // stream equals its same-prompt run from a uniform queue
+    let mut engine = Engine::pjrt(runtime());
+    let s = engine.prefill_len();
+    let lanes = engine.lanes();
+    let mk_prompt = |i: usize| -> Vec<i32> {
+        (0..s as i32).map(|j| (j * 3 + i as i32 * 17 + 2) % 512).collect()
+    };
+    let budgets: Vec<usize> = (0..2 * lanes).map(|i| 2 * (i % 4 + 1)).collect();
+    let queue: Vec<GenRequest> = budgets
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| GenRequest::new(i as u64, mk_prompt(i), b))
+        .collect();
+    let results = engine.serve(&queue).unwrap();
+    assert_eq!(results.len(), queue.len());
+    let exact: usize = budgets.iter().map(|b| b - 1).sum();
+    assert_eq!(engine.metrics.lane_steps, exact,
+               "continuous scheduler spent decode slots on finished lanes");
+    // streams are independent of scheduling: re-serve two of the prompts
+    // alone with the same budgets and compare
+    for &i in &[1usize, 2 * lanes - 1] {
+        let solo = engine
+            .serve(&[GenRequest::new(99, mk_prompt(i), budgets[i])])
+            .unwrap();
+        assert_eq!(solo[0].tokens, results[i].tokens,
+                   "request {i} stream changed under continuous batching");
+    }
 }
 
 #[test]
@@ -134,7 +187,7 @@ fn router_thread_roundtrip() {
     let rt = runtime();
     let s = rt.manifest.serving.prefill_len;
     drop(rt);
-    let q = vec![GenRequest { id: 9, prompt: vec![2i32; s], max_new_tokens: 2 }];
+    let q = vec![GenRequest::new(9, vec![2i32; s], 2)];
     let results = router.generate(q).unwrap();
     assert_eq!(results.len(), 1);
     assert_eq!(results[0].id, 9);
@@ -146,14 +199,37 @@ fn router_thread_roundtrip() {
 #[test]
 fn router_rejects_bad_prompt() {
     let router = Router::spawn(artifact_dir()).unwrap();
-    let q = vec![GenRequest { id: 0, prompt: vec![0i32; 3], max_new_tokens: 2 }];
+    let q = vec![GenRequest::new(0, vec![0i32; 3], 2)];
     assert!(router.generate(q).is_err());
     // the engine thread must survive the error
     let rt = runtime();
     let s = rt.manifest.serving.prefill_len;
     drop(rt);
-    let ok = vec![GenRequest { id: 1, prompt: vec![0i32; s], max_new_tokens: 1 }];
+    let ok = vec![GenRequest::new(1, vec![0i32; s], 1)];
     assert!(router.generate(ok).is_ok());
+}
+
+#[test]
+fn router_submit_drain_and_stream() {
+    let router = Router::spawn(artifact_dir()).unwrap();
+    let rt = runtime();
+    let s = rt.manifest.serving.prefill_len;
+    drop(rt);
+    let events = router.subscribe().unwrap();
+    let mk = |id: u64, n: usize| GenRequest::new(id, vec![(id as i32 * 3 + 1) % 512; s], n);
+    // two submissions land mid-flight relative to each other
+    router.submit(vec![mk(1, 4), mk(2, 2)]).unwrap();
+    router.submit(vec![mk(3, 1)]).unwrap();
+    let results = router.drain().unwrap();
+    assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+    let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+    assert_eq!(total_tokens, 4 + 2 + 1);
+    // the stream saw every token, ending with each request's done marker
+    let seen: Vec<_> = events.try_iter().collect();
+    assert_eq!(seen.len(), total_tokens);
+    assert_eq!(seen.iter().filter(|e| e.done).count(), 3);
+    // a second drain with nothing new is empty
+    assert!(router.drain().unwrap().is_empty());
 }
 
 #[test]

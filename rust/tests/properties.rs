@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use flexllm::arch::{DecodeArch, DecodeConfig, PrefillArch, PrefillConfig};
 use flexllm::config::{DeviceConfig, ModelDims, Precision};
-use flexllm::coordinator::{Batcher, GenRequest};
+use flexllm::coordinator::{GenRequest, Scheduler};
 use flexllm::hls::{
     simulate, DataflowGraph, DecodeLinear, Dependency, ModuleTemplate, PrefillLinear,
     StreamEdge,
@@ -14,78 +14,64 @@ use flexllm::util::json::Json;
 use flexllm::util::prop::{forall, Rng};
 
 // ---------------------------------------------------------------------------
-// Batcher invariants (routing/batching state)
+// Scheduler invariants (admission / lane-pool state; end-to-end
+// scheduler-vs-backend properties live in tests/scheduler.rs)
 // ---------------------------------------------------------------------------
 
 #[test]
-fn prop_batcher_covers_every_request_exactly_once() {
-    forall("batcher coverage", 200, |rng| {
-        let batch_size = rng.usize_in(1, 8);
+fn prop_scheduler_admissions_respect_pool_and_order() {
+    forall("scheduler admission", 200, |rng| {
+        let lanes = rng.usize_in(1, 8);
         let prefill = rng.usize_in(4, 64);
         let max_seq = prefill + rng.usize_in(8, 128);
-        let b = Batcher::new(batch_size, prefill, max_seq);
+        let mut s = Scheduler::new(lanes, prefill, max_seq, false);
         let n = rng.usize_in(0, 30);
-        let queue: Vec<GenRequest> = (0..n)
-            .map(|i| GenRequest {
-                id: i as u64,
-                prompt: vec![0; prefill],
-                max_new_tokens: rng.usize_in(1, max_seq - prefill),
-            })
-            .collect();
-        let batches = b.plan(&queue).map_err(|e| e.to_string())?;
-        // every batch exactly batch_size lanes
-        for batch in &batches {
-            if batch.requests.len() != batch_size || batch.padding.len() != batch_size {
-                return Err("batch not full-size".into());
-            }
-            // aligned length within cache capacity
-            if prefill + batch.new_tokens > max_seq {
-                return Err("aligned new_tokens overflows max_seq".into());
+        for i in 0..n {
+            s.submit(GenRequest::new(i as u64, vec![0; prefill],
+                                     rng.usize_in(1, max_seq - prefill)))
+                .map_err(|e| e.to_string())?;
+        }
+        let admitted = s.plan_admissions();
+        // admission fills min(free, queued) lanes, lowest lane first
+        if admitted.len() != lanes.min(n) {
+            return Err(format!("admitted {} of {n} with {lanes} lanes", admitted.len()));
+        }
+        if admitted.iter().enumerate().any(|(i, &l)| i != l) {
+            return Err(format!("non-contiguous admission {admitted:?}"));
+        }
+        // admitted requests keep queue order and every lane starts at the
+        // prefill boundary with full decode headroom
+        for (i, &lane) in admitted.iter().enumerate() {
+            if s.prompt_owner(lane) != i as u64 {
+                return Err(format!("lane {lane} got request {}", s.prompt_owner(lane)));
             }
         }
-        // real (non-padding) ids = original queue, in order, exactly once
-        let real: Vec<u64> = batches
-            .iter()
-            .flat_map(|b| {
-                b.requests
-                    .iter()
-                    .zip(&b.padding)
-                    .filter(|(_, &pad)| !pad)
-                    .map(|(r, _)| r.id)
-            })
-            .collect();
-        let want: Vec<u64> = (0..n as u64).collect();
-        if real != want {
-            return Err(format!("coverage mismatch: {real:?}"));
+        if s.active() + s.queued() != n {
+            return Err(format!("{} active + {} queued != {n}", s.active(), s.queued()));
         }
-        // aligned new_tokens ≥ every real lane's request
-        for batch in &batches {
-            let max_real = batch
-                .requests
-                .iter()
-                .zip(&batch.padding)
-                .filter(|(_, &p)| !p)
-                .map(|(r, _)| r.max_new_tokens)
-                .max()
-                .unwrap_or(0);
-            if batch.new_tokens != max_real {
-                return Err("new_tokens != max over real lanes".into());
-            }
+        // a second planning pass with a full pool admits nothing
+        if n >= lanes && !s.plan_admissions().is_empty() {
+            return Err("admitted into a full pool".into());
         }
         Ok(())
     });
 }
 
 #[test]
-fn prop_batcher_rejects_invalid() {
-    forall("batcher validation", 100, |rng| {
-        let b = Batcher::new(4, 32, 64);
+fn prop_scheduler_rejects_invalid() {
+    forall("scheduler validation", 100, |rng| {
+        let s = Scheduler::new(4, 32, 64, false);
         // wrong prompt length
         let wrong_len = rng.usize_in(0, 64);
-        let r = GenRequest { id: 0, prompt: vec![0; wrong_len], max_new_tokens: 4 };
+        let r = GenRequest::new(0, vec![0; wrong_len], 4);
         let should_fail = wrong_len != 32;
-        if b.plan(std::slice::from_ref(&r)).is_err() != should_fail {
+        if s.validate(&r).is_err() != should_fail {
             return Err(format!("validation wrong for len {wrong_len}"));
+        }
+        // over-budget generation never validates
+        let r = GenRequest::new(0, vec![0; 32], rng.usize_in(33, 128));
+        if s.validate(&r).is_ok() {
+            return Err("accepted a budget that overflows the KV cache".into());
         }
         Ok(())
     });
