@@ -1,0 +1,58 @@
+//! Arrival-rate harness: latency under bursty load, Blocking vs Chunked
+//! prefill, on the U280-modeled backend (ROADMAP's latency-throughput
+//! curve item — a paper Fig. 7 analog under load, virtual time, no
+//! artifacts).
+//!
+//! Sweeps burst intensity (requests per burst against a fixed 4-lane
+//! pool) and emits one JSON document with p50/p95 TTFT and TPOT per
+//! (policy, load) point. The `scheduler-sim` CI job uploads the file as
+//! a workflow artifact so the perf trajectory is tracked per PR; the
+//! default-workload point is the same run the tier-1 acceptance test
+//! (`tests/chunked_prefill.rs`) gates on, so the tracked number and the
+//! gated number cannot drift apart.
+//!
+//! Output: `arrival_rate.json` in the working directory (override with
+//! the `ARRIVAL_RATE_OUT` environment variable), also echoed to stdout.
+
+use flexllm::coordinator::{run_open_loop, OpenLoopConfig, PrefillPolicy};
+
+/// One load point: `requests` spread over `bursts`.
+const SWEEP: &[(usize, usize)] = &[(8, 2), (16, 2), (24, 3), (32, 4)];
+const CHUNK_LENS: &[usize] = &[16, 32, 64];
+
+fn main() {
+    let mut entries: Vec<String> = Vec::new();
+
+    for &(requests, bursts) in SWEEP {
+        let cfg = OpenLoopConfig { requests, bursts, ..OpenLoopConfig::default() };
+        let blocking = run_open_loop(PrefillPolicy::Blocking, &cfg)
+            .expect("blocking open loop");
+        entries.push(format!(
+            "{{\"requests\": {requests}, \"bursts\": {bursts}, \"stats\": {}}}",
+            blocking.to_json()));
+        for &chunk in CHUNK_LENS {
+            let chunked = run_open_loop(PrefillPolicy::chunked(chunk), &cfg)
+                .expect("chunked open loop");
+            let gain = blocking.ttft_p95_s / chunked.ttft_p95_s.max(1e-12);
+            entries.push(format!(
+                "{{\"requests\": {requests}, \"bursts\": {bursts}, \
+                 \"ttft_p95_gain_vs_blocking\": {gain:.3}, \"stats\": {}}}",
+                chunked.to_json()));
+            println!(
+                "load {requests}req/{bursts}bursts chunk {chunk:>3}: \
+                 p95 TTFT {:.3}s vs blocking {:.3}s ({gain:.2}x) | \
+                 p95 TPOT {:.4}s vs {:.4}s",
+                chunked.ttft_p95_s, blocking.ttft_p95_s,
+                chunked.tpot_p95_s, blocking.tpot_p95_s);
+        }
+    }
+
+    let doc = format!(
+        "{{\"bench\": \"arrival_rate\", \"backend\": \"modeled-u280\", \
+         \"points\": [{}]}}\n",
+        entries.join(", "));
+    let out = std::env::var("ARRIVAL_RATE_OUT")
+        .unwrap_or_else(|_| "arrival_rate.json".to_string());
+    std::fs::write(&out, &doc).expect("write arrival_rate.json");
+    println!("\nwrote {} sweep points to {out}", entries.len());
+}

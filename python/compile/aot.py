@@ -11,6 +11,9 @@ Outputs (``artifacts/``):
 
 * ``ppl_<scheme>.hlo.txt``       — Table V ablation graphs (5 schemes)
 * ``prefill_serve_q3.hlo.txt``   — serving prefill (logits + KV cache)
+* ``prefill_chunk_q3.hlo.txt``   — chunked prefill (a fixed-width prompt
+  slice per lane at per-lane start positions; lets the Rust scheduler
+  interleave admission prefill with decode iterations)
 * ``decode_step_q3.hlo.txt``     — serving decode step (aligned batch)
 * ``decode_lanes_q3.hlo.txt``    — continuous-batching decode step
   (per-lane cache positions, consumed by the Rust scheduler's backfill)
@@ -39,14 +42,18 @@ from jax._src.lib import xla_client as xc
 
 from . import corpus
 from .model import (ModelConfig, decode_step, decode_step_lanes, hmt_memattn,
-                    llama32_1b, prefill_logits, prefill_serve, summary_embedding,
-                    tiny)
+                    llama32_1b, prefill_chunk, prefill_logits, prefill_serve,
+                    summary_embedding, tiny)
 from .quantize import SCHEMES, prepare
 from .train_tiny import eval_ppl_fp, train
 
 # Serving shapes (fixed at AOT time; the coordinator pads to these)
 SERVE_BATCH = 4
 SERVE_PREFILL = 128
+# chunked-prefill slice width; must divide SERVE_PREFILL so every prompt
+# is a whole number of fixed-shape chunk invocations
+SERVE_CHUNK = 32
+assert SERVE_PREFILL % SERVE_CHUNK == 0
 HMT_BATCH = 1
 HMT_MEMORIES = 16
 EVAL_BATCHES = 6
@@ -173,6 +180,7 @@ def main() -> None:
     serve_tok = jax.ShapeDtypeStruct((SERVE_BATCH, SERVE_PREFILL), jnp.int32)
     cache_shape = (cfg.n_layers, SERVE_BATCH, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
     manifest["serving"] = {"batch": SERVE_BATCH, "prefill_len": SERVE_PREFILL,
+                           "prefill_chunk": SERVE_CHUNK,
                            "cache_shape": list(cache_shape)}
 
     fn_pre = functools.partial(prefill_serve, qp_q3, cfg, scheme_q3)
@@ -211,11 +219,45 @@ def main() -> None:
          tensor("k_cache", "f32", cache_shape),
          tensor("v_cache", "f32", cache_shape)])
 
+    # chunked prefill: the coordinator feeds each admitted lane its prompt
+    # one SERVE_CHUNK slice at a time, interleaved with decode iterations,
+    # instead of blocking on a whole-pool prefill invocation
+    fn_chunk = functools.partial(prefill_chunk, qp_q3, cfg, scheme_q3)
+    chunk_specs = [jax.ShapeDtypeStruct((SERVE_BATCH, SERVE_CHUNK), jnp.int32),
+                   jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                   jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+                   jax.ShapeDtypeStruct(cache_shape, jnp.float32)]
+    manifest["artifacts"]["prefill_chunk_q3"] = dump(
+        fn_chunk, chunk_specs, out / "prefill_chunk_q3.hlo.txt",
+        [tensor("tokens", "i32", (SERVE_BATCH, SERVE_CHUNK)),
+         tensor("pos", "i32", (SERVE_BATCH,)),
+         tensor("k_cache", "f32", cache_shape), tensor("v_cache", "f32", cache_shape)],
+        [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
+         tensor("k_cache", "f32", cache_shape),
+         tensor("v_cache", "f32", cache_shape)])
+
     # -------------------------------------------- greedy generation reference
     print("computing greedy generation reference (q3, 32 steps)")
     pre = jax.jit(fn_pre)
     dec = jax.jit(fn_dec)
     logits, kc, vc = pre(jnp.asarray(prompts))
+
+    # build-time cross-check: chunked admission must reproduce the one-shot
+    # prefill greedily (same first token per lane); reuses the `pre` logits
+    # just computed so prefill_serve is traced/compiled only once
+    chunk_run = jax.jit(fn_chunk)
+    kc0 = jnp.zeros(cache_shape, jnp.float32)
+    vc0 = jnp.zeros(cache_shape, jnp.float32)
+    chunk_logits = None
+    for start in range(0, SERVE_PREFILL, SERVE_CHUNK):
+        posv = jnp.full((SERVE_BATCH,), start, jnp.int32)
+        chunk_logits, kc0, vc0 = chunk_run(
+            jnp.asarray(prompts[:, start:start + SERVE_CHUNK]), posv, kc0, vc0)
+    agree = int(jnp.sum(jnp.argmax(chunk_logits, -1) == jnp.argmax(logits, -1)))
+    print(f"chunked-prefill cross-check: {agree}/{SERVE_BATCH} lanes agree "
+          "with prefill_serve argmax")
+    if agree < SERVE_BATCH:
+        print("  WARNING: chunked/one-shot argmax mismatch (fp tie-breaking?)")
     toks = [np.asarray(jnp.argmax(logits, -1), np.int32)]
     for step in range(32):
         pos = jnp.int32(SERVE_PREFILL + step)

@@ -17,6 +17,10 @@ Three exported graphs (each AOT-lowered by ``aot.py``):
   read/update (serving decode stage, position-aligned batch).
 * :func:`decode_step_lanes` — the continuous-batching variant: per-lane
   cache positions so the coordinator can backfill freed lanes mid-flight.
+* :func:`prefill_chunk`  — position-offset chunked prefill: a C-token
+  slice of a prompt lands in a lane's cache at its own start offset, so
+  the coordinator can interleave prompt chunks with decode iterations
+  (decode-overlapped admission) instead of blocking on whole prompts.
 * :func:`hmt_memattn`    — the HMT plug-in's memory cross-attention
   (Case Study 2), built by reusing the backbone's layer-0 attention
   weights — mirroring the paper's "reuse existing linear and attention
@@ -539,6 +543,116 @@ def decode_step_lanes(qparams, cfg: ModelConfig, scheme: QuantScheme, token, pos
         x = x + _linear(lp["wd"], act, scheme, cfg, "decode")
 
     logits = _lm_head(qparams, cfg, scheme, x, "decode")
+    return logits, k_cache, v_cache
+
+
+def prefill_chunk(qparams, cfg: ModelConfig, scheme: QuantScheme, tokens, pos,
+                  k_cache, v_cache):
+    """A C-token prefill chunk per lane at PER-LANE start positions.
+
+    tokens [B, C] i32 (each lane's next prompt slice), pos [B] i32 (the
+    cache position the slice starts at), caches [L,B,KV,max_seq,hd].
+    Position j of lane bi lands at cache position ``pos[bi] + j``, with
+    RoPE angles and visibility masks offset accordingly, and attends to
+    everything the lane's cache already holds (earlier chunks) plus the
+    causal prefix of its own chunk — so running ceil(S/C) chunks is
+    numerically the :func:`prefill_serve` pipeline, sliced.
+
+    Returns (logits [B, V] of each lane's LAST chunk token, k', v'): the
+    coordinator samples the first generated token from the final chunk
+    and ignores the logits of earlier chunks. Lanes not being prefilled
+    are given a harmless in-range ``pos``; the Rust backend discards
+    their cache rows when merging (same contract as the idle lanes of
+    ``decode_step_lanes``).
+    """
+    b, c = tokens.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = nh // nkv
+    params = qparams.get("params", qparams)
+    layers = params["layers"]
+    calib = qparams["calib"]
+
+    x = params["embed"][tokens].reshape(b * c, cfg.d_model)
+    # per-lane chunk positions pos[bi] + j and their RoPE tables
+    chunk_pos = pos[:, None] + jnp.arange(c)[None, :]                 # [B, C]
+    cos_f, sin_f = rope_angles(chunk_pos.reshape(-1).astype(jnp.float32), hd,
+                               cfg.rope_theta)                        # [B*C, hd/2]
+    cos_l = cos_f.reshape(b, c, hd // 2)
+    sin_l = sin_f.reshape(b, c, hd // 2)
+    cos_q = jnp.repeat(cos_l, nh, axis=0)                             # [B*H, C, hd/2]
+    sin_q = jnp.repeat(sin_l, nh, axis=0)
+    cos_k = jnp.repeat(cos_l, nkv, axis=0)                            # [B*KV, C, hd/2]
+    sin_k = jnp.repeat(sin_l, nkv, axis=0)
+    # chunk row j of lane bi sees cache positions <= pos[bi] + j
+    positions = jnp.arange(cfg.max_seq)
+    lane_mask = jnp.where(positions[None, None, :] <= chunk_pos[:, :, None],
+                          0.0, NEG_INF)                               # [B, C, max_seq]
+    chunk_mask = jnp.broadcast_to(
+        lane_mask[:, None, None, :, :], (b, nkv, rep, c, cfg.max_seq)
+    ).reshape(b * nkv, rep * c, cfg.max_seq)                          # per program
+
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"], b * c)
+        q = _linear(lp["wq"], h, scheme, cfg, "decode")
+        k = _linear(lp["wk"], h, scheme, cfg, "decode")
+        v = _linear(lp["wv"], h, scheme, cfg, "decode")
+        # [B*C, H*hd] → [B*H, C, hd] for the head-parallel kernels
+        q = q.reshape(b, c, nh, hd).transpose(0, 2, 1, 3).reshape(b * nh, c, hd)
+        k = k.reshape(b, c, nkv, hd).transpose(0, 2, 1, 3).reshape(b * nkv, c, hd)
+        v = v.reshape(b, c, nkv, hd).transpose(0, 2, 1, 3).reshape(b * nkv, c, hd)
+        q = rope(q, cos_q, sin_q)
+        k = rope(k, cos_k, sin_k)
+
+        if scheme.attn_mode == "sta8":
+            sq, sk, sv = _attn_scales(calib[li])
+            kq = quantize_static(k.reshape(-1, hd), sk, 0.0, 8, True).reshape(k.shape)
+            vq = quantize_static(v.reshape(-1, hd), sv, 0.0, 8, True).reshape(v.shape)
+        elif scheme.attn_mode == "fp":
+            sq = sk = sv = None
+            kq, vq = k, v
+        else:
+            raise NotImplementedError(
+                f"prefill_chunk supports sta8/fp schemes, not {scheme.attn_mode}")
+
+        # per-lane cache update at [li, bi, :, pos[bi]..pos[bi]+C, :]
+        update_lanes = jax.vmap(
+            lambda cb, u, p: jax.lax.dynamic_update_slice(cb, u, (0, p, 0)))
+        knew = kq.reshape(b, nkv, c, hd)
+        vnew = vq.reshape(b, nkv, c, hd)
+        k_cache = k_cache.at[li].set(update_lanes(k_cache[li], knew, pos))
+        v_cache = v_cache.at[li].set(update_lanes(v_cache[li], vnew, pos))
+
+        # attention over the whole cache row (earlier chunks + this one);
+        # unfilled positions are masked by chunk_mask
+        kall = k_cache[li].reshape(b * nkv, cfg.max_seq, hd)
+        vall = v_cache[li].reshape(b * nkv, cfg.max_seq, hd)
+
+        def group_q(t):   # [B*H, C, hd] → [B*KV, rep*C, hd]
+            return t.reshape(b, nkv, rep, c, hd).reshape(b * nkv, rep * c, hd)
+
+        def ungroup(t):   # inverse of group_q
+            return t.reshape(b, nkv, rep, c, hd).reshape(b * nh, c, hd)
+
+        if scheme.attn_mode == "sta8":
+            qq = quantize_static(q.reshape(-1, hd), sq, 0.0, 8, True).reshape(q.shape)
+            attn = ungroup(attention_int8(group_q(qq), kall, vall, chunk_mask,
+                                          sq, sk, sv))
+        else:
+            attn = ungroup(attention_fp(group_q(q), kall, vall, chunk_mask))
+
+        attn = attn.reshape(b, nh, c, hd).transpose(0, 2, 1, 3).reshape(b * c, nh * hd)
+        x = x + _linear(lp["wo"], attn, scheme, cfg, "decode")
+
+        hf = rmsnorm(x, lp["ffn_norm"], b * c)
+        gate = _linear(lp["wg"], hf, scheme, cfg, "decode")
+        up = _linear(lp["wu"], hf, scheme, cfg, "decode")
+        act = swiglu(gate, up, b * c)
+        if scheme.fht_down:
+            act = fht(act, b * c)
+        x = x + _linear(lp["wd"], act, scheme, cfg, "decode")
+
+    last = x.reshape(b, c, cfg.d_model)[:, -1, :]
+    logits = _lm_head(qparams, cfg, scheme, last, "decode")
     return logits, k_cache, v_cache
 
 

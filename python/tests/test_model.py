@@ -14,6 +14,7 @@ from compile.model import (
     forward_fp,
     hmt_memattn,
     init_params,
+    prefill_chunk,
     prefill_logits,
     prefill_serve,
 )
@@ -172,6 +173,69 @@ def test_decode_step_lanes_per_lane_positions(setup, q3):
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(kg[:, 1]), np.asarray(kb2[:, 0]),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_chunk_matches_prefill_serve(setup, q3):
+    """Chunked prefill is the serve prefill, sliced: running the prompt
+    through position-offset chunks must land the same cache contents and
+    the same last-token logits as the one-shot prefill_serve graph."""
+    cfg, _, _ = setup
+    scheme = SCHEMES["q3"]
+    tokens = jax.random.randint(jax.random.PRNGKey(17), (2, 8), 0, cfg.vocab)
+    want, kw, vw = prefill_serve(q3, cfg, scheme, tokens)
+
+    cache_shape = (cfg.n_layers, 2, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    kc = jnp.zeros(cache_shape, jnp.float32)
+    vc = jnp.zeros(cache_shape, jnp.float32)
+    got = None
+    for start in (0, 4):  # two aligned 4-token chunks
+        pos = jnp.full((2,), start, jnp.int32)
+        got, kc, vc = prefill_chunk(q3, cfg, scheme, tokens[:, start:start + 4],
+                                    pos, kc, vc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(kc), np.asarray(kw), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(vc), np.asarray(vw), rtol=1e-4, atol=1e-4)
+    # greedy first token agrees between the two admission paths
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(want, -1)))
+
+
+def test_prefill_chunk_uneven_and_offset_lanes(setup, q3):
+    """Chunks need not be aligned or uniform: a 5+3 split must agree with
+    the 4+4 split (same prompt, same final cache), and lanes prefilling at
+    different offsets must not disturb each other's rows."""
+    cfg, _, _ = setup
+    scheme = SCHEMES["q3"]
+    tokens = jax.random.randint(jax.random.PRNGKey(18), (2, 8), 0, cfg.vocab)
+    cache_shape = (cfg.n_layers, 2, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+
+    def run(splits):
+        kc = jnp.zeros(cache_shape, jnp.float32)
+        vc = jnp.zeros(cache_shape, jnp.float32)
+        start, logits = 0, None
+        for width in splits:
+            pos = jnp.full((2,), start, jnp.int32)
+            logits, kc, vc = prefill_chunk(
+                q3, cfg, scheme, tokens[:, start:start + width], pos, kc, vc)
+            start += width
+        return logits, kc, vc
+
+    la, ka, va = run((4, 4))
+    lb, kb, vb = run((5, 3))
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(ka), np.asarray(kb), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vb), rtol=1e-4, atol=1e-4)
+    # offset lanes: lane 0 writes its chunk at position 4 while lane 1 is
+    # still at 0 — lane 1's rows beyond its own chunk stay untouched
+    kc = jnp.zeros(cache_shape, jnp.float32)
+    vc = jnp.zeros(cache_shape, jnp.float32)
+    pos = jnp.asarray([4, 0], jnp.int32)
+    _, kc, vc = prefill_chunk(q3, cfg, scheme, tokens[:, :4], pos, kc, vc)
+    np.testing.assert_array_equal(np.asarray(kc[:, 0, :, :4, :]), 0.0)
+    assert float(jnp.max(jnp.abs(kc[:, 0, :, 4:8, :]))) > 0.0
+    np.testing.assert_array_equal(np.asarray(kc[:, 1, :, 4:, :]), 0.0)
+    assert float(jnp.max(jnp.abs(kc[:, 1, :, :4, :]))) > 0.0
 
 
 def test_hmt_memattn_shapes_and_effect(setup):

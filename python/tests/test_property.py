@@ -8,6 +8,12 @@ the pure-jnp oracles in ref.py — the paper's template-parameter surface
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# hypothesis is NOT part of the pinned CI toolchain
+# (python/requirements-ci.txt); these sweeps are a local-dev extra and the
+# whole module skips cleanly where the dependency is absent.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import (

@@ -81,10 +81,26 @@ impl PrefillArch {
 
     /// Stall-aware latency from the dataflow simulator, seconds.
     pub fn simulated_latency_s(&self, l_p: u64) -> f64 {
-        let r = self.simulate(l_p);
-        (r.makespan_cycles * self.model.n_layers as f64
-            + self.model.d_model as f64 * self.model.vocab as f64 / self.cfg.wp_ffn as f64)
-            / self.freq_hz
+        self.simulated_chunk_latency_s(l_p, l_p, true)
+    }
+
+    /// Stall-aware latency of streaming `tokens` prompt tokens through
+    /// the pipeline with the attention engines sized for context `ctx`
+    /// (the chunk's end position), seconds. `with_lm_head` adds the
+    /// final-token lm_head pass on the FFN engine — only the chunk that
+    /// completes a prompt samples a token, so intermediate chunks skip
+    /// it. `simulated_latency_s(l_p)` is the whole-prompt special case.
+    pub fn simulated_chunk_latency_s(&self, tokens: u64, ctx: u64, with_lm_head: bool)
+        -> f64
+    {
+        let graph = build_graph(&self.cfg, &self.model, ctx.max(1));
+        let r = simulate(&graph, tokens.max(1), &[]);
+        let lm_head = if with_lm_head {
+            self.model.d_model as f64 * self.model.vocab as f64 / self.cfg.wp_ffn as f64
+        } else {
+            0.0
+        };
+        (r.makespan_cycles * self.model.n_layers as f64 + lm_head) / self.freq_hz
     }
 
     /// Simulate one decoder layer over `l_p` tokens.
@@ -236,6 +252,22 @@ mod tests {
         let ana = a.analytic_latency_s(512);
         let ratio = sim / ana;
         assert!(ratio > 0.7 && ratio < 1.6, "sim/analytic = {ratio}");
+    }
+
+    #[test]
+    fn chunk_latency_is_proportional_with_fill_overhead() {
+        // a chunk costs its share of the prompt plus the pipeline-fill
+        // transient; four 32-token chunks therefore cost at least the
+        // 128-token prompt but within ~2x of it
+        let a = u280_arch();
+        let full = a.simulated_chunk_latency_s(128, 128, true);
+        let chunks = 3.0 * a.simulated_chunk_latency_s(32, 128, false)
+            + a.simulated_chunk_latency_s(32, 128, true);
+        assert!(chunks >= full * 0.99, "chunks {chunks} < full {full}");
+        assert!(chunks < full * 2.0, "chunk overhead blew up: {chunks} vs {full}");
+        // lm_head only charged when asked
+        assert!(a.simulated_chunk_latency_s(32, 128, true)
+                > a.simulated_chunk_latency_s(32, 128, false));
     }
 
     #[test]

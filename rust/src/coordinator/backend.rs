@@ -1,17 +1,25 @@
 //! Execution backends: the scheduler's hardware abstraction (DESIGN.md §7).
 //!
-//! The iteration-level scheduler only needs two operations — "prefill a
-//! prompt into a lane" and "run one decode iteration across these lanes"
-//! — so that pair is the [`ExecBackend`] trait. Three implementations:
+//! The iteration-level scheduler needs three operations — "prefill these
+//! lanes in one blocking invocation", "feed one lane a slice of its
+//! prompt" and "run one decode iteration across these lanes" — so that
+//! triple is the [`ExecBackend`] trait. Three implementations:
 //!
 //! * [`PjrtBackend`] — the real thing: drives the AOT PJRT artifacts
-//!   (`prefill_serve_q3` + the per-lane-position `decode_lanes_q3`).
+//!   (`prefill_serve_q3`, the chunked `prefill_chunk_q3` and the
+//!   per-lane-position `decode_lanes_q3`).
 //! * [`MockBackend`] — deterministic token streams derived from the
 //!   prompt, plus call/slot counters; lets every scheduler invariant run
-//!   in tier-1 without XLA artifacts.
-//! * [`ModeledBackend`] — mock tokens + a virtual clock advanced by the
-//!   `hls::pipeline_sim` stage latencies of the paper's U280 decode
-//!   architecture, so serving composes with the accelerator model.
+//!   in tier-1 without XLA artifacts. Chunked prefill accumulates the
+//!   prompt per lane, so a chunked admission must reproduce the blocking
+//!   admission's stream exactly.
+//! * [`ModeledBackend`] — mock tokens + TWO virtual engine clocks from
+//!   the `hls::pipeline_sim` latencies of the paper's U280 designs: the
+//!   prefill engine and the decode engine are separate hardware (the
+//!   stage-customization claim), so a prefill *chunk* runs concurrently
+//!   with decode iterations, while a *blocking* whole-pool prefill
+//!   stalls both (the software serialization PR 1 shipped with). This is
+//!   what makes the prefill/decode overlap measurable in the simulator.
 
 use std::collections::HashMap;
 
@@ -32,6 +40,12 @@ pub struct BackendSpec {
     /// scheduler gang-schedules (admission only into an all-free pool);
     /// when true freed lanes are backfilled mid-flight.
     pub per_lane_pos: bool,
+    /// Whether [`ExecBackend::prefill_chunk`] is available. When false
+    /// the engine degrades a `Chunked` policy to `Blocking`.
+    pub chunked_prefill: bool,
+    /// Chunk width the backend's chunk op is compiled for (AOT artifacts
+    /// have a fixed slice shape); `None` = any chunk length.
+    pub chunk_len: Option<usize>,
 }
 
 /// A prefill admission: a prompt going into a (free) lane.
@@ -55,11 +69,20 @@ pub struct LaneStep {
 pub trait ExecBackend {
     fn spec(&self) -> &BackendSpec;
 
-    /// Prefill the given lanes in one hardware invocation, resetting each
-    /// lane's cache to positions `0..prefill_len`. Other lanes' caches
-    /// are untouched. Returns the first generated token per slot, in
-    /// slot order.
+    /// Prefill the given lanes in one blocking hardware invocation,
+    /// resetting each lane's cache to positions `0..prefill_len`. Other
+    /// lanes' caches are untouched. Returns the first generated token
+    /// per slot, in slot order.
     fn prefill(&mut self, slots: &[PrefillSlot]) -> Result<Vec<i32>>;
+
+    /// Feed `lane` a `tokens` slice of its prompt, landing in its cache
+    /// at positions `start_pos..start_pos + tokens.len()`. Chunks must
+    /// arrive in order from position 0. Returns the greedy token sampled
+    /// from the chunk's last position — meaningful (the request's first
+    /// generated token) only for the chunk that completes the prompt;
+    /// the scheduler ignores it otherwise.
+    fn prefill_chunk(&mut self, lane: usize, tokens: &[i32], start_pos: usize)
+        -> Result<i32>;
 
     /// One decode iteration across the given lanes, each at its own
     /// position. Returns the next token per entry, in entry order.
@@ -74,15 +97,21 @@ pub trait ExecBackend {
 ///
 /// The token a lane emits depends ONLY on the prompt occupying it and on
 /// how many tokens that request has generated — never on which lane it
-/// landed in or what its neighbours are doing. Tests exploit this to
-/// prove a backfilled lane cannot leak another request's stream: the
-/// result must equal [`MockBackend::expected_tokens`] for its own prompt.
+/// landed in, what its neighbours are doing, or whether its prompt
+/// arrived blocking or chunked. Tests exploit this to prove a backfilled
+/// lane cannot leak another request's stream and that chunked admission
+/// is stream-identical to blocking admission: the result must equal
+/// [`MockBackend::expected_tokens`] for its own prompt.
 pub struct MockBackend {
     spec: BackendSpec,
     /// Prompt fingerprint per occupied lane.
     lane_seed: Vec<Option<u64>>,
+    /// Prompt prefix accumulated by in-order chunks, per lane.
+    lane_partial: Vec<Vec<i32>>,
     pub prefill_calls: usize,
     pub prefill_slots: usize,
+    pub prefill_chunk_calls: usize,
+    pub prefill_chunk_tokens: usize,
     pub decode_iterations: usize,
     /// Decode slot-steps actually executed (iterations × lanes fed); the
     /// quantity max-aligned batching wastes on finished lanes.
@@ -93,10 +122,21 @@ impl MockBackend {
     pub fn new(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize) -> Self {
         assert!(lanes > 0 && vocab > 1 && max_seq > prefill_len);
         MockBackend {
-            spec: BackendSpec { lanes, prefill_len, max_seq, vocab, per_lane_pos: true },
+            spec: BackendSpec {
+                lanes,
+                prefill_len,
+                max_seq,
+                vocab,
+                per_lane_pos: true,
+                chunked_prefill: true,
+                chunk_len: None,
+            },
             lane_seed: vec![None; lanes],
+            lane_partial: vec![Vec::new(); lanes],
             prefill_calls: 0,
             prefill_slots: 0,
+            prefill_chunk_calls: 0,
+            prefill_chunk_tokens: 0,
             decode_iterations: 0,
             decode_lane_steps: 0,
         }
@@ -104,10 +144,13 @@ impl MockBackend {
 
     /// Aligned-only variant: like the scalar-position decode artifact, it
     /// rejects decode iterations over lanes at mixed positions, so tests
-    /// can prove the gang-admission fallback never produces one.
+    /// can prove the gang-admission fallback never produces one. Chunked
+    /// prefill is unavailable too — staggered warm-up times would stagger
+    /// positions.
     pub fn aligned(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize) -> Self {
         let mut m = Self::new(lanes, prefill_len, max_seq, vocab);
         m.spec.per_lane_pos = false;
+        m.spec.chunked_prefill = false;
         m
     }
 
@@ -156,9 +199,47 @@ impl ExecBackend for MockBackend {
             }
             let seed = Self::prompt_seed(s.prompt);
             self.lane_seed[s.lane] = Some(seed);
+            self.lane_partial[s.lane].clear();
             out.push(Self::token_at(seed, 0, self.spec.vocab));
         }
         Ok(out)
+    }
+
+    fn prefill_chunk(&mut self, lane: usize, tokens: &[i32], start_pos: usize)
+        -> Result<i32>
+    {
+        if lane >= self.spec.lanes {
+            return Err(anyhow!("prefill_chunk lane {lane} out of range"));
+        }
+        if tokens.is_empty() {
+            return Err(anyhow!("prefill_chunk of zero tokens on lane {lane}"));
+        }
+        let filled = self.lane_partial[lane].len();
+        if start_pos != filled {
+            return Err(anyhow!(
+                "prefill_chunk out of order on lane {lane}: start {start_pos} \
+                 but {filled} tokens resident"));
+        }
+        if start_pos + tokens.len() > self.spec.prefill_len {
+            return Err(anyhow!(
+                "prefill_chunk overruns prompt on lane {lane}: {start_pos}+{} > {}",
+                tokens.len(), self.spec.prefill_len));
+        }
+        self.prefill_chunk_calls += 1;
+        self.prefill_chunk_tokens += tokens.len();
+        self.lane_partial[lane].extend_from_slice(tokens);
+        if self.lane_partial[lane].len() == self.spec.prefill_len {
+            // the chunk completes the prompt: same seed a blocking
+            // admission of the full prompt would derive
+            let seed = Self::prompt_seed(&self.lane_partial[lane]);
+            self.lane_seed[lane] = Some(seed);
+            self.lane_partial[lane].clear();
+            Ok(Self::token_at(seed, 0, self.spec.vocab))
+        } else {
+            // mid-prompt: the lane must not decode yet
+            self.lane_seed[lane] = None;
+            Ok(0)
+        }
     }
 
     fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
@@ -192,39 +273,77 @@ impl ExecBackend for MockBackend {
 }
 
 // ---------------------------------------------------------------------------
-// Modeled backend (pipeline-simulator clock)
+// Modeled backend (pipeline-simulator clocks)
 // ---------------------------------------------------------------------------
 
-/// Mock tokens + a virtual hardware clock from `hls::pipeline_sim`.
+/// Mock tokens + virtual hardware clocks from `hls::pipeline_sim`.
 ///
-/// Each decode iteration costs one stall-aware decode-pipeline token at
-/// the max context among the stepped lanes; each prefill costs the
-/// simulated prefill makespan. `model_time_s` is what the serve CLI
-/// reports as modeled hardware time.
+/// The paper's hybrid design is two spatially separate engines, so the
+/// model keeps two clocks:
+///
+/// * a **blocking** whole-pool prefill is the software serialization the
+///   scheduler is trying to escape: the invocation streams the full
+///   `lanes × prefill_len` token batch (the artifact's real compute —
+///   idle rows included) through the prefill pipeline while the decode
+///   engine sits idle. Both clocks advance to its completion.
+/// * a prefill **chunk** occupies only the prefill engine for its
+///   chunk-proportional simulated latency; decode iterations keep the
+///   decode engine's own cadence concurrently. A lane whose final chunk
+///   completes at prefill-engine time `t` joins decode iterations no
+///   earlier than `t`.
+/// * each decode iteration costs one stall-aware decode-pipeline token
+///   at the max context among the stepped lanes.
+///
+/// `model_time_s` — what the serve CLI reports as modeled hardware
+/// time — is the max of the two engine clocks.
 pub struct ModeledBackend {
     inner: MockBackend,
     sys: AcceleratorSystem,
     /// Simulated seconds-per-token cache keyed by context bucket.
     step_cost: HashMap<u64, f64>,
-    prefill_cost_s: f64,
+    /// Simulated chunk cost keyed by (tokens, ctx bucket, lm_head).
+    chunk_cost: HashMap<(u64, u64, bool), f64>,
+    /// Whole-pool blocking prefill invocation cost.
+    pool_prefill_cost_s: f64,
+    /// Prefill-engine virtual clock, seconds.
+    pub prefill_clock_s: f64,
+    /// Decode-engine virtual clock, seconds.
+    pub decode_clock_s: f64,
+    /// Per-lane prefill completion time (a lane decodes no earlier).
+    lane_ready_s: Vec<f64>,
+    /// max(prefill_clock_s, decode_clock_s): total modeled time.
     pub model_time_s: f64,
 }
 
 impl ModeledBackend {
     pub fn new(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize,
                sys: AcceleratorSystem) -> Self {
-        let prefill_cost_s = sys.prefill.simulated_latency_s(prefill_len as u64);
+        // the whole-pool artifact computes every lane's row, fresh or not
+        let pool_prefill_cost_s = sys.prefill.simulated_chunk_latency_s(
+            (lanes * prefill_len) as u64, prefill_len as u64, true);
         ModeledBackend {
             inner: MockBackend::new(lanes, prefill_len, max_seq, vocab),
             sys,
             step_cost: HashMap::new(),
-            prefill_cost_s,
+            chunk_cost: HashMap::new(),
+            pool_prefill_cost_s,
+            prefill_clock_s: 0.0,
+            decode_clock_s: 0.0,
+            lane_ready_s: vec![0.0; lanes],
             model_time_s: 0.0,
         }
     }
 
     pub fn u280(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize) -> Self {
         Self::new(lanes, prefill_len, max_seq, vocab, AcceleratorSystem::u280())
+    }
+
+    /// Fast-forward both engine clocks to at least `t` (open-loop
+    /// harnesses jump idle gaps between arrivals this way).
+    pub fn advance_to(&mut self, t: f64) {
+        self.prefill_clock_s = self.prefill_clock_s.max(t);
+        self.decode_clock_s = self.decode_clock_s.max(t);
+        self.model_time_s = self.prefill_clock_s.max(self.decode_clock_s);
     }
 
     /// Stall-aware seconds per decode token at `ctx`, from the dataflow
@@ -239,6 +358,20 @@ impl ModeledBackend {
         self.step_cost.insert(bucket, cost);
         cost
     }
+
+    /// Chunk-proportional prefill-engine cost: `tokens` through the
+    /// prefill pipeline at the chunk's end-context bucket, the lm_head
+    /// pass only on a prompt-completing chunk.
+    fn chunk_step_s(&mut self, tokens: u64, end_ctx: u64, lm_head: bool) -> f64 {
+        let bucket = end_ctx.max(1).next_power_of_two();
+        let key = (tokens, bucket, lm_head);
+        if let Some(&c) = self.chunk_cost.get(&key) {
+            return c;
+        }
+        let cost = self.sys.prefill.simulated_chunk_latency_s(tokens, bucket, lm_head);
+        self.chunk_cost.insert(key, cost);
+        cost
+    }
 }
 
 impl ExecBackend for ModeledBackend {
@@ -247,17 +380,57 @@ impl ExecBackend for ModeledBackend {
     }
 
     fn prefill(&mut self, slots: &[PrefillSlot]) -> Result<Vec<i32>> {
+        let out = self.inner.prefill(slots)?;
         if !slots.is_empty() {
-            self.model_time_s += self.prefill_cost_s;
+            // blocking invocation: the engine thread (and with it the
+            // decode engine) waits for the whole-pool prefill
+            let start = self.prefill_clock_s.max(self.decode_clock_s);
+            let end = start + self.pool_prefill_cost_s;
+            self.prefill_clock_s = end;
+            self.decode_clock_s = end;
+            self.model_time_s = end;
+            for s in slots {
+                self.lane_ready_s[s.lane] = end;
+            }
         }
-        self.inner.prefill(slots)
+        Ok(out)
+    }
+
+    fn prefill_chunk(&mut self, lane: usize, tokens: &[i32], start_pos: usize)
+        -> Result<i32>
+    {
+        let token = self.inner.prefill_chunk(lane, tokens, start_pos)?;
+        let end_ctx = (start_pos + tokens.len()) as u64;
+        let last = start_pos + tokens.len() == self.inner.spec.prefill_len;
+        let cost = self.chunk_step_s(tokens.len() as u64, end_ctx, last);
+        // the chunk is issued by the current tick (it cannot start
+        // before the software loop reaches it) and then occupies ONLY
+        // the prefill engine
+        let start = self.prefill_clock_s.max(self.decode_clock_s);
+        self.prefill_clock_s = start + cost;
+        if last {
+            self.lane_ready_s[lane] = self.prefill_clock_s;
+        }
+        self.model_time_s = self.prefill_clock_s.max(self.decode_clock_s);
+        Ok(token)
     }
 
     fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
+        let out = self.inner.decode(steps)?;
         if let Some(ctx) = steps.iter().map(|s| s.pos as u64).max() {
-            self.model_time_s += self.decode_step_s(ctx);
+            let cost = self.decode_step_s(ctx);
+            // the decode engine runs concurrently with in-flight chunks,
+            // but a freshly warmed lane joins no earlier than its
+            // prefill completed
+            let ready = steps
+                .iter()
+                .map(|s| self.lane_ready_s[s.lane])
+                .fold(0.0f64, f64::max);
+            let start = self.decode_clock_s.max(ready);
+            self.decode_clock_s = start + cost;
+            self.model_time_s = self.prefill_clock_s.max(self.decode_clock_s);
         }
-        self.inner.decode(steps)
+        Ok(out)
     }
 }
 
@@ -266,6 +439,7 @@ impl ExecBackend for ModeledBackend {
 // ---------------------------------------------------------------------------
 
 const PREFILL: &str = "prefill_serve_q3";
+const PREFILL_CHUNK: &str = "prefill_chunk_q3";
 const DECODE_LANES: &str = "decode_lanes_q3";
 const DECODE_ALIGNED: &str = "decode_step_q3";
 
@@ -274,10 +448,12 @@ const DECODE_ALIGNED: &str = "decode_step_q3";
 /// Cache tensors are the INT8 integer-grid K/V literals threaded through
 /// every step. Backfill admission runs the batch prefill artifact and
 /// host-merges only the admitted lanes' cache slices into the live pool
-/// cache, preserving in-flight lanes. When only the position-aligned
-/// `decode_step_q3` artifact exists (older artifact sets), the backend
-/// reports `per_lane_pos: false` and the scheduler falls back to gang
-/// admission.
+/// cache, preserving in-flight lanes; the chunked `prefill_chunk_q3`
+/// artifact does the same per chunk (idle lanes compute throwaway rows
+/// that the merge discards, the contract `decode_lanes_q3` established
+/// for idle positions). When only the position-aligned `decode_step_q3`
+/// artifact exists (older artifact sets), the backend reports
+/// `per_lane_pos: false` and the scheduler falls back to gang admission.
 pub struct PjrtBackend {
     pub runtime: Runtime,
     spec: BackendSpec,
@@ -290,12 +466,25 @@ pub struct PjrtBackend {
 impl PjrtBackend {
     pub fn new(runtime: Runtime) -> Self {
         let m = &runtime.manifest;
+        let per_lane_pos = m.artifacts.contains_key(DECODE_LANES);
+        // chunked admission needs per-lane decode (staggered prefill
+        // completion staggers lane positions), the chunk artifact AND a
+        // usable manifest chunk width — the artifact slice shape is
+        // fixed, so the width must divide the prompt or the tail chunk
+        // could never be fed. Anything less degrades to Blocking
+        // instead of failing mid-serve.
+        let chunk_len = m.serving.prefill_chunk
+            .filter(|&c| c > 0 && m.serving.prefill_len % c == 0);
+        let chunked_prefill =
+            per_lane_pos && chunk_len.is_some() && m.artifacts.contains_key(PREFILL_CHUNK);
         let spec = BackendSpec {
             lanes: m.serving.batch,
             prefill_len: m.serving.prefill_len,
             max_seq: m.model.max_seq as usize,
             vocab: m.model.vocab as usize,
-            per_lane_pos: m.artifacts.contains_key(DECODE_LANES),
+            per_lane_pos,
+            chunked_prefill,
+            chunk_len: if chunked_prefill { chunk_len } else { None },
         };
         let cache_shape: Vec<usize> =
             m.serving.cache_shape.iter().map(|&d| d as usize).collect();
@@ -317,6 +506,20 @@ impl PjrtBackend {
             let off = (li * lanes + lane) * lane_block;
             pool[off..off + lane_block].copy_from_slice(&fresh[off..off + lane_block]);
         }
+    }
+
+    /// The live pool caches, or fresh all-zero literals before the first
+    /// prefill touches them (chunked admission may start on an empty
+    /// pool with no whole-pool prefill ever having run).
+    fn cache_literals(&mut self) -> Result<(xla::Literal, xla::Literal)> {
+        if self.k.is_none() || self.v.is_none() {
+            let dims = self.cache_dims_i64();
+            let len: usize = self.cache_shape.iter().product();
+            let zeros = vec![0.0f32; len];
+            self.k = Some(lit_f32(&zeros, &dims)?);
+            self.v = Some(lit_f32(&zeros, &dims)?);
+        }
+        Ok((self.k.as_ref().unwrap().clone(), self.v.as_ref().unwrap().clone()))
     }
 }
 
@@ -374,6 +577,68 @@ impl ExecBackend for PjrtBackend {
 
         let next = argmax_rows(&logits, b, self.spec.vocab)?;
         Ok(slots.iter().map(|slot| next[slot.lane]).collect())
+    }
+
+    fn prefill_chunk(&mut self, lane: usize, tokens: &[i32], start_pos: usize)
+        -> Result<i32>
+    {
+        if !self.spec.chunked_prefill {
+            return Err(anyhow!("artifact set has no {PREFILL_CHUNK}"));
+        }
+        let b = self.spec.lanes;
+        let c = self
+            .spec
+            .chunk_len
+            .ok_or_else(|| anyhow!("manifest lacks serving.prefill_chunk"))?;
+        if lane >= b {
+            return Err(anyhow!("prefill_chunk lane {lane} out of range"));
+        }
+        if tokens.len() != c {
+            // the artifact slice shape is fixed; aot.py guarantees
+            // prefill_len % chunk == 0, so a partial tail never arises
+            return Err(anyhow!(
+                "prefill_chunk of {} tokens but artifact chunk width is {c}",
+                tokens.len()));
+        }
+        if start_pos + c > self.spec.prefill_len {
+            return Err(anyhow!(
+                "prefill_chunk overruns prompt: {start_pos}+{c} > {}",
+                self.spec.prefill_len));
+        }
+
+        let mut flat = vec![0i32; b * c];
+        flat[lane * c..(lane + 1) * c].copy_from_slice(tokens);
+        // idle lanes get a harmless in-range start position; whatever the
+        // artifact writes in their rows is discarded by the single-lane
+        // merge below
+        let mut pos = vec![0i32; b];
+        pos[lane] = start_pos as i32;
+
+        let (k, v) = self.cache_literals()?;
+        let mut out = self.runtime.execute(PREFILL_CHUNK, &[
+            lit_i32(&flat, &[b as i64, c as i64])?,
+            lit_i32(&pos, &[b as i64])?,
+            k, v,
+        ])?;
+        if out.len() != 3 {
+            return Err(anyhow!("chunk artifact returned {} outputs", out.len()));
+        }
+        let v_new = out.pop().unwrap();
+        let k_new = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+
+        let dims = self.cache_dims_i64();
+        let mut kh = to_f32(self.k.as_ref().unwrap())?;
+        let mut vh = to_f32(self.v.as_ref().unwrap())?;
+        let kf = to_f32(&k_new)?;
+        let vf = to_f32(&v_new)?;
+        self.merge_lane(&mut kh, &kf, lane);
+        self.merge_lane(&mut vh, &vf, lane);
+        self.k = Some(lit_f32(&kh, &dims)?);
+        self.v = Some(lit_f32(&vh, &dims)?);
+
+        let next = argmax_rows(&logits, b, self.spec.vocab)?;
+        Ok(next[lane])
     }
 
     fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
@@ -452,6 +717,40 @@ mod tests {
     }
 
     #[test]
+    fn mock_chunked_prefill_matches_blocking() {
+        let mut blocking = MockBackend::new(2, 8, 32, 64);
+        let mut chunked = MockBackend::new(2, 8, 32, 64);
+        let prompt: Vec<i32> = (10..18).collect();
+        let t_block = blocking.prefill(&[PrefillSlot { lane: 1, prompt: &prompt }]).unwrap();
+        // 3+3+2 chunks must yield the identical first token and stream
+        assert_eq!(chunked.prefill_chunk(1, &prompt[0..3], 0).unwrap(), 0);
+        assert_eq!(chunked.prefill_chunk(1, &prompt[3..6], 3).unwrap(), 0);
+        let t_chunk = chunked.prefill_chunk(1, &prompt[6..8], 6).unwrap();
+        assert_eq!(t_chunk, t_block[0]);
+        assert_eq!(chunked.prefill_chunk_calls, 3);
+        assert_eq!(chunked.prefill_chunk_tokens, 8);
+        let d_block = blocking.decode(&[LaneStep { lane: 1, token: t_block[0], pos: 8 }]);
+        let d_chunk = chunked.decode(&[LaneStep { lane: 1, token: t_chunk, pos: 8 }]);
+        assert_eq!(d_block.unwrap(), d_chunk.unwrap());
+    }
+
+    #[test]
+    fn mock_chunk_sequencing_enforced() {
+        let mut m = MockBackend::new(2, 8, 32, 64);
+        let p: Vec<i32> = (0..8).collect();
+        assert!(m.prefill_chunk(5, &p[..4], 0).is_err());     // lane range
+        assert!(m.prefill_chunk(0, &[], 0).is_err());          // empty chunk
+        assert!(m.prefill_chunk(0, &p[..4], 4).is_err());      // out of order
+        m.prefill_chunk(0, &p[..4], 0).unwrap();
+        assert!(m.prefill_chunk(0, &p[..2], 2).is_err());      // out of order
+        assert!(m.prefill_chunk(0, &p, 4).is_err());           // overrun
+        // mid-prefill lanes cannot decode
+        assert!(m.decode(&[LaneStep { lane: 0, token: 0, pos: 8 }]).is_err());
+        m.prefill_chunk(0, &p[4..], 4).unwrap();
+        assert!(m.decode(&[LaneStep { lane: 0, token: 0, pos: 8 }]).is_ok());
+    }
+
+    #[test]
     fn mock_counts_slots() {
         let mut m = MockBackend::new(2, 4, 16, 32);
         let p: Vec<i32> = vec![1; 4];
@@ -462,6 +761,7 @@ mod tests {
         m.decode(&[LaneStep { lane: 0, token: 0, pos: 5 }]).unwrap();
         assert_eq!(m.prefill_calls, 1);
         assert_eq!(m.prefill_slots, 2);
+        assert_eq!(m.prefill_chunk_calls, 0);
         assert_eq!(m.decode_iterations, 2);
         assert_eq!(m.decode_lane_steps, 3);
     }
@@ -491,5 +791,58 @@ mod tests {
         let c1 = m.decode_step_s(128);
         let c2 = m.decode_step_s(4096);
         assert!(c2 >= c1);
+    }
+
+    #[test]
+    fn modeled_chunks_overlap_decode() {
+        // lane 0 decodes while lane 1 prefills in chunks: the decode
+        // engine's clock must NOT absorb the chunk costs (separate
+        // engines), unlike a blocking whole-pool prefill which stalls it
+        let mut m = ModeledBackend::u280(2, 8, 64, 32);
+        let p: Vec<i32> = (0..8).collect();
+        m.prefill(&[PrefillSlot { lane: 0, prompt: &p }]).unwrap();
+        let dec0 = m.decode_clock_s;
+        let q: Vec<i32> = (8..16).collect();
+        m.prefill_chunk(1, &q[..4], 0).unwrap();
+        m.decode(&[LaneStep { lane: 0, token: 0, pos: 8 }]).unwrap();
+        let dec_cost = m.decode_clock_s - dec0;
+        m.prefill_chunk(1, &q[4..], 4).unwrap();
+        m.decode(&[LaneStep { lane: 0, token: 0, pos: 9 }]).unwrap();
+        // two decode iterations cost ~2 decode steps on the decode clock,
+        // not 2 steps + 2 chunks
+        let two_steps = m.decode_clock_s - dec0;
+        assert!(two_steps < 2.05 * dec_cost && two_steps > 1.9 * dec_cost,
+                "decode clock absorbed chunk time: {two_steps} vs step {dec_cost}");
+        // but the prefill engine did pay for the chunks
+        assert!(m.prefill_clock_s > dec0);
+        // and a lane warmed at prefill time t joins decode no earlier
+        let warm_at = m.lane_ready_s[1];
+        m.decode(&[LaneStep { lane: 0, token: 0, pos: 10 },
+                   LaneStep { lane: 1, token: 0, pos: 8 }]).unwrap();
+        assert!(m.decode_clock_s >= warm_at,
+                "lane 1 decoded before its prefill completed");
+    }
+
+    #[test]
+    fn modeled_blocking_pool_cost_covers_every_row() {
+        // the whole-pool invocation streams lanes × prefill_len tokens;
+        // admitting one lane costs the same as admitting four (that is
+        // the waste chunked admission removes)
+        let mut a = ModeledBackend::u280(4, 16, 64, 32);
+        let p: Vec<i32> = (0..16).collect();
+        a.prefill(&[PrefillSlot { lane: 0, prompt: &p }]).unwrap();
+        let one = a.model_time_s;
+        let mut b = ModeledBackend::u280(4, 16, 64, 32);
+        let slots: Vec<PrefillSlot> = (0..4).map(|l| PrefillSlot { lane: l, prompt: &p })
+            .collect();
+        b.prefill(&slots).unwrap();
+        assert!((a.model_time_s - b.model_time_s).abs() < 1e-12);
+        // and it exceeds the chunk-proportional cost of one lane's prompt
+        let mut c = ModeledBackend::u280(4, 16, 64, 32);
+        c.prefill_chunk(0, &p[..8], 0).unwrap();
+        c.prefill_chunk(0, &p[8..], 8).unwrap();
+        assert!(c.prefill_clock_s < one,
+                "chunked single-lane admission should cost less than the \
+                 whole-pool call: {} vs {one}", c.prefill_clock_s);
     }
 }

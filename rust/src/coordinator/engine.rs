@@ -1,13 +1,22 @@
-//! Serving engine: drives one decode iteration at a time over a lane pool.
+//! Serving engine: drives one scheduler tick at a time over a lane pool.
 //!
 //! This is the request-path core: tokens in, tokens out, no Python. The
 //! engine owns an [`ExecBackend`] (the PJRT artifacts in production, the
 //! mock/modeled backends in tests and what-if studies) and the
-//! [`Scheduler`]; [`Engine::step`] runs one iteration — admit into free
-//! lanes, prefill the admissions, decode the active lanes, retire
-//! finished requests — and [`Engine::serve`] loops it until the queue
-//! drains. The router calls `step` from its event loop so new requests
-//! can arrive between iterations (continuous batching).
+//! [`Scheduler`]; [`Engine::step`] runs one TWO-PHASE tick —
+//!
+//! 1. **prefill phase**: admit queued requests into free lanes, then
+//!    either warm every admission with one blocking whole-pool prefill
+//!    ([`PrefillPolicy::Blocking`], the PR 1 behavior) or feed prompt
+//!    chunks into prefilling lanes ([`PrefillPolicy::Chunked`] — at most
+//!    one chunk per tick under `decode_priority`, so prompt streaming
+//!    rides alongside decode instead of stalling it);
+//! 2. **decode phase**: one decode iteration across every warm lane,
+//!    retiring finished requests.
+//!
+//! [`Engine::serve`] loops ticks until the queue drains. The router
+//! calls `step` from its event loop so new requests can arrive between
+//! iterations (continuous batching).
 
 use std::time::Instant;
 
@@ -15,7 +24,7 @@ use anyhow::{anyhow, Result};
 
 use super::backend::{ExecBackend, PjrtBackend, PrefillSlot};
 use super::request::{GenRequest, GenResult, ServeMetrics};
-use super::scheduler::{Completion, Scheduler};
+use super::scheduler::{Completion, PrefillPolicy, Scheduler};
 
 /// A token the engine just produced (streaming surface).
 #[derive(Debug, Clone, Copy)]
@@ -31,8 +40,10 @@ pub struct TokenEvent {
 /// What one `Engine::step` did.
 #[derive(Debug, Default)]
 pub struct StepReport {
-    /// Requests admitted (prefilled) this iteration.
+    /// Requests admitted (bound to lanes) this iteration.
     pub admitted: usize,
+    /// Prefill chunks fed this iteration (chunked policy only).
+    pub chunks: usize,
     /// Lanes stepped in the decode phase.
     pub stepped: usize,
     /// Requests retired this iteration, in admission order.
@@ -45,6 +56,7 @@ pub struct Engine<B: ExecBackend> {
     pub backend: B,
     pub scheduler: Scheduler,
     pub metrics: ServeMetrics,
+    policy: PrefillPolicy,
 }
 
 impl Engine<PjrtBackend> {
@@ -56,11 +68,40 @@ impl Engine<PjrtBackend> {
 }
 
 impl<B: ExecBackend> Engine<B> {
+    /// Engine with the default `Blocking` admission (PR 1 behavior).
     pub fn new(backend: B) -> Self {
+        Self::with_policy(backend, PrefillPolicy::Blocking)
+    }
+
+    /// Engine with an explicit [`PrefillPolicy`]. The policy is coerced
+    /// to what the backend can execute: `Chunked` degrades to `Blocking`
+    /// without a chunk op (or per-lane decode positions — staggered
+    /// prefill completion staggers positions), and `chunk_len` snaps to
+    /// the backend's fixed artifact chunk width when it has one.
+    /// [`Engine::policy`] reports what actually runs.
+    pub fn with_policy(backend: B, policy: PrefillPolicy) -> Self {
         let spec = backend.spec();
+        let policy = match policy {
+            PrefillPolicy::Chunked { .. }
+                if !spec.chunked_prefill || !spec.per_lane_pos =>
+            {
+                PrefillPolicy::Blocking
+            }
+            PrefillPolicy::Chunked { chunk_len, decode_priority } => {
+                let chunk_len = spec.chunk_len.unwrap_or(chunk_len.max(1)).max(1);
+                PrefillPolicy::Chunked { chunk_len, decode_priority }
+            }
+            PrefillPolicy::Blocking => PrefillPolicy::Blocking,
+        };
         let scheduler = Scheduler::new(spec.lanes, spec.prefill_len, spec.max_seq,
                                        !spec.per_lane_pos);
-        Engine { backend, scheduler, metrics: ServeMetrics::default() }
+        Engine { backend, scheduler, metrics: ServeMetrics::default(), policy }
+    }
+
+    /// The admission policy actually in effect (after capability
+    /// coercion).
+    pub fn policy(&self) -> PrefillPolicy {
+        self.policy
     }
 
     /// Artifact prefill length (prompt shape requests must match).
@@ -82,29 +123,59 @@ impl<B: ExecBackend> Engine<B> {
         self.scheduler.has_work()
     }
 
-    /// One scheduler iteration: backfill free lanes from the queue (one
-    /// prefill invocation covers all admissions), then run one decode
-    /// iteration across every active lane, retiring finished requests.
+    /// One two-phase scheduler tick: admissions + policy-driven prefill,
+    /// then one decode iteration across every warm lane, retiring
+    /// finished requests.
     pub fn step(&mut self) -> Result<StepReport> {
         let mut report = StepReport::default();
-        let prefill_len = self.prefill_len();
 
-        // ---- admission / prefill -----------------------------------------
+        // ---- admission + prefill phase -----------------------------------
         let admitted = self.scheduler.plan_admissions();
-        if !admitted.is_empty() {
-            let mut slots = Vec::with_capacity(admitted.len());
-            for &lane in &admitted {
-                slots.push(PrefillSlot { lane, prompt: self.scheduler.prompt(lane)? });
+        report.admitted = admitted.len();
+        match self.policy {
+            PrefillPolicy::Blocking => {
+                if !admitted.is_empty() {
+                    let prefill_len = self.prefill_len();
+                    let mut slots = Vec::with_capacity(admitted.len());
+                    for &lane in &admitted {
+                        slots.push(PrefillSlot { lane, prompt: self.scheduler.prompt(lane)? });
+                    }
+                    let t0 = Instant::now();
+                    let first = self.backend.prefill(&slots)?;
+                    drop(slots);
+                    self.metrics.total_prefill += t0.elapsed();
+                    self.metrics.prefill_calls += 1;
+                    self.metrics.prefill_tokens += admitted.len() * prefill_len;
+                    for (&lane, &token) in admitted.iter().zip(&first) {
+                        self.push_token(&mut report, lane, token)?;
+                    }
+                }
             }
-            let t0 = Instant::now();
-            let first = self.backend.prefill(&slots)?;
-            drop(slots);
-            self.metrics.total_prefill += t0.elapsed();
-            self.metrics.prefill_calls += 1;
-            self.metrics.prefill_tokens += admitted.len() * prefill_len;
-            report.admitted = admitted.len();
-            for (&lane, &token) in admitted.iter().zip(&first) {
-                self.push_token(&mut report, lane, token)?;
+            PrefillPolicy::Chunked { chunk_len, decode_priority } => {
+                let mut lanes = self.scheduler.prefilling_lanes();
+                if decode_priority {
+                    // one chunk per tick: resident lanes keep their
+                    // decode cadence while the prompt streams in
+                    lanes.truncate(1);
+                }
+                for lane in lanes {
+                    let plan = self.scheduler.next_chunk(lane, chunk_len)?;
+                    let (start_pos, len, last) = (plan.start_pos, plan.tokens.len(),
+                                                  plan.last);
+                    let t0 = Instant::now();
+                    let token = self.backend.prefill_chunk(lane, plan.tokens, start_pos)?;
+                    self.metrics.total_prefill += t0.elapsed();
+                    self.metrics.prefill_chunks += 1;
+                    self.metrics.prefill_tokens += len;
+                    report.chunks += 1;
+                    let id = self.scheduler.prompt_owner(lane);
+                    let done = self.scheduler.record_chunk(lane, len, token)?;
+                    if last {
+                        // the prompt-completing chunk delivers the first
+                        // generated token, exactly like a blocking prefill
+                        self.emit(&mut report, id, token, 0, done);
+                    }
+                }
             }
         }
 

@@ -3,11 +3,15 @@
 //!
 //! The old `KvState` tracked one shared write position for an aligned
 //! batch; continuous batching needs each decode lane at its own position
-//! (lanes finish and are backfilled independently). The actual cache
-//! tensors — the INT8 integer-grid K/V of the W4A4KV8 scheme — live
-//! inside the execution backend (the PJRT backend threads XLA literals
-//! through every step); the pool only answers "which lanes are live and
-//! where does each one write next".
+//! (lanes finish and are backfilled independently). With chunked
+//! admission (PR 2) a lane's cache additionally fills *incrementally*:
+//! `bind` starts a lane at position 0 and [`KvPool::fill`] advances it
+//! chunk by chunk until the prompt is resident ([`KvPool::is_warm`]),
+//! after which [`KvPool::advance`] consumes decode slots. The actual
+//! cache tensors — the INT8 integer-grid K/V of the W4A4KV8 scheme —
+//! live inside the execution backend (the PJRT backend threads XLA
+//! literals through every step); the pool only answers "which lanes are
+//! live and where does each one write next".
 
 use anyhow::{anyhow, Result};
 
@@ -15,7 +19,12 @@ use anyhow::{anyhow, Result};
 #[derive(Debug, Clone)]
 pub struct LaneSlot {
     pub request_id: u64,
-    /// Next cache write position (= populated slots so far).
+    /// Prompt tokens this request prefills into the lane. Positions
+    /// `[0, prompt_len)` are prompt cache; `[prompt_len, max_seq)` are
+    /// decode capacity.
+    pub prompt_len: usize,
+    /// Next cache write position: `< prompt_len` while the prompt is
+    /// still being chunked in, `>= prompt_len` once decoding.
     pub pos: usize,
 }
 
@@ -29,7 +38,11 @@ pub struct KvPool {
 
 impl KvPool {
     pub fn new(lanes: usize, prefill_len: usize, max_seq: usize) -> Self {
-        assert!(lanes > 0 && prefill_len > 0 && max_seq > prefill_len);
+        // `max_seq == prefill_len` is representable (a prefill-only pool):
+        // with chunked admission the prompt no longer lands as one
+        // `prefill_len` block, so per-request capacity is enforced at
+        // `bind` time (≥ 1 decode slot per bound prompt), not here.
+        assert!(lanes > 0 && prefill_len > 0 && max_seq >= prefill_len);
         KvPool { slots: vec![None; lanes], prefill_len, max_seq }
     }
 
@@ -59,9 +72,18 @@ impl KvPool {
         self.slots.get(lane).and_then(|s| s.as_ref())
     }
 
-    /// Bind a request to a free lane; its cache holds `prefill_len`
-    /// populated positions after the admission prefill.
-    pub fn bind(&mut self, lane: usize, request_id: u64) -> Result<()> {
+    /// Bind a request to a free lane with an empty cache row; the prompt
+    /// arrives through [`KvPool::fill`] (chunk by chunk, or in one call
+    /// for blocking admission).
+    pub fn bind(&mut self, lane: usize, request_id: u64, prompt_len: usize) -> Result<()> {
+        if prompt_len == 0 {
+            return Err(anyhow!("lane {lane}: cannot bind an empty prompt"));
+        }
+        if prompt_len >= self.max_seq {
+            return Err(anyhow!(
+                "lane {lane}: prompt of {prompt_len} leaves no decode capacity \
+                 (max_seq {})", self.max_seq));
+        }
         let slot = self
             .slots
             .get_mut(lane)
@@ -69,13 +91,47 @@ impl KvPool {
         if slot.is_some() {
             return Err(anyhow!("lane {lane} already bound"));
         }
-        *slot = Some(LaneSlot { request_id, pos: self.prefill_len });
+        *slot = Some(LaneSlot { request_id, prompt_len, pos: 0 });
         Ok(())
     }
 
-    /// Remaining decode capacity of a lane.
+    /// Record `tokens` prompt tokens landing in the lane's cache (one
+    /// prefill chunk). Errors when the chunk overruns the prompt.
+    pub fn fill(&mut self, lane: usize, tokens: usize) -> Result<()> {
+        let slot = self
+            .slots
+            .get_mut(lane)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow!("fill on unbound lane {lane}"))?;
+        if slot.pos + tokens > slot.prompt_len {
+            return Err(anyhow!(
+                "lane {lane}: chunk of {tokens} overruns prompt ({} of {} filled)",
+                slot.pos, slot.prompt_len));
+        }
+        slot.pos += tokens;
+        Ok(())
+    }
+
+    /// Whether the lane's whole prompt is cache-resident (decode-ready).
+    pub fn is_warm(&self, lane: usize) -> bool {
+        self.slot(lane).map(|s| s.pos >= s.prompt_len).unwrap_or(false)
+    }
+
+    /// Prompt tokens still to prefill on `lane` (0 when warm or free).
+    pub fn prefill_remaining(&self, lane: usize) -> usize {
+        self.slot(lane)
+            .map(|s| s.prompt_len.saturating_sub(s.pos))
+            .unwrap_or(0)
+    }
+
+    /// Remaining DECODE capacity of a lane. For a partially prefilled
+    /// lane this is the capacity left once its prompt is resident —
+    /// unfilled prompt positions are already spoken for and must not be
+    /// reported as decode headroom.
     pub fn remaining(&self, lane: usize) -> usize {
-        self.slot(lane).map(|s| self.max_seq - s.pos).unwrap_or(0)
+        self.slot(lane)
+            .map(|s| self.max_seq - s.pos.max(s.prompt_len))
+            .unwrap_or(0)
     }
 
     /// Consume one decode step's cache slot on `lane`.
@@ -86,6 +142,11 @@ impl KvPool {
             .get_mut(lane)
             .and_then(|s| s.as_mut())
             .ok_or_else(|| anyhow!("advance on unbound lane {lane}"))?;
+        if slot.pos < slot.prompt_len {
+            return Err(anyhow!(
+                "decode advance on lane {lane} before its prefill completed \
+                 ({} of {} prompt tokens resident)", slot.pos, slot.prompt_len));
+        }
         if slot.pos + 1 > max_seq {
             return Err(anyhow!("KV overflow on lane {lane} at pos {}", slot.pos));
         }
@@ -108,11 +169,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn bind_advance_release_cycle() {
+    fn bind_fill_advance_release_cycle() {
         let mut p = KvPool::new(2, 4, 8);
         assert_eq!(p.free_lanes(), vec![0, 1]);
-        p.bind(0, 11).unwrap();
-        assert_eq!(p.slot(0).unwrap().pos, 4);
+        p.bind(0, 11, 4).unwrap();
+        assert_eq!(p.slot(0).unwrap().pos, 0);
+        assert!(!p.is_warm(0));
+        assert_eq!(p.prefill_remaining(0), 4);
+        p.fill(0, 4).unwrap();
+        assert!(p.is_warm(0));
         assert_eq!(p.remaining(0), 4);
         p.advance(0).unwrap();
         assert_eq!(p.slot(0).unwrap().pos, 5);
@@ -123,17 +188,45 @@ mod tests {
     }
 
     #[test]
+    fn chunked_fill_reports_partial_state() {
+        let mut p = KvPool::new(1, 6, 10);
+        p.bind(0, 1, 6).unwrap();
+        p.fill(0, 4).unwrap();
+        assert!(!p.is_warm(0));
+        assert_eq!(p.prefill_remaining(0), 2);
+        // half-prefilled lane: decode headroom excludes the unfilled
+        // prompt tail (max_seq - prompt_len, NOT max_seq - pos)
+        assert_eq!(p.remaining(0), 4);
+        // decode before warm is an error
+        assert!(p.advance(0).is_err());
+        // chunk overrun is an error
+        assert!(p.fill(0, 3).is_err());
+        p.fill(0, 2).unwrap();
+        assert!(p.is_warm(0));
+        assert_eq!(p.remaining(0), 4);
+    }
+
+    #[test]
     fn double_bind_rejected() {
         let mut p = KvPool::new(1, 2, 6);
-        p.bind(0, 1).unwrap();
-        assert!(p.bind(0, 2).is_err());
-        assert!(p.bind(7, 3).is_err());
+        p.bind(0, 1, 2).unwrap();
+        assert!(p.bind(0, 2, 2).is_err());
+        assert!(p.bind(7, 3, 2).is_err());
+    }
+
+    #[test]
+    fn bind_requires_decode_capacity() {
+        let mut p = KvPool::new(2, 4, 5);
+        assert!(p.bind(0, 1, 0).is_err());
+        assert!(p.bind(0, 1, 5).is_err()); // prompt fills max_seq: no slot left
+        assert!(p.bind(0, 1, 4).is_ok());
     }
 
     #[test]
     fn overflow_rejected() {
         let mut p = KvPool::new(1, 4, 5);
-        p.bind(0, 1).unwrap();
+        p.bind(0, 1, 4).unwrap();
+        p.fill(0, 4).unwrap();
         p.advance(0).unwrap();
         assert!(p.advance(0).is_err());
     }
@@ -143,5 +236,6 @@ mod tests {
         let mut p = KvPool::new(2, 2, 6);
         assert!(p.release(1).is_err());
         assert!(p.advance(1).is_err());
+        assert!(p.fill(1, 1).is_err());
     }
 }

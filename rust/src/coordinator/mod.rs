@@ -14,6 +14,7 @@ mod backend;
 mod engine;
 mod hmt;
 mod kv;
+mod openloop;
 mod request;
 mod scheduler;
 
@@ -22,8 +23,9 @@ pub use backend::{BackendSpec, ExecBackend, LaneStep, MockBackend, ModeledBacken
 pub use engine::{Engine, StepReport, TokenEvent};
 pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
 pub use kv::{KvPool, LaneSlot};
+pub use openloop::{OpenLoopConfig, OpenLoopStats, run_open_loop};
 pub use request::{FinishReason, GenRequest, GenResult, ServeMetrics};
-pub use scheduler::{Completion, Scheduler};
+pub use scheduler::{ChunkPlan, Completion, PrefillPolicy, RequestPhase, Scheduler};
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -53,8 +55,16 @@ pub struct Router {
 }
 
 impl Router {
-    /// Spawn the engine thread over the artifact directory.
+    /// Spawn the engine thread over the artifact directory with the
+    /// default `Blocking` admission policy.
     pub fn spawn(artifact_dir: String) -> Result<Self> {
+        Self::spawn_with_policy(artifact_dir, PrefillPolicy::Blocking)
+    }
+
+    /// Spawn the engine thread with an explicit admission policy (the
+    /// engine coerces it to the artifact set's capabilities — see
+    /// [`Engine::with_policy`]).
+    pub fn spawn_with_policy(artifact_dir: String, policy: PrefillPolicy) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Cmd>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
@@ -63,7 +73,7 @@ impl Router {
                 let engine = match crate::runtime::Runtime::open(&artifact_dir) {
                     Ok(rt) => {
                         let _ = ready_tx.send(Ok(()));
-                        Engine::pjrt(rt)
+                        Engine::with_policy(PjrtBackend::new(rt), policy)
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));

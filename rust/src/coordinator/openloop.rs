@@ -1,0 +1,261 @@
+//! Open-loop bursty arrival harness over the [`ModeledBackend`].
+//!
+//! Drives the engine with a deterministic bursty arrival process in
+//! VIRTUAL time (the modeled hardware clocks), so prefill-policy
+//! tradeoffs are measurable without artifacts and without wall-clock
+//! noise: requests are submitted when the model clock passes their
+//! arrival time, token timestamps are read off the backend clock after
+//! each tick, and TTFT/TPOT percentiles come out in modeled seconds.
+//!
+//! Both the tier-1 chunked-prefill acceptance test and the
+//! `benches/arrival_rate.rs` harness run through here, so the number CI
+//! tracks per PR is the number the test gates on.
+
+use anyhow::{anyhow, Result};
+
+use super::backend::ModeledBackend;
+use super::engine::Engine;
+use super::request::{percentile, GenRequest};
+use super::scheduler::PrefillPolicy;
+use crate::util::prop::Rng;
+
+/// Workload shape for one open-loop run.
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    pub lanes: usize,
+    pub prefill_len: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    /// Total requests, spread evenly over `bursts`.
+    pub requests: usize,
+    /// Arrival bursts `burst_gap_s` apart; within a burst arrivals are
+    /// jittered over `burst_jitter_s`.
+    pub bursts: usize,
+    pub burst_gap_s: f64,
+    pub burst_jitter_s: f64,
+    /// Generation budgets drawn uniformly from this inclusive range
+    /// (skewed workloads are where iteration-level scheduling pays).
+    pub min_new_tokens: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for OpenLoopConfig {
+    /// The acceptance workload: three 8-request bursts against a 4-lane
+    /// U280-modeled pool, budgets skewed ~3× — heavy enough that lanes
+    /// churn (admission prefill keeps contending with decode) without
+    /// saturating the queue into pure-backlog behavior.
+    fn default() -> Self {
+        OpenLoopConfig {
+            lanes: 4,
+            prefill_len: 128,
+            max_seq: 320,
+            vocab: 512,
+            requests: 24,
+            bursts: 3,
+            burst_gap_s: 1.5,
+            burst_jitter_s: 0.05,
+            min_new_tokens: 64,
+            max_new_tokens: 191,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Virtual-time percentiles of one open-loop run.
+#[derive(Debug, Clone)]
+pub struct OpenLoopStats {
+    pub policy: PrefillPolicy,
+    pub requests: usize,
+    pub makespan_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p95_s: f64,
+    pub decode_iterations: usize,
+    pub prefill_calls: usize,
+    pub prefill_chunks: usize,
+}
+
+impl OpenLoopStats {
+    /// One JSON object (hand-rolled: offline vendored set has no serde).
+    pub fn to_json(&self) -> String {
+        let policy = match self.policy {
+            PrefillPolicy::Blocking => r#""blocking""#.to_string(),
+            PrefillPolicy::Chunked { chunk_len, decode_priority } => format!(
+                r#"{{"chunked": {{"chunk_len": {chunk_len}, "decode_priority": {decode_priority}}}}}"#
+            ),
+        };
+        format!(
+            "{{\"policy\": {policy}, \"requests\": {}, \"makespan_s\": {:.6}, \
+             \"ttft_p50_s\": {:.6}, \"ttft_p95_s\": {:.6}, \
+             \"tpot_p50_s\": {:.6}, \"tpot_p95_s\": {:.6}, \
+             \"decode_iterations\": {}, \"prefill_calls\": {}, \"prefill_chunks\": {}}}",
+            self.requests, self.makespan_s,
+            self.ttft_p50_s, self.ttft_p95_s,
+            self.tpot_p50_s, self.tpot_p95_s,
+            self.decode_iterations, self.prefill_calls, self.prefill_chunks,
+        )
+    }
+}
+
+/// Run one open-loop workload under `policy`; identical `cfg` + `seed`
+/// produce the identical arrival trace for every policy, so runs are
+/// directly comparable.
+pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<OpenLoopStats> {
+    if cfg.requests == 0 || cfg.bursts == 0 {
+        return Err(anyhow!("open loop needs requests > 0 and bursts > 0"));
+    }
+    if cfg.min_new_tokens == 0 || cfg.max_new_tokens < cfg.min_new_tokens {
+        return Err(anyhow!("bad budget range"));
+    }
+    if cfg.prefill_len + cfg.max_new_tokens > cfg.max_seq {
+        return Err(anyhow!(
+            "budgets up to {} do not fit: {} prompt + budget > max_seq {}",
+            cfg.max_new_tokens, cfg.prefill_len, cfg.max_seq));
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    // the arrival trace: (time, request), sorted by time for delivery.
+    // `arrival_by_id` keeps each request id's own arrival time — jitter
+    // can permute ids within a burst, so sorted position ≠ id.
+    let mut trace: Vec<(f64, GenRequest)> = Vec::with_capacity(cfg.requests);
+    let mut arrival_by_id = vec![0.0f64; cfg.requests];
+    for i in 0..cfg.requests {
+        let burst = i % cfg.bursts;
+        let at = burst as f64 * cfg.burst_gap_s + rng.f64() * cfg.burst_jitter_s;
+        let prompt = rng.tokens(cfg.prefill_len, cfg.vocab as i32);
+        let budget = rng.usize_in(cfg.min_new_tokens, cfg.max_new_tokens);
+        arrival_by_id[i] = at;
+        trace.push((at, GenRequest::new(i as u64, prompt, budget)));
+    }
+    trace.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let arrival: Vec<f64> = trace.iter().map(|(t, _)| *t).collect();
+
+    let backend = ModeledBackend::u280(cfg.lanes, cfg.prefill_len, cfg.max_seq,
+                                       cfg.vocab);
+    let mut engine = Engine::with_policy(backend, policy);
+    if engine.policy() != policy {
+        return Err(anyhow!("modeled backend cannot run {policy:?}"));
+    }
+
+    let n = cfg.requests;
+    let mut first_tok = vec![f64::NAN; n];
+    let mut last_tok = vec![f64::NAN; n];
+    let mut tok_count = vec![0usize; n];
+    let mut next_arrival = 0usize;
+    let mut pending = trace.into_iter().map(|(_, r)| Some(r)).collect::<Vec<_>>();
+
+    loop {
+        // open loop: everything whose arrival time has passed gets
+        // submitted, no matter how backed up the engine is
+        let now = engine.backend.model_time_s;
+        while next_arrival < n && arrival[next_arrival] <= now {
+            let req = pending[next_arrival].take().expect("arrival delivered once");
+            engine.submit(req)?;
+            next_arrival += 1;
+        }
+        if !engine.has_work() {
+            if next_arrival >= n {
+                break;
+            }
+            // idle gap: jump the model clocks to the next arrival
+            engine.backend.advance_to(arrival[next_arrival]);
+            continue;
+        }
+        let report = engine.step()?;
+        let t = engine.backend.model_time_s;
+        for ev in &report.events {
+            let id = ev.id as usize;
+            if tok_count[id] == 0 {
+                first_tok[id] = t;
+            }
+            last_tok[id] = t;
+            tok_count[id] += 1;
+        }
+    }
+
+    let mut ttft = Vec::with_capacity(n);
+    let mut tpot = Vec::new();
+    for i in 0..n {
+        if !first_tok[i].is_finite() {
+            return Err(anyhow!("request {i} produced no tokens"));
+        }
+        ttft.push(first_tok[i] - arrival_by_id[i]);
+        if tok_count[i] > 1 {
+            tpot.push((last_tok[i] - first_tok[i]) / (tok_count[i] - 1) as f64);
+        }
+    }
+
+    Ok(OpenLoopStats {
+        policy: engine.policy(),
+        requests: n,
+        makespan_s: engine.backend.model_time_s,
+        ttft_p50_s: percentile(&ttft, 50.0),
+        ttft_p95_s: percentile(&ttft, 95.0),
+        tpot_p50_s: percentile(&tpot, 50.0),
+        tpot_p95_s: percentile(&tpot, 95.0),
+        decode_iterations: engine.metrics.iterations,
+        prefill_calls: engine.metrics.prefill_calls,
+        prefill_chunks: engine.metrics.prefill_chunks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> OpenLoopConfig {
+        OpenLoopConfig {
+            requests: 6,
+            bursts: 2,
+            min_new_tokens: 8,
+            max_new_tokens: 24,
+            ..OpenLoopConfig::default()
+        }
+    }
+
+    #[test]
+    fn runs_deterministically() {
+        let cfg = small();
+        let a = run_open_loop(PrefillPolicy::Blocking, &cfg).unwrap();
+        let b = run_open_loop(PrefillPolicy::Blocking, &cfg).unwrap();
+        assert_eq!(a.requests, 6);
+        assert!(a.makespan_s > 0.0);
+        assert!((a.ttft_p95_s - b.ttft_p95_s).abs() < 1e-12);
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunked_uses_chunks_blocking_uses_calls() {
+        let cfg = small();
+        let b = run_open_loop(PrefillPolicy::Blocking, &cfg).unwrap();
+        assert!(b.prefill_calls > 0);
+        assert_eq!(b.prefill_chunks, 0);
+        let c = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(c.prefill_calls, 0);
+        // 128-token prompts in 32-token chunks: 4 chunks per request
+        assert_eq!(c.prefill_chunks, 4 * cfg.requests);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let mut cfg = small();
+        cfg.max_new_tokens = 400; // does not fit max_seq
+        assert!(run_open_loop(PrefillPolicy::Blocking, &cfg).is_err());
+        cfg = small();
+        cfg.requests = 0;
+        assert!(run_open_loop(PrefillPolicy::Blocking, &cfg).is_err());
+    }
+
+    #[test]
+    fn stats_serialize_to_json() {
+        let cfg = small();
+        let s = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        let j = s.to_json();
+        assert!(j.contains("\"chunk_len\": 32"));
+        assert!(j.contains("\"ttft_p95_s\""));
+        // round-trips through the in-tree JSON parser
+        assert!(crate::util::Json::parse(&j).is_ok());
+    }
+}

@@ -47,6 +47,10 @@ pub struct GenResult {
     pub tokens: Vec<i32>,
     /// Time to first token: queue wait + prefill + first sample.
     pub ttft: Duration,
+    /// Time from submission to lane admission (queueing for a free
+    /// lane). The rest of the TTFT — [`GenResult::prefill_wait`] — is
+    /// the prompt becoming cache-resident.
+    pub queue_wait: Duration,
     /// Wall time from the first token to the last (this request's decode
     /// residency, not a batch aggregate).
     pub decode_time: Duration,
@@ -54,6 +58,13 @@ pub struct GenResult {
 }
 
 impl GenResult {
+    /// Admission-to-first-token span: whole-prompt prefill latency under
+    /// `Blocking`, chunk streaming (interleaved with other lanes'
+    /// decode iterations) under `Chunked`.
+    pub fn prefill_wait(&self) -> Duration {
+        self.ttft.saturating_sub(self.queue_wait)
+    }
+
     /// Decode throughput for this request, tokens/second.
     pub fn decode_tps(&self) -> f64 {
         if self.tokens.len() <= 1 || self.decode_time.is_zero() {
@@ -72,7 +83,9 @@ impl GenResult {
 }
 
 /// Nearest-rank percentile of an unsorted sample set; 0.0 when empty.
-fn percentile(samples: &[f64], q: f64) -> f64 {
+/// Shared by [`ServeMetrics`] and the coordinator's open-loop harness so
+/// the CI-gated percentiles can never diverge from the metrics surface.
+pub(crate) fn percentile(samples: &[f64], q: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
@@ -91,8 +104,11 @@ fn percentile(samples: &[f64], q: f64) -> f64 {
 pub struct ServeMetrics {
     /// Completed requests.
     pub requests: usize,
-    /// Prefill invocations (one may admit several lanes).
+    /// Whole-pool (blocking) prefill invocations (one may admit several
+    /// lanes).
     pub prefill_calls: usize,
+    /// Chunked prefill invocations (one chunk of one lane's prompt).
+    pub prefill_chunks: usize,
     /// Decode iterations executed (`Engine::step` decode phases).
     pub iterations: usize,
     /// Decode lane-steps: sum over iterations of lanes stepped. The
@@ -104,6 +120,13 @@ pub struct ServeMetrics {
     pub prefill_tokens: usize,
     /// Per-request time-to-first-token samples, seconds.
     pub ttft_s: Vec<f64>,
+    /// Per-request queue-wait samples (submission → lane admission),
+    /// seconds. With `prefill_wait_s` this splits the TTFT story: is the
+    /// tail queueing for lanes or waiting on prompt prefill?
+    pub queue_wait_s: Vec<f64>,
+    /// Per-request prefill-wait samples (admission → first token),
+    /// seconds.
+    pub prefill_wait_s: Vec<f64>,
     /// Per-request time-per-output-token samples, seconds.
     pub tpot_s: Vec<f64>,
 }
@@ -114,6 +137,8 @@ impl ServeMetrics {
         self.requests += 1;
         self.tokens_generated += result.tokens.len();
         self.ttft_s.push(result.ttft.as_secs_f64());
+        self.queue_wait_s.push(result.queue_wait.as_secs_f64());
+        self.prefill_wait_s.push(result.prefill_wait().as_secs_f64());
         if result.tokens.len() > 1 {
             self.tpot_s.push(result.tpot_s());
         }
@@ -151,6 +176,22 @@ impl ServeMetrics {
         percentile(&self.tpot_s, 95.0)
     }
 
+    pub fn queue_wait_p50(&self) -> f64 {
+        percentile(&self.queue_wait_s, 50.0)
+    }
+
+    pub fn queue_wait_p95(&self) -> f64 {
+        percentile(&self.queue_wait_s, 95.0)
+    }
+
+    pub fn prefill_wait_p50(&self) -> f64 {
+        percentile(&self.prefill_wait_s, 50.0)
+    }
+
+    pub fn prefill_wait_p95(&self) -> f64 {
+        percentile(&self.prefill_wait_s, 95.0)
+    }
+
     /// Decode lane utilization: fraction of lane-iterations that carried
     /// a live request (1.0 = every lane busy every iteration).
     pub fn lane_utilization(&self, pool_lanes: usize) -> f64 {
@@ -168,6 +209,7 @@ mod tests {
     #[test]
     fn decode_tps_counts_continuation_tokens() {
         let r = GenResult { id: 0, tokens: vec![1, 2, 3, 4, 5], ttft: Duration::ZERO,
+                            queue_wait: Duration::ZERO,
                             decode_time: Duration::from_secs(2),
                             finish_reason: FinishReason::Length };
         assert!((r.decode_tps() - 2.0).abs() < 1e-9);
@@ -196,6 +238,7 @@ mod tests {
         let mut m = ServeMetrics::default();
         m.record(&GenResult { id: 1, tokens: vec![7, 8, 9],
                               ttft: Duration::from_millis(10),
+                              queue_wait: Duration::from_millis(4),
                               decode_time: Duration::from_millis(20),
                               finish_reason: FinishReason::Stop });
         assert_eq!(m.requests, 1);
@@ -203,6 +246,9 @@ mod tests {
         assert_eq!(m.ttft_s.len(), 1);
         assert_eq!(m.tpot_s.len(), 1);
         assert!((m.ttft_p50() - 0.01).abs() < 1e-9);
+        // queue wait + prefill wait partition the TTFT
+        assert!((m.queue_wait_p50() - 0.004).abs() < 1e-9);
+        assert!((m.prefill_wait_p50() - 0.006).abs() < 1e-9);
     }
 
     #[test]

@@ -4,10 +4,24 @@
 //! batches by duplicating a real lane and decoded every lane to the
 //! batch max). The scheduler owns an admission queue and the fixed
 //! [`KvPool`] of decode lanes; each [`Engine::step`](super::Engine::step)
-//! runs ONE decode iteration across the active lanes. Lanes finish
-//! independently — per-request `max_new_tokens` and stop tokens — and a
-//! freed lane is backfilled from the queue on the very next iteration,
-//! so no decode slot is ever spent on a finished or duplicated request.
+//! runs ONE scheduler tick. Lanes finish independently — per-request
+//! `max_new_tokens` and stop tokens — and a freed lane is backfilled
+//! from the queue on the very next iteration, so no decode slot is ever
+//! spent on a finished or duplicated request.
+//!
+//! Admission prefill is governed by a [`PrefillPolicy`]:
+//!
+//! * [`PrefillPolicy::Blocking`] — the PR 1 behavior: one whole-pool
+//!   prefill invocation warms every admitted lane before the tick's
+//!   decode iteration. Simple, but every queued request's TTFT inflates
+//!   while decode stalls behind the prompt.
+//! * [`PrefillPolicy::Chunked`] — prompts stream into their lanes in
+//!   `chunk_len`-token slices interleaved with decode iterations (the
+//!   stage-customized hardware story: the prefill engine chews prompt
+//!   chunks while the decode engine keeps stepping resident lanes). A
+//!   request occupying a lane mid-prompt is in the
+//!   [`RequestPhase::Prefilling`] state and joins decode iterations only
+//!   once its prompt is cache-resident.
 //!
 //! Admission policy is capability-driven: with a per-lane-position
 //! backend (`BackendSpec::per_lane_pos`) any free lane is backfilled
@@ -23,9 +37,58 @@ use super::backend::LaneStep;
 use super::kv::KvPool;
 use super::request::{FinishReason, GenRequest, GenResult};
 
+/// How admission prefill shares the engine with decode iterations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillPolicy {
+    /// Whole-prompt, whole-pool admission prefill (PR 1 behavior): the
+    /// tick's decode iteration waits for the full prefill invocation.
+    Blocking,
+    /// Stream prompts in `chunk_len`-token slices interleaved with
+    /// decode iterations.
+    Chunked {
+        /// Prompt tokens per prefill chunk (≥ 1; the final chunk of a
+        /// prompt may be shorter).
+        chunk_len: usize,
+        /// When true (the default posture), at most ONE chunk is issued
+        /// per tick so resident lanes keep their decode cadence; when
+        /// false every prefilling lane gets a chunk each tick (drains
+        /// admissions faster at the decode lanes' expense).
+        decode_priority: bool,
+    },
+}
+
+impl PrefillPolicy {
+    /// Chunked with the decode-protecting default.
+    pub fn chunked(chunk_len: usize) -> Self {
+        PrefillPolicy::Chunked { chunk_len, decode_priority: true }
+    }
+}
+
+/// Where a lane-resident request is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestPhase {
+    /// The prompt is streaming into the lane's cache; `next_chunk` is
+    /// the index of the next chunk to issue (chunk 0 starts at cache
+    /// position 0).
+    Prefilling { next_chunk: usize },
+    /// The prompt is resident; the lane joins decode iterations.
+    Decoding,
+}
+
 /// A retired request paired with its admission sequence number, so
 /// drain-style callers can restore submission order across iterations.
 pub type Completion = (u64, GenResult);
+
+/// One planned prefill chunk: feed `tokens` into `lane` starting at
+/// cache position `start_pos`. `last` marks the chunk that completes
+/// the prompt (its logits yield the request's first generated token).
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkPlan<'a> {
+    pub lane: usize,
+    pub start_pos: usize,
+    pub tokens: &'a [i32],
+    pub last: bool,
+}
 
 /// A queued request with its submission order and arrival time.
 #[derive(Debug, Clone)]
@@ -41,6 +104,8 @@ struct InFlight {
     req: GenRequest,
     seq: u64,
     arrived: Instant,
+    admitted_at: Instant,
+    phase: RequestPhase,
     tokens: Vec<i32>,
     first_token_at: Instant,
 }
@@ -62,6 +127,7 @@ impl InFlight {
             id: self.req.id,
             tokens: self.tokens,
             ttft: self.first_token_at - self.arrived,
+            queue_wait: self.admitted_at - self.arrived,
             decode_time: now - self.first_token_at,
             finish_reason,
         })
@@ -149,24 +215,28 @@ impl Scheduler {
         !self.queue.is_empty() || !self.pool.is_empty()
     }
 
-    /// Pick the lanes to admit this iteration and bind them. Returns the
-    /// bound lanes; fetch each prompt with [`Scheduler::prompt`] to build
-    /// the backend's prefill slots.
+    /// Pick the lanes to admit this iteration and bind them (empty cache
+    /// rows, [`RequestPhase::Prefilling`] at chunk 0). Returns the bound
+    /// lanes; the engine then feeds each prompt through the policy's
+    /// prefill path.
     pub fn plan_admissions(&mut self) -> Vec<usize> {
         if self.queue.is_empty() || (self.gang && !self.pool.is_empty()) {
             return Vec::new();
         }
         let free = self.pool.free_lanes();
         let mut admitted = Vec::new();
+        let now = Instant::now();
         for lane in free {
             let Some(p) = self.queue.pop_front() else { break };
             self.pool
-                .bind(lane, p.req.id)
+                .bind(lane, p.req.id, p.req.prompt.len())
                 .expect("free lane bind cannot fail");
             self.lanes[lane] = Some(InFlight {
                 req: p.req,
                 seq: p.seq,
                 arrived: p.arrived,
+                admitted_at: now,
+                phase: RequestPhase::Prefilling { next_chunk: 0 },
                 // placeholder; overwritten when the prefill completes
                 first_token_at: p.arrived,
                 tokens: Vec::new(),
@@ -203,26 +273,111 @@ impl Scheduler {
             .ok_or_else(|| anyhow!("no request bound to lane {lane}"))
     }
 
-    /// Record a prefill's first token; completes immediately when the
-    /// budget is one token or the first token is a stop token.
-    pub fn record_prefill(&mut self, lane: usize, token: i32) -> Result<Option<Completion>> {
+    /// Lifecycle phase of the request on `lane` (None when unbound).
+    pub fn phase(&self, lane: usize) -> Option<RequestPhase> {
+        self.lanes.get(lane).and_then(|l| l.as_ref()).map(|f| f.phase)
+    }
+
+    /// Lanes with a prompt still streaming in, oldest admission first —
+    /// FIFO chunk service completes the head request's prefill (and thus
+    /// its first token) soonest.
+    pub fn prefilling_lanes(&self) -> Vec<usize> {
+        let mut lanes: Vec<usize> = self
+            .pool
+            .active_lanes()
+            .into_iter()
+            .filter(|&l| {
+                matches!(self.lanes[l].as_ref().map(|f| f.phase),
+                         Some(RequestPhase::Prefilling { .. }))
+            })
+            .collect();
+        lanes.sort_by_key(|&l| self.lanes[l].as_ref().map(|f| f.seq).unwrap_or(u64::MAX));
+        lanes
+    }
+
+    /// The next chunk to feed `lane` under `chunk_len`. The final chunk
+    /// of a prompt may be shorter than `chunk_len` (prompt length not a
+    /// multiple) or the whole prompt (prompt shorter than one chunk).
+    pub fn next_chunk(&self, lane: usize, chunk_len: usize) -> Result<ChunkPlan<'_>> {
+        if chunk_len == 0 {
+            return Err(anyhow!("chunk_len must be > 0"));
+        }
+        let flight = self
+            .lanes
+            .get(lane)
+            .and_then(|l| l.as_ref())
+            .ok_or_else(|| anyhow!("no request bound to lane {lane}"))?;
+        let RequestPhase::Prefilling { next_chunk } = flight.phase else {
+            return Err(anyhow!("lane {lane} is not prefilling"));
+        };
+        let start_pos = next_chunk * chunk_len;
+        let prompt = flight.req.prompt.as_slice();
+        if start_pos >= prompt.len() {
+            return Err(anyhow!(
+                "lane {lane}: chunk {next_chunk} starts past the prompt \
+                 ({start_pos} >= {})", prompt.len()));
+        }
+        let end = (start_pos + chunk_len).min(prompt.len());
+        Ok(ChunkPlan {
+            lane,
+            start_pos,
+            tokens: &prompt[start_pos..end],
+            last: end == prompt.len(),
+        })
+    }
+
+    /// Record a completed prefill chunk of `len` tokens on `lane`. For a
+    /// non-final chunk `token` is ignored (the artifact's intermediate
+    /// logits are meaningless mid-prompt). The final chunk delivers the
+    /// request's first generated token exactly like a blocking prefill —
+    /// completing immediately when the budget is one token or the first
+    /// token is a stop token.
+    pub fn record_chunk(&mut self, lane: usize, len: usize, token: i32)
+        -> Result<Option<Completion>>
+    {
         let now = Instant::now();
+        self.pool.fill(lane, len)?;
+        let warm = self.pool.is_warm(lane);
         let flight = self
             .lanes
             .get_mut(lane)
             .and_then(|l| l.as_mut())
-            .ok_or_else(|| anyhow!("prefill result for unbound lane {lane}"))?;
-        flight.first_token_at = now;
-        flight.tokens.push(token);
-        self.retire_if_finished(lane, now)
+            .ok_or_else(|| anyhow!("chunk result for unbound lane {lane}"))?;
+        match flight.phase {
+            RequestPhase::Prefilling { next_chunk } => {
+                if warm {
+                    flight.phase = RequestPhase::Decoding;
+                    flight.first_token_at = now;
+                    flight.tokens.push(token);
+                    self.retire_if_finished(lane, now)
+                } else {
+                    flight.phase = RequestPhase::Prefilling { next_chunk: next_chunk + 1 };
+                    Ok(None)
+                }
+            }
+            RequestPhase::Decoding => {
+                Err(anyhow!("chunk result for lane {lane} already decoding"))
+            }
+        }
     }
 
-    /// The decode iteration plan: every active lane with its last token
-    /// and write position.
+    /// Record a blocking prefill's first token: the whole prompt lands
+    /// at once and the lane moves straight to decoding; completes
+    /// immediately when the budget is one token or the first token is a
+    /// stop token.
+    pub fn record_prefill(&mut self, lane: usize, token: i32) -> Result<Option<Completion>> {
+        let remaining = self.pool.prefill_remaining(lane);
+        self.record_chunk(lane, remaining, token)
+    }
+
+    /// The decode iteration plan: every warm lane with its last token
+    /// and write position. Lanes still prefilling are excluded — their
+    /// prompts are not yet cache-resident.
     pub fn decode_steps(&self) -> Vec<LaneStep> {
         self.pool
             .active_lanes()
             .into_iter()
+            .filter(|&lane| self.pool.is_warm(lane))
             .filter_map(|lane| {
                 let flight = self.lanes[lane].as_ref()?;
                 let slot = self.pool.slot(lane)?;
@@ -378,6 +533,77 @@ mod tests {
         let (_, done) = s.record_decode(0, 2).unwrap().unwrap();
         assert_eq!(done.tokens.len(), 2);
         assert_eq!(done.finish_reason, FinishReason::Length);
+    }
+
+    #[test]
+    fn chunked_prefill_state_machine() {
+        let mut s = sched();
+        s.submit(req(1, 4)).unwrap();
+        s.submit(req(2, 4)).unwrap();
+        s.plan_admissions();
+        assert_eq!(s.prefilling_lanes(), vec![0, 1]);
+        assert_eq!(s.phase(0), Some(RequestPhase::Prefilling { next_chunk: 0 }));
+        // prefilling lanes do not decode
+        assert!(s.decode_steps().is_empty());
+
+        // 3-token chunks over a 4-token prompt: chunks of 3 and 1
+        let plan = s.next_chunk(0, 3).unwrap();
+        assert_eq!((plan.start_pos, plan.tokens.len(), plan.last), (0, 3, false));
+        assert!(s.record_chunk(0, 3, 0).unwrap().is_none());
+        assert_eq!(s.phase(0), Some(RequestPhase::Prefilling { next_chunk: 1 }));
+        let plan = s.next_chunk(0, 3).unwrap();
+        assert_eq!((plan.start_pos, plan.tokens.len(), plan.last), (3, 1, true));
+        assert!(s.record_chunk(0, 1, 9).unwrap().is_none());
+        assert_eq!(s.phase(0), Some(RequestPhase::Decoding));
+        // lane 0 decodes while lane 1 is still prefilling
+        assert_eq!(s.prefilling_lanes(), vec![1]);
+        let steps = s.decode_steps();
+        assert_eq!(steps.len(), 1);
+        assert_eq!((steps[0].lane, steps[0].token, steps[0].pos), (0, 9, 4));
+
+        // prompt shorter than one chunk: a single final chunk
+        let plan = s.next_chunk(1, 64).unwrap();
+        assert_eq!((plan.start_pos, plan.tokens.len(), plan.last), (0, 4, true));
+        assert!(s.record_chunk(1, 4, 7).unwrap().is_none());
+        assert_eq!(s.decode_steps().len(), 2);
+        // chunk ops on a decoding lane are an error
+        assert!(s.next_chunk(1, 4).is_err());
+        assert!(s.record_chunk(1, 1, 0).is_err());
+    }
+
+    #[test]
+    fn chunked_first_token_can_retire_immediately() {
+        let mut s = sched();
+        s.submit(req(1, 1)).unwrap(); // 1-token budget
+        s.submit(req(2, 8).with_stop_tokens(vec![42])).unwrap();
+        s.plan_admissions();
+        // budget-1 request retires on its final chunk
+        assert!(s.record_chunk(0, 2, 5).unwrap().is_none());
+        let (_, done) = s.record_chunk(0, 2, 5).unwrap().unwrap();
+        assert_eq!(done.finish_reason, FinishReason::Length);
+        assert_eq!(done.tokens, vec![5]);
+        // stop token as the first generated token retires too
+        assert!(s.record_chunk(1, 2, 0).unwrap().is_none());
+        let (_, done) = s.record_chunk(1, 2, 42).unwrap().unwrap();
+        assert_eq!(done.finish_reason, FinishReason::Stop);
+        assert_eq!(s.active(), 0);
+    }
+
+    #[test]
+    fn freed_lane_backfills_while_neighbor_half_prefilled() {
+        let mut s = sched();
+        s.submit(req(1, 1)).unwrap();
+        s.submit(req(2, 4)).unwrap();
+        s.submit(req(3, 2)).unwrap();
+        s.plan_admissions();
+        // lane 1 gets half its prompt; lane 0 completes and retires
+        assert!(s.record_chunk(1, 2, 0).unwrap().is_none());
+        assert!(s.record_prefill(0, 7).unwrap().is_some());
+        // the freed lane backfills while lane 1 is still mid-prompt
+        assert_eq!(s.plan_admissions(), vec![0]);
+        assert_eq!(s.prefilling_lanes(), vec![1, 0]); // oldest (seq) first
+        assert_eq!(s.phase(0), Some(RequestPhase::Prefilling { next_chunk: 0 }));
+        assert_eq!(s.phase(1), Some(RequestPhase::Prefilling { next_chunk: 1 }));
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! flexllm report [--table N] [--fig N] [--all] [--csv PATH] [--artifacts DIR]
 //! flexllm serve [--requests N] [--new-tokens N] [--spread K] [--arrival-rate R]
 //!               [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
-//!               [--artifacts DIR]
+//!               [--prefill-policy blocking|chunked] [--prefill-chunk C]
+//!               [--prefill-greedy] [--artifacts DIR]
 //! flexllm ablate [--artifacts DIR]
 //! flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
 //! flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
@@ -17,7 +18,7 @@ use anyhow::{anyhow, bail, Result};
 use flexllm::arch::{AcceleratorSystem, DecodeArch, PrefillArch};
 use flexllm::config::{DeviceConfig, ModelDims};
 use flexllm::coordinator::{Engine, ExecBackend, GenRequest, GenResult, MockBackend,
-                           ModeledBackend, Router, ServeMetrics};
+                           ModeledBackend, PrefillPolicy, Router, ServeMetrics};
 use flexllm::eval;
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;
@@ -30,7 +31,8 @@ USAGE:
       Regenerate paper tables (1-6) and figures (1,2,6,7,8).
   flexllm serve [--requests N] [--new-tokens N] [--spread K] [--arrival-rate R]
                 [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
-                [--artifacts DIR]
+                [--prefill-policy blocking|chunked] [--prefill-chunk C]
+                [--prefill-greedy] [--artifacts DIR]
       Serve generation requests through the iteration-level scheduler.
       --spread K        skew budgets: request i gets ~new-tokens·(i%K+1)/K
       --arrival-rate R  stagger submissions at R req/s (pjrt backend)
@@ -38,7 +40,19 @@ USAGE:
       --stop-token T    stop lanes early when token T is produced
       --backend         pjrt (AOT artifacts, default), mock (deterministic,
                         artifact-free) or modeled (mock tokens + pipeline-sim
-                        hardware clock of the paper's U280 decode design)
+                        hardware clocks of the paper's U280 stage engines)
+      --prefill-policy  blocking (whole-pool admission prefill, default) or
+                        chunked (prompts stream in chunks interleaved with
+                        decode iterations — cuts TTFT tail under load)
+      --prefill-chunk C prompt tokens per chunk (default 32; the pjrt
+                        backend snaps to the artifact's compiled width)
+      --prefill-greedy  feed every prefilling lane a chunk per tick instead
+                        of one per tick (drains admissions faster, decode
+                        lanes pay)
+      Examples:
+        flexllm serve --backend modeled --requests 32 --spread 4 \
+                      --prefill-policy chunked --prefill-chunk 32
+        flexllm serve --backend pjrt --arrival-rate 8 --prefill-policy chunked
   flexllm ablate [--artifacts DIR]
       Run the Table V quantization ablation on the real artifacts.
   flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
@@ -119,7 +133,7 @@ fn main() -> Result<()> {
             report(&a)
         }
         "serve" => {
-            let a = Args::parse(rest, &["stream"])?;
+            let a = Args::parse(rest, &["stream", "prefill-greedy"])?;
             serve(&a)
         }
         "ablate" => {
@@ -218,31 +232,64 @@ fn skewed_budget(i: usize, new_tokens: usize, spread: usize) -> usize {
     (new_tokens * (i % spread + 1) / spread).max(1)
 }
 
+/// Parse `--prefill-policy` / `--prefill-chunk` / `--prefill-greedy`.
+fn prefill_policy(a: &Args) -> Result<PrefillPolicy> {
+    let chunk_len = a.get_u64("prefill-chunk", 32)? as usize;
+    if chunk_len == 0 {
+        bail!("--prefill-chunk must be > 0");
+    }
+    match a.get_str("prefill-policy", "blocking").as_str() {
+        "blocking" => Ok(PrefillPolicy::Blocking),
+        "chunked" => Ok(PrefillPolicy::Chunked {
+            chunk_len,
+            decode_priority: !a.has("prefill-greedy"),
+        }),
+        other => bail!("unknown prefill policy '{other}' (blocking|chunked)"),
+    }
+}
+
+fn describe_policy(p: PrefillPolicy) -> String {
+    match p {
+        PrefillPolicy::Blocking => "blocking (whole-pool admission)".into(),
+        PrefillPolicy::Chunked { chunk_len, decode_priority } => format!(
+            "chunked ({chunk_len}-token chunks, {})",
+            if decode_priority { "decode-priority" } else { "greedy" }),
+    }
+}
+
 fn serve(a: &Args) -> Result<()> {
     let n = a.get_u64("requests", 8)? as usize;
     let new_tokens = a.get_u64("new-tokens", 32)? as usize;
     let spread = a.get_u64("spread", 1)? as usize;
     let stream = a.has("stream");
+    let policy = prefill_policy(a)?;
     let stop: Vec<i32> = match a.get("stop-token") {
         Some(v) => vec![v.parse().map_err(|_| anyhow!("--stop-token: bad token '{v}'"))?],
         None => Vec::new(),
     };
     match a.get_str("backend", "pjrt").as_str() {
-        "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop),
+        "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop, policy),
         "mock" => {
-            let mut engine = Engine::new(MockBackend::new(4, 128, 320, 512));
+            let mut engine = Engine::with_policy(MockBackend::new(4, 128, 320, 512),
+                                                 policy);
+            println!("prefill policy: {}", describe_policy(engine.policy()));
             let results = drive_sim(&mut engine, n, new_tokens, spread, stream, &stop)?;
             print_summary(&results, &engine.metrics, engine.lanes());
             Ok(())
         }
         "modeled" => {
-            let mut engine = Engine::new(ModeledBackend::u280(4, 128, 320, 512));
+            let mut engine = Engine::with_policy(ModeledBackend::u280(4, 128, 320, 512),
+                                                 policy);
+            println!("prefill policy: {}", describe_policy(engine.policy()));
             let results = drive_sim(&mut engine, n, new_tokens, spread, stream, &stop)?;
             print_summary(&results, &engine.metrics, engine.lanes());
             let model_s = engine.backend.model_time_s;
             let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
-            println!("  modeled U280 time: {}  ({:.1} tok/s on the paper's decode design)",
-                     fmt_secs(model_s), toks as f64 / model_s.max(1e-12));
+            println!("  modeled U280 time: {}  ({:.1} tok/s on the paper's stage \
+                      engines; prefill engine {} decode engine {})",
+                     fmt_secs(model_s), toks as f64 / model_s.max(1e-12),
+                     fmt_secs(engine.backend.prefill_clock_s),
+                     fmt_secs(engine.backend.decode_clock_s));
             Ok(())
         }
         other => bail!("unknown backend '{other}' (pjrt|mock|modeled)"),
@@ -279,8 +326,9 @@ fn drive_sim<B: ExecBackend>(engine: &mut Engine<B>, n: usize, new_tokens: usize
 }
 
 fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool,
-              stop: Vec<i32>) -> Result<()> {
+              stop: Vec<i32>, policy: PrefillPolicy) -> Result<()> {
     let artifacts = a.get_str("artifacts", "artifacts");
+    println!("prefill policy requested: {}", describe_policy(policy));
     let arrival_rate: Option<f64> = match a.get("arrival-rate") {
         Some(v) => Some(v.parse().map_err(|_| anyhow!("--arrival-rate: bad rate '{v}'"))?),
         None => None,
@@ -296,7 +344,7 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
     let base: Vec<Vec<i32>> = toks.chunks_exact(s).map(|c| c.to_vec()).collect();
     drop(rt);
 
-    let router = Router::spawn(artifacts.to_string())?;
+    let router = Router::spawn_with_policy(artifacts.to_string(), policy)?;
     if stream {
         let events = router.subscribe()?;
         std::thread::spawn(move || {
@@ -350,6 +398,13 @@ fn print_summary(results: &[GenResult], m: &ServeMetrics, lanes: usize) {
     println!("  ttft p50/p95: {} / {}   tpot p50/p95: {} / {}",
              fmt_secs(m.ttft_p50()), fmt_secs(m.ttft_p95()),
              fmt_secs(m.tpot_p50()), fmt_secs(m.tpot_p95()));
+    println!("  ttft breakdown p95: queue {}  prefill {}{}",
+             fmt_secs(m.queue_wait_p95()), fmt_secs(m.prefill_wait_p95()),
+             if m.prefill_chunks > 0 {
+                 format!("  ({} chunks fed)", m.prefill_chunks)
+             } else {
+                 String::new()
+             });
     println!("  lane utilization: {:.1}%  ({} lane-steps over {} iterations × {} lanes)",
              m.lane_utilization(lanes) * 100.0, m.lane_steps, m.iterations, lanes);
     let stopped = results.iter()

@@ -52,6 +52,9 @@ pub struct ModelInfo {
 pub struct ServingInfo {
     pub batch: usize,
     pub prefill_len: usize,
+    /// Chunk width of the `prefill_chunk_q3` artifact; absent in
+    /// artifact sets that predate chunked admission.
+    pub prefill_chunk: Option<usize>,
     pub cache_shape: Vec<u64>,
 }
 
@@ -205,6 +208,9 @@ impl Manifest {
         let serving = ServingInfo {
             batch: usize_of(sv, "batch")?,
             prefill_len: usize_of(sv, "prefill_len")?,
+            prefill_chunk: sv.get("prefill_chunk")
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize),
             cache_shape: u64_vec(sv, "cache_shape")?,
         };
 
@@ -289,7 +295,17 @@ mod tests {
         assert_eq!(m.schemes["q3"].kv_bits, Some(8));
         assert!(m.schemes["q3"].lm_head_quant);
         assert_eq!(m.serving.cache_shape.len(), 5);
+        // pre-chunked-prefill artifact sets have no chunk width
+        assert_eq!(m.serving.prefill_chunk, None);
         assert_eq!(m.greedy_reference[1], vec![3, 4]);
+    }
+
+    #[test]
+    fn parses_prefill_chunk_when_present() {
+        let src = MINI.replace("\"prefill_len\": 16,",
+                               "\"prefill_len\": 16, \"prefill_chunk\": 4,");
+        let m = Manifest::parse(&src).unwrap();
+        assert_eq!(m.serving.prefill_chunk, Some(4));
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! kernel-smoke numerics against the Python-computed vector, perplexity
 //! cross-checks, end-to-end serving, and the HMT segment pipeline.
 
-use flexllm::coordinator::{Engine, GenRequest, HmtDriver, Router};
+use flexllm::coordinator::{Engine, GenRequest, HmtDriver, PjrtBackend, PrefillPolicy,
+                           Router};
 use flexllm::eval::ablation;
 use flexllm::runtime::{argmax_rows, lit_f32, to_f32, Runtime};
 
@@ -146,6 +147,38 @@ fn serving_stop_token_ends_lane_early() {
         .unwrap();
     assert_eq!(stopped[0].finish_reason, flexllm::coordinator::FinishReason::Stop);
     assert_eq!(stopped[0].tokens, &free[0].tokens[..first_hit + 1]);
+}
+
+#[test]
+fn chunked_admission_matches_blocking_on_real_artifacts() {
+    // the prefill_chunk_q3 artifact must reproduce the one-shot
+    // prefill_serve_q3 numerics end-to-end: same greedy streams under
+    // either admission policy (skipped on artifact sets that predate
+    // chunked prefill)
+    let rt = runtime();
+    if !rt.manifest.artifacts.contains_key("prefill_chunk_q3") {
+        eprintln!("skipping: artifact set has no prefill_chunk_q3");
+        return;
+    }
+    let s = rt.manifest.serving.prefill_len;
+    drop(rt);
+    let mk = |id: u64| -> GenRequest {
+        let prompt: Vec<i32> = (0..s as i32).map(|i| (i * 11 + 5) % 512).collect();
+        GenRequest::new(id, prompt, 6)
+    };
+    let mut blocking = Engine::pjrt(runtime());
+    let want = blocking.serve(&[mk(1), mk(2)]).unwrap();
+    let mut chunked = Engine::with_policy(
+        PjrtBackend::new(runtime()), PrefillPolicy::chunked(32));
+    assert!(matches!(chunked.policy(), PrefillPolicy::Chunked { .. }),
+            "artifact set advertises prefill_chunk_q3 but the policy degraded");
+    let got = chunked.serve(&[mk(1), mk(2)]).unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.tokens, w.tokens,
+                   "request {}: chunked admission changed the greedy stream", g.id);
+    }
+    assert!(chunked.metrics.prefill_chunks > 0);
+    assert_eq!(chunked.metrics.prefill_calls, 0);
 }
 
 #[test]
