@@ -14,37 +14,57 @@
 //! Output: `arrival_rate.json` in the working directory (override with
 //! the `ARRIVAL_RATE_OUT` environment variable), also echoed to stdout.
 
-use flexllm::coordinator::{run_open_loop, OpenLoopConfig, PrefillPolicy};
+use flexllm::coordinator::{run_open_loop, ArrivalProcess, OpenLoopConfig,
+                           PrefillPolicy};
 
-/// One load point: `requests` spread over `bursts`.
+/// One burst load point: `requests` spread over `bursts`.
 const SWEEP: &[(usize, usize)] = &[(8, 2), (16, 2), (24, 3), (32, 4)];
+/// Poisson load points: `requests` arriving at `rate_rps`.
+const POISSON_SWEEP: &[(usize, f64)] = &[(24, 4.0), (24, 8.0), (32, 16.0)];
 const CHUNK_LENS: &[usize] = &[16, 32, 64];
+
+fn sweep_point(cfg: &OpenLoopConfig, label: &str, entries: &mut Vec<String>) {
+    let blocking = run_open_loop(PrefillPolicy::Blocking, cfg)
+        .expect("blocking open loop");
+    entries.push(format!("{{{label}, \"stats\": {}}}", blocking.to_json()));
+    for &chunk in CHUNK_LENS {
+        let chunked = run_open_loop(PrefillPolicy::chunked(chunk), cfg)
+            .expect("chunked open loop");
+        let gain = blocking.ttft_p95_s / chunked.ttft_p95_s.max(1e-12);
+        entries.push(format!(
+            "{{{label}, \"ttft_p95_gain_vs_blocking\": {gain:.3}, \"stats\": {}}}",
+            chunked.to_json()));
+        println!(
+            "{label} chunk {chunk:>3}: \
+             p95 TTFT {:.3}s vs blocking {:.3}s ({gain:.2}x) | \
+             p95 TPOT {:.4}s vs {:.4}s",
+            chunked.ttft_p95_s, blocking.ttft_p95_s,
+            chunked.tpot_p95_s, blocking.tpot_p95_s);
+    }
+}
 
 fn main() {
     let mut entries: Vec<String> = Vec::new();
 
     for &(requests, bursts) in SWEEP {
         let cfg = OpenLoopConfig { requests, bursts, ..OpenLoopConfig::default() };
-        let blocking = run_open_loop(PrefillPolicy::Blocking, &cfg)
-            .expect("blocking open loop");
-        entries.push(format!(
-            "{{\"requests\": {requests}, \"bursts\": {bursts}, \"stats\": {}}}",
-            blocking.to_json()));
-        for &chunk in CHUNK_LENS {
-            let chunked = run_open_loop(PrefillPolicy::chunked(chunk), &cfg)
-                .expect("chunked open loop");
-            let gain = blocking.ttft_p95_s / chunked.ttft_p95_s.max(1e-12);
-            entries.push(format!(
-                "{{\"requests\": {requests}, \"bursts\": {bursts}, \
-                 \"ttft_p95_gain_vs_blocking\": {gain:.3}, \"stats\": {}}}",
-                chunked.to_json()));
-            println!(
-                "load {requests}req/{bursts}bursts chunk {chunk:>3}: \
-                 p95 TTFT {:.3}s vs blocking {:.3}s ({gain:.2}x) | \
-                 p95 TPOT {:.4}s vs {:.4}s",
-                chunked.ttft_p95_s, blocking.ttft_p95_s,
-                chunked.tpot_p95_s, blocking.tpot_p95_s);
-        }
+        sweep_point(&cfg,
+                    &format!("\"arrival\": \"burst\", \"requests\": {requests}, \
+                              \"bursts\": {bursts}"),
+                    &mut entries);
+    }
+    // Poisson arrivals: the classic open-loop model, seeded + virtual
+    // time so the trace is identical for every policy under comparison
+    for &(requests, rate) in POISSON_SWEEP {
+        let cfg = OpenLoopConfig {
+            requests,
+            arrival: ArrivalProcess::Poisson { rate_rps: rate },
+            ..OpenLoopConfig::default()
+        };
+        sweep_point(&cfg,
+                    &format!("\"arrival\": \"poisson\", \"requests\": {requests}, \
+                              \"rate_rps\": {rate:.1}"),
+                    &mut entries);
     }
 
     let doc = format!(

@@ -1,0 +1,80 @@
+//! KV paging harness: dense vs paged pool at EQUAL memory budget under
+//! skewed-length open-loop load on the U280-modeled backend.
+//!
+//! For each workload skew the sweep runs the same arrival trace through
+//! the dense `max_seq`-per-lane pool and a paged pool holding exactly
+//! the same rows (lanes × max_seq / page_len pages), and reports peak
+//! admitted concurrency, page occupancy/fragmentation percentiles and
+//! the latency percentiles. The `scheduler-sim` CI job uploads the JSON
+//! next to `arrival_rate.json`, so the paging trajectory is tracked per
+//! PR; the default-workload point is the same run the tier-1 acceptance
+//! test (`tests/kv_paging.rs`) gates on.
+//!
+//! Output: `kv_paging.json` in the working directory (override with the
+//! `KV_PAGING_OUT` environment variable), also echoed to stdout.
+
+use flexllm::coordinator::{run_open_loop, ArrivalProcess, OpenLoopConfig,
+                           PagedPoolConfig, PrefillPolicy};
+
+/// (min_new_tokens, max_new_tokens) budget skews against 320-row lanes.
+const SKEWS: &[(usize, usize)] = &[(16, 48), (16, 128), (64, 192)];
+const PAGE_LENS: &[usize] = &[32, 64, 160];
+
+fn cfg(min_new: usize, max_new: usize) -> OpenLoopConfig {
+    OpenLoopConfig {
+        lanes: 4,
+        prefill_len: 64,
+        max_seq: 320,
+        vocab: 512,
+        requests: 32,
+        arrival: ArrivalProcess::Burst,
+        bursts: 2,
+        burst_gap_s: 1.0,
+        burst_jitter_s: 0.05,
+        min_new_tokens: min_new,
+        max_new_tokens: max_new,
+        paged: None,
+        seed: 0x5EED,
+    }
+}
+
+fn main() {
+    let policy = PrefillPolicy::chunked(32);
+    let mut entries: Vec<String> = Vec::new();
+
+    for &(min_new, max_new) in SKEWS {
+        let dense_cfg = cfg(min_new, max_new);
+        let dense = run_open_loop(policy, &dense_cfg).expect("dense open loop");
+        entries.push(format!(
+            "{{\"budgets\": [{min_new}, {max_new}], \"stats\": {}}}",
+            dense.to_json()));
+
+        for &page_len in PAGE_LENS {
+            let mut paged_cfg = cfg(min_new, max_new);
+            paged_cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+                4, 320, page_len, 4 * 320 / page_len));
+            let paged = run_open_loop(policy, &paged_cfg).expect("paged open loop");
+            let gain = paged.peak_active as f64 / dense.peak_active.max(1) as f64;
+            entries.push(format!(
+                "{{\"budgets\": [{min_new}, {max_new}], \"page_len\": {page_len}, \
+                 \"concurrency_gain_vs_dense\": {gain:.3}, \"stats\": {}}}",
+                paged.to_json()));
+            println!(
+                "budgets {min_new:>3}-{max_new:<3} page_len {page_len:>3}: \
+                 peak {:>2} vs dense {} ({gain:.2}x) | occupancy p95 {:.0}% \
+                 frag p95 {:.0}% | p95 TTFT {:.3}s vs {:.3}s",
+                paged.peak_active, dense.peak_active,
+                paged.page_occupancy_p95 * 100.0, paged.page_frag_p95 * 100.0,
+                paged.ttft_p95_s, dense.ttft_p95_s);
+        }
+    }
+
+    let doc = format!(
+        "{{\"bench\": \"kv_paging\", \"backend\": \"modeled-u280\", \
+         \"memory_rows\": {}, \"points\": [{}]}}\n",
+        4 * 320, entries.join(", "));
+    let out = std::env::var("KV_PAGING_OUT")
+        .unwrap_or_else(|_| "kv_paging.json".to_string());
+    std::fs::write(&out, &doc).expect("write kv_paging.json");
+    println!("\nwrote {} sweep points to {out}", entries.len());
+}

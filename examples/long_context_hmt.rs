@@ -13,7 +13,7 @@
 //! make artifacts && cargo run --release --example long_context_hmt
 //! ```
 
-use anyhow::Result;
+use flexllm::anyhow::Result;
 use flexllm::arch::AcceleratorSystem;
 use flexllm::coordinator::HmtDriver;
 use flexllm::eval::fig8;

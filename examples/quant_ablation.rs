@@ -5,7 +5,7 @@
 //! make artifacts && cargo run --release --example quant_ablation
 //! ```
 
-use anyhow::Result;
+use flexllm::anyhow::Result;
 use flexllm::eval::table5;
 use flexllm::runtime::Runtime;
 

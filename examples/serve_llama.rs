@@ -9,7 +9,7 @@
 //! make artifacts && cargo run --release --example serve_llama
 //! ```
 
-use anyhow::{anyhow, Result};
+use flexllm::anyhow::{anyhow, Result};
 use flexllm::coordinator::{GenRequest, Router};
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;

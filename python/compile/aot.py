@@ -41,9 +41,9 @@ import numpy as np
 from jax._src.lib import xla_client as xc
 
 from . import corpus
-from .model import (ModelConfig, decode_step, decode_step_lanes, hmt_memattn,
-                    llama32_1b, prefill_chunk, prefill_logits, prefill_serve,
-                    summary_embedding, tiny)
+from .model import (ModelConfig, decode_step, decode_step_lanes, decode_step_paged,
+                    hmt_memattn, llama32_1b, prefill_chunk, prefill_chunk_paged,
+                    prefill_logits, prefill_serve, summary_embedding, tiny)
 from .quantize import SCHEMES, prepare
 from .train_tiny import eval_ppl_fp, train
 
@@ -54,6 +54,13 @@ SERVE_PREFILL = 128
 # is a whole number of fixed-shape chunk invocations
 SERVE_CHUNK = 32
 assert SERVE_PREFILL % SERVE_CHUNK == 0
+# paged KV cache geometry: page_len rows per page, KV_PAGES allocatable
+# pages shared by all lanes, plus physical page 0 reserved as the
+# scratch page idle lanes write into. 24 allocatable pages = 1.2× the
+# dense pool's 4 × (320/64) pages, so logical lanes can exceed the
+# artifact batch when requests are short.
+SERVE_PAGE_LEN = 64
+SERVE_KV_PAGES = 24
 HMT_BATCH = 1
 HMT_MEMORIES = 16
 EVAL_BATCHES = 6
@@ -177,11 +184,20 @@ def main() -> None:
             qp_q3, scheme_q3 = qp, scheme
 
     # ---------------------------------------------------- serving graphs (Q3)
+    assert cfg.max_seq % SERVE_PAGE_LEN == 0, "pages must tile max_seq"
+    pages_per_lane = cfg.max_seq // SERVE_PAGE_LEN
+    n_phys_pages = SERVE_KV_PAGES + 1  # + the reserved scratch page 0
     serve_tok = jax.ShapeDtypeStruct((SERVE_BATCH, SERVE_PREFILL), jnp.int32)
     cache_shape = (cfg.n_layers, SERVE_BATCH, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    page_cache_shape = (cfg.n_layers, n_phys_pages, cfg.n_kv_heads,
+                        SERVE_PAGE_LEN, cfg.head_dim)
     manifest["serving"] = {"batch": SERVE_BATCH, "prefill_len": SERVE_PREFILL,
                            "prefill_chunk": SERVE_CHUNK,
-                           "cache_shape": list(cache_shape)}
+                           "cache_shape": list(cache_shape),
+                           "page_len": SERVE_PAGE_LEN,
+                           "kv_pages": SERVE_KV_PAGES,
+                           "pages_per_lane": pages_per_lane,
+                           "page_cache_shape": list(page_cache_shape)}
 
     fn_pre = functools.partial(prefill_serve, qp_q3, cfg, scheme_q3)
     manifest["artifacts"]["prefill_serve_q3"] = dump(
@@ -236,6 +252,47 @@ def main() -> None:
          tensor("k_cache", "f32", cache_shape),
          tensor("v_cache", "f32", cache_shape)])
 
+    # paged decode: attention gathers K/V rows through a per-lane page
+    # table over the shared [L, P, KV, page_len, hd] page pool — the
+    # artifact behind the Rust coordinator's paged KvPool (lanes stop
+    # reserving max_seq rows; admission is by free pages)
+    fn_paged = functools.partial(decode_step_paged, qp_q3, cfg, scheme_q3)
+    paged_specs = [jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                   jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                   jax.ShapeDtypeStruct((SERVE_BATCH, pages_per_lane), jnp.int32),
+                   jax.ShapeDtypeStruct(page_cache_shape, jnp.float32),
+                   jax.ShapeDtypeStruct(page_cache_shape, jnp.float32)]
+    manifest["artifacts"]["decode_paged_q3"] = dump(
+        fn_paged, paged_specs, out / "decode_paged_q3.hlo.txt",
+        [tensor("token", "i32", (SERVE_BATCH,)), tensor("pos", "i32", (SERVE_BATCH,)),
+         tensor("page_table", "i32", (SERVE_BATCH, pages_per_lane)),
+         tensor("k_pages", "f32", page_cache_shape),
+         tensor("v_pages", "f32", page_cache_shape)],
+        [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
+         tensor("k_pages", "f32", page_cache_shape),
+         tensor("v_pages", "f32", page_cache_shape)])
+
+    # paged chunked prefill: the device-side lane-merge/scatter artifact —
+    # chunk K/V rows are scattered into the page pool INSIDE the graph,
+    # so backfill admission and prefill chunks never round-trip the cache
+    # through host memory (the dense path's host-merge is gone)
+    fn_chunk_paged = functools.partial(prefill_chunk_paged, qp_q3, cfg, scheme_q3)
+    chunk_paged_specs = [jax.ShapeDtypeStruct((SERVE_BATCH, SERVE_CHUNK), jnp.int32),
+                         jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                         jax.ShapeDtypeStruct((SERVE_BATCH, pages_per_lane), jnp.int32),
+                         jax.ShapeDtypeStruct(page_cache_shape, jnp.float32),
+                         jax.ShapeDtypeStruct(page_cache_shape, jnp.float32)]
+    manifest["artifacts"]["prefill_chunk_paged_q3"] = dump(
+        fn_chunk_paged, chunk_paged_specs, out / "prefill_chunk_paged_q3.hlo.txt",
+        [tensor("tokens", "i32", (SERVE_BATCH, SERVE_CHUNK)),
+         tensor("pos", "i32", (SERVE_BATCH,)),
+         tensor("page_table", "i32", (SERVE_BATCH, pages_per_lane)),
+         tensor("k_pages", "f32", page_cache_shape),
+         tensor("v_pages", "f32", page_cache_shape)],
+        [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
+         tensor("k_pages", "f32", page_cache_shape),
+         tensor("v_pages", "f32", page_cache_shape)])
+
     # -------------------------------------------- greedy generation reference
     print("computing greedy generation reference (q3, 32 steps)")
     pre = jax.jit(fn_pre)
@@ -258,6 +315,36 @@ def main() -> None:
           "with prefill_serve argmax")
     if agree < SERVE_BATCH:
         print("  WARNING: chunked/one-shot argmax mismatch (fp tie-breaking?)")
+
+    # build-time cross-check: one paged decode step over an identity page
+    # layout (scratch page 0 reserved; lane b's logical page j at
+    # physical 1 + b*MP + j) must agree with the dense decode argmax
+    mp = pages_per_lane
+
+    def cache_to_pages(cache):
+        blocks = np.asarray(cache).reshape(cfg.n_layers, SERVE_BATCH,
+                                           cfg.n_kv_heads, mp, SERVE_PAGE_LEN,
+                                           cfg.head_dim)
+        paged = np.zeros(page_cache_shape, np.float32)
+        paged[:, 1:1 + SERVE_BATCH * mp] = blocks.transpose(0, 1, 3, 2, 4, 5).reshape(
+            cfg.n_layers, SERVE_BATCH * mp, cfg.n_kv_heads, SERVE_PAGE_LEN,
+            cfg.head_dim)
+        return jnp.asarray(paged)
+
+    table = jnp.asarray((1 + np.arange(SERVE_BATCH * mp, dtype=np.int32))
+                        .reshape(SERVE_BATCH, mp))
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    posv = jnp.full((SERVE_BATCH,), SERVE_PREFILL, jnp.int32)
+    paged_logits, _, _ = jax.jit(fn_paged)(tok0, posv, table,
+                                           cache_to_pages(kc), cache_to_pages(vc))
+    dense_logits, _, _ = dec(tok0, jnp.int32(SERVE_PREFILL), kc, vc)
+    agree_p = int(jnp.sum(jnp.argmax(paged_logits, -1)
+                          == jnp.argmax(dense_logits, -1)))
+    print(f"paged-decode cross-check: {agree_p}/{SERVE_BATCH} lanes agree "
+          "with dense decode argmax")
+    if agree_p < SERVE_BATCH:
+        print("  WARNING: paged/dense argmax mismatch (fp tie-breaking?)")
+
     toks = [np.asarray(jnp.argmax(logits, -1), np.int32)]
     for step in range(32):
         pos = jnp.int32(SERVE_PREFILL + step)

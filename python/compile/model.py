@@ -657,6 +657,236 @@ def prefill_chunk(qparams, cfg: ModelConfig, scheme: QuantScheme, tokens, pos,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache graphs
+# ---------------------------------------------------------------------------
+#
+# The paged layout breaks the per-lane [max_seq] cache row into
+# fixed-size pages: caches are [L, P, KV, page_len, hd] (P physical
+# pages shared by every lane) and each lane carries a page-index row
+# ``page_table[bi]`` mapping its logical pages — logical position p
+# lives at ``(page_table[bi, p // page_len], p % page_len)``. The Rust
+# coordinator allocates pages from a free list, so short requests
+# release memory early and logical lanes are no longer pinned to
+# max_seq-row reservations. Physical page 0 is reserved as a scratch
+# page: idle lanes of an invocation point their tables (and writes) at
+# it, so their garbage rows can never alias a live lane's cache.
+
+
+def _gather_pages(pages_li, page_table):
+    """[P, KV, page_len, hd] + [B, MP] -> [B*KV, MP*page_len, hd].
+
+    Fancy-indexing the page axis materializes each lane's logical cache
+    view in table order, so positions stay contiguous logically even
+    when the physical pages are scattered.
+    """
+    b, mp = page_table.shape
+    _, nkv, page_len, hd = pages_li.shape
+    g = pages_li[page_table]                       # [B, MP, KV, page_len, hd]
+    g = g.transpose(0, 2, 1, 3, 4)                 # [B, KV, MP, page_len, hd]
+    return g.reshape(b * nkv, mp * page_len, hd)
+
+
+def decode_step_paged(qparams, cfg: ModelConfig, scheme: QuantScheme, token, pos,
+                      page_table, k_pages, v_pages):
+    """One decode iteration over a PAGED KV cache.
+
+    token [B] i32, pos [B] i32 (per-lane logical write position),
+    page_table [B, MP] i32 (physical page ids backing each lane's
+    logical pages), caches [L, P, KV, page_len, hd]. Numerically this is
+    :func:`decode_step_lanes` with the cache rows gathered through the
+    page table: per-lane RoPE angles and visibility masks come from the
+    logical position, the new K/V row is scattered into page
+    ``page_table[bi, pos[bi] // page_len]`` at offset
+    ``pos[bi] % page_len``, and attention reads the gathered
+    [MP * page_len] logical window. Returns (logits [B, V], k', v').
+    """
+    b = token.shape[0]
+    mp = page_table.shape[1]
+    page_len = k_pages.shape[3]
+    max_ctx = mp * page_len
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = nh // nkv
+    params = qparams.get("params", qparams)
+    layers = params["layers"]
+    calib = qparams["calib"]
+
+    x = params["embed"][token]                                  # [B, d]
+    cos_l, sin_l = rope_angles(pos.astype(jnp.float32), hd, cfg.rope_theta)
+    cos_q = jnp.repeat(cos_l, nh, axis=0)[:, None, :]           # [B*H, 1, hd/2]
+    sin_q = jnp.repeat(sin_l, nh, axis=0)[:, None, :]
+    cos_k = jnp.repeat(cos_l, nkv, axis=0)[:, None, :]          # [B*KV, 1, hd/2]
+    sin_k = jnp.repeat(sin_l, nkv, axis=0)[:, None, :]
+    positions = jnp.arange(max_ctx)
+    lane_mask = jnp.where(positions[None, :] <= pos[:, None], 0.0, NEG_INF)
+    dec_mask = jnp.broadcast_to(
+        lane_mask[:, None, None, :], (b, nkv, rep, max_ctx)
+    ).reshape(b * nkv, rep, max_ctx)
+    # the physical page + in-page offset the new row lands in
+    write_page = jnp.take_along_axis(page_table, (pos // page_len)[:, None],
+                                     axis=1)[:, 0]              # [B]
+    write_off = pos % page_len                                  # [B]
+
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"], b)
+        q = _linear(lp["wq"], h, scheme, cfg, "decode")
+        k = _linear(lp["wk"], h, scheme, cfg, "decode")
+        v = _linear(lp["wv"], h, scheme, cfg, "decode")
+        q = rope(q.reshape(b * nh, 1, hd), cos_q, sin_q)
+        k = rope(k.reshape(b * nkv, 1, hd), cos_k, sin_k)
+        v = v.reshape(b * nkv, 1, hd)
+
+        if scheme.attn_mode == "sta8":
+            sq, sk, sv = _attn_scales(calib[li])
+            kq = quantize_static(k.reshape(-1, hd), sk, 0.0, 8, True).reshape(k.shape)
+            vq = quantize_static(v.reshape(-1, hd), sv, 0.0, 8, True).reshape(v.shape)
+        elif scheme.attn_mode == "fp":
+            sq = sk = sv = None
+            kq, vq = k, v
+        else:
+            raise NotImplementedError(
+                f"decode_step_paged supports sta8/fp schemes, not {scheme.attn_mode}")
+
+        # scatter the new row into each lane's current page
+        knew = kq.reshape(b, nkv, hd)
+        vnew = vq.reshape(b, nkv, hd)
+        k_pages = k_pages.at[li, write_page, :, write_off, :].set(knew)
+        v_pages = v_pages.at[li, write_page, :, write_off, :].set(vnew)
+
+        kall = _gather_pages(k_pages[li], page_table)
+        vall = _gather_pages(v_pages[li], page_table)
+
+        def group_q(t):   # [B*H, 1, hd] → [B*KV, rep, hd]
+            return t.reshape(b * nkv, rep, hd)
+
+        if scheme.attn_mode == "sta8":
+            qq = quantize_static(q.reshape(-1, hd), sq, 0.0, 8, True).reshape(q.shape)
+            attn = attention_int8(group_q(qq), kall, vall, dec_mask, sq, sk, sv)
+        else:
+            attn = attention_fp(group_q(q), kall, vall, dec_mask)
+
+        attn = attn.reshape(b, nh * hd)
+        x = x + _linear(lp["wo"], attn, scheme, cfg, "decode")
+
+        hf = rmsnorm(x, lp["ffn_norm"], b)
+        gate = _linear(lp["wg"], hf, scheme, cfg, "decode")
+        up = _linear(lp["wu"], hf, scheme, cfg, "decode")
+        act = swiglu(gate, up, b)
+        if scheme.fht_down:
+            act = fht(act, b)
+        x = x + _linear(lp["wd"], act, scheme, cfg, "decode")
+
+    logits = _lm_head(qparams, cfg, scheme, x, "decode")
+    return logits, k_pages, v_pages
+
+
+def prefill_chunk_paged(qparams, cfg: ModelConfig, scheme: QuantScheme, tokens, pos,
+                        page_table, k_pages, v_pages):
+    """A C-token prefill chunk written straight into PAGED cache rows.
+
+    tokens [B, C] i32, pos [B] i32 (logical start position of each
+    lane's slice), page_table [B, MP] i32, caches [L, P, KV, page_len,
+    hd]. This is :func:`prefill_chunk` with the cache write scattered
+    into each row's page — position ``pos[bi] + j`` lands at
+    ``(page_table[bi, (pos[bi]+j) // page_len], (pos[bi]+j) % page_len)``
+    — and attention gathered through the page table. Because the chunk's
+    K/V rows are merged into the page pool *inside the graph*, the Rust
+    backend never round-trips the cache through host memory: this is the
+    device-side lane-merge/scatter artifact (DESIGN.md §9). Returns
+    (logits [B, V] of each lane's last chunk token, k', v').
+    """
+    b, c = tokens.shape
+    mp = page_table.shape[1]
+    page_len = k_pages.shape[3]
+    max_ctx = mp * page_len
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = nh // nkv
+    params = qparams.get("params", qparams)
+    layers = params["layers"]
+    calib = qparams["calib"]
+
+    x = params["embed"][tokens].reshape(b * c, cfg.d_model)
+    chunk_pos = pos[:, None] + jnp.arange(c)[None, :]                 # [B, C]
+    cos_f, sin_f = rope_angles(chunk_pos.reshape(-1).astype(jnp.float32), hd,
+                               cfg.rope_theta)                        # [B*C, hd/2]
+    cos_l = cos_f.reshape(b, c, hd // 2)
+    sin_l = sin_f.reshape(b, c, hd // 2)
+    cos_q = jnp.repeat(cos_l, nh, axis=0)                             # [B*H, C, hd/2]
+    sin_q = jnp.repeat(sin_l, nh, axis=0)
+    cos_k = jnp.repeat(cos_l, nkv, axis=0)                            # [B*KV, C, hd/2]
+    sin_k = jnp.repeat(sin_l, nkv, axis=0)
+    positions = jnp.arange(max_ctx)
+    lane_mask = jnp.where(positions[None, None, :] <= chunk_pos[:, :, None],
+                          0.0, NEG_INF)                               # [B, C, max_ctx]
+    chunk_mask = jnp.broadcast_to(
+        lane_mask[:, None, None, :, :], (b, nkv, rep, c, max_ctx)
+    ).reshape(b * nkv, rep * c, max_ctx)
+    # per-row physical page + offset (chunks may straddle page edges)
+    write_page = jnp.take_along_axis(page_table, chunk_pos // page_len,
+                                     axis=1)                          # [B, C]
+    write_off = chunk_pos % page_len                                  # [B, C]
+
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"], b * c)
+        q = _linear(lp["wq"], h, scheme, cfg, "decode")
+        k = _linear(lp["wk"], h, scheme, cfg, "decode")
+        v = _linear(lp["wv"], h, scheme, cfg, "decode")
+        q = q.reshape(b, c, nh, hd).transpose(0, 2, 1, 3).reshape(b * nh, c, hd)
+        k = k.reshape(b, c, nkv, hd).transpose(0, 2, 1, 3).reshape(b * nkv, c, hd)
+        v = v.reshape(b, c, nkv, hd).transpose(0, 2, 1, 3).reshape(b * nkv, c, hd)
+        q = rope(q, cos_q, sin_q)
+        k = rope(k, cos_k, sin_k)
+
+        if scheme.attn_mode == "sta8":
+            sq, sk, sv = _attn_scales(calib[li])
+            kq = quantize_static(k.reshape(-1, hd), sk, 0.0, 8, True).reshape(k.shape)
+            vq = quantize_static(v.reshape(-1, hd), sv, 0.0, 8, True).reshape(v.shape)
+        elif scheme.attn_mode == "fp":
+            sq = sk = sv = None
+            kq, vq = k, v
+        else:
+            raise NotImplementedError(
+                f"prefill_chunk_paged supports sta8/fp schemes, not {scheme.attn_mode}")
+
+        # scatter each chunk row into its page: [B, C] page/offset index
+        # arrays broadcast together, selecting [B, C, KV, hd] slots
+        knew = kq.reshape(b, nkv, c, hd).transpose(0, 2, 1, 3)        # [B, C, KV, hd]
+        vnew = vq.reshape(b, nkv, c, hd).transpose(0, 2, 1, 3)
+        k_pages = k_pages.at[li, write_page, :, write_off, :].set(knew)
+        v_pages = v_pages.at[li, write_page, :, write_off, :].set(vnew)
+
+        kall = _gather_pages(k_pages[li], page_table)
+        vall = _gather_pages(v_pages[li], page_table)
+
+        def group_q(t):   # [B*H, C, hd] → [B*KV, rep*C, hd]
+            return t.reshape(b, nkv, rep, c, hd).reshape(b * nkv, rep * c, hd)
+
+        def ungroup(t):   # inverse of group_q
+            return t.reshape(b, nkv, rep, c, hd).reshape(b * nh, c, hd)
+
+        if scheme.attn_mode == "sta8":
+            qq = quantize_static(q.reshape(-1, hd), sq, 0.0, 8, True).reshape(q.shape)
+            attn = ungroup(attention_int8(group_q(qq), kall, vall, chunk_mask,
+                                          sq, sk, sv))
+        else:
+            attn = ungroup(attention_fp(group_q(q), kall, vall, chunk_mask))
+
+        attn = attn.reshape(b, nh, c, hd).transpose(0, 2, 1, 3).reshape(b * c, nh * hd)
+        x = x + _linear(lp["wo"], attn, scheme, cfg, "decode")
+
+        hf = rmsnorm(x, lp["ffn_norm"], b * c)
+        gate = _linear(lp["wg"], hf, scheme, cfg, "decode")
+        up = _linear(lp["wu"], hf, scheme, cfg, "decode")
+        act = swiglu(gate, up, b * c)
+        if scheme.fht_down:
+            act = fht(act, b * c)
+        x = x + _linear(lp["wd"], act, scheme, cfg, "decode")
+
+    last = x.reshape(b, c, cfg.d_model)[:, -1, :]
+    logits = _lm_head(qparams, cfg, scheme, last, "decode")
+    return logits, k_pages, v_pages
+
+
+# ---------------------------------------------------------------------------
 # HMT plug-in: memory cross-attention (Case Study 2)
 # ---------------------------------------------------------------------------
 

@@ -11,14 +11,41 @@ from compile.model import (
     ModelConfig,
     decode_step,
     decode_step_lanes,
+    decode_step_paged,
     forward_fp,
     hmt_memattn,
     init_params,
     prefill_chunk,
+    prefill_chunk_paged,
     prefill_logits,
     prefill_serve,
 )
 from compile.quantize import SCHEMES, prepare
+
+
+def dense_to_pages(cache, page_len, n_pages):
+    """[L,B,KV,S,hd] dense cache -> ([L,P,KV,page_len,hd], identity table).
+
+    Lane b's logical page j lands in physical page b*MP + j; extra pages
+    (up to n_pages) stay zero, standing in for the free pool.
+    """
+    L, B, KV, S, hd = cache.shape
+    mp = S // page_len
+    paged = np.zeros((L, n_pages, KV, page_len, hd), np.float32)
+    blocks = np.asarray(cache).reshape(L, B, KV, mp, page_len, hd)
+    paged[:, : B * mp] = blocks.transpose(0, 1, 3, 2, 4, 5).reshape(
+        L, B * mp, KV, page_len, hd)
+    table = np.arange(B * mp, dtype=np.int32).reshape(B, mp)
+    return jnp.asarray(paged), jnp.asarray(table)
+
+
+def pages_to_dense(paged, table, page_len):
+    """Gather [L,P,KV,page_len,hd] back to [L,B,KV,MP*page_len,hd]."""
+    L = paged.shape[0]
+    B, mp = table.shape
+    g = np.asarray(paged)[:, np.asarray(table)]       # [L,B,MP,KV,page_len,hd]
+    return g.transpose(0, 1, 3, 2, 4, 5).reshape(L, B, paged.shape[2],
+                                                 mp * page_len, paged.shape[4])
 
 
 @pytest.fixture(scope="module")
@@ -236,6 +263,127 @@ def test_prefill_chunk_uneven_and_offset_lanes(setup, q3):
     assert float(jnp.max(jnp.abs(kc[:, 0, :, 4:8, :]))) > 0.0
     np.testing.assert_array_equal(np.asarray(kc[:, 1, :, 4:, :]), 0.0)
     assert float(jnp.max(jnp.abs(kc[:, 1, :, :4, :]))) > 0.0
+
+
+def test_decode_step_paged_matches_lanes(setup, q3):
+    """With an identity page table the paged decode graph must reproduce
+    decode_step_lanes: same logits, same cache rows (gathered back)."""
+    cfg, _, _ = setup
+    scheme = SCHEMES["q3"]
+    page_len = 8  # max_seq 24 -> 3 logical pages per lane
+    tokens = jax.random.randint(jax.random.PRNGKey(20), (2, 8), 0, cfg.vocab)
+    logits, kc, vc = prefill_serve(q3, cfg, scheme, tokens)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.full((2,), 8, jnp.int32)
+    want, kw, vw = decode_step_lanes(q3, cfg, scheme, nxt, pos, kc, vc)
+
+    kp, table = dense_to_pages(kc, page_len, 8)
+    vp, _ = dense_to_pages(vc, page_len, 8)
+    got, kp2, vp2 = decode_step_paged(q3, cfg, scheme, nxt, pos, table, kp, vp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(pages_to_dense(kp2, table, page_len),
+                               np.asarray(kw), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(pages_to_dense(vp2, table, page_len),
+                               np.asarray(vw), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_step_paged_is_layout_invariant(setup, q3):
+    """Scattering the SAME logical pages across different physical page
+    ids must not change the numerics — the property that lets the Rust
+    allocator hand out pages in any order."""
+    cfg, _, _ = setup
+    scheme = SCHEMES["q3"]
+    page_len = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(21), (2, 8), 0, cfg.vocab)
+    logits, kc, vc = prefill_serve(q3, cfg, scheme, tokens)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.full((2,), 8, jnp.int32)
+
+    kp, table = dense_to_pages(kc, page_len, 10)
+    vp, _ = dense_to_pages(vc, page_len, 10)
+    ref, _, _ = decode_step_paged(q3, cfg, scheme, nxt, pos, table, kp, vp)
+
+    # permute physical page ids (identity table is [0..5]; scatter them)
+    perm = np.asarray([7, 2, 9, 0, 5, 3], np.int32)
+    kp_s = np.zeros_like(np.asarray(kp))
+    vp_s = np.zeros_like(np.asarray(vp))
+    kp_s[:, perm] = np.asarray(kp)[:, :6]
+    vp_s[:, perm] = np.asarray(vp)[:, :6]
+    table_s = jnp.asarray(perm[np.asarray(table)])
+    got, _, _ = decode_step_paged(q3, cfg, scheme, nxt, pos, table_s,
+                                  jnp.asarray(kp_s), jnp.asarray(vp_s))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_chunk_paged_matches_dense_chunks(setup, q3):
+    """Chunked prefill through pages == chunked prefill through the dense
+    cache, including chunks that straddle a page boundary (page_len 4,
+    chunk widths 5+3)."""
+    cfg, _, _ = setup
+    scheme = SCHEMES["q3"]
+    page_len = 4  # max_seq 24 -> 6 logical pages per lane
+    tokens = jax.random.randint(jax.random.PRNGKey(22), (2, 8), 0, cfg.vocab)
+    want, kw, vw = prefill_serve(q3, cfg, scheme, tokens)
+
+    mp = cfg.max_seq // page_len
+    table = jnp.asarray(np.arange(2 * mp, dtype=np.int32).reshape(2, mp))
+    kp = jnp.zeros((cfg.n_layers, 2 * mp + 2, cfg.n_kv_heads, page_len,
+                    cfg.head_dim), jnp.float32)
+    vp = jnp.zeros_like(kp)
+    got = None
+    start = 0
+    for width in (5, 3):  # 5-token chunk crosses the page-4 boundary
+        pos = jnp.full((2,), start, jnp.int32)
+        got, kp, vp = prefill_chunk_paged(q3, cfg, scheme,
+                                          tokens[:, start:start + width],
+                                          pos, table, kp, vp)
+        start += width
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(pages_to_dense(kp, table, page_len),
+                               np.asarray(kw), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(pages_to_dense(vp, table, page_len),
+                               np.asarray(vw), rtol=1e-4, atol=1e-4)
+    # the paged admission path yields the same greedy first token
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(want, -1)))
+
+
+def test_paged_prefill_then_paged_decode_stream(setup, q3):
+    """End-to-end paged lane: chunked paged prefill followed by paged
+    decode steps reproduces the dense prefill_serve + decode_step_lanes
+    greedy stream."""
+    cfg, _, _ = setup
+    scheme = SCHEMES["q3"]
+    page_len = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(23), (2, 8), 0, cfg.vocab)
+    logits_d, kc, vc = prefill_serve(q3, cfg, scheme, tokens)
+
+    mp = cfg.max_seq // page_len
+    table = jnp.asarray(np.arange(2 * mp, dtype=np.int32).reshape(2, mp))
+    kp = jnp.zeros((cfg.n_layers, 2 * mp + 1, cfg.n_kv_heads, page_len,
+                    cfg.head_dim), jnp.float32)
+    vp = jnp.zeros_like(kp)
+    logits_p = None
+    for start in (0, 4):
+        pos = jnp.full((2,), start, jnp.int32)
+        logits_p, kp, vp = prefill_chunk_paged(q3, cfg, scheme,
+                                               tokens[:, start:start + 4],
+                                               pos, table, kp, vp)
+    tok_d = jnp.argmax(logits_d, -1).astype(jnp.int32)
+    tok_p = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(tok_d), np.asarray(tok_p))
+    for i in range(3):
+        pos = jnp.full((2,), 8 + i, jnp.int32)
+        logits_d, kc, vc = decode_step_lanes(q3, cfg, scheme, tok_d, pos, kc, vc)
+        logits_p, kp, vp = decode_step_paged(q3, cfg, scheme, tok_p, pos,
+                                             table, kp, vp)
+        tok_d = jnp.argmax(logits_d, -1).astype(jnp.int32)
+        tok_p = jnp.argmax(logits_p, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(tok_d), np.asarray(tok_p),
+                                      err_msg=f"greedy stream diverged at step {i}")
 
 
 def test_hmt_memattn_shapes_and_effect(setup):

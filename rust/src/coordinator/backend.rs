@@ -1,9 +1,13 @@
-//! Execution backends: the scheduler's hardware abstraction (DESIGN.md §7).
+//! Execution backends: the scheduler's hardware abstraction (DESIGN.md
+//! §7/§9).
 //!
 //! The iteration-level scheduler needs three operations — "prefill these
 //! lanes in one blocking invocation", "feed one lane a slice of its
 //! prompt" and "run one decode iteration across these lanes" — so that
-//! triple is the [`ExecBackend`] trait. Three implementations:
+//! triple is the [`ExecBackend`] trait, plus the PAGED pair
+//! ([`ExecBackend::decode_paged`] / [`ExecBackend::prefill_chunk_paged`])
+//! for backends whose KV cache is a shared page pool rather than dense
+//! per-lane rows. Three implementations:
 //!
 //! * [`PjrtBackend`] — the real thing: drives the AOT PJRT artifacts
 //!   (`prefill_serve_q3`, the chunked `prefill_chunk_q3` and the
@@ -21,17 +25,38 @@
 //!   stalls both (the software serialization PR 1 shipped with). This is
 //!   what makes the prefill/decode overlap measurable in the simulator.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 
 use crate::arch::AcceleratorSystem;
+use crate::config::Precision;
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::xla;
 use crate::runtime::{argmax_rows, lit_f32, lit_i32, lit_scalar_i32, to_f32, Runtime};
+
+/// Paged KV cache capabilities of a backend.
+#[derive(Debug, Clone)]
+pub struct PagedCaps {
+    /// Cache rows per page.
+    pub page_len: usize,
+    /// Allocatable pages (the backend may keep extra physical pages —
+    /// the PJRT layout reserves physical page 0 as the idle-lane
+    /// scratch page, so Rust page id `p` is physical `p + 1`).
+    pub pages: usize,
+    /// Logical-lane ceiling the backend can serve. The MOCK backend
+    /// keys state by lane, so this is its construction width; the PJRT
+    /// backend maps logical lanes onto invocation slots, so only the
+    /// page budget bounds it.
+    pub max_lanes: usize,
+}
 
 /// Fixed shapes and capabilities of an execution backend.
 #[derive(Debug, Clone)]
 pub struct BackendSpec {
-    /// Decode lane pool size (= artifact batch dimension).
+    /// Decode lanes per invocation (= artifact batch dimension). With a
+    /// paged pool, logical lanes may exceed this; the engine splits one
+    /// scheduler tick across several invocations.
     pub lanes: usize,
     pub prefill_len: usize,
     pub max_seq: usize,
@@ -46,6 +71,9 @@ pub struct BackendSpec {
     /// Chunk width the backend's chunk op is compiled for (AOT artifacts
     /// have a fixed slice shape); `None` = any chunk length.
     pub chunk_len: Option<usize>,
+    /// Paged KV cache support ([`ExecBackend::decode_paged`] and
+    /// [`ExecBackend::prefill_chunk_paged`]); `None` = dense only.
+    pub paged: Option<PagedCaps>,
 }
 
 /// A prefill admission: a prompt going into a (free) lane.
@@ -63,6 +91,19 @@ pub struct LaneStep {
     pub token: i32,
     /// The lane's next cache write position.
     pub pos: usize,
+}
+
+/// One lane's input to a PAGED decode iteration: a [`LaneStep`] plus the
+/// physical pages backing the lane's logical cache (logical position
+/// `p` lives in `pages[p / page_len]` at offset `p % page_len`).
+#[derive(Debug, Clone)]
+pub struct PagedStep {
+    /// LOGICAL lane id (may exceed the invocation batch; backends map
+    /// steps onto invocation slots by their index in the call).
+    pub lane: usize,
+    pub token: i32,
+    pub pos: usize,
+    pub pages: Vec<u32>,
 }
 
 /// The scheduler's view of execution hardware.
@@ -87,6 +128,24 @@ pub trait ExecBackend {
     /// One decode iteration across the given lanes, each at its own
     /// position. Returns the next token per entry, in entry order.
     fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>>;
+
+    /// One decode iteration over the PAGED cache: attention gathers each
+    /// lane's K/V rows through its page table and the new row is
+    /// scattered into `pages[pos / page_len]`. At most
+    /// `spec().lanes` steps per call (the invocation batch); the engine
+    /// splits larger ticks. Available iff `spec().paged` is `Some`.
+    fn decode_paged(&mut self, _steps: &[PagedStep]) -> Result<Vec<i32>> {
+        Err(anyhow!("backend has no paged decode"))
+    }
+
+    /// Feed `lane` a prompt slice landing in its PAGED cache at logical
+    /// positions `start_pos..start_pos + tokens.len()`, scattered into
+    /// `pages` device-side (no host cache round-trip). Same ordering and
+    /// return contract as [`ExecBackend::prefill_chunk`].
+    fn prefill_chunk_paged(&mut self, _lane: usize, _tokens: &[i32],
+                           _start_pos: usize, _pages: &[u32]) -> Result<i32> {
+        Err(anyhow!("backend has no paged prefill chunk"))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -108,6 +167,11 @@ pub struct MockBackend {
     lane_seed: Vec<Option<u64>>,
     /// Prompt prefix accumulated by in-order chunks, per lane.
     lane_partial: Vec<Vec<i32>>,
+    /// Page table each lane presented at its chunk 0 (paged mode): later
+    /// chunks and decodes must present the SAME table (the scheduler's
+    /// LaneKv fixes it at bind), and a fresh chunk 0 must not alias a
+    /// lane that is provably still live (mid-prefill).
+    lane_table: Vec<Vec<u32>>,
     pub prefill_calls: usize,
     pub prefill_slots: usize,
     pub prefill_chunk_calls: usize,
@@ -116,6 +180,11 @@ pub struct MockBackend {
     /// Decode slot-steps actually executed (iterations × lanes fed); the
     /// quantity max-aligned batching wastes on finished lanes.
     pub decode_lane_steps: usize,
+    /// Paged decode invocations (each also counts in decode_iterations).
+    pub paged_decode_calls: usize,
+    /// Whole pages streamed by paged decode gathers — the fragmentation
+    /// denominator the modeled backend charges bandwidth for.
+    pub pages_gathered: usize,
 }
 
 impl MockBackend {
@@ -130,16 +199,34 @@ impl MockBackend {
                 per_lane_pos: true,
                 chunked_prefill: true,
                 chunk_len: None,
+                paged: None,
             },
             lane_seed: vec![None; lanes],
             lane_partial: vec![Vec::new(); lanes],
+            lane_table: vec![Vec::new(); lanes],
             prefill_calls: 0,
             prefill_slots: 0,
             prefill_chunk_calls: 0,
             prefill_chunk_tokens: 0,
             decode_iterations: 0,
             decode_lane_steps: 0,
+            paged_decode_calls: 0,
+            pages_gathered: 0,
         }
+    }
+
+    /// Paged variant: `lanes` logical lanes over `pages` shared pages of
+    /// `page_len` rows. Token streams are IDENTICAL to the dense mock
+    /// (pure function of the prompt), so paged == dense stream equality
+    /// is provable; the paged entry points additionally enforce the page
+    /// contract (coverage, bounds, and no page aliased by two live
+    /// lanes in one iteration).
+    pub fn paged(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize,
+                 page_len: usize, pages: usize) -> Self {
+        assert!(page_len > 0 && page_len <= max_seq && pages > 0);
+        let mut m = Self::new(lanes, prefill_len, max_seq, vocab);
+        m.spec.paged = Some(PagedCaps { page_len, pages, max_lanes: lanes });
+        m
     }
 
     /// Aligned-only variant: like the scalar-position decode artifact, it
@@ -200,6 +287,7 @@ impl ExecBackend for MockBackend {
             let seed = Self::prompt_seed(s.prompt);
             self.lane_seed[s.lane] = Some(seed);
             self.lane_partial[s.lane].clear();
+            self.lane_table[s.lane].clear(); // dense admission: no pages
             out.push(Self::token_at(seed, 0, self.spec.vocab));
         }
         Ok(out)
@@ -270,6 +358,97 @@ impl ExecBackend for MockBackend {
         }
         Ok(out)
     }
+
+    fn decode_paged(&mut self, steps: &[PagedStep]) -> Result<Vec<i32>> {
+        let caps = self
+            .spec
+            .paged
+            .clone()
+            .ok_or_else(|| anyhow!("mock backend built without paging"))?;
+        // page contract: every step's table covers its write position,
+        // ids are in range, and no physical page backs two lanes —
+        // validate the WHOLE batch before touching any counter, so a
+        // failed call leaves the accounting untouched
+        let mut seen = HashSet::new();
+        for st in steps {
+            if st.pages.is_empty() || st.pages.len() * caps.page_len <= st.pos {
+                return Err(anyhow!(
+                    "lane {}: {} pages of {} rows do not cover pos {}",
+                    st.lane, st.pages.len(), caps.page_len, st.pos));
+            }
+            for &p in &st.pages {
+                if p as usize >= caps.pages {
+                    return Err(anyhow!("lane {}: page id {p} out of range", st.lane));
+                }
+                if !seen.insert(p) {
+                    return Err(anyhow!(
+                        "page {p} aliased by two lanes in one iteration"));
+                }
+            }
+            // a lane's table is fixed at bind: a decode presenting a
+            // different table than the lane prefilled with means the
+            // scheduler's occupancy desynced from its pages
+            if let Some(bound) = self.lane_table.get(st.lane) {
+                if !bound.is_empty() && bound != &st.pages {
+                    return Err(anyhow!(
+                        "lane {}: decode table {:?} != prefilled table {bound:?}",
+                        st.lane, st.pages));
+                }
+            }
+        }
+        let lane_steps: Vec<LaneStep> = steps
+            .iter()
+            .map(|st| LaneStep { lane: st.lane, token: st.token, pos: st.pos })
+            .collect();
+        let out = self.decode(&lane_steps)?;
+        self.paged_decode_calls += 1;
+        self.pages_gathered += steps
+            .iter()
+            .map(|st| (st.pos + 1).div_ceil(caps.page_len))
+            .sum::<usize>();
+        Ok(out)
+    }
+
+    fn prefill_chunk_paged(&mut self, lane: usize, tokens: &[i32], start_pos: usize,
+                           pages: &[u32]) -> Result<i32> {
+        let caps = self
+            .spec
+            .paged
+            .clone()
+            .ok_or_else(|| anyhow!("mock backend built without paging"))?;
+        if lane >= self.spec.lanes {
+            return Err(anyhow!("prefill_chunk_paged lane {lane} out of range"));
+        }
+        if pages.len() * caps.page_len < start_pos + tokens.len() {
+            return Err(anyhow!(
+                "lane {lane}: {} pages of {} rows do not cover chunk \
+                 {start_pos}+{}", pages.len(), caps.page_len, tokens.len()));
+        }
+        if pages.iter().any(|&p| p as usize >= caps.pages) {
+            return Err(anyhow!("lane {lane}: page id out of range"));
+        }
+        if start_pos == 0 {
+            // a fresh binding must not alias any lane that is PROVABLY
+            // still live — mid-prefill neighbours (retired lanes'
+            // pages are legitimately reusable; the allocator's
+            // double-free panic guards the rest of the lifecycle)
+            for (other, table) in self.lane_table.iter().enumerate() {
+                if other != lane
+                    && !self.lane_partial[other].is_empty()
+                    && table.iter().any(|p| pages.contains(p))
+                {
+                    return Err(anyhow!(
+                        "lane {lane}: chunk 0 aliases mid-prefill lane {other}'s pages"));
+                }
+            }
+            self.lane_table[lane] = pages.to_vec();
+        } else if self.lane_table[lane] != pages {
+            return Err(anyhow!(
+                "lane {lane}: page table changed mid-prefill \
+                 ({:?} then {pages:?})", self.lane_table[lane]));
+        }
+        self.prefill_chunk(lane, tokens, start_pos)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -299,6 +478,12 @@ impl ExecBackend for MockBackend {
 pub struct ModeledBackend {
     inner: MockBackend,
     sys: AcceleratorSystem,
+    /// PHYSICAL decode-invocation width: the modeled decode engine
+    /// serves at most this many lanes per pass, so a paged pool whose
+    /// logical lanes exceed it pays `ceil(n / width)` decode-step
+    /// charges per iteration (the hardware batch does not grow just
+    /// because the memory layout changed).
+    decode_width: usize,
     /// Simulated seconds-per-token cache keyed by context bucket.
     step_cost: HashMap<u64, f64>,
     /// Simulated chunk cost keyed by (tokens, ctx bucket, lm_head).
@@ -324,6 +509,7 @@ impl ModeledBackend {
         ModeledBackend {
             inner: MockBackend::new(lanes, prefill_len, max_seq, vocab),
             sys,
+            decode_width: lanes,
             step_cost: HashMap::new(),
             chunk_cost: HashMap::new(),
             pool_prefill_cost_s,
@@ -336,6 +522,35 @@ impl ModeledBackend {
 
     pub fn u280(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize) -> Self {
         Self::new(lanes, prefill_len, max_seq, vocab, AcceleratorSystem::u280())
+    }
+
+    /// Paged variant over the U280 clocks: `lanes` LOGICAL lanes sharing
+    /// `pages` pages of `page_len` rows, served by a decode engine of
+    /// PHYSICAL width `decode_width` — logical lanes beyond the width
+    /// cost extra decode passes (paging changes the memory layout, not
+    /// the hardware batch). Decode iterations additionally pay a
+    /// page-gather bandwidth charge (see
+    /// [`ModeledBackend::decode_paged`]), so pool fragmentation shows up
+    /// as modeled time, not just as a counter.
+    pub fn u280_paged(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize,
+                      page_len: usize, pages: usize, decode_width: usize) -> Self {
+        let mut m = Self::new(lanes, prefill_len, max_seq, vocab,
+                              AcceleratorSystem::u280());
+        m.inner.spec.paged = Some(PagedCaps { page_len, pages, max_lanes: lanes });
+        m.decode_width = decode_width.max(1);
+        m
+    }
+
+    /// Seconds to stream `rows` reserved-but-useless cache rows (the
+    /// ragged page tails a gather reads anyway) at the device's HBM
+    /// bandwidth — the fragmentation cost of paging.
+    fn gather_overhead_s(&self, extra_rows: usize) -> f64 {
+        let row_bytes = self
+            .sys
+            .decode
+            .model
+            .kv_bytes_per_token(1, Precision::Int8.bytes());
+        extra_rows as f64 * row_bytes / self.sys.decode.device.hbm_bw
     }
 
     /// Fast-forward both engine clocks to at least `t` (open-loop
@@ -400,9 +615,58 @@ impl ExecBackend for ModeledBackend {
         -> Result<i32>
     {
         let token = self.inner.prefill_chunk(lane, tokens, start_pos)?;
-        let end_ctx = (start_pos + tokens.len()) as u64;
-        let last = start_pos + tokens.len() == self.inner.spec.prefill_len;
-        let cost = self.chunk_step_s(tokens.len() as u64, end_ctx, last);
+        self.charge_chunk(lane, tokens.len(), start_pos);
+        Ok(token)
+    }
+
+    fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
+        let out = self.inner.decode(steps)?;
+        self.charge_decode(steps, 0.0);
+        Ok(out)
+    }
+
+    fn decode_paged(&mut self, steps: &[PagedStep]) -> Result<Vec<i32>> {
+        let page_len = self
+            .inner
+            .spec
+            .paged
+            .as_ref()
+            .map(|c| c.page_len)
+            .unwrap_or(self.inner.spec.max_seq);
+        let out = self.inner.decode_paged(steps)?;
+        // the gather streams whole pages: rows past each lane's write
+        // position (ragged final pages) are wasted bandwidth — this is
+        // where fragmentation costs modeled time
+        let extra_rows: usize = steps
+            .iter()
+            .map(|s| (s.pos + 1).div_ceil(page_len) * page_len - (s.pos + 1))
+            .sum();
+        let gather_s = self.gather_overhead_s(extra_rows);
+        let lane_steps: Vec<LaneStep> = steps
+            .iter()
+            .map(|s| LaneStep { lane: s.lane, token: s.token, pos: s.pos })
+            .collect();
+        self.charge_decode(&lane_steps, gather_s);
+        Ok(out)
+    }
+
+    fn prefill_chunk_paged(&mut self, lane: usize, tokens: &[i32], start_pos: usize,
+                           pages: &[u32]) -> Result<i32> {
+        let token = self.inner.prefill_chunk_paged(lane, tokens, start_pos, pages)?;
+        // same prefill-engine occupancy as a dense chunk: the scatter is
+        // part of the graph, not an extra host phase
+        self.charge_chunk(lane, tokens.len(), start_pos);
+        Ok(token)
+    }
+}
+
+impl ModeledBackend {
+    /// Chunk-proportional prefill-engine charge shared by the dense and
+    /// paged chunk paths.
+    fn charge_chunk(&mut self, lane: usize, tokens: usize, start_pos: usize) {
+        let end_ctx = (start_pos + tokens) as u64;
+        let last = start_pos + tokens == self.inner.spec.prefill_len;
+        let cost = self.chunk_step_s(tokens as u64, end_ctx, last);
         // the chunk is issued by the current tick (it cannot start
         // before the software loop reaches it) and then occupies ONLY
         // the prefill engine
@@ -412,13 +676,15 @@ impl ExecBackend for ModeledBackend {
             self.lane_ready_s[lane] = self.prefill_clock_s;
         }
         self.model_time_s = self.prefill_clock_s.max(self.decode_clock_s);
-        Ok(token)
     }
 
-    fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
-        let out = self.inner.decode(steps)?;
+    /// Decode-engine charge for one iteration (+ paged gather overhead).
+    /// An iteration over more lanes than the physical invocation width
+    /// costs one decode step per `decode_width`-lane pass.
+    fn charge_decode(&mut self, steps: &[LaneStep], gather_s: f64) {
         if let Some(ctx) = steps.iter().map(|s| s.pos as u64).max() {
-            let cost = self.decode_step_s(ctx);
+            let passes = steps.len().div_ceil(self.decode_width).max(1);
+            let cost = self.decode_step_s(ctx) * passes as f64 + gather_s;
             // the decode engine runs concurrently with in-flight chunks,
             // but a freshly warmed lane joins no earlier than its
             // prefill completed
@@ -430,7 +696,6 @@ impl ExecBackend for ModeledBackend {
             self.decode_clock_s = start + cost;
             self.model_time_s = self.prefill_clock_s.max(self.decode_clock_s);
         }
-        Ok(out)
     }
 }
 
@@ -442,18 +707,32 @@ const PREFILL: &str = "prefill_serve_q3";
 const PREFILL_CHUNK: &str = "prefill_chunk_q3";
 const DECODE_LANES: &str = "decode_lanes_q3";
 const DECODE_ALIGNED: &str = "decode_step_q3";
+const DECODE_PAGED: &str = "decode_paged_q3";
+const PREFILL_CHUNK_PAGED: &str = "prefill_chunk_paged_q3";
 
 /// Execution over the AOT-compiled PJRT artifacts.
 ///
 /// Cache tensors are the INT8 integer-grid K/V literals threaded through
-/// every step. Backfill admission runs the batch prefill artifact and
-/// host-merges only the admitted lanes' cache slices into the live pool
-/// cache, preserving in-flight lanes; the chunked `prefill_chunk_q3`
-/// artifact does the same per chunk (idle lanes compute throwaway rows
-/// that the merge discards, the contract `decode_lanes_q3` established
-/// for idle positions). When only the position-aligned `decode_step_q3`
-/// artifact exists (older artifact sets), the backend reports
-/// `per_lane_pos: false` and the scheduler falls back to gang admission.
+/// every step. On the DENSE path, backfill admission runs the batch
+/// prefill artifact and host-merges only the admitted lanes' cache
+/// slices into the live pool cache, preserving in-flight lanes; the
+/// chunked `prefill_chunk_q3` artifact does the same per chunk (idle
+/// lanes compute throwaway rows that the merge discards, the contract
+/// `decode_lanes_q3` established for idle positions).
+///
+/// On the PAGED path (`decode_paged_q3` + `prefill_chunk_paged_q3`) the
+/// cache is a shared `[L, P, KV, page_len, hd]` page pool with physical
+/// page 0 reserved as the idle-lane scratch page. Chunk K/V rows are
+/// scattered into their pages INSIDE the graph and decode gathers
+/// through per-lane page tables, so the host-side cache merge — and its
+/// whole-pool round-trip through host memory — is gone entirely;
+/// literals flow output-to-input like decode always did. Logical lanes
+/// may exceed the artifact batch: the engine maps each group of ≤ B
+/// scheduler lanes onto invocation slots per call.
+///
+/// When only the position-aligned `decode_step_q3` artifact exists
+/// (older artifact sets), the backend reports `per_lane_pos: false` and
+/// the scheduler falls back to gang admission.
 pub struct PjrtBackend {
     pub runtime: Runtime,
     spec: BackendSpec,
@@ -461,6 +740,12 @@ pub struct PjrtBackend {
     v: Option<xla::Literal>,
     /// [layers, lanes, kv_heads, max_seq, head_dim]
     cache_shape: Vec<usize>,
+    /// Paged pool literals [layers, phys_pages, kv_heads, page_len,
+    /// head_dim]; physical page 0 is the idle-lane scratch page.
+    kp: Option<xla::Literal>,
+    vp: Option<xla::Literal>,
+    page_cache_shape: Vec<usize>,
+    pages_per_lane: usize,
 }
 
 impl PjrtBackend {
@@ -477,6 +762,33 @@ impl PjrtBackend {
             .filter(|&c| c > 0 && m.serving.prefill_len % c == 0);
         let chunked_prefill =
             per_lane_pos && chunk_len.is_some() && m.artifacts.contains_key(PREFILL_CHUNK);
+        // the paged pool needs both paged artifacts plus a coherent
+        // manifest geometry; anything inconsistent falls back to
+        // dense-only (XLA gather CLAMPS out-of-range page indices
+        // instead of failing, so a desynced shape would silently corrupt
+        // tokens — refuse it up front). Older artifact sets have none of
+        // the fields and stay dense-only too.
+        let page_shape_ok = |shape: &Option<Vec<u64>>, pages: usize, page_len: usize| {
+            // [L, pages + scratch, KV, page_len, hd]
+            matches!(shape.as_deref(),
+                     Some([_, p, _, l, _])
+                         if *p as usize == pages + 1 && *l as usize == page_len)
+        };
+        let paged = match (m.serving.page_len, m.serving.kv_pages,
+                           m.serving.pages_per_lane) {
+            (Some(page_len), Some(pages), Some(mp))
+                if chunked_prefill
+                    && page_len > 0
+                    && pages > 0
+                    && mp * page_len == m.model.max_seq as usize
+                    && page_shape_ok(&m.serving.page_cache_shape, pages, page_len)
+                    && m.artifacts.contains_key(DECODE_PAGED)
+                    && m.artifacts.contains_key(PREFILL_CHUNK_PAGED) =>
+            {
+                Some(PagedCaps { page_len, pages, max_lanes: pages })
+            }
+            _ => None,
+        };
         let spec = BackendSpec {
             lanes: m.serving.batch,
             prefill_len: m.serving.prefill_len,
@@ -485,10 +797,19 @@ impl PjrtBackend {
             per_lane_pos,
             chunked_prefill,
             chunk_len: if chunked_prefill { chunk_len } else { None },
+            paged,
         };
         let cache_shape: Vec<usize> =
             m.serving.cache_shape.iter().map(|&d| d as usize).collect();
-        PjrtBackend { runtime, spec, k: None, v: None, cache_shape }
+        let page_cache_shape: Vec<usize> = m
+            .serving
+            .page_cache_shape
+            .as_ref()
+            .map(|s| s.iter().map(|&d| d as usize).collect())
+            .unwrap_or_default();
+        let pages_per_lane = m.serving.pages_per_lane.unwrap_or(0);
+        PjrtBackend { runtime, spec, k: None, v: None, cache_shape,
+                      kp: None, vp: None, page_cache_shape, pages_per_lane }
     }
 
     fn cache_dims_i64(&self) -> Vec<i64> {
@@ -520,6 +841,52 @@ impl PjrtBackend {
             self.v = Some(lit_f32(&zeros, &dims)?);
         }
         Ok((self.k.as_ref().unwrap().clone(), self.v.as_ref().unwrap().clone()))
+    }
+
+    /// The live PAGE-POOL caches (zeros before the first paged chunk).
+    fn page_literals(&mut self) -> Result<(xla::Literal, xla::Literal)> {
+        if self.kp.is_none() || self.vp.is_none() {
+            let dims: Vec<i64> = self.page_cache_shape.iter().map(|&d| d as i64).collect();
+            let len: usize = self.page_cache_shape.iter().product();
+            let zeros = vec![0.0f32; len];
+            self.kp = Some(lit_f32(&zeros, &dims)?);
+            self.vp = Some(lit_f32(&zeros, &dims)?);
+        }
+        Ok((self.kp.as_ref().unwrap().clone(), self.vp.as_ref().unwrap().clone()))
+    }
+
+    /// Flatten a step's page table into row `slot` of the invocation's
+    /// [B, MP] table: Rust page id `p` is physical `p + 1` (page 0 is
+    /// the scratch page idle slots keep pointing at).
+    fn fill_table_row(&self, table: &mut [i32], slot: usize, pages: &[u32],
+                      caps: &PagedCaps) -> Result<()> {
+        let mp = self.pages_per_lane;
+        if pages.len() > mp {
+            return Err(anyhow!(
+                "page table of {} exceeds artifact's {} pages per lane",
+                pages.len(), mp));
+        }
+        for (j, &p) in pages.iter().enumerate() {
+            if p as usize >= caps.pages {
+                return Err(anyhow!("page id {p} out of range ({} pages)", caps.pages));
+            }
+            table[slot * mp + j] = p as i32 + 1;
+        }
+        Ok(())
+    }
+
+    /// Unpack a paged artifact's (logits, k_pages, v_pages) outputs:
+    /// store the updated page pool and return the per-slot argmax.
+    fn take_paged_outputs(&mut self, name: &str, mut out: Vec<xla::Literal>)
+        -> Result<Vec<i32>>
+    {
+        if out.len() != 3 {
+            return Err(anyhow!("{name} returned {} outputs", out.len()));
+        }
+        self.vp = Some(out.pop().unwrap());
+        self.kp = Some(out.pop().unwrap());
+        let logits = out.pop().unwrap();
+        argmax_rows(&logits, self.spec.lanes, self.spec.vocab)
     }
 }
 
@@ -694,6 +1061,99 @@ impl ExecBackend for PjrtBackend {
         let next = argmax_rows(&logits, b, self.spec.vocab)?;
         Ok(steps.iter().map(|st| next[st.lane]).collect())
     }
+
+    fn decode_paged(&mut self, steps: &[PagedStep]) -> Result<Vec<i32>> {
+        let caps = self
+            .spec
+            .paged
+            .clone()
+            .ok_or_else(|| anyhow!("artifact set has no {DECODE_PAGED}"))?;
+        if steps.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = self.spec.lanes;
+        if steps.len() > b {
+            return Err(anyhow!(
+                "{} paged steps exceed the invocation batch {b} (the engine \
+                 splits larger ticks)", steps.len()));
+        }
+        let mp = self.pages_per_lane;
+        let mut tok = vec![0i32; b];
+        // idle slots: position 0 + all-scratch tables — their write goes
+        // to scratch page 0 and their logits are discarded
+        let mut pos = vec![0i32; b];
+        let mut table = vec![0i32; b * mp];
+        for (slot, st) in steps.iter().enumerate() {
+            if st.pages.len() * caps.page_len <= st.pos {
+                return Err(anyhow!(
+                    "lane {}: {} pages do not cover pos {}", st.lane,
+                    st.pages.len(), st.pos));
+            }
+            tok[slot] = st.token;
+            pos[slot] = st.pos as i32;
+            self.fill_table_row(&mut table, slot, &st.pages, &caps)?;
+        }
+
+        let (kp, vp) = self.page_literals()?;
+        let out = self.runtime.execute(DECODE_PAGED, &[
+            lit_i32(&tok, &[b as i64])?,
+            lit_i32(&pos, &[b as i64])?,
+            lit_i32(&table, &[b as i64, mp as i64])?,
+            kp, vp,
+        ])?;
+        let next = self.take_paged_outputs(DECODE_PAGED, out)?;
+        Ok(next[..steps.len()].to_vec())
+    }
+
+    fn prefill_chunk_paged(&mut self, lane: usize, tokens: &[i32], start_pos: usize,
+                           pages: &[u32]) -> Result<i32> {
+        let caps = self
+            .spec
+            .paged
+            .clone()
+            .ok_or_else(|| anyhow!("artifact set has no {PREFILL_CHUNK_PAGED}"))?;
+        let b = self.spec.lanes;
+        let c = self
+            .spec
+            .chunk_len
+            .ok_or_else(|| anyhow!("manifest lacks serving.prefill_chunk"))?;
+        if tokens.len() != c {
+            return Err(anyhow!(
+                "prefill_chunk_paged of {} tokens but artifact chunk width is {c}",
+                tokens.len()));
+        }
+        if start_pos + c > self.spec.prefill_len {
+            return Err(anyhow!(
+                "prefill_chunk_paged overruns prompt: {start_pos}+{c} > {}",
+                self.spec.prefill_len));
+        }
+        if pages.len() * caps.page_len < start_pos + c {
+            return Err(anyhow!(
+                "lane {lane}: {} pages do not cover chunk {start_pos}+{c}",
+                pages.len()));
+        }
+        // the chunk rides invocation slot 0; idle slots write scratch.
+        // No host-side cache merge here — the artifact scatters the
+        // chunk's K/V rows into the page pool inside the graph, which is
+        // the device-side lane merge the dense path lacked.
+        let mp = self.pages_per_lane;
+        let mut flat = vec![0i32; b * c];
+        flat[..c].copy_from_slice(tokens);
+        let mut pos = vec![0i32; b];
+        pos[0] = start_pos as i32;
+        let mut table = vec![0i32; b * mp];
+        self.fill_table_row(&mut table, 0, pages, &caps)?;
+
+        let (kp, vp) = self.page_literals()?;
+        let out = self.runtime.execute(PREFILL_CHUNK_PAGED, &[
+            lit_i32(&flat, &[b as i64, c as i64])?,
+            lit_i32(&pos, &[b as i64])?,
+            lit_i32(&table, &[b as i64, mp as i64])?,
+            kp, vp,
+        ])?;
+        let next = self.take_paged_outputs(PREFILL_CHUNK_PAGED, out)?;
+        Ok(next[0])
+    }
 }
 
 #[cfg(test)]
@@ -775,6 +1235,93 @@ mod tests {
         assert!(m.decode(&[LaneStep { lane: 1, token: 0, pos: 4 }]).is_err());
         m.prefill(&[PrefillSlot { lane: 0, prompt: &p }]).unwrap();
         assert!(m.decode(&[LaneStep { lane: 0, token: 0, pos: 16 }]).is_err());
+    }
+
+    #[test]
+    fn mock_paged_stream_equals_dense_stream() {
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut dense = MockBackend::new(2, 8, 32, 64);
+        let mut paged = MockBackend::paged(2, 8, 32, 64, 8, 8);
+        let t_d = dense.prefill(&[PrefillSlot { lane: 0, prompt: &prompt }]).unwrap();
+        let t_p = paged
+            .prefill_chunk_paged(0, &prompt, 0, &[0, 3])
+            .unwrap();
+        assert_eq!(t_d[0], t_p);
+        let d = dense.decode(&[LaneStep { lane: 0, token: t_d[0], pos: 8 }]).unwrap();
+        let p = paged
+            .decode_paged(&[PagedStep { lane: 0, token: t_p, pos: 8,
+                                        pages: vec![0, 3] }])
+            .unwrap();
+        assert_eq!(d, p);
+        assert_eq!(paged.paged_decode_calls, 1);
+        // pos 8 touches 2 pages of 8 rows
+        assert_eq!(paged.pages_gathered, 2);
+    }
+
+    #[test]
+    fn mock_paged_enforces_page_contract() {
+        let mut m = MockBackend::paged(2, 4, 32, 64, 8, 4);
+        let p: Vec<i32> = (0..4).collect();
+        // chunk whose pages don't cover it
+        assert!(m.prefill_chunk_paged(0, &p, 0, &[]).is_err());
+        // page id out of range
+        assert!(m.prefill_chunk_paged(0, &p, 0, &[9]).is_err());
+        m.prefill_chunk_paged(0, &p, 0, &[1]).unwrap();
+        m.prefill_chunk_paged(1, &p, 0, &[2]).unwrap();
+        // table does not cover the write position
+        assert!(m
+            .decode_paged(&[PagedStep { lane: 0, token: 0, pos: 8, pages: vec![1] }])
+            .is_err());
+        // two lanes aliasing one physical page
+        assert!(m
+            .decode_paged(&[
+                PagedStep { lane: 0, token: 0, pos: 4, pages: vec![1] },
+                PagedStep { lane: 1, token: 0, pos: 4, pages: vec![1] },
+            ])
+            .is_err());
+        // the dense mock has no paged ops at all
+        let mut d = MockBackend::new(2, 4, 32, 64);
+        assert!(d
+            .decode_paged(&[PagedStep { lane: 0, token: 0, pos: 4, pages: vec![0] }])
+            .is_err());
+
+        // chunk 0 aliasing a MID-PREFILL neighbour is caught at the
+        // prefill write path too (not just at decode)
+        let p: Vec<i32> = (0..4).collect();
+        let mut m2 = MockBackend::paged(2, 4, 32, 64, 8, 4);
+        m2.prefill_chunk_paged(0, &p[..2], 0, &[1]).unwrap(); // lane 0 mid-prompt
+        assert!(m2.prefill_chunk_paged(1, &p[..2], 0, &[1]).is_err(),
+                "chunk-time aliasing of a live lane must be rejected");
+        // a lane's table is fixed at bind: changing it mid-prefill errors
+        let mut m3 = MockBackend::paged(1, 4, 32, 64, 8, 4);
+        m3.prefill_chunk_paged(0, &p[..2], 0, &[1]).unwrap();
+        assert!(m3.prefill_chunk_paged(0, &p[2..], 2, &[2]).is_err(),
+                "mid-prefill table swap must be rejected");
+    }
+
+    #[test]
+    fn modeled_paged_gather_charges_fragmentation() {
+        // same workload, ragged vs page-aligned positions: the ragged
+        // lane streams a mostly-empty final page, so its decode step
+        // must cost strictly more modeled time
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut aligned = ModeledBackend::u280_paged(1, 8, 64, 32, 8, 8, 1);
+        let mut ragged = ModeledBackend::u280_paged(1, 8, 64, 32, 64, 8, 1);
+        let t_a = aligned.prefill_chunk_paged(0, &prompt, 0, &[0]).unwrap();
+        let t_r = ragged.prefill_chunk_paged(0, &prompt, 0, &[0]).unwrap();
+        assert_eq!(t_a, t_r, "page geometry must not change tokens");
+        let d0_a = aligned.decode_clock_s;
+        let d0_r = ragged.decode_clock_s;
+        aligned
+            .decode_paged(&[PagedStep { lane: 0, token: t_a, pos: 8, pages: vec![0, 1] }])
+            .unwrap();
+        ragged
+            .decode_paged(&[PagedStep { lane: 0, token: t_r, pos: 8, pages: vec![0] }])
+            .unwrap();
+        let cost_aligned = aligned.decode_clock_s - d0_a; // pos 8 ends page 1 exactly...
+        let cost_ragged = ragged.decode_clock_s - d0_r; // 55 wasted rows of the 64-row page
+        assert!(cost_ragged > cost_aligned,
+                "fragmented gather must cost more: {cost_ragged} vs {cost_aligned}");
     }
 
     #[test]

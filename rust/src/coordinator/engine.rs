@@ -20,11 +20,23 @@
 
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 
 use super::backend::{ExecBackend, PjrtBackend, PrefillSlot};
 use super::request::{GenRequest, GenResult, ServeMetrics};
 use super::scheduler::{Completion, PrefillPolicy, Scheduler};
+
+/// How the engine lays out the KV cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLayout {
+    /// One `max_seq`-row cache row per lane (PR 2 behavior, bit-for-bit).
+    Dense,
+    /// Shared page pool: admission by free pages, logical lanes may
+    /// exceed the artifact batch, geometry comes from the backend's
+    /// [`PagedCaps`](super::backend::PagedCaps). Falls back to `Dense`
+    /// on backends without paged support.
+    Paged,
+}
 
 /// A token the engine just produced (streaming surface).
 #[derive(Debug, Clone, Copy)]
@@ -57,6 +69,7 @@ pub struct Engine<B: ExecBackend> {
     pub scheduler: Scheduler,
     pub metrics: ServeMetrics,
     policy: PrefillPolicy,
+    layout: KvLayout,
 }
 
 impl Engine<PjrtBackend> {
@@ -73,35 +86,83 @@ impl<B: ExecBackend> Engine<B> {
         Self::with_policy(backend, PrefillPolicy::Blocking)
     }
 
-    /// Engine with an explicit [`PrefillPolicy`]. The policy is coerced
-    /// to what the backend can execute: `Chunked` degrades to `Blocking`
-    /// without a chunk op (or per-lane decode positions — staggered
-    /// prefill completion staggers positions), and `chunk_len` snaps to
-    /// the backend's fixed artifact chunk width when it has one.
-    /// [`Engine::policy`] reports what actually runs.
+    /// Engine with an explicit [`PrefillPolicy`] over the dense layout.
     pub fn with_policy(backend: B, policy: PrefillPolicy) -> Self {
+        Self::with_layout(backend, policy, KvLayout::Dense)
+    }
+
+    /// Engine with an explicit policy AND cache layout. Both are coerced
+    /// to what the backend can execute — [`Engine::policy`] and
+    /// [`Engine::layout`] report what actually runs:
+    ///
+    /// * `Chunked` degrades to `Blocking` without a chunk op (or
+    ///   per-lane decode positions — staggered prefill completion
+    ///   staggers positions); `chunk_len` snaps to the backend's fixed
+    ///   artifact chunk width when it has one.
+    /// * `Paged` degrades to `Dense` without backend paging support.
+    /// * A paged pool has no whole-pool prefill artifact (prompts land
+    ///   page by page), so under `Paged` a `Blocking` policy is coerced
+    ///   to greedy `Chunked` — every admission streams its prompt via
+    ///   the paged chunk op as fast as the prefill engine allows.
+    pub fn with_layout(backend: B, policy: PrefillPolicy, layout: KvLayout) -> Self {
         let spec = backend.spec();
+        let paged_caps = match layout {
+            KvLayout::Paged => spec.paged.clone().filter(|_| {
+                spec.per_lane_pos && spec.chunked_prefill
+            }),
+            KvLayout::Dense => None,
+        };
+        // step 1: pick the admission style. A paged pool has no
+        // whole-pool prefill artifact, so Blocking coerces to greedy
+        // chunking; a dense backend without the chunk op (or per-lane
+        // positions) degrades Chunked to Blocking.
         let policy = match policy {
+            PrefillPolicy::Blocking if paged_caps.is_some() => PrefillPolicy::Chunked {
+                chunk_len: spec.prefill_len,
+                decode_priority: false,
+            },
             PrefillPolicy::Chunked { .. }
                 if !spec.chunked_prefill || !spec.per_lane_pos =>
             {
                 PrefillPolicy::Blocking
             }
+            other => other,
+        };
+        // step 2: snap any chunked policy to the backend's fixed
+        // artifact chunk width (one place, so the rule cannot diverge)
+        let policy = match policy {
             PrefillPolicy::Chunked { chunk_len, decode_priority } => {
                 let chunk_len = spec.chunk_len.unwrap_or(chunk_len.max(1)).max(1);
                 PrefillPolicy::Chunked { chunk_len, decode_priority }
             }
             PrefillPolicy::Blocking => PrefillPolicy::Blocking,
         };
-        let scheduler = Scheduler::new(spec.lanes, spec.prefill_len, spec.max_seq,
-                                       !spec.per_lane_pos);
-        Engine { backend, scheduler, metrics: ServeMetrics::default(), policy }
+        let (layout, scheduler, pages_total) = match paged_caps {
+            Some(caps) => (
+                KvLayout::Paged,
+                // Scheduler::paged clamps max_lanes to the page budget
+                Scheduler::paged(caps.max_lanes, spec.prefill_len, spec.max_seq,
+                                 caps.page_len, caps.pages),
+                caps.pages,
+            ),
+            None => (KvLayout::Dense,
+                     Scheduler::new(spec.lanes, spec.prefill_len, spec.max_seq,
+                                    !spec.per_lane_pos),
+                     0),
+        };
+        let metrics = ServeMetrics::with_pages_total(pages_total);
+        Engine { backend, scheduler, metrics, policy, layout }
     }
 
     /// The admission policy actually in effect (after capability
     /// coercion).
     pub fn policy(&self) -> PrefillPolicy {
         self.policy
+    }
+
+    /// The cache layout actually in effect (after capability coercion).
+    pub fn layout(&self) -> KvLayout {
+        self.layout
     }
 
     /// Artifact prefill length (prompt shape requests must match).
@@ -163,7 +224,16 @@ impl<B: ExecBackend> Engine<B> {
                     let (start_pos, len, last) = (plan.start_pos, plan.tokens.len(),
                                                   plan.last);
                     let t0 = Instant::now();
-                    let token = self.backend.prefill_chunk(lane, plan.tokens, start_pos)?;
+                    let token = match self.layout {
+                        KvLayout::Dense => {
+                            self.backend.prefill_chunk(lane, plan.tokens, start_pos)?
+                        }
+                        KvLayout::Paged => {
+                            let pages = self.scheduler.page_table(lane)?;
+                            self.backend
+                                .prefill_chunk_paged(lane, plan.tokens, start_pos, pages)?
+                        }
+                    };
                     self.metrics.total_prefill += t0.elapsed();
                     self.metrics.prefill_chunks += 1;
                     self.metrics.prefill_tokens += len;
@@ -179,17 +249,48 @@ impl<B: ExecBackend> Engine<B> {
             }
         }
 
+        // peak concurrency + page accounting are sampled at the tick's
+        // high-water mark: after admission, before retirements
+        self.metrics.peak_active = self.metrics.peak_active.max(self.scheduler.active());
+        if self.layout == KvLayout::Paged {
+            let stats = self.scheduler.page_stats();
+            self.metrics.kv_pages_peak = self.metrics.kv_pages_peak.max(stats.pages_in_use);
+            self.metrics.record_page_sample(stats.occupancy(), stats.fragmentation());
+        }
+
         // ---- one decode iteration ----------------------------------------
-        let steps = self.scheduler.decode_steps();
-        if !steps.is_empty() {
-            let t0 = Instant::now();
-            let next = self.backend.decode(&steps)?;
-            self.metrics.total_decode += t0.elapsed();
-            self.metrics.iterations += 1;
-            self.metrics.lane_steps += steps.len();
-            report.stepped = steps.len();
-            for (st, &token) in steps.iter().zip(&next) {
-                self.push_decoded(&mut report, st.lane, token)?;
+        match self.layout {
+            KvLayout::Dense => {
+                let steps = self.scheduler.decode_steps();
+                if !steps.is_empty() {
+                    let t0 = Instant::now();
+                    let next = self.backend.decode(&steps)?;
+                    self.metrics.total_decode += t0.elapsed();
+                    self.metrics.iterations += 1;
+                    self.metrics.lane_steps += steps.len();
+                    report.stepped = steps.len();
+                    for (st, &token) in steps.iter().zip(&next) {
+                        self.push_decoded(&mut report, st.lane, token)?;
+                    }
+                }
+            }
+            KvLayout::Paged => {
+                // logical lanes can outnumber the invocation batch: one
+                // scheduler tick maps onto ceil(warm / batch) paged
+                // invocations, each step carrying its page table
+                let steps = self.scheduler.paged_decode_steps();
+                let width = self.backend.spec().lanes.max(1);
+                for group in steps.chunks(width) {
+                    let t0 = Instant::now();
+                    let next = self.backend.decode_paged(group)?;
+                    self.metrics.total_decode += t0.elapsed();
+                    self.metrics.iterations += 1;
+                    self.metrics.lane_steps += group.len();
+                    report.stepped += group.len();
+                    for (st, &token) in group.iter().zip(&next) {
+                        self.push_decoded(&mut report, st.lane, token)?;
+                    }
+                }
             }
         }
 

@@ -12,7 +12,7 @@
 //! segment → memory → retrieval dataflow, while the latency/energy
 //! numbers come from the architecture simulator — DESIGN.md §2.)
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 
 use crate::runtime::{lit_f32, lit_i32, to_f32, Runtime};
 

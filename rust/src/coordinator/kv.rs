@@ -1,166 +1,210 @@
-//! KV lane pool: per-lane cache position/capacity bookkeeping for the
-//! iteration-level scheduler.
+//! Paged KV cache bookkeeping: a page allocator ([`KvPool`]) plus the
+//! per-lane cache map ([`LaneKv`]).
 //!
-//! The old `KvState` tracked one shared write position for an aligned
-//! batch; continuous batching needs each decode lane at its own position
-//! (lanes finish and are backfilled independently). With chunked
-//! admission (PR 2) a lane's cache additionally fills *incrementally*:
-//! `bind` starts a lane at position 0 and [`KvPool::fill`] advances it
-//! chunk by chunk until the prompt is resident ([`KvPool::is_warm`]),
-//! after which [`KvPool::advance`] consumes decode slots. The actual
-//! cache tensors — the INT8 integer-grid K/V of the W4A4KV8 scheme —
-//! live inside the execution backend (the PJRT backend threads XLA
-//! literals through every step); the pool only answers "which lanes are
-//! live and where does each one write next".
+//! PR 1/2 reserved one dense `max_seq`-row cache row per lane, so a
+//! short request stranded the rest of its row and lane count was pinned
+//! to the artifact batch. The paged pool (PR 3) breaks the cache into
+//! `page_len`-row pages shared by every lane: a request reserves only
+//! `ceil((prompt + budget) / page_len)` pages at admission, releases
+//! them the moment it retires, and admission is bounded by FREE PAGES,
+//! not free lanes — on skewed-length workloads the same memory admits
+//! ≥1.5× more concurrent requests (tier-1 `tests/kv_paging.rs`).
+//!
+//! Division of labor after the occupancy refactor:
+//!
+//! * [`KvPool`] is ONLY the allocator: a LIFO free-list of physical page
+//!   ids plus the pool geometry. It has no idea which lane holds what.
+//! * [`LaneKv`] is the per-lane authority: prompt length, next write
+//!   position and the page table mapping logical pages to physical ids.
+//!   It lives INSIDE the scheduler's in-flight entry, so the old
+//!   duplicated occupancy (scheduler lane table + pool slot table) is
+//!   collapsed into one structure.
+//!
+//! The dense pool of earlier PRs is the degenerate configuration
+//! `page_len == max_seq, pages == lanes` — every request reserves
+//! exactly one page, so admission-by-free-pages coincides with
+//! admission-by-free-lane and the PR 2 engine behavior is reproduced
+//! bit-for-bit.
+//!
+//! The actual cache tensors (INT8 integer-grid K/V of the W4A4KV8
+//! scheme) live in the execution backend; on the PJRT backend the paged
+//! layout is `[L, P, KV, page_len, hd]` with physical page 0 reserved
+//! as the scratch page idle artifact lanes write into — the Rust side
+//! allocates ids `0..pages` and the backend shifts by one.
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 
-/// One occupied decode lane.
+/// Geometry + free-list allocator over the shared KV page pool.
 #[derive(Debug, Clone)]
-pub struct LaneSlot {
-    pub request_id: u64,
-    /// Prompt tokens this request prefills into the lane. Positions
-    /// `[0, prompt_len)` are prompt cache; `[prompt_len, max_seq)` are
-    /// decode capacity.
+pub struct KvPool {
+    /// Cache rows per page.
+    pub page_len: usize,
+    pub prefill_len: usize,
+    pub max_seq: usize,
+    total_pages: usize,
+    /// Free physical page ids, LIFO (release-then-rebind reuses the
+    /// same pages immediately — asserted in tests).
+    free: Vec<u32>,
+}
+
+impl KvPool {
+    /// Dense-equivalent pool: one `max_seq`-row page per lane (the PR 2
+    /// layout as a degenerate paged configuration).
+    pub fn dense(lanes: usize, prefill_len: usize, max_seq: usize) -> Self {
+        Self::paged(prefill_len, max_seq, max_seq, lanes)
+    }
+
+    /// Paged pool: `total_pages` pages of `page_len` rows shared by all
+    /// lanes.
+    pub fn paged(prefill_len: usize, max_seq: usize, page_len: usize,
+                 total_pages: usize) -> Self {
+        assert!(prefill_len > 0 && max_seq >= prefill_len);
+        assert!(page_len > 0 && page_len <= max_seq);
+        assert!(total_pages > 0);
+        // LIFO off the back: lowest ids first, matching the dense pool's
+        // lowest-lane-first binding order
+        let free: Vec<u32> = (0..total_pages as u32).rev().collect();
+        KvPool { page_len, prefill_len, max_seq, total_pages, free }
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    /// Pages needed to hold `rows` cache rows.
+    pub fn pages_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.page_len).max(1)
+    }
+
+    /// Allocate `n` pages, or fail leaving the free list untouched.
+    pub fn alloc(&mut self, n: usize) -> Result<Vec<u32>> {
+        if n == 0 {
+            return Err(anyhow!("cannot allocate 0 pages"));
+        }
+        if n > self.free.len() {
+            return Err(anyhow!(
+                "KV pages exhausted: want {n}, {} of {} free",
+                self.free.len(), self.total_pages));
+        }
+        Ok(self.free.split_off(self.free.len() - n))
+    }
+
+    /// Return a lane's pages to the free list (immediate reclamation).
+    ///
+    /// Panics on a double-free or a foreign page id: a corrupt free
+    /// list would silently alias two live requests' caches, so the
+    /// invariant is checked unconditionally (pools are small — the
+    /// linear scan is noise next to one decode invocation).
+    pub fn release(&mut self, pages: Vec<u32>) {
+        // re-push reversed so an immediate realloc hands the same pages
+        // back in the same order
+        for p in pages.into_iter().rev() {
+            assert!((p as usize) < self.total_pages,
+                    "released foreign KV page id {p} ({} pages)", self.total_pages);
+            assert!(!self.free.contains(&p), "double-free of KV page {p}");
+            self.free.push(p);
+        }
+    }
+}
+
+/// One lane's cache map: position bookkeeping + page table. The single
+/// occupancy authority — owned by the scheduler's in-flight entry.
+#[derive(Debug, Clone)]
+pub struct LaneKv {
+    /// Prompt tokens this request prefills. Positions `[0, prompt_len)`
+    /// are prompt cache; `[prompt_len, reserved_rows)` decode capacity.
     pub prompt_len: usize,
     /// Next cache write position: `< prompt_len` while the prompt is
     /// still being chunked in, `>= prompt_len` once decoding.
     pub pos: usize,
+    /// Physical pages backing logical pages `0..pages.len()`.
+    pub pages: Vec<u32>,
+    /// Rows this lane may write (`min(pages·page_len, max_seq)`).
+    reserved_rows: usize,
+    page_len: usize,
 }
 
-/// Fixed pool of decode lanes with per-lane positions.
-#[derive(Debug, Clone)]
-pub struct KvPool {
-    slots: Vec<Option<LaneSlot>>,
-    pub prefill_len: usize,
-    pub max_seq: usize,
-}
-
-impl KvPool {
-    pub fn new(lanes: usize, prefill_len: usize, max_seq: usize) -> Self {
-        // `max_seq == prefill_len` is representable (a prefill-only pool):
-        // with chunked admission the prompt no longer lands as one
-        // `prefill_len` block, so per-request capacity is enforced at
-        // `bind` time (≥ 1 decode slot per bound prompt), not here.
-        assert!(lanes > 0 && prefill_len > 0 && max_seq >= prefill_len);
-        KvPool { slots: vec![None; lanes], prefill_len, max_seq }
-    }
-
-    pub fn lanes(&self) -> usize {
-        self.slots.len()
-    }
-
-    pub fn active_count(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.active_count() == 0
-    }
-
-    /// Lanes currently free, lowest index first.
-    pub fn free_lanes(&self) -> Vec<usize> {
-        (0..self.slots.len()).filter(|&i| self.slots[i].is_none()).collect()
-    }
-
-    /// Lanes currently occupied, lowest index first.
-    pub fn active_lanes(&self) -> Vec<usize> {
-        (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect()
-    }
-
-    pub fn slot(&self, lane: usize) -> Option<&LaneSlot> {
-        self.slots.get(lane).and_then(|s| s.as_ref())
-    }
-
-    /// Bind a request to a free lane with an empty cache row; the prompt
-    /// arrives through [`KvPool::fill`] (chunk by chunk, or in one call
-    /// for blocking admission).
-    pub fn bind(&mut self, lane: usize, request_id: u64, prompt_len: usize) -> Result<()> {
+impl LaneKv {
+    /// Bind a prompt to freshly allocated pages. The pages must cover
+    /// at least one decode slot past the prompt.
+    pub fn new(prompt_len: usize, pages: Vec<u32>, page_len: usize,
+               max_seq: usize) -> Result<Self> {
         if prompt_len == 0 {
-            return Err(anyhow!("lane {lane}: cannot bind an empty prompt"));
+            return Err(anyhow!("cannot bind an empty prompt"));
         }
-        if prompt_len >= self.max_seq {
+        let reserved_rows = (pages.len() * page_len).min(max_seq);
+        if prompt_len >= reserved_rows {
             return Err(anyhow!(
-                "lane {lane}: prompt of {prompt_len} leaves no decode capacity \
-                 (max_seq {})", self.max_seq));
+                "prompt of {prompt_len} leaves no decode capacity \
+                 ({} pages × {page_len} rows, max_seq {max_seq})",
+                pages.len()));
         }
-        let slot = self
-            .slots
-            .get_mut(lane)
-            .ok_or_else(|| anyhow!("lane {lane} out of range"))?;
-        if slot.is_some() {
-            return Err(anyhow!("lane {lane} already bound"));
+        Ok(LaneKv { prompt_len, pos: 0, pages, reserved_rows, page_len })
+    }
+
+    /// Record `tokens` prompt tokens landing in the cache (one prefill
+    /// chunk). Errors when the chunk overruns the prompt.
+    pub fn fill(&mut self, tokens: usize) -> Result<()> {
+        if self.pos + tokens > self.prompt_len {
+            return Err(anyhow!(
+                "chunk of {tokens} overruns prompt ({} of {} filled)",
+                self.pos, self.prompt_len));
         }
-        *slot = Some(LaneSlot { request_id, prompt_len, pos: 0 });
+        self.pos += tokens;
         Ok(())
     }
 
-    /// Record `tokens` prompt tokens landing in the lane's cache (one
-    /// prefill chunk). Errors when the chunk overruns the prompt.
-    pub fn fill(&mut self, lane: usize, tokens: usize) -> Result<()> {
-        let slot = self
-            .slots
-            .get_mut(lane)
-            .and_then(|s| s.as_mut())
-            .ok_or_else(|| anyhow!("fill on unbound lane {lane}"))?;
-        if slot.pos + tokens > slot.prompt_len {
+    /// Whether the whole prompt is cache-resident (decode-ready).
+    pub fn is_warm(&self) -> bool {
+        self.pos >= self.prompt_len
+    }
+
+    /// Prompt tokens still to prefill (0 when warm).
+    pub fn prefill_remaining(&self) -> usize {
+        self.prompt_len.saturating_sub(self.pos)
+    }
+
+    /// Remaining DECODE capacity. For a partially prefilled lane this is
+    /// the capacity left once the prompt is resident — unfilled prompt
+    /// positions are spoken for and are not decode headroom.
+    pub fn remaining(&self) -> usize {
+        self.reserved_rows - self.pos.max(self.prompt_len)
+    }
+
+    /// Consume one decode step's cache slot.
+    pub fn advance(&mut self) -> Result<()> {
+        if self.pos < self.prompt_len {
             return Err(anyhow!(
-                "lane {lane}: chunk of {tokens} overruns prompt ({} of {} filled)",
-                slot.pos, slot.prompt_len));
+                "decode advance before prefill completed \
+                 ({} of {} prompt tokens resident)", self.pos, self.prompt_len));
         }
-        slot.pos += tokens;
+        if self.pos + 1 > self.reserved_rows {
+            return Err(anyhow!(
+                "KV overflow at pos {} ({} reserved rows)", self.pos,
+                self.reserved_rows));
+        }
+        self.pos += 1;
         Ok(())
     }
 
-    /// Whether the lane's whole prompt is cache-resident (decode-ready).
-    pub fn is_warm(&self, lane: usize) -> bool {
-        self.slot(lane).map(|s| s.pos >= s.prompt_len).unwrap_or(false)
+    /// Pages whose rows actually hold data (`ceil(pos / page_len)`) —
+    /// the fragmentation numerator charged by the modeled backend's
+    /// gather cost.
+    pub fn pages_touched(&self) -> usize {
+        self.pos.div_ceil(self.page_len)
     }
 
-    /// Prompt tokens still to prefill on `lane` (0 when warm or free).
-    pub fn prefill_remaining(&self, lane: usize) -> usize {
-        self.slot(lane)
-            .map(|s| s.prompt_len.saturating_sub(s.pos))
-            .unwrap_or(0)
-    }
-
-    /// Remaining DECODE capacity of a lane. For a partially prefilled
-    /// lane this is the capacity left once its prompt is resident —
-    /// unfilled prompt positions are already spoken for and must not be
-    /// reported as decode headroom.
-    pub fn remaining(&self, lane: usize) -> usize {
-        self.slot(lane)
-            .map(|s| self.max_seq - s.pos.max(s.prompt_len))
-            .unwrap_or(0)
-    }
-
-    /// Consume one decode step's cache slot on `lane`.
-    pub fn advance(&mut self, lane: usize) -> Result<()> {
-        let max_seq = self.max_seq;
-        let slot = self
-            .slots
-            .get_mut(lane)
-            .and_then(|s| s.as_mut())
-            .ok_or_else(|| anyhow!("advance on unbound lane {lane}"))?;
-        if slot.pos < slot.prompt_len {
-            return Err(anyhow!(
-                "decode advance on lane {lane} before its prefill completed \
-                 ({} of {} prompt tokens resident)", slot.pos, slot.prompt_len));
-        }
-        if slot.pos + 1 > max_seq {
-            return Err(anyhow!("KV overflow on lane {lane} at pos {}", slot.pos));
-        }
-        slot.pos += 1;
-        Ok(())
-    }
-
-    /// Free a lane for backfill.
-    pub fn release(&mut self, lane: usize) -> Result<LaneSlot> {
-        self.slots
-            .get_mut(lane)
-            .ok_or_else(|| anyhow!("lane {lane} out of range"))?
-            .take()
-            .ok_or_else(|| anyhow!("release of free lane {lane}"))
+    /// Rows reserved for this lane (page grant, capped at `max_seq`).
+    pub fn reserved_rows(&self) -> usize {
+        self.reserved_rows
     }
 }
 
@@ -169,73 +213,116 @@ mod tests {
     use super::*;
 
     #[test]
-    fn bind_fill_advance_release_cycle() {
-        let mut p = KvPool::new(2, 4, 8);
-        assert_eq!(p.free_lanes(), vec![0, 1]);
-        p.bind(0, 11, 4).unwrap();
-        assert_eq!(p.slot(0).unwrap().pos, 0);
-        assert!(!p.is_warm(0));
-        assert_eq!(p.prefill_remaining(0), 4);
-        p.fill(0, 4).unwrap();
-        assert!(p.is_warm(0));
-        assert_eq!(p.remaining(0), 4);
-        p.advance(0).unwrap();
-        assert_eq!(p.slot(0).unwrap().pos, 5);
-        assert_eq!(p.active_lanes(), vec![0]);
-        let released = p.release(0).unwrap();
-        assert_eq!(released.request_id, 11);
-        assert!(p.is_empty());
+    fn dense_pool_is_one_page_per_lane() {
+        let mut p = KvPool::dense(2, 4, 8);
+        assert_eq!(p.total_pages(), 2);
+        assert_eq!(p.page_len, 8);
+        assert_eq!(p.pages_for(8), 1);
+        let a = p.alloc(1).unwrap();
+        assert_eq!(a, vec![0]); // lowest id first, like lowest-lane bind
+        let b = p.alloc(1).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(p.alloc(1).is_err());
+        p.release(a);
+        assert_eq!(p.alloc(1).unwrap(), vec![0]);
+        p.release(b);
+        p.release(vec![0]);
+        assert_eq!(p.free_pages(), 2);
     }
 
     #[test]
-    fn chunked_fill_reports_partial_state() {
-        let mut p = KvPool::new(1, 6, 10);
-        p.bind(0, 1, 6).unwrap();
-        p.fill(0, 4).unwrap();
-        assert!(!p.is_warm(0));
-        assert_eq!(p.prefill_remaining(0), 2);
-        // half-prefilled lane: decode headroom excludes the unfilled
-        // prompt tail (max_seq - prompt_len, NOT max_seq - pos)
-        assert_eq!(p.remaining(0), 4);
-        // decode before warm is an error
-        assert!(p.advance(0).is_err());
-        // chunk overrun is an error
-        assert!(p.fill(0, 3).is_err());
-        p.fill(0, 2).unwrap();
-        assert!(p.is_warm(0));
-        assert_eq!(p.remaining(0), 4);
+    fn alloc_is_all_or_nothing() {
+        let mut p = KvPool::paged(4, 32, 8, 3);
+        assert!(p.alloc(0).is_err());
+        assert!(p.alloc(4).is_err());
+        assert_eq!(p.free_pages(), 3, "failed alloc must not leak pages");
+        let g = p.alloc(2).unwrap();
+        assert_eq!(g.len(), 2);
+        assert_eq!(p.pages_in_use(), 2);
+        assert!(p.alloc(2).is_err());
+        assert_eq!(p.pages_in_use(), 2);
     }
 
     #[test]
-    fn double_bind_rejected() {
-        let mut p = KvPool::new(1, 2, 6);
-        p.bind(0, 1, 2).unwrap();
-        assert!(p.bind(0, 2, 2).is_err());
-        assert!(p.bind(7, 3, 2).is_err());
+    #[should_panic(expected = "double-free of KV page")]
+    fn double_free_is_detected() {
+        let mut p = KvPool::paged(4, 32, 8, 4);
+        let got = p.alloc(2).unwrap();
+        p.release(got.clone());
+        p.release(got); // the ids are already free: allocator corruption
     }
 
     #[test]
-    fn bind_requires_decode_capacity() {
-        let mut p = KvPool::new(2, 4, 5);
-        assert!(p.bind(0, 1, 0).is_err());
-        assert!(p.bind(0, 1, 5).is_err()); // prompt fills max_seq: no slot left
-        assert!(p.bind(0, 1, 4).is_ok());
+    #[should_panic(expected = "foreign KV page")]
+    fn foreign_page_release_is_detected() {
+        let mut p = KvPool::paged(4, 32, 8, 4);
+        p.release(vec![9]);
     }
 
     #[test]
-    fn overflow_rejected() {
-        let mut p = KvPool::new(1, 4, 5);
-        p.bind(0, 1, 4).unwrap();
-        p.fill(0, 4).unwrap();
-        p.advance(0).unwrap();
-        assert!(p.advance(0).is_err());
+    fn release_then_rebind_reclaims_pages() {
+        let mut p = KvPool::paged(4, 32, 8, 4);
+        let first = p.alloc(3).unwrap();
+        p.release(first.clone());
+        assert_eq!(p.free_pages(), 4);
+        // LIFO: the reclaimed pages come straight back
+        assert_eq!(p.alloc(3).unwrap(), first);
     }
 
     #[test]
-    fn release_of_free_lane_rejected() {
-        let mut p = KvPool::new(2, 2, 6);
-        assert!(p.release(1).is_err());
-        assert!(p.advance(1).is_err());
-        assert!(p.fill(1, 1).is_err());
+    fn pages_for_rounds_up() {
+        let p = KvPool::paged(4, 32, 8, 4);
+        assert_eq!(p.pages_for(1), 1);
+        assert_eq!(p.pages_for(8), 1);
+        assert_eq!(p.pages_for(9), 2);
+        assert_eq!(p.pages_for(32), 4);
+    }
+
+    #[test]
+    fn lane_fill_advance_cycle() {
+        // 6-token prompt over 8-row pages, 2 pages reserved (16 rows)
+        let mut kv = LaneKv::new(6, vec![3, 1], 8, 32).unwrap();
+        assert!(!kv.is_warm());
+        assert_eq!(kv.prefill_remaining(), 6);
+        assert_eq!(kv.remaining(), 10);
+        assert!(kv.advance().is_err()); // decode before warm
+        kv.fill(4).unwrap();
+        assert!(!kv.is_warm());
+        assert_eq!(kv.remaining(), 10, "half-prefilled lane keeps headroom fixed");
+        assert!(kv.fill(3).is_err()); // chunk overrun
+        kv.fill(2).unwrap();
+        assert!(kv.is_warm());
+        kv.advance().unwrap();
+        assert_eq!(kv.pos, 7);
+        assert_eq!(kv.remaining(), 9);
+        assert_eq!(kv.pages_touched(), 1);
+        kv.advance().unwrap();
+        kv.advance().unwrap(); // pos 9: spills into page 2
+        assert_eq!(kv.pages_touched(), 2);
+    }
+
+    #[test]
+    fn lane_overflow_rejected_at_reservation() {
+        // 1 page of 4 rows: prompt 3 + 1 decode slot exactly
+        let mut kv = LaneKv::new(3, vec![0], 4, 32).unwrap();
+        kv.fill(3).unwrap();
+        kv.advance().unwrap();
+        assert_eq!(kv.remaining(), 0);
+        assert!(kv.advance().is_err());
+    }
+
+    #[test]
+    fn lane_reservation_capped_at_max_seq() {
+        // 2 pages of 8 = 16 rows but max_seq 12 caps the reservation
+        let kv = LaneKv::new(4, vec![0, 1], 8, 12).unwrap();
+        assert_eq!(kv.reserved_rows(), 12);
+        assert_eq!(kv.remaining(), 8);
+    }
+
+    #[test]
+    fn lane_requires_decode_capacity() {
+        assert!(LaneKv::new(0, vec![0], 8, 32).is_err());
+        assert!(LaneKv::new(8, vec![0], 8, 32).is_err()); // prompt fills page
+        assert!(LaneKv::new(7, vec![0], 8, 32).is_ok());
     }
 }

@@ -19,18 +19,20 @@ mod request;
 mod scheduler;
 
 pub use backend::{BackendSpec, ExecBackend, LaneStep, MockBackend, ModeledBackend,
-                  PjrtBackend, PrefillSlot};
-pub use engine::{Engine, StepReport, TokenEvent};
+                  PagedCaps, PagedStep, PjrtBackend, PrefillSlot};
+pub use engine::{Engine, KvLayout, StepReport, TokenEvent};
 pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
-pub use kv::{KvPool, LaneSlot};
-pub use openloop::{OpenLoopConfig, OpenLoopStats, run_open_loop};
+pub use kv::{KvPool, LaneKv};
+pub use openloop::{run_open_loop, ArrivalProcess, OpenLoopConfig, OpenLoopStats,
+                   PagedPoolConfig};
 pub use request::{FinishReason, GenRequest, GenResult, ServeMetrics};
-pub use scheduler::{ChunkPlan, Completion, PrefillPolicy, RequestPhase, Scheduler};
+pub use scheduler::{ChunkPlan, Completion, PageStats, PrefillPolicy, RequestPhase,
+                    Scheduler};
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Error, Result};
 
 enum Cmd {
     /// Submit a queue and block until all of it completes (results in
@@ -61,10 +63,17 @@ impl Router {
         Self::spawn_with_policy(artifact_dir, PrefillPolicy::Blocking)
     }
 
-    /// Spawn the engine thread with an explicit admission policy (the
-    /// engine coerces it to the artifact set's capabilities — see
-    /// [`Engine::with_policy`]).
+    /// Spawn the engine thread with an explicit admission policy over
+    /// the dense cache layout.
     pub fn spawn_with_policy(artifact_dir: String, policy: PrefillPolicy) -> Result<Self> {
+        Self::spawn_with_options(artifact_dir, policy, KvLayout::Dense)
+    }
+
+    /// Spawn the engine thread with an explicit admission policy and
+    /// cache layout (both coerced to the artifact set's capabilities —
+    /// see [`Engine::with_layout`]).
+    pub fn spawn_with_options(artifact_dir: String, policy: PrefillPolicy,
+                              layout: KvLayout) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Cmd>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
@@ -73,7 +82,7 @@ impl Router {
                 let engine = match crate::runtime::Runtime::open(&artifact_dir) {
                     Ok(rt) => {
                         let _ = ready_tx.send(Ok(()));
-                        Engine::with_policy(PjrtBackend::new(rt), policy)
+                        Engine::with_layout(PjrtBackend::new(rt), policy, layout)
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -156,7 +165,7 @@ fn engine_loop<B: ExecBackend>(mut engine: Engine<B>, rx: mpsc::Receiver<Cmd>) {
     // completions buffered for the next Drain, and the first error hit
     // while stepping submit-mode work
     let mut completed: Vec<Completion> = Vec::new();
-    let mut pending_err: Option<anyhow::Error> = None;
+    let mut pending_err: Option<Error> = None;
     let mut drain_waiters: Vec<mpsc::Sender<Result<Vec<GenResult>>>> = Vec::new();
 
     loop {
@@ -230,7 +239,7 @@ fn handle_cmd<B: ExecBackend>(
     subscribers: &mut Vec<mpsc::Sender<TokenEvent>>,
     drain_waiters: &mut Vec<mpsc::Sender<Result<Vec<GenResult>>>>,
     completed: &mut Vec<Completion>,
-    pending_err: &mut Option<anyhow::Error>,
+    pending_err: &mut Option<Error>,
 ) -> bool {
     match cmd {
         Cmd::Generate(queue, reply) => {
@@ -264,7 +273,7 @@ fn run_generate<B: ExecBackend>(
     queue: Vec<GenRequest>,
     subscribers: &mut Vec<mpsc::Sender<TokenEvent>>,
     completed: &mut Vec<Completion>,
-    pending_err: &mut Option<anyhow::Error>,
+    pending_err: &mut Option<Error>,
 ) -> Result<Vec<GenResult>> {
     for r in &queue {
         engine.scheduler.validate(r)?;

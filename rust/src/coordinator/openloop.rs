@@ -1,23 +1,74 @@
-//! Open-loop bursty arrival harness over the [`ModeledBackend`].
+//! Open-loop arrival harness over the [`ModeledBackend`].
 //!
-//! Drives the engine with a deterministic bursty arrival process in
-//! VIRTUAL time (the modeled hardware clocks), so prefill-policy
+//! Drives the engine with a deterministic arrival process in VIRTUAL
+//! time (the modeled hardware clocks), so prefill-policy and KV-layout
 //! tradeoffs are measurable without artifacts and without wall-clock
 //! noise: requests are submitted when the model clock passes their
 //! arrival time, token timestamps are read off the backend clock after
 //! each tick, and TTFT/TPOT percentiles come out in modeled seconds.
 //!
-//! Both the tier-1 chunked-prefill acceptance test and the
-//! `benches/arrival_rate.rs` harness run through here, so the number CI
-//! tracks per PR is the number the test gates on.
+//! Two arrival processes, both seeded and reproducible:
+//!
+//! * [`ArrivalProcess::Burst`] — `requests` spread over `bursts` bursts
+//!   `burst_gap_s` apart with intra-burst jitter (the PR 2 workload).
+//! * [`ArrivalProcess::Poisson`] — exponential inter-arrival gaps at
+//!   `rate_rps`, the classic open-loop load model; the same seed yields
+//!   the same trace for every policy/layout under comparison.
+//!
+//! The harness optionally runs the engine over a PAGED KV pool
+//! ([`OpenLoopConfig::paged`]): same modeled hardware, admission by
+//! free pages, and the stats then carry page occupancy / fragmentation
+//! percentiles plus the peak admitted concurrency — the quantities the
+//! tier-1 paging acceptance test (`tests/kv_paging.rs`) and the
+//! `benches/kv_paging.rs` sweep gate and track.
+//!
+//! Both tier-1 acceptance tests and the `benches/*.rs` harnesses run
+//! through here, so the numbers CI tracks per PR are the numbers the
+//! tests gate on.
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 
 use super::backend::ModeledBackend;
-use super::engine::Engine;
+use super::engine::{Engine, KvLayout};
 use super::request::{percentile, GenRequest};
 use super::scheduler::PrefillPolicy;
 use crate::util::prop::Rng;
+
+/// When requests arrive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Bursts shaped by `bursts` / `burst_gap_s` / `burst_jitter_s`.
+    Burst,
+    /// Seeded Poisson arrivals: exponential gaps at `rate_rps` req/s.
+    Poisson { rate_rps: f64 },
+}
+
+/// Paged-pool geometry for an open-loop run.
+#[derive(Debug, Clone, Copy)]
+pub struct PagedPoolConfig {
+    /// Cache rows per page.
+    pub page_len: usize,
+    /// Allocatable pages shared by all lanes.
+    pub pages: usize,
+    /// Logical-lane ceiling (decode batches split as needed).
+    pub max_lanes: usize,
+    /// PHYSICAL decode-invocation width the modeled engine serves per
+    /// pass — paging grows the lane count, not the hardware batch.
+    pub decode_width: usize,
+}
+
+impl PagedPoolConfig {
+    /// A pool with the same total rows — and the same physical decode
+    /// width — as `lanes` dense `max_seq` rows: the equal-hardware,
+    /// equal-memory comparison the acceptance test gates (only the
+    /// cache LAYOUT differs between the two runs).
+    pub fn same_memory_as_dense(lanes: usize, max_seq: usize, page_len: usize,
+                                max_lanes: usize) -> Self {
+        assert!(max_seq % page_len == 0, "pages must tile max_seq");
+        PagedPoolConfig { page_len, pages: lanes * (max_seq / page_len), max_lanes,
+                          decode_width: lanes }
+    }
+}
 
 /// Workload shape for one open-loop run.
 #[derive(Debug, Clone)]
@@ -26,8 +77,10 @@ pub struct OpenLoopConfig {
     pub prefill_len: usize,
     pub max_seq: usize,
     pub vocab: usize,
-    /// Total requests, spread evenly over `bursts`.
+    /// Total requests.
     pub requests: usize,
+    /// Arrival process; burst shape below applies to [`ArrivalProcess::Burst`].
+    pub arrival: ArrivalProcess,
     /// Arrival bursts `burst_gap_s` apart; within a burst arrivals are
     /// jittered over `burst_jitter_s`.
     pub bursts: usize,
@@ -37,6 +90,8 @@ pub struct OpenLoopConfig {
     /// (skewed workloads are where iteration-level scheduling pays).
     pub min_new_tokens: usize,
     pub max_new_tokens: usize,
+    /// Run over a paged KV pool instead of the dense per-lane layout.
+    pub paged: Option<PagedPoolConfig>,
     pub seed: u64,
 }
 
@@ -52,11 +107,13 @@ impl Default for OpenLoopConfig {
             max_seq: 320,
             vocab: 512,
             requests: 24,
+            arrival: ArrivalProcess::Burst,
             bursts: 3,
             burst_gap_s: 1.5,
             burst_jitter_s: 0.05,
             min_new_tokens: 64,
             max_new_tokens: 191,
+            paged: None,
             seed: 0x5EED,
         }
     }
@@ -66,6 +123,7 @@ impl Default for OpenLoopConfig {
 #[derive(Debug, Clone)]
 pub struct OpenLoopStats {
     pub policy: PrefillPolicy,
+    pub layout: KvLayout,
     pub requests: usize,
     pub makespan_s: f64,
     pub ttft_p50_s: f64,
@@ -75,10 +133,17 @@ pub struct OpenLoopStats {
     pub decode_iterations: usize,
     pub prefill_calls: usize,
     pub prefill_chunks: usize,
+    /// Peak concurrently admitted requests.
+    pub peak_active: usize,
+    /// Paged-pool accounting (zeros on the dense layout).
+    pub kv_pages_total: usize,
+    pub kv_pages_peak: usize,
+    pub page_occupancy_p95: f64,
+    pub page_frag_p95: f64,
 }
 
 impl OpenLoopStats {
-    /// One JSON object (hand-rolled: offline vendored set has no serde).
+    /// One JSON object (hand-rolled: the offline build has no serde).
     pub fn to_json(&self) -> String {
         let policy = match self.policy {
             PrefillPolicy::Blocking => r#""blocking""#.to_string(),
@@ -86,25 +151,34 @@ impl OpenLoopStats {
                 r#"{{"chunked": {{"chunk_len": {chunk_len}, "decode_priority": {decode_priority}}}}}"#
             ),
         };
+        let layout = match self.layout {
+            KvLayout::Dense => "dense",
+            KvLayout::Paged => "paged",
+        };
         format!(
-            "{{\"policy\": {policy}, \"requests\": {}, \"makespan_s\": {:.6}, \
+            "{{\"policy\": {policy}, \"layout\": \"{layout}\", \"requests\": {}, \
+             \"makespan_s\": {:.6}, \
              \"ttft_p50_s\": {:.6}, \"ttft_p95_s\": {:.6}, \
              \"tpot_p50_s\": {:.6}, \"tpot_p95_s\": {:.6}, \
-             \"decode_iterations\": {}, \"prefill_calls\": {}, \"prefill_chunks\": {}}}",
+             \"decode_iterations\": {}, \"prefill_calls\": {}, \"prefill_chunks\": {}, \
+             \"peak_active\": {}, \"kv_pages_total\": {}, \"kv_pages_peak\": {}, \
+             \"page_occupancy_p95\": {:.6}, \"page_frag_p95\": {:.6}}}",
             self.requests, self.makespan_s,
             self.ttft_p50_s, self.ttft_p95_s,
             self.tpot_p50_s, self.tpot_p95_s,
             self.decode_iterations, self.prefill_calls, self.prefill_chunks,
+            self.peak_active, self.kv_pages_total, self.kv_pages_peak,
+            self.page_occupancy_p95, self.page_frag_p95,
         )
     }
 }
 
 /// Run one open-loop workload under `policy`; identical `cfg` + `seed`
-/// produce the identical arrival trace for every policy, so runs are
-/// directly comparable.
+/// produce the identical arrival trace for every policy and layout, so
+/// runs are directly comparable.
 pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<OpenLoopStats> {
-    if cfg.requests == 0 || cfg.bursts == 0 {
-        return Err(anyhow!("open loop needs requests > 0 and bursts > 0"));
+    if cfg.requests == 0 {
+        return Err(anyhow!("open loop needs requests > 0"));
     }
     if cfg.min_new_tokens == 0 || cfg.max_new_tokens < cfg.min_new_tokens {
         return Err(anyhow!("bad budget range"));
@@ -114,16 +188,35 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
             "budgets up to {} do not fit: {} prompt + budget > max_seq {}",
             cfg.max_new_tokens, cfg.prefill_len, cfg.max_seq));
     }
+    match cfg.arrival {
+        ArrivalProcess::Burst if cfg.bursts == 0 => {
+            return Err(anyhow!("burst arrivals need bursts > 0"));
+        }
+        ArrivalProcess::Poisson { rate_rps } if rate_rps <= 0.0 => {
+            return Err(anyhow!("poisson arrivals need rate_rps > 0"));
+        }
+        _ => {}
+    }
 
     let mut rng = Rng::new(cfg.seed);
     // the arrival trace: (time, request), sorted by time for delivery.
-    // `arrival_by_id` keeps each request id's own arrival time — jitter
-    // can permute ids within a burst, so sorted position ≠ id.
+    // `arrival_by_id` keeps each request id's own arrival time — burst
+    // jitter can permute ids, so sorted position ≠ id.
     let mut trace: Vec<(f64, GenRequest)> = Vec::with_capacity(cfg.requests);
     let mut arrival_by_id = vec![0.0f64; cfg.requests];
+    let mut poisson_t = 0.0f64;
     for i in 0..cfg.requests {
-        let burst = i % cfg.bursts;
-        let at = burst as f64 * cfg.burst_gap_s + rng.f64() * cfg.burst_jitter_s;
+        let at = match cfg.arrival {
+            ArrivalProcess::Burst => {
+                let burst = i % cfg.bursts;
+                burst as f64 * cfg.burst_gap_s + rng.f64() * cfg.burst_jitter_s
+            }
+            ArrivalProcess::Poisson { rate_rps } => {
+                // inverse-CDF exponential gap; 1 - u keeps ln() finite
+                poisson_t += -(1.0 - rng.f64()).ln() / rate_rps;
+                poisson_t
+            }
+        };
         let prompt = rng.tokens(cfg.prefill_len, cfg.vocab as i32);
         let budget = rng.usize_in(cfg.min_new_tokens, cfg.max_new_tokens);
         arrival_by_id[i] = at;
@@ -132,10 +225,28 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
     trace.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
     let arrival: Vec<f64> = trace.iter().map(|(t, _)| *t).collect();
 
-    let backend = ModeledBackend::u280(cfg.lanes, cfg.prefill_len, cfg.max_seq,
-                                       cfg.vocab);
-    let mut engine = Engine::with_policy(backend, policy);
-    if engine.policy() != policy {
+    let mut engine = match cfg.paged {
+        Some(p) => {
+            let backend = ModeledBackend::u280_paged(
+                p.max_lanes, cfg.prefill_len, cfg.max_seq, cfg.vocab,
+                p.page_len, p.pages, p.decode_width);
+            Engine::with_layout(backend, policy, KvLayout::Paged)
+        }
+        None => {
+            let backend = ModeledBackend::u280(cfg.lanes, cfg.prefill_len,
+                                               cfg.max_seq, cfg.vocab);
+            Engine::with_policy(backend, policy)
+        }
+    };
+    if cfg.paged.is_some() && engine.layout() != KvLayout::Paged {
+        return Err(anyhow!("modeled backend refused the paged layout"));
+    }
+    // a Chunked request degrading to Blocking means the backend cannot
+    // chunk — that invalidates the comparison; paged-layout coercions
+    // (Blocking → greedy Chunked) are expected and reported in stats
+    if matches!(policy, PrefillPolicy::Chunked { .. })
+        && engine.policy() == PrefillPolicy::Blocking
+    {
         return Err(anyhow!("modeled backend cannot run {policy:?}"));
     }
 
@@ -187,17 +298,24 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         }
     }
 
+    let m = &engine.metrics;
     Ok(OpenLoopStats {
         policy: engine.policy(),
+        layout: engine.layout(),
         requests: n,
         makespan_s: engine.backend.model_time_s,
         ttft_p50_s: percentile(&ttft, 50.0),
         ttft_p95_s: percentile(&ttft, 95.0),
         tpot_p50_s: percentile(&tpot, 50.0),
         tpot_p95_s: percentile(&tpot, 95.0),
-        decode_iterations: engine.metrics.iterations,
-        prefill_calls: engine.metrics.prefill_calls,
-        prefill_chunks: engine.metrics.prefill_chunks,
+        decode_iterations: m.iterations,
+        prefill_calls: m.prefill_calls,
+        prefill_chunks: m.prefill_chunks,
+        peak_active: m.peak_active,
+        kv_pages_total: m.kv_pages_total,
+        kv_pages_peak: m.kv_pages_peak,
+        page_occupancy_p95: m.page_occupancy_p95(),
+        page_frag_p95: m.page_frag_p95(),
     })
 }
 
@@ -246,6 +364,9 @@ mod tests {
         cfg = small();
         cfg.requests = 0;
         assert!(run_open_loop(PrefillPolicy::Blocking, &cfg).is_err());
+        cfg = small();
+        cfg.arrival = ArrivalProcess::Poisson { rate_rps: 0.0 };
+        assert!(run_open_loop(PrefillPolicy::Blocking, &cfg).is_err());
     }
 
     #[test]
@@ -255,7 +376,37 @@ mod tests {
         let j = s.to_json();
         assert!(j.contains("\"chunk_len\": 32"));
         assert!(j.contains("\"ttft_p95_s\""));
+        assert!(j.contains("\"layout\": \"dense\""));
+        assert!(j.contains("\"peak_active\""));
         // round-trips through the in-tree JSON parser
         assert!(crate::util::Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn poisson_arrivals_are_seeded_and_ordered() {
+        let mut cfg = small();
+        cfg.arrival = ArrivalProcess::Poisson { rate_rps: 8.0 };
+        let a = run_open_loop(PrefillPolicy::Blocking, &cfg).unwrap();
+        let b = run_open_loop(PrefillPolicy::Blocking, &cfg).unwrap();
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-12,
+                "poisson trace must be reproducible");
+        // a different seed gives a different trace
+        cfg.seed = 99;
+        let c = run_open_loop(PrefillPolicy::Blocking, &cfg).unwrap();
+        assert!((a.makespan_s - c.makespan_s).abs() > 1e-12);
+    }
+
+    #[test]
+    fn paged_run_reports_page_stats() {
+        let mut cfg = small();
+        cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+            cfg.lanes, cfg.max_seq, 64, 16));
+        let s = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(s.layout, KvLayout::Paged);
+        assert_eq!(s.kv_pages_total, 4 * (320 / 64));
+        assert!(s.kv_pages_peak > 0);
+        assert!(s.page_occupancy_p95 > 0.0 && s.page_occupancy_p95 <= 1.0);
+        assert!(s.to_json().contains("\"layout\": \"paged\""));
+        assert!(crate::util::Json::parse(&s.to_json()).is_ok());
     }
 }

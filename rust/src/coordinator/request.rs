@@ -129,9 +129,48 @@ pub struct ServeMetrics {
     pub prefill_wait_s: Vec<f64>,
     /// Per-request time-per-output-token samples, seconds.
     pub tpot_s: Vec<f64>,
+    /// Peak concurrently admitted requests (the paging headline: at
+    /// equal memory a paged pool admits ≥1.5× more on skewed lengths).
+    pub peak_active: usize,
+    /// Paged-pool geometry: total allocatable pages (0 = dense layout).
+    pub kv_pages_total: usize,
+    /// Peak pages simultaneously held by live lanes.
+    pub kv_pages_peak: usize,
+    /// Page occupancy samples (pages in use / total), one per SAMPLED
+    /// tick — bounded by decimation, see [`ServeMetrics::record_page_sample`].
+    pub page_occupancy_s: Vec<f64>,
+    /// Internal-fragmentation samples (reserved-but-unwritten row
+    /// fraction across live lanes), same sampling as occupancy.
+    pub page_frag_s: Vec<f64>,
+    /// Sampling stride for the page vectors (every `stride`-th tick is
+    /// kept; doubles whenever the buffers hit the cap).
+    page_sample_stride: u64,
+    /// Ticks seen since the stride last applied.
+    page_sample_tick: u64,
+}
+
+/// Cap on the per-tick page-sample buffers: unlike the per-request
+/// latency vectors, ticks accumulate for as long as the engine thread
+/// lives, so unbounded growth would leak on a long-running Router.
+const PAGE_SAMPLE_CAP: usize = 4096;
+
+/// Drop every other sample (keeps indices 0, 2, 4, ... — an evenly
+/// spread thinning used by the page-sample decimation).
+fn retain_every_other(v: &mut Vec<f64>) {
+    let mut keep = false;
+    v.retain(|_| {
+        keep = !keep;
+        keep
+    });
 }
 
 impl ServeMetrics {
+    /// Metrics for a paged engine: records the pool size so the page
+    /// accounting surface is live.
+    pub fn with_pages_total(kv_pages_total: usize) -> Self {
+        ServeMetrics { kv_pages_total, ..Default::default() }
+    }
+
     /// Fold one completed request into the samples.
     pub fn record(&mut self, result: &GenResult) {
         self.requests += 1;
@@ -192,6 +231,42 @@ impl ServeMetrics {
         percentile(&self.prefill_wait_s, 95.0)
     }
 
+    /// Record one tick's page occupancy/fragmentation, bounded: when the
+    /// buffers reach [`PAGE_SAMPLE_CAP`] they are decimated (every other
+    /// sample dropped) and the sampling stride doubles, so a long-lived
+    /// engine keeps an evenly spread, fixed-size history instead of an
+    /// unbounded per-tick log.
+    pub fn record_page_sample(&mut self, occupancy: f64, fragmentation: f64) {
+        self.page_sample_tick += 1;
+        if self.page_sample_tick < self.page_sample_stride.max(1) {
+            return;
+        }
+        self.page_sample_tick = 0;
+        self.page_occupancy_s.push(occupancy);
+        self.page_frag_s.push(fragmentation);
+        if self.page_occupancy_s.len() >= PAGE_SAMPLE_CAP {
+            retain_every_other(&mut self.page_occupancy_s);
+            retain_every_other(&mut self.page_frag_s);
+            self.page_sample_stride = self.page_sample_stride.max(1) * 2;
+        }
+    }
+
+    pub fn page_occupancy_p50(&self) -> f64 {
+        percentile(&self.page_occupancy_s, 50.0)
+    }
+
+    pub fn page_occupancy_p95(&self) -> f64 {
+        percentile(&self.page_occupancy_s, 95.0)
+    }
+
+    pub fn page_frag_p50(&self) -> f64 {
+        percentile(&self.page_frag_s, 50.0)
+    }
+
+    pub fn page_frag_p95(&self) -> f64 {
+        percentile(&self.page_frag_s, 95.0)
+    }
+
     /// Decode lane utilization: fraction of lane-iterations that carried
     /// a live request (1.0 = every lane busy every iteration).
     pub fn lane_utilization(&self, pool_lanes: usize) -> f64 {
@@ -249,6 +324,21 @@ mod tests {
         // queue wait + prefill wait partition the TTFT
         assert!((m.queue_wait_p50() - 0.004).abs() < 1e-9);
         assert!((m.prefill_wait_p50() - 0.006).abs() < 1e-9);
+    }
+
+    #[test]
+    fn page_samples_stay_bounded_by_decimation() {
+        let mut m = ServeMetrics::default();
+        for i in 0..20_000 {
+            m.record_page_sample(0.5 + (i % 2) as f64 * 0.1, 0.25);
+        }
+        // a long-lived engine must not accumulate one sample per tick
+        assert!(m.page_occupancy_s.len() < PAGE_SAMPLE_CAP,
+                "page samples grew unbounded: {}", m.page_occupancy_s.len());
+        assert_eq!(m.page_occupancy_s.len(), m.page_frag_s.len());
+        // the percentile surface stays live after decimation
+        assert!(m.page_occupancy_p95() >= 0.5);
+        assert!((m.page_frag_p50() - 0.25).abs() < 1e-9);
     }
 
     #[test]

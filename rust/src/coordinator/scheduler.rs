@@ -2,26 +2,40 @@
 //!
 //! Replaces the old batch-at-a-time `Batcher` (which padded partial
 //! batches by duplicating a real lane and decoded every lane to the
-//! batch max). The scheduler owns an admission queue and the fixed
-//! [`KvPool`] of decode lanes; each [`Engine::step`](super::Engine::step)
-//! runs ONE scheduler tick. Lanes finish independently — per-request
-//! `max_new_tokens` and stop tokens — and a freed lane is backfilled
-//! from the queue on the very next iteration, so no decode slot is ever
-//! spent on a finished or duplicated request.
+//! batch max). The scheduler owns the admission queue, the page
+//! allocator ([`KvPool`]) and the logical lane table; each
+//! [`Engine::step`](super::Engine::step) runs ONE scheduler tick. Lanes
+//! finish independently — per-request `max_new_tokens` and stop tokens —
+//! and a freed lane is backfilled from the queue on the very next
+//! iteration, so no decode slot is ever spent on a finished or
+//! duplicated request.
+//!
+//! **Occupancy is single-authority** (PR 3): the in-flight entry owns
+//! BOTH the request state and its [`LaneKv`] cache map (position + page
+//! table). The earlier split — a scheduler lane table next to a
+//! `KvPool` slot table, updated in lockstep — is gone; the pool is now
+//! only the free-list allocator.
+//!
+//! **Admission is by free pages.** A request reserves
+//! `ceil((prompt + budget) / page_len)` pages when it binds and releases
+//! them the moment it retires. In the dense configuration (`page_len ==
+//! max_seq`, one page per lane) that degenerates to exactly the PR 2
+//! free-lane rule, bit-for-bit; in a paged configuration short requests
+//! reserve less, so MORE logical lanes fit the same memory
+//! (`tests/kv_paging.rs` gates the ≥1.5× concurrency win). Admission is
+//! FIFO with head-of-line blocking: if the head request's pages don't
+//! fit, nothing behind it jumps the queue (no starvation).
 //!
 //! Admission prefill is governed by a [`PrefillPolicy`]:
 //!
 //! * [`PrefillPolicy::Blocking`] — the PR 1 behavior: one whole-pool
 //!   prefill invocation warms every admitted lane before the tick's
-//!   decode iteration. Simple, but every queued request's TTFT inflates
-//!   while decode stalls behind the prompt.
+//!   decode iteration.
 //! * [`PrefillPolicy::Chunked`] — prompts stream into their lanes in
-//!   `chunk_len`-token slices interleaved with decode iterations (the
-//!   stage-customized hardware story: the prefill engine chews prompt
-//!   chunks while the decode engine keeps stepping resident lanes). A
-//!   request occupying a lane mid-prompt is in the
-//!   [`RequestPhase::Prefilling`] state and joins decode iterations only
-//!   once its prompt is cache-resident.
+//!   `chunk_len`-token slices interleaved with decode iterations; a
+//!   request occupying a lane mid-prompt is in
+//!   [`RequestPhase::Prefilling`] and joins decode once its prompt is
+//!   cache-resident.
 //!
 //! Admission policy is capability-driven: with a per-lane-position
 //! backend (`BackendSpec::per_lane_pos`) any free lane is backfilled
@@ -31,10 +45,10 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 
-use super::backend::LaneStep;
-use super::kv::KvPool;
+use super::backend::{LaneStep, PagedStep};
+use super::kv::{KvPool, LaneKv};
 use super::request::{FinishReason, GenRequest, GenResult};
 
 /// How admission prefill shares the engine with decode iterations.
@@ -90,6 +104,36 @@ pub struct ChunkPlan<'a> {
     pub last: bool,
 }
 
+/// Point-in-time page accounting for the metrics surface.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PageStats {
+    pub total_pages: usize,
+    pub pages_in_use: usize,
+    /// Cache rows actually written across live lanes.
+    pub rows_used: usize,
+    /// Rows reserved by live lanes (`Σ min(pages·page_len, max_seq)`).
+    pub rows_reserved: usize,
+}
+
+impl PageStats {
+    /// Fraction of the pool's pages held by live lanes.
+    pub fn occupancy(&self) -> f64 {
+        if self.total_pages == 0 {
+            return 0.0;
+        }
+        self.pages_in_use as f64 / self.total_pages as f64
+    }
+
+    /// Reserved-but-unwritten fraction: internal fragmentation of the
+    /// live reservations (ragged final pages + unspent decode budget).
+    pub fn fragmentation(&self) -> f64 {
+        if self.rows_reserved == 0 {
+            return 0.0;
+        }
+        1.0 - self.rows_used as f64 / self.rows_reserved as f64
+    }
+}
+
 /// A queued request with its submission order and arrival time.
 #[derive(Debug, Clone)]
 struct Pending {
@@ -98,7 +142,8 @@ struct Pending {
     arrived: Instant,
 }
 
-/// A request occupying a decode lane.
+/// A request occupying a decode lane — request state AND its cache map
+/// (the single occupancy authority).
 #[derive(Debug)]
 struct InFlight {
     req: GenRequest,
@@ -106,6 +151,7 @@ struct InFlight {
     arrived: Instant,
     admitted_at: Instant,
     phase: RequestPhase,
+    kv: LaneKv,
     tokens: Vec<i32>,
     first_token_at: Instant,
 }
@@ -121,20 +167,20 @@ impl InFlight {
         }
     }
 
-    fn into_result(self, now: Instant) -> Completion {
+    fn into_result(self, now: Instant) -> (Completion, Vec<u32>) {
         let finish_reason = self.finish_reason().unwrap_or(FinishReason::Length);
-        (self.seq, GenResult {
+        ((self.seq, GenResult {
             id: self.req.id,
             tokens: self.tokens,
             ttft: self.first_token_at - self.arrived,
             queue_wait: self.admitted_at - self.arrived,
             decode_time: now - self.first_token_at,
             finish_reason,
-        })
+        }), self.kv.pages)
     }
 }
 
-/// Admission queue + lane pool + in-flight state.
+/// Admission queue + page pool + in-flight state.
 pub struct Scheduler {
     pool: KvPool,
     queue: VecDeque<Pending>,
@@ -142,22 +188,46 @@ pub struct Scheduler {
     /// Gang admission (aligned-only backends): admit only when the pool
     /// is completely free.
     pub gang: bool,
+    /// Paged configuration (admission can outnumber the artifact batch).
+    paged: bool,
     next_seq: u64,
 }
 
 impl Scheduler {
+    /// Dense scheduler: one `max_seq`-row page per lane — the PR 2
+    /// configuration, reproduced bit-for-bit.
     pub fn new(lanes: usize, prefill_len: usize, max_seq: usize, gang: bool) -> Self {
+        assert!(lanes > 0);
         Scheduler {
-            pool: KvPool::new(lanes, prefill_len, max_seq),
+            pool: KvPool::dense(lanes, prefill_len, max_seq),
             queue: VecDeque::new(),
             lanes: (0..lanes).map(|_| None).collect(),
             gang,
+            paged: false,
+            next_seq: 0,
+        }
+    }
+
+    /// Paged scheduler over `total_pages` shared pages of `page_len`
+    /// rows, with up to `max_lanes` logical lanes (a logical lane needs
+    /// at least one page, so `max_lanes` beyond `total_pages` buys
+    /// nothing). Paged admission requires a per-lane-position backend,
+    /// so gang mode does not apply.
+    pub fn paged(max_lanes: usize, prefill_len: usize, max_seq: usize,
+                 page_len: usize, total_pages: usize) -> Self {
+        assert!(max_lanes > 0);
+        Scheduler {
+            pool: KvPool::paged(prefill_len, max_seq, page_len, total_pages),
+            queue: VecDeque::new(),
+            lanes: (0..max_lanes.min(total_pages)).map(|_| None).collect(),
+            gang: false,
+            paged: true,
             next_seq: 0,
         }
     }
 
     pub fn lanes(&self) -> usize {
-        self.pool.lanes()
+        self.lanes.len()
     }
 
     pub fn prefill_len(&self) -> usize {
@@ -166,6 +236,28 @@ impl Scheduler {
 
     pub fn max_seq(&self) -> usize {
         self.pool.max_seq
+    }
+
+    pub fn is_paged(&self) -> bool {
+        self.paged
+    }
+
+    pub fn page_len(&self) -> usize {
+        self.pool.page_len
+    }
+
+    /// Pool-wide page accounting (occupancy / fragmentation metrics).
+    pub fn page_stats(&self) -> PageStats {
+        let mut stats = PageStats {
+            total_pages: self.pool.total_pages(),
+            pages_in_use: self.pool.pages_in_use(),
+            ..PageStats::default()
+        };
+        for flight in self.lanes.iter().flatten() {
+            stats.rows_used += flight.kv.pos;
+            stats.rows_reserved += flight.kv.reserved_rows();
+        }
+        stats
     }
 
     /// Validate a request against the artifact shapes.
@@ -184,6 +276,17 @@ impl Scheduler {
             return Err(anyhow!(
                 "request {}: {} prompt + {} new tokens exceeds max_seq {}",
                 req.id, self.pool.prefill_len, req.max_new_tokens, self.pool.max_seq
+            ));
+        }
+        // a reservation larger than the whole pool could NEVER be
+        // admitted — head-of-line blocking would spin forever, so refuse
+        // it at submission (dense pools always reserve exactly one page,
+        // so this only bites undersized paged pools)
+        let needed = self.pool.pages_for(self.reserve_rows(req));
+        if needed > self.pool.total_pages() {
+            return Err(anyhow!(
+                "request {}: reservation of {needed} pages exceeds the pool's {} \
+                 ({} rows/page)", req.id, self.pool.total_pages(), self.pool.page_len
             ));
         }
         Ok(())
@@ -208,35 +311,51 @@ impl Scheduler {
     }
 
     pub fn active(&self) -> usize {
-        self.pool.active_count()
+        self.lanes.iter().filter(|l| l.is_some()).count()
     }
 
     pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || !self.pool.is_empty()
+        !self.queue.is_empty() || self.active() > 0
+    }
+
+    /// Rows a request reserves: prompt + generation budget (the cap that
+    /// makes mid-flight page exhaustion impossible).
+    fn reserve_rows(&self, req: &GenRequest) -> usize {
+        (req.prompt.len() + req.max_new_tokens).min(self.pool.max_seq)
     }
 
     /// Pick the lanes to admit this iteration and bind them (empty cache
-    /// rows, [`RequestPhase::Prefilling`] at chunk 0). Returns the bound
-    /// lanes; the engine then feeds each prompt through the policy's
-    /// prefill path.
+    /// maps, [`RequestPhase::Prefilling`] at chunk 0). A request binds
+    /// only if its page reservation fits the free list — FIFO with
+    /// head-of-line blocking, so admission is refused when PAGES (not
+    /// lanes) run out. Returns the bound lanes; the engine then feeds
+    /// each prompt through the policy's prefill path.
     pub fn plan_admissions(&mut self) -> Vec<usize> {
-        if self.queue.is_empty() || (self.gang && !self.pool.is_empty()) {
+        if self.queue.is_empty() || (self.gang && self.active() > 0) {
             return Vec::new();
         }
-        let free = self.pool.free_lanes();
         let mut admitted = Vec::new();
         let now = Instant::now();
+        let free: Vec<usize> =
+            (0..self.lanes.len()).filter(|&l| self.lanes[l].is_none()).collect();
         for lane in free {
-            let Some(p) = self.queue.pop_front() else { break };
-            self.pool
-                .bind(lane, p.req.id, p.req.prompt.len())
-                .expect("free lane bind cannot fail");
+            let Some(head) = self.queue.front() else { break };
+            let pages_needed = self.pool.pages_for(self.reserve_rows(&head.req));
+            if pages_needed > self.pool.free_pages() {
+                break; // head-of-line blocks: keep FIFO order
+            }
+            let p = self.queue.pop_front().expect("head checked above");
+            let pages = self.pool.alloc(pages_needed).expect("count checked above");
+            let kv = LaneKv::new(p.req.prompt.len(), pages, self.pool.page_len,
+                                 self.pool.max_seq)
+                .expect("validated request cannot fail to bind");
             self.lanes[lane] = Some(InFlight {
                 req: p.req,
                 seq: p.seq,
                 arrived: p.arrived,
                 admitted_at: now,
                 phase: RequestPhase::Prefilling { next_chunk: 0 },
+                kv,
                 // placeholder; overwritten when the prefill completes
                 first_token_at: p.arrived,
                 tokens: Vec::new(),
@@ -246,46 +365,51 @@ impl Scheduler {
         admitted
     }
 
-    /// Request id bound to `lane` (0 when unbound; used for event labels).
-    pub fn prompt_owner(&self, lane: usize) -> u64 {
+    fn flight(&self, lane: usize) -> Result<&InFlight> {
         self.lanes
             .get(lane)
             .and_then(|l| l.as_ref())
-            .map(|f| f.req.id)
-            .unwrap_or(0)
+            .ok_or_else(|| anyhow!("no request bound to lane {lane}"))
+    }
+
+    fn flight_mut(&mut self, lane: usize) -> Result<&mut InFlight> {
+        self.lanes
+            .get_mut(lane)
+            .and_then(|l| l.as_mut())
+            .ok_or_else(|| anyhow!("no request bound to lane {lane}"))
+    }
+
+    /// Request id bound to `lane` (0 when unbound; used for event labels).
+    pub fn prompt_owner(&self, lane: usize) -> u64 {
+        self.flight(lane).map(|f| f.req.id).unwrap_or(0)
     }
 
     /// Tokens the request on `lane` has generated so far.
     pub fn generated(&self, lane: usize) -> usize {
-        self.lanes
-            .get(lane)
-            .and_then(|l| l.as_ref())
-            .map(|f| f.tokens.len())
-            .unwrap_or(0)
+        self.flight(lane).map(|f| f.tokens.len()).unwrap_or(0)
     }
 
     /// Prompt of the request bound to `lane`.
     pub fn prompt(&self, lane: usize) -> Result<&[i32]> {
-        self.lanes
-            .get(lane)
-            .and_then(|l| l.as_ref())
-            .map(|f| f.req.prompt.as_slice())
-            .ok_or_else(|| anyhow!("no request bound to lane {lane}"))
+        Ok(self.flight(lane)?.req.prompt.as_slice())
     }
 
     /// Lifecycle phase of the request on `lane` (None when unbound).
     pub fn phase(&self, lane: usize) -> Option<RequestPhase> {
-        self.lanes.get(lane).and_then(|l| l.as_ref()).map(|f| f.phase)
+        self.flight(lane).ok().map(|f| f.phase)
+    }
+
+    /// Physical pages backing `lane`'s cache (paged backends thread this
+    /// through every gather/scatter invocation).
+    pub fn page_table(&self, lane: usize) -> Result<&[u32]> {
+        Ok(self.flight(lane)?.kv.pages.as_slice())
     }
 
     /// Lanes with a prompt still streaming in, oldest admission first —
     /// FIFO chunk service completes the head request's prefill (and thus
     /// its first token) soonest.
     pub fn prefilling_lanes(&self) -> Vec<usize> {
-        let mut lanes: Vec<usize> = self
-            .pool
-            .active_lanes()
-            .into_iter()
+        let mut lanes: Vec<usize> = (0..self.lanes.len())
             .filter(|&l| {
                 matches!(self.lanes[l].as_ref().map(|f| f.phase),
                          Some(RequestPhase::Prefilling { .. }))
@@ -302,11 +426,7 @@ impl Scheduler {
         if chunk_len == 0 {
             return Err(anyhow!("chunk_len must be > 0"));
         }
-        let flight = self
-            .lanes
-            .get(lane)
-            .and_then(|l| l.as_ref())
-            .ok_or_else(|| anyhow!("no request bound to lane {lane}"))?;
+        let flight = self.flight(lane)?;
         let RequestPhase::Prefilling { next_chunk } = flight.phase else {
             return Err(anyhow!("lane {lane} is not prefilling"));
         };
@@ -336,16 +456,11 @@ impl Scheduler {
         -> Result<Option<Completion>>
     {
         let now = Instant::now();
-        self.pool.fill(lane, len)?;
-        let warm = self.pool.is_warm(lane);
-        let flight = self
-            .lanes
-            .get_mut(lane)
-            .and_then(|l| l.as_mut())
-            .ok_or_else(|| anyhow!("chunk result for unbound lane {lane}"))?;
+        let flight = self.flight_mut(lane)?;
         match flight.phase {
             RequestPhase::Prefilling { next_chunk } => {
-                if warm {
+                flight.kv.fill(len)?;
+                if flight.kv.is_warm() {
                     flight.phase = RequestPhase::Decoding;
                     flight.first_token_at = now;
                     flight.tokens.push(token);
@@ -366,7 +481,7 @@ impl Scheduler {
     /// immediately when the budget is one token or the first token is a
     /// stop token.
     pub fn record_prefill(&mut self, lane: usize, token: i32) -> Result<Option<Completion>> {
-        let remaining = self.pool.prefill_remaining(lane);
+        let remaining = self.flight(lane)?.kv.prefill_remaining();
         self.record_chunk(lane, remaining, token)
     }
 
@@ -374,14 +489,35 @@ impl Scheduler {
     /// and write position. Lanes still prefilling are excluded — their
     /// prompts are not yet cache-resident.
     pub fn decode_steps(&self) -> Vec<LaneStep> {
-        self.pool
-            .active_lanes()
-            .into_iter()
-            .filter(|&lane| self.pool.is_warm(lane))
+        (0..self.lanes.len())
             .filter_map(|lane| {
                 let flight = self.lanes[lane].as_ref()?;
-                let slot = self.pool.slot(lane)?;
-                Some(LaneStep { lane, token: *flight.tokens.last()?, pos: slot.pos })
+                if !flight.kv.is_warm() {
+                    return None;
+                }
+                Some(LaneStep { lane, token: *flight.tokens.last()?, pos: flight.kv.pos })
+            })
+            .collect()
+    }
+
+    /// The decode plan with page tables attached (paged backends).
+    ///
+    /// Tables are CLONED into the plan (one small Vec per warm lane per
+    /// tick): the engine mutates the scheduler between invocations of a
+    /// split tick (token recording can retire lanes and free pages), so
+    /// borrowed tables would alias; the copies are noise next to one
+    /// artifact execution.
+    pub fn paged_decode_steps(&self) -> Vec<PagedStep> {
+        self.decode_steps()
+            .into_iter()
+            .map(|st| {
+                let pages = self.lanes[st.lane]
+                    .as_ref()
+                    .expect("decode step on bound lane")
+                    .kv
+                    .pages
+                    .clone();
+                PagedStep { lane: st.lane, token: st.token, pos: st.pos, pages }
             })
             .collect()
     }
@@ -389,36 +525,32 @@ impl Scheduler {
     /// Record one decoded token on `lane`, advancing its cache position.
     pub fn record_decode(&mut self, lane: usize, token: i32) -> Result<Option<Completion>> {
         let now = Instant::now();
-        self.pool.advance(lane)?;
-        let flight = self
-            .lanes
-            .get_mut(lane)
-            .and_then(|l| l.as_mut())
-            .ok_or_else(|| anyhow!("decode result for unbound lane {lane}"))?;
+        let flight = self.flight_mut(lane)?;
+        flight.kv.advance()?;
         flight.tokens.push(token);
         self.retire_if_finished(lane, now)
     }
 
     fn retire_if_finished(&mut self, lane: usize, now: Instant) -> Result<Option<Completion>> {
         let flight = self.lanes[lane].as_ref().expect("lane checked by caller");
-        let exhausted = self.pool.remaining(lane) == 0;
+        let exhausted = flight.kv.remaining() == 0;
         if flight.finish_reason().is_none() && !exhausted {
             return Ok(None);
         }
         let flight = self.lanes[lane].take().expect("lane occupied");
-        self.pool.release(lane)?;
-        Ok(Some(flight.into_result(now)))
+        let (completion, pages) = flight.into_result(now);
+        self.pool.release(pages);
+        Ok(Some(completion))
     }
 
     /// Drop everything — queued and in-flight — after a backend error so
     /// the engine thread can keep serving subsequent requests.
     pub fn abort_all(&mut self) {
         self.queue.clear();
-        for lane in self.pool.active_lanes() {
-            let _ = self.pool.release(lane);
-        }
         for slot in &mut self.lanes {
-            *slot = None;
+            if let Some(flight) = slot.take() {
+                self.pool.release(flight.kv.pages);
+            }
         }
     }
 }
@@ -617,5 +749,149 @@ mod tests {
         assert!(!s.has_work());
         assert_eq!(s.queued(), 0);
         assert_eq!(s.active(), 0);
+        assert_eq!(s.page_stats().pages_in_use, 0, "abort leaked pages");
+    }
+
+    // -- paged admission ---------------------------------------------------
+
+    /// Paged pool: prompt 4, page_len 8 → a request of budget b reserves
+    /// ceil((4 + b) / 8) pages.
+    fn paged_sched(max_lanes: usize, pages: usize) -> Scheduler {
+        Scheduler::paged(max_lanes, 4, 32, 8, pages)
+    }
+
+    #[test]
+    fn paged_admission_outnumbers_artifact_batch() {
+        // 6 short requests (1 page each) fit 6 logical lanes on the
+        // memory of 1.5 dense max_seq rows
+        let mut s = paged_sched(8, 6);
+        for i in 0..8 {
+            s.submit(req(i, 2)).unwrap();
+        }
+        let admitted = s.plan_admissions();
+        assert_eq!(admitted.len(), 6, "admission should be page-bound");
+        assert_eq!(s.page_stats().pages_in_use, 6);
+        assert_eq!(s.queued(), 2);
+    }
+
+    #[test]
+    fn paged_admission_refused_on_page_exhaustion_not_lanes() {
+        let mut s = paged_sched(4, 3);
+        // budget 12 → 16 rows → 2 pages each
+        s.submit(req(1, 12)).unwrap();
+        s.submit(req(2, 12)).unwrap();
+        let admitted = s.plan_admissions();
+        assert_eq!(admitted.len(), 1, "3 free lanes but only 1 free page");
+        assert_eq!(s.queued(), 1);
+        assert_eq!(s.page_stats().pages_in_use, 2);
+        // retiring the first frees its pages and unblocks the head
+        s.record_prefill(0, 7).unwrap();
+        while s.record_decode(0, 3).unwrap().is_none() {}
+        assert_eq!(s.active(), 0);
+        assert_eq!(s.plan_admissions().len(), 1);
+    }
+
+    #[test]
+    fn paged_validate_rejects_impossible_reservation() {
+        // 2 pages of 8 rows: a 3-page reservation could never admit and
+        // would head-of-line-block the queue forever — refuse at submit
+        let mut s = paged_sched(2, 2);
+        assert!(s.submit(req(1, 20)).is_err()); // 4 + 20 rows → 3 pages
+        assert!(s.submit(req(2, 12)).is_ok()); // 4 + 12 rows → 2 pages
+    }
+
+    #[test]
+    fn paged_head_of_line_blocks_fifo() {
+        let mut s = paged_sched(4, 3);
+        s.submit(req(1, 12)).unwrap(); // 2 pages
+        s.submit(req(2, 12)).unwrap(); // 2 pages — blocks (1 free)
+        s.submit(req(3, 2)).unwrap();  // 1 page — would fit, must NOT jump
+        let admitted = s.plan_admissions();
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(s.prompt_owner(0), 1);
+        assert_eq!(s.queued(), 2, "short request must not overtake the head");
+    }
+
+    /// Pages held by live lanes, counted INDEPENDENTLY of the
+    /// allocator's own bookkeeping (sums the page tables).
+    fn lane_held_pages(s: &Scheduler) -> usize {
+        (0..s.lanes()).map(|l| s.page_table(l).map(|p| p.len()).unwrap_or(0)).sum()
+    }
+
+    #[test]
+    fn paged_release_then_rebind_reclaims_pages() {
+        let mut s = paged_sched(2, 2);
+        for i in 0..5 {
+            s.submit(req(i, 2)).unwrap();
+        }
+        let mut served = 0;
+        while s.has_work() {
+            for lane in s.plan_admissions() {
+                s.record_prefill(lane, 1).unwrap();
+            }
+            let steps = s.decode_steps();
+            for st in steps {
+                if s.record_decode(st.lane, 3).unwrap().is_some() {
+                    served += 1;
+                }
+            }
+            // the allocator's in-use count must equal what the live
+            // lanes actually hold — a release path that leaked (or
+            // double-freed) would desync the two
+            assert_eq!(s.page_stats().pages_in_use, lane_held_pages(&s),
+                       "page accounting desynced from lane tables");
+        }
+        assert_eq!(served, 5);
+        assert_eq!(s.page_stats().pages_in_use, 0);
+        assert_eq!(lane_held_pages(&s), 0);
+    }
+
+    #[test]
+    fn paged_ragged_final_page_with_chunked_prefill() {
+        // prompt 4 + budget 3 = 7 rows on 8-row pages: 1 page, ragged
+        let mut s = paged_sched(2, 4);
+        s.submit(req(1, 3)).unwrap();
+        s.plan_admissions();
+        assert_eq!(s.page_table(0).unwrap().len(), 1);
+        // chunk the prompt in 3+1 while tracking the phase machine
+        assert!(s.record_chunk(0, 3, 0).unwrap().is_none());
+        assert_eq!(s.phase(0), Some(RequestPhase::Prefilling { next_chunk: 1 }));
+        assert!(s.record_chunk(0, 1, 9).unwrap().is_none());
+        assert_eq!(s.phase(0), Some(RequestPhase::Decoding));
+        let stats = s.page_stats();
+        assert_eq!(stats.rows_reserved, 8);
+        assert_eq!(stats.rows_used, 4);
+        assert!(stats.fragmentation() > 0.0);
+        s.record_decode(0, 1).unwrap();
+        let (_, done) = s.record_decode(0, 2).unwrap().unwrap();
+        assert_eq!(done.tokens.len(), 3);
+        assert_eq!(s.page_stats().pages_in_use, 0);
+    }
+
+    #[test]
+    fn paged_decode_steps_carry_page_tables() {
+        let mut s = paged_sched(2, 4);
+        s.submit(req(1, 12)).unwrap(); // 2 pages
+        s.plan_admissions();
+        s.record_prefill(0, 7).unwrap();
+        let steps = s.paged_decode_steps();
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0].pages.len(), 2);
+        assert_eq!(steps[0].pos, 4);
+        assert_eq!(steps[0].token, 7);
+    }
+
+    #[test]
+    fn dense_reserves_exactly_one_page_per_lane() {
+        // the PR 2 degenerate configuration: admission-by-pages must
+        // coincide with admission-by-free-lane
+        let mut s = sched();
+        assert!(!s.is_paged());
+        for i in 0..4 {
+            s.submit(req(i, 2)).unwrap();
+        }
+        assert_eq!(s.plan_admissions().len(), 2);
+        let stats = s.page_stats();
+        assert_eq!((stats.total_pages, stats.pages_in_use), (2, 2));
     }
 }

@@ -2,7 +2,7 @@
 //! held-out corpus and compute perplexity in Rust (cross-checked against
 //! the build-time Python numbers within 2%).
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 
 use crate::runtime::{lit_i32, nll_from_logits, to_f32, Runtime};
 

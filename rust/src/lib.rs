@@ -23,6 +23,18 @@
 //! * the **evaluation harness** ([`eval`]) regenerating every table and
 //!   figure of the paper.
 
+/// In-tree `anyhow` replacement (the offline build has no external
+/// dependencies — see `util::error`). The module keeps the `anyhow`
+/// name so call sites read identically to the real crate: in-crate
+/// code imports `use crate::anyhow::{anyhow, Result};`, external
+/// consumers (examples, tests) `use flexllm::anyhow::...`.
+pub mod anyhow {
+    pub use crate::util::error::{Context, Error, Result};
+    pub use crate::{__flexllm_anyhow as anyhow, __flexllm_bail as bail};
+}
+
+pub use crate::{__flexllm_anyhow as anyhow, __flexllm_bail as bail};
+
 pub mod arch;
 pub mod config;
 pub mod coordinator;

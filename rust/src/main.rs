@@ -5,7 +5,8 @@
 //! flexllm serve [--requests N] [--new-tokens N] [--spread K] [--arrival-rate R]
 //!               [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
 //!               [--prefill-policy blocking|chunked] [--prefill-chunk C]
-//!               [--prefill-greedy] [--artifacts DIR]
+//!               [--prefill-greedy] [--kv-pages P] [--page-len L]
+//!               [--artifacts DIR]
 //! flexllm ablate [--artifacts DIR]
 //! flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
 //! flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
@@ -13,12 +14,13 @@
 //!
 //! (CLI is hand-rolled: the offline vendored crate set has no clap.)
 
-use anyhow::{anyhow, bail, Result};
+use flexllm::anyhow::{anyhow, bail, Result};
 
 use flexllm::arch::{AcceleratorSystem, DecodeArch, PrefillArch};
 use flexllm::config::{DeviceConfig, ModelDims};
-use flexllm::coordinator::{Engine, ExecBackend, GenRequest, GenResult, MockBackend,
-                           ModeledBackend, PrefillPolicy, Router, ServeMetrics};
+use flexllm::coordinator::{Engine, ExecBackend, GenRequest, GenResult, KvLayout,
+                           MockBackend, ModeledBackend, PrefillPolicy, Router,
+                           ServeMetrics};
 use flexllm::eval;
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;
@@ -32,7 +34,8 @@ USAGE:
   flexllm serve [--requests N] [--new-tokens N] [--spread K] [--arrival-rate R]
                 [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
                 [--prefill-policy blocking|chunked] [--prefill-chunk C]
-                [--prefill-greedy] [--artifacts DIR]
+                [--prefill-greedy] [--kv-pages P] [--page-len L]
+                [--artifacts DIR]
       Serve generation requests through the iteration-level scheduler.
       --spread K        skew budgets: request i gets ~new-tokens·(i%K+1)/K
       --arrival-rate R  stagger submissions at R req/s (pjrt backend)
@@ -49,10 +52,23 @@ USAGE:
       --prefill-greedy  feed every prefilling lane a chunk per tick instead
                         of one per tick (drains admissions faster, decode
                         lanes pay)
+      --kv-pages P      serve over a PAGED KV pool of P shared pages instead
+                        of dense max_seq-per-lane rows: short requests free
+                        memory early and admission is bounded by free pages,
+                        not lanes. P=0 defaults to the dense pool's memory
+                        budget (pjrt: geometry comes from the artifact
+                        manifest; the flag selects the layout only)
+      --page-len L      cache rows per page for mock/modeled paged pools
+                        (default 64, must tile max_seq 320; pjrt uses the
+                        artifact page size)
       Examples:
         flexllm serve --backend modeled --requests 32 --spread 4 \
                       --prefill-policy chunked --prefill-chunk 32
         flexllm serve --backend pjrt --arrival-rate 8 --prefill-policy chunked
+        flexllm serve --backend modeled --requests 64 --spread 8 \
+                      --kv-pages 20 --page-len 64
+                      # paged pool: compare the "kv pages" line and peak
+                      # concurrency against the dense default
   flexllm ablate [--artifacts DIR]
       Run the Table V quantization ablation on the real artifacts.
   flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
@@ -257,29 +273,71 @@ fn describe_policy(p: PrefillPolicy) -> String {
     }
 }
 
+/// Paged-pool request from `--kv-pages` / `--page-len`: `Some((pages,
+/// page_len))` when the user asked for the paged layout. Geometry is
+/// validated against the SIM pool shape (4 lanes × max_seq 320) only by
+/// [`sim_paged_geometry`] — the pjrt backend takes its geometry from
+/// the artifact manifest and uses the flags purely as a layout switch.
+fn paged_request(a: &Args) -> Result<Option<(u64, u64)>> {
+    if !a.has("kv-pages") && !a.has("page-len") {
+        return Ok(None);
+    }
+    Ok(Some((a.get_u64("kv-pages", 0)?, a.get_u64("page-len", 64)?)))
+}
+
+/// Resolve the mock/modeled paged geometry (their pools are hardcoded
+/// at 4 lanes × max_seq 320): `--page-len` must tile max_seq, and
+/// `--kv-pages 0`/absent defaults to the dense pool's memory budget.
+fn sim_paged_geometry(pages: u64, page_len: u64) -> Result<(usize, usize)> {
+    const SIM_MAX_SEQ: u64 = 320;
+    const SIM_LANES: u64 = 4;
+    if page_len == 0 || SIM_MAX_SEQ % page_len != 0 {
+        bail!("--page-len must divide the sim pool's max_seq {SIM_MAX_SEQ}");
+    }
+    let pages = if pages == 0 { SIM_LANES * SIM_MAX_SEQ / page_len } else { pages };
+    Ok((pages as usize, page_len as usize))
+}
+
 fn serve(a: &Args) -> Result<()> {
     let n = a.get_u64("requests", 8)? as usize;
     let new_tokens = a.get_u64("new-tokens", 32)? as usize;
     let spread = a.get_u64("spread", 1)? as usize;
     let stream = a.has("stream");
     let policy = prefill_policy(a)?;
+    let paged = paged_request(a)?;
     let stop: Vec<i32> = match a.get("stop-token") {
         Some(v) => vec![v.parse().map_err(|_| anyhow!("--stop-token: bad token '{v}'"))?],
         None => Vec::new(),
     };
     match a.get_str("backend", "pjrt").as_str() {
-        "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop, policy),
+        "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop, policy,
+                             paged.is_some()),
         "mock" => {
-            let mut engine = Engine::with_policy(MockBackend::new(4, 128, 320, 512),
-                                                 policy);
+            let mut engine = match paged {
+                Some((pages, page_len)) => {
+                    let (pages, page_len) = sim_paged_geometry(pages, page_len)?;
+                    Engine::with_layout(
+                        MockBackend::paged(pages, 128, 320, 512, page_len, pages),
+                        policy, KvLayout::Paged)
+                }
+                None => Engine::with_policy(MockBackend::new(4, 128, 320, 512), policy),
+            };
             println!("prefill policy: {}", describe_policy(engine.policy()));
             let results = drive_sim(&mut engine, n, new_tokens, spread, stream, &stop)?;
             print_summary(&results, &engine.metrics, engine.lanes());
             Ok(())
         }
         "modeled" => {
-            let mut engine = Engine::with_policy(ModeledBackend::u280(4, 128, 320, 512),
-                                                 policy);
+            let mut engine = match paged {
+                Some((pages, page_len)) => {
+                    let (pages, page_len) = sim_paged_geometry(pages, page_len)?;
+                    Engine::with_layout(
+                        ModeledBackend::u280_paged(pages, 128, 320, 512, page_len, pages, 4),
+                        policy, KvLayout::Paged)
+                }
+                None => Engine::with_policy(ModeledBackend::u280(4, 128, 320, 512),
+                                            policy),
+            };
             println!("prefill policy: {}", describe_policy(engine.policy()));
             let results = drive_sim(&mut engine, n, new_tokens, spread, stream, &stop)?;
             print_summary(&results, &engine.metrics, engine.lanes());
@@ -325,10 +383,19 @@ fn drive_sim<B: ExecBackend>(engine: &mut Engine<B>, n: usize, new_tokens: usize
     Ok(done.into_iter().map(|(_, r)| r).collect())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool,
-              stop: Vec<i32>, policy: PrefillPolicy) -> Result<()> {
+              stop: Vec<i32>, policy: PrefillPolicy, paged: bool) -> Result<()> {
     let artifacts = a.get_str("artifacts", "artifacts");
     println!("prefill policy requested: {}", describe_policy(policy));
+    let layout = if paged {
+        // geometry is baked into the artifacts; the flags only pick the
+        // layout here
+        println!("kv layout requested: paged (geometry from the manifest)");
+        KvLayout::Paged
+    } else {
+        KvLayout::Dense
+    };
     let arrival_rate: Option<f64> = match a.get("arrival-rate") {
         Some(v) => Some(v.parse().map_err(|_| anyhow!("--arrival-rate: bad rate '{v}'"))?),
         None => None,
@@ -344,7 +411,7 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
     let base: Vec<Vec<i32>> = toks.chunks_exact(s).map(|c| c.to_vec()).collect();
     drop(rt);
 
-    let router = Router::spawn_with_policy(artifacts.to_string(), policy)?;
+    let router = Router::spawn_with_options(artifacts.to_string(), policy, layout)?;
     if stream {
         let events = router.subscribe()?;
         std::thread::spawn(move || {
@@ -407,6 +474,13 @@ fn print_summary(results: &[GenResult], m: &ServeMetrics, lanes: usize) {
              });
     println!("  lane utilization: {:.1}%  ({} lane-steps over {} iterations × {} lanes)",
              m.lane_utilization(lanes) * 100.0, m.lane_steps, m.iterations, lanes);
+    if m.kv_pages_total > 0 {
+        println!("  kv pages: {}/{} peak  occupancy p50/p95: {:.0}%/{:.0}%  \
+                  fragmentation p95: {:.0}%  peak concurrency: {}",
+                 m.kv_pages_peak, m.kv_pages_total,
+                 m.page_occupancy_p50() * 100.0, m.page_occupancy_p95() * 100.0,
+                 m.page_frag_p95() * 100.0, m.peak_active);
+    }
     let stopped = results.iter()
         .filter(|r| r.finish_reason == FinishReason::Stop)
         .count();

@@ -3,7 +3,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow::{anyhow, Context, Result};
 
 use crate::util::Json;
 
@@ -56,6 +56,14 @@ pub struct ServingInfo {
     /// artifact sets that predate chunked admission.
     pub prefill_chunk: Option<usize>,
     pub cache_shape: Vec<u64>,
+    /// Paged-pool geometry (`decode_paged_q3` + `prefill_chunk_paged_q3`
+    /// artifacts); all absent in pre-paging artifact sets. `kv_pages`
+    /// counts ALLOCATABLE pages — the physical pool holds one more
+    /// (page 0, the idle-lane scratch page).
+    pub page_len: Option<usize>,
+    pub kv_pages: Option<usize>,
+    pub pages_per_lane: Option<usize>,
+    pub page_cache_shape: Option<Vec<u64>>,
 }
 
 /// Held-out eval batch layout (`eval_tokens.bin`).
@@ -205,13 +213,22 @@ impl Manifest {
         }
 
         let sv = req(&j, "serving")?;
+        let opt_usize = |key: &str| {
+            sv.get(key).and_then(|v| v.as_u64()).map(|v| v as usize)
+        };
         let serving = ServingInfo {
             batch: usize_of(sv, "batch")?,
             prefill_len: usize_of(sv, "prefill_len")?,
-            prefill_chunk: sv.get("prefill_chunk")
-                .and_then(|v| v.as_u64())
-                .map(|v| v as usize),
+            prefill_chunk: opt_usize("prefill_chunk"),
             cache_shape: u64_vec(sv, "cache_shape")?,
+            page_len: opt_usize("page_len"),
+            kv_pages: opt_usize("kv_pages"),
+            pages_per_lane: opt_usize("pages_per_lane"),
+            page_cache_shape: if sv.get("page_cache_shape").is_some() {
+                Some(u64_vec(sv, "page_cache_shape")?)
+            } else {
+                None
+            },
         };
 
         let ev = req(&j, "eval")?;
@@ -297,6 +314,10 @@ mod tests {
         assert_eq!(m.serving.cache_shape.len(), 5);
         // pre-chunked-prefill artifact sets have no chunk width
         assert_eq!(m.serving.prefill_chunk, None);
+        // pre-paging artifact sets have no page geometry
+        assert_eq!(m.serving.page_len, None);
+        assert_eq!(m.serving.kv_pages, None);
+        assert_eq!(m.serving.page_cache_shape, None);
         assert_eq!(m.greedy_reference[1], vec![3, 4]);
     }
 
@@ -306,6 +327,19 @@ mod tests {
                                "\"prefill_len\": 16, \"prefill_chunk\": 4,");
         let m = Manifest::parse(&src).unwrap();
         assert_eq!(m.serving.prefill_chunk, Some(4));
+    }
+
+    #[test]
+    fn parses_paged_geometry_when_present() {
+        let src = MINI.replace(
+            "\"prefill_len\": 16,",
+            "\"prefill_len\": 16, \"page_len\": 6, \"kv_pages\": 9, \
+             \"pages_per_lane\": 4, \"page_cache_shape\": [2, 10, 1, 6, 4],");
+        let m = Manifest::parse(&src).unwrap();
+        assert_eq!(m.serving.page_len, Some(6));
+        assert_eq!(m.serving.kv_pages, Some(9));
+        assert_eq!(m.serving.pages_per_lane, Some(4));
+        assert_eq!(m.serving.page_cache_shape, Some(vec![2, 10, 1, 6, 4]));
     }
 
     #[test]

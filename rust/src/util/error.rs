@@ -1,0 +1,172 @@
+//! In-tree `anyhow` replacement (offline build: the vendored crate set
+//! has no external dependencies at all — see Cargo.toml).
+//!
+//! Provides the narrow slice of the `anyhow` API this crate uses:
+//! [`Error`] (a message plus a context chain), [`Result`], the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` macros. The
+//! crate root re-exports all of it under a module named `anyhow`, so
+//! call sites read identically to the real crate
+//! (`use crate::anyhow::{anyhow, Result};`).
+//!
+//! Semantics match what the call sites rely on: `Display` prints the
+//! outermost message, the alternate form (`{:#}`) prints the whole
+//! chain outermost-first joined by `": "`, and any `std::error::Error`
+//! converts via `?`.
+
+use std::fmt;
+
+/// Error value: innermost message plus contexts added around it.
+pub struct Error {
+    /// `chain[0]` is the innermost (original) message; later entries
+    /// are contexts wrapped around it, outermost last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a message (what the `anyhow!` macro calls).
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error { chain: vec![msg.into()] }
+    }
+
+    /// Wrap the error in an outer context message.
+    pub fn context(mut self, ctx: impl Into<String>) -> Self {
+        self.chain.push(ctx.into());
+        self
+    }
+
+    /// The outermost message (what `Display` prints).
+    pub fn outermost(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first
+            let mut first = true;
+            for msg in self.chain.iter().rev() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outermost())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outermost())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what keeps this blanket conversion coherent (mirroring the
+// real `anyhow`, which needs specialization for the same trick).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on `Result`.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f().to_string()))
+    }
+}
+
+/// `anyhow!`: build an [`Error`] from a format string (exported at the
+/// crate root; also importable as `anyhow::anyhow`).
+#[macro_export]
+macro_rules! __flexllm_anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg(format!("{}", $err))
+    };
+}
+
+/// `bail!`: early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! __flexllm_bail {
+    ($($t:tt)*) => {
+        return Err($crate::__flexllm_anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e = Error::msg("inner").context("middle").context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "missing file");
+    }
+
+    #[test]
+    fn context_trait_wraps_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading x: missing file");
+        let r: Result<()> = Err(Error::msg("boom"));
+        assert_eq!(r.context("ctx").unwrap_err().to_string(), "ctx");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        let lane = 3;
+        let e = crate::anyhow!("lane {lane} out of range");
+        assert_eq!(e.to_string(), "lane 3 out of range");
+        let e = crate::anyhow!("{} of {}", 1, 2);
+        assert_eq!(e.to_string(), "1 of 2");
+        fn f() -> Result<()> {
+            crate::bail!("nope {}", 7);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 7");
+    }
+}

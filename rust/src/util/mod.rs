@@ -1,8 +1,9 @@
-//! In-tree infrastructure for the offline build (the vendored crate set
-//! carries only `xla` + `anyhow`): JSON parsing, a bench harness, and
-//! property-testing helpers.
+//! In-tree infrastructure for the offline build (the core crate has NO
+//! external dependencies — see Cargo.toml): error handling, JSON
+//! parsing, a bench harness, and property-testing helpers.
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod prop;
 

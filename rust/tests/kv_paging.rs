@@ -1,0 +1,314 @@
+//! Paged KV pool — tier-1 suite (no artifacts).
+//!
+//! Three claims are gated here (ISSUE 3 acceptance):
+//!
+//! 1. **The paging win**: on a skewed-length open-loop workload over the
+//!    U280-modeled backend, a paged pool with the SAME memory budget as
+//!    the dense `max_seq`-per-lane pool sustains ≥1.5× more concurrently
+//!    admitted requests (short requests reserve only their own pages, so
+//!    logical lanes outnumber the artifact batch).
+//! 2. **Correctness**: paged admission is stream-identical to dense
+//!    admission for every request (the mock backend makes streams a pure
+//!    function of the prompt), across page sizes that divide the
+//!    reservation raggedly, chunk lengths that straddle page edges, and
+//!    page-exhaustion-induced queueing.
+//! 3. **Compatibility**: the dense layout under `Blocking` reproduces
+//!    the PR 2 engine bit-for-bit (same streams, same backend call
+//!    accounting), and `Paged` degrades to `Dense` on backends without
+//!    paging support.
+
+use flexllm::coordinator::{run_open_loop, ArrivalProcess, Engine, GenRequest, KvLayout,
+                           MockBackend, OpenLoopConfig, PagedPoolConfig, PrefillPolicy};
+use flexllm::util::prop::{forall, Rng};
+
+const VOCAB: usize = 512;
+
+fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    rng.tokens(len, VOCAB as i32)
+}
+
+fn paged_engine(max_lanes: usize, prefill: usize, max_seq: usize, page_len: usize,
+                pages: usize, chunk: usize) -> Engine<MockBackend> {
+    let engine = Engine::with_layout(
+        MockBackend::paged(max_lanes, prefill, max_seq, VOCAB, page_len, pages),
+        PrefillPolicy::chunked(chunk),
+        KvLayout::Paged,
+    );
+    assert_eq!(engine.layout(), KvLayout::Paged);
+    engine
+}
+
+// ---------------------------------------------------------------------------
+// THE acceptance experiment: ≥1.5× admitted concurrency at equal memory
+// ---------------------------------------------------------------------------
+
+/// Skewed-length open loop: short budgets against 320-row lanes, so the
+/// dense pool strands most of every lane's reservation.
+fn skewed_cfg() -> OpenLoopConfig {
+    OpenLoopConfig {
+        lanes: 4,
+        prefill_len: 64,
+        max_seq: 320,
+        vocab: VOCAB,
+        requests: 32,
+        arrival: ArrivalProcess::Burst,
+        bursts: 2,
+        burst_gap_s: 1.0,
+        burst_jitter_s: 0.05,
+        min_new_tokens: 16,
+        max_new_tokens: 48,
+        paged: None,
+        seed: 0x5EED,
+    }
+}
+
+#[test]
+fn paged_pool_admits_1_5x_more_at_equal_memory() {
+    let dense_cfg = skewed_cfg();
+    let mut paged_cfg = skewed_cfg();
+    // same memory budget: 4 lanes × 320 rows = 20 pages × 64 rows
+    paged_cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+        dense_cfg.lanes, dense_cfg.max_seq, 64, 20));
+
+    let policy = PrefillPolicy::chunked(32);
+    let dense = run_open_loop(policy, &dense_cfg).unwrap();
+    let paged = run_open_loop(policy, &paged_cfg).unwrap();
+
+    assert_eq!(dense.requests, 32);
+    assert_eq!(paged.requests, 32);
+    assert!(dense.peak_active <= dense_cfg.lanes,
+            "dense admission is lane-bound");
+
+    // THE acceptance claim: at equal memory AND equal physical decode
+    // width (same_memory_as_dense pins decode_width to the dense lane
+    // count), admission concurrency is no longer memory-bound
+    let gain = paged.peak_active as f64 / dense.peak_active as f64;
+    assert!(gain >= 1.5,
+            "paged pool must sustain ≥1.5× concurrent admissions at equal \
+             memory, got {gain:.2}× ({} vs {})",
+            paged.peak_active, dense.peak_active);
+
+    // The modeled decode engine is honest about the physical batch:
+    // logical lanes beyond the width time-multiplex (ceil(n/width)
+    // passes per tick) and gathers pay for ragged page tails, so paging
+    // buys MEMORY concurrency, not free decode throughput — turning the
+    // extra resident lanes into throughput is the multi-engine-sharding
+    // follow-up (ROADMAP). What paging must NOT do is blow up latency:
+    // the multiplexing + gather overhead stays bounded.
+    assert!(paged.makespan_s <= 1.5 * dense.makespan_s,
+            "paged makespan overhead unbounded: {:.3}s vs dense {:.3}s",
+            paged.makespan_s, dense.makespan_s);
+    assert!(paged.ttft_p95_s <= 1.5 * dense.ttft_p95_s,
+            "paged p95 TTFT overhead unbounded: {:.3}s vs dense {:.3}s",
+            paged.ttft_p95_s, dense.ttft_p95_s);
+
+    // the page accounting is live: pages peak within budget, skewed
+    // reservations leave measurable internal fragmentation
+    assert!(paged.kv_pages_peak > 0 && paged.kv_pages_peak <= 20);
+    assert!(paged.page_occupancy_p95 > 0.0 && paged.page_occupancy_p95 <= 1.0);
+    assert!(paged.page_frag_p95 > 0.0,
+            "ragged reservations must register as fragmentation");
+}
+
+#[test]
+fn paging_win_holds_across_seeds_and_arrivals() {
+    // the headline must not hinge on one lucky trace: weaker floor over
+    // seed and arrival-process variations
+    for (seed, arrival) in [
+        (1u64, ArrivalProcess::Burst),
+        (2, ArrivalProcess::Poisson { rate_rps: 16.0 }),
+        (3, ArrivalProcess::Poisson { rate_rps: 32.0 }),
+    ] {
+        let mut dense_cfg = skewed_cfg();
+        dense_cfg.seed = seed;
+        dense_cfg.arrival = arrival;
+        let mut paged_cfg = dense_cfg.clone();
+        paged_cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(4, 320, 64, 20));
+        let policy = PrefillPolicy::chunked(32);
+        let dense = run_open_loop(policy, &dense_cfg).unwrap();
+        let paged = run_open_loop(policy, &paged_cfg).unwrap();
+        let gain = paged.peak_active as f64 / dense.peak_active as f64;
+        assert!(gain >= 1.3,
+                "seed {seed} {arrival:?}: concurrency gain {gain:.2}× below floor");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paged admission is stream-identical to dense admission
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_paged_streams_match_dense_for_any_geometry() {
+    forall("paged == dense streams", 60, |rng| {
+        let prefill = rng.usize_in(4, 16);
+        let max_seq = prefill + rng.usize_in(8, 48);
+        let page_len = rng.usize_in(1, max_seq);
+        let max_budget = max_seq - prefill;
+        // enough pages for at least one request, scarce enough to queue
+        let per_req = (prefill + max_budget).div_ceil(page_len);
+        let pages = per_req + rng.usize_in(0, 3 * per_req);
+        let max_lanes = rng.usize_in(1, pages + 2);
+        let chunk = rng.usize_in(1, prefill + 4);
+        let n = rng.usize_in(1, 16);
+        let queue: Vec<GenRequest> = (0..n)
+            .map(|i| GenRequest::new(i as u64, prompt(rng, prefill),
+                                     rng.usize_in(1, max_budget)))
+            .collect();
+
+        let mut paged = paged_engine(max_lanes, prefill, max_seq, page_len, pages,
+                                     chunk);
+        let got = paged.serve(&queue).map_err(|e| e.to_string())?;
+        let mut dense = Engine::new(MockBackend::new(max_lanes.max(1), prefill,
+                                                     max_seq, VOCAB));
+        let want = dense.serve(&queue).map_err(|e| e.to_string())?;
+
+        if got.len() != want.len() {
+            return Err(format!("{} vs {} results", got.len(), want.len()));
+        }
+        for (g, w) in got.iter().zip(&want) {
+            if g.id != w.id || g.tokens != w.tokens || g.finish_reason != w.finish_reason {
+                return Err(format!(
+                    "request {}: paged {:?}/{:?} != dense {:?}/{:?} \
+                     (page_len {page_len}, pages {pages}, chunk {chunk})",
+                    g.id, g.tokens, g.finish_reason, w.tokens, w.finish_reason));
+            }
+        }
+        // the paged engine never used a dense op
+        if paged.backend.prefill_calls != 0 {
+            return Err("paged engine issued a dense whole-pool prefill".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn page_exhaustion_queues_then_reclaims() {
+    // 3 pages of 16 rows; every request reserves 2 pages (8 prompt + 20
+    // budget = 28 rows), so 4 free lanes never matter: admission is
+    // page-bound at 1 in flight
+    let mut engine = paged_engine(4, 8, 32, 16, 3, 8);
+    for i in 0..3 {
+        engine.submit(GenRequest::new(i, vec![i as i32 + 1; 8], 20)).unwrap();
+    }
+    let mut completed = Vec::new();
+    let mut max_active = 0;
+    while engine.has_work() {
+        let report = engine.step().unwrap();
+        max_active = max_active.max(engine.scheduler.active());
+        completed.extend(report.completed);
+    }
+    assert_eq!(max_active, 1, "admission should be page-bound, not lane-bound");
+    assert_eq!(completed.len(), 3, "release-then-rebind must reclaim pages");
+    for (_, res) in &completed {
+        let p = vec![res.id as i32 + 1; 8];
+        assert_eq!(res.tokens, MockBackend::expected_tokens(&p, 20, VOCAB),
+                   "request {} leaked a stream across page reuse", res.id);
+    }
+    assert_eq!(engine.metrics.peak_active, 1);
+    assert_eq!(engine.metrics.kv_pages_peak, 2);
+}
+
+#[test]
+fn ragged_chunks_straddle_page_boundaries() {
+    // prompt 10 in 4-token chunks (4+4+2) over 8-row pages: chunk 2
+    // straddles the page edge, the final page is ragged
+    let mut engine = paged_engine(2, 10, 40, 8, 6, 4);
+    let p: Vec<i32> = (0..10).collect();
+    let results = engine.serve(&[GenRequest::new(7, p.clone(), 6)]).unwrap();
+    assert_eq!(results[0].tokens, MockBackend::expected_tokens(&p, 6, VOCAB));
+    assert_eq!(engine.backend.prefill_chunk_calls, 3);
+    assert_eq!(engine.backend.prefill_chunk_tokens, 10);
+    // 10 + 6 = 16 rows → exactly 2 pages reserved and released
+    assert_eq!(engine.metrics.kv_pages_peak, 2);
+    assert_eq!(engine.scheduler.page_stats().pages_in_use, 0);
+}
+
+#[test]
+fn backfill_lands_beside_half_prefilled_lane_in_paged_pool() {
+    let prefill = 8;
+    // 8 pages: both initial requests' reservations fit side by side, so
+    // the freed lane really is backfilled while its neighbour is still
+    // mid-prompt (not serialized by page scarcity)
+    let mut engine = paged_engine(2, prefill, 64, 8, 8, 4);
+    engine.submit(GenRequest::new(0, vec![5; prefill], 1)).unwrap();
+    engine.submit(GenRequest::new(1, vec![6; prefill], 12)).unwrap();
+    engine.submit(GenRequest::new(2, vec![7; prefill], 3)).unwrap();
+    let mut completed = Vec::new();
+    while engine.has_work() {
+        completed.extend(engine.step().unwrap().completed);
+    }
+    assert_eq!(completed.len(), 3);
+    for (_, res) in &completed {
+        let p = match res.id { 0 => vec![5; prefill], 1 => vec![6; prefill],
+                               _ => vec![7; prefill] };
+        assert_eq!(res.tokens, MockBackend::expected_tokens(&p, res.tokens.len(), VOCAB),
+                   "request {} leaked another stream across the backfill", res.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compatibility: dense + Blocking is PR 2 bit-for-bit; graceful fallback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dense_blocking_reproduces_pr2_engine_bit_for_bit() {
+    // the exact late-arrival scenario of tests/scheduler.rs, driven
+    // through the default engine: same streams, same backend call
+    // accounting as PR 2 shipped
+    let mut engine = Engine::new(MockBackend::new(2, 4, 64, VOCAB));
+    assert_eq!(engine.policy(), PrefillPolicy::Blocking);
+    assert_eq!(engine.layout(), KvLayout::Dense);
+    engine.submit(GenRequest::new(0, vec![1; 4], 2)).unwrap();
+    engine.submit(GenRequest::new(1, vec![2; 4], 12)).unwrap();
+    let mut completed = Vec::new();
+    for _ in 0..4 {
+        completed.extend(engine.step().unwrap().completed);
+    }
+    assert_eq!(completed.len(), 1);
+    engine.submit(GenRequest::new(2, vec![3; 4], 3)).unwrap();
+    let report = engine.step().unwrap();
+    assert_eq!(report.admitted, 1);
+    assert_eq!(report.chunks, 0);
+    while engine.has_work() {
+        completed.extend(engine.step().unwrap().completed);
+    }
+    assert_eq!(completed.len(), 3);
+    // PR 2 accounting: two whole-pool prefill calls, zero chunk calls,
+    // zero paged calls
+    assert_eq!(engine.backend.prefill_calls, 2);
+    assert_eq!(engine.backend.prefill_slots, 3);
+    assert_eq!(engine.backend.prefill_chunk_calls, 0);
+    assert_eq!(engine.backend.paged_decode_calls, 0);
+    assert_eq!(engine.metrics.kv_pages_total, 0);
+    for (_, res) in &completed {
+        let p = vec![res.id as i32 + 1; 4];
+        assert_eq!(res.tokens, MockBackend::expected_tokens(&p, res.tokens.len(), VOCAB));
+    }
+}
+
+#[test]
+fn paged_layout_degrades_to_dense_without_backend_support() {
+    let engine = Engine::with_layout(MockBackend::new(2, 4, 32, VOCAB),
+                                     PrefillPolicy::chunked(2), KvLayout::Paged);
+    assert_eq!(engine.layout(), KvLayout::Dense);
+    // and the aligned mock (no chunk op) additionally degrades the policy
+    let engine = Engine::with_layout(MockBackend::aligned(2, 4, 32, VOCAB),
+                                     PrefillPolicy::chunked(2), KvLayout::Paged);
+    assert_eq!(engine.layout(), KvLayout::Dense);
+    assert_eq!(engine.policy(), PrefillPolicy::Blocking);
+}
+
+#[test]
+fn blocking_policy_on_paged_pool_streams_greedily() {
+    // a paged pool has no whole-pool prefill artifact: Blocking coerces
+    // to greedy chunked admission, still stream-identical
+    let mut engine = Engine::with_layout(
+        MockBackend::paged(2, 8, 64, VOCAB, 8, 8),
+        PrefillPolicy::Blocking, KvLayout::Paged);
+    assert!(matches!(engine.policy(),
+                     PrefillPolicy::Chunked { decode_priority: false, .. }));
+    let p: Vec<i32> = (1..9).collect();
+    let results = engine.serve(&[GenRequest::new(1, p.clone(), 4)]).unwrap();
+    assert_eq!(results[0].tokens, MockBackend::expected_tokens(&p, 4, VOCAB));
+    assert_eq!(engine.backend.prefill_calls, 0);
+}
