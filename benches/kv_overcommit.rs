@@ -1,0 +1,91 @@
+//! KV overcommit harness: up-front vs LAZY page reservation on the
+//! skewed-length open-loop workload, at equal memory and then on
+//! progressively SHRUNK pools (overcommit factors), on the U280-modeled
+//! backend.
+//!
+//! Each sweep point runs the identical arrival trace under both
+//! reservation policies and reports peak admitted concurrency, the
+//! fragmentation/occupancy percentiles, pages grown on demand and the
+//! preemption count — the thrash-vs-memory tradeoff the lazy policy
+//! buys into. The equal-memory point is the same comparison the tier-1
+//! acceptance test (`tests/kv_overcommit.rs`) gates (lazy admits ≥1.2×
+//! higher peak concurrency at lower p95 fragmentation); the `scheduler-sim`
+//! CI job uploads the JSON next to `kv_paging.json` and
+//! `arrival_rate.json` so the trajectory is tracked per PR.
+//!
+//! Output: `kv_overcommit.json` in the working directory (override with
+//! the `KV_OVERCOMMIT_OUT` environment variable), also echoed to stdout.
+
+use flexllm::coordinator::{run_open_loop, ArrivalProcess, OpenLoopConfig,
+                           PagedPoolConfig, PrefillPolicy, ReservationPolicy};
+
+/// 32-row pages under 64-token prompts: admission backs 3 pages lazily
+/// vs 3..8 up front across the budget skew, so the policies separate.
+const PAGE_LEN: usize = 32;
+/// Pool shrink factors vs the dense memory budget (1.0 = equal memory).
+const OVERCOMMIT: &[f64] = &[1.0, 1.5, 2.0];
+/// (min_new_tokens, max_new_tokens) budget skews against 320-row lanes.
+const SKEWS: &[(usize, usize)] = &[(16, 128), (64, 192)];
+
+fn cfg(min_new: usize, max_new: usize, factor: f64,
+       reserve: ReservationPolicy) -> OpenLoopConfig {
+    OpenLoopConfig {
+        lanes: 4,
+        prefill_len: 64,
+        max_seq: 320,
+        vocab: 512,
+        requests: 32,
+        arrival: ArrivalProcess::Burst,
+        bursts: 2,
+        burst_gap_s: 1.0,
+        burst_jitter_s: 0.05,
+        min_new_tokens: min_new,
+        max_new_tokens: max_new,
+        paged: Some(PagedPoolConfig::overcommit_of_dense(
+            4, 320, PAGE_LEN, 24, factor)),
+        reserve,
+        seed: 0x5EED,
+    }
+}
+
+fn main() {
+    let policy = PrefillPolicy::chunked(32);
+    let mut entries: Vec<String> = Vec::new();
+
+    for &(min_new, max_new) in SKEWS {
+        for &factor in OVERCOMMIT {
+            let up = run_open_loop(
+                policy, &cfg(min_new, max_new, factor, ReservationPolicy::Upfront))
+                .expect("upfront open loop");
+            let lazy = run_open_loop(
+                policy, &cfg(min_new, max_new, factor, ReservationPolicy::Lazy))
+                .expect("lazy open loop");
+            let gain = lazy.peak_active as f64 / up.peak_active.max(1) as f64;
+            for (name, stats) in [("upfront", &up), ("lazy", &lazy)] {
+                entries.push(format!(
+                    "{{\"budgets\": [{min_new}, {max_new}], \
+                     \"overcommit\": {factor:.2}, \"reserve\": \"{name}\", \
+                     \"stats\": {}}}",
+                    stats.to_json()));
+            }
+            println!(
+                "budgets {min_new:>3}-{max_new:<3} overcommit {factor:.1}x: \
+                 lazy peak {:>2} vs upfront {:>2} ({gain:.2}x) | \
+                 frag p95 {:.0}% vs {:.0}% | grown {} preempt {} | \
+                 makespan {:.3}s vs {:.3}s",
+                lazy.peak_active, up.peak_active,
+                lazy.page_frag_p95 * 100.0, up.page_frag_p95 * 100.0,
+                lazy.kv_pages_grown, lazy.preemptions,
+                lazy.makespan_s, up.makespan_s);
+        }
+    }
+
+    let doc = format!(
+        "{{\"bench\": \"kv_overcommit\", \"backend\": \"modeled-u280\", \
+         \"page_len\": {PAGE_LEN}, \"dense_rows\": {}, \"points\": [{}]}}\n",
+        4 * 320, entries.join(", "));
+    let out = std::env::var("KV_OVERCOMMIT_OUT")
+        .unwrap_or_else(|_| "kv_overcommit.json".to_string());
+    std::fs::write(&out, &doc).expect("write kv_overcommit.json");
+    println!("\nwrote {} sweep points to {out}", entries.len());
+}

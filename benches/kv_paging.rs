@@ -14,7 +14,7 @@
 //! `KV_PAGING_OUT` environment variable), also echoed to stdout.
 
 use flexllm::coordinator::{run_open_loop, ArrivalProcess, OpenLoopConfig,
-                           PagedPoolConfig, PrefillPolicy};
+                           PagedPoolConfig, PrefillPolicy, ReservationPolicy};
 
 /// (min_new_tokens, max_new_tokens) budget skews against 320-row lanes.
 const SKEWS: &[(usize, usize)] = &[(16, 48), (16, 128), (64, 192)];
@@ -34,6 +34,7 @@ fn cfg(min_new: usize, max_new: usize) -> OpenLoopConfig {
         min_new_tokens: min_new,
         max_new_tokens: max_new,
         paged: None,
+        reserve: ReservationPolicy::Upfront,
         seed: 0x5EED,
     }
 }

@@ -146,6 +146,14 @@ pub trait ExecBackend {
                            _start_pos: usize, _pages: &[u32]) -> Result<i32> {
         Err(anyhow!("backend has no paged prefill chunk"))
     }
+
+    /// The scheduler PREEMPTED the request on `lane`: its pages are back
+    /// in the free list and the lane will be rebound (possibly to the
+    /// same request, for recompute-from-scratch). Backends holding
+    /// per-lane state — partial prompts, bound page tables — must forget
+    /// it; stale cache rows are harmless (never attended before being
+    /// overwritten), so the default is a no-op.
+    fn release_lane(&mut self, _lane: usize) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -172,6 +180,11 @@ pub struct MockBackend {
     /// LaneKv fixes it at bind), and a fresh chunk 0 must not alias a
     /// lane that is provably still live (mid-prefill).
     lane_table: Vec<Vec<u32>>,
+    /// Accept append-only table growth at decode time (lazy reservation
+    /// appends pages on demand). OFF by default so that in an up-front
+    /// run — where a table can never legitimately change — ANY mutation
+    /// keeps tripping the exact-match desync check.
+    allow_table_growth: bool,
     pub prefill_calls: usize,
     pub prefill_slots: usize,
     pub prefill_chunk_calls: usize,
@@ -185,6 +198,8 @@ pub struct MockBackend {
     /// Whole pages streamed by paged decode gathers — the fragmentation
     /// denominator the modeled backend charges bandwidth for.
     pub pages_gathered: usize,
+    /// Preemption notifications received ([`ExecBackend::release_lane`]).
+    pub lanes_released: usize,
 }
 
 impl MockBackend {
@@ -204,6 +219,7 @@ impl MockBackend {
             lane_seed: vec![None; lanes],
             lane_partial: vec![Vec::new(); lanes],
             lane_table: vec![Vec::new(); lanes],
+            allow_table_growth: false,
             prefill_calls: 0,
             prefill_slots: 0,
             prefill_chunk_calls: 0,
@@ -212,6 +228,7 @@ impl MockBackend {
             decode_lane_steps: 0,
             paged_decode_calls: 0,
             pages_gathered: 0,
+            lanes_released: 0,
         }
     }
 
@@ -227,6 +244,15 @@ impl MockBackend {
         let mut m = Self::new(lanes, prefill_len, max_seq, vocab);
         m.spec.paged = Some(PagedCaps { page_len, pages, max_lanes: lanes });
         m
+    }
+
+    /// Accept append-only page-table growth (builder): required when
+    /// the engine runs [`ReservationPolicy`](super::kv::ReservationPolicy)
+    /// `::Lazy`, whose on-demand growth legitimately extends a lane's
+    /// table between decode invocations.
+    pub fn with_table_growth(mut self) -> Self {
+        self.allow_table_growth = true;
+        self
     }
 
     /// Aligned-only variant: like the scalar-position decode artifact, it
@@ -385,14 +411,31 @@ impl ExecBackend for MockBackend {
                         "page {p} aliased by two lanes in one iteration"));
                 }
             }
-            // a lane's table is fixed at bind: a decode presenting a
-            // different table than the lane prefilled with means the
-            // scheduler's occupancy desynced from its pages
+            // a lane's table is fixed at bind — a decode presenting a
+            // different table means the scheduler's occupancy desynced
+            // from its pages. The one legitimate change is lazy
+            // reservation appending pages, so a growth-enabled mock
+            // additionally accepts (and below adopts) an append-only
+            // EXTENSION of the bound table; swaps and drops never pass.
             if let Some(bound) = self.lane_table.get(st.lane) {
-                if !bound.is_empty() && bound != &st.pages {
+                let grown_ok = self.allow_table_growth
+                    && st.pages.len() > bound.len()
+                    && st.pages[..bound.len()] == bound[..];
+                if !bound.is_empty() && bound != &st.pages && !grown_ok {
                     return Err(anyhow!(
-                        "lane {}: decode table {:?} != prefilled table {bound:?}",
+                        "lane {}: decode table {:?} != bound table {bound:?} \
+                         (and is not an allowed append-only growth)",
                         st.lane, st.pages));
+                }
+            }
+        }
+        // the whole batch validated: adopt any grown tables
+        if self.allow_table_growth {
+            for st in steps {
+                if let Some(bound) = self.lane_table.get_mut(st.lane) {
+                    if !bound.is_empty() && st.pages.len() > bound.len() {
+                        *bound = st.pages.clone();
+                    }
                 }
             }
         }
@@ -443,11 +486,27 @@ impl ExecBackend for MockBackend {
             }
             self.lane_table[lane] = pages.to_vec();
         } else if self.lane_table[lane] != pages {
+            // strict even under lazy growth: admission backs the whole
+            // prompt, so a table that changes MID-PREFILL is always a
+            // scheduler desync
             return Err(anyhow!(
                 "lane {lane}: page table changed mid-prefill \
                  ({:?} then {pages:?})", self.lane_table[lane]));
         }
         self.prefill_chunk(lane, tokens, start_pos)
+    }
+
+    fn release_lane(&mut self, lane: usize) {
+        // preemption: the lane's request is gone — forget its stream
+        // seed, partial prompt and bound table so a rebind (even of the
+        // same pages, even mid-prefill) is indistinguishable from a
+        // fresh lane
+        if lane < self.spec.lanes {
+            self.lane_seed[lane] = None;
+            self.lane_partial[lane].clear();
+            self.lane_table[lane].clear();
+            self.lanes_released += 1;
+        }
     }
 }
 
@@ -539,6 +598,14 @@ impl ModeledBackend {
         m.inner.spec.paged = Some(PagedCaps { page_len, pages, max_lanes: lanes });
         m.decode_width = decode_width.max(1);
         m
+    }
+
+    /// Accept append-only page-table growth (builder; see
+    /// [`MockBackend::with_table_growth`]) — required for lazy
+    /// reservation runs.
+    pub fn with_table_growth(mut self) -> Self {
+        self.inner = self.inner.with_table_growth();
+        self
     }
 
     /// Seconds to stream `rows` reserved-but-useless cache rows (the
@@ -657,6 +724,13 @@ impl ExecBackend for ModeledBackend {
         // part of the graph, not an extra host phase
         self.charge_chunk(lane, tokens.len(), start_pos);
         Ok(token)
+    }
+
+    fn release_lane(&mut self, lane: usize) {
+        // the preempted request's recompute will re-charge the prefill
+        // clock chunk by chunk — that is exactly how preemption thrash
+        // costs modeled seconds
+        self.inner.release_lane(lane);
     }
 }
 
@@ -1297,6 +1371,56 @@ mod tests {
         m3.prefill_chunk_paged(0, &p[..2], 0, &[1]).unwrap();
         assert!(m3.prefill_chunk_paged(0, &p[2..], 2, &[2]).is_err(),
                 "mid-prefill table swap must be rejected");
+    }
+
+    #[test]
+    fn mock_paged_table_may_grow_but_never_swap() {
+        // a STRICT mock (the default, matching up-front reservation)
+        // rejects even an append-only extension…
+        let mut strict = MockBackend::paged(1, 4, 32, 64, 4, 6);
+        let p: Vec<i32> = (0..4).collect();
+        let t0 = strict.prefill_chunk_paged(0, &p, 0, &[0, 1]).unwrap();
+        assert!(strict
+            .decode_paged(&[PagedStep { lane: 0, token: t0, pos: 4,
+                                        pages: vec![0, 1, 2] }])
+            .is_err(), "strict mock must treat any table change as a desync");
+
+        // …while a growth-enabled mock (lazy reservation) accepts it
+        let mut m = MockBackend::paged(1, 4, 32, 64, 4, 6).with_table_growth();
+        let t = m.prefill_chunk_paged(0, &p, 0, &[0, 1]).unwrap();
+        // growing the table (lazy reservation appended page 2) is fine
+        let d = m
+            .decode_paged(&[PagedStep { lane: 0, token: t, pos: 4,
+                                        pages: vec![0, 1, 2] }])
+            .unwrap();
+        assert_eq!(d.len(), 1);
+        // ...and the grown table is adopted: presenting the SHORTER
+        // original again is now a swap/drop, rejected
+        assert!(m
+            .decode_paged(&[PagedStep { lane: 0, token: t, pos: 5,
+                                        pages: vec![0, 1] }])
+            .is_err());
+        // swapping an existing page is rejected outright
+        assert!(m
+            .decode_paged(&[PagedStep { lane: 0, token: t, pos: 5,
+                                        pages: vec![0, 3, 2] }])
+            .is_err());
+    }
+
+    #[test]
+    fn mock_release_lane_forgets_everything() {
+        let mut m = MockBackend::paged(2, 4, 32, 64, 4, 6);
+        let p: Vec<i32> = (0..4).collect();
+        // lane 0 is preempted MID-PREFILL; its pages must be cleanly
+        // rebindable by another lane without tripping the alias check
+        m.prefill_chunk_paged(0, &p[..2], 0, &[0, 1]).unwrap();
+        m.release_lane(0);
+        assert_eq!(m.lanes_released, 1);
+        m.prefill_chunk_paged(1, &p[..2], 0, &[0, 1]).unwrap();
+        // and the released lane itself restarts from chunk 0 (recompute)
+        let t = m.prefill_chunk_paged(0, &p, 0, &[2, 3]).unwrap();
+        assert_eq!(t, MockBackend::expected_tokens(&p, 1, 64)[0],
+                   "recompute must reproduce the original stream");
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::time::Instant;
 use crate::anyhow::{anyhow, Result};
 
 use super::backend::{ExecBackend, PjrtBackend, PrefillSlot};
+use super::kv::ReservationPolicy;
 use super::request::{GenRequest, GenResult, ServeMetrics};
 use super::scheduler::{Completion, PrefillPolicy, Scheduler};
 
@@ -58,9 +59,17 @@ pub struct StepReport {
     pub chunks: usize,
     /// Lanes stepped in the decode phase.
     pub stepped: usize,
+    /// KV pages appended to warm lanes this tick (lazy reservation).
+    pub pages_grown: usize,
+    /// Request ids preempted this tick (pages released, requeued for
+    /// recompute — lazy reservation under pool pressure).
+    pub preempted: Vec<u64>,
     /// Requests retired this iteration, in admission order.
     pub completed: Vec<Completion>,
-    /// Every token produced this iteration, in lane order.
+    /// Every token produced this iteration, in lane order. Recompute
+    /// replays of a preempted request's already-streamed tokens are NOT
+    /// re-emitted here, so subscriber streams stay byte-identical to a
+    /// run without preemption.
     pub events: Vec<TokenEvent>,
 }
 
@@ -70,6 +79,7 @@ pub struct Engine<B: ExecBackend> {
     pub metrics: ServeMetrics,
     policy: PrefillPolicy,
     layout: KvLayout,
+    reserve: ReservationPolicy,
 }
 
 impl Engine<PjrtBackend> {
@@ -105,6 +115,15 @@ impl<B: ExecBackend> Engine<B> {
     ///   to greedy `Chunked` — every admission streams its prompt via
     ///   the paged chunk op as fast as the prefill engine allows.
     pub fn with_layout(backend: B, policy: PrefillPolicy, layout: KvLayout) -> Self {
+        Self::with_reservation(backend, policy, layout, ReservationPolicy::Upfront)
+    }
+
+    /// Engine with an explicit policy, cache layout AND page-reservation
+    /// policy. [`ReservationPolicy::Lazy`] only applies to a paged pool
+    /// (a dense "page" backs the whole row budget, so there is nothing
+    /// to grow) — [`Engine::reserve`] reports what actually runs.
+    pub fn with_reservation(backend: B, policy: PrefillPolicy, layout: KvLayout,
+                            reserve: ReservationPolicy) -> Self {
         let spec = backend.spec();
         let paged_caps = match layout {
             KvLayout::Paged => spec.paged.clone().filter(|_| {
@@ -142,7 +161,8 @@ impl<B: ExecBackend> Engine<B> {
                 KvLayout::Paged,
                 // Scheduler::paged clamps max_lanes to the page budget
                 Scheduler::paged(caps.max_lanes, spec.prefill_len, spec.max_seq,
-                                 caps.page_len, caps.pages),
+                                 caps.page_len, caps.pages)
+                    .with_reserve(reserve),
                 caps.pages,
             ),
             None => (KvLayout::Dense,
@@ -151,7 +171,14 @@ impl<B: ExecBackend> Engine<B> {
                      0),
         };
         let metrics = ServeMetrics::with_pages_total(pages_total);
-        Engine { backend, scheduler, metrics, policy, layout }
+        let reserve = scheduler.reserve();
+        Engine { backend, scheduler, metrics, policy, layout, reserve }
+    }
+
+    /// The page-reservation policy actually in effect (after layout
+    /// coercion: always `Upfront` on a dense pool).
+    pub fn reserve(&self) -> ReservationPolicy {
+        self.reserve
     }
 
     /// The admission policy actually in effect (after capability
@@ -214,9 +241,12 @@ impl<B: ExecBackend> Engine<B> {
             }
             PrefillPolicy::Chunked { chunk_len, decode_priority } => {
                 let mut lanes = self.scheduler.prefilling_lanes();
-                if decode_priority {
+                if decode_priority && self.scheduler.has_warm_lane() {
                     // one chunk per tick: resident lanes keep their
-                    // decode cadence while the prompt streams in
+                    // decode cadence while the prompt streams in. With
+                    // NO warm lane the decode phase would idle, so the
+                    // throttle only wastes the tick — chunk greedily
+                    // until the first lane warms (cold-start TTFT).
                     lanes.truncate(1);
                 }
                 for lane in lanes {
@@ -238,27 +268,60 @@ impl<B: ExecBackend> Engine<B> {
                     self.metrics.prefill_chunks += 1;
                     self.metrics.prefill_tokens += len;
                     report.chunks += 1;
-                    let id = self.scheduler.prompt_owner(lane);
+                    let id = self.scheduler.prompt_owner(lane).ok_or_else(|| {
+                        anyhow!("prefill chunk fed to unbound lane {lane}")
+                    })?;
+                    let replay = self.scheduler.replay_watermark(lane) > 0;
                     let done = self.scheduler.record_chunk(lane, len, token)?;
                     if last {
                         // the prompt-completing chunk delivers the first
                         // generated token, exactly like a blocking prefill
-                        self.emit(&mut report, id, token, 0, done);
+                        self.emit(&mut report, id, token, 0, done, replay);
                     }
                 }
             }
         }
 
+        // ---- lazy page growth + preemption -------------------------------
+        // back every warm lane's next write BEFORE planning the decode
+        // iteration; a dry pool evicts the youngest request (pages
+        // released, requeued at the queue head for recompute)
+        if self.reserve == ReservationPolicy::Lazy {
+            let growth = self.scheduler.ensure_decode_backing()?;
+            self.metrics.kv_pages_grown += growth.pages_grown;
+            self.metrics.grow_failures += growth.grow_failures;
+            self.metrics.preemptions += growth.preempted.len();
+            report.pages_grown = growth.pages_grown;
+            for victim in &growth.preempted {
+                // the backend forgets the evicted lane (the mock clears
+                // its per-lane stream/table state so the pages and the
+                // lane are cleanly rebindable)
+                self.backend.release_lane(victim.lane);
+                report.preempted.push(victim.id);
+            }
+        }
+
         // peak concurrency + page accounting are sampled at the tick's
-        // high-water mark: after admission, before retirements
+        // high-water mark: after admission AND after growth/preemption,
+        // before retirements — a request admitted and evicted within
+        // one tick never did work, so it must not count toward the
+        // peak-concurrency comparison the lazy acceptance test gates
         self.metrics.peak_active = self.metrics.peak_active.max(self.scheduler.active());
         if self.layout == KvLayout::Paged {
             let stats = self.scheduler.page_stats();
             self.metrics.kv_pages_peak = self.metrics.kv_pages_peak.max(stats.pages_in_use);
+            self.metrics.kv_rows_reserved_peak =
+                self.metrics.kv_rows_reserved_peak.max(stats.rows_reserved);
+            self.metrics.kv_rows_written_peak =
+                self.metrics.kv_rows_written_peak.max(stats.rows_used);
             self.metrics.record_page_sample(stats.occupancy(), stats.fragmentation());
         }
 
         // ---- one decode iteration ----------------------------------------
+        // `iterations` counts scheduler TICKS that ran a decode phase;
+        // `decode_invocations` counts artifact calls (a paged tick over
+        // more warm lanes than the invocation batch splits into several)
+        // — keeping them separate keeps dense and paged runs comparable.
         match self.layout {
             KvLayout::Dense => {
                 let steps = self.scheduler.decode_steps();
@@ -267,6 +330,7 @@ impl<B: ExecBackend> Engine<B> {
                     let next = self.backend.decode(&steps)?;
                     self.metrics.total_decode += t0.elapsed();
                     self.metrics.iterations += 1;
+                    self.metrics.decode_invocations += 1;
                     self.metrics.lane_steps += steps.len();
                     report.stepped = steps.len();
                     for (st, &token) in steps.iter().zip(&next) {
@@ -279,12 +343,15 @@ impl<B: ExecBackend> Engine<B> {
                 // scheduler tick maps onto ceil(warm / batch) paged
                 // invocations, each step carrying its page table
                 let steps = self.scheduler.paged_decode_steps();
+                if !steps.is_empty() {
+                    self.metrics.iterations += 1;
+                }
                 let width = self.backend.spec().lanes.max(1);
                 for group in steps.chunks(width) {
                     let t0 = Instant::now();
                     let next = self.backend.decode_paged(group)?;
                     self.metrics.total_decode += t0.elapsed();
-                    self.metrics.iterations += 1;
+                    self.metrics.decode_invocations += 1;
                     self.metrics.lane_steps += group.len();
                     report.stepped += group.len();
                     for (st, &token) in group.iter().zip(&next) {
@@ -301,26 +368,37 @@ impl<B: ExecBackend> Engine<B> {
     fn push_token(&mut self, report: &mut StepReport, lane: usize, token: i32)
         -> Result<()>
     {
-        let id = self.scheduler.prompt_owner(lane);
+        let id = self
+            .scheduler
+            .prompt_owner(lane)
+            .ok_or_else(|| anyhow!("prefill result for unbound lane {lane}"))?;
         let done = self.scheduler.record_prefill(lane, token)?;
-        self.emit(report, id, token, 0, done);
+        self.emit(report, id, token, 0, done, false);
         Ok(())
     }
 
     fn push_decoded(&mut self, report: &mut StepReport, lane: usize, token: i32)
         -> Result<()>
     {
-        let id = self.scheduler.prompt_owner(lane);
+        let id = self
+            .scheduler
+            .prompt_owner(lane)
+            .ok_or_else(|| anyhow!("decode result for unbound lane {lane}"))?;
         let index = self.scheduler.generated(lane);
+        // tokens below the replay watermark were already streamed before
+        // a preemption: re-emitting them would duplicate the stream
+        let replay = index < self.scheduler.replay_watermark(lane);
         let done = self.scheduler.record_decode(lane, token)?;
-        self.emit(report, id, token, index, done);
+        self.emit(report, id, token, index, done, replay);
         Ok(())
     }
 
     fn emit(&mut self, report: &mut StepReport, id: u64, token: i32, index: usize,
-            done: Option<Completion>)
+            done: Option<Completion>, replay: bool)
     {
-        report.events.push(TokenEvent { id, token, index, done: done.is_some() });
+        if !replay {
+            report.events.push(TokenEvent { id, token, index, done: done.is_some() });
+        }
         if let Some(completion) = done {
             self.metrics.record(&completion.1);
             report.completed.push(completion);

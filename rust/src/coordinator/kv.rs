@@ -34,6 +34,29 @@
 
 use crate::anyhow::{anyhow, Result};
 
+/// How a request's page reservation is sized (PR 4).
+///
+/// * [`ReservationPolicy::Upfront`] — the PR 3 behavior, bit-for-bit: a
+///   request reserves `ceil((prompt + budget) / page_len)` pages at
+///   admission, so mid-flight page exhaustion is impossible but an
+///   early-stopping request strands its whole unspent budget.
+/// * [`ReservationPolicy::Lazy`] — vLLM-style on-demand growth: admission
+///   allocates only the pages covering the prompt plus one decode slot;
+///   the scheduler `alloc(1)`s a fresh page whenever a lane's write
+///   position crosses into an unbacked page. When the pool runs dry
+///   mid-flight the scheduler preempts the youngest in-flight request
+///   (releases its pages, requeues it at the queue head for recompute),
+///   so the reservation a live lane holds tracks what it has actually
+///   written instead of its worst case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReservationPolicy {
+    /// Whole-budget reservation at admission (never preempts).
+    #[default]
+    Upfront,
+    /// On-demand page growth with preempt-and-recompute under pressure.
+    Lazy,
+}
+
 /// Geometry + free-list allocator over the shared KV page pool.
 #[derive(Debug, Clone)]
 pub struct KvPool {
@@ -130,6 +153,11 @@ pub struct LaneKv {
     /// Rows this lane may write (`min(pages·page_len, max_seq)`).
     reserved_rows: usize,
     page_len: usize,
+    /// Hard cap on the reservation (lazy growth must stop here).
+    max_seq: usize,
+    /// Pages appended after bind ([`LaneKv::grow`]); the lazy-growth
+    /// counter surfaced by the metrics.
+    grown: usize,
 }
 
 impl LaneKv {
@@ -147,7 +175,35 @@ impl LaneKv {
                  ({} pages × {page_len} rows, max_seq {max_seq})",
                 pages.len()));
         }
-        Ok(LaneKv { prompt_len, pos: 0, pages, reserved_rows, page_len })
+        Ok(LaneKv { prompt_len, pos: 0, pages, reserved_rows, page_len, max_seq,
+                    grown: 0 })
+    }
+
+    /// Whether the NEXT cache write (`pos`) lands in an unbacked page —
+    /// the lazy-growth trigger checked before a lane joins a decode
+    /// iteration (each tick writes exactly one row per warm lane).
+    pub fn needs_growth(&self) -> bool {
+        self.pos >= self.reserved_rows
+    }
+
+    /// Append one freshly allocated page to the lane's table (lazy
+    /// growth). Errors when the lane is already backed to `max_seq` —
+    /// the caller would be leaking a page the lane can never write.
+    pub fn grow(&mut self, page: u32) -> Result<()> {
+        if self.reserved_rows >= self.max_seq {
+            return Err(anyhow!(
+                "lane already backed to max_seq {} ({} pages)", self.max_seq,
+                self.pages.len()));
+        }
+        self.pages.push(page);
+        self.reserved_rows = (self.pages.len() * self.page_len).min(self.max_seq);
+        self.grown += 1;
+        Ok(())
+    }
+
+    /// Pages appended after bind by lazy growth.
+    pub fn pages_grown(&self) -> usize {
+        self.grown
     }
 
     /// Record `tokens` prompt tokens landing in the cache (one prefill
@@ -317,6 +373,36 @@ mod tests {
         let kv = LaneKv::new(4, vec![0, 1], 8, 12).unwrap();
         assert_eq!(kv.reserved_rows(), 12);
         assert_eq!(kv.remaining(), 8);
+    }
+
+    #[test]
+    fn lane_grows_on_demand_up_to_max_seq() {
+        // 6-token prompt on one 8-row page: decode runs to row 7, then
+        // the next write needs growth
+        let mut kv = LaneKv::new(6, vec![2], 8, 20).unwrap();
+        kv.fill(6).unwrap();
+        assert!(!kv.needs_growth());
+        kv.advance().unwrap();
+        kv.advance().unwrap(); // pos 8 == reserved: next write unbacked
+        assert!(kv.needs_growth());
+        assert!(kv.advance().is_err(), "advance into an unbacked page");
+        kv.grow(5).unwrap();
+        assert!(!kv.needs_growth());
+        assert_eq!(kv.pages, vec![2, 5]);
+        assert_eq!(kv.reserved_rows(), 16);
+        assert_eq!(kv.pages_grown(), 1);
+        kv.advance().unwrap();
+        // a third page would exceed max_seq 20 only partially: allowed
+        while !kv.needs_growth() {
+            kv.advance().unwrap();
+        }
+        kv.grow(7).unwrap();
+        assert_eq!(kv.reserved_rows(), 20, "growth caps at max_seq");
+        while kv.pos < 20 {
+            kv.advance().unwrap();
+        }
+        // fully backed to max_seq: growing again would leak a page
+        assert!(kv.grow(9).is_err());
     }
 
     #[test]

@@ -22,14 +22,14 @@ pub use backend::{BackendSpec, ExecBackend, LaneStep, MockBackend, ModeledBacken
                   PagedCaps, PagedStep, PjrtBackend, PrefillSlot};
 pub use engine::{Engine, KvLayout, StepReport, TokenEvent};
 pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
-pub use kv::{KvPool, LaneKv};
+pub use kv::{KvPool, LaneKv, ReservationPolicy};
 pub use openloop::{run_open_loop, ArrivalProcess, OpenLoopConfig, OpenLoopStats,
                    PagedPoolConfig};
 pub use request::{FinishReason, GenRequest, GenResult, ServeMetrics};
-pub use scheduler::{ChunkPlan, Completion, PageStats, PrefillPolicy, RequestPhase,
-                    Scheduler};
+pub use scheduler::{ChunkPlan, Completion, GrowthReport, PageStats, Preempted,
+                    PrefillPolicy, RequestPhase, Scheduler};
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Weak};
 use std::thread::JoinHandle;
 
 use crate::anyhow::{anyhow, Error, Result};
@@ -46,8 +46,35 @@ enum Cmd {
     /// window is void (no partial results — resubmit).
     Drain(mpsc::Sender<Result<Vec<GenResult>>>),
     Metrics(mpsc::Sender<ServeMetrics>),
-    Subscribe(mpsc::Sender<TokenEvent>),
+    Subscribe(Subscriber),
     Shutdown,
+}
+
+/// The engine thread's handle on one token-stream subscriber: the event
+/// channel plus a liveness probe. `live` upgrades for as long as the
+/// caller's [`TokenSubscription`] exists, so a hung-up subscriber is
+/// detectable — and prunable — even on ticks that produce no events
+/// (std's `Sender` can only discover a dropped receiver by sending).
+struct Subscriber {
+    tx: mpsc::Sender<TokenEvent>,
+    live: Weak<()>,
+}
+
+/// A token-event subscription handed out by [`Router::subscribe`].
+/// Derefs to the underlying receiver (`recv`/`try_iter`/…); dropping it
+/// unsubscribes — the engine thread prunes the dead entry on its next
+/// tick, events or not.
+pub struct TokenSubscription {
+    rx: mpsc::Receiver<TokenEvent>,
+    _live: Arc<()>,
+}
+
+impl std::ops::Deref for TokenSubscription {
+    type Target = mpsc::Receiver<TokenEvent>;
+
+    fn deref(&self) -> &Self::Target {
+        &self.rx
+    }
 }
 
 /// Thread-backed request router: spawn once, submit from anywhere.
@@ -66,14 +93,17 @@ impl Router {
     /// Spawn the engine thread with an explicit admission policy over
     /// the dense cache layout.
     pub fn spawn_with_policy(artifact_dir: String, policy: PrefillPolicy) -> Result<Self> {
-        Self::spawn_with_options(artifact_dir, policy, KvLayout::Dense)
+        Self::spawn_with_options(artifact_dir, policy, KvLayout::Dense,
+                                 ReservationPolicy::Upfront)
     }
 
-    /// Spawn the engine thread with an explicit admission policy and
-    /// cache layout (both coerced to the artifact set's capabilities —
-    /// see [`Engine::with_layout`]).
+    /// Spawn the engine thread with an explicit admission policy, cache
+    /// layout and page-reservation policy (all coerced to the artifact
+    /// set's capabilities — see [`Engine::with_layout`]).
     pub fn spawn_with_options(artifact_dir: String, policy: PrefillPolicy,
-                              layout: KvLayout) -> Result<Self> {
+                              layout: KvLayout, reserve: ReservationPolicy)
+        -> Result<Self>
+    {
         let (tx, rx) = mpsc::channel::<Cmd>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
@@ -82,7 +112,8 @@ impl Router {
                 let engine = match crate::runtime::Runtime::open(&artifact_dir) {
                     Ok(rt) => {
                         let _ = ready_tx.send(Ok(()));
-                        Engine::with_layout(PjrtBackend::new(rt), policy, layout)
+                        Engine::with_reservation(PjrtBackend::new(rt), policy, layout,
+                                                 reserve)
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -128,13 +159,16 @@ impl Router {
         reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))?
     }
 
-    /// Receive every token the engine produces from now on.
-    pub fn subscribe(&self) -> Result<mpsc::Receiver<TokenEvent>> {
+    /// Receive every token the engine produces from now on. Dropping
+    /// the subscription unsubscribes.
+    pub fn subscribe(&self) -> Result<TokenSubscription> {
         let (event_tx, event_rx) = mpsc::channel();
+        let live = Arc::new(());
         self.tx
-            .send(Cmd::Subscribe(event_tx))
+            .send(Cmd::Subscribe(Subscriber { tx: event_tx,
+                                              live: Arc::downgrade(&live) }))
             .map_err(|_| anyhow!("engine thread gone"))?;
-        Ok(event_rx)
+        Ok(TokenSubscription { rx: event_rx, _live: live })
     }
 
     /// Snapshot aggregate serving metrics.
@@ -161,7 +195,7 @@ impl Drop for Router {
 // ---------------------------------------------------------------------------
 
 fn engine_loop<B: ExecBackend>(mut engine: Engine<B>, rx: mpsc::Receiver<Cmd>) {
-    let mut subscribers: Vec<mpsc::Sender<TokenEvent>> = Vec::new();
+    let mut subscribers: Vec<Subscriber> = Vec::new();
     // completions buffered for the next Drain, and the first error hit
     // while stepping submit-mode work
     let mut completed: Vec<Completion> = Vec::new();
@@ -236,7 +270,7 @@ fn engine_loop<B: ExecBackend>(mut engine: Engine<B>, rx: mpsc::Receiver<Cmd>) {
 fn handle_cmd<B: ExecBackend>(
     cmd: Cmd,
     engine: &mut Engine<B>,
-    subscribers: &mut Vec<mpsc::Sender<TokenEvent>>,
+    subscribers: &mut Vec<Subscriber>,
     drain_waiters: &mut Vec<mpsc::Sender<Result<Vec<GenResult>>>>,
     completed: &mut Vec<Completion>,
     pending_err: &mut Option<Error>,
@@ -262,7 +296,7 @@ fn handle_cmd<B: ExecBackend>(
         Cmd::Metrics(reply) => {
             let _ = reply.send(engine.metrics.clone());
         }
-        Cmd::Subscribe(tx) => subscribers.push(tx),
+        Cmd::Subscribe(sub) => subscribers.push(sub),
         Cmd::Shutdown => return true,
     }
     false
@@ -271,7 +305,7 @@ fn handle_cmd<B: ExecBackend>(
 fn run_generate<B: ExecBackend>(
     engine: &mut Engine<B>,
     queue: Vec<GenRequest>,
-    subscribers: &mut Vec<mpsc::Sender<TokenEvent>>,
+    subscribers: &mut Vec<Subscriber>,
     completed: &mut Vec<Completion>,
     pending_err: &mut Option<Error>,
 ) -> Result<Vec<GenResult>> {
@@ -307,6 +341,50 @@ fn run_generate<B: ExecBackend>(
     Ok(done)
 }
 
-fn broadcast(subscribers: &mut Vec<mpsc::Sender<TokenEvent>>, report: &StepReport) {
-    subscribers.retain(|tx| report.events.iter().all(|&ev| tx.send(ev).is_ok()));
+/// Fan one tick's events out to every live subscriber, pruning dead
+/// ones UNCONDITIONALLY. The previous `all(.. send ..)` predicate was
+/// vacuously true on event-less ticks, so a long-lived Router whose
+/// clients came and went accumulated hung-up senders forever; the
+/// liveness probe catches a dropped [`TokenSubscription`] whether or
+/// not this tick produced anything to send.
+fn broadcast(subscribers: &mut Vec<Subscriber>, report: &StepReport) {
+    subscribers.retain(|s| {
+        s.live.strong_count() > 0
+            && report.events.iter().all(|&ev| s.tx.send(ev).is_ok())
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn subscriber_pair() -> (TokenSubscription, Subscriber) {
+        let (tx, rx) = mpsc::channel();
+        let live = Arc::new(());
+        let sub = Subscriber { tx, live: Arc::downgrade(&live) };
+        (TokenSubscription { rx, _live: live }, sub)
+    }
+
+    #[test]
+    fn broadcast_prunes_dead_subscribers_without_events() {
+        // regression: a dropped subscriber must be pruned even when the
+        // tick produced no events (the old retain was vacuously true)
+        let (alive_rx, alive) = subscriber_pair();
+        let (dead_rx, dead) = subscriber_pair();
+        let mut subs = vec![alive, dead];
+        drop(dead_rx);
+        let empty = StepReport::default();
+        broadcast(&mut subs, &empty);
+        assert_eq!(subs.len(), 1, "event-less tick must still prune the dead");
+        // the survivor still receives events and stays subscribed
+        let mut report = StepReport::default();
+        report.events.push(TokenEvent { id: 7, token: 3, index: 0, done: false });
+        broadcast(&mut subs, &report);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(alive_rx.try_iter().count(), 1);
+        // ...until it hangs up too
+        drop(alive_rx);
+        broadcast(&mut subs, &StepReport::default());
+        assert!(subs.is_empty());
+    }
 }

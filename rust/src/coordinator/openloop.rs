@@ -30,6 +30,7 @@ use crate::anyhow::{anyhow, Result};
 
 use super::backend::ModeledBackend;
 use super::engine::{Engine, KvLayout};
+use super::kv::ReservationPolicy;
 use super::request::{percentile, GenRequest};
 use super::scheduler::PrefillPolicy;
 use crate::util::prop::Rng;
@@ -68,6 +69,20 @@ impl PagedPoolConfig {
         PagedPoolConfig { page_len, pages: lanes * (max_seq / page_len), max_lanes,
                           decode_width: lanes }
     }
+
+    /// An OVERCOMMITTED pool: `1/factor` of the dense memory budget,
+    /// same physical decode width. With lazy reservation the pool
+    /// admits by written rows, so a `factor` of e.g. 2 serves the same
+    /// workload on half the memory at the price of preemption under
+    /// pressure — the tradeoff `benches/kv_overcommit.rs` sweeps.
+    pub fn overcommit_of_dense(lanes: usize, max_seq: usize, page_len: usize,
+                               max_lanes: usize, factor: f64) -> Self {
+        assert!(max_seq % page_len == 0, "pages must tile max_seq");
+        assert!(factor >= 1.0, "overcommit factor must be >= 1");
+        let dense_pages = lanes * (max_seq / page_len);
+        let pages = ((dense_pages as f64 / factor).ceil() as usize).max(1);
+        PagedPoolConfig { page_len, pages, max_lanes, decode_width: lanes }
+    }
 }
 
 /// Workload shape for one open-loop run.
@@ -92,6 +107,10 @@ pub struct OpenLoopConfig {
     pub max_new_tokens: usize,
     /// Run over a paged KV pool instead of the dense per-lane layout.
     pub paged: Option<PagedPoolConfig>,
+    /// Page-reservation policy for the paged pool (`Upfront` = PR 3
+    /// whole-budget reservation; `Lazy` = on-demand growth with
+    /// preempt-and-recompute). Ignored on the dense layout.
+    pub reserve: ReservationPolicy,
     pub seed: u64,
 }
 
@@ -114,6 +133,7 @@ impl Default for OpenLoopConfig {
             min_new_tokens: 64,
             max_new_tokens: 191,
             paged: None,
+            reserve: ReservationPolicy::Upfront,
             seed: 0x5EED,
         }
     }
@@ -124,13 +144,18 @@ impl Default for OpenLoopConfig {
 pub struct OpenLoopStats {
     pub policy: PrefillPolicy,
     pub layout: KvLayout,
+    pub reserve: ReservationPolicy,
     pub requests: usize,
     pub makespan_s: f64,
     pub ttft_p50_s: f64,
     pub ttft_p95_s: f64,
     pub tpot_p50_s: f64,
     pub tpot_p95_s: f64,
+    /// Scheduler ticks that ran a decode phase.
     pub decode_iterations: usize,
+    /// Decode artifact invocations (≥ iterations on a paged pool whose
+    /// warm lanes exceed the invocation batch).
+    pub decode_invocations: usize,
     pub prefill_calls: usize,
     pub prefill_chunks: usize,
     /// Peak concurrently admitted requests.
@@ -140,6 +165,9 @@ pub struct OpenLoopStats {
     pub kv_pages_peak: usize,
     pub page_occupancy_p95: f64,
     pub page_frag_p95: f64,
+    /// Lazy-reservation accounting (zeros under `Upfront`).
+    pub kv_pages_grown: usize,
+    pub preemptions: usize,
 }
 
 impl OpenLoopStats {
@@ -155,20 +183,29 @@ impl OpenLoopStats {
             KvLayout::Dense => "dense",
             KvLayout::Paged => "paged",
         };
+        let reserve = match self.reserve {
+            ReservationPolicy::Upfront => "upfront",
+            ReservationPolicy::Lazy => "lazy",
+        };
         format!(
-            "{{\"policy\": {policy}, \"layout\": \"{layout}\", \"requests\": {}, \
+            "{{\"policy\": {policy}, \"layout\": \"{layout}\", \
+             \"reserve\": \"{reserve}\", \"requests\": {}, \
              \"makespan_s\": {:.6}, \
              \"ttft_p50_s\": {:.6}, \"ttft_p95_s\": {:.6}, \
              \"tpot_p50_s\": {:.6}, \"tpot_p95_s\": {:.6}, \
-             \"decode_iterations\": {}, \"prefill_calls\": {}, \"prefill_chunks\": {}, \
+             \"decode_iterations\": {}, \"decode_invocations\": {}, \
+             \"prefill_calls\": {}, \"prefill_chunks\": {}, \
              \"peak_active\": {}, \"kv_pages_total\": {}, \"kv_pages_peak\": {}, \
-             \"page_occupancy_p95\": {:.6}, \"page_frag_p95\": {:.6}}}",
+             \"page_occupancy_p95\": {:.6}, \"page_frag_p95\": {:.6}, \
+             \"kv_pages_grown\": {}, \"preemptions\": {}}}",
             self.requests, self.makespan_s,
             self.ttft_p50_s, self.ttft_p95_s,
             self.tpot_p50_s, self.tpot_p95_s,
-            self.decode_iterations, self.prefill_calls, self.prefill_chunks,
+            self.decode_iterations, self.decode_invocations,
+            self.prefill_calls, self.prefill_chunks,
             self.peak_active, self.kv_pages_total, self.kv_pages_peak,
             self.page_occupancy_p95, self.page_frag_p95,
+            self.kv_pages_grown, self.preemptions,
         )
     }
 }
@@ -230,7 +267,13 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
             let backend = ModeledBackend::u280_paged(
                 p.max_lanes, cfg.prefill_len, cfg.max_seq, cfg.vocab,
                 p.page_len, p.pages, p.decode_width);
-            Engine::with_layout(backend, policy, KvLayout::Paged)
+            // lazy growth legitimately extends page tables between
+            // decode invocations; upfront runs keep the strict check
+            let backend = match cfg.reserve {
+                ReservationPolicy::Lazy => backend.with_table_growth(),
+                ReservationPolicy::Upfront => backend,
+            };
+            Engine::with_reservation(backend, policy, KvLayout::Paged, cfg.reserve)
         }
         None => {
             let backend = ModeledBackend::u280(cfg.lanes, cfg.prefill_len,
@@ -302,6 +345,7 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
     Ok(OpenLoopStats {
         policy: engine.policy(),
         layout: engine.layout(),
+        reserve: engine.reserve(),
         requests: n,
         makespan_s: engine.backend.model_time_s,
         ttft_p50_s: percentile(&ttft, 50.0),
@@ -309,6 +353,7 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         tpot_p50_s: percentile(&tpot, 50.0),
         tpot_p95_s: percentile(&tpot, 95.0),
         decode_iterations: m.iterations,
+        decode_invocations: m.decode_invocations,
         prefill_calls: m.prefill_calls,
         prefill_chunks: m.prefill_chunks,
         peak_active: m.peak_active,
@@ -316,6 +361,8 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         kv_pages_peak: m.kv_pages_peak,
         page_occupancy_p95: m.page_occupancy_p95(),
         page_frag_p95: m.page_frag_p95(),
+        kv_pages_grown: m.kv_pages_grown,
+        preemptions: m.preemptions,
     })
 }
 
@@ -394,6 +441,34 @@ mod tests {
         cfg.seed = 99;
         let c = run_open_loop(PrefillPolicy::Blocking, &cfg).unwrap();
         assert!((a.makespan_s - c.makespan_s).abs() > 1e-12);
+    }
+
+    #[test]
+    fn lazy_overcommit_runs_and_reports() {
+        // half the dense memory, budgets big enough that every request
+        // outgrows its admission backing (prompt 128 on 32-row pages
+        // binds 5 pages = 160 rows; 40..80 new tokens need 169..208)
+        let mut cfg = small();
+        cfg.min_new_tokens = 40;
+        cfg.max_new_tokens = 80;
+        cfg.paged = Some(PagedPoolConfig::overcommit_of_dense(
+            cfg.lanes, cfg.max_seq, 32, 16, 2.0));
+        cfg.reserve = ReservationPolicy::Lazy;
+        let s = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(s.layout, KvLayout::Paged);
+        assert_eq!(s.reserve, ReservationPolicy::Lazy);
+        assert_eq!(s.kv_pages_total, 4 * 320 / 32 / 2);
+        assert!(s.kv_pages_grown > 0, "lazy growth never fired");
+        let j = s.to_json();
+        assert!(j.contains("\"reserve\": \"lazy\""));
+        assert!(j.contains("\"kv_pages_grown\""));
+        assert!(crate::util::Json::parse(&j).is_ok());
+        // the same workload under Upfront reports zero growth
+        cfg.reserve = ReservationPolicy::Upfront;
+        let up = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(up.kv_pages_grown, 0);
+        assert_eq!(up.preemptions, 0);
+        assert!(up.to_json().contains("\"reserve\": \"upfront\""));
     }
 
     #[test]

@@ -109,10 +109,16 @@ pub struct ServeMetrics {
     pub prefill_calls: usize,
     /// Chunked prefill invocations (one chunk of one lane's prompt).
     pub prefill_chunks: usize,
-    /// Decode iterations executed (`Engine::step` decode phases).
+    /// Scheduler TICKS that ran a decode phase (`Engine::step` with at
+    /// least one warm lane). Comparable dense-vs-paged: a paged tick
+    /// that splits into several artifact calls still counts once here.
     pub iterations: usize,
-    /// Decode lane-steps: sum over iterations of lanes stepped. The
-    /// utilization denominator is `iterations × pool size`.
+    /// Decode ARTIFACT invocations. Dense: equals `iterations`. Paged:
+    /// one per ≤batch-lane group, so a tick over more warm lanes than
+    /// the invocation batch counts several times.
+    pub decode_invocations: usize,
+    /// Decode lane-steps: sum over invocations of lanes stepped. The
+    /// utilization denominator is `decode_invocations × batch width`.
     pub lane_steps: usize,
     pub total_prefill: Duration,
     pub total_decode: Duration,
@@ -136,6 +142,19 @@ pub struct ServeMetrics {
     pub kv_pages_total: usize,
     /// Peak pages simultaneously held by live lanes.
     pub kv_pages_peak: usize,
+    /// Pages appended to live lanes on demand (lazy reservation).
+    pub kv_pages_grown: usize,
+    /// Mid-flight page allocations that found the pool dry; each one
+    /// triggers a preemption.
+    pub grow_failures: usize,
+    /// Requests evicted mid-flight (pages released, requeued at the
+    /// queue head for recompute). Zero under up-front reservation.
+    pub preemptions: usize,
+    /// Peak point-in-time rows RESERVED by live lanes vs rows actually
+    /// WRITTEN — the reserved-vs-written gap is what lazy reservation
+    /// exists to close (their ratio is the live fragmentation).
+    pub kv_rows_reserved_peak: usize,
+    pub kv_rows_written_peak: usize,
     /// Page occupancy samples (pages in use / total), one per SAMPLED
     /// tick — bounded by decimation, see [`ServeMetrics::record_page_sample`].
     pub page_occupancy_s: Vec<f64>,
@@ -267,13 +286,16 @@ impl ServeMetrics {
         percentile(&self.page_frag_s, 95.0)
     }
 
-    /// Decode lane utilization: fraction of lane-iterations that carried
-    /// a live request (1.0 = every lane busy every iteration).
+    /// Decode lane utilization: fraction of invocation slots that
+    /// carried a live request (1.0 = every slot busy every artifact
+    /// call). Denominator is `decode_invocations × batch width`, so a
+    /// paged tick split into several ≤batch calls is not inflated
+    /// against a dense tick's single call.
     pub fn lane_utilization(&self, pool_lanes: usize) -> f64 {
-        if self.iterations == 0 || pool_lanes == 0 {
+        if self.decode_invocations == 0 || pool_lanes == 0 {
             return 0.0;
         }
-        self.lane_steps as f64 / (self.iterations * pool_lanes) as f64
+        self.lane_steps as f64 / (self.decode_invocations * pool_lanes) as f64
     }
 }
 
@@ -306,6 +328,55 @@ mod tests {
         assert!((percentile(&samples, 50.0) - 50.0).abs() < 1e-9);
         assert!((percentile(&samples, 95.0) - 95.0).abs() < 1e-9);
         assert!((percentile(&[42.0], 95.0) - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_edge_ranks() {
+        // q at/near the ends must clamp into the sample range, never
+        // index out of bounds or return a sample that isn't there
+        let two = [10.0, 20.0];
+        assert!((percentile(&two, 0.0) - 10.0).abs() < 1e-9);
+        assert!((percentile(&two, 1.0) - 10.0).abs() < 1e-9); // ceil(0.02)=1
+        assert!((percentile(&two, 50.0) - 10.0).abs() < 1e-9); // rank 1
+        assert!((percentile(&two, 51.0) - 20.0).abs() < 1e-9); // rank 2
+        assert!((percentile(&two, 99.0) - 20.0).abs() < 1e-9);
+        assert!((percentile(&two, 100.0) - 20.0).abs() < 1e-9);
+        // unsorted input is sorted internally; q=0 stays the minimum
+        let unsorted = [3.0, 1.0, 2.0];
+        assert!((percentile(&unsorted, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&unsorted, 100.0) - 3.0).abs() < 1e-9);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn page_sample_stride_doubles_at_each_decimation() {
+        let mut m = ServeMetrics::default();
+        // stride 1 until the cap: call 4096 fills the buffer and
+        // decimates it to 2048, doubling the stride
+        for _ in 0..PAGE_SAMPLE_CAP {
+            m.record_page_sample(1.0, 0.0);
+        }
+        assert_eq!(m.page_occupancy_s.len(), PAGE_SAMPLE_CAP / 2);
+        // stride 2: the very next tick is skipped, the one after kept
+        m.record_page_sample(1.0, 0.0);
+        assert_eq!(m.page_occupancy_s.len(), PAGE_SAMPLE_CAP / 2);
+        m.record_page_sample(1.0, 0.0);
+        assert_eq!(m.page_occupancy_s.len(), PAGE_SAMPLE_CAP / 2 + 1);
+        // a second decimation doubles the stride again: after it, only
+        // every 4th tick lands
+        for _ in 0..(PAGE_SAMPLE_CAP - 2) {
+            m.record_page_sample(1.0, 0.0);
+        }
+        assert_eq!(m.page_occupancy_s.len(), PAGE_SAMPLE_CAP / 2);
+        for _ in 0..3 {
+            m.record_page_sample(1.0, 0.0);
+        }
+        assert_eq!(m.page_occupancy_s.len(), PAGE_SAMPLE_CAP / 2,
+                   "stride-4 decimation must skip three of four ticks");
+        m.record_page_sample(1.0, 0.0);
+        assert_eq!(m.page_occupancy_s.len(), PAGE_SAMPLE_CAP / 2 + 1);
+        // the two buffers decimate in lockstep
+        assert_eq!(m.page_occupancy_s.len(), m.page_frag_s.len());
     }
 
     #[test]

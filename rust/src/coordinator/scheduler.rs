@@ -48,7 +48,7 @@ use std::time::Instant;
 use crate::anyhow::{anyhow, Result};
 
 use super::backend::{LaneStep, PagedStep};
-use super::kv::{KvPool, LaneKv};
+use super::kv::{KvPool, LaneKv, ReservationPolicy};
 use super::request::{FinishReason, GenRequest, GenResult};
 
 /// How admission prefill shares the engine with decode iterations.
@@ -134,12 +134,46 @@ impl PageStats {
     }
 }
 
+/// A request preempted mid-flight: identifies whose pages were released
+/// so the engine can notify the backend and account the event.
+#[derive(Debug, Clone, Copy)]
+pub struct Preempted {
+    /// Lane the request was evicted from.
+    pub lane: usize,
+    /// The evicted request's id.
+    pub id: u64,
+}
+
+/// What one [`Scheduler::ensure_decode_backing`] pass did.
+#[derive(Debug, Clone, Default)]
+pub struct GrowthReport {
+    /// Pages appended to warm lanes' tables this tick.
+    pub pages_grown: usize,
+    /// Mid-flight `alloc(1)` attempts that found the pool dry (each
+    /// triggers one preemption).
+    pub grow_failures: usize,
+    /// Requests evicted to free pages, in eviction order.
+    pub preempted: Vec<Preempted>,
+}
+
+/// Recompute state a preempted request carries back through the queue:
+/// the tokens it already streamed (suppressed on replay so subscriber
+/// streams stay byte-identical) and its original first-token time (so
+/// TTFT/decode-time metrics keep measuring the user-visible stream).
+#[derive(Debug, Clone, Copy)]
+struct Resume {
+    emitted: usize,
+    first_token_at: Instant,
+}
+
 /// A queued request with its submission order and arrival time.
 #[derive(Debug, Clone)]
 struct Pending {
     req: GenRequest,
     seq: u64,
     arrived: Instant,
+    /// Present when this entry is a preempted request awaiting recompute.
+    resume: Option<Resume>,
 }
 
 /// A request occupying a decode lane — request state AND its cache map
@@ -154,6 +188,10 @@ struct InFlight {
     kv: LaneKv,
     tokens: Vec<i32>,
     first_token_at: Instant,
+    /// Tokens already emitted before a preemption (0 for a fresh
+    /// admission): regenerated tokens with index < `replayed` are
+    /// recompute replays the engine must not re-emit.
+    replayed: usize,
 }
 
 impl InFlight {
@@ -190,6 +228,8 @@ pub struct Scheduler {
     pub gang: bool,
     /// Paged configuration (admission can outnumber the artifact batch).
     paged: bool,
+    /// How admission sizes a request's page reservation.
+    reserve: ReservationPolicy,
     next_seq: u64,
 }
 
@@ -204,6 +244,7 @@ impl Scheduler {
             lanes: (0..lanes).map(|_| None).collect(),
             gang,
             paged: false,
+            reserve: ReservationPolicy::Upfront,
             next_seq: 0,
         }
     }
@@ -222,8 +263,24 @@ impl Scheduler {
             lanes: (0..max_lanes.min(total_pages)).map(|_| None).collect(),
             gang: false,
             paged: true,
+            reserve: ReservationPolicy::Upfront,
             next_seq: 0,
         }
+    }
+
+    /// Select the reservation policy (builder; the default is
+    /// [`ReservationPolicy::Upfront`], the PR 3 behavior). On a dense
+    /// pool `Lazy` is coerced back to `Upfront`: one page backs the
+    /// whole `max_seq` row budget, so there is nothing to grow and
+    /// nothing preemption could ever reclaim early.
+    pub fn with_reserve(mut self, reserve: ReservationPolicy) -> Self {
+        self.reserve = if self.paged { reserve } else { ReservationPolicy::Upfront };
+        self
+    }
+
+    /// The reservation policy in effect.
+    pub fn reserve(&self) -> ReservationPolicy {
+        self.reserve
     }
 
     pub fn lanes(&self) -> usize {
@@ -297,7 +354,8 @@ impl Scheduler {
         self.validate(&req)?;
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.queue.push_back(Pending { req, seq, arrived: Instant::now() });
+        self.queue.push_back(Pending { req, seq, arrived: Instant::now(),
+                                       resume: None });
         Ok(())
     }
 
@@ -318,10 +376,21 @@ impl Scheduler {
         !self.queue.is_empty() || self.active() > 0
     }
 
-    /// Rows a request reserves: prompt + generation budget (the cap that
-    /// makes mid-flight page exhaustion impossible).
+    /// Rows a request reserves over its whole life: prompt + generation
+    /// budget. Validation refuses requests whose full need exceeds the
+    /// pool under EITHER policy — a lazy request that cannot fit alone
+    /// would grow-fail forever with nothing left to preempt.
     fn reserve_rows(&self, req: &GenRequest) -> usize {
         (req.prompt.len() + req.max_new_tokens).min(self.pool.max_seq)
+    }
+
+    /// Rows backed at ADMISSION: the full budget up front, or just the
+    /// prompt plus one decode slot under lazy growth.
+    fn admission_rows(&self, req: &GenRequest) -> usize {
+        match self.reserve {
+            ReservationPolicy::Upfront => self.reserve_rows(req),
+            ReservationPolicy::Lazy => (req.prompt.len() + 1).min(self.pool.max_seq),
+        }
     }
 
     /// Pick the lanes to admit this iteration and bind them (empty cache
@@ -340,7 +409,7 @@ impl Scheduler {
             (0..self.lanes.len()).filter(|&l| self.lanes[l].is_none()).collect();
         for lane in free {
             let Some(head) = self.queue.front() else { break };
-            let pages_needed = self.pool.pages_for(self.reserve_rows(&head.req));
+            let pages_needed = self.pool.pages_for(self.admission_rows(&head.req));
             if pages_needed > self.pool.free_pages() {
                 break; // head-of-line blocks: keep FIFO order
             }
@@ -349,6 +418,13 @@ impl Scheduler {
             let kv = LaneKv::new(p.req.prompt.len(), pages, self.pool.page_len,
                                  self.pool.max_seq)
                 .expect("validated request cannot fail to bind");
+            // a preempted request re-prefills from chunk 0 but keeps its
+            // original first-token clock and emitted-token watermark
+            let (first_token_at, replayed) = match p.resume {
+                Some(r) => (r.first_token_at, r.emitted),
+                // placeholder; overwritten when the prefill completes
+                None => (p.arrived, 0),
+            };
             self.lanes[lane] = Some(InFlight {
                 req: p.req,
                 seq: p.seq,
@@ -356,9 +432,9 @@ impl Scheduler {
                 admitted_at: now,
                 phase: RequestPhase::Prefilling { next_chunk: 0 },
                 kv,
-                // placeholder; overwritten when the prefill completes
-                first_token_at: p.arrived,
+                first_token_at,
                 tokens: Vec::new(),
+                replayed,
             });
             admitted.push(lane);
         }
@@ -379,9 +455,24 @@ impl Scheduler {
             .ok_or_else(|| anyhow!("no request bound to lane {lane}"))
     }
 
-    /// Request id bound to `lane` (0 when unbound; used for event labels).
-    pub fn prompt_owner(&self, lane: usize) -> u64 {
-        self.flight(lane).map(|f| f.req.id).unwrap_or(0)
+    /// Request id bound to `lane`, `None` when unbound. (Returning a
+    /// sentinel id here would collide with real ids — 0 is a legal
+    /// request id and the open-loop harness indexes per-request arrays
+    /// by event id, so the absence must be explicit.)
+    pub fn prompt_owner(&self, lane: usize) -> Option<u64> {
+        self.flight(lane).ok().map(|f| f.req.id)
+    }
+
+    /// Tokens the request on `lane` already streamed before a
+    /// preemption: regenerated tokens with index below this watermark
+    /// are recompute replays (0 for a fresh admission or unbound lane).
+    pub fn replay_watermark(&self, lane: usize) -> usize {
+        self.flight(lane).map(|f| f.replayed).unwrap_or(0)
+    }
+
+    /// Whether any lane is decode-ready (its prompt is cache-resident).
+    pub fn has_warm_lane(&self) -> bool {
+        self.lanes.iter().flatten().any(|f| f.kv.is_warm())
     }
 
     /// Tokens the request on `lane` has generated so far.
@@ -462,7 +553,11 @@ impl Scheduler {
                 flight.kv.fill(len)?;
                 if flight.kv.is_warm() {
                     flight.phase = RequestPhase::Decoding;
-                    flight.first_token_at = now;
+                    if flight.replayed == 0 {
+                        // a recompute keeps the original first-token
+                        // time: the user already saw that token
+                        flight.first_token_at = now;
+                    }
                     flight.tokens.push(token);
                     self.retire_if_finished(lane, now)
                 } else {
@@ -531,9 +626,95 @@ impl Scheduler {
         self.retire_if_finished(lane, now)
     }
 
+    /// Back every warm lane's next cache write with a physical page,
+    /// growing tables on demand (lazy reservation). When the pool runs
+    /// dry the youngest in-flight request (highest `seq`) is preempted:
+    /// its pages are released and it is requeued at the queue HEAD, so
+    /// it recomputes as soon as memory frees while older requests keep
+    /// their pages (no starvation of the old by the young). A no-op
+    /// under [`ReservationPolicy::Upfront`] — reservations are full.
+    ///
+    /// The engine runs this once per tick before planning the decode
+    /// iteration: each warm lane writes exactly one row per tick, so
+    /// backing `pos` now covers the whole tick.
+    pub fn ensure_decode_backing(&mut self) -> Result<GrowthReport> {
+        let mut report = GrowthReport::default();
+        if self.reserve != ReservationPolicy::Lazy {
+            return Ok(report);
+        }
+        let mut lane = 0;
+        while lane < self.lanes.len() {
+            let needs = matches!(&self.lanes[lane],
+                                 Some(f) if f.kv.is_warm() && f.kv.needs_growth());
+            if !needs {
+                lane += 1;
+                continue;
+            }
+            match self.pool.alloc(1) {
+                Ok(pages) => {
+                    let page = pages[0];
+                    let flight = self.lanes[lane].as_mut().expect("lane checked above");
+                    if let Err(e) = flight.kv.grow(page) {
+                        self.pool.release(pages); // don't leak on refusal
+                        return Err(e);
+                    }
+                    report.pages_grown += 1;
+                    lane += 1;
+                }
+                Err(_) => {
+                    report.grow_failures += 1;
+                    let victim = self.preempt_youngest().ok_or_else(|| anyhow!(
+                        "KV pool dry with nothing to preempt: a validated \
+                         request's full reservation fits the pool, so this \
+                         means the allocator leaked pages"))?;
+                    let evicted_self = victim.lane == lane;
+                    report.preempted.push(victim);
+                    if evicted_self {
+                        // the grower itself was youngest: it is requeued
+                        // for recompute; move on
+                        lane += 1;
+                    }
+                    // otherwise retry the same lane against the freed pages
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Evict the youngest in-flight request (highest `seq`): release its
+    /// pages and requeue it at the queue head carrying its recompute
+    /// state. Returns `None` when no request is in flight.
+    fn preempt_youngest(&mut self) -> Option<Preempted> {
+        let lane = (0..self.lanes.len())
+            .filter(|&l| self.lanes[l].is_some())
+            .max_by_key(|&l| self.lanes[l].as_ref().map(|f| f.seq))?;
+        let flight = self.lanes[lane].take().expect("selected occupied lane");
+        let id = flight.req.id;
+        self.pool.release(flight.kv.pages);
+        // a request preempted DURING its own replay keeps the larger
+        // watermark: those tokens were emitted in the original run
+        let emitted = flight.tokens.len().max(flight.replayed);
+        let resume = (emitted > 0).then_some(Resume {
+            emitted,
+            first_token_at: flight.first_token_at,
+        });
+        self.queue.push_front(Pending {
+            req: flight.req,
+            seq: flight.seq,
+            arrived: flight.arrived,
+            resume,
+        });
+        Some(Preempted { lane, id })
+    }
+
     fn retire_if_finished(&mut self, lane: usize, now: Instant) -> Result<Option<Completion>> {
         let flight = self.lanes[lane].as_ref().expect("lane checked by caller");
-        let exhausted = flight.kv.remaining() == 0;
+        // under lazy reservation a lane whose backing lags its budget is
+        // grown, not retired: exhaustion is only the max_seq hard cap
+        let exhausted = match self.reserve {
+            ReservationPolicy::Upfront => flight.kv.remaining() == 0,
+            ReservationPolicy::Lazy => flight.kv.pos >= self.pool.max_seq,
+        };
         if flight.finish_reason().is_none() && !exhausted {
             return Ok(None);
         }
@@ -808,7 +989,8 @@ mod tests {
         s.submit(req(3, 2)).unwrap();  // 1 page — would fit, must NOT jump
         let admitted = s.plan_admissions();
         assert_eq!(admitted.len(), 1);
-        assert_eq!(s.prompt_owner(0), 1);
+        assert_eq!(s.prompt_owner(0), Some(1));
+        assert_eq!(s.prompt_owner(1), None, "unbound lane must not report an id");
         assert_eq!(s.queued(), 2, "short request must not overtake the head");
     }
 
@@ -879,6 +1061,109 @@ mod tests {
         assert_eq!(steps[0].pages.len(), 2);
         assert_eq!(steps[0].pos, 4);
         assert_eq!(steps[0].token, 7);
+    }
+
+    // -- lazy reservation + preempt-and-recompute --------------------------
+
+    /// Lazy paged pool: prompt 4 over 4-row pages, so admission backs
+    /// 2 pages (prompt + one decode slot) regardless of budget.
+    fn lazy_sched(max_lanes: usize, pages: usize) -> Scheduler {
+        Scheduler::paged(max_lanes, 4, 32, 4, pages)
+            .with_reserve(ReservationPolicy::Lazy)
+    }
+
+    #[test]
+    fn lazy_admission_backs_prompt_plus_one_slot() {
+        // budget 12 would reserve 4 pages up front; lazily it binds 2
+        let mut s = lazy_sched(4, 4);
+        s.submit(req(1, 12)).unwrap();
+        s.submit(req(2, 12)).unwrap();
+        let admitted = s.plan_admissions();
+        assert_eq!(admitted.len(), 2,
+                   "lazy admission must bind by prompt pages, not budget");
+        assert_eq!(s.page_table(0).unwrap().len(), 2);
+        assert_eq!(s.page_stats().pages_in_use, 4);
+        // upfront on the same geometry admits only one
+        let mut up = Scheduler::paged(4, 4, 32, 4, 4);
+        up.submit(req(1, 12)).unwrap();
+        up.submit(req(2, 12)).unwrap();
+        assert_eq!(up.plan_admissions().len(), 1);
+    }
+
+    #[test]
+    fn lazy_growth_allocates_as_decode_crosses_pages() {
+        let mut s = lazy_sched(1, 8);
+        s.submit(req(1, 12)).unwrap(); // full need: 16 rows = 4 pages
+        s.plan_admissions();
+        s.record_prefill(0, 7).unwrap();
+        let mut grown = 0;
+        loop {
+            let g = s.ensure_decode_backing().unwrap();
+            grown += g.pages_grown;
+            assert!(g.preempted.is_empty(), "ample pool must not preempt");
+            let steps = s.decode_steps();
+            if steps.is_empty() {
+                break;
+            }
+            if s.record_decode(0, 3).unwrap().is_some() {
+                break;
+            }
+        }
+        // rows 4..16 written: pages 2 and 3 appended on demand
+        assert_eq!(grown, 2);
+        assert_eq!(s.page_stats().pages_in_use, 0, "retire released grown pages");
+    }
+
+    #[test]
+    fn dry_pool_preempts_youngest_and_requeues_at_head() {
+        // 4 pages: two lazy requests bind 2 pages each; the first growth
+        // attempt finds the pool dry and must evict seq 1 (the youngest)
+        let mut s = lazy_sched(2, 4);
+        s.submit(req(1, 12)).unwrap();
+        s.submit(req(2, 12)).unwrap();
+        assert_eq!(s.plan_admissions().len(), 2);
+        s.record_prefill(0, 7).unwrap();
+        s.record_prefill(1, 8).unwrap();
+        // four decode rounds take both lanes from pos 4 to pos 8 — the
+        // edge of their two 4-row pages — without any growth
+        for _ in 0..4 {
+            let g = s.ensure_decode_backing().unwrap();
+            assert_eq!((g.pages_grown, g.preempted.len()), (0, 0));
+            for st in s.decode_steps() {
+                s.record_decode(st.lane, 3).unwrap();
+            }
+        }
+        // both lanes now need a page and the pool is dry: the youngest
+        // (seq 1 = request 2) is evicted and its pages feed lane 0
+        let g = s.ensure_decode_backing().unwrap();
+        assert_eq!(g.grow_failures, 1);
+        assert_eq!(g.preempted.len(), 1, "dry pool must preempt");
+        assert_eq!((g.preempted[0].lane, g.preempted[0].id), (1, 2),
+                   "victim must be the YOUNGEST request");
+        assert_eq!(g.pages_grown, 1, "freed pages must satisfy the grower");
+        assert_eq!(s.active(), 1);
+        assert_eq!(s.queued(), 1, "victim requeued");
+        // drive the survivor to completion; its pages free and the
+        // victim re-admits from the queue head carrying its watermark
+        while s.active() > 0 {
+            s.ensure_decode_backing().unwrap();
+            for st in s.decode_steps() {
+                s.record_decode(st.lane, 3).unwrap();
+            }
+        }
+        let lanes = s.plan_admissions();
+        assert_eq!(lanes.len(), 1);
+        assert_eq!(s.prompt_owner(lanes[0]), Some(2));
+        assert_eq!(s.replay_watermark(lanes[0]), 5,
+                   "recompute must carry the emitted-token watermark");
+    }
+
+    #[test]
+    fn dense_scheduler_coerces_lazy_to_upfront() {
+        let s = Scheduler::new(2, 4, 12, false).with_reserve(ReservationPolicy::Lazy);
+        assert_eq!(s.reserve(), ReservationPolicy::Upfront);
+        let s = Scheduler::paged(2, 4, 32, 8, 4).with_reserve(ReservationPolicy::Lazy);
+        assert_eq!(s.reserve(), ReservationPolicy::Lazy);
     }
 
     #[test]

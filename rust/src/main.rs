@@ -6,6 +6,7 @@
 //!               [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
 //!               [--prefill-policy blocking|chunked] [--prefill-chunk C]
 //!               [--prefill-greedy] [--kv-pages P] [--page-len L]
+//!               [--kv-reserve upfront|lazy] [--kv-overcommit F]
 //!               [--artifacts DIR]
 //! flexllm ablate [--artifacts DIR]
 //! flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
@@ -19,8 +20,8 @@ use flexllm::anyhow::{anyhow, bail, Result};
 use flexllm::arch::{AcceleratorSystem, DecodeArch, PrefillArch};
 use flexllm::config::{DeviceConfig, ModelDims};
 use flexllm::coordinator::{Engine, ExecBackend, GenRequest, GenResult, KvLayout,
-                           MockBackend, ModeledBackend, PrefillPolicy, Router,
-                           ServeMetrics};
+                           MockBackend, ModeledBackend, PrefillPolicy,
+                           ReservationPolicy, Router, ServeMetrics};
 use flexllm::eval;
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;
@@ -35,6 +36,7 @@ USAGE:
                 [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
                 [--prefill-policy blocking|chunked] [--prefill-chunk C]
                 [--prefill-greedy] [--kv-pages P] [--page-len L]
+                [--kv-reserve upfront|lazy] [--kv-overcommit F]
                 [--artifacts DIR]
       Serve generation requests through the iteration-level scheduler.
       --spread K        skew budgets: request i gets ~new-tokens·(i%K+1)/K
@@ -61,6 +63,14 @@ USAGE:
       --page-len L      cache rows per page for mock/modeled paged pools
                         (default 64, must tile max_seq 320; pjrt uses the
                         artifact page size)
+      --kv-reserve      upfront (whole-budget page reservation at admission,
+                        default) or lazy (admission backs only the prompt
+                        plus one decode slot; pages grow on demand and a dry
+                        pool preempts the youngest request, which recomputes
+                        from the queue head — streams stay byte-identical)
+      --kv-overcommit F shrink the mock/modeled paged pool to 1/F of the
+                        dense memory budget (default 1; needs --kv-reserve
+                        lazy to be useful — upfront admission just queues)
       Examples:
         flexllm serve --backend modeled --requests 32 --spread 4 \
                       --prefill-policy chunked --prefill-chunk 32
@@ -69,6 +79,10 @@ USAGE:
                       --kv-pages 20 --page-len 64
                       # paged pool: compare the "kv pages" line and peak
                       # concurrency against the dense default
+        flexllm serve --backend modeled --requests 64 --spread 8 \
+                      --page-len 32 --kv-reserve lazy --kv-overcommit 2
+                      # lazy growth on half the memory: watch pages grown,
+                      # preemptions and the fragmentation percentiles
   flexllm ablate [--artifacts DIR]
       Run the Table V quantization ablation on the real artifacts.
   flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
@@ -125,6 +139,13 @@ impl Args {
 
     fn get_str(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number '{v}'")),
+        }
     }
 }
 
@@ -273,28 +294,55 @@ fn describe_policy(p: PrefillPolicy) -> String {
     }
 }
 
-/// Paged-pool request from `--kv-pages` / `--page-len`: `Some((pages,
+/// Paged-pool request from `--kv-pages` / `--page-len` (or the
+/// paged-only `--kv-reserve` / `--kv-overcommit` knobs): `Some((pages,
 /// page_len))` when the user asked for the paged layout. Geometry is
 /// validated against the SIM pool shape (4 lanes × max_seq 320) only by
 /// [`sim_paged_geometry`] — the pjrt backend takes its geometry from
 /// the artifact manifest and uses the flags purely as a layout switch.
-fn paged_request(a: &Args) -> Result<Option<(u64, u64)>> {
-    if !a.has("kv-pages") && !a.has("page-len") {
+fn paged_request(a: &Args, reserve: ReservationPolicy, overcommit: f64)
+    -> Result<Option<(u64, u64)>>
+{
+    // lazy reservation / a real overcommit only exist on the paged
+    // layout, so they imply it; spelling out the DEFAULTS (`--kv-reserve
+    // upfront`, `--kv-overcommit 1`) must not switch the layout
+    let implied = reserve == ReservationPolicy::Lazy || overcommit > 1.0;
+    if !a.has("kv-pages") && !a.has("page-len") && !implied {
         return Ok(None);
     }
     Ok(Some((a.get_u64("kv-pages", 0)?, a.get_u64("page-len", 64)?)))
 }
 
+/// Parse `--kv-reserve` (default: the PR 3 up-front reservation).
+fn kv_reserve(a: &Args) -> Result<ReservationPolicy> {
+    match a.get_str("kv-reserve", "upfront").as_str() {
+        "upfront" => Ok(ReservationPolicy::Upfront),
+        "lazy" => Ok(ReservationPolicy::Lazy),
+        other => bail!("unknown reservation policy '{other}' (upfront|lazy)"),
+    }
+}
+
 /// Resolve the mock/modeled paged geometry (their pools are hardcoded
 /// at 4 lanes × max_seq 320): `--page-len` must tile max_seq, and
-/// `--kv-pages 0`/absent defaults to the dense pool's memory budget.
-fn sim_paged_geometry(pages: u64, page_len: u64) -> Result<(usize, usize)> {
+/// `--kv-pages 0`/absent defaults to the dense pool's memory budget
+/// shrunk by `--kv-overcommit` (an explicit `--kv-pages` wins).
+fn sim_paged_geometry(pages: u64, page_len: u64, overcommit: f64)
+    -> Result<(usize, usize)>
+{
     const SIM_MAX_SEQ: u64 = 320;
     const SIM_LANES: u64 = 4;
     if page_len == 0 || SIM_MAX_SEQ % page_len != 0 {
         bail!("--page-len must divide the sim pool's max_seq {SIM_MAX_SEQ}");
     }
-    let pages = if pages == 0 { SIM_LANES * SIM_MAX_SEQ / page_len } else { pages };
+    if !(1.0..=64.0).contains(&overcommit) {
+        bail!("--kv-overcommit must be in [1, 64]");
+    }
+    let pages = if pages == 0 {
+        let dense = SIM_LANES * SIM_MAX_SEQ / page_len;
+        ((dense as f64 / overcommit).ceil() as u64).max(1)
+    } else {
+        pages
+    };
     Ok((pages as usize, page_len as usize))
 }
 
@@ -304,21 +352,28 @@ fn serve(a: &Args) -> Result<()> {
     let spread = a.get_u64("spread", 1)? as usize;
     let stream = a.has("stream");
     let policy = prefill_policy(a)?;
-    let paged = paged_request(a)?;
+    let reserve = kv_reserve(a)?;
+    let overcommit = a.get_f64("kv-overcommit", 1.0)?;
+    let paged = paged_request(a, reserve, overcommit)?;
     let stop: Vec<i32> = match a.get("stop-token") {
         Some(v) => vec![v.parse().map_err(|_| anyhow!("--stop-token: bad token '{v}'"))?],
         None => Vec::new(),
     };
     match a.get_str("backend", "pjrt").as_str() {
         "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop, policy,
-                             paged.is_some()),
+                             paged.is_some(), reserve),
         "mock" => {
             let mut engine = match paged {
                 Some((pages, page_len)) => {
-                    let (pages, page_len) = sim_paged_geometry(pages, page_len)?;
-                    Engine::with_layout(
-                        MockBackend::paged(pages, 128, 320, 512, page_len, pages),
-                        policy, KvLayout::Paged)
+                    let (pages, page_len) =
+                        sim_paged_geometry(pages, page_len, overcommit)?;
+                    let mut backend =
+                        MockBackend::paged(pages, 128, 320, 512, page_len, pages);
+                    if reserve == ReservationPolicy::Lazy {
+                        // lazy growth legitimately extends page tables
+                        backend = backend.with_table_growth();
+                    }
+                    Engine::with_reservation(backend, policy, KvLayout::Paged, reserve)
                 }
                 None => Engine::with_policy(MockBackend::new(4, 128, 320, 512), policy),
             };
@@ -330,10 +385,14 @@ fn serve(a: &Args) -> Result<()> {
         "modeled" => {
             let mut engine = match paged {
                 Some((pages, page_len)) => {
-                    let (pages, page_len) = sim_paged_geometry(pages, page_len)?;
-                    Engine::with_layout(
-                        ModeledBackend::u280_paged(pages, 128, 320, 512, page_len, pages, 4),
-                        policy, KvLayout::Paged)
+                    let (pages, page_len) =
+                        sim_paged_geometry(pages, page_len, overcommit)?;
+                    let mut backend = ModeledBackend::u280_paged(
+                        pages, 128, 320, 512, page_len, pages, 4);
+                    if reserve == ReservationPolicy::Lazy {
+                        backend = backend.with_table_growth();
+                    }
+                    Engine::with_reservation(backend, policy, KvLayout::Paged, reserve)
                 }
                 None => Engine::with_policy(ModeledBackend::u280(4, 128, 320, 512),
                                             policy),
@@ -385,7 +444,8 @@ fn drive_sim<B: ExecBackend>(engine: &mut Engine<B>, n: usize, new_tokens: usize
 
 #[allow(clippy::too_many_arguments)]
 fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool,
-              stop: Vec<i32>, policy: PrefillPolicy, paged: bool) -> Result<()> {
+              stop: Vec<i32>, policy: PrefillPolicy, paged: bool,
+              reserve: ReservationPolicy) -> Result<()> {
     let artifacts = a.get_str("artifacts", "artifacts");
     println!("prefill policy requested: {}", describe_policy(policy));
     let layout = if paged {
@@ -411,7 +471,8 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
     let base: Vec<Vec<i32>> = toks.chunks_exact(s).map(|c| c.to_vec()).collect();
     drop(rt);
 
-    let router = Router::spawn_with_options(artifacts.to_string(), policy, layout)?;
+    let router = Router::spawn_with_options(artifacts.to_string(), policy, layout,
+                                            reserve)?;
     if stream {
         let events = router.subscribe()?;
         std::thread::spawn(move || {
@@ -472,14 +533,22 @@ fn print_summary(results: &[GenResult], m: &ServeMetrics, lanes: usize) {
              } else {
                  String::new()
              });
-    println!("  lane utilization: {:.1}%  ({} lane-steps over {} iterations × {} lanes)",
-             m.lane_utilization(lanes) * 100.0, m.lane_steps, m.iterations, lanes);
+    println!("  lane utilization: {:.1}%  ({} lane-steps over {} invocations × {} \
+              lanes, {} scheduler ticks)",
+             m.lane_utilization(lanes) * 100.0, m.lane_steps, m.decode_invocations,
+             lanes, m.iterations);
     if m.kv_pages_total > 0 {
         println!("  kv pages: {}/{} peak  occupancy p50/p95: {:.0}%/{:.0}%  \
                   fragmentation p95: {:.0}%  peak concurrency: {}",
                  m.kv_pages_peak, m.kv_pages_total,
                  m.page_occupancy_p50() * 100.0, m.page_occupancy_p95() * 100.0,
                  m.page_frag_p95() * 100.0, m.peak_active);
+        if m.kv_pages_grown > 0 || m.preemptions > 0 {
+            println!("  lazy reservation: {} pages grown  {} preemptions  \
+                      rows reserved/written peak: {}/{}",
+                     m.kv_pages_grown, m.preemptions,
+                     m.kv_rows_reserved_peak, m.kv_rows_written_peak);
+        }
     }
     let stopped = results.iter()
         .filter(|r| r.finish_reason == FinishReason::Stop)

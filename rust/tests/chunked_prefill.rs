@@ -121,14 +121,15 @@ fn lane_retires_mid_burst_and_backfills_beside_half_prefilled_lane() {
     engine.submit(GenRequest::new(1, vec![6; prefill], 12)).unwrap();
     engine.submit(GenRequest::new(2, vec![7; prefill], 3)).unwrap();
 
-    // tick 1: both admitted; oldest (req 0) gets the first chunk
+    // tick 1: both admitted; the pool is cold (no warm lane), so BOTH
+    // prefilling lanes get a chunk (the decode phase would idle anyway)
     let r = engine.step().unwrap();
     assert_eq!(r.admitted, 2);
-    assert_eq!(r.chunks, 1);
+    assert_eq!(r.chunks, 2);
     assert_eq!(engine.scheduler.phase(0),
                Some(RequestPhase::Prefilling { next_chunk: 1 }));
     assert_eq!(engine.scheduler.phase(1),
-               Some(RequestPhase::Prefilling { next_chunk: 0 }));
+               Some(RequestPhase::Prefilling { next_chunk: 1 }));
 
     // drive until req 0 retires (1-token budget → dies at its final chunk)
     let mut completed = Vec::new();
@@ -136,12 +137,12 @@ fn lane_retires_mid_burst_and_backfills_beside_half_prefilled_lane() {
         completed.extend(engine.step().unwrap().completed);
     }
     assert_eq!(completed[0].1.id, 0);
-    // lane 0 freed; req 2 backfills beside the still-prefilling req 1
+    // lane 0 freed; req 2 backfills while req 1 (now warm) keeps its
+    // decode cadence — one chunk per tick again
     let r = engine.step().unwrap();
     assert_eq!(r.admitted, 1, "freed lane was not backfilled");
-    assert!(matches!(engine.scheduler.phase(1),
-                     Some(RequestPhase::Prefilling { .. })),
-            "req 1 should still be mid-prompt when req 2 is admitted");
+    assert_eq!(r.chunks, 1, "a warm lane must re-arm the chunk throttle");
+    assert!(r.stepped >= 1, "req 1 should decode beside the backfill");
 
     while engine.has_work() {
         completed.extend(engine.step().unwrap().completed);
@@ -205,14 +206,25 @@ fn chunked_policy_degrades_to_blocking_without_backend_support() {
 }
 
 #[test]
-fn decode_priority_throttles_to_one_chunk_per_tick() {
+fn decode_priority_throttles_only_once_a_lane_is_warm() {
     let mut prio = Engine::with_policy(
         MockBackend::new(2, 8, 64, VOCAB),
         PrefillPolicy::Chunked { chunk_len: 4, decode_priority: true });
-    prio.submit(GenRequest::new(0, vec![1; 8], 4)).unwrap();
-    prio.submit(GenRequest::new(1, vec![2; 8], 4)).unwrap();
+    // warm lane 0 first (8-token prompt = two 4-token chunks)
+    prio.submit(GenRequest::new(0, vec![1; 8], 8)).unwrap();
+    prio.step().unwrap();
     let r = prio.step().unwrap();
-    assert_eq!((r.admitted, r.chunks), (2, 1), "decode_priority must single-file");
+    // final chunk delivers the first token, then the warm lane decodes
+    assert_eq!(r.events.len(), 2, "req 0 should be warm after two chunks");
+    // now a second admission must single-file: the warm lane keeps its
+    // decode cadence while the prompt streams in one chunk per tick
+    prio.submit(GenRequest::new(1, vec![2; 8], 8)).unwrap();
+    let r = prio.step().unwrap();
+    assert_eq!((r.admitted, r.chunks), (1, 1), "decode_priority must single-file");
+    assert_eq!(r.stepped, 1, "the warm lane must keep decoding");
+    let r = prio.step().unwrap();
+    // req 1's final chunk lands and it joins the decode phase
+    assert_eq!((r.chunks, r.stepped), (1, 2));
 
     let mut greedy = Engine::with_policy(
         MockBackend::new(2, 8, 64, VOCAB),
@@ -221,6 +233,32 @@ fn decode_priority_throttles_to_one_chunk_per_tick() {
     greedy.submit(GenRequest::new(1, vec![2; 8], 4)).unwrap();
     let r = greedy.step().unwrap();
     assert_eq!((r.admitted, r.chunks), (2, 2), "greedy mode feeds every lane");
+}
+
+#[test]
+fn cold_start_chunks_greedily_until_a_lane_warms() {
+    // the startup-stall fix: with NOTHING warm the decode phase idles,
+    // so throttling to one chunk per tick only delays every first token
+    let mut e = Engine::with_policy(
+        MockBackend::new(2, 8, 64, VOCAB),
+        PrefillPolicy::Chunked { chunk_len: 4, decode_priority: true });
+    e.submit(GenRequest::new(0, vec![1; 8], 4)).unwrap();
+    e.submit(GenRequest::new(1, vec![2; 8], 4)).unwrap();
+    // tick 1: cold pool → both lanes get a chunk
+    let r = e.step().unwrap();
+    assert_eq!((r.admitted, r.chunks, r.stepped), (2, 2, 0));
+    assert!(r.events.is_empty());
+    // tick 2: still cold → both final chunks land, BOTH first tokens
+    // arrive this tick. Single-file startup would have stalled req 1's
+    // first token to tick 4 — a 2× worse cold-start TTFT.
+    let r = e.step().unwrap();
+    assert_eq!(r.chunks, 2);
+    let first_tokens: Vec<u64> = r.events.iter()
+        .filter(|ev| ev.index == 0)
+        .map(|ev| ev.id)
+        .collect();
+    assert_eq!(first_tokens, vec![0, 1],
+               "both requests' TTFT must land on tick 2");
 }
 
 // ---------------------------------------------------------------------------

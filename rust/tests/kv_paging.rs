@@ -18,7 +18,8 @@
 //!    paging support.
 
 use flexllm::coordinator::{run_open_loop, ArrivalProcess, Engine, GenRequest, KvLayout,
-                           MockBackend, OpenLoopConfig, PagedPoolConfig, PrefillPolicy};
+                           MockBackend, OpenLoopConfig, PagedPoolConfig, PrefillPolicy,
+                           ReservationPolicy};
 use flexllm::util::prop::{forall, Rng};
 
 const VOCAB: usize = 512;
@@ -58,6 +59,7 @@ fn skewed_cfg() -> OpenLoopConfig {
         min_new_tokens: 16,
         max_new_tokens: 48,
         paged: None,
+        reserve: ReservationPolicy::Upfront,
         seed: 0x5EED,
     }
 }

@@ -42,8 +42,9 @@ fn prop_scheduler_admissions_respect_pool_and_order() {
         // admitted requests keep queue order and every lane starts at the
         // prefill boundary with full decode headroom
         for (i, &lane) in admitted.iter().enumerate() {
-            if s.prompt_owner(lane) != i as u64 {
-                return Err(format!("lane {lane} got request {}", s.prompt_owner(lane)));
+            if s.prompt_owner(lane) != Some(i as u64) {
+                return Err(format!("lane {lane} got request {:?}",
+                                   s.prompt_owner(lane)));
             }
         }
         if s.active() + s.queued() != n {
