@@ -44,6 +44,7 @@ fn cfg(min_new: usize, max_new: usize, factor: f64,
         paged: Some(PagedPoolConfig::overcommit_of_dense(
             4, 320, PAGE_LEN, 24, factor)),
         reserve,
+        shards: 1,
         seed: 0x5EED,
     }
 }

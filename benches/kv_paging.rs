@@ -35,6 +35,7 @@ fn cfg(min_new: usize, max_new: usize) -> OpenLoopConfig {
         max_new_tokens: max_new,
         paged: None,
         reserve: ReservationPolicy::Upfront,
+        shards: 1,
         seed: 0x5EED,
     }
 }

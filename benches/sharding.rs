@@ -1,0 +1,94 @@
+//! Multi-engine sharding sweep: aggregate decode throughput vs shard
+//! count on the skewed open-loop workload, at EQUAL total KV memory
+//! (the budget is split across shards; the modeled stage-engine pair is
+//! replicated per shard), on the U280-modeled backend.
+//!
+//! Each point runs the identical arrival trace at N ∈ {1, 2, 4} shards
+//! and reports makespan, aggregate tokens/s, the scaling factor vs N=1
+//! and the per-shard breakdown (requests, peak concurrency, pages,
+//! clocks) — the placement-quality story the tier-1 acceptance test
+//! (`tests/sharding.rs`, ≥1.8× at N=2) gates. The `scheduler-sim` CI
+//! job uploads the JSON next to `kv_overcommit.json`/`kv_paging.json`/
+//! `arrival_rate.json` so the scaling trajectory is tracked per PR.
+//!
+//! Output: `sharding.json` in the working directory (override with the
+//! `SHARDING_OUT` environment variable), also echoed to stdout.
+
+use flexllm::coordinator::{run_open_loop, ArrivalProcess, OpenLoopConfig,
+                           PagedPoolConfig, PrefillPolicy, ReservationPolicy};
+
+/// 16-row pages at the dense memory budget (4 × 320 rows = 80 pages).
+const PAGE_LEN: usize = 16;
+const SHARD_COUNTS: &[usize] = &[1, 2, 4];
+/// (min_new_tokens, max_new_tokens) budget skews against 320-row lanes:
+/// the first is the tier-1 acceptance workload (3× skew, short-ish
+/// requests → deep pass-splitting on one engine), the second stresses
+/// longer residencies.
+const SKEWS: &[(usize, usize)] = &[(32, 96), (64, 160)];
+
+fn cfg(min_new: usize, max_new: usize, shards: usize,
+       reserve: ReservationPolicy) -> OpenLoopConfig {
+    OpenLoopConfig {
+        lanes: 4,
+        prefill_len: 64,
+        max_seq: 320,
+        vocab: 512,
+        requests: 64,
+        arrival: ArrivalProcess::Burst,
+        bursts: 1,
+        burst_gap_s: 0.0,
+        burst_jitter_s: 0.05,
+        min_new_tokens: min_new,
+        max_new_tokens: max_new,
+        paged: Some(PagedPoolConfig::same_memory_as_dense(4, 320, PAGE_LEN, 24)),
+        reserve,
+        shards,
+        seed: 0x5EED,
+    }
+}
+
+fn main() {
+    let policy = PrefillPolicy::chunked(32);
+    let mut entries: Vec<String> = Vec::new();
+
+    for &(min_new, max_new) in SKEWS {
+        for &reserve in &[ReservationPolicy::Upfront, ReservationPolicy::Lazy] {
+            let name = match reserve {
+                ReservationPolicy::Upfront => "upfront",
+                ReservationPolicy::Lazy => "lazy",
+            };
+            let base = run_open_loop(policy, &cfg(min_new, max_new, 1, reserve))
+                .expect("single-shard open loop");
+            for &shards in SHARD_COUNTS {
+                let stats = if shards == 1 {
+                    base.clone()
+                } else {
+                    run_open_loop(policy, &cfg(min_new, max_new, shards, reserve))
+                        .expect("sharded open loop")
+                };
+                let scaling = stats.throughput_tps() / base.throughput_tps().max(1e-12);
+                entries.push(format!(
+                    "{{\"budgets\": [{min_new}, {max_new}], \"shards\": {shards}, \
+                     \"reserve\": \"{name}\", \"scaling_vs_1\": {scaling:.4}, \
+                     \"stats\": {}}}",
+                    stats.to_json()));
+                println!(
+                    "budgets {min_new:>3}-{max_new:<3} {name:>7} x{shards}: \
+                     {:>7.1} tok/s ({scaling:.2}x vs 1 shard) | \
+                     makespan {:.3}s | peak {:>2} | preempt {}",
+                    stats.throughput_tps(), stats.makespan_s, stats.peak_active,
+                    stats.preemptions);
+            }
+        }
+    }
+
+    let doc = format!(
+        "{{\"bench\": \"sharding\", \"backend\": \"modeled-u280\", \
+         \"page_len\": {PAGE_LEN}, \"dense_rows\": {}, \"requests\": 64, \
+         \"points\": [{}]}}\n",
+        4 * 320, entries.join(", "));
+    let out = std::env::var("SHARDING_OUT")
+        .unwrap_or_else(|_| "sharding.json".to_string());
+    std::fs::write(&out, &doc).expect("write sharding.json");
+    println!("\nwrote {} sweep points to {out}", entries.len());
+}

@@ -10,7 +10,7 @@
 //! ```
 
 use flexllm::anyhow::{anyhow, Result};
-use flexllm::coordinator::{GenRequest, Router};
+use flexllm::coordinator::{GenRequest, RouterBuilder};
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;
 
@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     assert_eq!(prompts.len(), batch, "prompt file / batch mismatch");
     drop(rt); // the Router owns its own runtime on the engine thread
 
-    let router = Router::spawn(artifacts.clone())?;
+    let router = RouterBuilder::new().spawn(artifacts.clone())?;
 
     // ---- workload: 3 pool-fulls of real requests ------------------------
     let n_requests = 3 * batch;

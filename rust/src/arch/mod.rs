@@ -22,6 +22,9 @@ use crate::config::{DeviceConfig, ModelDims};
 
 /// A full stage-customized accelerator system: prefill + decode + HMT
 /// sharing one device via rapid reconfiguration (~0.3 s on U280).
+/// `Clone` replicates the system per device — multi-engine sharding
+/// instantiates one modeled system per shard.
+#[derive(Clone)]
 pub struct AcceleratorSystem {
     pub prefill: PrefillArch,
     pub decode: DecodeArch,

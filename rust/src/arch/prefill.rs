@@ -36,6 +36,7 @@ impl PrefillConfig {
 }
 
 /// A composed prefill accelerator instance on a device.
+#[derive(Clone)]
 pub struct PrefillArch {
     pub cfg: PrefillConfig,
     pub model: ModelDims,

@@ -169,6 +169,12 @@ pub trait ExecBackend {
 /// lane cannot leak another request's stream and that chunked admission
 /// is stream-identical to blocking admission: the result must equal
 /// [`MockBackend::expected_tokens`] for its own prompt.
+///
+/// `Clone` is cheap (a few small Vecs) and is how a sharded Router
+/// replicates the backend per engine shard: clone a freshly constructed
+/// template once per shard and every shard starts from identical, empty
+/// state.
+#[derive(Clone)]
 pub struct MockBackend {
     spec: BackendSpec,
     /// Prompt fingerprint per occupied lane.
@@ -534,6 +540,13 @@ impl ExecBackend for MockBackend {
 ///
 /// `model_time_s` — what the serve CLI reports as modeled hardware
 /// time — is the max of the two engine clocks.
+///
+/// `Clone` replicates the modeled hardware per shard: each clone keeps
+/// its OWN pair of engine clocks, so in a sharded configuration an
+/// imbalanced placement shows up as one shard's clocks running ahead of
+/// the others' — imbalance costs modeled time, exactly like real
+/// replicated devices.
+#[derive(Clone)]
 pub struct ModeledBackend {
     inner: MockBackend,
     sys: AcceleratorSystem,

@@ -80,6 +80,10 @@ pub struct Engine<B: ExecBackend> {
     policy: PrefillPolicy,
     layout: KvLayout,
     reserve: ReservationPolicy,
+    /// Which Router shard this engine is (0 for an unsharded engine).
+    /// Preemption, admission and page accounting are all local to the
+    /// shard — the id only labels the engine for fan-in and reporting.
+    shard: usize,
 }
 
 impl Engine<PjrtBackend> {
@@ -172,7 +176,20 @@ impl<B: ExecBackend> Engine<B> {
         };
         let metrics = ServeMetrics::with_pages_total(pages_total);
         let reserve = scheduler.reserve();
-        Engine { backend, scheduler, metrics, policy, layout, reserve }
+        Engine { backend, scheduler, metrics, policy, layout, reserve, shard: 0 }
+    }
+
+    /// Tag this engine as shard `shard` of a multi-engine Router
+    /// (builder; the default is 0). Purely a label: every scheduling
+    /// decision stays local to this engine.
+    pub fn with_shard_id(mut self, shard: usize) -> Self {
+        self.shard = shard;
+        self
+    }
+
+    /// The shard id this engine runs as (0 when unsharded).
+    pub fn shard_id(&self) -> usize {
+        self.shard
     }
 
     /// The page-reservation policy actually in effect (after layout
@@ -428,6 +445,15 @@ impl<B: ExecBackend> Engine<B> {
         Ok(completed)
     }
 
+    /// This engine's honest free capacity for placement: free pages
+    /// minus the admission demand already queued on it. Raw free pages
+    /// would double-book a shard whose queue is deep.
+    pub fn placement_free_pages(&self) -> usize {
+        self.scheduler
+            .free_pages()
+            .saturating_sub(self.scheduler.queued_pages())
+    }
+
     /// Serve a whole queue to completion; results in submission order.
     /// Requires an idle engine — interleaved workloads go through
     /// `submit` + `step` (or the `Router`), whose completion routing
@@ -448,4 +474,40 @@ impl<B: ExecBackend> Engine<B> {
         let completed = self.drive(|_| {})?;
         Ok(completed.into_iter().map(|(_, r)| r).collect())
     }
+}
+
+/// Least-loaded-by-free-pages placement over a set of in-process engine
+/// shards: the shard with the most [`Engine::placement_free_pages`]
+/// that can still cover `req`'s admission reservation, lowest shard id
+/// on ties (deterministic). `None` means every shard is page-starved
+/// for this request — the caller spills it to a FIFO overflow queue so
+/// head-of-line semantics stay well-defined.
+///
+/// The threaded [`Router`](super::Router) applies the same rule from
+/// load reports; this function is the single-threaded form the open-loop
+/// harness, the serve CLI and the invariant test suite share.
+pub fn place_shard<B: ExecBackend>(engines: &[Engine<B>], req: &GenRequest)
+    -> Option<usize>
+{
+    most_free(engines.iter().enumerate().filter_map(|(i, e)| {
+        let free = e.placement_free_pages();
+        (free >= e.scheduler.admission_pages(req)).then_some((i, free))
+    }))
+}
+
+/// The selection rule itself, shared by [`place_shard`] and the
+/// threaded Router's coordinator (which scores shards from load reports
+/// rather than live engines): among already-eligible `(shard, free
+/// pages)` candidates, the most free pages — strict `>` so the
+/// lowest-indexed shard wins ties, keeping placement deterministic.
+pub(crate) fn most_free(candidates: impl Iterator<Item = (usize, usize)>)
+    -> Option<usize>
+{
+    let mut best: Option<(usize, usize)> = None; // (free pages, shard)
+    for (shard, free) in candidates {
+        if best.map(|(f, _)| free > f).unwrap_or(true) {
+            best = Some((free, shard));
+        }
+    }
+    best.map(|(_, shard)| shard)
 }

@@ -57,6 +57,26 @@ pub enum ReservationPolicy {
     Lazy,
 }
 
+/// Split a total resource budget (pages, lanes) evenly across `shards`,
+/// earlier shards absorbing the remainder — the per-shard pool geometry
+/// of a sharded Router: N engines serve the SAME total KV memory, each
+/// owning `total/shards` (±1) of it. Errors when the split would leave
+/// a shard empty (a shard with zero pages could never admit anything,
+/// so the configuration is a mistake, not a degenerate case).
+pub fn split_budget(total: usize, shards: usize) -> crate::anyhow::Result<Vec<usize>> {
+    if shards == 0 {
+        return Err(anyhow!("cannot split a budget across 0 shards"));
+    }
+    if total < shards {
+        return Err(anyhow!(
+            "budget of {total} cannot cover {shards} shards (a shard with \
+             nothing to allocate can never admit)"));
+    }
+    let base = total / shards;
+    let extra = total % shards;
+    Ok((0..shards).map(|i| base + usize::from(i < extra)).collect())
+}
+
 /// Geometry + free-list allocator over the shared KV page pool.
 #[derive(Debug, Clone)]
 pub struct KvPool {
@@ -403,6 +423,24 @@ mod tests {
         }
         // fully backed to max_seq: growing again would leak a page
         assert!(kv.grow(9).is_err());
+    }
+
+    #[test]
+    fn split_budget_covers_total_with_remainder_up_front() {
+        assert_eq!(split_budget(40, 2).unwrap(), vec![20, 20]);
+        assert_eq!(split_budget(41, 2).unwrap(), vec![21, 20]);
+        assert_eq!(split_budget(10, 3).unwrap(), vec![4, 3, 3]);
+        assert_eq!(split_budget(3, 3).unwrap(), vec![1, 1, 1]);
+        assert_eq!(split_budget(7, 1).unwrap(), vec![7]);
+        // every split sums back to the total
+        for (total, shards) in [(17usize, 4usize), (24, 5), (100, 7)] {
+            let parts = split_budget(total, shards).unwrap();
+            assert_eq!(parts.iter().sum::<usize>(), total);
+            assert_eq!(parts.len(), shards);
+            assert!(parts.iter().all(|&p| p > 0));
+        }
+        assert!(split_budget(2, 3).is_err(), "a shard would get 0 pages");
+        assert!(split_budget(4, 0).is_err());
     }
 
     #[test]

@@ -1,14 +1,35 @@
-//! Serving coordinator (L3 request path): router → scheduler → engine →
-//! execution backend.
+//! Serving coordinator (L3 request path): router → shard placement →
+//! scheduler → engine → execution backend.
 //!
-//! The engine owns the single-threaded PJRT runtime behind an
-//! [`ExecBackend`]; the [`Router`] exposes it to async callers over std
-//! channels (the `xla` client is `Rc`-based, so all execution stays on
-//! one dedicated thread). The engine thread runs an event loop: it
-//! blocks for commands while idle and interleaves command handling with
-//! [`Engine::step`] iterations while requests are in flight, so work
-//! submitted mid-flight is backfilled into freed decode lanes
-//! (iteration-level continuous batching — DESIGN.md §7).
+//! The [`Router`] is a front-end over **N engine shards** (DESIGN.md
+//! §11). Each shard owns its own engine thread — [`Engine`],
+//! [`Scheduler`], `KvPool` and [`ExecBackend`] instance — so shards
+//! model replicated devices: separate artifact sets, separate KV
+//! memory, separate (modeled) hardware clocks. All execution state
+//! stays on its shard thread (the `xla` client is `Rc`-based), and
+//! per-shard preemption, admission and page accounting never cross
+//! shards.
+//!
+//! A coordinator thread fans caller commands out and shard results in:
+//!
+//! * **Placement** is least-loaded-by-free-pages: an admitted request
+//!   goes to the shard with the most estimated-free pages (free minus
+//!   queued demand, from each shard's load reports). When EVERY shard
+//!   is page-starved for the request it spills to a shared FIFO
+//!   overflow queue, drained head-first as shards free pages — so
+//!   head-of-line semantics stay well-defined across the pool exactly
+//!   as they are within one scheduler.
+//! * **Fan-in** preserves per-request ordering: a request lives on one
+//!   shard for its whole life (preemption requeues it on the SAME
+//!   shard), shard→coordinator channels are FIFO, and the coordinator
+//!   forwards events in arrival order — so every subscriber sees each
+//!   request's token stream in order and exactly once. Completions are
+//!   returned in global submission order via a per-shard sequence map.
+//!
+//! With one shard the Router degenerates to the old single-engine
+//! request path: same engine loop, same scheduler, same streams —
+//! `tests/sharding.rs` pins `shards(1)` against the unsharded engine
+//! bit for bit across the whole policy matrix.
 
 mod backend;
 mod engine;
@@ -20,34 +41,122 @@ mod scheduler;
 
 pub use backend::{BackendSpec, ExecBackend, LaneStep, MockBackend, ModeledBackend,
                   PagedCaps, PagedStep, PjrtBackend, PrefillSlot};
-pub use engine::{Engine, KvLayout, StepReport, TokenEvent};
+pub use engine::{place_shard, Engine, KvLayout, StepReport, TokenEvent};
 pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
-pub use kv::{KvPool, LaneKv, ReservationPolicy};
-pub use openloop::{run_open_loop, ArrivalProcess, OpenLoopConfig, OpenLoopStats,
-                   PagedPoolConfig};
+pub use kv::{split_budget, KvPool, LaneKv, ReservationPolicy};
+pub use openloop::{run_open_loop, ArrivalProcess, OpenLoopConfig, OpenLoopShardStats,
+                   OpenLoopStats, PagedPoolConfig};
 pub use request::{FinishReason, GenRequest, GenResult, ServeMetrics};
 pub use scheduler::{ChunkPlan, Completion, GrowthReport, PageStats, Preempted,
                     PrefillPolicy, RequestPhase, Scheduler};
 
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{mpsc, Arc, Weak};
 use std::thread::JoinHandle;
 
 use crate::anyhow::{anyhow, Error, Result};
 
+// ---------------------------------------------------------------------------
+// Caller-facing commands and the shard protocol
+// ---------------------------------------------------------------------------
+
 enum Cmd {
     /// Submit a queue and block until all of it completes (results in
     /// submission order).
     Generate(Vec<GenRequest>, mpsc::Sender<Result<Vec<GenResult>>>),
-    /// Enqueue without waiting; the engine backfills lanes as they free.
+    /// Enqueue without waiting; shards backfill lanes as they free.
     Submit(Vec<GenRequest>, mpsc::Sender<Result<()>>),
-    /// Block until the engine is idle; returns everything completed
-    /// since the last drain, in submission order. If a backend error
-    /// aborted the window, the drain returns that error and the whole
-    /// window is void (no partial results — resubmit).
+    /// Block until every shard is idle and the overflow queue is empty;
+    /// returns everything completed since the last drain, in global
+    /// submission order. A shard error voids the whole window (no
+    /// partial results — resubmit).
     Drain(mpsc::Sender<Result<Vec<GenResult>>>),
+    /// Pool-level metrics: per-shard metrics merged by pooling raw
+    /// samples ([`ServeMetrics::merge`]).
     Metrics(mpsc::Sender<ServeMetrics>),
+    /// Per-shard metrics breakdown, in shard order.
+    ShardMetrics(mpsc::Sender<Vec<ServeMetrics>>),
     Subscribe(Subscriber),
     Shutdown,
+}
+
+/// Messages on the coordinator's single inbox: caller commands and
+/// shard reports share one channel, so the coordinator never has to
+/// poll two receivers.
+enum FrontMsg {
+    Cmd(Cmd),
+    Shard(ShardMsg),
+}
+
+/// Coordinator → shard commands.
+enum ShardCmd {
+    Submit(Vec<GenRequest>),
+    Metrics(mpsc::Sender<ServeMetrics>),
+    /// Drop everything queued and in flight (another shard failed; the
+    /// window is void, matching single-engine abort semantics).
+    Abort,
+    Shutdown,
+}
+
+/// A shard's load snapshot, attached to every report so the placement
+/// layer always balances on fresh numbers.
+#[derive(Debug, Clone, Copy)]
+struct ShardLoad {
+    /// Free pages minus queued admission demand — the honest headroom.
+    free_pages: usize,
+    has_work: bool,
+    /// Requests this shard has accepted so far; lets the coordinator
+    /// reconcile its in-flight placements against this report.
+    submits_seen: u64,
+}
+
+/// Shard → coordinator messages (fan-in).
+enum ShardMsg {
+    /// One engine tick's output (or an idle/load-only update when
+    /// `events` and `completed` are empty). Completions carry the
+    /// SHARD-LOCAL sequence number; the coordinator maps them back to
+    /// global submission order.
+    Report {
+        shard: usize,
+        events: Vec<TokenEvent>,
+        completed: Vec<Completion>,
+        load: ShardLoad,
+    },
+    /// The shard's engine failed; it aborted its own work already.
+    /// `fatal` means the shard THREAD is gone (panic) — the coordinator
+    /// must write the shard off entirely, not just void the window.
+    Error {
+        shard: usize,
+        error: Error,
+        load: ShardLoad,
+        fatal: bool,
+    },
+}
+
+/// The pool geometry a shard actually runs (after capability coercion);
+/// every shard of a Router must agree or placement math would lie.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ShardSpec {
+    lanes: usize,
+    prefill_len: usize,
+    max_seq: usize,
+    page_len: usize,
+    pages: usize,
+    paged: bool,
+    reserve: ReservationPolicy,
+}
+
+fn spec_of<B: ExecBackend>(engine: &Engine<B>) -> ShardSpec {
+    ShardSpec {
+        lanes: engine.scheduler.lanes(),
+        prefill_len: engine.scheduler.prefill_len(),
+        max_seq: engine.scheduler.max_seq(),
+        page_len: engine.scheduler.page_len(),
+        pages: engine.scheduler.total_pages(),
+        paged: engine.scheduler.is_paged(),
+        reserve: engine.reserve(),
+    }
 }
 
 /// The engine thread's handle on one token-stream subscriber: the event
@@ -62,8 +171,8 @@ struct Subscriber {
 
 /// A token-event subscription handed out by [`Router::subscribe`].
 /// Derefs to the underlying receiver (`recv`/`try_iter`/…); dropping it
-/// unsubscribes — the engine thread prunes the dead entry on its next
-/// tick, events or not.
+/// unsubscribes — the coordinator prunes the dead entry on its next
+/// report, events or not.
 pub struct TokenSubscription {
     rx: mpsc::Receiver<TokenEvent>,
     _live: Arc<()>,
@@ -77,113 +186,307 @@ impl std::ops::Deref for TokenSubscription {
     }
 }
 
-/// Thread-backed request router: spawn once, submit from anywhere.
+// ---------------------------------------------------------------------------
+// RouterBuilder
+// ---------------------------------------------------------------------------
+
+/// Builder for a [`Router`]: policy, cache layout, page-reservation
+/// policy and shard count in one place (the old
+/// `spawn`/`spawn_with_policy`/`spawn_with_options` parameter ladder,
+/// collapsed).
+///
+/// ```no_run
+/// # use flexllm::coordinator::{PrefillPolicy, RouterBuilder};
+/// # fn run() -> flexllm::anyhow::Result<()> {
+/// let router = RouterBuilder::new()
+///     .policy(PrefillPolicy::chunked(32))
+///     .shards(2)
+///     .spawn("artifacts".to_string())?;
+/// # Ok(()) }
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct RouterBuilder {
+    policy: PrefillPolicy,
+    layout: KvLayout,
+    reserve: ReservationPolicy,
+    shards: usize,
+}
+
+impl Default for RouterBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RouterBuilder {
+    /// Defaults: `Blocking` admission, dense layout, up-front
+    /// reservation, one shard — the PR 1 Router, exactly.
+    pub fn new() -> Self {
+        RouterBuilder {
+            policy: PrefillPolicy::Blocking,
+            layout: KvLayout::Dense,
+            reserve: ReservationPolicy::Upfront,
+            shards: 1,
+        }
+    }
+
+    /// Admission prefill policy (coerced per shard to what the backend
+    /// can execute — see [`Engine::with_reservation`]).
+    pub fn policy(mut self, policy: PrefillPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// KV cache layout (coerced per shard to backend capabilities).
+    pub fn layout(mut self, layout: KvLayout) -> Self {
+        self.layout = layout;
+        self
+    }
+
+    /// Page-reservation policy (coerced to `Upfront` on a dense pool).
+    pub fn reserve(mut self, reserve: ReservationPolicy) -> Self {
+        self.reserve = reserve;
+        self
+    }
+
+    /// Number of engine shards (clamped to ≥ 1). Each shard gets its
+    /// own engine thread and backend instance from the spawn factory.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Spawn over the AOT PJRT artifacts: every shard opens its own
+    /// [`Runtime`](crate::runtime::Runtime) on `artifact_dir` (one
+    /// artifact set per device — the manifest fixes each shard's pool
+    /// geometry, so shards are uniform by construction).
+    pub fn spawn(self, artifact_dir: String) -> Result<Router> {
+        self.spawn_with(move |_shard| {
+            Ok(PjrtBackend::new(crate::runtime::Runtime::open(&artifact_dir)?))
+        })
+    }
+
+    /// Spawn over arbitrary backends: `factory(shard)` runs ON the
+    /// shard's own thread (backends need not be `Send` — the PJRT
+    /// client is `Rc`-based), once per shard. Every shard must coerce
+    /// to the same policy/layout/pool geometry or the spawn fails: the
+    /// placement layer balances free pages across shards, which is
+    /// only meaningful when a page means the same thing everywhere.
+    pub fn spawn_with<B, F>(self, factory: F) -> Result<Router>
+    where
+        B: ExecBackend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        let RouterBuilder { policy, layout, reserve, shards } = self;
+        let shard_count = shards.max(1);
+        let (tx, rx) = mpsc::channel::<FrontMsg>();
+        let factory = Arc::new(factory);
+        let mut states: Vec<ShardState> = Vec::with_capacity(shard_count);
+        let mut specs: Vec<ShardSpec> = Vec::with_capacity(shard_count);
+        for shard in 0..shard_count {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<ShardCmd>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<ShardSpec>>();
+            let coord = tx.clone();
+            let fac = Arc::clone(&factory);
+            let spawned = std::thread::Builder::new()
+                .name(format!("flexllm-shard-{shard}"))
+                .spawn(move || {
+                    let engine = match (*fac)(shard) {
+                        Ok(backend) => {
+                            Engine::with_reservation(backend, policy, layout, reserve)
+                                .with_shard_id(shard)
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    let _ = ready_tx.send(Ok(spec_of(&engine)));
+                    shard_loop(shard, engine, cmd_rx, coord);
+                })
+                .map_err(|e| anyhow!("spawning shard {shard} thread: {e}"));
+            let handle = match spawned {
+                Ok(h) => h,
+                Err(e) => {
+                    shutdown_states(&mut states);
+                    return Err(e);
+                }
+            };
+            match ready_rx.recv() {
+                Ok(Ok(spec)) => {
+                    specs.push(spec);
+                    states.push(ShardState::new(cmd_tx, handle, spec.pages));
+                }
+                Ok(Err(e)) => {
+                    let _ = handle.join();
+                    shutdown_states(&mut states);
+                    return Err(e);
+                }
+                Err(_) => {
+                    let _ = handle.join();
+                    shutdown_states(&mut states);
+                    return Err(anyhow!("shard {shard} died during startup"));
+                }
+            }
+        }
+        if specs.windows(2).any(|w| w[0] != w[1]) {
+            shutdown_states(&mut states);
+            return Err(anyhow!(
+                "engine shards are not uniform: every shard must coerce to the \
+                 same policy/layout/pool geometry ({:?} vs {:?})",
+                specs[0], specs.iter().find(|s| **s != specs[0]).unwrap()));
+        }
+        // the coordinator's placement model: same geometry as every
+        // shard, used only for validation and reservation math — so the
+        // admission rules can never diverge from the schedulers'
+        let spec = specs[0];
+        let model = if spec.paged {
+            Scheduler::paged(spec.lanes, spec.prefill_len, spec.max_seq,
+                             spec.page_len, spec.pages)
+                .with_reserve(spec.reserve)
+        } else {
+            Scheduler::new(spec.lanes, spec.prefill_len, spec.max_seq, false)
+        };
+        let spawned = std::thread::Builder::new()
+            .name("flexllm-router".into())
+            .spawn(move || coordinator_loop(rx, states, model));
+        match spawned {
+            Ok(handle) => Ok(Router { tx, handle: Some(handle), shards: shard_count }),
+            Err(e) => Err(anyhow!("spawning router thread: {e}")),
+        }
+    }
+}
+
+fn shutdown_states(states: &mut [ShardState]) {
+    for st in states.iter() {
+        let _ = st.tx.send(ShardCmd::Shutdown);
+    }
+    for st in states.iter_mut() {
+        if let Some(h) = st.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router (public surface)
+// ---------------------------------------------------------------------------
+
+/// Thread-backed request router over N engine shards: spawn once,
+/// submit from anywhere. Build with [`RouterBuilder`].
 pub struct Router {
-    tx: mpsc::Sender<Cmd>,
+    tx: mpsc::Sender<FrontMsg>,
     handle: Option<JoinHandle<()>>,
+    shards: usize,
 }
 
 impl Router {
-    /// Spawn the engine thread over the artifact directory with the
+    /// Spawn a single-shard engine over the artifact directory with the
     /// default `Blocking` admission policy.
+    #[deprecated(note = "use RouterBuilder::new().spawn(artifact_dir)")]
     pub fn spawn(artifact_dir: String) -> Result<Self> {
-        Self::spawn_with_policy(artifact_dir, PrefillPolicy::Blocking)
+        RouterBuilder::new().spawn(artifact_dir)
     }
 
-    /// Spawn the engine thread with an explicit admission policy over
-    /// the dense cache layout.
+    /// Spawn a single-shard engine with an explicit admission policy
+    /// over the dense cache layout.
+    #[deprecated(note = "use RouterBuilder::new().policy(..).spawn(artifact_dir)")]
     pub fn spawn_with_policy(artifact_dir: String, policy: PrefillPolicy) -> Result<Self> {
-        Self::spawn_with_options(artifact_dir, policy, KvLayout::Dense,
-                                 ReservationPolicy::Upfront)
+        RouterBuilder::new().policy(policy).spawn(artifact_dir)
     }
 
-    /// Spawn the engine thread with an explicit admission policy, cache
-    /// layout and page-reservation policy (all coerced to the artifact
-    /// set's capabilities — see [`Engine::with_layout`]).
+    /// Spawn a single-shard engine with an explicit admission policy,
+    /// cache layout and page-reservation policy.
+    #[deprecated(note = "use RouterBuilder::new().policy(..).layout(..).reserve(..)\
+                         .spawn(artifact_dir)")]
     pub fn spawn_with_options(artifact_dir: String, policy: PrefillPolicy,
                               layout: KvLayout, reserve: ReservationPolicy)
         -> Result<Self>
     {
-        let (tx, rx) = mpsc::channel::<Cmd>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("flexllm-engine".into())
-            .spawn(move || {
-                let engine = match crate::runtime::Runtime::open(&artifact_dir) {
-                    Ok(rt) => {
-                        let _ = ready_tx.send(Ok(()));
-                        Engine::with_reservation(PjrtBackend::new(rt), policy, layout,
-                                                 reserve)
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                engine_loop(engine, rx);
-            })
-            .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Router { tx, handle: Some(handle) })
+        RouterBuilder::new()
+            .policy(policy)
+            .layout(layout)
+            .reserve(reserve)
+            .spawn(artifact_dir)
+    }
+
+    /// Number of engine shards behind this router.
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// Submit a queue of requests and wait for all results.
     pub fn generate(&self, queue: Vec<GenRequest>) -> Result<Vec<GenResult>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
-            .send(Cmd::Generate(queue, reply_tx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+            .send(FrontMsg::Cmd(Cmd::Generate(queue, reply_tx)))
+            .map_err(|_| anyhow!("router thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("router thread gone"))?
     }
 
     /// Enqueue requests without waiting (continuous-batching ingestion).
+    /// Placement happens immediately: each request goes to the shard
+    /// with the most free pages, or to the FIFO overflow queue when
+    /// every shard is page-starved.
     pub fn submit(&self, queue: Vec<GenRequest>) -> Result<()> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
-            .send(Cmd::Submit(queue, reply_tx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+            .send(FrontMsg::Cmd(Cmd::Submit(queue, reply_tx)))
+            .map_err(|_| anyhow!("router thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("router thread gone"))?
     }
 
-    /// Wait for the engine to go idle; returns everything completed
-    /// since the last drain, in submission order. A backend error voids
-    /// the whole window: the error is returned and no partial results
-    /// are retained — resubmit anything that mattered.
+    /// Wait for every shard to go idle; returns everything completed
+    /// since the last drain, in global submission order. A shard error
+    /// voids the whole window: the error is returned and no partial
+    /// results are retained — resubmit anything that mattered.
     pub fn drain(&self) -> Result<Vec<GenResult>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
-            .send(Cmd::Drain(reply_tx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+            .send(FrontMsg::Cmd(Cmd::Drain(reply_tx)))
+            .map_err(|_| anyhow!("router thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("router thread gone"))?
     }
 
-    /// Receive every token the engine produces from now on. Dropping
-    /// the subscription unsubscribes.
+    /// Receive every token any shard produces from now on. Per-request
+    /// streams arrive in order (a request lives on one shard; fan-in
+    /// preserves its channel order). Dropping the subscription
+    /// unsubscribes.
     pub fn subscribe(&self) -> Result<TokenSubscription> {
         let (event_tx, event_rx) = mpsc::channel();
         let live = Arc::new(());
         self.tx
-            .send(Cmd::Subscribe(Subscriber { tx: event_tx,
-                                              live: Arc::downgrade(&live) }))
-            .map_err(|_| anyhow!("engine thread gone"))?;
+            .send(FrontMsg::Cmd(Cmd::Subscribe(Subscriber {
+                tx: event_tx,
+                live: Arc::downgrade(&live),
+            })))
+            .map_err(|_| anyhow!("router thread gone"))?;
         Ok(TokenSubscription { rx: event_rx, _live: live })
     }
 
-    /// Snapshot aggregate serving metrics.
+    /// Snapshot pool-level serving metrics: per-shard metrics merged by
+    /// pooling raw samples (never averaging percentiles).
     pub fn metrics(&self) -> Result<ServeMetrics> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
-            .send(Cmd::Metrics(reply_tx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        reply_rx.recv().map_err(|_| anyhow!("engine thread gone"))
+            .send(FrontMsg::Cmd(Cmd::Metrics(reply_tx)))
+            .map_err(|_| anyhow!("router thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("router thread gone"))
+    }
+
+    /// Per-shard metrics breakdown, in shard order.
+    pub fn shard_metrics(&self) -> Result<Vec<ServeMetrics>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(FrontMsg::Cmd(Cmd::ShardMetrics(reply_tx)))
+            .map_err(|_| anyhow!("router thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("router thread gone"))
     }
 }
 
 impl Drop for Router {
     fn drop(&mut self) {
-        let _ = self.tx.send(Cmd::Shutdown);
+        let _ = self.tx.send(FrontMsg::Cmd(Cmd::Shutdown));
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -191,55 +494,101 @@ impl Drop for Router {
 }
 
 // ---------------------------------------------------------------------------
-// Engine thread event loop
+// Shard engine thread
 // ---------------------------------------------------------------------------
 
-fn engine_loop<B: ExecBackend>(mut engine: Engine<B>, rx: mpsc::Receiver<Cmd>) {
-    let mut subscribers: Vec<Subscriber> = Vec::new();
-    // completions buffered for the next Drain, and the first error hit
-    // while stepping submit-mode work
-    let mut completed: Vec<Completion> = Vec::new();
-    let mut pending_err: Option<Error> = None;
-    let mut drain_waiters: Vec<mpsc::Sender<Result<Vec<GenResult>>>> = Vec::new();
+fn shard_load<B: ExecBackend>(engine: &Engine<B>, submits_seen: u64) -> ShardLoad {
+    ShardLoad {
+        free_pages: engine.placement_free_pages(),
+        has_work: engine.has_work(),
+        submits_seen,
+    }
+}
 
-    loop {
-        // idle: settle drains, then block for the next command
-        if !engine.has_work() {
-            for tx in drain_waiters.drain(..) {
-                let reply = match pending_err.take() {
-                    // an error voids the whole drain window — drop the
-                    // pre-error completions too, so a retry of the lost
-                    // requests can never produce duplicates later
-                    Some(e) => {
-                        completed.clear();
-                        Err(e)
-                    }
-                    None => {
-                        completed.sort_by_key(|(seq, _)| *seq);
-                        Ok(completed.drain(..).map(|(_, r)| r).collect())
-                    }
-                };
-                let _ = tx.send(reply);
+enum ShardFlow {
+    Continue,
+    Shutdown,
+}
+
+fn handle_shard_cmd<B: ExecBackend>(
+    cmd: ShardCmd,
+    engine: &mut Engine<B>,
+    submits_seen: &mut u64,
+    shard: usize,
+    coord: &mpsc::Sender<FrontMsg>,
+) -> ShardFlow {
+    match cmd {
+        ShardCmd::Submit(queue) => {
+            for req in queue {
+                *submits_seen += 1;
+                if let Err(e) = engine.scheduler.submit(req) {
+                    // the coordinator validates against the same
+                    // geometry before placing, so this is a desync —
+                    // surface it as a shard failure, not a silent drop
+                    engine.scheduler.abort_all();
+                    let _ = coord.send(FrontMsg::Shard(ShardMsg::Error {
+                        shard,
+                        error: e,
+                        load: shard_load(engine, *submits_seen),
+                        fatal: false,
+                    }));
+                }
             }
+        }
+        ShardCmd::Metrics(reply) => {
+            let _ = reply.send(engine.metrics.clone());
+        }
+        ShardCmd::Abort => engine.scheduler.abort_all(),
+        ShardCmd::Shutdown => return ShardFlow::Shutdown,
+    }
+    ShardFlow::Continue
+}
+
+/// One shard's event loop: block for commands while idle, interleave
+/// command handling with [`Engine::step`] while requests are in flight
+/// (iteration-level continuous batching), and report every tick's
+/// events, completions and load to the coordinator.
+fn shard_loop<B: ExecBackend>(
+    shard: usize,
+    mut engine: Engine<B>,
+    rx: mpsc::Receiver<ShardCmd>,
+    coord: mpsc::Sender<FrontMsg>,
+) {
+    let mut submits_seen: u64 = 0;
+    // announce the starting capacity so placement begins from truth
+    if coord
+        .send(FrontMsg::Shard(ShardMsg::Report {
+            shard,
+            events: Vec::new(),
+            completed: Vec::new(),
+            load: shard_load(&engine, submits_seen),
+        }))
+        .is_err()
+    {
+        return;
+    }
+    loop {
+        if !engine.has_work() {
             match rx.recv() {
                 Ok(cmd) => {
-                    if handle_cmd(cmd, &mut engine, &mut subscribers,
-                                  &mut drain_waiters, &mut completed,
-                                  &mut pending_err) {
+                    if let ShardFlow::Shutdown =
+                        handle_shard_cmd(cmd, &mut engine, &mut submits_seen, shard,
+                                         &coord)
+                    {
                         return;
                     }
                 }
                 Err(_) => return,
             }
         }
-
-        // busy: consume whatever has queued up without blocking
+        // consume whatever else has queued up without blocking
         loop {
             match rx.try_recv() {
                 Ok(cmd) => {
-                    if handle_cmd(cmd, &mut engine, &mut subscribers,
-                                  &mut drain_waiters, &mut completed,
-                                  &mut pending_err) {
+                    if let ShardFlow::Shutdown =
+                        handle_shard_cmd(cmd, &mut engine, &mut submits_seen, shard,
+                                         &coord)
+                    {
                         return;
                     }
                 }
@@ -247,110 +596,507 @@ fn engine_loop<B: ExecBackend>(mut engine: Engine<B>, rx: mpsc::Receiver<Cmd>) {
                 Err(mpsc::TryRecvError::Disconnected) => return,
             }
         }
-
         if engine.has_work() {
-            match engine.step() {
-                Ok(report) => {
-                    broadcast(&mut subscribers, &report);
-                    completed.extend(report.completed);
+            // a panic inside step (a broken scheduler invariant) must
+            // not strand the coordinator's drain/generate callers: turn
+            // it into a FATAL shard error and exit the thread — the old
+            // single-engine Router surfaced the same event as "engine
+            // thread gone"
+            match catch_unwind(AssertUnwindSafe(|| engine.step())) {
+                Ok(Ok(report)) => {
+                    if coord
+                        .send(FrontMsg::Shard(ShardMsg::Report {
+                            shard,
+                            events: report.events,
+                            completed: report.completed,
+                            load: shard_load(&engine, submits_seen),
+                        }))
+                        .is_err()
+                    {
+                        return;
+                    }
                 }
-                Err(e) => {
+                Ok(Err(e)) => {
                     engine.scheduler.abort_all();
-                    // keep the FIRST error; later ones are usually fallout
-                    pending_err.get_or_insert(e);
+                    if coord
+                        .send(FrontMsg::Shard(ShardMsg::Error {
+                            shard,
+                            error: e,
+                            load: shard_load(&engine, submits_seen),
+                            fatal: false,
+                        }))
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+                Err(_) => {
+                    let _ = coord.send(FrontMsg::Shard(ShardMsg::Error {
+                        shard,
+                        error: anyhow!("shard {shard} engine panicked during step"),
+                        load: ShardLoad {
+                            free_pages: 0,
+                            has_work: false,
+                            submits_seen,
+                        },
+                        fatal: true,
+                    }));
+                    return;
                 }
             }
-        }
-    }
-}
-
-/// Handle one command; returns true on shutdown. `Generate` runs the
-/// queue to completion inline (blocking semantics), isolating its
-/// completions from any submit-mode work already in flight.
-fn handle_cmd<B: ExecBackend>(
-    cmd: Cmd,
-    engine: &mut Engine<B>,
-    subscribers: &mut Vec<Subscriber>,
-    drain_waiters: &mut Vec<mpsc::Sender<Result<Vec<GenResult>>>>,
-    completed: &mut Vec<Completion>,
-    pending_err: &mut Option<Error>,
-) -> bool {
-    match cmd {
-        Cmd::Generate(queue, reply) => {
-            let _ = reply.send(run_generate(engine, queue, subscribers, completed,
-                                            pending_err));
-        }
-        Cmd::Submit(queue, reply) => {
-            let outcome = (|| -> Result<()> {
-                for r in &queue {
-                    engine.scheduler.validate(r)?;
-                }
-                for r in queue {
-                    engine.scheduler.submit(r)?;
-                }
-                Ok(())
-            })();
-            let _ = reply.send(outcome);
-        }
-        Cmd::Drain(reply) => drain_waiters.push(reply),
-        Cmd::Metrics(reply) => {
-            let _ = reply.send(engine.metrics.clone());
-        }
-        Cmd::Subscribe(sub) => subscribers.push(sub),
-        Cmd::Shutdown => return true,
-    }
-    false
-}
-
-fn run_generate<B: ExecBackend>(
-    engine: &mut Engine<B>,
-    queue: Vec<GenRequest>,
-    subscribers: &mut Vec<Subscriber>,
-    completed: &mut Vec<Completion>,
-    pending_err: &mut Option<Error>,
-) -> Result<Vec<GenResult>> {
-    for r in &queue {
-        engine.scheduler.validate(r)?;
-    }
-    // submit-mode work already in flight gets aborted too if we error
-    // below; remember so the next drain() hears about it
-    let had_foreign_work = engine.has_work();
-    let watermark = engine.scheduler.seq_watermark();
-    for r in queue {
-        engine.scheduler.submit(r)?;
-    }
-    let all = match engine.drive(|report| broadcast(subscribers, report)) {
-        Ok(all) => all,
-        Err(e) => {
-            if had_foreign_work && pending_err.is_none() {
-                *pending_err = Some(anyhow!("aborted by a failed generate call: {e:#}"));
-            }
-            return Err(e);
-        }
-    };
-    // completions below the watermark belong to earlier submit-mode
-    // requests and go to the drain buffer; generate returns its own
-    let mut done = Vec::new();
-    for c in all {
-        if c.0 >= watermark {
-            done.push(c.1);
         } else {
-            completed.push(c);
+            // commands were handled but produced no work (Abort, or a
+            // Metrics poke): publish the load so drains and placement
+            // see the fresh idle state
+            if coord
+                .send(FrontMsg::Shard(ShardMsg::Report {
+                    shard,
+                    events: Vec::new(),
+                    completed: Vec::new(),
+                    load: shard_load(&engine, submits_seen),
+                }))
+                .is_err()
+            {
+                return;
+            }
         }
     }
-    Ok(done)
 }
 
-/// Fan one tick's events out to every live subscriber, pruning dead
-/// ones UNCONDITIONALLY. The previous `all(.. send ..)` predicate was
-/// vacuously true on event-less ticks, so a long-lived Router whose
-/// clients came and went accumulated hung-up senders forever; the
-/// liveness probe catches a dropped [`TokenSubscription`] whether or
-/// not this tick produced anything to send.
-fn broadcast(subscribers: &mut Vec<Subscriber>, report: &StepReport) {
+// ---------------------------------------------------------------------------
+// Coordinator thread
+// ---------------------------------------------------------------------------
+
+/// Coordinator-side view of one shard.
+struct ShardState {
+    tx: mpsc::Sender<ShardCmd>,
+    handle: Option<JoinHandle<()>>,
+    /// Free-page estimate from the last load report.
+    base_free: usize,
+    /// Submissions the last report reflects.
+    reported_seen: u64,
+    /// Submissions dispatched to this shard.
+    sent: u64,
+    /// Admission reservations dispatched but not yet reflected in a
+    /// load report: (submission index, pages).
+    pending_pages: VecDeque<(u64, usize)>,
+    has_work: bool,
+    dead: bool,
+    /// Global submission seq by shard-local seq, for requests whose
+    /// completion has not yet fanned in (entries are removed as they
+    /// complete — and cleared wholesale when a failure voids the window
+    /// — so the map stays bounded by in-flight work; per-shard
+    /// completions are NOT in submission order, different budgets
+    /// retire at different times, hence a map rather than a prefix).
+    seq_map: HashMap<u64, u64>,
+    /// Last metrics snapshot observed from this shard, so a shard that
+    /// later dies still contributes its served history to the pool
+    /// view instead of silently zeroing out.
+    last_metrics: ServeMetrics,
+}
+
+impl ShardState {
+    fn new(tx: mpsc::Sender<ShardCmd>, handle: JoinHandle<()>, pages: usize) -> Self {
+        ShardState {
+            tx,
+            handle: Some(handle),
+            base_free: pages,
+            reported_seen: 0,
+            sent: 0,
+            pending_pages: VecDeque::new(),
+            has_work: false,
+            dead: false,
+            seq_map: HashMap::new(),
+            last_metrics: ServeMetrics::default(),
+        }
+    }
+
+    /// Estimated free pages: the last report minus everything placed
+    /// since. The estimate can only be OPTIMISTIC in a narrow race
+    /// window (a report in flight while a placement lands); the cost is
+    /// a request landing in a fuller shard's FIFO queue, never a lost
+    /// or duplicated request.
+    fn est_free(&self) -> usize {
+        let pending: usize = self.pending_pages.iter().map(|&(_, p)| p).sum();
+        self.base_free.saturating_sub(pending)
+    }
+
+    /// Idle = no in-flight work AND every dispatched request reflected.
+    fn idle(&self) -> bool {
+        self.dead || (!self.has_work && self.reported_seen == self.sent)
+    }
+}
+
+/// A blocked `generate` call: the contiguous global-seq window it
+/// submitted, the results collected so far, and its reply channel.
+struct GenerateWaiter {
+    start: u64,
+    end: u64,
+    got: Vec<(u64, GenResult)>,
+    reply: mpsc::Sender<Result<Vec<GenResult>>>,
+}
+
+struct Coordinator {
+    shards: Vec<ShardState>,
+    /// Placement model: a scheduler with the shards' exact geometry,
+    /// used only for validation and reservation math.
+    model: Scheduler,
+    /// Requests no shard can currently take, FIFO with head-of-line
+    /// blocking (global seq, request).
+    overflow: VecDeque<(u64, GenRequest)>,
+    next_seq: u64,
+    completed: Vec<(u64, GenResult)>,
+    /// Submit-mode requests placed but not yet completed. A shard
+    /// failure poisons the drain window ONLY when such work existed —
+    /// a failure whose only victims were `generate` calls is delivered
+    /// through their replies, and the next drain stays clean (the
+    /// single-engine Router's `had_foreign_work` rule).
+    submit_outstanding: usize,
+    /// Whether any window was ever voided by a shard failure. Once
+    /// true, a completion whose seq-map entry is gone is a voided
+    /// window's straggler (its bookkeeping was cleared) and is dropped;
+    /// before any failure it can only be a duplicate, which poisons.
+    ever_voided: bool,
+    pending_err: Option<Error>,
+    drain_waiters: Vec<mpsc::Sender<Result<Vec<GenResult>>>>,
+    generates: Vec<GenerateWaiter>,
+    subscribers: Vec<Subscriber>,
+}
+
+fn coordinator_loop(rx: mpsc::Receiver<FrontMsg>, shards: Vec<ShardState>,
+                    model: Scheduler) {
+    let mut c = Coordinator {
+        shards,
+        model,
+        overflow: VecDeque::new(),
+        next_seq: 0,
+        completed: Vec::new(),
+        submit_outstanding: 0,
+        ever_voided: false,
+        pending_err: None,
+        drain_waiters: Vec::new(),
+        generates: Vec::new(),
+        subscribers: Vec::new(),
+    };
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        match msg {
+            FrontMsg::Cmd(cmd) => {
+                if c.handle_cmd(cmd) {
+                    break;
+                }
+            }
+            FrontMsg::Shard(msg) => c.handle_shard(msg),
+        }
+        c.settle_drains();
+    }
+    shutdown_states(&mut c.shards);
+}
+
+impl Coordinator {
+    /// Handle one caller command; returns true on shutdown.
+    fn handle_cmd(&mut self, cmd: Cmd) -> bool {
+        match cmd {
+            Cmd::Generate(queue, reply) => {
+                if let Err(e) = self.validate_all(&queue) {
+                    let _ = reply.send(Err(e));
+                    return false;
+                }
+                // refuse BEFORE placing: a generate on a poisoned window
+                // must not execute at all, or its orphan results would
+                // leak into a later drain while the caller resubmits
+                if self.pending_err.is_some() {
+                    let _ = reply.send(Err(anyhow!(
+                        "generate refused: an earlier shard failure voided the \
+                         window; drain and resubmit")));
+                    return false;
+                }
+                let start = self.next_seq;
+                for req in queue {
+                    self.place(req);
+                }
+                let end = self.next_seq;
+                if self.pending_err.is_some() {
+                    // a shard died DURING placement: fail_window already
+                    // aborted every shard, so nothing placed here runs
+                    let _ = reply.send(Err(anyhow!(
+                        "generate voided by a shard failure; drain and resubmit")));
+                } else if start == end {
+                    let _ = reply.send(Ok(Vec::new()));
+                } else {
+                    self.generates.push(GenerateWaiter {
+                        start,
+                        end,
+                        got: Vec::new(),
+                        reply,
+                    });
+                }
+            }
+            Cmd::Submit(queue, reply) => {
+                let outcome = self.validate_all(&queue);
+                if outcome.is_ok() {
+                    self.submit_outstanding += queue.len();
+                    for req in queue {
+                        self.place(req);
+                    }
+                }
+                let _ = reply.send(outcome);
+            }
+            Cmd::Drain(reply) => self.drain_waiters.push(reply),
+            Cmd::Metrics(reply) => {
+                let per = self.collect_metrics();
+                let _ = reply.send(ServeMetrics::merge(&per));
+            }
+            Cmd::ShardMetrics(reply) => {
+                let _ = reply.send(self.collect_metrics());
+            }
+            Cmd::Subscribe(sub) => self.subscribers.push(sub),
+            Cmd::Shutdown => return true,
+        }
+        false
+    }
+
+    fn handle_shard(&mut self, msg: ShardMsg) {
+        match msg {
+            ShardMsg::Report { shard, events, completed, load } => {
+                self.update_load(shard, load);
+                broadcast(&mut self.subscribers, &events);
+                for (shard_seq, result) in completed {
+                    self.route_completion(shard, shard_seq, result);
+                }
+                // freed pages may unblock the overflow head
+                self.drain_overflow();
+            }
+            ShardMsg::Error { shard, error, load, fatal } => {
+                self.update_load(shard, load);
+                if fatal {
+                    self.kill_shard(shard);
+                }
+                self.fail_window(shard, error);
+            }
+        }
+    }
+
+    fn validate_all(&self, queue: &[GenRequest]) -> Result<()> {
+        for req in queue {
+            self.model.validate(req)?;
+        }
+        Ok(())
+    }
+
+    /// Admit one request into the placement layer: it enters the FIFO
+    /// overflow and the queue drains head-first into shards — so a
+    /// request never jumps an earlier one that is still waiting for
+    /// pages (head-of-line blocking across the pool).
+    fn place(&mut self, req: GenRequest) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.overflow.push_back((seq, req));
+        self.drain_overflow();
+    }
+
+    /// Dispatch overflow head-first while SOME shard can take the head.
+    fn drain_overflow(&mut self) {
+        loop {
+            let Some(shard) = self.overflow.front().and_then(|(_, r)| self.pick(r))
+            else {
+                break;
+            };
+            let (seq, req) = self.overflow.pop_front().expect("front checked above");
+            self.dispatch(shard, seq, req);
+        }
+    }
+
+    /// Least-loaded-by-free-pages: the live shard with the most
+    /// estimated-free pages that still covers `req`'s admission
+    /// reservation; lowest shard id on ties ([`engine::most_free`], the
+    /// same rule `place_shard` applies to in-process engines). `None` =
+    /// page-starved everywhere.
+    fn pick(&self, req: &GenRequest) -> Option<usize> {
+        let need = self.model.admission_pages(req);
+        engine::most_free(self.shards.iter().enumerate().filter_map(|(i, st)| {
+            if st.dead {
+                return None;
+            }
+            let free = st.est_free();
+            (free >= need).then_some((i, free))
+        }))
+    }
+
+    fn dispatch(&mut self, shard: usize, seq: u64, req: GenRequest) {
+        let need = self.model.admission_pages(&req);
+        let st = &mut self.shards[shard];
+        let idx = st.sent;
+        st.sent += 1;
+        st.seq_map.insert(idx, seq);
+        st.pending_pages.push_back((idx, need));
+        if st.tx.send(ShardCmd::Submit(vec![req])).is_err() {
+            self.mark_dead(shard);
+        }
+    }
+
+    /// Write a shard off entirely: it can never report again, so its
+    /// bookkeeping is forced to the idle/dead state drains can settle
+    /// against.
+    fn kill_shard(&mut self, shard: usize) {
+        let st = &mut self.shards[shard];
+        st.dead = true;
+        st.has_work = false;
+        st.reported_seen = st.sent;
+        st.pending_pages.clear();
+        st.base_free = 0;
+    }
+
+    fn mark_dead(&mut self, shard: usize) {
+        self.kill_shard(shard);
+        self.fail_window(shard, anyhow!("shard {shard} thread died"));
+    }
+
+    fn update_load(&mut self, shard: usize, load: ShardLoad) {
+        let st = &mut self.shards[shard];
+        st.base_free = load.free_pages;
+        st.reported_seen = load.submits_seen;
+        st.has_work = load.has_work;
+        while matches!(st.pending_pages.front(),
+                       Some(&(i, _)) if i < load.submits_seen)
+        {
+            st.pending_pages.pop_front();
+        }
+    }
+
+    /// A shard failed: void the window. Every other shard aborts its
+    /// queued and in-flight work (matching the single-engine semantics,
+    /// where one error aborts everything), queued placements are
+    /// dropped, and pending generates fail with the error. The NEXT
+    /// drain is poisoned only if submit-mode work was actually lost —
+    /// a failure whose only victims were generate calls already
+    /// delivered its error, and the old engine loop's `had_foreign_work`
+    /// rule kept later windows clean in exactly that case.
+    fn fail_window(&mut self, source: usize, error: Error) {
+        self.overflow.clear();
+        self.ever_voided = true;
+        for (i, st) in self.shards.iter_mut().enumerate() {
+            if i != source && !st.dead {
+                let _ = st.tx.send(ShardCmd::Abort);
+            }
+            // every dispatched-but-unfinished request is now void: drop
+            // its fan-in bookkeeping so the maps stay bounded, and so a
+            // completion already in flight in the inbox routes nowhere
+            // (route_completion drops unknown seqs once ever_voided)
+            st.seq_map.clear();
+        }
+        let msg = format!("{error:#}");
+        let foreign = self.submit_outstanding > 0;
+        self.submit_outstanding = 0;
+        if foreign {
+            // keep the FIRST error; later ones are usually fallout
+            self.pending_err.get_or_insert(error);
+        }
+        for w in self.generates.drain(..) {
+            let _ = w.reply.send(Err(anyhow!("aborted by a shard failure: {msg}")));
+        }
+    }
+
+    fn route_completion(&mut self, shard: usize, shard_seq: u64, result: GenResult) {
+        // removing the entry keeps the map bounded by in-flight work
+        // AND makes a duplicated completion loudly detectable
+        let Some(global) = self.shards[shard].seq_map.remove(&shard_seq) else {
+            // after a voided window this is a straggler completion that
+            // raced the abort (its bookkeeping was cleared — the caller
+            // was told to resubmit); with no failure ever seen it can
+            // only be a duplicate, which poisons the window
+            if !self.ever_voided {
+                self.pending_err.get_or_insert(anyhow!(
+                    "shard {shard} completed unknown (or already completed) \
+                     local seq {shard_seq}"));
+            }
+            return;
+        };
+        if let Some(pos) = self
+            .generates
+            .iter()
+            .position(|w| w.start <= global && global < w.end)
+        {
+            let done = {
+                let w = &mut self.generates[pos];
+                w.got.push((global, result));
+                w.got.len() as u64 == w.end - w.start
+            };
+            if done {
+                let mut w = self.generates.remove(pos);
+                w.got.sort_by_key(|&(g, _)| g);
+                let _ = w.reply.send(Ok(w.got.into_iter().map(|(_, r)| r).collect()));
+            }
+        } else {
+            self.submit_outstanding = self.submit_outstanding.saturating_sub(1);
+            self.completed.push((global, result));
+        }
+    }
+
+    /// Settle pending drains once every shard is idle and the overflow
+    /// queue is empty. An error voids the whole window — the first
+    /// waiter gets the error, pre-error completions are dropped so a
+    /// retry can never produce duplicates later.
+    fn settle_drains(&mut self) {
+        if self.drain_waiters.is_empty() {
+            return;
+        }
+        if self.shards.iter().any(|s| !s.idle()) {
+            return;
+        }
+        // a non-empty overflow keeps the window open — unless every
+        // shard is dead, in which case it can never drain and the
+        // waiters must hear the error instead of hanging
+        if !self.overflow.is_empty() && !self.shards.iter().all(|s| s.dead) {
+            return;
+        }
+        let mut first_err = self.pending_err.take();
+        if first_err.is_some() {
+            self.completed.clear();
+        }
+        for tx in self.drain_waiters.drain(..) {
+            let reply = match first_err.take() {
+                Some(e) => Err(e),
+                None => {
+                    self.completed.sort_by_key(|&(g, _)| g);
+                    Ok(self.completed.drain(..).map(|(_, r)| r).collect())
+                }
+            };
+            let _ = tx.send(reply);
+        }
+    }
+
+    /// Poll every live shard for fresh metrics; a dead (or unreachable)
+    /// shard contributes its LAST observed snapshot, so history it
+    /// served before dying doesn't silently vanish from the pool view.
+    fn collect_metrics(&mut self) -> Vec<ServeMetrics> {
+        for st in &mut self.shards {
+            if st.dead {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            if st.tx.send(ShardCmd::Metrics(tx)).is_ok() {
+                if let Ok(m) = rx.recv() {
+                    st.last_metrics = m;
+                }
+            }
+        }
+        self.shards.iter().map(|st| st.last_metrics.clone()).collect()
+    }
+}
+
+/// Fan one report's events out to every live subscriber, pruning dead
+/// ones UNCONDITIONALLY: the liveness probe catches a dropped
+/// [`TokenSubscription`] whether or not this report carried anything to
+/// send (an `all(.. send ..)` predicate alone would be vacuously true
+/// on event-less reports).
+fn broadcast(subscribers: &mut Vec<Subscriber>, events: &[TokenEvent]) {
     subscribers.retain(|s| {
         s.live.strong_count() > 0
-            && report.events.iter().all(|&ev| s.tx.send(ev).is_ok())
+            && events.iter().all(|&ev| s.tx.send(ev).is_ok())
     });
 }
 
@@ -368,23 +1114,168 @@ mod tests {
     #[test]
     fn broadcast_prunes_dead_subscribers_without_events() {
         // regression: a dropped subscriber must be pruned even when the
-        // tick produced no events (the old retain was vacuously true)
+        // report carried no events (the old retain was vacuously true)
         let (alive_rx, alive) = subscriber_pair();
         let (dead_rx, dead) = subscriber_pair();
         let mut subs = vec![alive, dead];
         drop(dead_rx);
-        let empty = StepReport::default();
-        broadcast(&mut subs, &empty);
-        assert_eq!(subs.len(), 1, "event-less tick must still prune the dead");
+        broadcast(&mut subs, &[]);
+        assert_eq!(subs.len(), 1, "event-less report must still prune the dead");
         // the survivor still receives events and stays subscribed
-        let mut report = StepReport::default();
-        report.events.push(TokenEvent { id: 7, token: 3, index: 0, done: false });
-        broadcast(&mut subs, &report);
+        let events = [TokenEvent { id: 7, token: 3, index: 0, done: false }];
+        broadcast(&mut subs, &events);
         assert_eq!(subs.len(), 1);
         assert_eq!(alive_rx.try_iter().count(), 1);
         // ...until it hangs up too
         drop(alive_rx);
-        broadcast(&mut subs, &StepReport::default());
+        broadcast(&mut subs, &[]);
         assert!(subs.is_empty());
+    }
+
+    #[test]
+    fn mock_router_round_trip_over_two_shards() {
+        // end-to-end smoke over real threads: 2 mock shards, 6 requests,
+        // streams and results must match the single-engine mock exactly
+        let router = RouterBuilder::new()
+            .policy(PrefillPolicy::chunked(2))
+            .shards(2)
+            .spawn_with(|_shard| Ok(MockBackend::new(2, 4, 32, 64)))
+            .unwrap();
+        assert_eq!(router.shards(), 2);
+        let events = router.subscribe().unwrap();
+        let queue: Vec<GenRequest> =
+            (0..6).map(|i| GenRequest::new(i, vec![i as i32; 4], 3)).collect();
+        router.submit(queue).unwrap();
+        let results = router.drain().unwrap();
+        assert_eq!(results.len(), 6);
+        // global submission order is preserved across the shard fan-in
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        for r in &results {
+            let want = MockBackend::expected_tokens(&[r.id as i32; 4], 3, 64);
+            assert_eq!(r.tokens, want, "request {} stream diverged", r.id);
+        }
+        // every token event arrived exactly once, in per-request order
+        let mut seen: std::collections::HashMap<u64, Vec<usize>> =
+            std::collections::HashMap::new();
+        for ev in events.try_iter() {
+            seen.entry(ev.id).or_default().push(ev.index);
+        }
+        for id in 0..6u64 {
+            assert_eq!(seen[&id], vec![0, 1, 2], "request {id} events out of order");
+        }
+        // metrics fan-in: the merged view covers all six requests
+        let m = router.metrics().unwrap();
+        assert_eq!(m.requests, 6);
+        let per = router.shard_metrics().unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per.iter().map(|m| m.requests).sum::<usize>(), 6);
+        // both shards actually served work (placement balanced 2 lanes
+        // per shard against 6 requests)
+        assert!(per.iter().all(|m| m.requests > 0),
+                "placement starved a shard on a balanced workload");
+    }
+
+    /// Mock that serves normally until its `fail_after`-th decode
+    /// iteration, then returns an injected fault forever.
+    struct FailingBackend {
+        inner: MockBackend,
+        fail_after: usize,
+        decodes: usize,
+    }
+
+    impl FailingBackend {
+        fn new(fail_after: usize) -> Self {
+            FailingBackend { inner: MockBackend::new(2, 4, 32, 64), fail_after,
+                             decodes: 0 }
+        }
+    }
+
+    impl ExecBackend for FailingBackend {
+        fn spec(&self) -> &BackendSpec {
+            self.inner.spec()
+        }
+
+        fn prefill(&mut self, slots: &[PrefillSlot]) -> Result<Vec<i32>> {
+            self.inner.prefill(slots)
+        }
+
+        fn prefill_chunk(&mut self, lane: usize, tokens: &[i32], start_pos: usize)
+            -> Result<i32>
+        {
+            self.inner.prefill_chunk(lane, tokens, start_pos)
+        }
+
+        fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
+            self.decodes += 1;
+            if self.decodes > self.fail_after {
+                return Err(anyhow!("injected decode fault"));
+            }
+            self.inner.decode(steps)
+        }
+    }
+
+    #[test]
+    fn shard_error_voids_submit_window_but_router_survives() {
+        let router = RouterBuilder::new()
+            .shards(2)
+            .spawn_with(|_| Ok(FailingBackend::new(1)))
+            .unwrap();
+        // budgets > 2 force decode iterations past the fault threshold
+        router.submit(vec![GenRequest::new(0, vec![1; 4], 6),
+                           GenRequest::new(1, vec![2; 4], 6)]).unwrap();
+        let err = router.drain();
+        assert!(err.is_err(), "a shard fault must void the submit window");
+        assert!(format!("{:#}", err.unwrap_err()).contains("injected decode fault"));
+        // the shards stay serviceable: a budget-1 request completes at
+        // prefill (no decode, no fault) and drains cleanly
+        router.submit(vec![GenRequest::new(9, vec![3; 4], 1)]).unwrap();
+        let ok = router.drain().unwrap();
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].id, 9);
+    }
+
+    #[test]
+    fn generate_only_failure_leaves_the_drain_window_clean() {
+        let router = RouterBuilder::new()
+            .spawn_with(|_| Ok(FailingBackend::new(1)))
+            .unwrap();
+        // the failure's only victim is the generate: it gets the error…
+        let got = router.generate(vec![GenRequest::new(0, vec![1; 4], 6)]);
+        assert!(got.is_err());
+        // …and the next drain is NOT poisoned (the had_foreign_work
+        // rule: no submit-mode work was lost)
+        assert!(router.drain().unwrap().is_empty(),
+                "a generate-only failure must not void the drain window");
+        // the engine itself still serves prefill-only work
+        let ok = router.generate(vec![GenRequest::new(5, vec![2; 4], 1)]).unwrap();
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].id, 5);
+    }
+
+    #[test]
+    fn single_shard_generate_and_interleaved_drain() {
+        let router = RouterBuilder::new()
+            .policy(PrefillPolicy::Blocking)
+            .spawn_with(|_| Ok(MockBackend::new(2, 4, 32, 64)))
+            .unwrap();
+        // submit-mode work in flight, then a blocking generate: the
+        // generate returns ONLY its own requests, the drain the rest
+        router.submit(vec![GenRequest::new(10, vec![1; 4], 2)]).unwrap();
+        let got = router
+            .generate(vec![GenRequest::new(20, vec![2; 4], 2),
+                           GenRequest::new(21, vec![3; 4], 2)])
+            .unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].id, 20);
+        assert_eq!(got[1].id, 21);
+        let drained = router.drain().unwrap();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].id, 10);
+        // an empty generate resolves immediately
+        assert!(router.generate(Vec::new()).unwrap().is_empty());
+        // validation failures reject the whole queue atomically
+        assert!(router.submit(vec![GenRequest::new(1, vec![0; 3], 2)]).is_err());
+        assert!(router.drain().unwrap().is_empty());
     }
 }

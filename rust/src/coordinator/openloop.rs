@@ -26,12 +26,14 @@
 //! through here, so the numbers CI tracks per PR are the numbers the
 //! tests gate on.
 
+use std::collections::VecDeque;
+
 use crate::anyhow::{anyhow, Result};
 
 use super::backend::ModeledBackend;
-use super::engine::{Engine, KvLayout};
-use super::kv::ReservationPolicy;
-use super::request::{percentile, GenRequest};
+use super::engine::{place_shard, Engine, KvLayout};
+use super::kv::{split_budget, ReservationPolicy};
+use super::request::{percentile, GenRequest, ServeMetrics};
 use super::scheduler::PrefillPolicy;
 use crate::util::prop::Rng;
 
@@ -111,6 +113,13 @@ pub struct OpenLoopConfig {
     /// whole-budget reservation; `Lazy` = on-demand growth with
     /// preempt-and-recompute). Ignored on the dense layout.
     pub reserve: ReservationPolicy,
+    /// Engine shards. 1 (the default) is the single-engine harness,
+    /// unchanged. N > 1 replicates the modeled hardware per shard and
+    /// SPLITS the KV budget (pages, logical lanes — and, dense, the
+    /// physical lanes) evenly across them: equal total memory, N× the
+    /// engines. Placement is least-loaded-by-free-pages with a FIFO
+    /// overflow queue, the same policy the threaded Router applies.
+    pub shards: usize,
     pub seed: u64,
 }
 
@@ -134,8 +143,40 @@ impl Default for OpenLoopConfig {
             max_new_tokens: 191,
             paged: None,
             reserve: ReservationPolicy::Upfront,
+            shards: 1,
             seed: 0x5EED,
         }
+    }
+}
+
+/// Per-shard slice of a sharded open-loop run (empty when `shards` = 1).
+#[derive(Debug, Clone)]
+pub struct OpenLoopShardStats {
+    pub shard: usize,
+    /// Requests this shard completed.
+    pub requests: usize,
+    pub peak_active: usize,
+    pub kv_pages_total: usize,
+    pub kv_pages_peak: usize,
+    pub kv_pages_grown: usize,
+    pub preemptions: usize,
+    pub decode_invocations: usize,
+    /// This shard's own modeled clock at the end of the run.
+    pub model_time_s: f64,
+}
+
+impl OpenLoopShardStats {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"shard\": {}, \"requests\": {}, \"peak_active\": {}, \
+             \"kv_pages_total\": {}, \"kv_pages_peak\": {}, \
+             \"kv_pages_grown\": {}, \"preemptions\": {}, \
+             \"decode_invocations\": {}, \"model_time_s\": {:.6}}}",
+            self.shard, self.requests, self.peak_active,
+            self.kv_pages_total, self.kv_pages_peak,
+            self.kv_pages_grown, self.preemptions,
+            self.decode_invocations, self.model_time_s,
+        )
     }
 }
 
@@ -146,6 +187,10 @@ pub struct OpenLoopStats {
     pub layout: KvLayout,
     pub reserve: ReservationPolicy,
     pub requests: usize,
+    /// Engine shards the run was served by.
+    pub shards: usize,
+    /// Total generated tokens (all shards).
+    pub tokens: usize,
     pub makespan_s: f64,
     pub ttft_p50_s: f64,
     pub ttft_p95_s: f64,
@@ -168,9 +213,22 @@ pub struct OpenLoopStats {
     /// Lazy-reservation accounting (zeros under `Upfront`).
     pub kv_pages_grown: usize,
     pub preemptions: usize,
+    /// Per-shard breakdown (empty on a single-shard run).
+    pub per_shard: Vec<OpenLoopShardStats>,
 }
 
 impl OpenLoopStats {
+    /// Aggregate decode throughput in modeled tokens/second: total
+    /// generated tokens over the run's makespan. The sharding headline:
+    /// on the skewed workload at equal total KV memory, 2 shards must
+    /// sustain ≥ 1.8× the single-engine figure (`tests/sharding.rs`).
+    pub fn throughput_tps(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.makespan_s
+    }
+
     /// One JSON object (hand-rolled: the offline build has no serde).
     pub fn to_json(&self) -> String {
         let policy = match self.policy {
@@ -187,9 +245,11 @@ impl OpenLoopStats {
             ReservationPolicy::Upfront => "upfront",
             ReservationPolicy::Lazy => "lazy",
         };
+        let per_shard: Vec<String> = self.per_shard.iter().map(|s| s.to_json()).collect();
         format!(
             "{{\"policy\": {policy}, \"layout\": \"{layout}\", \
              \"reserve\": \"{reserve}\", \"requests\": {}, \
+             \"shards\": {}, \"tokens\": {}, \"throughput_tps\": {:.6}, \
              \"makespan_s\": {:.6}, \
              \"ttft_p50_s\": {:.6}, \"ttft_p95_s\": {:.6}, \
              \"tpot_p50_s\": {:.6}, \"tpot_p95_s\": {:.6}, \
@@ -197,8 +257,11 @@ impl OpenLoopStats {
              \"prefill_calls\": {}, \"prefill_chunks\": {}, \
              \"peak_active\": {}, \"kv_pages_total\": {}, \"kv_pages_peak\": {}, \
              \"page_occupancy_p95\": {:.6}, \"page_frag_p95\": {:.6}, \
-             \"kv_pages_grown\": {}, \"preemptions\": {}}}",
-            self.requests, self.makespan_s,
+             \"kv_pages_grown\": {}, \"preemptions\": {}, \
+             \"per_shard\": [{}]}}",
+            self.requests,
+            self.shards, self.tokens, self.throughput_tps(),
+            self.makespan_s,
             self.ttft_p50_s, self.ttft_p95_s,
             self.tpot_p50_s, self.tpot_p95_s,
             self.decode_iterations, self.decode_invocations,
@@ -206,14 +269,19 @@ impl OpenLoopStats {
             self.peak_active, self.kv_pages_total, self.kv_pages_peak,
             self.page_occupancy_p95, self.page_frag_p95,
             self.kv_pages_grown, self.preemptions,
+            per_shard.join(", "),
         )
     }
 }
 
-/// Run one open-loop workload under `policy`; identical `cfg` + `seed`
-/// produce the identical arrival trace for every policy and layout, so
-/// runs are directly comparable.
-pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<OpenLoopStats> {
+/// Validate a config and build its seeded arrival trace: the sorted
+/// `(time, request)` deliveries plus each request id's own arrival time
+/// (burst jitter can permute ids, so sorted position ≠ id). Shared by
+/// the single-engine and sharded paths, so `shards` never perturbs the
+/// workload under comparison.
+fn arrival_trace(cfg: &OpenLoopConfig)
+    -> Result<(Vec<(f64, GenRequest)>, Vec<f64>)>
+{
     if cfg.requests == 0 {
         return Err(anyhow!("open loop needs requests > 0"));
     }
@@ -236,9 +304,6 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
     }
 
     let mut rng = Rng::new(cfg.seed);
-    // the arrival trace: (time, request), sorted by time for delivery.
-    // `arrival_by_id` keeps each request id's own arrival time — burst
-    // jitter can permute ids, so sorted position ≠ id.
     let mut trace: Vec<(f64, GenRequest)> = Vec::with_capacity(cfg.requests);
     let mut arrival_by_id = vec![0.0f64; cfg.requests];
     let mut poisson_t = 0.0f64;
@@ -260,6 +325,17 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         trace.push((at, GenRequest::new(i as u64, prompt, budget)));
     }
     trace.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    Ok((trace, arrival_by_id))
+}
+
+/// Run one open-loop workload under `policy`; identical `cfg` + `seed`
+/// produce the identical arrival trace for every policy, layout and
+/// shard count, so runs are directly comparable.
+pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<OpenLoopStats> {
+    if cfg.shards > 1 {
+        return run_open_loop_sharded(policy, cfg);
+    }
+    let (trace, arrival_by_id) = arrival_trace(cfg)?;
     let arrival: Vec<f64> = trace.iter().map(|(t, _)| *t).collect();
 
     let mut engine = match cfg.paged {
@@ -347,6 +423,8 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         layout: engine.layout(),
         reserve: engine.reserve(),
         requests: n,
+        shards: 1,
+        tokens: m.tokens_generated,
         makespan_s: engine.backend.model_time_s,
         ttft_p50_s: percentile(&ttft, 50.0),
         ttft_p95_s: percentile(&ttft, 95.0),
@@ -363,6 +441,212 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         page_frag_p95: m.page_frag_p95(),
         kv_pages_grown: m.kv_pages_grown,
         preemptions: m.preemptions,
+        per_shard: Vec::new(),
+    })
+}
+
+/// The sharded open loop: N modeled engines, each a full device replica
+/// (its own prefill/decode clocks) owning an even split of the KV
+/// budget. One virtual-time event loop drives all shards: arrivals are
+/// delivered at the earliest busy clock, placed least-loaded-by-free-
+/// pages (FIFO overflow when every shard is starved — the same policy
+/// the threaded Router applies), and the laggard busy shard steps
+/// first, so shard clocks advance in causal order. Deterministic: the
+/// same seed yields the same placement and the same streams.
+fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
+    -> Result<OpenLoopStats>
+{
+    let shards = cfg.shards;
+    let (trace, arrival_by_id) = arrival_trace(cfg)?;
+    let arrival: Vec<f64> = trace.iter().map(|(t, _)| *t).collect();
+
+    // per-shard geometry: the TOTAL budget split evenly, hardware
+    // replicated (each shard keeps the full decode invocation width)
+    let mut engines: Vec<Engine<ModeledBackend>> = Vec::with_capacity(shards);
+    match cfg.paged {
+        Some(p) => {
+            let pages = split_budget(p.pages, shards)?;
+            let lanes = split_budget(p.max_lanes, shards)?;
+            for i in 0..shards {
+                let backend = ModeledBackend::u280_paged(
+                    lanes[i], cfg.prefill_len, cfg.max_seq, cfg.vocab,
+                    p.page_len, pages[i], p.decode_width);
+                let backend = match cfg.reserve {
+                    ReservationPolicy::Lazy => backend.with_table_growth(),
+                    ReservationPolicy::Upfront => backend,
+                };
+                engines.push(
+                    Engine::with_reservation(backend, policy, KvLayout::Paged,
+                                             cfg.reserve)
+                        .with_shard_id(i));
+            }
+        }
+        None => {
+            let lanes = split_budget(cfg.lanes, shards)?;
+            for i in 0..shards {
+                let backend = ModeledBackend::u280(lanes[i], cfg.prefill_len,
+                                                   cfg.max_seq, cfg.vocab);
+                engines.push(Engine::with_policy(backend, policy).with_shard_id(i));
+            }
+        }
+    }
+    for e in &engines {
+        if cfg.paged.is_some() && e.layout() != KvLayout::Paged {
+            return Err(anyhow!("modeled backend refused the paged layout"));
+        }
+        if matches!(policy, PrefillPolicy::Chunked { .. })
+            && e.policy() == PrefillPolicy::Blocking
+        {
+            return Err(anyhow!("modeled backend cannot run {policy:?}"));
+        }
+    }
+
+    let n = cfg.requests;
+    let mut first_tok = vec![f64::NAN; n];
+    let mut last_tok = vec![f64::NAN; n];
+    let mut tok_count = vec![0usize; n];
+    let mut next_arrival = 0usize;
+    let mut pending = trace.into_iter().map(|(_, r)| Some(r)).collect::<Vec<_>>();
+    let mut overflow: VecDeque<GenRequest> = VecDeque::new();
+
+    loop {
+        // the global clock is the earliest busy shard (arrivals due by
+        // then are deliverable); with every shard idle, jump to the
+        // next arrival
+        let mut now = engines
+            .iter()
+            .filter(|e| e.has_work())
+            .map(|e| e.backend.model_time_s)
+            .fold(f64::INFINITY, f64::min);
+        if !now.is_finite() {
+            // every shard idle: an overflow head must fit an EMPTY pool
+            // (otherwise the request could never be served — a config
+            // error, since per-shard validation would reject it too)
+            let frontier = engines
+                .iter()
+                .map(|e| e.backend.model_time_s)
+                .fold(0.0f64, f64::max);
+            if let Some(head) = overflow.front() {
+                let Some(s) = place_shard(&engines, head) else {
+                    return Err(anyhow!(
+                        "request {} overflows every idle shard: its reservation \
+                         exceeds a whole per-shard pool", head.id));
+                };
+                let req = overflow.pop_front().expect("front checked above");
+                engines[s].backend.advance_to(frontier);
+                engines[s].submit(req)?;
+                continue; // a shard is busy now — recompute the frontier
+            }
+            if next_arrival >= n {
+                break;
+            }
+            let t = arrival[next_arrival].max(frontier);
+            for e in &mut engines {
+                e.backend.advance_to(t);
+            }
+            now = t;
+        }
+        // deliver every due arrival, oldest first: arrivals join the
+        // TAIL of the shared FIFO, then the queue drains head-first —
+        // so a new arrival never jumps an earlier request still
+        // waiting for pages (the threaded Router's exact rule)
+        while next_arrival < n && arrival[next_arrival] <= now {
+            let req = pending[next_arrival].take().expect("arrival delivered once");
+            overflow.push_back(req);
+            next_arrival += 1;
+        }
+        // place while SOME shard can take the head (retirements since
+        // the last pass may have freed pages); head-of-line blocks
+        while let Some(head) = overflow.front() {
+            let Some(s) = place_shard(&engines, head) else { break };
+            let req = overflow.pop_front().expect("front checked above");
+            // an idle shard starts no earlier than the placement
+            // instant; a busy one is already past it
+            engines[s].backend.advance_to(now);
+            engines[s].submit(req)?;
+        }
+        // step the laggard busy shard so virtual time advances causally
+        let Some(s) = engines
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.has_work())
+            .min_by(|(_, a), (_, b)| {
+                a.backend.model_time_s
+                    .partial_cmp(&b.backend.model_time_s)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(i, _)| i)
+        else {
+            continue;
+        };
+        let report = engines[s].step()?;
+        let t = engines[s].backend.model_time_s;
+        for ev in &report.events {
+            let id = ev.id as usize;
+            if tok_count[id] == 0 {
+                first_tok[id] = t;
+            }
+            last_tok[id] = t;
+            tok_count[id] += 1;
+        }
+    }
+
+    let mut ttft = Vec::with_capacity(n);
+    let mut tpot = Vec::new();
+    for i in 0..n {
+        if !first_tok[i].is_finite() {
+            return Err(anyhow!("request {i} produced no tokens"));
+        }
+        ttft.push(first_tok[i] - arrival_by_id[i]);
+        if tok_count[i] > 1 {
+            tpot.push((last_tok[i] - first_tok[i]) / (tok_count[i] - 1) as f64);
+        }
+    }
+
+    let per: Vec<ServeMetrics> = engines.iter().map(|e| e.metrics.clone()).collect();
+    let m = ServeMetrics::merge(&per);
+    let makespan_s = engines
+        .iter()
+        .map(|e| e.backend.model_time_s)
+        .fold(0.0f64, f64::max);
+    let per_shard = engines
+        .iter()
+        .map(|e| OpenLoopShardStats {
+            shard: e.shard_id(),
+            requests: e.metrics.requests,
+            peak_active: e.metrics.peak_active,
+            kv_pages_total: e.metrics.kv_pages_total,
+            kv_pages_peak: e.metrics.kv_pages_peak,
+            kv_pages_grown: e.metrics.kv_pages_grown,
+            preemptions: e.metrics.preemptions,
+            decode_invocations: e.metrics.decode_invocations,
+            model_time_s: e.backend.model_time_s,
+        })
+        .collect();
+    Ok(OpenLoopStats {
+        policy: engines[0].policy(),
+        layout: engines[0].layout(),
+        reserve: engines[0].reserve(),
+        requests: n,
+        shards,
+        tokens: m.tokens_generated,
+        makespan_s,
+        ttft_p50_s: percentile(&ttft, 50.0),
+        ttft_p95_s: percentile(&ttft, 95.0),
+        tpot_p50_s: percentile(&tpot, 50.0),
+        tpot_p95_s: percentile(&tpot, 95.0),
+        decode_iterations: m.iterations,
+        decode_invocations: m.decode_invocations,
+        prefill_calls: m.prefill_calls,
+        prefill_chunks: m.prefill_chunks,
+        peak_active: m.peak_active,
+        kv_pages_total: m.kv_pages_total,
+        kv_pages_peak: m.kv_pages_peak,
+        page_occupancy_p95: m.page_occupancy_p95(),
+        page_frag_p95: m.page_frag_p95(),
+        kv_pages_grown: m.kv_pages_grown,
+        preemptions: m.preemptions,
+        per_shard,
     })
 }
 
@@ -469,6 +753,72 @@ mod tests {
         assert_eq!(up.kv_pages_grown, 0);
         assert_eq!(up.preemptions, 0);
         assert!(up.to_json().contains("\"reserve\": \"upfront\""));
+    }
+
+    #[test]
+    fn sharded_run_is_deterministic_and_serves_everything() {
+        // 2 shards over the same total budget: same workload, every
+        // request served, runs reproducible, per-shard stats populated
+        let mut cfg = small();
+        cfg.requests = 12;
+        cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+            cfg.lanes, cfg.max_seq, 32, 16));
+        cfg.shards = 2;
+        let a = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        let b = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(a.shards, 2);
+        assert_eq!(a.requests, 12);
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-12,
+                "sharded runs must be deterministic");
+        assert!((a.ttft_p95_s - b.ttft_p95_s).abs() < 1e-12);
+        assert_eq!(a.per_shard.len(), 2);
+        assert_eq!(a.per_shard.iter().map(|s| s.requests).sum::<usize>(), 12,
+                   "every request must complete on exactly one shard");
+        // the split preserves the TOTAL memory budget
+        assert_eq!(a.per_shard.iter().map(|s| s.kv_pages_total).sum::<usize>(),
+                   4 * 320 / 32);
+        assert_eq!(a.kv_pages_total, 4 * 320 / 32);
+        // same workload → same total tokens as the single-engine run
+        let mut solo = cfg.clone();
+        solo.shards = 1;
+        let one = run_open_loop(PrefillPolicy::chunked(32), &solo).unwrap();
+        assert_eq!(a.tokens, one.tokens,
+                   "sharding must not change the generated token count");
+        let j = a.to_json();
+        assert!(j.contains("\"shards\": 2"));
+        assert!(j.contains("\"per_shard\": [{"));
+        assert!(j.contains("\"throughput_tps\""));
+        assert!(crate::util::Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn shards_one_is_the_unsharded_path() {
+        let mut cfg = small();
+        cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+            cfg.lanes, cfg.max_seq, 64, 16));
+        cfg.shards = 1;
+        let a = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(a.shards, 1);
+        assert!(a.per_shard.is_empty(), "single-engine runs carry no breakdown");
+        assert!(a.tokens > 0);
+        assert!(a.throughput_tps() > 0.0);
+    }
+
+    #[test]
+    fn sharded_dense_splits_lanes() {
+        let mut cfg = small();
+        cfg.requests = 8;
+        cfg.shards = 2; // 4 dense lanes → 2 per shard
+        let s = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(s.layout, KvLayout::Dense);
+        assert_eq!(s.requests, 8);
+        assert_eq!(s.per_shard.len(), 2);
+        // dense pool pages == lanes: the split must cover all 4
+        assert_eq!(s.per_shard.iter().map(|p| p.kv_pages_total).sum::<usize>(), 0,
+                   "dense runs report kv_pages_total = 0 per shard");
+        // a split that would leave a shard without lanes is refused
+        cfg.shards = 8;
+        assert!(run_open_loop(PrefillPolicy::chunked(32), &cfg).is_err());
     }
 
     #[test]

@@ -202,6 +202,56 @@ impl ServeMetrics {
         }
     }
 
+    /// Merge per-shard metrics into one pool-level view by POOLING RAW
+    /// SAMPLES: the latency vectors (TTFT, queue wait, prefill wait,
+    /// TPOT) and the page occupancy/fragmentation vectors are
+    /// concatenated, so every percentile accessor on the merged value is
+    /// computed over the union of the shards' samples — never by
+    /// averaging per-shard percentiles, which is not a percentile of
+    /// anything (a shard with 1 sample would weigh as much as one with
+    /// 10 000).
+    ///
+    /// Counters and durations sum. Peak gauges (`peak_active`,
+    /// `kv_pages_peak`, rows reserved/written peaks) also sum: shards
+    /// hit their peaks at different instants, so the summed value is a
+    /// pool-level UPPER bound on simultaneous peak load, which is the
+    /// honest capacity-planning number (the true simultaneous peak is
+    /// not recoverable from per-shard aggregates).
+    ///
+    /// The merged value is a SNAPSHOT: its page-sample decimation stride
+    /// resets, so keep recording into the per-shard metrics, not into a
+    /// merge result.
+    pub fn merge(shards: &[ServeMetrics]) -> ServeMetrics {
+        let mut m = ServeMetrics::default();
+        for s in shards {
+            m.requests += s.requests;
+            m.prefill_calls += s.prefill_calls;
+            m.prefill_chunks += s.prefill_chunks;
+            m.iterations += s.iterations;
+            m.decode_invocations += s.decode_invocations;
+            m.lane_steps += s.lane_steps;
+            m.total_prefill += s.total_prefill;
+            m.total_decode += s.total_decode;
+            m.tokens_generated += s.tokens_generated;
+            m.prefill_tokens += s.prefill_tokens;
+            m.ttft_s.extend_from_slice(&s.ttft_s);
+            m.queue_wait_s.extend_from_slice(&s.queue_wait_s);
+            m.prefill_wait_s.extend_from_slice(&s.prefill_wait_s);
+            m.tpot_s.extend_from_slice(&s.tpot_s);
+            m.peak_active += s.peak_active;
+            m.kv_pages_total += s.kv_pages_total;
+            m.kv_pages_peak += s.kv_pages_peak;
+            m.kv_pages_grown += s.kv_pages_grown;
+            m.grow_failures += s.grow_failures;
+            m.preemptions += s.preemptions;
+            m.kv_rows_reserved_peak += s.kv_rows_reserved_peak;
+            m.kv_rows_written_peak += s.kv_rows_written_peak;
+            m.page_occupancy_s.extend_from_slice(&s.page_occupancy_s);
+            m.page_frag_s.extend_from_slice(&s.page_frag_s);
+        }
+        m
+    }
+
     /// Aggregate decode throughput, tokens/second.
     pub fn decode_tps(&self) -> f64 {
         if self.total_decode.is_zero() {
@@ -410,6 +460,125 @@ mod tests {
         // the percentile surface stays live after decimation
         assert!(m.page_occupancy_p95() >= 0.5);
         assert!((m.page_frag_p50() - 0.25).abs() < 1e-9);
+    }
+
+    fn metrics_with_ttft(ttft: &[f64], tpot: &[f64]) -> ServeMetrics {
+        ServeMetrics {
+            requests: ttft.len(),
+            ttft_s: ttft.to_vec(),
+            tpot_s: tpot.to_vec(),
+            ..ServeMetrics::default()
+        }
+    }
+
+    #[test]
+    fn merge_pools_raw_samples_not_percentiles() {
+        // shard A: 99 fast requests; shard B: 1 slow one. Averaging the
+        // per-shard p95s would yield (1.0 + 9.0) / 2 = 5.0; the pooled
+        // p95 over 100 samples is 1.0 (rank 95 of 99×1.0 + 1×9.0).
+        let a = metrics_with_ttft(&vec![1.0; 99], &[0.1; 4]);
+        let b = metrics_with_ttft(&[9.0], &[0.5]);
+        let merged = ServeMetrics::merge(&[a.clone(), b.clone()]);
+        assert_eq!(merged.requests, 100);
+        assert_eq!(merged.ttft_s.len(), 100);
+        let mut pooled = a.ttft_s.clone();
+        pooled.extend_from_slice(&b.ttft_s);
+        assert!((merged.ttft_p95() - percentile(&pooled, 95.0)).abs() < 1e-12);
+        assert!((merged.ttft_p95() - 1.0).abs() < 1e-12);
+        let averaged = (a.ttft_p95() + b.ttft_p95()) / 2.0;
+        assert!((averaged - 5.0).abs() < 1e-12,
+                "the buggy formulation must actually differ for this to guard");
+        assert!((merged.ttft_p95() - averaged).abs() > 1.0,
+                "pooled p95 must not equal averaged per-shard p95s");
+        // TPOT pools too, preserving every sample
+        assert_eq!(merged.tpot_s.len(), 5);
+        let mut tpot = a.tpot_s.clone();
+        tpot.extend_from_slice(&b.tpot_s);
+        assert!((merged.tpot_p95() - percentile(&tpot, 95.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_skewed_shards_match_concatenated_percentiles() {
+        // two genuinely skewed distributions: uniform 1..=50 and 51..=100
+        let a = metrics_with_ttft(&(1..=50).map(f64::from).collect::<Vec<_>>(), &[]);
+        let b = metrics_with_ttft(&(51..=100).map(f64::from).collect::<Vec<_>>(), &[]);
+        let merged = ServeMetrics::merge(&[a, b]);
+        for q in [50.0, 95.0] {
+            let all: Vec<f64> = (1..=100).map(f64::from).collect();
+            assert!((percentile(&merged.ttft_s, q) - percentile(&all, q)).abs() < 1e-12,
+                    "merged p{q} must equal the percentile of the concatenation");
+        }
+        assert!((merged.ttft_p50() - 50.0).abs() < 1e-12);
+        assert!((merged.ttft_p95() - 95.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_edge_cases_empty_and_single_sample_shards() {
+        // no shards → zero-safe default
+        let empty = ServeMetrics::merge(&[]);
+        assert_eq!(empty.requests, 0);
+        assert_eq!(empty.ttft_p95(), 0.0);
+        // an EMPTY shard merged beside a live one must not perturb it
+        let lone = metrics_with_ttft(&[2.0], &[0.25]);
+        let merged = ServeMetrics::merge(&[ServeMetrics::default(), lone.clone()]);
+        assert_eq!(merged.requests, 1);
+        assert!((merged.ttft_p50() - 2.0).abs() < 1e-12);
+        assert!((merged.ttft_p95() - 2.0).abs() < 1e-12);
+        assert!((merged.tpot_p95() - 0.25).abs() < 1e-12);
+        // single-sample shards pool into an exact two-point distribution
+        let merged = ServeMetrics::merge(&[lone, metrics_with_ttft(&[4.0], &[])]);
+        assert_eq!(merged.ttft_s.len(), 2);
+        assert!((merged.ttft_p50() - 2.0).abs() < 1e-12);
+        assert!((merged.ttft_p95() - 4.0).abs() < 1e-12);
+        // merging ONE shard reproduces its sample surface verbatim
+        let solo = metrics_with_ttft(&[1.0, 3.0, 5.0], &[0.1, 0.2]);
+        let merged = ServeMetrics::merge(&[solo.clone()]);
+        assert_eq!(merged.ttft_s, solo.ttft_s);
+        assert_eq!(merged.tpot_s, solo.tpot_s);
+        assert_eq!(merged.requests, solo.requests);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_peak_gauges() {
+        let mut a = ServeMetrics::with_pages_total(20);
+        a.iterations = 10;
+        a.decode_invocations = 12;
+        a.lane_steps = 40;
+        a.peak_active = 6;
+        a.kv_pages_peak = 18;
+        a.kv_pages_grown = 3;
+        a.preemptions = 1;
+        a.tokens_generated = 100;
+        a.total_decode = Duration::from_secs(2);
+        a.record_page_sample(0.5, 0.1);
+        let mut b = ServeMetrics::with_pages_total(20);
+        b.iterations = 4;
+        b.decode_invocations = 4;
+        b.lane_steps = 8;
+        b.peak_active = 2;
+        b.kv_pages_peak = 7;
+        b.grow_failures = 2;
+        b.tokens_generated = 50;
+        b.total_decode = Duration::from_secs(1);
+        b.record_page_sample(0.25, 0.3);
+        let m = ServeMetrics::merge(&[a, b]);
+        assert_eq!(m.kv_pages_total, 40);
+        assert_eq!(m.iterations, 14);
+        assert_eq!(m.decode_invocations, 16);
+        assert_eq!(m.lane_steps, 48);
+        assert_eq!(m.peak_active, 8, "peaks sum to the pool-level upper bound");
+        assert_eq!(m.kv_pages_peak, 25);
+        assert_eq!(m.kv_pages_grown, 3);
+        assert_eq!(m.grow_failures, 2);
+        assert_eq!(m.preemptions, 1);
+        assert_eq!(m.tokens_generated, 150);
+        assert_eq!(m.total_decode, Duration::from_secs(3));
+        // page samples pooled, percentile surface live
+        assert_eq!(m.page_occupancy_s.len(), 2);
+        assert!((m.page_occupancy_p95() - 0.5).abs() < 1e-12);
+        assert!((m.page_frag_p95() - 0.3).abs() < 1e-12);
+        // decode_tps over the merged totals
+        assert!((m.decode_tps() - 50.0).abs() < 1e-9);
     }
 
     #[test]

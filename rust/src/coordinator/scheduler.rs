@@ -230,6 +230,10 @@ pub struct Scheduler {
     paged: bool,
     /// How admission sizes a request's page reservation.
     reserve: ReservationPolicy,
+    /// Running sum of the queue's admission reservations (kept on
+    /// push/pop so the placement layer's per-tick load reports stay
+    /// O(1) instead of rescanning the queue).
+    queue_pages: usize,
     next_seq: u64,
 }
 
@@ -245,6 +249,7 @@ impl Scheduler {
             gang,
             paged: false,
             reserve: ReservationPolicy::Upfront,
+            queue_pages: 0,
             next_seq: 0,
         }
     }
@@ -264,6 +269,7 @@ impl Scheduler {
             gang: false,
             paged: true,
             reserve: ReservationPolicy::Upfront,
+            queue_pages: 0,
             next_seq: 0,
         }
     }
@@ -301,6 +307,45 @@ impl Scheduler {
 
     pub fn page_len(&self) -> usize {
         self.pool.page_len
+    }
+
+    /// Pages currently on the free list (the sharded Router's placement
+    /// currency: requests go to the shard with the most free pages).
+    pub fn free_pages(&self) -> usize {
+        self.pool.free_pages()
+    }
+
+    /// Total allocatable pages in this scheduler's pool.
+    pub fn total_pages(&self) -> usize {
+        self.pool.total_pages()
+    }
+
+    /// Pages `req` would reserve at ADMISSION under the policy in
+    /// effect: the whole-budget reservation up front, or just the
+    /// prompt plus one decode slot under lazy growth. This is the unit
+    /// the placement layer balances shards by.
+    pub fn admission_pages(&self, req: &GenRequest) -> usize {
+        self.pool.pages_for(self.admission_rows(req))
+    }
+
+    /// Sum of admission reservations still waiting in the queue — the
+    /// demand already committed to this scheduler but not yet backed by
+    /// pages. `free_pages() - queued_pages()` (saturating) is the honest
+    /// free-capacity estimate a placement layer should balance on; raw
+    /// free pages would double-book a shard whose queue is deep. O(1):
+    /// a running counter maintained on every queue push/pop, so the
+    /// per-tick load reports don't rescan a deep queue. (The
+    /// reservation policy is fixed at construction — `with_reserve`
+    /// runs on an empty queue — so entries' sizes never change.)
+    pub fn queued_pages(&self) -> usize {
+        self.queue_pages
+    }
+
+    /// Ids of the requests currently bound to lanes (in-flight table).
+    /// The sharding invariant suite uses this to prove no request ever
+    /// appears in two shards' tables at once.
+    pub fn inflight_ids(&self) -> Vec<u64> {
+        self.lanes.iter().flatten().map(|f| f.req.id).collect()
     }
 
     /// Pool-wide page accounting (occupancy / fragmentation metrics).
@@ -354,6 +399,8 @@ impl Scheduler {
         self.validate(&req)?;
         let seq = self.next_seq;
         self.next_seq += 1;
+        let pages = self.admission_pages(&req);
+        self.queue_pages += pages;
         self.queue.push_back(Pending { req, seq, arrived: Instant::now(),
                                        resume: None });
         Ok(())
@@ -414,6 +461,7 @@ impl Scheduler {
                 break; // head-of-line blocks: keep FIFO order
             }
             let p = self.queue.pop_front().expect("head checked above");
+            self.queue_pages = self.queue_pages.saturating_sub(pages_needed);
             let pages = self.pool.alloc(pages_needed).expect("count checked above");
             let kv = LaneKv::new(p.req.prompt.len(), pages, self.pool.page_len,
                                  self.pool.max_seq)
@@ -698,6 +746,8 @@ impl Scheduler {
             emitted,
             first_token_at: flight.first_token_at,
         });
+        let requeued_pages = self.admission_pages(&flight.req);
+        self.queue_pages += requeued_pages;
         self.queue.push_front(Pending {
             req: flight.req,
             seq: flight.seq,
@@ -728,6 +778,7 @@ impl Scheduler {
     /// the engine thread can keep serving subsequent requests.
     pub fn abort_all(&mut self) {
         self.queue.clear();
+        self.queue_pages = 0;
         for slot in &mut self.lanes {
             if let Some(flight) = slot.take() {
                 self.pool.release(flight.kv.pages);
@@ -926,9 +977,11 @@ mod tests {
         s.submit(req(2, 4)).unwrap();
         s.submit(req(3, 4)).unwrap();
         s.plan_admissions();
+        assert_eq!(s.queued_pages(), 1, "one request left queued (1 dense page)");
         s.abort_all();
         assert!(!s.has_work());
         assert_eq!(s.queued(), 0);
+        assert_eq!(s.queued_pages(), 0, "abort must zero the queued-demand counter");
         assert_eq!(s.active(), 0);
         assert_eq!(s.page_stats().pages_in_use, 0, "abort leaked pages");
     }
@@ -1143,6 +1196,9 @@ mod tests {
         assert_eq!(g.pages_grown, 1, "freed pages must satisfy the grower");
         assert_eq!(s.active(), 1);
         assert_eq!(s.queued(), 1, "victim requeued");
+        assert_eq!(s.queued_pages(), 2,
+                   "requeued victim must re-enter the queued-demand counter \
+                    (lazy: prompt 4 + 1 slot on 4-row pages = 2)");
         // drive the survivor to completion; its pages free and the
         // victim re-admits from the queue head carrying its watermark
         while s.active() > 0 {
@@ -1164,6 +1220,30 @@ mod tests {
         assert_eq!(s.reserve(), ReservationPolicy::Upfront);
         let s = Scheduler::paged(2, 4, 32, 8, 4).with_reserve(ReservationPolicy::Lazy);
         assert_eq!(s.reserve(), ReservationPolicy::Lazy);
+    }
+
+    #[test]
+    fn placement_accessors_track_free_queued_and_inflight() {
+        let mut s = paged_sched(4, 6); // 8-row pages, prompt 4
+        assert_eq!(s.free_pages(), 6);
+        assert_eq!(s.total_pages(), 6);
+        assert_eq!(s.queued_pages(), 0);
+        assert!(s.inflight_ids().is_empty());
+        s.submit(req(7, 12)).unwrap(); // 16 rows → 2 pages
+        s.submit(req(8, 2)).unwrap(); // 6 rows → 1 page
+        assert_eq!(s.queued_pages(), 3, "queued demand must sum admission pages");
+        assert_eq!(s.free_pages(), 6, "queueing allocates nothing");
+        s.plan_admissions();
+        assert_eq!(s.queued_pages(), 0);
+        assert_eq!(s.free_pages(), 3);
+        let mut ids = s.inflight_ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![7, 8]);
+        // lazy admission sizes the reservation differently
+        let lazy = paged_sched(4, 6).with_reserve(ReservationPolicy::Lazy);
+        assert_eq!(lazy.admission_pages(&req(7, 12)), 1, "prompt 4 + 1 slot");
+        let up = paged_sched(4, 6);
+        assert_eq!(up.admission_pages(&req(7, 12)), 2);
     }
 
     #[test]

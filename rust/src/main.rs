@@ -7,7 +7,7 @@
 //!               [--prefill-policy blocking|chunked] [--prefill-chunk C]
 //!               [--prefill-greedy] [--kv-pages P] [--page-len L]
 //!               [--kv-reserve upfront|lazy] [--kv-overcommit F]
-//!               [--artifacts DIR]
+//!               [--shards N] [--artifacts DIR]
 //! flexllm ablate [--artifacts DIR]
 //! flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
 //! flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
@@ -15,13 +15,16 @@
 //!
 //! (CLI is hand-rolled: the offline vendored crate set has no clap.)
 
+use std::collections::VecDeque;
+
 use flexllm::anyhow::{anyhow, bail, Result};
 
 use flexllm::arch::{AcceleratorSystem, DecodeArch, PrefillArch};
 use flexllm::config::{DeviceConfig, ModelDims};
-use flexllm::coordinator::{Engine, ExecBackend, GenRequest, GenResult, KvLayout,
-                           MockBackend, ModeledBackend, PrefillPolicy,
-                           ReservationPolicy, Router, ServeMetrics};
+use flexllm::coordinator::{place_shard, split_budget, Engine, ExecBackend, GenRequest,
+                           GenResult, KvLayout, MockBackend, ModeledBackend,
+                           PrefillPolicy, ReservationPolicy, RouterBuilder,
+                           ServeMetrics};
 use flexllm::eval;
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;
@@ -37,7 +40,7 @@ USAGE:
                 [--prefill-policy blocking|chunked] [--prefill-chunk C]
                 [--prefill-greedy] [--kv-pages P] [--page-len L]
                 [--kv-reserve upfront|lazy] [--kv-overcommit F]
-                [--artifacts DIR]
+                [--shards N] [--artifacts DIR]
       Serve generation requests through the iteration-level scheduler.
       --spread K        skew budgets: request i gets ~new-tokens·(i%K+1)/K
       --arrival-rate R  stagger submissions at R req/s (pjrt backend)
@@ -71,6 +74,13 @@ USAGE:
       --kv-overcommit F shrink the mock/modeled paged pool to 1/F of the
                         dense memory budget (default 1; needs --kv-reserve
                         lazy to be useful — upfront admission just queues)
+      --shards N        serve over N engine shards: each shard owns its
+                        own scheduler, KV pool and backend instance, and
+                        requests go to the shard with the most free pages
+                        (FIFO overflow when all are starved). mock/modeled
+                        split the KV budget evenly across shards at equal
+                        total memory; pjrt opens one artifact set (device)
+                        per shard via the threaded Router
       Examples:
         flexllm serve --backend modeled --requests 32 --spread 4 \
                       --prefill-policy chunked --prefill-chunk 32
@@ -83,6 +93,10 @@ USAGE:
                       --page-len 32 --kv-reserve lazy --kv-overcommit 2
                       # lazy growth on half the memory: watch pages grown,
                       # preemptions and the fragmentation percentiles
+        flexllm serve --backend modeled --requests 64 --spread 8 \
+                      --kv-pages 40 --page-len 32 --shards 2
+                      # two engine shards on the same total memory: the
+                      # per-shard lines show the free-page balancing
   flexllm ablate [--artifacts DIR]
       Run the Table V quantization ablation on the real artifacts.
   flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
@@ -355,58 +369,117 @@ fn serve(a: &Args) -> Result<()> {
     let reserve = kv_reserve(a)?;
     let overcommit = a.get_f64("kv-overcommit", 1.0)?;
     let paged = paged_request(a, reserve, overcommit)?;
+    let shards = a.get_u64("shards", 1)?.max(1) as usize;
     let stop: Vec<i32> = match a.get("stop-token") {
         Some(v) => vec![v.parse().map_err(|_| anyhow!("--stop-token: bad token '{v}'"))?],
         None => Vec::new(),
     };
     match a.get_str("backend", "pjrt").as_str() {
         "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop, policy,
-                             paged.is_some(), reserve),
+                             paged.is_some(), reserve, shards),
         "mock" => {
-            let mut engine = match paged {
+            let mut engines: Vec<Engine<MockBackend>> = match paged {
                 Some((pages, page_len)) => {
                     let (pages, page_len) =
                         sim_paged_geometry(pages, page_len, overcommit)?;
-                    let mut backend =
-                        MockBackend::paged(pages, 128, 320, 512, page_len, pages);
-                    if reserve == ReservationPolicy::Lazy {
-                        // lazy growth legitimately extends page tables
-                        backend = backend.with_table_growth();
-                    }
-                    Engine::with_reservation(backend, policy, KvLayout::Paged, reserve)
+                    split_budget(pages, shards)?
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, p)| {
+                            let mut backend =
+                                MockBackend::paged(p, 128, 320, 512, page_len, p);
+                            if reserve == ReservationPolicy::Lazy {
+                                // lazy growth legitimately extends tables
+                                backend = backend.with_table_growth();
+                            }
+                            Engine::with_reservation(backend, policy, KvLayout::Paged,
+                                                     reserve)
+                                .with_shard_id(i)
+                        })
+                        .collect()
                 }
-                None => Engine::with_policy(MockBackend::new(4, 128, 320, 512), policy),
+                None => split_budget(4, shards)?
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, lanes)| {
+                        Engine::with_policy(MockBackend::new(lanes, 128, 320, 512),
+                                            policy)
+                            .with_shard_id(i)
+                    })
+                    .collect(),
             };
-            println!("prefill policy: {}", describe_policy(engine.policy()));
-            let results = drive_sim(&mut engine, n, new_tokens, spread, stream, &stop)?;
-            print_summary(&results, &engine.metrics, engine.lanes());
+            println!("prefill policy: {}", describe_policy(engines[0].policy()));
+            let results = if shards > 1 {
+                println!("engine shards: {shards} (free-page balanced)");
+                drive_sim_sharded(&mut engines, n, new_tokens, spread, stream, &stop)?
+            } else {
+                drive_sim(&mut engines[0], n, new_tokens, spread, stream, &stop)?
+            };
+            let per: Vec<ServeMetrics> =
+                engines.iter().map(|e| e.metrics.clone()).collect();
+            let merged = ServeMetrics::merge(&per);
+            print_summary(&results, &merged, engines[0].lanes());
+            print_shard_lines(&per);
             Ok(())
         }
         "modeled" => {
-            let mut engine = match paged {
+            let mut engines: Vec<Engine<ModeledBackend>> = match paged {
                 Some((pages, page_len)) => {
                     let (pages, page_len) =
                         sim_paged_geometry(pages, page_len, overcommit)?;
-                    let mut backend = ModeledBackend::u280_paged(
-                        pages, 128, 320, 512, page_len, pages, 4);
-                    if reserve == ReservationPolicy::Lazy {
-                        backend = backend.with_table_growth();
-                    }
-                    Engine::with_reservation(backend, policy, KvLayout::Paged, reserve)
+                    split_budget(pages, shards)?
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, p)| {
+                            let mut backend = ModeledBackend::u280_paged(
+                                p, 128, 320, 512, page_len, p, 4);
+                            if reserve == ReservationPolicy::Lazy {
+                                backend = backend.with_table_growth();
+                            }
+                            Engine::with_reservation(backend, policy, KvLayout::Paged,
+                                                     reserve)
+                                .with_shard_id(i)
+                        })
+                        .collect()
                 }
-                None => Engine::with_policy(ModeledBackend::u280(4, 128, 320, 512),
-                                            policy),
+                None => split_budget(4, shards)?
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, lanes)| {
+                        Engine::with_policy(
+                            ModeledBackend::u280(lanes, 128, 320, 512), policy)
+                            .with_shard_id(i)
+                    })
+                    .collect(),
             };
-            println!("prefill policy: {}", describe_policy(engine.policy()));
-            let results = drive_sim(&mut engine, n, new_tokens, spread, stream, &stop)?;
-            print_summary(&results, &engine.metrics, engine.lanes());
-            let model_s = engine.backend.model_time_s;
+            println!("prefill policy: {}", describe_policy(engines[0].policy()));
+            let results = if shards > 1 {
+                println!("engine shards: {shards} (free-page balanced, modeled \
+                          clocks independent per shard)");
+                drive_sim_sharded(&mut engines, n, new_tokens, spread, stream, &stop)?
+            } else {
+                drive_sim(&mut engines[0], n, new_tokens, spread, stream, &stop)?
+            };
+            let per: Vec<ServeMetrics> =
+                engines.iter().map(|e| e.metrics.clone()).collect();
+            let merged = ServeMetrics::merge(&per);
+            print_summary(&results, &merged, engines[0].lanes());
+            print_shard_lines(&per);
+            // aggregate modeled time: the slowest shard bounds the run
+            let model_s = engines
+                .iter()
+                .map(|e| e.backend.model_time_s)
+                .fold(0.0f64, f64::max);
             let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
-            println!("  modeled U280 time: {}  ({:.1} tok/s on the paper's stage \
-                      engines; prefill engine {} decode engine {})",
+            println!("  modeled U280 time: {}  ({:.1} tok/s aggregate on {} \
+                      replicated stage-engine pair{})",
                      fmt_secs(model_s), toks as f64 / model_s.max(1e-12),
-                     fmt_secs(engine.backend.prefill_clock_s),
-                     fmt_secs(engine.backend.decode_clock_s));
+                     shards, if shards == 1 { "" } else { "s" });
+            for e in &engines {
+                println!("    shard {}: prefill engine {}  decode engine {}",
+                         e.shard_id(), fmt_secs(e.backend.prefill_clock_s),
+                         fmt_secs(e.backend.decode_clock_s));
+            }
             Ok(())
         }
         other => bail!("unknown backend '{other}' (pjrt|mock|modeled)"),
@@ -442,10 +515,72 @@ fn drive_sim<B: ExecBackend>(engine: &mut Engine<B>, n: usize, new_tokens: usize
     Ok(done.into_iter().map(|(_, r)| r).collect())
 }
 
+/// Drive N in-process engine shards to completion: requests flow
+/// head-first through the least-loaded-by-free-pages placement with a
+/// FIFO overflow (exactly the threaded Router's policy, inline), and
+/// every busy shard steps once per round. Results in submission order.
+fn drive_sim_sharded<B: ExecBackend>(engines: &mut [Engine<B>], n: usize,
+                                     new_tokens: usize, spread: usize, stream: bool,
+                                     stop: &[i32]) -> Result<Vec<GenResult>> {
+    let s = engines[0].prefill_len();
+    let mut overflow: VecDeque<GenRequest> = (0..n)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..s).map(|j| ((i * 7 + j * 13) % 512) as i32).collect();
+            GenRequest::new(i as u64, prompt, skewed_budget(i, new_tokens, spread))
+                .with_stop_tokens(stop.to_vec())
+        })
+        .collect();
+    let mut done: Vec<GenResult> = Vec::new();
+    loop {
+        // place the FIFO head while some shard has pages for it
+        while let Some(head) = overflow.front() {
+            let Some(sh) = place_shard(engines, head) else { break };
+            let req = overflow.pop_front().expect("front checked above");
+            engines[sh].submit(req)?;
+        }
+        if engines.iter().all(|e| !e.has_work()) {
+            if overflow.is_empty() {
+                break;
+            }
+            return Err(anyhow!(
+                "placement stuck: a request's reservation exceeds every shard's \
+                 pool (add pages or lower --kv-overcommit / --shards)"));
+        }
+        for (sh, engine) in engines.iter_mut().enumerate() {
+            if !engine.has_work() {
+                continue;
+            }
+            let report = engine.step()?;
+            if stream {
+                for ev in &report.events {
+                    println!("  [req {} shard {sh}] #{} tok {}{}", ev.id, ev.index,
+                             ev.token, if ev.done { "  <done>" } else { "" });
+                }
+            }
+            done.extend(report.completed.into_iter().map(|(_, r)| r));
+        }
+    }
+    done.sort_by_key(|r| r.id);
+    Ok(done)
+}
+
+fn print_shard_lines(per: &[ServeMetrics]) {
+    if per.len() <= 1 {
+        return;
+    }
+    for (i, m) in per.iter().enumerate() {
+        println!("  shard {i}: {} requests  peak concurrency {}  pages peak {}/{}  \
+                  grown {}  preemptions {}",
+                 m.requests, m.peak_active, m.kv_pages_peak, m.kv_pages_total,
+                 m.kv_pages_grown, m.preemptions);
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool,
               stop: Vec<i32>, policy: PrefillPolicy, paged: bool,
-              reserve: ReservationPolicy) -> Result<()> {
+              reserve: ReservationPolicy, shards: usize) -> Result<()> {
     let artifacts = a.get_str("artifacts", "artifacts");
     println!("prefill policy requested: {}", describe_policy(policy));
     let layout = if paged {
@@ -471,8 +606,15 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
     let base: Vec<Vec<i32>> = toks.chunks_exact(s).map(|c| c.to_vec()).collect();
     drop(rt);
 
-    let router = Router::spawn_with_options(artifacts.to_string(), policy, layout,
-                                            reserve)?;
+    if shards > 1 {
+        println!("engine shards: {shards} (one artifact runtime per shard)");
+    }
+    let router = RouterBuilder::new()
+        .policy(policy)
+        .layout(layout)
+        .reserve(reserve)
+        .shards(shards)
+        .spawn(artifacts.to_string())?;
     if stream {
         let events = router.subscribe()?;
         std::thread::spawn(move || {
@@ -510,6 +652,9 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
     let wall = t0.elapsed();
     let m = router.metrics()?;
     print_summary(&results, &m, lanes);
+    if shards > 1 {
+        print_shard_lines(&router.shard_metrics()?);
+    }
     println!("  wall time: {}", fmt_secs(wall.as_secs_f64()));
     for r in results.iter().take(2) {
         println!("  req {}: ttft {} first tokens {:?}",

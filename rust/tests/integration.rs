@@ -5,7 +5,7 @@
 //! cross-checks, end-to-end serving, and the HMT segment pipeline.
 
 use flexllm::coordinator::{Engine, GenRequest, HmtDriver, PjrtBackend, PrefillPolicy,
-                           Router};
+                           RouterBuilder};
 use flexllm::eval::ablation;
 use flexllm::runtime::{argmax_rows, lit_f32, to_f32, Runtime};
 
@@ -216,7 +216,7 @@ fn skewed_queue_backfills_and_matches_uniform_streams() {
 
 #[test]
 fn router_thread_roundtrip() {
-    let router = Router::spawn(artifact_dir()).unwrap();
+    let router = RouterBuilder::new().spawn(artifact_dir()).unwrap();
     let rt = runtime();
     let s = rt.manifest.serving.prefill_len;
     drop(rt);
@@ -231,7 +231,7 @@ fn router_thread_roundtrip() {
 
 #[test]
 fn router_rejects_bad_prompt() {
-    let router = Router::spawn(artifact_dir()).unwrap();
+    let router = RouterBuilder::new().spawn(artifact_dir()).unwrap();
     let q = vec![GenRequest::new(0, vec![0i32; 3], 2)];
     assert!(router.generate(q).is_err());
     // the engine thread must survive the error
@@ -244,7 +244,7 @@ fn router_rejects_bad_prompt() {
 
 #[test]
 fn router_submit_drain_and_stream() {
-    let router = Router::spawn(artifact_dir()).unwrap();
+    let router = RouterBuilder::new().spawn(artifact_dir()).unwrap();
     let rt = runtime();
     let s = rt.manifest.serving.prefill_len;
     drop(rt);

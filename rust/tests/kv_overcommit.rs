@@ -49,6 +49,7 @@ fn skewed_cfg(reserve: ReservationPolicy) -> OpenLoopConfig {
         // same memory budget: 4 lanes × 320 rows = 40 pages × 32 rows
         paged: Some(PagedPoolConfig::same_memory_as_dense(4, 320, 32, 24)),
         reserve,
+        shards: 1,
         seed: 0x5EED,
     }
 }

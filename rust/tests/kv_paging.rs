@@ -60,6 +60,7 @@ fn skewed_cfg() -> OpenLoopConfig {
         max_new_tokens: 48,
         paged: None,
         reserve: ReservationPolicy::Upfront,
+        shards: 1,
         seed: 0x5EED,
     }
 }

@@ -1,0 +1,469 @@
+//! Sharded multi-engine Router — differential property suite (tier-1,
+//! no artifacts).
+//!
+//! Five claims are gated here (ISSUE 5 acceptance):
+//!
+//! 1. **N=1 == unsharded, bit for bit**: over seeded random workloads
+//!    and the FULL policy matrix {Blocking, Chunked} × {Dense, Paged} ×
+//!    {Upfront, Lazy}, a `RouterBuilder ... .shards(1)` Router produces
+//!    byte-identical per-request token streams (token, index, done),
+//!    identical finish reasons and identical completion counts/order to
+//!    the PR 4 engine driven directly — the sharding layer adds no
+//!    observable behavior at N=1.
+//! 2. **N=2 stream preservation under preemption**: with two tight lazy
+//!    pools, forced preemption stays LOCAL to its shard and every
+//!    request still streams its exact mock-derived bytes, gapless and
+//!    exactly once, with exactly-once completions.
+//! 3. **Invariant fuzz**: dozens of seeded random configs over an
+//!    in-process multi-shard driver assert, at EVERY tick and for every
+//!    shard, `free + allocated == total` pages, page accounting synced
+//!    to the lane tables, no request in two shards' in-flight tables,
+//!    and drained results a permutation of submissions.
+//! 4. **Placement policy**: least-loaded-by-free-pages picks the
+//!    emptiest shard deterministically (lowest id on ties) and starves
+//!    to the FIFO overflow only when NO shard fits.
+//! 5. **The sharding headline**: on the modeled backend at equal total
+//!    KV memory, 2 shards sustain ≥ 1.8× the aggregate decode
+//!    throughput of 1 shard on the skewed open-loop workload.
+//!
+//! (`ServeMetrics::merge` percentile-pooling unit tests live next to
+//! the implementation in `coordinator/request.rs`.)
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use flexllm::coordinator::{place_shard, run_open_loop, ArrivalProcess, Engine,
+                           GenRequest, KvLayout, MockBackend, OpenLoopConfig,
+                           PagedPoolConfig, PrefillPolicy, ReservationPolicy,
+                           RouterBuilder, ServeMetrics, TokenEvent};
+use flexllm::util::prop::Rng;
+
+const VOCAB: usize = 512;
+const LANES: usize = 4;
+const PREFILL: usize = 8;
+const MAX_SEQ: usize = 32;
+const PAGE_LEN: usize = 4;
+const PAGES: usize = 16;
+
+/// One mock backend of the matrix geometry: 4 lanes, 8-token prompts,
+/// 32-row cache; paged = 16 pages of 4 rows (same total memory).
+fn mock_for(layout: KvLayout, reserve: ReservationPolicy) -> MockBackend {
+    match layout {
+        KvLayout::Dense => MockBackend::new(LANES, PREFILL, MAX_SEQ, VOCAB),
+        KvLayout::Paged => {
+            let m = MockBackend::paged(LANES, PREFILL, MAX_SEQ, VOCAB, PAGE_LEN, PAGES);
+            match reserve {
+                ReservationPolicy::Lazy => m.with_table_growth(),
+                ReservationPolicy::Upfront => m,
+            }
+        }
+    }
+}
+
+/// A seeded random workload: prompts, skewed budgets, occasional stop
+/// tokens (so both finish reasons appear on both sides of every diff).
+fn workload(seed: u64, n: usize) -> Vec<GenRequest> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let prompt = rng.tokens(PREFILL, VOCAB as i32);
+            let budget = rng.usize_in(1, MAX_SEQ - PREFILL);
+            let mut req = GenRequest::new(i as u64, prompt, budget);
+            if rng.bool() {
+                // a random stop token: usually never generated, but the
+                // seeded streams make some requests stop early
+                req = req.with_stop_tokens(vec![rng.u64_in(0, VOCAB as u64 - 1) as i32]);
+            }
+            req
+        })
+        .collect()
+}
+
+type Stream = Vec<(i32, usize, bool)>;
+
+/// Drive an unsharded engine to completion, collecting per-request
+/// event streams and the drain-ordered (seq-sorted) completions.
+fn drive_unsharded(engine: &mut Engine<MockBackend>, queue: &[GenRequest])
+    -> (HashMap<u64, Stream>, Vec<(u64, &'static str)>)
+{
+    for req in queue {
+        engine.submit(req.clone()).unwrap();
+    }
+    let mut streams: HashMap<u64, Stream> = HashMap::new();
+    let mut completed = Vec::new();
+    while engine.has_work() {
+        let report = engine.step().unwrap();
+        for TokenEvent { id, token, index, done } in report.events.iter().copied() {
+            streams.entry(id).or_default().push((token, index, done));
+        }
+        completed.extend(report.completed);
+    }
+    completed.sort_by_key(|&(seq, _)| seq);
+    let done = completed
+        .into_iter()
+        .map(|(_, r)| (r.id, finish_str(&r)))
+        .collect();
+    (streams, done)
+}
+
+fn finish_str(r: &flexllm::coordinator::GenResult) -> &'static str {
+    match r.finish_reason {
+        flexllm::coordinator::FinishReason::Stop => "stop",
+        flexllm::coordinator::FinishReason::Length => "length",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. N=1 == unsharded PR 4 engine, bit for bit, full policy matrix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shards_1_is_bit_identical_to_unsharded_across_policy_matrix() {
+    let policies = [PrefillPolicy::Blocking, PrefillPolicy::chunked(3)];
+    let layouts = [KvLayout::Dense, KvLayout::Paged];
+    let reserves = [ReservationPolicy::Upfront, ReservationPolicy::Lazy];
+    for policy in policies {
+        for layout in layouts {
+            for reserve in reserves {
+                for seed in [1u64, 2] {
+                    diff_one_combo(policy, layout, reserve, seed);
+                }
+            }
+        }
+    }
+}
+
+fn diff_one_combo(policy: PrefillPolicy, layout: KvLayout,
+                  reserve: ReservationPolicy, seed: u64) {
+    let label = format!("{policy:?}/{layout:?}/{reserve:?}/seed {seed}");
+    let queue = workload(seed, 10);
+
+    // the PR 4 reference: the engine driven directly, no Router
+    let mut reference =
+        Engine::with_reservation(mock_for(layout, reserve), policy, layout, reserve);
+    let (ref_streams, ref_done) = drive_unsharded(&mut reference, &queue);
+
+    // the same workload through a 1-shard Router (engine thread,
+    // placement layer, fan-in — the whole tentpole path)
+    let router = RouterBuilder::new()
+        .policy(policy)
+        .layout(layout)
+        .reserve(reserve)
+        .shards(1)
+        .spawn_with(move |_| Ok(mock_for(layout, reserve)))
+        .unwrap();
+    let events = router.subscribe().unwrap();
+    router.submit(queue).unwrap();
+    let results = router.drain().unwrap();
+
+    // completion COUNT and global submission ORDER
+    assert_eq!(results.len(), ref_done.len(), "{label}: completion count diverged");
+    let got: Vec<(u64, &'static str)> =
+        results.iter().map(|r| (r.id, finish_str(r))).collect();
+    assert_eq!(got, ref_done,
+               "{label}: drain order or finish reasons diverged");
+
+    // result token vectors
+    let ref_tokens: HashMap<u64, Vec<i32>> = ref_streams
+        .iter()
+        .map(|(&id, s)| (id, s.iter().map(|&(t, _, _)| t).collect()))
+        .collect();
+    for r in &results {
+        assert_eq!(&r.tokens, &ref_tokens[&r.id],
+                   "{label}: request {} tokens diverged", r.id);
+    }
+
+    // byte-identical event streams: (token, index, done), in order
+    let mut router_streams: HashMap<u64, Stream> = HashMap::new();
+    for ev in events.try_iter() {
+        router_streams.entry(ev.id).or_default().push((ev.token, ev.index, ev.done));
+    }
+    assert_eq!(router_streams.len(), ref_streams.len(),
+               "{label}: stream fan-in lost a request");
+    for (&id, want) in &ref_streams {
+        assert_eq!(&router_streams[&id], want,
+                   "{label}: request {id} event stream diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. N=2: per-request streams survive forced preemption, exactly once
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_shards_preserve_streams_under_forced_preemption() {
+    // 7 pages of 4 rows PER SHARD; every request needs 5 pages over its
+    // life (8 prompt + 12 new = 20 rows) but binds only 3 lazily — two
+    // requests sharing a shard exhaust it mid-decode, forcing local
+    // preempt-and-recompute
+    let router = RouterBuilder::new()
+        .policy(PrefillPolicy::chunked(4))
+        .layout(KvLayout::Paged)
+        .reserve(ReservationPolicy::Lazy)
+        .shards(2)
+        .spawn_with(|_| {
+            Ok(MockBackend::paged(4, 8, 32, VOCAB, 4, 7).with_table_growth())
+        })
+        .unwrap();
+    let events = router.subscribe().unwrap();
+    let queue: Vec<GenRequest> =
+        (0..4).map(|i| GenRequest::new(i, vec![i as i32 + 5; 8], 12)).collect();
+    router.submit(queue).unwrap();
+    let results = router.drain().unwrap();
+
+    // exactly-once completions, in global submission order
+    assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+
+    // the pool is tight enough that preemption must have fired, and it
+    // stayed local: every stream is still the exact mock derivation
+    let merged = router.metrics().unwrap();
+    assert!(merged.preemptions >= 1,
+            "tight per-shard pools must force at least one preemption");
+    for r in &results {
+        let want = MockBackend::expected_tokens(&[r.id as i32 + 5; 8], 12, VOCAB);
+        assert_eq!(r.tokens, want, "request {} stream diverged", r.id);
+    }
+
+    // subscriber streams: gapless, in-order, no replayed duplicates
+    let mut streams: HashMap<u64, Vec<(i32, usize)>> = HashMap::new();
+    for ev in events.try_iter() {
+        streams.entry(ev.id).or_default().push((ev.token, ev.index));
+    }
+    for id in 0..4u64 {
+        let idxs: Vec<usize> = streams[&id].iter().map(|&(_, i)| i).collect();
+        assert_eq!(idxs, (0..12).collect::<Vec<_>>(),
+                   "request {id}: stream not gapless/in-order/once");
+        let toks: Vec<i32> = streams[&id].iter().map(|&(t, _)| t).collect();
+        assert_eq!(toks, MockBackend::expected_tokens(&[id as i32 + 5; 8], 12, VOCAB),
+                   "request {id}: event bytes diverged");
+    }
+
+    // metrics fan-in is consistent with the per-shard breakdown
+    let per = router.shard_metrics().unwrap();
+    assert_eq!(per.len(), 2);
+    assert_eq!(per.iter().map(|m| m.requests).sum::<usize>(), 4);
+    assert_eq!(ServeMetrics::merge(&per).requests, merged.requests);
+    assert_eq!(per.iter().map(|m| m.preemptions).sum::<usize>(),
+               merged.preemptions);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Invariant fuzz: seeded random configs over an in-process driver
+// ---------------------------------------------------------------------------
+
+/// Build one shard's mock engine for a random geometry.
+fn fuzz_engine(paged: bool, reserve: ReservationPolicy, policy: PrefillPolicy,
+               lanes: usize, prefill: usize, max_seq: usize, page_len: usize,
+               pages: usize, shard: usize) -> Engine<MockBackend> {
+    let backend = if paged {
+        let m = MockBackend::paged(lanes, prefill, max_seq, VOCAB, page_len, pages);
+        match reserve {
+            ReservationPolicy::Lazy => m.with_table_growth(),
+            ReservationPolicy::Upfront => m,
+        }
+    } else {
+        MockBackend::new(lanes, prefill, max_seq, VOCAB)
+    };
+    let layout = if paged { KvLayout::Paged } else { KvLayout::Dense };
+    Engine::with_reservation(backend, policy, layout, reserve).with_shard_id(shard)
+}
+
+#[test]
+fn fuzz_sharded_invariants_hold_at_every_tick() {
+    for case in 0..36u64 {
+        let mut rng = Rng::new(0x5A4D_0000 + case);
+        let shards = rng.usize_in(1, 3);
+        let paged = rng.bool();
+        let reserve = if paged && rng.bool() {
+            ReservationPolicy::Lazy
+        } else {
+            ReservationPolicy::Upfront
+        };
+        let policy = if rng.bool() {
+            PrefillPolicy::Blocking
+        } else {
+            PrefillPolicy::chunked(rng.usize_in(1, 5))
+        };
+        // geometry chosen so any request fits any single empty shard:
+        // max reservation = ceil(16/4) = 4 pages ≤ every shard's pool
+        let prefill = 4;
+        let max_seq = 16;
+        let page_len = 4;
+        let pages = rng.usize_in(4, 8);
+        let lanes = rng.usize_in(1, 3);
+        let mut engines: Vec<Engine<MockBackend>> = (0..shards)
+            .map(|s| fuzz_engine(paged, reserve, policy, lanes, prefill, max_seq,
+                                 page_len, pages, s))
+            .collect();
+
+        let n = rng.usize_in(5, 14);
+        let mut overflow: VecDeque<GenRequest> = (0..n)
+            .map(|i| {
+                let mut req = GenRequest::new(i as u64, rng.tokens(prefill, VOCAB as i32),
+                                              rng.usize_in(1, max_seq - prefill));
+                if rng.bool() {
+                    req = req.with_stop_tokens(
+                        vec![rng.u64_in(0, VOCAB as u64 - 1) as i32]);
+                }
+                req
+            })
+            .collect();
+        let submitted: Vec<u64> = overflow.iter().map(|r| r.id).collect();
+
+        let mut completed: Vec<u64> = Vec::new();
+        let mut ticks = 0usize;
+        loop {
+            // the Router's placement rule, inline: FIFO head to the
+            // shard with the most free pages, spill when starved
+            while let Some(head) = overflow.front() {
+                let Some(s) = place_shard(&engines, head) else { break };
+                let req = overflow.pop_front().expect("front checked");
+                engines[s].submit(req).unwrap();
+            }
+            if engines.iter().all(|e| !e.has_work()) {
+                assert!(overflow.is_empty(),
+                        "case {case}: overflow stuck with all shards idle");
+                break;
+            }
+            for e in engines.iter_mut() {
+                if !e.has_work() {
+                    continue;
+                }
+                let report = e.step().unwrap();
+                completed.extend(report.completed.iter().map(|(_, r)| r.id));
+            }
+            ticks += 1;
+            assert!(ticks < 10_000, "case {case}: driver did not terminate");
+
+            // ---- per-tick invariants -------------------------------------
+            let mut seen: HashSet<u64> = HashSet::new();
+            for e in &engines {
+                let sched = &e.scheduler;
+                // free + allocated == total, every tick, every shard —
+                // with "allocated" counted INDEPENDENTLY off the live
+                // lane tables, so a page that is neither free nor held
+                // (leak) or doubly held (alias) breaks the equation
+                let held: usize = (0..sched.lanes())
+                    .map(|l| sched.page_table(l).map(|p| p.len()).unwrap_or(0))
+                    .sum();
+                assert_eq!(sched.free_pages() + held, sched.total_pages(),
+                           "case {case} shard {}: free + allocated != total",
+                           e.shard_id());
+                // ...and the allocator's own view agrees with the tables
+                assert_eq!(sched.page_stats().pages_in_use, held,
+                           "case {case} shard {}: allocator desynced from lane \
+                            tables", e.shard_id());
+                // no request may appear in two shards' in-flight tables
+                for id in sched.inflight_ids() {
+                    assert!(seen.insert(id),
+                            "case {case}: request {id} in flight on two shards");
+                    assert!(submitted.contains(&id),
+                            "case {case}: unknown request {id} in flight");
+                }
+            }
+        }
+
+        // drained results are a permutation of submissions
+        let mut got = completed.clone();
+        got.sort_unstable();
+        let mut want = submitted.clone();
+        want.sort_unstable();
+        assert_eq!(got, want,
+                   "case {case}: completions are not a permutation of submissions");
+        assert_eq!(completed.len(), n, "case {case}: duplicate completion");
+        // nothing left behind
+        for e in &engines {
+            assert_eq!(e.scheduler.page_stats().pages_in_use, 0,
+                       "case {case} shard {}: leaked pages at the end",
+                       e.shard_id());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Placement policy unit checks
+// ---------------------------------------------------------------------------
+
+#[test]
+fn placement_picks_most_free_pages_with_deterministic_ties() {
+    let policy = PrefillPolicy::chunked(4);
+    let mk = |pages: usize, shard: usize| {
+        fuzz_engine(true, ReservationPolicy::Upfront, policy, 4, 8, 32, 4, pages,
+                    shard)
+    };
+    let mut engines = vec![mk(8, 0), mk(8, 1), mk(8, 2)];
+    // 8-token prompt + 4 new = 12 rows = 3 pages under Upfront
+    let req = GenRequest::new(0, vec![1; 8], 4);
+    // all equal → lowest shard id
+    assert_eq!(place_shard(&engines, &req), Some(0));
+    // queue demand counts against a shard's headroom
+    engines[0].submit(req.clone()).unwrap();
+    assert_eq!(engines[0].placement_free_pages(), 5);
+    assert_eq!(place_shard(&engines, &req), Some(1), "tie breaks to lowest id");
+    engines[1].submit(req.clone()).unwrap();
+    engines[2].submit(req.clone()).unwrap();
+    // 5 free everywhere: still room for one more 3-page reservation
+    assert_eq!(place_shard(&engines, &req), Some(0));
+    engines[0].submit(req.clone()).unwrap();
+    engines[1].submit(req.clone()).unwrap();
+    engines[2].submit(req.clone()).unwrap();
+    // 2 free everywhere < 3 needed: every shard starved → spill
+    assert_eq!(place_shard(&engines, &req), None,
+               "page-starved pool must spill to overflow");
+}
+
+// ---------------------------------------------------------------------------
+// 5. THE acceptance experiment: ≥1.8× aggregate throughput at N=2
+// ---------------------------------------------------------------------------
+
+/// Saturating skewed open loop: one burst of 64 requests with a 3×
+/// budget skew against the paged pool at the dense memory budget (80
+/// pages of 16 rows), chunked prefill — enough concurrent short-ish
+/// requests that the single engine's decode splits into several passes
+/// per tick, which is exactly the serialization sharding removes.
+fn throughput_cfg(shards: usize) -> OpenLoopConfig {
+    OpenLoopConfig {
+        lanes: 4,
+        prefill_len: 64,
+        max_seq: 320,
+        vocab: VOCAB,
+        requests: 64,
+        arrival: ArrivalProcess::Burst,
+        bursts: 1,
+        burst_gap_s: 0.0,
+        burst_jitter_s: 0.05,
+        min_new_tokens: 32,
+        max_new_tokens: 96,
+        paged: Some(PagedPoolConfig::same_memory_as_dense(4, 320, 16, 24)),
+        reserve: ReservationPolicy::Upfront,
+        shards,
+        seed: 0x5EED,
+    }
+}
+
+#[test]
+fn two_shards_sustain_1_8x_aggregate_decode_throughput() {
+    let policy = PrefillPolicy::chunked(32);
+    let one = run_open_loop(policy, &throughput_cfg(1)).unwrap();
+    let two = run_open_loop(policy, &throughput_cfg(2)).unwrap();
+
+    // equal workload, equal TOTAL memory — only the engine count differs
+    assert_eq!(one.tokens, two.tokens, "sharding must not change the workload");
+    assert_eq!(one.kv_pages_total, two.kv_pages_total,
+               "the comparison must be at equal total KV memory");
+    assert_eq!(two.per_shard.len(), 2);
+    assert_eq!(two.per_shard.iter().map(|s| s.requests).sum::<usize>(), 64);
+
+    // THE acceptance claim: replicating the stage engines ~doubles
+    // aggregate decode throughput when memory, not hardware, is split
+    let gain = two.throughput_tps() / one.throughput_tps();
+    assert!(gain >= 1.8,
+            "2 shards must sustain ≥1.8× aggregate decode throughput at equal \
+             total memory, got {gain:.2}× ({:.1} vs {:.1} tok/s, makespan \
+             {:.3}s vs {:.3}s)",
+            two.throughput_tps(), one.throughput_tps(),
+            two.makespan_s, one.makespan_s);
+
+    // both shards pulled their weight (placement balanced, no idle half)
+    let lo = two.per_shard.iter().map(|s| s.requests).min().unwrap();
+    assert!(lo >= 16, "placement starved a shard: {lo}/64 requests");
+}
