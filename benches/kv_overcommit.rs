@@ -46,6 +46,7 @@ fn cfg(min_new: usize, max_new: usize, factor: f64,
         reserve,
         shards: 1,
         seed: 0x5EED,
+        ..OpenLoopConfig::default()
     }
 }
 

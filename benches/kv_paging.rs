@@ -37,6 +37,7 @@ fn cfg(min_new: usize, max_new: usize) -> OpenLoopConfig {
         reserve: ReservationPolicy::Upfront,
         shards: 1,
         seed: 0x5EED,
+        ..OpenLoopConfig::default()
     }
 }
 

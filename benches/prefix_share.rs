@@ -1,0 +1,97 @@
+//! Shared-prefix sweep: admission hit rate, p95 TTFT and peak admitted
+//! concurrency vs the shared fraction of the workload, with the prefix
+//! cache ON and OFF at EQUAL total KV memory (identical arrival trace
+//! per fraction — only the admission path differs), on the U280-modeled
+//! backend.
+//!
+//! Each point runs the seeded open-loop workload (128-token prompts, a
+//! 112-token / 7-page "system prompt" drawn from 2 groups) at shared
+//! fraction ∈ {0, 0.5, 0.8, 1.0} and reports the hit rate, the TTFT
+//! and concurrency gains vs the cache-off twin, and the full stats
+//! object. The 0.8 point is the tier-1 acceptance workload
+//! (`tests/prefix_share.rs`, ≥5× p95 TTFT / ≥2× concurrency); its hit
+//! rate is gated in CI against the committed `BENCH_prefix_share.json`
+//! floor, so a placement or eviction regression that silently stops
+//! sharing fails the `scheduler-sim` job even while the streams stay
+//! correct.
+//!
+//! Output: `prefix_share.json` in the working directory (override with
+//! the `PREFIX_SHARE_OUT` environment variable), also echoed to stdout.
+
+use flexllm::coordinator::{run_open_loop, ArrivalProcess, OpenLoopConfig,
+                           PagedPoolConfig, PrefillPolicy, ReservationPolicy};
+
+/// 16-row pages at the dense memory budget (4 × 320 rows = 80 pages).
+const PAGE_LEN: usize = 16;
+/// 7 aligned pages of every shared prompt are page-cache residents.
+const SHARED_PREFIX: usize = 112;
+const FRACS: &[f64] = &[0.0, 0.5, 0.8, 1.0];
+
+fn cfg(shared_frac: f64, prefix_share: bool) -> OpenLoopConfig {
+    OpenLoopConfig {
+        lanes: 4,
+        prefill_len: 128,
+        max_seq: 320,
+        vocab: 512,
+        requests: 64,
+        arrival: ArrivalProcess::Burst,
+        bursts: 2,
+        burst_gap_s: 1.0,
+        burst_jitter_s: 0.05,
+        min_new_tokens: 16,
+        max_new_tokens: 64,
+        paged: Some(PagedPoolConfig::same_memory_as_dense(4, 320, PAGE_LEN, 16)),
+        reserve: ReservationPolicy::Upfront,
+        shards: 1,
+        shared_prefix_len: SHARED_PREFIX,
+        prefix_groups: 2,
+        shared_frac,
+        prefix_share,
+        seed: 0x5EED,
+        ..OpenLoopConfig::default()
+    }
+}
+
+fn main() {
+    let policy = PrefillPolicy::chunked(32);
+    let mut entries: Vec<String> = Vec::new();
+
+    for &frac in FRACS {
+        let off = run_open_loop(policy, &cfg(frac, false))
+            .expect("cache-off open loop");
+        for &share in &[false, true] {
+            let stats = if share {
+                run_open_loop(policy, &cfg(frac, true))
+                    .expect("cache-on open loop")
+            } else {
+                off.clone()
+            };
+            let ttft_gain = off.ttft_p95_s / stats.ttft_p95_s.max(1e-12);
+            let peak_gain =
+                stats.peak_active as f64 / (off.peak_active as f64).max(1e-12);
+            entries.push(format!(
+                "{{\"shared_frac\": {frac:.2}, \"prefix_share\": {share}, \
+                 \"ttft_p95_gain_vs_off\": {ttft_gain:.4}, \
+                 \"peak_active_gain_vs_off\": {peak_gain:.4}, \
+                 \"stats\": {}}}",
+                stats.to_json()));
+            println!(
+                "frac {frac:.2} cache {}: hit rate {:>5.1}% | \
+                 ttft p95 {:.4}s ({ttft_gain:.2}x vs off) | peak {:>2} | \
+                 shared pages {} | cow {}",
+                if share { " on" } else { "off" },
+                stats.prefix_hit_rate * 100.0, stats.ttft_p95_s,
+                stats.peak_active, stats.kv_pages_shared, stats.cow_copies);
+        }
+    }
+
+    let doc = format!(
+        "{{\"bench\": \"prefix_share\", \"backend\": \"modeled-u280\", \
+         \"page_len\": {PAGE_LEN}, \"shared_prefix_len\": {SHARED_PREFIX}, \
+         \"prefix_groups\": 2, \"requests\": 64, \"points\": [{}]}}\n",
+        entries.join(", "));
+    let out = std::env::var("PREFIX_SHARE_OUT")
+        .unwrap_or_else(|_| "prefix_share.json".to_string());
+    std::fs::write(&out, &doc).expect("write prefix_share.json");
+    println!("\nwrote {} sweep points to {out}", entries.len());
+}

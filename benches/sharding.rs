@@ -44,6 +44,7 @@ fn cfg(min_new: usize, max_new: usize, shards: usize,
         reserve,
         shards,
         seed: 0x5EED,
+        ..OpenLoopConfig::default()
     }
 }
 

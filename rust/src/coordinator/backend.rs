@@ -49,6 +49,12 @@ pub struct PagedCaps {
     /// backend maps logical lanes onto invocation slots, so only the
     /// page budget bounds it.
     pub max_lanes: usize,
+    /// Whether [`ExecBackend::bind_resident_prefix`] supports a
+    /// mid-page copy-on-write fork (`cow_rows > 0`). The simulated
+    /// backends copy rows host-side; the PJRT artifact set has no
+    /// page-copy op, so the scheduler rounds shared spans down to page
+    /// boundaries there.
+    pub cow_copy: bool,
 }
 
 /// Fixed shapes and capabilities of an execution backend.
@@ -147,6 +153,23 @@ pub trait ExecBackend {
         Err(anyhow!("backend has no paged prefill chunk"))
     }
 
+    /// The scheduler admitted `lane` with a RESIDENT shared prefix: the
+    /// first `resident_rows` logical cache rows already hold the
+    /// prompt's K/V (written by an earlier request that registered the
+    /// prefix), backed by the first `shared_pages` entries of `pages`
+    /// plus `cow_rows` rows copied into the first private page (the
+    /// copy-on-write fork of a partially matching page). Chunked prefill
+    /// for this lane resumes at `start_pos == resident_rows`; the lane
+    /// must behave exactly as if it had already chunked
+    /// `prompt[..resident_rows]` in. Shared pages are READ-ONLY for
+    /// this lane — gathers may cross them, writes never land in them.
+    /// Invariant: `shared_pages * page_len + cow_rows == resident_rows`.
+    fn bind_resident_prefix(&mut self, _lane: usize, _prompt: &[i32],
+                            _resident_rows: usize, _shared_pages: usize,
+                            _cow_rows: usize, _pages: &[u32]) -> Result<()> {
+        Err(anyhow!("backend has no shared-prefix bind support"))
+    }
+
     /// The scheduler PREEMPTED the request on `lane`: its pages are back
     /// in the free list and the lane will be rebound (possibly to the
     /// same request, for recompute-from-scratch). Backends holding
@@ -154,6 +177,16 @@ pub trait ExecBackend {
     /// it; stale cache rows are harmless (never attended before being
     /// overwritten), so the default is a no-op.
     fn release_lane(&mut self, _lane: usize) {}
+
+    /// The request on `lane` RETIRED normally. Unlike
+    /// [`ExecBackend::release_lane`] this is not a preemption — the
+    /// lane's stream is complete and its cache rows are spent. Backends
+    /// tracking read-only shared-prefix claims
+    /// ([`ExecBackend::bind_resident_prefix`]) must drop the lane's
+    /// claim, so a page later evicted from the prefix index and
+    /// reallocated can be written without tripping the shared-page
+    /// barrier. Default: no-op.
+    fn retire_lane(&mut self, _lane: usize) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -191,6 +224,11 @@ pub struct MockBackend {
     /// run — where a table can never legitimately change — ANY mutation
     /// keeps tripping the exact-match desync check.
     allow_table_growth: bool,
+    /// Pages each lane holds READ-ONLY through a shared-prefix bind.
+    /// They may legitimately appear in several live lanes' tables, but a
+    /// write landing in one (decode scatter or prefill chunk) is a
+    /// refcount/COW bug in the layer above and is rejected.
+    lane_shared: Vec<Vec<u32>>,
     pub prefill_calls: usize,
     pub prefill_slots: usize,
     pub prefill_chunk_calls: usize,
@@ -206,6 +244,8 @@ pub struct MockBackend {
     pub pages_gathered: usize,
     /// Preemption notifications received ([`ExecBackend::release_lane`]).
     pub lanes_released: usize,
+    /// Shared-prefix binds accepted ([`ExecBackend::bind_resident_prefix`]).
+    pub prefix_binds: usize,
 }
 
 impl MockBackend {
@@ -226,6 +266,7 @@ impl MockBackend {
             lane_partial: vec![Vec::new(); lanes],
             lane_table: vec![Vec::new(); lanes],
             allow_table_growth: false,
+            lane_shared: vec![Vec::new(); lanes],
             prefill_calls: 0,
             prefill_slots: 0,
             prefill_chunk_calls: 0,
@@ -235,6 +276,7 @@ impl MockBackend {
             paged_decode_calls: 0,
             pages_gathered: 0,
             lanes_released: 0,
+            prefix_binds: 0,
         }
     }
 
@@ -248,7 +290,8 @@ impl MockBackend {
                  page_len: usize, pages: usize) -> Self {
         assert!(page_len > 0 && page_len <= max_seq && pages > 0);
         let mut m = Self::new(lanes, prefill_len, max_seq, vocab);
-        m.spec.paged = Some(PagedCaps { page_len, pages, max_lanes: lanes });
+        m.spec.paged = Some(PagedCaps { page_len, pages, max_lanes: lanes,
+                                        cow_copy: true });
         m
     }
 
@@ -297,6 +340,12 @@ impl MockBackend {
         let seed = Self::prompt_seed(prompt);
         (0..n).map(|i| Self::token_at(seed, i, vocab)).collect()
     }
+
+    /// Every page currently held read-only by SOME lane's shared-prefix
+    /// bind: the only pages allowed to back two live lanes at once.
+    fn shared_union(&self) -> HashSet<u32> {
+        self.lane_shared.iter().flatten().copied().collect()
+    }
 }
 
 impl ExecBackend for MockBackend {
@@ -320,6 +369,7 @@ impl ExecBackend for MockBackend {
             self.lane_seed[s.lane] = Some(seed);
             self.lane_partial[s.lane].clear();
             self.lane_table[s.lane].clear(); // dense admission: no pages
+            self.lane_shared[s.lane].clear();
             out.push(Self::token_at(seed, 0, self.spec.vocab));
         }
         Ok(out)
@@ -398,9 +448,11 @@ impl ExecBackend for MockBackend {
             .clone()
             .ok_or_else(|| anyhow!("mock backend built without paging"))?;
         // page contract: every step's table covers its write position,
-        // ids are in range, and no physical page backs two lanes —
-        // validate the WHOLE batch before touching any counter, so a
-        // failed call leaves the accounting untouched
+        // ids are in range, and no physical page backs two lanes UNLESS
+        // it is a read-only shared-prefix page — validate the WHOLE
+        // batch before touching any counter, so a failed call leaves
+        // the accounting untouched
+        let shared = self.shared_union();
         let mut seen = HashSet::new();
         for st in steps {
             if st.pages.is_empty() || st.pages.len() * caps.page_len <= st.pos {
@@ -412,10 +464,20 @@ impl ExecBackend for MockBackend {
                 if p as usize >= caps.pages {
                     return Err(anyhow!("lane {}: page id {p} out of range", st.lane));
                 }
-                if !seen.insert(p) {
+                if !seen.insert(p) && !shared.contains(&p) {
                     return Err(anyhow!(
                         "page {p} aliased by two lanes in one iteration"));
                 }
+            }
+            // the scatter target must be EXCLUSIVELY owned: a decode
+            // writing into a shared-prefix page would corrupt every
+            // other lane reading it — the scheduler's COW layer must
+            // have forked it first
+            let write_page = st.pages[st.pos / caps.page_len];
+            if shared.contains(&write_page) {
+                return Err(anyhow!(
+                    "lane {}: decode scatters into shared-prefix page \
+                     {write_page}", st.lane));
             }
             // a lane's table is fixed at bind — a decode presenting a
             // different table means the scheduler's occupancy desynced
@@ -476,6 +538,22 @@ impl ExecBackend for MockBackend {
         if pages.iter().any(|&p| p as usize >= caps.pages) {
             return Err(anyhow!("lane {lane}: page id out of range"));
         }
+        // the chunk's scatter range must stay out of EVERY live shared
+        // page (a bind lane resumes PAST its shared span; writing into
+        // any lane's shared page is a COW bug in the scheduler) —
+        // checked first so a violating call mutates nothing
+        if !tokens.is_empty() {
+            let shared = self.shared_union();
+            let first = start_pos / caps.page_len;
+            let last = (start_pos + tokens.len() - 1) / caps.page_len;
+            for &p in &pages[first..=last] {
+                if shared.contains(&p) {
+                    return Err(anyhow!(
+                        "lane {lane}: prefill chunk scatters into \
+                         shared-prefix page {p}"));
+                }
+            }
+        }
         if start_pos == 0 {
             // a fresh binding must not alias any lane that is PROVABLY
             // still live — mid-prefill neighbours (retired lanes'
@@ -491,6 +569,7 @@ impl ExecBackend for MockBackend {
                 }
             }
             self.lane_table[lane] = pages.to_vec();
+            self.lane_shared[lane].clear(); // cold bind: no shared span
         } else if self.lane_table[lane] != pages {
             // strict even under lazy growth: admission backs the whole
             // prompt, so a table that changes MID-PREFILL is always a
@@ -511,8 +590,74 @@ impl ExecBackend for MockBackend {
             self.lane_seed[lane] = None;
             self.lane_partial[lane].clear();
             self.lane_table[lane].clear();
+            self.lane_shared[lane].clear();
             self.lanes_released += 1;
         }
+    }
+
+    fn retire_lane(&mut self, lane: usize) {
+        // normal retirement: only the shared-prefix claim dies (the
+        // stream state is spent and harmless; a rebind overwrites it)
+        if lane < self.spec.lanes {
+            self.lane_shared[lane].clear();
+        }
+    }
+
+    fn bind_resident_prefix(&mut self, lane: usize, prompt: &[i32],
+                            resident_rows: usize, shared_pages: usize,
+                            cow_rows: usize, pages: &[u32]) -> Result<()> {
+        let caps = self
+            .spec
+            .paged
+            .clone()
+            .ok_or_else(|| anyhow!("mock backend built without paging"))?;
+        if lane >= self.spec.lanes {
+            return Err(anyhow!("bind_resident_prefix lane {lane} out of range"));
+        }
+        if prompt.len() != self.spec.prefill_len {
+            return Err(anyhow!("bind prompt length {} != {}", prompt.len(),
+                               self.spec.prefill_len));
+        }
+        if resident_rows == 0 || resident_rows >= prompt.len() {
+            return Err(anyhow!(
+                "resident span of {resident_rows} rows must be a non-empty \
+                 strict prefix of the {}-token prompt", prompt.len()));
+        }
+        if cow_rows > 0 && !caps.cow_copy {
+            return Err(anyhow!("backend has no COW page-copy support"));
+        }
+        if shared_pages * caps.page_len + cow_rows != resident_rows {
+            return Err(anyhow!(
+                "resident span {resident_rows} != {shared_pages} shared pages \
+                 of {} rows + {cow_rows} COW rows", caps.page_len));
+        }
+        if shared_pages > pages.len()
+            || pages.iter().any(|&p| p as usize >= caps.pages)
+        {
+            return Err(anyhow!("lane {lane}: bind page table invalid"));
+        }
+        // PRIVATE bind pages obey the cold chunk-0 rule: they must not
+        // alias a provably live lane. The shared span legitimately
+        // aliases every other lane reading the same prefix.
+        for (other, table) in self.lane_table.iter().enumerate() {
+            if other != lane
+                && !self.lane_partial[other].is_empty()
+                && table.iter().any(|p| pages[shared_pages..].contains(p))
+            {
+                return Err(anyhow!(
+                    "lane {lane}: private bind pages alias mid-prefill \
+                     lane {other}"));
+            }
+        }
+        // the resident rows are already cache-resident (the registrant
+        // wrote them; the COW fork copied the partial page): the lane is
+        // indistinguishable from one that chunked prompt[..resident_rows]
+        self.lane_seed[lane] = None;
+        self.lane_partial[lane] = prompt[..resident_rows].to_vec();
+        self.lane_table[lane] = pages.to_vec();
+        self.lane_shared[lane] = pages[..shared_pages].to_vec();
+        self.prefix_binds += 1;
+        Ok(())
     }
 }
 
@@ -608,7 +753,8 @@ impl ModeledBackend {
                       page_len: usize, pages: usize, decode_width: usize) -> Self {
         let mut m = Self::new(lanes, prefill_len, max_seq, vocab,
                               AcceleratorSystem::u280());
-        m.inner.spec.paged = Some(PagedCaps { page_len, pages, max_lanes: lanes });
+        m.inner.spec.paged = Some(PagedCaps { page_len, pages, max_lanes: lanes,
+                                              cow_copy: true });
         m.decode_width = decode_width.max(1);
         m
     }
@@ -745,6 +891,28 @@ impl ExecBackend for ModeledBackend {
         // costs modeled seconds
         self.inner.release_lane(lane);
     }
+
+    fn retire_lane(&mut self, lane: usize) {
+        self.inner.retire_lane(lane);
+    }
+
+    fn bind_resident_prefix(&mut self, lane: usize, prompt: &[i32],
+                            resident_rows: usize, shared_pages: usize,
+                            cow_rows: usize, pages: &[u32]) -> Result<()> {
+        self.inner.bind_resident_prefix(lane, prompt, resident_rows,
+                                        shared_pages, cow_rows, pages)?;
+        // binding the shared span is a table write — free. The COW fork
+        // is not: it reads the donor rows and writes the private copy
+        // at HBM bandwidth, charged to the prefill engine (it is
+        // admission-path work), so the TTFT win stays time-honest.
+        if cow_rows > 0 {
+            let copy_s = 2.0 * self.gather_overhead_s(cow_rows);
+            let start = self.prefill_clock_s.max(self.decode_clock_s);
+            self.prefill_clock_s = start + copy_s;
+            self.model_time_s = self.prefill_clock_s.max(self.decode_clock_s);
+        }
+        Ok(())
+    }
 }
 
 impl ModeledBackend {
@@ -872,7 +1040,11 @@ impl PjrtBackend {
                     && m.artifacts.contains_key(DECODE_PAGED)
                     && m.artifacts.contains_key(PREFILL_CHUNK_PAGED) =>
             {
-                Some(PagedCaps { page_len, pages, max_lanes: pages })
+                // no page-copy artifact exists, so partial-page COW
+                // forks are unsupported: the scheduler rounds shared
+                // spans down to page boundaries
+                Some(PagedCaps { page_len, pages, max_lanes: pages,
+                                 cow_copy: false })
             }
             _ => None,
         };
@@ -1241,6 +1413,30 @@ impl ExecBackend for PjrtBackend {
         let next = self.take_paged_outputs(PREFILL_CHUNK_PAGED, out)?;
         Ok(next[0])
     }
+
+    fn bind_resident_prefix(&mut self, lane: usize, _prompt: &[i32],
+                            _resident_rows: usize, _shared_pages: usize,
+                            cow_rows: usize, pages: &[u32]) -> Result<()> {
+        let caps = self
+            .spec
+            .paged
+            .clone()
+            .ok_or_else(|| anyhow!("artifact set has no paged cache"))?;
+        if cow_rows > 0 {
+            return Err(anyhow!(
+                "artifact set has no page-copy op for COW forks"));
+        }
+        if pages.len() > self.pages_per_lane
+            || pages.iter().any(|&p| p as usize >= caps.pages)
+        {
+            return Err(anyhow!("lane {lane}: bind page table invalid"));
+        }
+        // nothing to execute: the registrant's prefill already scattered
+        // the shared K/V rows into the page pool, and the lane's table —
+        // threaded through every later chunk and decode invocation —
+        // gathers straight through them. The bind is pure bookkeeping.
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -1434,6 +1630,97 @@ mod tests {
         let t = m.prefill_chunk_paged(0, &p, 0, &[2, 3]).unwrap();
         assert_eq!(t, MockBackend::expected_tokens(&p, 1, 64)[0],
                    "recompute must reproduce the original stream");
+    }
+
+    #[test]
+    fn mock_bind_resident_prefix_resumes_and_guards_shared_pages() {
+        // lane 0 prefills [0..8] cold over pages [0,1]; lane 1 binds
+        // page 0 as a shared prefix and resumes mid-prompt
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut m = MockBackend::paged(2, 8, 32, 64, 4, 6).with_table_growth();
+        let t0 = m.prefill_chunk_paged(0, &prompt, 0, &[0, 1]).unwrap();
+        m.bind_resident_prefix(1, &prompt, 4, 1, 0, &[0, 2]).unwrap();
+        assert_eq!(m.prefix_binds, 1);
+        // resuming at the shared-span boundary completes the prompt and
+        // yields the SAME first token as the cold prefill — byte-identity
+        let t1 = m.prefill_chunk_paged(1, &prompt[4..], 4, &[0, 2]).unwrap();
+        assert_eq!(t1, t0, "shared admission must reproduce the cold stream");
+        // both lanes decode THROUGH the aliased shared page 0 in one
+        // iteration: allowed, because it is a registered shared page
+        let d = m.decode_paged(&[
+            PagedStep { lane: 0, token: t0, pos: 8, pages: vec![0, 1, 3] },
+            PagedStep { lane: 1, token: t1, pos: 8, pages: vec![0, 2, 4] },
+        ]);
+        assert_eq!(d.unwrap(), vec![
+            MockBackend::expected_tokens(&prompt, 2, 64)[1]; 2]);
+    }
+
+    #[test]
+    fn mock_rejects_writes_into_shared_pages() {
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut m = MockBackend::paged(2, 8, 32, 64, 4, 6).with_table_growth();
+        let t0 = m.prefill_chunk_paged(0, &prompt, 0, &[0, 1]).unwrap();
+        m.bind_resident_prefix(1, &prompt, 4, 1, 0, &[0, 2]).unwrap();
+        // a prefill chunk whose scatter range covers the shared page
+        assert!(m.prefill_chunk_paged(1, &prompt[..4], 0, &[0, 2]).is_err(),
+                "chunk writing into the shared page must be rejected");
+        // a decode whose WRITE page is a live shared page: lane 0 grows
+        // its table with page 0 (a legal append) but pos 8 lands there
+        assert!(m.decode_paged(&[PagedStep { lane: 0, token: t0, pos: 8,
+                                             pages: vec![0, 1, 0] }]).is_err(),
+                "decode scattering into a shared page must be rejected");
+        // READ-ONLY aliasing of the shared page is fine for both lanes
+        let t1 = m.prefill_chunk_paged(1, &prompt[4..], 4, &[0, 2]).unwrap();
+        m.decode_paged(&[
+            PagedStep { lane: 0, token: t0, pos: 8, pages: vec![0, 1, 3] },
+            PagedStep { lane: 1, token: t1, pos: 8, pages: vec![0, 2, 4] },
+        ]).unwrap();
+        // retirement drops the claim: with no live sharer left, page 0
+        // loses its alias exemption and plain cross-lane aliasing trips
+        m.retire_lane(1);
+        assert!(m.decode_paged(&[
+            PagedStep { lane: 0, token: t0, pos: 9, pages: vec![0, 1, 3] },
+            PagedStep { lane: 1, token: t1, pos: 9, pages: vec![0, 2, 4] },
+        ]).is_err(), "the alias exemption must die with the sharer's claim");
+    }
+
+    #[test]
+    fn mock_bind_validates_geometry() {
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut m = MockBackend::paged(2, 8, 32, 64, 4, 6);
+        // resident span must be a non-empty strict prefix
+        assert!(m.bind_resident_prefix(0, &prompt, 0, 0, 0, &[0, 1]).is_err());
+        assert!(m.bind_resident_prefix(0, &prompt, 8, 2, 0, &[0, 1]).is_err());
+        // span arithmetic must be consistent
+        assert!(m.bind_resident_prefix(0, &prompt, 4, 1, 1, &[0, 1]).is_err());
+        // a COW fork copies rows into the first PRIVATE page
+        m.bind_resident_prefix(0, &prompt, 6, 1, 2, &[0, 2]).unwrap();
+        let t = m.prefill_chunk_paged(0, &prompt[6..], 6, &[0, 2]).unwrap();
+        assert_eq!(t, MockBackend::expected_tokens(&prompt, 1, 64)[0]);
+        // the dense mock has no bind at all
+        let mut d = MockBackend::new(2, 8, 32, 64);
+        assert!(d.bind_resident_prefix(0, &prompt, 4, 1, 0, &[0]).is_err());
+    }
+
+    #[test]
+    fn modeled_bind_charges_only_the_cow_copy() {
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut m = ModeledBackend::u280_paged(2, 8, 64, 32, 4, 8, 2);
+        m.prefill_chunk_paged(0, &prompt, 0, &[0, 1]).unwrap();
+        let before = m.prefill_clock_s;
+        // a page-aligned bind is pure bookkeeping: zero modeled time
+        m.bind_resident_prefix(1, &prompt, 4, 1, 0, &[0, 2]).unwrap();
+        assert_eq!(m.prefill_clock_s, before, "aligned bind must be free");
+        m.release_lane(1);
+        // a COW fork pays the row copy on the prefill clock
+        m.bind_resident_prefix(1, &prompt, 6, 1, 2, &[0, 2]).unwrap();
+        assert!(m.prefill_clock_s > before, "COW copy must cost modeled time");
+        // and far less than prefilling the span would have
+        let copy_s = m.prefill_clock_s - before;
+        let mut cold = ModeledBackend::u280_paged(2, 8, 64, 32, 4, 8, 2);
+        cold.prefill_chunk_paged(0, &prompt[..4], 0, &[0, 1]).unwrap();
+        assert!(copy_s < cold.prefill_clock_s,
+                "a 2-row copy must beat recomputing the prefix");
     }
 
     #[test]

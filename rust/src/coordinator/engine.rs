@@ -18,6 +18,7 @@
 //! calls `step` from its event loop so new requests can arrive between
 //! iterations (continuous batching).
 
+use std::collections::HashSet;
 use std::time::Instant;
 
 use crate::anyhow::{anyhow, Result};
@@ -84,6 +85,11 @@ pub struct Engine<B: ExecBackend> {
     /// Preemption, admission and page accounting are all local to the
     /// shard — the id only labels the engine for fan-in and reporting.
     shard: usize,
+    /// Lanes carrying a live shared-prefix bind. Preemption reaches the
+    /// backend via `release_lane`, but NORMAL retirement does not — this
+    /// set lets the engine notify the backend (`retire_lane`) when a
+    /// sharer leaves, so read-only page claims never outlive the lane.
+    shared_lanes: HashSet<usize>,
 }
 
 impl Engine<PjrtBackend> {
@@ -176,7 +182,34 @@ impl<B: ExecBackend> Engine<B> {
         };
         let metrics = ServeMetrics::with_pages_total(pages_total);
         let reserve = scheduler.reserve();
-        Engine { backend, scheduler, metrics, policy, layout, reserve, shard: 0 }
+        Engine { backend, scheduler, metrics, policy, layout, reserve, shard: 0,
+                 shared_lanes: HashSet::new() }
+    }
+
+    /// Enable shared-prefix admission (builder): page-aligned prompt
+    /// prefixes register in the scheduler's prefix index and later
+    /// requests bind them read-only, entering with zero prefill chunks
+    /// for the resident span. Coerced off on a dense layout (sharing
+    /// needs refcounted pages). Partial-page copy-on-write forks are
+    /// enabled iff the backend advertises a page-copy op
+    /// (`PagedCaps::cow_copy`).
+    pub fn with_prefix_share(mut self, enabled: bool) -> Self {
+        let cow = self
+            .backend
+            .spec()
+            .paged
+            .as_ref()
+            .map(|c| c.cow_copy)
+            .unwrap_or(false);
+        self.scheduler.set_prefix_share(enabled);
+        self.scheduler.set_partial_cow(cow);
+        self
+    }
+
+    /// Whether shared-prefix admission is in effect (after layout
+    /// coercion: always false on a dense pool).
+    pub fn prefix_share(&self) -> bool {
+        self.scheduler.prefix_share()
     }
 
     /// Tag this engine as shard `shard` of a multi-engine Router
@@ -237,6 +270,45 @@ impl<B: ExecBackend> Engine<B> {
         // ---- admission + prefill phase -----------------------------------
         let admitted = self.scheduler.plan_admissions();
         report.admitted = admitted.len();
+
+        // drop shared-prefix claims whose sharer has since RETIRED —
+        // preemption goes through release_lane, normal retirement does
+        // not, and a stale read-only claim would block reallocating a
+        // page the prefix index has long evicted
+        if !self.shared_lanes.is_empty() {
+            let scheduler = &self.scheduler;
+            let backend = &mut self.backend;
+            self.shared_lanes.retain(|&lane| {
+                let live = scheduler.shared_bind(lane).is_some();
+                if !live {
+                    backend.retire_lane(lane);
+                }
+                live
+            });
+        }
+
+        // shared-prefix binds: a lane admitted with a resident span
+        // skips its prefill chunks — tell the backend the rows are
+        // already cache-resident before the first resumed chunk lands
+        if self.scheduler.prefix_share() {
+            for &lane in &admitted {
+                match self.scheduler.shared_bind(lane) {
+                    Some(bind) => {
+                        let prompt = self.scheduler.prompt(lane)?;
+                        let pages = self.scheduler.page_table(lane)?;
+                        self.backend.bind_resident_prefix(
+                            lane, prompt, bind.resident_rows,
+                            bind.shared_pages, bind.cow_rows, pages)?;
+                        self.metrics.prefix_hits += 1;
+                        self.metrics.kv_pages_shared += bind.shared_pages;
+                        self.metrics.cow_copies += usize::from(bind.cow_rows > 0);
+                        self.shared_lanes.insert(lane);
+                    }
+                    None => self.metrics.prefix_misses += 1,
+                }
+            }
+        }
+
         match self.policy {
             PrefillPolicy::Blocking => {
                 if !admitted.is_empty() {
@@ -493,6 +565,29 @@ pub fn place_shard<B: ExecBackend>(engines: &[Engine<B>], req: &GenRequest)
         let free = e.placement_free_pages();
         (free >= e.scheduler.admission_pages(req)).then_some((i, free))
     }))
+}
+
+/// Prefix-AFFINE placement: among page-eligible shards, prefer the one
+/// whose prefix index holds the DEEPEST resident prefix of the prompt
+/// (strict `>`, so the lowest-indexed shard wins ties — deterministic
+/// like [`place_shard`]). A prefix is only worth anything on the shard
+/// that physically holds its pages, so sending the request anywhere
+/// else forfeits the zero-prefill admission. With no resident prefix on
+/// any eligible shard, falls back to least-loaded [`place_shard`].
+pub fn place_shard_affine<B: ExecBackend>(engines: &[Engine<B>], req: &GenRequest)
+    -> Option<usize>
+{
+    let mut best: Option<(usize, usize)> = None; // (depth, shard)
+    for (i, e) in engines.iter().enumerate() {
+        if e.placement_free_pages() < e.scheduler.admission_pages(req) {
+            continue;
+        }
+        let depth = e.scheduler.prefix_depth(&req.prompt);
+        if depth > 0 && best.map(|(d, _)| depth > d).unwrap_or(true) {
+            best = Some((depth, i));
+        }
+    }
+    best.map(|(_, i)| i).or_else(|| place_shard(engines, req))
 }
 
 /// The selection rule itself, shared by [`place_shard`] and the

@@ -26,11 +26,19 @@
 //! admission-by-free-lane and the PR 2 engine behavior is reproduced
 //! bit-for-bit.
 //!
+//! PR 6 adds shared-prefix reuse on top: pages are refcounted so one
+//! physical page can back many lanes' tables, and a [`PrefixIndex`]
+//! keeps completed prompts' page-aligned prefix chunks resident so a
+//! later request with the same prefix binds them instead of
+//! re-prefilling (copy-on-write forks a shared page before any write).
+//!
 //! The actual cache tensors (INT8 integer-grid K/V of the W4A4KV8
 //! scheme) live in the execution backend; on the PJRT backend the paged
 //! layout is `[L, P, KV, page_len, hd]` with physical page 0 reserved
 //! as the scratch page idle artifact lanes write into — the Rust side
 //! allocates ids `0..pages` and the backend shifts by one.
+
+use std::collections::HashMap;
 
 use crate::anyhow::{anyhow, Result};
 
@@ -78,6 +86,14 @@ pub fn split_budget(total: usize, shards: usize) -> crate::anyhow::Result<Vec<us
 }
 
 /// Geometry + free-list allocator over the shared KV page pool.
+///
+/// Pages are REFCOUNTED (PR 6): a physical page can back multiple
+/// lanes' page tables at once (shared-prefix reuse) plus one reference
+/// held by the [`PrefixIndex`] that keeps it resident. [`KvPool::alloc`]
+/// hands out pages at refcount 1, [`KvPool::retain`] adds an owner, and
+/// [`KvPool::release`] drops one — the page returns to the free list
+/// only when the LAST owner lets go, so retiring or preempting a
+/// prefix-sharing lane reclaims exactly its private pages.
 #[derive(Debug, Clone)]
 pub struct KvPool {
     /// Cache rows per page.
@@ -88,6 +104,8 @@ pub struct KvPool {
     /// Free physical page ids, LIFO (release-then-rebind reuses the
     /// same pages immediately — asserted in tests).
     free: Vec<u32>,
+    /// Owners per physical page; 0 means the page is on the free list.
+    refs: Vec<u32>,
 }
 
 impl KvPool {
@@ -107,7 +125,8 @@ impl KvPool {
         // LIFO off the back: lowest ids first, matching the dense pool's
         // lowest-lane-first binding order
         let free: Vec<u32> = (0..total_pages as u32).rev().collect();
-        KvPool { page_len, prefill_len, max_seq, total_pages, free }
+        KvPool { page_len, prefill_len, max_seq, total_pages, free,
+                 refs: vec![0; total_pages] }
     }
 
     pub fn total_pages(&self) -> usize {
@@ -137,24 +156,273 @@ impl KvPool {
                 "KV pages exhausted: want {n}, {} of {} free",
                 self.free.len(), self.total_pages));
         }
-        Ok(self.free.split_off(self.free.len() - n))
+        let pages = self.free.split_off(self.free.len() - n);
+        for &p in &pages {
+            self.refs[p as usize] = 1;
+        }
+        Ok(pages)
     }
 
-    /// Return a lane's pages to the free list (immediate reclamation).
+    /// Add an owner to an already-allocated page (a lane binding a
+    /// shared-prefix page, or the prefix index pinning one resident).
+    ///
+    /// Panics on a free or foreign page: retaining a page nobody owns
+    /// would resurrect freed memory into a live page table.
+    pub fn retain(&mut self, page: u32) {
+        assert!((page as usize) < self.total_pages,
+                "retained foreign KV page id {page} ({} pages)", self.total_pages);
+        assert!(self.refs[page as usize] > 0, "retained free KV page {page}");
+        self.refs[page as usize] += 1;
+    }
+
+    /// Owners of `page` (0 = on the free list).
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refs[page as usize]
+    }
+
+    /// Drop one ownership reference from each of `pages`, returning a
+    /// page to the free list when its LAST owner lets go. A lane that
+    /// shared prefix pages therefore reclaims exactly its private
+    /// pages; the shared ones stay resident for their other owners.
     ///
     /// Panics on a double-free or a foreign page id: a corrupt free
     /// list would silently alias two live requests' caches, so the
     /// invariant is checked unconditionally (pools are small — the
-    /// linear scan is noise next to one decode invocation).
+    /// check is noise next to one decode invocation).
     pub fn release(&mut self, pages: Vec<u32>) {
-        // re-push reversed so an immediate realloc hands the same pages
-        // back in the same order
-        for p in pages.into_iter().rev() {
+        // re-push in table order: `alloc` returns the free list's tail
+        // in storage order, so an immediate realloc hands the same
+        // pages back in the same order
+        for p in pages.into_iter() {
             assert!((p as usize) < self.total_pages,
                     "released foreign KV page id {p} ({} pages)", self.total_pages);
-            assert!(!self.free.contains(&p), "double-free of KV page {p}");
-            self.free.push(p);
+            assert!(self.refs[p as usize] > 0, "double-free of KV page {p}");
+            self.refs[p as usize] -= 1;
+            if self.refs[p as usize] == 0 {
+                self.free.push(p);
+            }
         }
+    }
+
+    /// Pages with at least one owner, counted from the refcount table —
+    /// an invariant cross-check against [`KvPool::pages_in_use`] (which
+    /// is derived from the free list): the two must always agree, or
+    /// the refcounting desynced from the allocator.
+    pub fn live_pages(&self) -> usize {
+        self.refs.iter().filter(|&&r| r > 0).count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared-prefix index
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend a chain hash with one page worth of token ids (FNV-1a over
+/// the previous link and the token bytes). The chain hash at depth `d`
+/// therefore commits to the ENTIRE `d·page_len`-token prefix, so two
+/// prompts share an index entry only when their whole prefix matches.
+/// `pub(crate)` so the Router's placement layer can key shard affinity
+/// on the same first-page hash the index chains from.
+pub(crate) fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in prev.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// One registered page-aligned prefix chunk.
+#[derive(Debug, Clone)]
+struct PrefixEntry {
+    /// Physical page holding this chunk's KV rows (the index owns one
+    /// refcount on it for as long as the entry lives).
+    page: u32,
+    /// Chain hash of the depth-1 parent entry (`None` at depth 0);
+    /// eviction uses it to drop descendants with their ancestor, so a
+    /// resident chain never has holes a lookup would stop at.
+    parent: Option<u64>,
+    /// The chunk's token ids — lookups verify content, so a 64-bit hash
+    /// collision can never alias two different prompts' caches.
+    tokens: Vec<i32>,
+    /// LRU stamp (bumped on every lookup hit and re-registration).
+    last_used: u64,
+}
+
+/// Result of a [`PrefixIndex::lookup`]: the resident pages plus the
+/// chain-hash coordinates of the match, which the admission planner
+/// needs to probe for a partial continuation (and to re-anchor after
+/// popping the deepest page of a fully-resident prompt).
+#[derive(Debug, Clone, Default)]
+pub struct PrefixHit {
+    /// Resident pages covering the matched prefix, shallowest first.
+    pub pages: Vec<u32>,
+    /// Chain hash AFTER the deepest matched chunk (0 when nothing
+    /// matched — the empty-chain anchor).
+    pub chain: u64,
+    /// Chain hash one page shallower than `chain` (0 at depth ≤ 1).
+    pub parent_chain: u64,
+}
+
+/// Chunk-hash chain over page-aligned prompt prefixes → resident KV
+/// pages (PR 6, vLLM-style automatic prefix caching).
+///
+/// When a prompt finishes prefilling, every FULL prompt page is
+/// registered under the chain hash of the prefix it completes; the
+/// index retains each newly registered page so it survives its
+/// registering lane. Admission walks the chain as deep as it stays
+/// resident and binds those pages instead of re-prefilling them.
+/// Eviction is LRU by whole chains (an entry leaves together with its
+/// descendants), and a page is actually freed only when its refcount
+/// hits zero — a lane may still be reading it.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixIndex {
+    entries: HashMap<u64, PrefixEntry>,
+    clock: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        PrefixIndex::default()
+    }
+
+    /// Registered chunk entries (one per resident page).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Pages backing the longest resident page-aligned prefix of
+    /// `prompt`, shallowest first; bumps the LRU stamps of the hits.
+    /// The returned hit also carries the chain hashes at (and one page
+    /// above) the match depth so the caller can probe for a partial
+    /// continuation with [`PrefixIndex::partial_overlap`].
+    pub fn lookup(&mut self, prompt: &[i32], page_len: usize) -> PrefixHit {
+        let mut hit = PrefixHit::default();
+        let mut h = 0u64;
+        for chunk in prompt.chunks_exact(page_len) {
+            h = chain_hash(h, chunk);
+            match self.entries.get_mut(&h) {
+                Some(e) if e.tokens == chunk => {
+                    self.clock += 1;
+                    e.last_used = self.clock;
+                    hit.pages.push(e.page);
+                    hit.parent_chain = hit.chain;
+                    hit.chain = h;
+                }
+                _ => break,
+            }
+        }
+        hit
+    }
+
+    /// Longest common token prefix between `tail` and any resident
+    /// chunk whose parent chain hash is `chain` (0 = a depth-0 chunk) —
+    /// the partial-COW probe: the caller copies the first `w` rows of
+    /// the returned page into a private fork instead of recomputing
+    /// them. Bumps the donor's LRU stamp.
+    pub fn partial_overlap(&mut self, chain: u64, tail: &[i32])
+        -> Option<(u32, usize)>
+    {
+        let parent = (chain != 0).then_some(chain);
+        let (&h, best) = self.entries.iter()
+            .filter(|(_, e)| e.parent == parent)
+            .map(|(h, e)| {
+                let w = e.tokens.iter().zip(tail)
+                    .take_while(|(a, b)| a == b).count();
+                (h, (e.page, w))
+            })
+            .max_by_key(|&(_, (_, w))| w)?;
+        if best.1 == 0 {
+            return None;
+        }
+        self.clock += 1;
+        self.entries.get_mut(&h).expect("entry just found")
+            .last_used = self.clock;
+        Some(best)
+    }
+
+    /// Resident depth (in pages) of `prompt`'s prefix, without touching
+    /// LRU state — the placement layer's shard-affinity probe.
+    pub fn resident_depth(&self, prompt: &[i32], page_len: usize) -> usize {
+        let mut depth = 0;
+        let mut h = 0u64;
+        for chunk in prompt.chunks_exact(page_len) {
+            h = chain_hash(h, chunk);
+            match self.entries.get(&h) {
+                Some(e) if e.tokens == chunk => depth += 1,
+                _ => break,
+            }
+        }
+        depth
+    }
+
+    /// Register a completed prompt's full pages (`table[i]` backs rows
+    /// `[i·page_len, (i+1)·page_len)`). Chunks already resident keep
+    /// their EXISTING page (future sharers should converge on one
+    /// physical copy); fresh chunks insert the lane's page. Returns the
+    /// newly inserted pages — the caller must `retain` each, since the
+    /// index now owns a reference on them.
+    #[must_use = "newly registered pages must be retained in the pool"]
+    pub fn register(&mut self, prompt: &[i32], table: &[u32], page_len: usize)
+        -> Vec<u32>
+    {
+        let mut fresh = Vec::new();
+        let mut h = 0u64;
+        let mut parent = None;
+        for (i, chunk) in prompt.chunks_exact(page_len).enumerate() {
+            h = chain_hash(h, chunk);
+            self.clock += 1;
+            match self.entries.get_mut(&h) {
+                Some(e) if e.tokens == chunk => e.last_used = self.clock,
+                Some(_) => break, // hash collision, different content: stop
+                None => {
+                    self.entries.insert(h, PrefixEntry {
+                        page: table[i],
+                        parent,
+                        tokens: chunk.to_vec(),
+                        last_used: self.clock,
+                    });
+                    fresh.push(table[i]);
+                }
+            }
+            parent = Some(h);
+        }
+        fresh
+    }
+
+    /// Evict the least-recently-used entry together with its whole
+    /// descendant chain (a chain with a hole would strand unreachable
+    /// pages). Returns the pages whose index reference ended — the
+    /// caller releases them; each is actually freed only if no lane
+    /// still holds it.
+    #[must_use = "evicted pages must be released back to the pool"]
+    pub fn evict_lru(&mut self) -> Vec<u32> {
+        let Some((&h, _)) = self.entries.iter().min_by_key(|(_, e)| e.last_used)
+        else {
+            return Vec::new();
+        };
+        let mut removed = Vec::new();
+        let mut stack = vec![h];
+        while let Some(h) = stack.pop() {
+            if let Some(e) = self.entries.remove(&h) {
+                removed.push(e.page);
+                stack.extend(self.entries.iter()
+                    .filter(|(_, c)| c.parent == Some(h))
+                    .map(|(&k, _)| k));
+            }
+        }
+        removed
     }
 }
 
@@ -178,6 +446,9 @@ pub struct LaneKv {
     /// Pages appended after bind ([`LaneKv::grow`]); the lazy-growth
     /// counter surfaced by the metrics.
     grown: usize,
+    /// Prompt rows already cache-resident at bind (shared-prefix
+    /// admission): prefill resumes here instead of at row 0.
+    resident_rows: usize,
 }
 
 impl LaneKv {
@@ -185,8 +456,23 @@ impl LaneKv {
     /// at least one decode slot past the prompt.
     pub fn new(prompt_len: usize, pages: Vec<u32>, page_len: usize,
                max_seq: usize) -> Result<Self> {
+        Self::with_resident(prompt_len, pages, page_len, max_seq, 0)
+    }
+
+    /// Bind a prompt whose first `resident_rows` rows are ALREADY in
+    /// the cache (shared-prefix pages bound from the prefix index):
+    /// the fill position starts past the resident span, so chunked
+    /// prefill resumes at the first non-resident page boundary.
+    pub fn with_resident(prompt_len: usize, pages: Vec<u32>, page_len: usize,
+                         max_seq: usize, resident_rows: usize) -> Result<Self> {
         if prompt_len == 0 {
             return Err(anyhow!("cannot bind an empty prompt"));
+        }
+        if resident_rows >= prompt_len && resident_rows != 0 {
+            return Err(anyhow!(
+                "resident span of {resident_rows} rows must be a strict \
+                 prefix of the {prompt_len}-token prompt (the final token's \
+                 logits are always recomputed)"));
         }
         let reserved_rows = (pages.len() * page_len).min(max_seq);
         if prompt_len >= reserved_rows {
@@ -195,8 +481,14 @@ impl LaneKv {
                  ({} pages × {page_len} rows, max_seq {max_seq})",
                 pages.len()));
         }
-        Ok(LaneKv { prompt_len, pos: 0, pages, reserved_rows, page_len, max_seq,
-                    grown: 0 })
+        Ok(LaneKv { prompt_len, pos: resident_rows, pages, reserved_rows, page_len,
+                    max_seq, grown: 0, resident_rows })
+    }
+
+    /// Prompt rows that were cache-resident at bind (0 for a cold
+    /// admission).
+    pub fn resident_rows(&self) -> usize {
+        self.resident_rows
     }
 
     /// Whether the NEXT cache write (`pos`) lands in an unbacked page —
@@ -448,5 +740,125 @@ mod tests {
         assert!(LaneKv::new(0, vec![0], 8, 32).is_err());
         assert!(LaneKv::new(8, vec![0], 8, 32).is_err()); // prompt fills page
         assert!(LaneKv::new(7, vec![0], 8, 32).is_ok());
+    }
+
+    // -- refcounts, COW and the prefix index (PR 6) ------------------------
+
+    #[test]
+    fn retain_release_frees_only_at_refcount_zero() {
+        let mut p = KvPool::paged(4, 32, 8, 4);
+        let pages = p.alloc(2).unwrap();
+        assert_eq!(p.refcount(pages[0]), 1);
+        p.retain(pages[0]); // second owner (a sharing lane)
+        p.retain(pages[0]); // third owner (the prefix index)
+        assert_eq!(p.refcount(pages[0]), 3);
+        assert_eq!(p.pages_in_use(), 2);
+        // releasing a shared page drops an owner, not the page
+        p.release(vec![pages[0]]);
+        assert_eq!(p.refcount(pages[0]), 2);
+        assert_eq!(p.pages_in_use(), 2, "shared page must survive its releaser");
+        p.release(vec![pages[0], pages[1]]);
+        assert_eq!(p.pages_in_use(), 1, "last private page still held");
+        p.release(vec![pages[0]]);
+        assert_eq!(p.refcount(pages[0]), 0);
+        assert_eq!(p.pages_in_use(), 0);
+        assert_eq!(p.live_pages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "retained free KV page")]
+    fn retain_of_free_page_is_detected() {
+        let mut p = KvPool::paged(4, 32, 8, 4);
+        p.retain(2);
+    }
+
+    #[test]
+    fn alloc_free_lifo_order_survives_interleaved_cow() {
+        // satellite: free + allocated == total after interleaved
+        // alloc/free/COW sequences, and LIFO reclamation order holds
+        let mut p = KvPool::paged(4, 64, 8, 8);
+        let check = |p: &KvPool| {
+            assert_eq!(p.free_pages() + p.pages_in_use(), p.total_pages());
+            assert_eq!(p.live_pages(), p.pages_in_use(),
+                       "refcount table desynced from the free list");
+        };
+        let a = p.alloc(3).unwrap();
+        let b = p.alloc(2).unwrap();
+        check(&p);
+        // share a[0] with a second lane, then COW-fork it: the fork
+        // allocates a private copy and drops the shared reference
+        p.retain(a[0]);
+        let fork = p.alloc(1).unwrap()[0];
+        p.release(vec![a[0]]);
+        check(&p);
+        assert_eq!(p.refcount(a[0]), 1, "COW fork must drop one owner");
+        assert_eq!(p.refcount(fork), 1);
+        // release lane B, realloc: LIFO hands the same pages back
+        p.release(b.clone());
+        check(&p);
+        assert_eq!(p.alloc(2).unwrap(), b, "free list must stay LIFO");
+        // drain everything and confirm full reclamation
+        p.release(a);
+        p.release(b);
+        p.release(vec![fork]);
+        check(&p);
+        assert_eq!(p.free_pages(), 8);
+    }
+
+    #[test]
+    fn prefix_index_round_trip_and_lru_eviction() {
+        let mut idx = PrefixIndex::new();
+        let prompt_a: Vec<i32> = (0..16).collect(); // 4 full pages of 4
+        let prompt_b: Vec<i32> = (0..8).chain(100..108).collect(); // shares 2 pages
+        let fresh = idx.register(&prompt_a, &[10, 11, 12, 13], 4);
+        assert_eq!(fresh, vec![10, 11, 12, 13]);
+        assert_eq!(idx.len(), 4);
+        // full-chain hit, shallowest first
+        assert_eq!(idx.lookup(&prompt_a, 4).pages, vec![10, 11, 12, 13]);
+        // divergence at page 2: only the common prefix resolves
+        assert_eq!(idx.lookup(&prompt_b, 4).pages, vec![10, 11]);
+        assert_eq!(idx.resident_depth(&prompt_b, 4), 2);
+        // registering B dedupes the shared pages onto A's copies
+        let fresh = idx.register(&prompt_b, &[20, 21, 22, 23], 4);
+        assert_eq!(fresh, vec![22, 23], "resident chunks must keep their page");
+        assert_eq!(idx.lookup(&prompt_b, 4).pages, vec![10, 11, 22, 23]);
+        // prompts shorter than a page never index
+        assert!(idx.lookup(&prompt_a[..3], 4).pages.is_empty());
+        // LRU eviction drops a whole chain tail, never leaving a hole:
+        // touch B so A's divergent tail (pages 12, 13) is the LRU chain
+        idx.lookup(&prompt_b, 4);
+        let mut evicted = idx.evict_lru();
+        evicted.sort_unstable();
+        assert_eq!(evicted, vec![12, 13],
+                   "eviction must take descendants with their ancestor");
+        assert_eq!(idx.lookup(&prompt_a, 4).pages, vec![10, 11],
+                   "shared head must survive the tail's eviction");
+        assert_eq!(idx.lookup(&prompt_b, 4).pages, vec![10, 11, 22, 23]);
+    }
+
+    #[test]
+    fn partial_overlap_finds_longest_common_child() {
+        let mut idx = PrefixIndex::new();
+        let prompt: Vec<i32> = (0..12).collect(); // 3 full pages of 4
+        let fresh = idx.register(&prompt, &[5, 6, 7], 4);
+        assert_eq!(fresh, vec![5, 6, 7]);
+        // full-chain lookup exposes the match coordinates
+        let hit = idx.lookup(&prompt, 4);
+        assert_eq!(hit.pages, vec![5, 6, 7]);
+        assert_ne!(hit.chain, 0);
+        assert_ne!(hit.parent_chain, hit.chain);
+        // a prompt diverging inside page 2 overlaps the resident chunk
+        // for its first two rows: the COW fork copies exactly those
+        let two = idx.lookup(&prompt[..8], 4);
+        assert_eq!(two.pages, vec![5, 6]);
+        assert_eq!(idx.partial_overlap(two.chain, &[8, 9, -1, -2]),
+                   Some((7, 2)));
+        // identical tail: the whole page overlaps
+        assert_eq!(idx.partial_overlap(two.chain, &[8, 9, 10, 11]),
+                   Some((7, 4)));
+        // no common first row → no donor
+        assert_eq!(idx.partial_overlap(two.chain, &[-9, 9, 10, 11]), None);
+        // depth-0 probe (chain hash 0) scans root chunks
+        assert_eq!(idx.partial_overlap(0, &[0, 1, -1, -1]), Some((5, 2)));
     }
 }

@@ -41,14 +41,15 @@ mod scheduler;
 
 pub use backend::{BackendSpec, ExecBackend, LaneStep, MockBackend, ModeledBackend,
                   PagedCaps, PagedStep, PjrtBackend, PrefillSlot};
-pub use engine::{place_shard, Engine, KvLayout, StepReport, TokenEvent};
+pub use engine::{place_shard, place_shard_affine, Engine, KvLayout, StepReport,
+                 TokenEvent};
 pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
 pub use kv::{split_budget, KvPool, LaneKv, ReservationPolicy};
 pub use openloop::{run_open_loop, ArrivalProcess, OpenLoopConfig, OpenLoopShardStats,
                    OpenLoopStats, PagedPoolConfig};
 pub use request::{FinishReason, GenRequest, GenResult, ServeMetrics};
 pub use scheduler::{ChunkPlan, Completion, GrowthReport, PageStats, Preempted,
-                    PrefillPolicy, RequestPhase, Scheduler};
+                    PrefillPolicy, RequestPhase, Scheduler, SharedBind};
 
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -145,6 +146,10 @@ struct ShardSpec {
     pages: usize,
     paged: bool,
     reserve: ReservationPolicy,
+    /// Whether the shard admits against a shared-prefix index (coerced
+    /// off on dense pools); shards must agree or the coordinator's
+    /// affinity routing would chase prefixes some shards can't share.
+    prefix: bool,
 }
 
 fn spec_of<B: ExecBackend>(engine: &Engine<B>) -> ShardSpec {
@@ -156,6 +161,7 @@ fn spec_of<B: ExecBackend>(engine: &Engine<B>) -> ShardSpec {
         pages: engine.scheduler.total_pages(),
         paged: engine.scheduler.is_paged(),
         reserve: engine.reserve(),
+        prefix: engine.prefix_share(),
     }
 }
 
@@ -191,9 +197,8 @@ impl std::ops::Deref for TokenSubscription {
 // ---------------------------------------------------------------------------
 
 /// Builder for a [`Router`]: policy, cache layout, page-reservation
-/// policy and shard count in one place (the old
-/// `spawn`/`spawn_with_policy`/`spawn_with_options` parameter ladder,
-/// collapsed).
+/// policy, shared-prefix admission and shard count in one place — the
+/// only way to spawn a router.
 ///
 /// ```no_run
 /// # use flexllm::coordinator::{PrefillPolicy, RouterBuilder};
@@ -201,6 +206,7 @@ impl std::ops::Deref for TokenSubscription {
 /// let router = RouterBuilder::new()
 ///     .policy(PrefillPolicy::chunked(32))
 ///     .shards(2)
+///     .prefix_share(true)
 ///     .spawn("artifacts".to_string())?;
 /// # Ok(()) }
 /// ```
@@ -210,6 +216,7 @@ pub struct RouterBuilder {
     layout: KvLayout,
     reserve: ReservationPolicy,
     shards: usize,
+    prefix_share: bool,
 }
 
 impl Default for RouterBuilder {
@@ -227,6 +234,7 @@ impl RouterBuilder {
             layout: KvLayout::Dense,
             reserve: ReservationPolicy::Upfront,
             shards: 1,
+            prefix_share: false,
         }
     }
 
@@ -256,6 +264,16 @@ impl RouterBuilder {
         self
     }
 
+    /// Shared-prefix admission ([`Engine::with_prefix_share`]): every
+    /// shard indexes page-aligned prefix chunks and admits resident
+    /// prefixes with zero prefill work, and the coordinator routes
+    /// prompts to the shard already holding their prefix (coerced off
+    /// per shard on dense pools, like every other capability).
+    pub fn prefix_share(mut self, enabled: bool) -> Self {
+        self.prefix_share = enabled;
+        self
+    }
+
     /// Spawn over the AOT PJRT artifacts: every shard opens its own
     /// [`Runtime`](crate::runtime::Runtime) on `artifact_dir` (one
     /// artifact set per device — the manifest fixes each shard's pool
@@ -277,7 +295,7 @@ impl RouterBuilder {
         B: ExecBackend + 'static,
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
     {
-        let RouterBuilder { policy, layout, reserve, shards } = self;
+        let RouterBuilder { policy, layout, reserve, shards, prefix_share } = self;
         let shard_count = shards.max(1);
         let (tx, rx) = mpsc::channel::<FrontMsg>();
         let factory = Arc::new(factory);
@@ -295,6 +313,7 @@ impl RouterBuilder {
                         Ok(backend) => {
                             Engine::with_reservation(backend, policy, layout, reserve)
                                 .with_shard_id(shard)
+                                .with_prefix_share(prefix_share)
                         }
                         Err(e) => {
                             let _ = ready_tx.send(Err(e));
@@ -341,9 +360,13 @@ impl RouterBuilder {
         // admission rules can never diverge from the schedulers'
         let spec = specs[0];
         let model = if spec.paged {
+            // the model's own prefix index stays empty (it never records
+            // chunks), so reservation math stays conservative — the flag
+            // only tells the coordinator to route by prefix affinity
             Scheduler::paged(spec.lanes, spec.prefill_len, spec.max_seq,
                              spec.page_len, spec.pages)
                 .with_reserve(spec.reserve)
+                .with_prefix_share(spec.prefix)
         } else {
             Scheduler::new(spec.lanes, spec.prefill_len, spec.max_seq, false)
         };
@@ -381,35 +404,6 @@ pub struct Router {
 }
 
 impl Router {
-    /// Spawn a single-shard engine over the artifact directory with the
-    /// default `Blocking` admission policy.
-    #[deprecated(note = "use RouterBuilder::new().spawn(artifact_dir)")]
-    pub fn spawn(artifact_dir: String) -> Result<Self> {
-        RouterBuilder::new().spawn(artifact_dir)
-    }
-
-    /// Spawn a single-shard engine with an explicit admission policy
-    /// over the dense cache layout.
-    #[deprecated(note = "use RouterBuilder::new().policy(..).spawn(artifact_dir)")]
-    pub fn spawn_with_policy(artifact_dir: String, policy: PrefillPolicy) -> Result<Self> {
-        RouterBuilder::new().policy(policy).spawn(artifact_dir)
-    }
-
-    /// Spawn a single-shard engine with an explicit admission policy,
-    /// cache layout and page-reservation policy.
-    #[deprecated(note = "use RouterBuilder::new().policy(..).layout(..).reserve(..)\
-                         .spawn(artifact_dir)")]
-    pub fn spawn_with_options(artifact_dir: String, policy: PrefillPolicy,
-                              layout: KvLayout, reserve: ReservationPolicy)
-        -> Result<Self>
-    {
-        RouterBuilder::new()
-            .policy(policy)
-            .layout(layout)
-            .reserve(reserve)
-            .spawn(artifact_dir)
-    }
-
     /// Number of engine shards behind this router.
     pub fn shards(&self) -> usize {
         self.shards
@@ -736,11 +730,24 @@ struct GenerateWaiter {
     reply: mpsc::Sender<Result<Vec<GenResult>>>,
 }
 
+/// Bound on the coordinator's prefix-affinity map: beyond this many
+/// distinct first-page hashes the oldest recording is dropped (the
+/// shard-side index evicts by LRU anyway, so stale affinity only costs
+/// a balanced placement, never correctness).
+const AFFINITY_CAP: usize = 1024;
+
 struct Coordinator {
     shards: Vec<ShardState>,
     /// Placement model: a scheduler with the shards' exact geometry,
     /// used only for validation and reservation math.
     model: Scheduler,
+    /// Prefix affinity: first-page chain hash → shard it was last
+    /// dispatched to. Consulted before least-loaded placement so
+    /// prompts sharing a prefix land on the shard whose index holds it
+    /// (zero-prefill admission) instead of re-prefilling elsewhere.
+    affinity: HashMap<u64, usize>,
+    /// Insertion order of `affinity` keys, for bounded FIFO eviction.
+    affinity_order: VecDeque<u64>,
     /// Requests no shard can currently take, FIFO with head-of-line
     /// blocking (global seq, request).
     overflow: VecDeque<(u64, GenRequest)>,
@@ -768,6 +775,8 @@ fn coordinator_loop(rx: mpsc::Receiver<FrontMsg>, shards: Vec<ShardState>,
     let mut c = Coordinator {
         shards,
         model,
+        affinity: HashMap::new(),
+        affinity_order: VecDeque::new(),
         overflow: VecDeque::new(),
         next_seq: 0,
         completed: Vec::new(),
@@ -910,13 +919,51 @@ impl Coordinator {
         }
     }
 
-    /// Least-loaded-by-free-pages: the live shard with the most
-    /// estimated-free pages that still covers `req`'s admission
-    /// reservation; lowest shard id on ties ([`engine::most_free`], the
-    /// same rule `place_shard` applies to in-process engines). `None` =
-    /// page-starved everywhere.
+    /// Shard-affinity key for a prompt: the chain hash of its first
+    /// page-aligned chunk — the root every deeper prefix entry hangs
+    /// off, so any two prompts that could share resident pages share
+    /// this key. `None` when sharing is off or the prompt is too short
+    /// to leave a sharable page behind (resident spans stop strictly
+    /// below the prompt, so one full page needs `len > page_len`).
+    fn affinity_key(&self, req: &GenRequest) -> Option<u64> {
+        if !self.model.prefix_share() {
+            return None;
+        }
+        let pl = self.model.page_len();
+        (req.prompt.len() > pl).then(|| kv::chain_hash(0, &req.prompt[..pl]))
+    }
+
+    /// Record that `key`'s prefix was dispatched to `shard`, evicting
+    /// the oldest recording once the map is full.
+    fn note_affinity(&mut self, key: u64, shard: usize) {
+        if self.affinity.insert(key, shard).is_none() {
+            self.affinity_order.push_back(key);
+            if self.affinity_order.len() > AFFINITY_CAP {
+                if let Some(old) = self.affinity_order.pop_front() {
+                    self.affinity.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Least-loaded-by-free-pages, with a prefix-affinity override: a
+    /// prompt whose first-page hash was dispatched before goes back to
+    /// that shard when it still has room (its index likely holds the
+    /// prefix resident, making admission near-free — `place_shard_affine`
+    /// applies the same preference to in-process engines). Otherwise
+    /// the live shard with the most estimated-free pages that covers
+    /// `req`'s admission reservation; lowest shard id on ties
+    /// ([`engine::most_free`]). `None` = page-starved everywhere.
     fn pick(&self, req: &GenRequest) -> Option<usize> {
         let need = self.model.admission_pages(req);
+        if let Some(&shard) =
+            self.affinity_key(req).and_then(|h| self.affinity.get(&h))
+        {
+            let st = &self.shards[shard];
+            if !st.dead && st.est_free() >= need {
+                return Some(shard);
+            }
+        }
         engine::most_free(self.shards.iter().enumerate().filter_map(|(i, st)| {
             if st.dead {
                 return None;
@@ -928,6 +975,9 @@ impl Coordinator {
 
     fn dispatch(&mut self, shard: usize, seq: u64, req: GenRequest) {
         let need = self.model.admission_pages(&req);
+        if let Some(key) = self.affinity_key(&req) {
+            self.note_affinity(key, shard);
+        }
         let st = &mut self.shards[shard];
         let idx = st.sent;
         st.sent += 1;
@@ -1174,6 +1224,41 @@ mod tests {
         // per shard against 6 requests)
         assert!(per.iter().all(|m| m.requests > 0),
                 "placement starved a shard on a balanced workload");
+    }
+
+    #[test]
+    fn coordinator_routes_shared_prefixes_to_the_resident_shard() {
+        let router = RouterBuilder::new()
+            .shards(2)
+            .prefix_share(true)
+            .spawn_with(|_| Ok(MockBackend::paged(2, 4, 32, 64, 2, 12)))
+            .unwrap();
+        let prompt = vec![7, 8, 9, 10];
+        // the cold request seeds shard 0's prefix index (most-free tie
+        // breaks to the lowest shard id)
+        router.submit(vec![GenRequest::new(0, prompt.clone(), 2)]).unwrap();
+        router.drain().unwrap();
+        // three more with the same prefix: affinity must send ALL of
+        // them back to shard 0, where the prefix is resident, even
+        // though balanced placement would spread them across shards
+        let queue: Vec<GenRequest> =
+            (1..4).map(|i| GenRequest::new(i, prompt.clone(), 2)).collect();
+        router.submit(queue).unwrap();
+        let results = router.drain().unwrap();
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            let want = MockBackend::expected_tokens(&prompt, 2, 64);
+            assert_eq!(r.tokens, want,
+                       "request {} diverged under shared admission", r.id);
+        }
+        let per = router.shard_metrics().unwrap();
+        assert_eq!(per[0].requests, 4, "affinity must keep the prefix on shard 0");
+        assert_eq!(per[1].requests, 0);
+        let m = router.metrics().unwrap();
+        assert_eq!(m.prefix_misses, 1, "only the cold request misses");
+        assert_eq!(m.prefix_hits, 3);
+        assert_eq!(m.kv_pages_shared, 3, "each hit binds the one resident page");
+        assert_eq!(m.cow_copies, 3, "each hit forks the tail mid-page");
     }
 
     /// Mock that serves normally until its `fail_after`-th decode

@@ -31,7 +31,7 @@ use std::collections::VecDeque;
 use crate::anyhow::{anyhow, Result};
 
 use super::backend::ModeledBackend;
-use super::engine::{place_shard, Engine, KvLayout};
+use super::engine::{place_shard, place_shard_affine, Engine, KvLayout};
 use super::kv::{split_budget, ReservationPolicy};
 use super::request::{percentile, GenRequest, ServeMetrics};
 use super::scheduler::PrefillPolicy;
@@ -120,6 +120,22 @@ pub struct OpenLoopConfig {
     /// engines. Placement is least-loaded-by-free-pages with a FIFO
     /// overflow queue, the same policy the threaded Router applies.
     pub shards: usize,
+    /// Shared-prefix WORKLOAD shape: when > 0, a `shared_frac` portion
+    /// of requests open with one of `prefix_groups` seeded "system
+    /// prompts" of this many tokens (the rest of the prompt stays
+    /// unique per request). Orthogonal to `prefix_share` — the same
+    /// trace runs with sharing on or off, which is exactly the
+    /// comparison the acceptance test gates.
+    pub shared_prefix_len: usize,
+    /// Distinct system prompts shared heads are drawn from.
+    pub prefix_groups: usize,
+    /// Fraction of requests that draw a shared head (0.8 = the
+    /// acceptance workload).
+    pub shared_frac: f64,
+    /// Serve over the shared-prefix KV cache: resident prefixes admit
+    /// with zero prefill work, divergent tails fork copy-on-write.
+    /// Requires a paged pool; shard placement becomes prefix-affine.
+    pub prefix_share: bool,
     pub seed: u64,
 }
 
@@ -144,6 +160,10 @@ impl Default for OpenLoopConfig {
             paged: None,
             reserve: ReservationPolicy::Upfront,
             shards: 1,
+            shared_prefix_len: 0,
+            prefix_groups: 1,
+            shared_frac: 0.8,
+            prefix_share: false,
             seed: 0x5EED,
         }
     }
@@ -161,6 +181,9 @@ pub struct OpenLoopShardStats {
     pub kv_pages_grown: usize,
     pub preemptions: usize,
     pub decode_invocations: usize,
+    /// Shared-prefix admissions this shard served (zeros unless
+    /// `prefix_share` — shows whether affinity kept groups together).
+    pub prefix_hits: usize,
     /// This shard's own modeled clock at the end of the run.
     pub model_time_s: f64,
 }
@@ -171,11 +194,12 @@ impl OpenLoopShardStats {
             "{{\"shard\": {}, \"requests\": {}, \"peak_active\": {}, \
              \"kv_pages_total\": {}, \"kv_pages_peak\": {}, \
              \"kv_pages_grown\": {}, \"preemptions\": {}, \
-             \"decode_invocations\": {}, \"model_time_s\": {:.6}}}",
+             \"decode_invocations\": {}, \"prefix_hits\": {}, \
+             \"model_time_s\": {:.6}}}",
             self.shard, self.requests, self.peak_active,
             self.kv_pages_total, self.kv_pages_peak,
             self.kv_pages_grown, self.preemptions,
-            self.decode_invocations, self.model_time_s,
+            self.decode_invocations, self.prefix_hits, self.model_time_s,
         )
     }
 }
@@ -213,6 +237,12 @@ pub struct OpenLoopStats {
     /// Lazy-reservation accounting (zeros under `Upfront`).
     pub kv_pages_grown: usize,
     pub preemptions: usize,
+    /// Shared-prefix accounting (zeros unless `prefix_share`).
+    pub prefix_hits: usize,
+    pub prefix_misses: usize,
+    pub prefix_hit_rate: f64,
+    pub kv_pages_shared: usize,
+    pub cow_copies: usize,
     /// Per-shard breakdown (empty on a single-shard run).
     pub per_shard: Vec<OpenLoopShardStats>,
 }
@@ -258,6 +288,9 @@ impl OpenLoopStats {
              \"peak_active\": {}, \"kv_pages_total\": {}, \"kv_pages_peak\": {}, \
              \"page_occupancy_p95\": {:.6}, \"page_frag_p95\": {:.6}, \
              \"kv_pages_grown\": {}, \"preemptions\": {}, \
+             \"prefix_hits\": {}, \"prefix_misses\": {}, \
+             \"prefix_hit_rate\": {:.6}, \"kv_pages_shared\": {}, \
+             \"cow_copies\": {}, \
              \"per_shard\": [{}]}}",
             self.requests,
             self.shards, self.tokens, self.throughput_tps(),
@@ -269,6 +302,9 @@ impl OpenLoopStats {
             self.peak_active, self.kv_pages_total, self.kv_pages_peak,
             self.page_occupancy_p95, self.page_frag_p95,
             self.kv_pages_grown, self.preemptions,
+            self.prefix_hits, self.prefix_misses,
+            self.prefix_hit_rate, self.kv_pages_shared,
+            self.cow_copies,
             per_shard.join(", "),
         )
     }
@@ -302,8 +338,28 @@ fn arrival_trace(cfg: &OpenLoopConfig)
         }
         _ => {}
     }
+    if cfg.shared_prefix_len > cfg.prefill_len {
+        return Err(anyhow!(
+            "shared prefix {} exceeds the {}-token prompt",
+            cfg.shared_prefix_len, cfg.prefill_len));
+    }
+    if cfg.shared_prefix_len > 0 && cfg.prefix_groups == 0 {
+        return Err(anyhow!("shared-prefix workload needs prefix_groups > 0"));
+    }
+    if !(0.0..=1.0).contains(&cfg.shared_frac) {
+        return Err(anyhow!("shared_frac must be in [0, 1]"));
+    }
 
     let mut rng = Rng::new(cfg.seed);
+    // the seeded "system prompts" shared heads are drawn from; with the
+    // workload off nothing is drawn, so existing traces are unperturbed
+    let heads: Vec<Vec<i32>> = if cfg.shared_prefix_len > 0 {
+        (0..cfg.prefix_groups)
+            .map(|_| rng.tokens(cfg.shared_prefix_len, cfg.vocab as i32))
+            .collect()
+    } else {
+        Vec::new()
+    };
     let mut trace: Vec<(f64, GenRequest)> = Vec::with_capacity(cfg.requests);
     let mut arrival_by_id = vec![0.0f64; cfg.requests];
     let mut poisson_t = 0.0f64;
@@ -319,7 +375,17 @@ fn arrival_trace(cfg: &OpenLoopConfig)
                 poisson_t
             }
         };
-        let prompt = rng.tokens(cfg.prefill_len, cfg.vocab as i32);
+        // && short-circuits: with the workload off the rng draws stay
+        // exactly the PR 5 sequence, keeping committed traces stable
+        let prompt = if cfg.shared_prefix_len > 0 && rng.f64() < cfg.shared_frac {
+            let g = rng.usize_in(0, cfg.prefix_groups - 1);
+            let mut p = heads[g].clone();
+            p.extend(rng.tokens(cfg.prefill_len - cfg.shared_prefix_len,
+                                cfg.vocab as i32));
+            p
+        } else {
+            rng.tokens(cfg.prefill_len, cfg.vocab as i32)
+        };
         let budget = rng.usize_in(cfg.min_new_tokens, cfg.max_new_tokens);
         arrival_by_id[i] = at;
         trace.push((at, GenRequest::new(i as u64, prompt, budget)));
@@ -332,6 +398,11 @@ fn arrival_trace(cfg: &OpenLoopConfig)
 /// produce the identical arrival trace for every policy, layout and
 /// shard count, so runs are directly comparable.
 pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<OpenLoopStats> {
+    if cfg.prefix_share && cfg.paged.is_none() {
+        // silently coercing sharing off would make the with/without
+        // comparison lie; refuse like a Chunked→Blocking degradation
+        return Err(anyhow!("prefix sharing needs a paged pool"));
+    }
     if cfg.shards > 1 {
         return run_open_loop_sharded(policy, cfg);
     }
@@ -350,6 +421,7 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
                 ReservationPolicy::Upfront => backend,
             };
             Engine::with_reservation(backend, policy, KvLayout::Paged, cfg.reserve)
+                .with_prefix_share(cfg.prefix_share)
         }
         None => {
             let backend = ModeledBackend::u280(cfg.lanes, cfg.prefill_len,
@@ -441,6 +513,11 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         page_frag_p95: m.page_frag_p95(),
         kv_pages_grown: m.kv_pages_grown,
         preemptions: m.preemptions,
+        prefix_hits: m.prefix_hits,
+        prefix_misses: m.prefix_misses,
+        prefix_hit_rate: m.prefix_hit_rate(),
+        kv_pages_shared: m.kv_pages_shared,
+        cow_copies: m.cow_copies,
         per_shard: Vec::new(),
     })
 }
@@ -478,7 +555,8 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
                 engines.push(
                     Engine::with_reservation(backend, policy, KvLayout::Paged,
                                              cfg.reserve)
-                        .with_shard_id(i));
+                        .with_shard_id(i)
+                        .with_prefix_share(cfg.prefix_share));
             }
         }
         None => {
@@ -508,6 +586,11 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
     let mut next_arrival = 0usize;
     let mut pending = trace.into_iter().map(|(_, r)| Some(r)).collect::<Vec<_>>();
     let mut overflow: VecDeque<GenRequest> = VecDeque::new();
+    // with sharing on, placement prefers the shard whose prefix index
+    // already holds the prompt's head (zero-prefill admission there);
+    // otherwise the plain least-loaded rule, unchanged
+    let place: fn(&[Engine<ModeledBackend>], &GenRequest) -> Option<usize> =
+        if cfg.prefix_share { place_shard_affine } else { place_shard };
 
     loop {
         // the global clock is the earliest busy shard (arrivals due by
@@ -527,7 +610,7 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
                 .map(|e| e.backend.model_time_s)
                 .fold(0.0f64, f64::max);
             if let Some(head) = overflow.front() {
-                let Some(s) = place_shard(&engines, head) else {
+                let Some(s) = place(&engines, head) else {
                     return Err(anyhow!(
                         "request {} overflows every idle shard: its reservation \
                          exceeds a whole per-shard pool", head.id));
@@ -558,7 +641,7 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
         // place while SOME shard can take the head (retirements since
         // the last pass may have freed pages); head-of-line blocks
         while let Some(head) = overflow.front() {
-            let Some(s) = place_shard(&engines, head) else { break };
+            let Some(s) = place(&engines, head) else { break };
             let req = overflow.pop_front().expect("front checked above");
             // an idle shard starts no earlier than the placement
             // instant; a busy one is already past it
@@ -620,6 +703,7 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
             kv_pages_grown: e.metrics.kv_pages_grown,
             preemptions: e.metrics.preemptions,
             decode_invocations: e.metrics.decode_invocations,
+            prefix_hits: e.metrics.prefix_hits,
             model_time_s: e.backend.model_time_s,
         })
         .collect();
@@ -646,6 +730,11 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
         page_frag_p95: m.page_frag_p95(),
         kv_pages_grown: m.kv_pages_grown,
         preemptions: m.preemptions,
+        prefix_hits: m.prefix_hits,
+        prefix_misses: m.prefix_misses,
+        prefix_hit_rate: m.prefix_hit_rate(),
+        kv_pages_shared: m.kv_pages_shared,
+        cow_copies: m.cow_copies,
         per_shard,
     })
 }
@@ -818,6 +907,46 @@ mod tests {
                    "dense runs report kv_pages_total = 0 per shard");
         // a split that would leave a shard without lanes is refused
         cfg.shards = 8;
+        assert!(run_open_loop(PrefillPolicy::chunked(32), &cfg).is_err());
+    }
+
+    #[test]
+    fn shared_prefix_workload_hits_the_index() {
+        let mut cfg = small();
+        cfg.requests = 12;
+        cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+            cfg.lanes, cfg.max_seq, 32, 16));
+        cfg.shared_prefix_len = 96;
+        cfg.prefix_groups = 2;
+        cfg.shared_frac = 0.8;
+        cfg.prefix_share = true;
+        let s = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert!(s.prefix_hits > 0, "an 80%-shared workload must hit the index");
+        assert!(s.prefix_hit_rate > 0.0 && s.prefix_hit_rate <= 1.0);
+        assert!(s.kv_pages_shared > 0, "hits must actually bind shared pages");
+        let a = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(s.prefix_hits, a.prefix_hits, "shared runs must be seeded");
+        assert!((s.ttft_p95_s - a.ttft_p95_s).abs() < 1e-12);
+        let j = s.to_json();
+        assert!(j.contains("\"prefix_hit_rate\""));
+        assert!(j.contains("\"kv_pages_shared\""));
+        assert!(crate::util::Json::parse(&j).is_ok());
+        // the same trace with sharing off: no hits counted, and the
+        // trace itself is identical (workload ⊥ serving feature)
+        cfg.prefix_share = false;
+        let off = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(off.prefix_hits, 0);
+        assert_eq!(off.prefix_hit_rate, 0.0);
+        assert_eq!(off.requests, s.requests);
+        // sharing without a paged pool is a config error, not a silent
+        // coercion
+        cfg.prefix_share = true;
+        cfg.paged = None;
+        assert!(run_open_loop(PrefillPolicy::chunked(32), &cfg).is_err());
+        // a shared head longer than the prompt is rejected
+        cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+            cfg.lanes, cfg.max_seq, 32, 16));
+        cfg.shared_prefix_len = cfg.prefill_len + 1;
         assert!(run_open_loop(PrefillPolicy::chunked(32), &cfg).is_err());
     }
 

@@ -155,6 +155,19 @@ pub struct ServeMetrics {
     /// exists to close (their ratio is the live fragmentation).
     pub kv_rows_reserved_peak: usize,
     pub kv_rows_written_peak: usize,
+    /// Admissions that bound a RESIDENT shared prefix (zero prefill
+    /// chunks for the shared span).
+    pub prefix_hits: usize,
+    /// Admissions that found no resident prefix (only counted while
+    /// prefix sharing is enabled, so hits + misses = admissions and the
+    /// hit rate is meaningful).
+    pub prefix_misses: usize,
+    /// Shared pages bound across all prefix hits (one page backing N
+    /// lanes counts once per binding lane — the prefill work avoided).
+    pub kv_pages_shared: usize,
+    /// Copy-on-write forks performed at admission (partial-page prefix
+    /// overlaps copied into a private page).
+    pub cow_copies: usize,
     /// Page occupancy samples (pages in use / total), one per SAMPLED
     /// tick — bounded by decimation, see [`ServeMetrics::record_page_sample`].
     pub page_occupancy_s: Vec<f64>,
@@ -246,6 +259,10 @@ impl ServeMetrics {
             m.preemptions += s.preemptions;
             m.kv_rows_reserved_peak += s.kv_rows_reserved_peak;
             m.kv_rows_written_peak += s.kv_rows_written_peak;
+            m.prefix_hits += s.prefix_hits;
+            m.prefix_misses += s.prefix_misses;
+            m.kv_pages_shared += s.kv_pages_shared;
+            m.cow_copies += s.cow_copies;
             m.page_occupancy_s.extend_from_slice(&s.page_occupancy_s);
             m.page_frag_s.extend_from_slice(&s.page_frag_s);
         }
@@ -334,6 +351,17 @@ impl ServeMetrics {
 
     pub fn page_frag_p95(&self) -> f64 {
         percentile(&self.page_frag_s, 95.0)
+    }
+
+    /// Fraction of admissions that bound a resident shared prefix; 0.0
+    /// before any admission (or with sharing disabled, where neither
+    /// counter moves).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / total as f64
     }
 
     /// Decode lane utilization: fraction of invocation slots that

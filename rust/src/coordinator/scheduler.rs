@@ -48,7 +48,7 @@ use std::time::Instant;
 use crate::anyhow::{anyhow, Result};
 
 use super::backend::{LaneStep, PagedStep};
-use super::kv::{KvPool, LaneKv, ReservationPolicy};
+use super::kv::{KvPool, LaneKv, PrefixIndex, ReservationPolicy};
 use super::request::{FinishReason, GenRequest, GenResult};
 
 /// How admission prefill shares the engine with decode iterations.
@@ -134,6 +134,25 @@ impl PageStats {
     }
 }
 
+/// How a shared-prefix admission bound its lane (PR 6): the engine
+/// relays this to the backend (which must treat the shared pages as
+/// read-only and skip the resident span's prefill) and into the
+/// metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SharedBind {
+    /// Prompt rows already cache-resident at bind; chunked prefill
+    /// resumes here instead of at row 0.
+    pub resident_rows: usize,
+    /// Leading page-table entries bound to SHARED physical pages
+    /// (refcounted; this lane must never write into them).
+    pub shared_pages: usize,
+    /// Rows copied into a private fork of a partially-overlapping
+    /// shared page (copy-on-write; 0 when the match ended exactly on a
+    /// page boundary). The fork is the page-table entry right after the
+    /// shared span.
+    pub cow_rows: usize,
+}
+
 /// A request preempted mid-flight: identifies whose pages were released
 /// so the engine can notify the backend and account the event.
 #[derive(Debug, Clone, Copy)]
@@ -192,6 +211,8 @@ struct InFlight {
     /// admission): regenerated tokens with index < `replayed` are
     /// recompute replays the engine must not re-emit.
     replayed: usize,
+    /// Present when admission bound resident shared-prefix pages.
+    shared: Option<SharedBind>,
 }
 
 impl InFlight {
@@ -234,6 +255,16 @@ pub struct Scheduler {
     /// push/pop so the placement layer's per-tick load reports stay
     /// O(1) instead of rescanning the queue).
     queue_pages: usize,
+    /// Shared-prefix index (PR 6): `Some` when prefix sharing is
+    /// enabled (paged pools only). Completed prompts register their
+    /// page-aligned prefix chunks; admission binds resident chunks
+    /// instead of re-prefilling them.
+    prefix: Option<PrefixIndex>,
+    /// Whether a partially-overlapping shared page may be COW-forked at
+    /// bind (copying the overlap rows). Off for backends that cannot
+    /// copy pages device-side — the resident span then rounds down to
+    /// the last full page boundary.
+    partial_cow: bool,
     next_seq: u64,
 }
 
@@ -250,6 +281,8 @@ impl Scheduler {
             paged: false,
             reserve: ReservationPolicy::Upfront,
             queue_pages: 0,
+            prefix: None,
+            partial_cow: true,
             next_seq: 0,
         }
     }
@@ -270,8 +303,61 @@ impl Scheduler {
             paged: true,
             reserve: ReservationPolicy::Upfront,
             queue_pages: 0,
+            prefix: None,
+            partial_cow: true,
             next_seq: 0,
         }
+    }
+
+    /// Enable the shared-prefix cache (builder). Coerced OFF on a dense
+    /// pool: with one `max_seq`-row page per lane there are no
+    /// page-aligned prefix chunks to share.
+    pub fn with_prefix_share(mut self, enabled: bool) -> Self {
+        self.set_prefix_share(enabled);
+        self
+    }
+
+    /// `&mut` form of [`Scheduler::with_prefix_share`] for callers that
+    /// only hold a constructed scheduler (the engine's builder applies
+    /// the flag after capability coercion). Disabling drops the index —
+    /// and with it every page pin it held — so flip it before serving,
+    /// not mid-flight.
+    pub fn set_prefix_share(&mut self, enabled: bool) {
+        self.prefix = (enabled && self.paged).then(PrefixIndex::new);
+    }
+
+    /// Allow or forbid partial-page COW forks at bind (builder; default
+    /// allowed). Backends without a device-side page copy set this
+    /// false, rounding resident spans down to full page boundaries.
+    pub fn with_partial_cow(mut self, enabled: bool) -> Self {
+        self.set_partial_cow(enabled);
+        self
+    }
+
+    /// `&mut` form of [`Scheduler::with_partial_cow`].
+    pub fn set_partial_cow(&mut self, enabled: bool) {
+        self.partial_cow = enabled;
+    }
+
+    /// Whether shared-prefix admission is enabled.
+    pub fn prefix_share(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Resident depth (pages) of `prompt`'s prefix in this scheduler's
+    /// index, without touching LRU state — the placement layer's
+    /// shard-affinity probe.
+    pub fn prefix_depth(&self, prompt: &[i32]) -> usize {
+        self.prefix
+            .as_ref()
+            .map(|idx| idx.resident_depth(prompt, self.pool.page_len))
+            .unwrap_or(0)
+    }
+
+    /// Registered prefix chunks currently resident (one per pinned
+    /// page).
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.as_ref().map(|idx| idx.len()).unwrap_or(0)
     }
 
     /// Select the reservation policy (builder; the default is
@@ -440,12 +526,75 @@ impl Scheduler {
         }
     }
 
-    /// Pick the lanes to admit this iteration and bind them (empty cache
-    /// maps, [`RequestPhase::Prefilling`] at chunk 0). A request binds
-    /// only if its page reservation fits the free list — FIFO with
+    /// The longest shareable resident span for `req`: the matched
+    /// full-page chain, plus (when partial COW is allowed) the longest
+    /// partial overlap with a resident child chunk. The span is capped
+    /// STRICTLY below the prompt — the final token's logits must be
+    /// recomputed to produce the request's first generated token, so at
+    /// least one row always prefills. Returns the shared pages, the
+    /// resident row count and the COW overlap rows (> 0 means the page
+    /// after the shared span forks a private copy of that many rows).
+    fn prefix_match(&mut self, req: &GenRequest) -> (Vec<u32>, usize, usize) {
+        let page_len = self.pool.page_len;
+        let Some(idx) = self.prefix.as_mut() else { return (Vec::new(), 0, 0) };
+        let hit = idx.lookup(&req.prompt, page_len);
+        let mut pages = hit.pages;
+        let mut chain = hit.chain;
+        let cap = req.prompt.len() - 1;
+        if pages.len() * page_len > cap {
+            // fully resident prompt: un-share the last page so its rows
+            // can be recomputed (or COW-forked) for the final chunk
+            pages.pop();
+            chain = hit.parent_chain;
+        }
+        let resident = pages.len() * page_len;
+        let mut cow_rows = 0;
+        if self.partial_cow {
+            if let Some((_, w)) = idx.partial_overlap(chain, &req.prompt[resident..]) {
+                cow_rows = w.min(cap - resident);
+            }
+        }
+        (pages, resident, cow_rows)
+    }
+
+    /// Size and stage the head request's bind: shared pages from the
+    /// prefix index plus the private pages it must allocate. When the
+    /// private need outruns the free list, LRU prefix chains are
+    /// evicted first (resident-but-idle cache yields to admission);
+    /// `None` means the head still cannot bind — head-of-line blocks.
+    fn plan_bind(&mut self, req: &GenRequest)
+        -> Option<(Vec<u32>, usize, usize, usize)>
+    {
+        loop {
+            let (shared, resident_rows, cow_rows) = self.prefix_match(req);
+            let logical = self.pool.pages_for(self.admission_rows(req));
+            let private = logical - shared.len().min(logical);
+            if private <= self.pool.free_pages() {
+                return Some((shared, resident_rows, cow_rows, private));
+            }
+            let evicted = match self.prefix.as_mut() {
+                Some(idx) => idx.evict_lru(),
+                None => Vec::new(),
+            };
+            if evicted.is_empty() {
+                return None;
+            }
+            // eviction may have dropped pages the match selected, so
+            // release and re-match from the fresh index state
+            self.pool.release(evicted);
+        }
+    }
+
+    /// Pick the lanes to admit this iteration and bind them
+    /// ([`RequestPhase::Prefilling`] at chunk 0). A request binds only
+    /// if its page reservation fits the free list — FIFO with
     /// head-of-line blocking, so admission is refused when PAGES (not
-    /// lanes) run out. Returns the bound lanes; the engine then feeds
-    /// each prompt through the policy's prefill path.
+    /// lanes) run out. With prefix sharing enabled, a request whose
+    /// prefix is resident binds the shared pages, allocates only its
+    /// private tail, and enters with its fill position PAST the shared
+    /// span — zero prefill chunks for the resident rows. Returns the
+    /// bound lanes; the engine then feeds each prompt through the
+    /// policy's prefill path.
     pub fn plan_admissions(&mut self) -> Vec<usize> {
         if self.queue.is_empty() || (self.gang && self.active() > 0) {
             return Vec::new();
@@ -456,15 +605,26 @@ impl Scheduler {
             (0..self.lanes.len()).filter(|&l| self.lanes[l].is_none()).collect();
         for lane in free {
             let Some(head) = self.queue.front() else { break };
-            let pages_needed = self.pool.pages_for(self.admission_rows(&head.req));
-            if pages_needed > self.pool.free_pages() {
+            let head_req = head.req.clone();
+            let Some((shared, resident_rows, cow_rows, private)) =
+                self.plan_bind(&head_req)
+            else {
                 break; // head-of-line blocks: keep FIFO order
-            }
+            };
             let p = self.queue.pop_front().expect("head checked above");
-            self.queue_pages = self.queue_pages.saturating_sub(pages_needed);
-            let pages = self.pool.alloc(pages_needed).expect("count checked above");
-            let kv = LaneKv::new(p.req.prompt.len(), pages, self.pool.page_len,
-                                 self.pool.max_seq)
+            // the queued-demand counter tracks the CONSERVATIVE
+            // admission estimate recorded at submit time
+            let estimate = self.pool.pages_for(self.admission_rows(&p.req));
+            self.queue_pages = self.queue_pages.saturating_sub(estimate);
+            let shared_count = shared.len();
+            let mut table = shared;
+            for &page in &table {
+                self.pool.retain(page);
+            }
+            table.extend(self.pool.alloc(private).expect("count checked above"));
+            let kv = LaneKv::with_resident(p.req.prompt.len(), table,
+                                           self.pool.page_len, self.pool.max_seq,
+                                           resident_rows + cow_rows)
                 .expect("validated request cannot fail to bind");
             // a preempted request re-prefills from chunk 0 but keeps its
             // original first-token clock and emitted-token watermark
@@ -473,6 +633,11 @@ impl Scheduler {
                 // placeholder; overwritten when the prefill completes
                 None => (p.arrived, 0),
             };
+            let shared_bind = (shared_count > 0 || cow_rows > 0).then_some(SharedBind {
+                resident_rows: resident_rows + cow_rows,
+                shared_pages: shared_count,
+                cow_rows,
+            });
             self.lanes[lane] = Some(InFlight {
                 req: p.req,
                 seq: p.seq,
@@ -483,6 +648,7 @@ impl Scheduler {
                 first_token_at,
                 tokens: Vec::new(),
                 replayed,
+                shared: shared_bind,
             });
             admitted.push(lane);
         }
@@ -516,6 +682,13 @@ impl Scheduler {
     /// are recompute replays (0 for a fresh admission or unbound lane).
     pub fn replay_watermark(&self, lane: usize) -> usize {
         self.flight(lane).map(|f| f.replayed).unwrap_or(0)
+    }
+
+    /// How `lane`'s admission bound shared-prefix state (`None` for a
+    /// cold bind or unbound lane). The engine relays this to the
+    /// backend before the lane's first chunk and into the metrics.
+    pub fn shared_bind(&self, lane: usize) -> Option<SharedBind> {
+        self.flight(lane).ok().and_then(|f| f.shared)
     }
 
     /// Whether any lane is decode-ready (its prompt is cache-resident).
@@ -569,7 +742,12 @@ impl Scheduler {
         let RequestPhase::Prefilling { next_chunk } = flight.phase else {
             return Err(anyhow!("lane {lane} is not prefilling"));
         };
-        let start_pos = next_chunk * chunk_len;
+        // chunks resume at the lane's fill position, NOT `next_chunk ·
+        // chunk_len`: a shared-prefix bind starts past the resident
+        // span, so chunk 0 picks up at the first non-resident row (for
+        // a cold lane the two coincide — fills advance `pos` in
+        // `chunk_len` steps)
+        let start_pos = flight.kv.pos;
         let prompt = flight.req.prompt.as_slice();
         if start_pos >= prompt.len() {
             return Err(anyhow!(
@@ -595,28 +773,51 @@ impl Scheduler {
         -> Result<Option<Completion>>
     {
         let now = Instant::now();
-        let flight = self.flight_mut(lane)?;
-        match flight.phase {
-            RequestPhase::Prefilling { next_chunk } => {
-                flight.kv.fill(len)?;
-                if flight.kv.is_warm() {
-                    flight.phase = RequestPhase::Decoding;
-                    if flight.replayed == 0 {
-                        // a recompute keeps the original first-token
-                        // time: the user already saw that token
-                        flight.first_token_at = now;
-                    }
-                    flight.tokens.push(token);
-                    self.retire_if_finished(lane, now)
-                } else {
-                    flight.phase = RequestPhase::Prefilling { next_chunk: next_chunk + 1 };
-                    Ok(None)
-                }
-            }
-            RequestPhase::Decoding => {
-                Err(anyhow!("chunk result for lane {lane} already decoding"))
+        let page_len = self.pool.page_len;
+        // direct field access (not `flight_mut`) so the borrow splits
+        // across `lanes` / `pool` / `prefix` for the barrier and the
+        // prefix registration below
+        let flight = self.lanes.get_mut(lane).and_then(|l| l.as_mut())
+            .ok_or_else(|| anyhow!("no request bound to lane {lane}"))?;
+        let RequestPhase::Prefilling { next_chunk } = flight.phase else {
+            return Err(anyhow!("chunk result for lane {lane} already decoding"));
+        };
+        let start = flight.kv.pos;
+        flight.kv.fill(len)?;
+        // write-barrier tripwire: a prefill chunk must land only in
+        // PRIVATE pages. Shared pages are skipped at bind (the fill
+        // position starts past them), so every touched page is
+        // refcount-1 by construction — a higher count here means the
+        // planner aliased a live shared page into a write path.
+        if len > 0 {
+            for logical in start / page_len..=(start + len - 1) / page_len {
+                let page = flight.kv.pages[logical];
+                assert_eq!(self.pool.refcount(page), 1,
+                           "prefill chunk wrote into shared KV page {page}");
             }
         }
+        if !flight.kv.is_warm() {
+            flight.phase = RequestPhase::Prefilling { next_chunk: next_chunk + 1 };
+            return Ok(None);
+        }
+        flight.phase = RequestPhase::Decoding;
+        if flight.replayed == 0 {
+            // a recompute keeps the original first-token time: the
+            // user already saw that token
+            flight.first_token_at = now;
+        }
+        flight.tokens.push(token);
+        // register the now-complete prompt's full pages as resident
+        // prefix chunks BEFORE any retirement below: the index retains
+        // each fresh page, so the prefix stays resident even when the
+        // request finishes on its very first token
+        if let Some(idx) = self.prefix.as_mut() {
+            let fresh = idx.register(&flight.req.prompt, &flight.kv.pages, page_len);
+            for page in fresh {
+                self.pool.retain(page);
+            }
+        }
+        self.retire_if_finished(lane, now)
     }
 
     /// Record a blocking prefill's first token: the whole prompt lands
@@ -668,8 +869,17 @@ impl Scheduler {
     /// Record one decoded token on `lane`, advancing its cache position.
     pub fn record_decode(&mut self, lane: usize, token: i32) -> Result<Option<Completion>> {
         let now = Instant::now();
-        let flight = self.flight_mut(lane)?;
+        let page_len = self.pool.page_len;
+        let flight = self.lanes.get_mut(lane).and_then(|l| l.as_mut())
+            .ok_or_else(|| anyhow!("no request bound to lane {lane}"))?;
+        let write_pos = flight.kv.pos;
         flight.kv.advance()?;
+        // write-barrier tripwire (see `record_chunk`): decode rows land
+        // past the prompt, and only FULL prompt pages ever register or
+        // share, so the write page is always private
+        let page = flight.kv.pages[write_pos / page_len];
+        assert_eq!(self.pool.refcount(page), 1,
+                   "decode wrote into shared KV page {page}");
         flight.tokens.push(token);
         self.retire_if_finished(lane, now)
     }
@@ -710,6 +920,17 @@ impl Scheduler {
                     lane += 1;
                 }
                 Err(_) => {
+                    // resident-but-idle prefix cache yields to live
+                    // execution: evict LRU chains until a page actually
+                    // frees (an evicted page still held by a lane frees
+                    // nothing), and preempt only once the index is dry
+                    let evicted = self.prefix.as_mut()
+                        .map(|idx| idx.evict_lru())
+                        .unwrap_or_default();
+                    if !evicted.is_empty() {
+                        self.pool.release(evicted);
+                        continue; // retry the same lane
+                    }
                     report.grow_failures += 1;
                     let victim = self.preempt_youngest().ok_or_else(|| anyhow!(
                         "KV pool dry with nothing to preempt: a validated \
@@ -1244,6 +1465,137 @@ mod tests {
         assert_eq!(lazy.admission_pages(&req(7, 12)), 1, "prompt 4 + 1 slot");
         let up = paged_sched(4, 6);
         assert_eq!(up.admission_pages(&req(7, 12)), 2);
+    }
+
+    // -- shared-prefix admission (PR 6) ------------------------------------
+
+    /// Prefix-sharing pool: 8-token prompts over 4-row pages → two full
+    /// prompt pages per request, so a warm prompt registers 2 chunks.
+    fn prefix_sched(max_lanes: usize, pages: usize) -> Scheduler {
+        Scheduler::paged(max_lanes, 8, 32, 4, pages).with_prefix_share(true)
+    }
+
+    fn shared_req(id: u64, new: usize) -> GenRequest {
+        GenRequest::new(id, (0..8).collect(), new)
+    }
+
+    #[test]
+    fn shared_admission_skips_resident_span_with_cow_fork() {
+        let mut s = prefix_sched(2, 8);
+        s.submit(shared_req(1, 2)).unwrap();
+        assert_eq!(s.plan_admissions(), vec![0]);
+        assert_eq!(s.shared_bind(0), None, "cold index: nothing to share");
+        // chunk the first prompt in: pos-based plans match chunk·len
+        let plan = s.next_chunk(0, 4).unwrap();
+        assert_eq!((plan.start_pos, plan.tokens.len(), plan.last), (0, 4, false));
+        s.record_chunk(0, 4, 0).unwrap();
+        s.record_chunk(0, 4, 9).unwrap();
+        assert_eq!(s.prefix_entries(), 2, "warm prompt registers its full pages");
+        assert_eq!(s.prefix_depth(&shared_req(2, 2).prompt), 2);
+        // the second, identical prompt shares page 0 and COW-forks page
+        // 1 (row 7 must be recomputed for the first token's logits)
+        s.submit(shared_req(2, 2)).unwrap();
+        assert_eq!(s.plan_admissions(), vec![1]);
+        assert_eq!(s.shared_bind(1),
+                   Some(SharedBind { resident_rows: 7, shared_pages: 1,
+                                     cow_rows: 3 }));
+        let plan = s.next_chunk(1, 4).unwrap();
+        assert_eq!((plan.start_pos, plan.tokens.len(), plan.last), (7, 1, true),
+                   "prefill must resume at the first non-resident row");
+        assert!(s.record_chunk(1, 1, 5).unwrap().is_none());
+        assert_eq!(s.phase(1), Some(RequestPhase::Decoding));
+        // page accounting: lane 0 holds 3 pages (prompt 8 + budget 2 →
+        // 10 rows), lane 1 re-uses one of them + 2 private
+        assert_eq!(s.page_table(1).unwrap().len(), 3);
+        assert_eq!(s.page_table(1).unwrap()[0], s.page_table(0).unwrap()[0],
+                   "leading table entry must alias the donor's page");
+        assert_eq!(s.page_stats().pages_in_use, 5);
+        // retire both; the registered pages stay resident via the index
+        while s.active() > 0 {
+            for st in s.decode_steps() {
+                s.record_decode(st.lane, 3).unwrap();
+            }
+        }
+        assert_eq!(s.prefix_entries(), 2);
+        assert_eq!(s.page_stats().pages_in_use, 2,
+                   "index-pinned pages survive their registrants");
+    }
+
+    #[test]
+    fn shared_admission_resumes_at_page_boundary_without_partial_cow() {
+        // Upfront and Lazy: without partial COW the resident span
+        // rounds down to the last full page boundary and chunked
+        // prefill resumes exactly there (mid-prompt)
+        for reserve in [ReservationPolicy::Upfront, ReservationPolicy::Lazy] {
+            let mut s = prefix_sched(2, 8)
+                .with_partial_cow(false)
+                .with_reserve(reserve);
+            s.submit(shared_req(1, 2)).unwrap();
+            s.plan_admissions();
+            s.record_prefill(0, 9).unwrap();
+            s.submit(shared_req(2, 2)).unwrap();
+            assert_eq!(s.plan_admissions(), vec![1]);
+            assert_eq!(s.shared_bind(1),
+                       Some(SharedBind { resident_rows: 4, shared_pages: 1,
+                                         cow_rows: 0 }),
+                       "no partial COW: span rounds down to one full page");
+            let plan = s.next_chunk(1, 4).unwrap();
+            assert_eq!((plan.start_pos, plan.tokens.len(), plan.last),
+                       (4, 4, true),
+                       "chunk 0 must start at the page-boundary resume point");
+            assert!(s.record_chunk(1, 4, 5).unwrap().is_none());
+            assert_eq!(s.phase(1), Some(RequestPhase::Decoding));
+        }
+    }
+
+    #[test]
+    fn preempting_prefix_sharer_keeps_shared_pages_resident() {
+        // lazy pool of 6: request 1 binds 3 pages, decodes with growth;
+        // request 2 shared-binds (1 shared + 2 private) mid-prefill.
+        // When the pool runs dry, the index chain is evicted FIRST
+        // (frees nothing: both owners live), then request 2 preempts —
+        // its private pages reclaim, the shared page survives via its
+        // other owner.
+        let mut s = prefix_sched(2, 6)
+            .with_partial_cow(false)
+            .with_reserve(ReservationPolicy::Lazy);
+        s.submit(shared_req(1, 20)).unwrap();
+        s.plan_admissions();
+        s.record_prefill(0, 9).unwrap();
+        assert_eq!(s.prefix_entries(), 2);
+        s.submit(shared_req(2, 20)).unwrap();
+        assert_eq!(s.plan_admissions(), vec![1]);
+        let donor = s.page_table(0).unwrap()[0];
+        assert_eq!(s.page_table(1).unwrap()[0], donor);
+        assert_eq!(s.free_pages(), 1, "3 + 2 private of 6 pages bound");
+        // lane 0 decodes rows 8..12, grows into the last free page,
+        // then runs dry at row 16 while lane 1 still prefills
+        loop {
+            let g = s.ensure_decode_backing().unwrap();
+            if !g.preempted.is_empty() {
+                assert_eq!((g.preempted[0].lane, g.preempted[0].id), (1, 2),
+                           "the prefilling sharer is youngest: preempted");
+                break;
+            }
+            s.record_decode(0, 3).unwrap();
+        }
+        assert_eq!(s.prefix_entries(), 0,
+                   "resident chains must evict before any preemption");
+        assert_eq!(s.active(), 1);
+        assert_eq!(s.queued(), 1, "victim requeued for recompute");
+        // the shared page survives its releaser: lane 0 still reads it
+        assert!(s.page_table(0).unwrap().contains(&donor));
+        assert_eq!(s.page_stats().pages_in_use, lane_held_pages(&s),
+                   "victim's private pages must be reclaimed, shared \
+                    page must stay charged to its surviving owner");
+    }
+
+    #[test]
+    fn prefix_share_coerced_off_on_dense_pools() {
+        let s = Scheduler::new(2, 4, 12, false).with_prefix_share(true);
+        assert!(!s.prefix_share());
+        let s = Scheduler::paged(2, 4, 32, 8, 4).with_prefix_share(true);
+        assert!(s.prefix_share());
     }
 
     #[test]

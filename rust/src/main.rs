@@ -7,6 +7,7 @@
 //!               [--prefill-policy blocking|chunked] [--prefill-chunk C]
 //!               [--prefill-greedy] [--kv-pages P] [--page-len L]
 //!               [--kv-reserve upfront|lazy] [--kv-overcommit F]
+//!               [--prefix-share] [--shared-prefix-len N]
 //!               [--shards N] [--artifacts DIR]
 //! flexllm ablate [--artifacts DIR]
 //! flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
@@ -21,10 +22,10 @@ use flexllm::anyhow::{anyhow, bail, Result};
 
 use flexllm::arch::{AcceleratorSystem, DecodeArch, PrefillArch};
 use flexllm::config::{DeviceConfig, ModelDims};
-use flexllm::coordinator::{place_shard, split_budget, Engine, ExecBackend, GenRequest,
-                           GenResult, KvLayout, MockBackend, ModeledBackend,
-                           PrefillPolicy, ReservationPolicy, RouterBuilder,
-                           ServeMetrics};
+use flexllm::coordinator::{place_shard, place_shard_affine, split_budget, Engine,
+                           ExecBackend, GenRequest, GenResult, KvLayout, MockBackend,
+                           ModeledBackend, PrefillPolicy, ReservationPolicy,
+                           RouterBuilder, ServeMetrics};
 use flexllm::eval;
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;
@@ -40,6 +41,7 @@ USAGE:
                 [--prefill-policy blocking|chunked] [--prefill-chunk C]
                 [--prefill-greedy] [--kv-pages P] [--page-len L]
                 [--kv-reserve upfront|lazy] [--kv-overcommit F]
+                [--prefix-share] [--shared-prefix-len N]
                 [--shards N] [--artifacts DIR]
       Serve generation requests through the iteration-level scheduler.
       --spread K        skew budgets: request i gets ~new-tokens·(i%K+1)/K
@@ -74,6 +76,17 @@ USAGE:
       --kv-overcommit F shrink the mock/modeled paged pool to 1/F of the
                         dense memory budget (default 1; needs --kv-reserve
                         lazy to be useful — upfront admission just queues)
+      --prefix-share    admit requests whose page-aligned prompt prefix is
+                        already resident in the paged pool with ZERO prefill
+                        work for the shared span: pages are refcounted and
+                        shared read-only across lanes, divergent tails fork
+                        copy-on-write, and sharded placement prefers the
+                        shard holding the prefix (needs the paged layout)
+      --shared-prefix-len N
+                        give every synthetic sim request the same N-token
+                        prompt head (a "system prompt"), the workload the
+                        prefix cache feeds on (mock/modeled; pjrt prompts
+                        come from the artifact set and repeat on their own)
       --shards N        serve over N engine shards: each shard owns its
                         own scheduler, KV pool and backend instance, and
                         requests go to the shard with the most free pages
@@ -97,6 +110,10 @@ USAGE:
                       --kv-pages 40 --page-len 32 --shards 2
                       # two engine shards on the same total memory: the
                       # per-shard lines show the free-page balancing
+        flexllm serve --backend modeled --requests 64 --kv-pages 40 \
+                      --page-len 32 --prefix-share --shared-prefix-len 96
+                      # shared-prefix cache: compare the prefix hit rate
+                      # and ttft against the same run without the flag
   flexllm ablate [--artifacts DIR]
       Run the Table V quantization ablation on the real artifacts.
   flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
@@ -184,7 +201,7 @@ fn main() -> Result<()> {
             report(&a)
         }
         "serve" => {
-            let a = Args::parse(rest, &["stream", "prefill-greedy"])?;
+            let a = Args::parse(rest, &["stream", "prefill-greedy", "prefix-share"])?;
             serve(&a)
         }
         "ablate" => {
@@ -370,13 +387,18 @@ fn serve(a: &Args) -> Result<()> {
     let overcommit = a.get_f64("kv-overcommit", 1.0)?;
     let paged = paged_request(a, reserve, overcommit)?;
     let shards = a.get_u64("shards", 1)?.max(1) as usize;
+    let prefix_share = a.has("prefix-share");
+    let shared_prefix_len = a.get_u64("shared-prefix-len", 0)? as usize;
+    if prefix_share && paged.is_none() {
+        bail!("--prefix-share needs the paged layout (add --kv-pages/--page-len)");
+    }
     let stop: Vec<i32> = match a.get("stop-token") {
         Some(v) => vec![v.parse().map_err(|_| anyhow!("--stop-token: bad token '{v}'"))?],
         None => Vec::new(),
     };
     match a.get_str("backend", "pjrt").as_str() {
         "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop, policy,
-                             paged.is_some(), reserve, shards),
+                             paged.is_some(), reserve, shards, prefix_share),
         "mock" => {
             let mut engines: Vec<Engine<MockBackend>> = match paged {
                 Some((pages, page_len)) => {
@@ -395,6 +417,7 @@ fn serve(a: &Args) -> Result<()> {
                             Engine::with_reservation(backend, policy, KvLayout::Paged,
                                                      reserve)
                                 .with_shard_id(i)
+                                .with_prefix_share(prefix_share)
                         })
                         .collect()
                 }
@@ -411,9 +434,11 @@ fn serve(a: &Args) -> Result<()> {
             println!("prefill policy: {}", describe_policy(engines[0].policy()));
             let results = if shards > 1 {
                 println!("engine shards: {shards} (free-page balanced)");
-                drive_sim_sharded(&mut engines, n, new_tokens, spread, stream, &stop)?
+                drive_sim_sharded(&mut engines, n, new_tokens, spread, stream, &stop,
+                                  shared_prefix_len)?
             } else {
-                drive_sim(&mut engines[0], n, new_tokens, spread, stream, &stop)?
+                drive_sim(&mut engines[0], n, new_tokens, spread, stream, &stop,
+                          shared_prefix_len)?
             };
             let per: Vec<ServeMetrics> =
                 engines.iter().map(|e| e.metrics.clone()).collect();
@@ -439,6 +464,7 @@ fn serve(a: &Args) -> Result<()> {
                             Engine::with_reservation(backend, policy, KvLayout::Paged,
                                                      reserve)
                                 .with_shard_id(i)
+                                .with_prefix_share(prefix_share)
                         })
                         .collect()
                 }
@@ -456,9 +482,11 @@ fn serve(a: &Args) -> Result<()> {
             let results = if shards > 1 {
                 println!("engine shards: {shards} (free-page balanced, modeled \
                           clocks independent per shard)");
-                drive_sim_sharded(&mut engines, n, new_tokens, spread, stream, &stop)?
+                drive_sim_sharded(&mut engines, n, new_tokens, spread, stream, &stop,
+                                  shared_prefix_len)?
             } else {
-                drive_sim(&mut engines[0], n, new_tokens, spread, stream, &stop)?
+                drive_sim(&mut engines[0], n, new_tokens, spread, stream, &stop,
+                          shared_prefix_len)?
             };
             let per: Vec<ServeMetrics> =
                 engines.iter().map(|e| e.metrics.clone()).collect();
@@ -486,17 +514,35 @@ fn serve(a: &Args) -> Result<()> {
     }
 }
 
+/// Synthetic prompt for request `i`: deterministic per request, with an
+/// optional `shared`-token head common to EVERY request — the
+/// `--shared-prefix-len` "system prompt" the prefix cache feeds on.
+fn sim_prompt(i: usize, s: usize, shared: usize) -> Vec<i32> {
+    (0..s)
+        .map(|j| {
+            if j < shared {
+                ((j * 13) % 512) as i32
+            } else {
+                ((i * 7 + j * 13) % 512) as i32
+            }
+        })
+        .collect()
+}
+
 /// Submit a synthetic workload and run the step loop inline (no engine
 /// thread needed for the artifact-free backends).
 fn drive_sim<B: ExecBackend>(engine: &mut Engine<B>, n: usize, new_tokens: usize,
-                             spread: usize, stream: bool, stop: &[i32])
+                             spread: usize, stream: bool, stop: &[i32], shared: usize)
     -> Result<Vec<GenResult>>
 {
     let s = engine.prefill_len();
+    if shared > s {
+        bail!("--shared-prefix-len {shared} exceeds the {s}-token sim prompt");
+    }
     for i in 0..n {
-        let prompt: Vec<i32> = (0..s).map(|j| ((i * 7 + j * 13) % 512) as i32).collect();
         engine.submit(
-            GenRequest::new(i as u64, prompt, skewed_budget(i, new_tokens, spread))
+            GenRequest::new(i as u64, sim_prompt(i, s, shared),
+                            skewed_budget(i, new_tokens, spread))
                 .with_stop_tokens(stop.to_vec()),
         )?;
     }
@@ -521,21 +567,28 @@ fn drive_sim<B: ExecBackend>(engine: &mut Engine<B>, n: usize, new_tokens: usize
 /// every busy shard steps once per round. Results in submission order.
 fn drive_sim_sharded<B: ExecBackend>(engines: &mut [Engine<B>], n: usize,
                                      new_tokens: usize, spread: usize, stream: bool,
-                                     stop: &[i32]) -> Result<Vec<GenResult>> {
+                                     stop: &[i32], shared: usize)
+    -> Result<Vec<GenResult>>
+{
     let s = engines[0].prefill_len();
+    if shared > s {
+        bail!("--shared-prefix-len {shared} exceeds the {s}-token sim prompt");
+    }
     let mut overflow: VecDeque<GenRequest> = (0..n)
         .map(|i| {
-            let prompt: Vec<i32> =
-                (0..s).map(|j| ((i * 7 + j * 13) % 512) as i32).collect();
-            GenRequest::new(i as u64, prompt, skewed_budget(i, new_tokens, spread))
+            GenRequest::new(i as u64, sim_prompt(i, s, shared),
+                            skewed_budget(i, new_tokens, spread))
                 .with_stop_tokens(stop.to_vec())
         })
         .collect();
+    // sharing on → prefer the shard whose index holds the prompt's head
+    let place: fn(&[Engine<B>], &GenRequest) -> Option<usize> =
+        if engines[0].prefix_share() { place_shard_affine } else { place_shard };
     let mut done: Vec<GenResult> = Vec::new();
     loop {
         // place the FIFO head while some shard has pages for it
         while let Some(head) = overflow.front() {
-            let Some(sh) = place_shard(engines, head) else { break };
+            let Some(sh) = place(engines, head) else { break };
             let req = overflow.pop_front().expect("front checked above");
             engines[sh].submit(req)?;
         }
@@ -580,7 +633,9 @@ fn print_shard_lines(per: &[ServeMetrics]) {
 #[allow(clippy::too_many_arguments)]
 fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool,
               stop: Vec<i32>, policy: PrefillPolicy, paged: bool,
-              reserve: ReservationPolicy, shards: usize) -> Result<()> {
+              reserve: ReservationPolicy, shards: usize, prefix_share: bool)
+    -> Result<()>
+{
     let artifacts = a.get_str("artifacts", "artifacts");
     println!("prefill policy requested: {}", describe_policy(policy));
     let layout = if paged {
@@ -614,6 +669,7 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
         .layout(layout)
         .reserve(reserve)
         .shards(shards)
+        .prefix_share(prefix_share)
         .spawn(artifacts.to_string())?;
     if stream {
         let events = router.subscribe()?;
@@ -693,6 +749,12 @@ fn print_summary(results: &[GenResult], m: &ServeMetrics, lanes: usize) {
                       rows reserved/written peak: {}/{}",
                      m.kv_pages_grown, m.preemptions,
                      m.kv_rows_reserved_peak, m.kv_rows_written_peak);
+        }
+        if m.prefix_hits + m.prefix_misses > 0 {
+            println!("  prefix share: hit rate {:.0}% ({} hits / {} misses)  \
+                      pages shared {}  cow copies {}",
+                     m.prefix_hit_rate() * 100.0, m.prefix_hits, m.prefix_misses,
+                     m.kv_pages_shared, m.cow_copies);
         }
     }
     let stopped = results.iter()

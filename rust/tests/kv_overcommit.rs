@@ -51,6 +51,7 @@ fn skewed_cfg(reserve: ReservationPolicy) -> OpenLoopConfig {
         reserve,
         shards: 1,
         seed: 0x5EED,
+        ..OpenLoopConfig::default()
     }
 }
 

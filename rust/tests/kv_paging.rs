@@ -62,6 +62,7 @@ fn skewed_cfg() -> OpenLoopConfig {
         reserve: ReservationPolicy::Upfront,
         shards: 1,
         seed: 0x5EED,
+        ..OpenLoopConfig::default()
     }
 }
 

@@ -437,6 +437,7 @@ fn throughput_cfg(shards: usize) -> OpenLoopConfig {
         reserve: ReservationPolicy::Upfront,
         shards,
         seed: 0x5EED,
+        ..OpenLoopConfig::default()
     }
 }
 
