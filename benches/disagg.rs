@@ -1,0 +1,85 @@
+//! Disaggregation sweep: the dse shard-mix search over homogeneous and
+//! prefill/decode-specialist topologies at EQUAL total KV memory and
+//! equal silicon, on the U280-modeled backend.
+//!
+//! Two workload shapes run through `tune_shard_mix` with up to 4
+//! shards: the tier-1 acceptance shape (prefill-heavy, saturating
+//! Poisson — `tests/disagg.rs` gates that the best mixed topology
+//! beats the best homogeneous one on BOTH p95 TTFT and aggregate
+//! decode throughput at N=2) and a longer-decode variant that shows
+//! where homogeneous shards claw back. Every evaluated topology is
+//! reported, so the JSON tracks the full mixed-vs-homogeneous frontier
+//! per PR, next to the `sharding.json` scaling sweep.
+//!
+//! Output: `shard_mix.json` in the working directory (override with
+//! the `SHARD_MIX_OUT` environment variable), also echoed to stdout.
+
+use flexllm::coordinator::{ArrivalProcess, OpenLoopConfig, PagedPoolConfig,
+                           PrefillPolicy, ReservationPolicy};
+use flexllm::dse::tune_shard_mix;
+
+const MAX_SHARDS: usize = 4;
+
+/// (label, min_new, max_new): the acceptance shape decodes 32–64
+/// tokens against 128-token prompts; the long-decode shape doubles the
+/// generation budgets.
+const SHAPES: &[(&str, usize, usize)] = &[
+    ("prefill_heavy", 32, 64),
+    ("long_decode", 64, 128),
+];
+
+fn cfg(min_new: usize, max_new: usize) -> OpenLoopConfig {
+    OpenLoopConfig {
+        lanes: 4,
+        prefill_len: 128,
+        max_seq: 256,
+        vocab: 512,
+        requests: 48,
+        arrival: ArrivalProcess::Poisson { rate_rps: 300.0 },
+        min_new_tokens: min_new,
+        max_new_tokens: max_new,
+        paged: Some(PagedPoolConfig { page_len: 32, pages: 288, max_lanes: 24,
+                                      decode_width: 2 }),
+        reserve: ReservationPolicy::Upfront,
+        seed: 0x5EED,
+        ..OpenLoopConfig::default()
+    }
+}
+
+fn main() {
+    let policy = PrefillPolicy::chunked(32);
+    let mut entries: Vec<String> = Vec::new();
+
+    for &(label, min_new, max_new) in SHAPES {
+        let r = tune_shard_mix(policy, &cfg(min_new, max_new), MAX_SHARDS)
+            .expect("shard-mix sweep");
+        for p in &r.points {
+            println!(
+                "{label:>13} {:>7}: {:>7.1} tok/s | ttft p95 {:.4}s | \
+                 migrations {:>3}{}",
+                p.summary, p.decode_tps, p.ttft_p95_s, p.migrations,
+                if p.summary == r.best_mixed().summary {
+                    "  <best mixed>"
+                } else if p.summary == r.best_homogeneous().summary {
+                    "  <best homogeneous>"
+                } else {
+                    ""
+                });
+        }
+        entries.push(format!(
+            "{{\"shape\": \"{label}\", \"budgets\": [{min_new}, {max_new}], \
+             \"result\": {}}}",
+            r.to_json()));
+        println!();
+    }
+
+    let doc = format!(
+        "{{\"bench\": \"shard_mix\", \"backend\": \"modeled-u280\", \
+         \"max_shards\": {MAX_SHARDS}, \"requests\": 48, \
+         \"arrival\": \"poisson-300rps\", \"sweeps\": [{}]}}\n",
+        entries.join(", "));
+    let out = std::env::var("SHARD_MIX_OUT")
+        .unwrap_or_else(|_| "shard_mix.json".to_string());
+    std::fs::write(&out, &doc).expect("write shard_mix.json");
+    println!("wrote {} sweeps to {out}", entries.len());
+}

@@ -12,8 +12,8 @@ use std::sync::Arc;
 use crate::config::{DeviceConfig, ModelDims, Precision};
 use crate::hls::calibration::MEASURED_OVERHEAD_DECODE;
 use crate::hls::{
-    achieved_frequency, partition_for_frequency, simulate, DataflowGraph, DecodeLinear,
-    Dependency, Dequantizer, FhtModule, KvCache, MhaEngine, NonLinear, NonLinearKind,
+    achieved_frequency, partition_for_frequency, simulate_recurrent, DataflowGraph,
+    DecodeLinear, Dequantizer, FhtModule, KvCache, MhaEngine, NonLinear, NonLinearKind,
     Quantizer, Resources, Sampling, SimResult, StreamEdge,
 };
 
@@ -113,14 +113,24 @@ impl DecodeArch {
         self.simulate(l_p, l_d).makespan_cycles / self.freq_hz
     }
 
-    /// Simulate `l_d` autoregressive steps (recurrence lag 1).
+    /// Simulate `l_d` autoregressive steps (recurrence lag 1: the
+    /// sampling output feeds the next token's first module).
     pub fn simulate(&self, l_p: u64, l_d: u64) -> SimResult {
         let avg_ctx = l_p + l_d / 2;
         let graph = build_graph(&self.cfg, &self.model, avg_ctx, self.partitions);
-        // sampling output feeds the next token's first module
-        let last = graph.nodes.len() - 1;
-        let dep = Dependency { from: last, to: 0, lag: 1 };
-        simulate(&graph, l_d, &[dep])
+        simulate_recurrent(&graph, l_d)
+    }
+
+    /// Price streaming `tokens` **prompt** tokens through this *temporal*
+    /// engine with attention sized for end context `end_ctx`, seconds —
+    /// the fallback cost of running prefill on a decode-specialized
+    /// shard. The single wide linear engine serializes every projection,
+    /// so prompt tokens cost the same as generated ones; the lm_head
+    /// MACs folded into [`Self::per_token_latency_s`] slightly over-price
+    /// intermediate prompt tokens (which never sample), erring against
+    /// the fallback path — honest for a cross-role placement penalty.
+    pub fn chunk_prefill_latency_s(&self, tokens: u64, end_ctx: u64) -> f64 {
+        tokens as f64 * self.per_token_latency_s(end_ctx.max(1))
     }
 
     pub fn utilization(&self) -> Resources {
@@ -270,6 +280,23 @@ mod tests {
         let ru = u.analytic_latency_s(1024, 1024);
         let rv = v.analytic_latency_s(1024, 1024);
         assert!(ru / rv > 2.5, "U280/V80 = {}", ru / rv);
+    }
+
+    #[test]
+    fn temporal_prefill_fallback_much_slower_than_spatial() {
+        // prefill on the decode engine serializes every prompt token
+        // through the one wide linear — the cross-role penalty the
+        // disaggregated serving layer prices must actually exist
+        let d = u280_arch();
+        let p = crate::arch::PrefillArch::new(
+            crate::arch::PrefillConfig::u280_paper(),
+            ModelDims::llama32_1b(),
+            DeviceConfig::u280(),
+        );
+        let spatial = p.simulated_chunk_latency_s(256, 256, true);
+        let temporal = d.chunk_prefill_latency_s(256, 256);
+        assert!(temporal > 2.0 * spatial,
+                "temporal prefill {temporal} not clearly slower than spatial {spatial}");
     }
 
     #[test]

@@ -20,6 +20,24 @@ pub use temporal_baseline::TemporalBaseline;
 
 use crate::config::{DeviceConfig, ModelDims};
 
+/// How many same-stage engines a *role-specialized* shard hosts on the
+/// fabric budget of one [`AcceleratorSystem`].
+///
+/// A `Unified` serving shard carries one prefill pipeline AND one decode
+/// engine (the paper's two stage-customized designs time-sharing a
+/// device via rapid reconfiguration). A shard typed `Prefill` or
+/// `Decode` drops the other stage entirely, and the freed fabric hosts a
+/// second instance of its own stage: both paper designs bind under ~55%
+/// of the U280 per resource class (`resources_fit_u280` pins < 0.92 for
+/// the binding class alone), so two same-stage replicas close at the
+/// same budget two different-stage designs do. The modeled effect —
+/// [`crate::coordinator::ModeledBackend`] applies it — is chunk latency
+/// ÷ 2 on a prefill specialist and decode batch width × 2 on a decode
+/// specialist, while the *off-role* path is priced by the honest
+/// fallback costs ([`PrefillArch::recurrent_decode_latency_s`],
+/// [`DecodeArch::chunk_prefill_latency_s`]) rather than assumed away.
+pub const STAGE_REPLICAS: usize = 2;
+
 /// A full stage-customized accelerator system: prefill + decode + HMT
 /// sharing one device via rapid reconfiguration (~0.3 s on U280).
 /// `Clone` replicates the system per device — multi-engine sharding

@@ -10,8 +10,9 @@ use std::sync::Arc;
 use crate::config::{DeviceConfig, ModelDims, Precision};
 use crate::hls::calibration::MEASURED_OVERHEAD_PREFILL;
 use crate::hls::{
-    achieved_frequency, simulate, DataflowGraph, Dequantizer, FhtModule, KvCache, MhaEngine,
-    NonLinear, NonLinearKind, PrefillLinear, Quantizer, Resources, SimResult, StreamEdge,
+    achieved_frequency, simulate, simulate_recurrent, DataflowGraph, Dequantizer, FhtModule,
+    KvCache, MhaEngine, NonLinear, NonLinearKind, PrefillLinear, Quantizer, Resources,
+    SimResult, StreamEdge,
 };
 
 /// The tunable knobs of the prefill architecture (Table VI rows 2/5).
@@ -102,6 +103,27 @@ impl PrefillArch {
             0.0
         };
         (r.makespan_cycles * self.model.n_layers as f64 + lm_head) / self.freq_hz
+    }
+
+    /// Per-token cost of AUTOREGRESSIVE decode run on this *spatial*
+    /// prefill pipeline, seconds — the fallback cost of decoding on a
+    /// prefill-specialized shard. The lag-1 recurrence (token `k`'s
+    /// input is token `k-1`'s sample) drains the dataflow pipeline on
+    /// every token, so the cost collapses toward the serialized sum of
+    /// stage services instead of the bottleneck stage — exactly why the
+    /// paper gives decode its own temporally-reused engine, and why a
+    /// disaggregated serving layer migrates decode work off prefill
+    /// shards instead of running it in place.
+    pub fn recurrent_decode_latency_s(&self, ctx: u64) -> f64 {
+        let graph = build_graph(&self.cfg, &self.model, ctx.max(1));
+        // a few steps amortize the pipeline-fill transient out of the
+        // per-token figure
+        let steps = 4u64;
+        let r = simulate_recurrent(&graph, steps);
+        let lm_head =
+            self.model.d_model as f64 * self.model.vocab as f64 / self.cfg.wp_ffn as f64;
+        (r.makespan_cycles / steps as f64 * self.model.n_layers as f64 + lm_head)
+            / self.freq_hz
     }
 
     /// Simulate one decoder layer over `l_p` tokens.
@@ -279,6 +301,23 @@ mod tests {
         let t1 = a.analytic_latency_s(4096);
         let t2 = a.analytic_latency_s(8192);
         assert!(t2 > 2.0 * t1);
+    }
+
+    #[test]
+    fn spatial_decode_fallback_much_slower_than_temporal() {
+        // decode on the prefill pipeline pays the full pipeline drain
+        // per token — the cross-role penalty priced by the disaggregated
+        // serving layer must actually exist
+        let p = u280_arch();
+        let d = crate::arch::DecodeArch::new(
+            crate::arch::DecodeConfig::u280_paper(),
+            ModelDims::llama32_1b(),
+            DeviceConfig::u280(),
+        );
+        let spatial = p.recurrent_decode_latency_s(512);
+        let temporal = d.per_token_latency_s(512);
+        assert!(spatial > 2.0 * temporal,
+                "spatial decode {spatial} not clearly slower than temporal {temporal}");
     }
 
     #[test]

@@ -1,0 +1,395 @@
+//! The typed serving configuration: one struct, one validation point.
+//!
+//! PRs 1–6 grew construction knobs by accretion — `RouterBuilder`
+//! carried five parallel setters, `OpenLoopConfig` mirrored them, and
+//! `main.rs` re-parsed the same flags a third time, each with its own
+//! partial validation (scattered errors and coercions). [`ServeConfig`]
+//! collapses that: the prefill policy, KV-cache shape and shard
+//! topology live in one nested value with a [`Default`], a fluent
+//! builder, and a single [`ServeConfig::validate`] every construction
+//! path funnels through. The shard-role axis (disaggregated
+//! prefill/decode serving) is introduced *as part of* this config
+//! rather than as a sixth parallel knob.
+
+use std::fmt;
+
+use crate::anyhow::{anyhow, Result};
+
+use super::engine::KvLayout;
+use super::kv::ReservationPolicy;
+use super::scheduler::PrefillPolicy;
+
+/// What stage a serving shard is specialized for.
+///
+/// The paper's thesis is stage-customized hardware: prefill wants a
+/// spatial streaming pipeline (compute-bound chunk throughput), decode
+/// wants a temporally-reused wide engine (memory-bandwidth-bound token
+/// cadence). A `Unified` shard hosts one of each (today's behavior,
+/// bit-for-bit); a specialist shard drops the off-stage design and
+/// hosts [`crate::arch::STAGE_REPLICAS`] same-stage engines on the same
+/// fabric budget. Requests prefill on `Prefill` (or `Unified`) shards;
+/// when a request on a `Prefill` shard emits its first token, its KV
+/// page table migrates to the least-loaded `Decode` shard (transfer
+/// priced by the modeled HBM/interconnect charge).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ShardRole {
+    /// Prefill + decode engines on one shard — no migration, exactly
+    /// the pre-disaggregation Router/engine behavior.
+    #[default]
+    Unified,
+    /// Prefill specialist: admits and chunk-prefills new requests, then
+    /// hands every request off at first token. Never runs a decode
+    /// iteration (the fallback decode cost on a spatial pipeline is
+    /// priced, but the scheduler routes around it).
+    Prefill,
+    /// Decode specialist: receives migrated page tables and decodes
+    /// them; never admits fresh prefill work.
+    Decode,
+}
+
+impl ShardRole {
+    /// Parse one role token: `unified`/`u`, `prefill`/`p`, `decode`/`d`.
+    pub fn parse(s: &str) -> Result<ShardRole> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "unified" | "u" => Ok(ShardRole::Unified),
+            "prefill" | "p" => Ok(ShardRole::Prefill),
+            "decode" | "d" => Ok(ShardRole::Decode),
+            other => Err(anyhow!(
+                "unknown shard role '{other}' (expected unified|prefill|decode)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardRole::Unified => "unified",
+            ShardRole::Prefill => "prefill",
+            ShardRole::Decode => "decode",
+        }
+    }
+
+    /// Whether a shard of this role admits fresh (un-prefilled) work.
+    pub fn accepts_new_requests(&self) -> bool {
+        matches!(self, ShardRole::Unified | ShardRole::Prefill)
+    }
+
+    /// Whether a shard of this role receives migrated decode work.
+    pub fn accepts_migrations(&self) -> bool {
+        matches!(self, ShardRole::Decode)
+    }
+}
+
+impl fmt::Display for ShardRole {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Prompt-ingestion knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PrefillConfig {
+    pub policy: PrefillPolicy,
+}
+
+/// KV-cache shape knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KvConfig {
+    pub layout: KvLayout,
+    pub reserve: ReservationPolicy,
+    /// Shared-prefix admission (PR 6). Requires the paged layout —
+    /// sharing needs refcounted pages.
+    pub prefix_share: bool,
+}
+
+/// Shard topology: one [`ShardRole`] per shard, in shard-id order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologyConfig {
+    pub roles: Vec<ShardRole>,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig { roles: vec![ShardRole::Unified] }
+    }
+}
+
+impl TopologyConfig {
+    /// `n` identical `Unified` shards — the pre-disaggregation topology.
+    pub fn unified(n: usize) -> Self {
+        TopologyConfig { roles: vec![ShardRole::Unified; n] }
+    }
+
+    /// `prefill` prefill specialists followed by `decode` decode
+    /// specialists (shard ids are assigned in that order).
+    pub fn disaggregated(prefill: usize, decode: usize) -> Self {
+        let mut roles = vec![ShardRole::Prefill; prefill];
+        roles.extend(std::iter::repeat(ShardRole::Decode).take(decode));
+        TopologyConfig { roles }
+    }
+
+    /// Parse a comma-separated role list; each item is a role token
+    /// optionally prefixed with a repeat count: `"2p,2d"`,
+    /// `"prefill,decode,unified"`, `"3xunified"`.
+    pub fn parse(spec: &str) -> Result<TopologyConfig> {
+        let mut roles = Vec::new();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let digits: String = item.chars().take_while(|c| c.is_ascii_digit()).collect();
+            let rest = item[digits.len()..].trim_start_matches('x');
+            let count: usize = if digits.is_empty() {
+                1
+            } else {
+                digits.parse().map_err(|_| anyhow!("bad repeat count in '{item}'"))?
+            };
+            if count == 0 {
+                return Err(anyhow!("zero repeat count in '{item}'"));
+            }
+            let role = ShardRole::parse(rest)?;
+            roles.extend(std::iter::repeat(role).take(count));
+        }
+        if roles.is_empty() {
+            return Err(anyhow!("empty shard-role list '{spec}'"));
+        }
+        Ok(TopologyConfig { roles })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.roles.len()
+    }
+
+    /// Whether any shard is role-specialized (non-`Unified`).
+    pub fn disaggregated_any(&self) -> bool {
+        self.roles.iter().any(|r| *r != ShardRole::Unified)
+    }
+
+    /// Compact display form, e.g. `2p+2d` or `4u`.
+    pub fn summary(&self) -> String {
+        let (mut u, mut p, mut d) = (0usize, 0usize, 0usize);
+        for r in &self.roles {
+            match r {
+                ShardRole::Unified => u += 1,
+                ShardRole::Prefill => p += 1,
+                ShardRole::Decode => d += 1,
+            }
+        }
+        let mut parts = Vec::new();
+        if p > 0 {
+            parts.push(format!("{p}p"));
+        }
+        if d > 0 {
+            parts.push(format!("{d}d"));
+        }
+        if u > 0 {
+            parts.push(format!("{u}u"));
+        }
+        parts.join("+")
+    }
+}
+
+/// The one typed serving configuration. Every construction path —
+/// [`super::RouterBuilder`], [`super::OpenLoopConfig`], the `serve`
+/// CLI — builds one of these and funnels through [`Self::validate`],
+/// so an invalid combination fails in exactly one place with one
+/// message instead of a scattered panic.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ServeConfig {
+    pub prefill: PrefillConfig,
+    pub kv: KvConfig,
+    pub topology: TopologyConfig,
+}
+
+impl ServeConfig {
+    pub fn new() -> Self {
+        ServeConfig::default()
+    }
+
+    // ---- fluent builder ---------------------------------------------------
+
+    pub fn policy(mut self, policy: PrefillPolicy) -> Self {
+        self.prefill.policy = policy;
+        self
+    }
+
+    pub fn layout(mut self, layout: KvLayout) -> Self {
+        self.kv.layout = layout;
+        self
+    }
+
+    pub fn reserve(mut self, reserve: ReservationPolicy) -> Self {
+        self.kv.reserve = reserve;
+        self
+    }
+
+    pub fn prefix_share(mut self, enabled: bool) -> Self {
+        self.kv.prefix_share = enabled;
+        self
+    }
+
+    /// `n` identical `Unified` shards (the pre-role topology knob).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.topology = TopologyConfig::unified(n);
+        self
+    }
+
+    pub fn roles(mut self, roles: Vec<ShardRole>) -> Self {
+        self.topology = TopologyConfig { roles };
+        self
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn shard_count(&self) -> usize {
+        self.topology.shards()
+    }
+
+    pub fn role(&self, shard: usize) -> ShardRole {
+        self.topology.roles.get(shard).copied().unwrap_or_default()
+    }
+
+    /// The single validation point. Rules:
+    ///
+    /// * the topology names at least one shard;
+    /// * at least one shard accepts new requests (`Unified`/`Prefill` —
+    ///   an all-`Decode` fleet would strand every submission);
+    /// * `Prefill` shards require at least one `Decode` shard (the
+    ///   first-token handoff needs a destination);
+    /// * role-specialized topologies require the `Paged` layout
+    ///   (migration moves KV *page tables*);
+    /// * `prefix_share` requires the `Paged` layout (sharing needs
+    ///   refcounted pages).
+    pub fn validate(&self) -> Result<()> {
+        let t = &self.topology;
+        if t.roles.is_empty() {
+            return Err(anyhow!("ServeConfig: topology needs at least one shard"));
+        }
+        if !t.roles.iter().any(|r| r.accepts_new_requests()) {
+            return Err(anyhow!(
+                "ServeConfig: no shard accepts new requests (topology {} has \
+                 only decode specialists)", t.summary()));
+        }
+        let prefills = t.roles.iter().filter(|r| **r == ShardRole::Prefill).count();
+        let decodes = t.roles.iter().filter(|r| **r == ShardRole::Decode).count();
+        if prefills > 0 && decodes == 0 {
+            return Err(anyhow!(
+                "ServeConfig: {prefills} prefill shard(s) with no decode shard \
+                 to hand off to (topology {})", t.summary()));
+        }
+        if t.disaggregated_any() && self.kv.layout != KvLayout::Paged {
+            return Err(anyhow!(
+                "ServeConfig: disaggregated shard roles migrate KV page tables \
+                 — use the paged layout (topology {})", t.summary()));
+        }
+        if self.kv.prefix_share && self.kv.layout != KvLayout::Paged {
+            return Err(anyhow!(
+                "ServeConfig: prefix sharing needs refcounted pages — use the \
+                 paged layout"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_single_unified_blocking_dense_upfront() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.prefill.policy, PrefillPolicy::Blocking);
+        assert_eq!(cfg.kv.layout, KvLayout::Dense);
+        assert_eq!(cfg.kv.reserve, ReservationPolicy::Upfront);
+        assert!(!cfg.kv.prefix_share);
+        assert_eq!(cfg.topology.roles, vec![ShardRole::Unified]);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn fluent_builder_round_trip() {
+        let cfg = ServeConfig::new()
+            .policy(PrefillPolicy::chunked(32))
+            .layout(KvLayout::Paged)
+            .reserve(ReservationPolicy::Lazy)
+            .prefix_share(true)
+            .roles(vec![ShardRole::Prefill, ShardRole::Decode]);
+        assert_eq!(cfg.prefill.policy, PrefillPolicy::chunked(32));
+        assert_eq!(cfg.kv.layout, KvLayout::Paged);
+        assert_eq!(cfg.kv.reserve, ReservationPolicy::Lazy);
+        assert!(cfg.kv.prefix_share);
+        assert_eq!(cfg.shard_count(), 2);
+        assert_eq!(cfg.role(0), ShardRole::Prefill);
+        assert_eq!(cfg.role(1), ShardRole::Decode);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn shards_builder_is_unified_replication() {
+        let cfg = ServeConfig::new().shards(3);
+        assert_eq!(cfg.topology.roles, vec![ShardRole::Unified; 3]);
+        assert!(!cfg.topology.disaggregated_any());
+    }
+
+    #[test]
+    fn validate_rejects_empty_topology() {
+        let cfg = ServeConfig::new().roles(vec![]);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_decode_only_topology() {
+        let cfg = ServeConfig::new()
+            .layout(KvLayout::Paged)
+            .roles(vec![ShardRole::Decode, ShardRole::Decode]);
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("accepts new requests"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_prefill_without_decode() {
+        let cfg = ServeConfig::new()
+            .layout(KvLayout::Paged)
+            .roles(vec![ShardRole::Prefill, ShardRole::Unified]);
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("no decode shard"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_roles_on_dense_layout() {
+        let cfg = ServeConfig::new()
+            .roles(vec![ShardRole::Prefill, ShardRole::Decode]);
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("paged layout"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_prefix_share_on_dense_layout() {
+        // previously a scattered runtime error in run_open_loop and a
+        // silent coercion in the Router — now one typed error
+        let cfg = ServeConfig::new().prefix_share(true);
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("refcounted pages"), "{err}");
+    }
+
+    #[test]
+    fn topology_parse_accepts_counts_and_aliases() {
+        let t = TopologyConfig::parse("2p,2d").unwrap();
+        assert_eq!(t.roles, vec![ShardRole::Prefill, ShardRole::Prefill,
+                                 ShardRole::Decode, ShardRole::Decode]);
+        let t = TopologyConfig::parse("prefill, decode, unified").unwrap();
+        assert_eq!(t.roles, vec![ShardRole::Prefill, ShardRole::Decode,
+                                 ShardRole::Unified]);
+        let t = TopologyConfig::parse("3xunified").unwrap();
+        assert_eq!(t.roles, vec![ShardRole::Unified; 3]);
+        assert!(TopologyConfig::parse("").is_err());
+        assert!(TopologyConfig::parse("2q").is_err());
+        assert!(TopologyConfig::parse("0p,1d").is_err());
+    }
+
+    #[test]
+    fn topology_summary_is_compact() {
+        assert_eq!(TopologyConfig::disaggregated(2, 2).summary(), "2p+2d");
+        assert_eq!(TopologyConfig::unified(4).summary(), "4u");
+        assert_eq!(TopologyConfig::parse("p,d,u").unwrap().summary(), "1p+1d+1u");
+    }
+}

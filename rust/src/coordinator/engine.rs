@@ -24,14 +24,16 @@ use std::time::Instant;
 use crate::anyhow::{anyhow, Result};
 
 use super::backend::{ExecBackend, PjrtBackend, PrefillSlot};
+use super::config::ShardRole;
 use super::kv::ReservationPolicy;
 use super::request::{GenRequest, GenResult, ServeMetrics};
-use super::scheduler::{Completion, PrefillPolicy, Scheduler};
+use super::scheduler::{Completion, MigratedLane, PrefillPolicy, Scheduler};
 
 /// How the engine lays out the KV cache.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum KvLayout {
     /// One `max_seq`-row cache row per lane (PR 2 behavior, bit-for-bit).
+    #[default]
     Dense,
     /// Shared page pool: admission by free pages, logical lanes may
     /// exceed the artifact batch, geometry comes from the backend's
@@ -85,6 +87,12 @@ pub struct Engine<B: ExecBackend> {
     /// Preemption, admission and page accounting are all local to the
     /// shard — the id only labels the engine for fan-in and reporting.
     shard: usize,
+    /// The shard's serving role (PR 7 disaggregation). `Unified` is the
+    /// classic behavior, bit-for-bit. A `Prefill` specialist admits and
+    /// prefills but NEVER decodes: its warm lanes wait in
+    /// [`RequestPhase::Decoding`](super::scheduler::RequestPhase) for
+    /// [`Engine::take_migratable`] to hand them to a decode shard.
+    role: ShardRole,
     /// Lanes carrying a live shared-prefix bind. Preemption reaches the
     /// backend via `release_lane`, but NORMAL retirement does not — this
     /// set lets the engine notify the backend (`retire_lane`) when a
@@ -183,7 +191,25 @@ impl<B: ExecBackend> Engine<B> {
         let metrics = ServeMetrics::with_pages_total(pages_total);
         let reserve = scheduler.reserve();
         Engine { backend, scheduler, metrics, policy, layout, reserve, shard: 0,
-                 shared_lanes: HashSet::new() }
+                 role: ShardRole::Unified, shared_lanes: HashSet::new() }
+    }
+
+    /// Assign this engine a disaggregated serving role (builder; the
+    /// default `Unified` preserves classic behavior exactly). A
+    /// `Prefill` specialist skips the decode phase of every tick — its
+    /// warm lanes must be drained via [`Engine::take_migratable`] — and
+    /// a `Decode` specialist additionally accepts migrated lanes via
+    /// [`Engine::import_migrated`]. The role does NOT change admission:
+    /// keeping new work away from decode shards is the coordinator's
+    /// placement decision (see [`place_shard`]), not an engine check.
+    pub fn with_role(mut self, role: ShardRole) -> Self {
+        self.role = role;
+        self
+    }
+
+    /// The serving role this engine runs as.
+    pub fn role(&self) -> ShardRole {
+        self.role
     }
 
     /// Enable shared-prefix admission (builder): page-aligned prompt
@@ -192,15 +218,14 @@ impl<B: ExecBackend> Engine<B> {
     /// for the resident span. Coerced off on a dense layout (sharing
     /// needs refcounted pages). Partial-page copy-on-write forks are
     /// enabled iff the backend advertises a page-copy op
-    /// (`PagedCaps::cow_copy`).
+    /// (`PagedCaps::cow_copy`). Also requires the backend to DECLARE
+    /// [`BackendCaps::resident_prefix`](super::backend::BackendCaps) —
+    /// sharing silently coerces off against a backend that cannot treat
+    /// foreign rows as cache-resident.
     pub fn with_prefix_share(mut self, enabled: bool) -> Self {
-        let cow = self
-            .backend
-            .spec()
-            .paged
-            .as_ref()
-            .map(|c| c.cow_copy)
-            .unwrap_or(false);
+        let spec = self.backend.spec();
+        let enabled = enabled && spec.caps.resident_prefix;
+        let cow = spec.paged.as_ref().map(|c| c.cow_copy).unwrap_or(false);
         self.scheduler.set_prefix_share(enabled);
         self.scheduler.set_partial_cow(cow);
         self
@@ -276,11 +301,13 @@ impl<B: ExecBackend> Engine<B> {
         // not, and a stale read-only claim would block reallocating a
         // page the prefix index has long evicted
         if !self.shared_lanes.is_empty() {
+            // only notify backends that DECLARE per-lane state to drop
+            let release = self.backend.spec().caps.lane_release;
             let scheduler = &self.scheduler;
             let backend = &mut self.backend;
             self.shared_lanes.retain(|&lane| {
                 let live = scheduler.shared_bind(lane).is_some();
-                if !live {
+                if !live && release {
                     backend.retire_lane(lane);
                 }
                 live
@@ -375,17 +402,23 @@ impl<B: ExecBackend> Engine<B> {
         // back every warm lane's next write BEFORE planning the decode
         // iteration; a dry pool evicts the youngest request (pages
         // released, requeued at the queue head for recompute)
-        if self.reserve == ReservationPolicy::Lazy {
+        // a prefill specialist never decodes, so its warm lanes have no
+        // next write to back — they wait, byte-complete, for migration
+        if self.reserve == ReservationPolicy::Lazy && self.role != ShardRole::Prefill {
             let growth = self.scheduler.ensure_decode_backing()?;
             self.metrics.kv_pages_grown += growth.pages_grown;
             self.metrics.grow_failures += growth.grow_failures;
             self.metrics.preemptions += growth.preempted.len();
             report.pages_grown = growth.pages_grown;
+            let release = self.backend.spec().caps.lane_release;
             for victim in &growth.preempted {
                 // the backend forgets the evicted lane (the mock clears
                 // its per-lane stream/table state so the pages and the
-                // lane are cleanly rebindable)
-                self.backend.release_lane(victim.lane);
+                // lane are cleanly rebindable) — gated on the declared
+                // capability; a stateless backend has nothing to drop
+                if release {
+                    self.backend.release_lane(victim.lane);
+                }
                 report.preempted.push(victim.id);
             }
         }
@@ -411,6 +444,14 @@ impl<B: ExecBackend> Engine<B> {
         // `decode_invocations` counts artifact calls (a paged tick over
         // more warm lanes than the invocation batch splits into several)
         // — keeping them separate keeps dense and paged runs comparable.
+        // A prefill specialist skips the phase entirely: its spatial
+        // dataflow engines have no batched-decode path worth running
+        // (the off-role fallback is ~an order of magnitude slower), so
+        // warm lanes park until `take_migratable` hands them off.
+        if self.role == ShardRole::Prefill {
+            report.completed.sort_by_key(|(seq, _)| *seq);
+            return Ok(report);
+        }
         match self.layout {
             KvLayout::Dense => {
                 let steps = self.scheduler.decode_steps();
@@ -526,6 +567,74 @@ impl<B: ExecBackend> Engine<B> {
             .saturating_sub(self.scheduler.queued_pages())
     }
 
+    /// Extract every warm, mid-decode lane for migration to a decode
+    /// shard (PR 7 disaggregation). Each returned [`MigratedLane`] is a
+    /// self-contained host-side copy of the request's state — prompt,
+    /// emitted tokens, replay watermark, latency clocks — stamped with
+    /// the backend's per-lane DMA clock (`ready_s`) so a modeled target
+    /// can price the page transfer. This engine forgets the request
+    /// entirely: its pages return to the local pool (refcount-aware, so
+    /// a shared prefix stays resident for future admissions) and the
+    /// lane is rebindable. Callers MUST deliver every returned lane to
+    /// [`Engine::import_migrated`] somewhere or the request is lost.
+    pub fn take_migratable(&mut self) -> Vec<MigratedLane> {
+        let taken = self.scheduler.take_migratable();
+        if taken.is_empty() {
+            return Vec::new();
+        }
+        let release = self.backend.spec().caps.lane_release;
+        let mut out = Vec::with_capacity(taken.len());
+        for (lane, mut m) in taken {
+            m.ready_s = ExecBackend::lane_ready_s(&self.backend, lane);
+            if release {
+                self.backend.release_lane(lane);
+            }
+            self.shared_lanes.remove(&lane);
+            self.metrics.migrations_out += 1;
+            out.push(m);
+        }
+        out
+    }
+
+    /// Pages importing `m` would reserve on THIS engine (its own
+    /// reservation policy applies) — the coordinator's placement check.
+    pub fn import_pages(&self, m: &MigratedLane) -> usize {
+        self.scheduler.import_pages(m)
+    }
+
+    /// Whether this engine can take one more migrated lane right now: a
+    /// free lane plus enough free pages for `m` under the local
+    /// reservation policy.
+    pub fn can_import(&self, m: &MigratedLane) -> bool {
+        self.scheduler.active() < self.scheduler.lanes()
+            && self.scheduler.free_pages() >= self.import_pages(m)
+    }
+
+    /// Rebuild a migrated request on this engine: bind a free lane
+    /// mid-decode, allocate fresh private pages (copy-on-migrate — a
+    /// shared prefix on the source shard arrives here as a plain
+    /// private copy), and hand the backend the full token history so it
+    /// reconstructs the KV rows. Requires the backend to DECLARE
+    /// [`BackendCaps::lane_import`](super::backend::BackendCaps). On a
+    /// backend refusal the scheduler binding is rolled back, so a
+    /// failed import leaks neither the lane nor its pages.
+    pub fn import_migrated(&mut self, m: MigratedLane) -> Result<()> {
+        if !self.backend.spec().caps.lane_import {
+            return Err(anyhow!(
+                "backend does not declare lane_import; shard {} cannot \
+                 accept migrated requests", self.shard));
+        }
+        let lane = self.scheduler.import_lane(&m)?;
+        let pages = self.scheduler.page_table(lane)?.to_vec();
+        if let Err(e) = self.backend.import_lane(lane, &m.req.prompt, &m.tokens,
+                                                 &pages, m.ready_s) {
+            self.scheduler.abort_lane(lane);
+            return Err(e);
+        }
+        self.metrics.migrations_in += 1;
+        Ok(())
+    }
+
     /// Serve a whole queue to completion; results in submission order.
     /// Requires an idle engine — interleaved workloads go through
     /// `submit` + `step` (or the `Router`), whose completion routing
@@ -558,10 +667,17 @@ impl<B: ExecBackend> Engine<B> {
 /// The threaded [`Router`](super::Router) applies the same rule from
 /// load reports; this function is the single-threaded form the open-loop
 /// harness, the serve CLI and the invariant test suite share.
+/// Shards whose [`ShardRole`] does not accept NEW requests (decode
+/// specialists) are never candidates — they only receive work through
+/// [`place_migration`]. In an all-`Unified` topology this filter is a
+/// no-op, preserving classic placement bit-for-bit.
 pub fn place_shard<B: ExecBackend>(engines: &[Engine<B>], req: &GenRequest)
     -> Option<usize>
 {
     most_free(engines.iter().enumerate().filter_map(|(i, e)| {
+        if !e.role().accepts_new_requests() {
+            return None;
+        }
         let free = e.placement_free_pages();
         (free >= e.scheduler.admission_pages(req)).then_some((i, free))
     }))
@@ -579,7 +695,9 @@ pub fn place_shard_affine<B: ExecBackend>(engines: &[Engine<B>], req: &GenReques
 {
     let mut best: Option<(usize, usize)> = None; // (depth, shard)
     for (i, e) in engines.iter().enumerate() {
-        if e.placement_free_pages() < e.scheduler.admission_pages(req) {
+        if !e.role().accepts_new_requests()
+            || e.placement_free_pages() < e.scheduler.admission_pages(req)
+        {
             continue;
         }
         let depth = e.scheduler.prefix_depth(&req.prompt);
@@ -588,6 +706,23 @@ pub fn place_shard_affine<B: ExecBackend>(engines: &[Engine<B>], req: &GenReques
         }
     }
     best.map(|(_, i)| i).or_else(|| place_shard(engines, req))
+}
+
+/// Placement of a MIGRATED lane: among shards whose role accepts
+/// migrations (decode specialists), the one with the most free pages
+/// that has a free lane AND can cover the import reservation — the
+/// same least-loaded + strict-`>` tie-break discipline as
+/// [`place_shard`]. `None` means every decode shard is full; the
+/// caller keeps the lane queued and retries next tick (the source
+/// shard has already forgotten it, so the host-side copy is the only
+/// owner).
+pub fn place_migration<B: ExecBackend>(engines: &[Engine<B>], m: &MigratedLane)
+    -> Option<usize>
+{
+    most_free(engines.iter().enumerate().filter_map(|(i, e)| {
+        (e.role().accepts_migrations() && e.can_import(m))
+            .then(|| (i, e.scheduler.free_pages()))
+    }))
 }
 
 /// The selection rule itself, shared by [`place_shard`] and the
@@ -605,4 +740,201 @@ pub(crate) fn most_free(candidates: impl Iterator<Item = (usize, usize)>)
         }
     }
     best.map(|(_, shard)| shard)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::{BackendCaps, MockBackend};
+    use super::*;
+
+    fn paged_mock() -> MockBackend {
+        MockBackend::paged(2, 4, 32, 64, 4, 8)
+    }
+
+    fn migrated(id: u64, prompt: Vec<i32>, max_new: usize, vocab: usize)
+        -> MigratedLane
+    {
+        let t0 = MockBackend::expected_tokens(&prompt, 1, vocab)[0];
+        let now = Instant::now();
+        MigratedLane {
+            req: GenRequest::new(id, prompt, max_new),
+            tokens: vec![t0],
+            replayed: 0,
+            arrived: now,
+            admitted_at: now,
+            first_token_at: now,
+            ready_s: 0.0,
+            src_seq: 0,
+        }
+    }
+
+    #[test]
+    fn most_free_breaks_ties_on_first_candidate() {
+        // strict `>` keeps the FIRST candidate among equals — callers
+        // enumerate shards in index order, so equal free pages resolve
+        // to the lowest shard id, deterministically
+        assert_eq!(most_free([(0, 4), (1, 4), (2, 4)].into_iter()), Some(0));
+        assert_eq!(most_free([(0, 3), (1, 4), (2, 4)].into_iter()), Some(1));
+        assert_eq!(most_free([(0, 4), (1, 5), (2, 5)].into_iter()), Some(1));
+        assert_eq!(most_free(std::iter::empty()), None);
+        // zero free pages is still a valid (already-eligible) candidate
+        assert_eq!(most_free([(3, 0)].into_iter()), Some(3));
+    }
+
+    #[test]
+    fn equal_free_shards_place_on_lowest_id() {
+        // engine-level form of the tie-break: two identical idle shards
+        // report equal placement_free_pages, so the request lands on
+        // shard 0 every time (satellite: placement tie-breaking)
+        let engines = vec![
+            Engine::with_layout(paged_mock(), PrefillPolicy::Blocking, KvLayout::Paged),
+            Engine::with_layout(paged_mock(), PrefillPolicy::Blocking, KvLayout::Paged),
+        ];
+        assert_eq!(engines[0].placement_free_pages(),
+                   engines[1].placement_free_pages());
+        let req = GenRequest::new(1, vec![0; 4], 4);
+        assert_eq!(place_shard(&engines, &req), Some(0));
+        assert_eq!(place_shard_affine(&engines, &req), Some(0));
+    }
+
+    #[test]
+    fn prefix_share_requires_declared_capability() {
+        // the mock IMPLEMENTS bind_resident_prefix either way — only the
+        // declaration changes. The engine must follow the declaration.
+        let stripped = BackendCaps { resident_prefix: false, lane_release: true,
+                                     lane_import: true };
+        let e = Engine::with_layout(paged_mock(), PrefillPolicy::Blocking,
+                                    KvLayout::Paged)
+            .with_prefix_share(true);
+        assert!(e.prefix_share(), "declared capability must enable sharing");
+        let e = Engine::with_layout(paged_mock().with_caps(stripped),
+                                    PrefillPolicy::Blocking, KvLayout::Paged)
+            .with_prefix_share(true);
+        assert!(!e.prefix_share(),
+                "sharing must coerce off when resident_prefix is not declared");
+    }
+
+    #[test]
+    fn lane_release_notification_follows_declaration() {
+        // identical lazy overcommit workload on two engines whose ONLY
+        // difference is the declared lane_release capability: both
+        // preempt and both finish with identical streams, but the
+        // backend release hook fires only when declared
+        let run = |caps: Option<BackendCaps>| {
+            let mut b = MockBackend::paged(2, 4, 12, 32, 4, 4).with_table_growth();
+            if let Some(c) = caps {
+                b = b.with_caps(c);
+            }
+            let mut e = Engine::with_reservation(b, PrefillPolicy::Blocking,
+                                                 KvLayout::Paged,
+                                                 ReservationPolicy::Lazy);
+            let reqs = vec![GenRequest::new(1, vec![1; 4], 8),
+                            GenRequest::new(2, vec![2; 4], 8)];
+            let results = e.serve(&reqs).unwrap();
+            (results, e.metrics.preemptions, e.backend.lanes_released)
+        };
+        let (full_results, full_preempt, full_released) = run(None);
+        let stripped = BackendCaps { resident_prefix: true, lane_release: false,
+                                     lane_import: true };
+        let (bare_results, bare_preempt, bare_released) = run(Some(stripped));
+        assert!(full_preempt > 0, "overcommit must actually preempt");
+        assert_eq!(full_preempt, bare_preempt,
+                   "the capability gates notification, not scheduling");
+        assert!(full_released > 0);
+        assert_eq!(bare_released, 0,
+                   "an undeclared backend must never be told to release");
+        for (a, b) in full_results.iter().zip(&bare_results) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.tokens,
+                       MockBackend::expected_tokens(&vec![a.id as i32; 4], 8, 32));
+        }
+    }
+
+    #[test]
+    fn import_refused_without_declared_capability() {
+        let stripped = BackendCaps { resident_prefix: true, lane_release: true,
+                                     lane_import: false };
+        let mut e = Engine::with_layout(paged_mock().with_caps(stripped),
+                                        PrefillPolicy::Blocking, KvLayout::Paged);
+        let err = e.import_migrated(migrated(9, vec![3; 4], 4, 64)).unwrap_err();
+        assert!(err.to_string().contains("lane_import"), "{err}");
+        assert_eq!(e.scheduler.active(), 0, "a refused import must bind nothing");
+        assert_eq!(e.metrics.migrations_in, 0);
+    }
+
+    #[test]
+    fn role_aware_placement_separates_admission_from_migration() {
+        let engines = vec![
+            Engine::with_layout(paged_mock(), PrefillPolicy::Blocking, KvLayout::Paged)
+                .with_role(ShardRole::Prefill),
+            Engine::with_layout(paged_mock(), PrefillPolicy::Blocking, KvLayout::Paged)
+                .with_role(ShardRole::Decode),
+        ];
+        let req = GenRequest::new(1, vec![0; 4], 4);
+        // both shards are idle with identical free pages: new work must
+        // still land on the prefill specialist...
+        assert_eq!(place_shard(&engines, &req), Some(0));
+        assert_eq!(place_shard_affine(&engines, &req), Some(0));
+        // ...and a migrated lane must land on the decode specialist
+        let m = migrated(2, vec![5; 4], 4, 64);
+        assert_eq!(place_migration(&engines, &m), Some(1));
+        // an all-Unified topology is unchanged by the role filter
+        let unified = vec![
+            Engine::with_layout(paged_mock(), PrefillPolicy::Blocking, KvLayout::Paged),
+            Engine::with_layout(paged_mock(), PrefillPolicy::Blocking, KvLayout::Paged),
+        ];
+        assert_eq!(place_shard(&unified, &req), Some(0));
+        assert_eq!(place_migration(&unified, &m), None,
+                   "Unified shards never accept migrations");
+    }
+
+    #[test]
+    fn migrated_lane_continues_byte_identically() {
+        let prompt: Vec<i32> = (0..4).collect();
+        let req = GenRequest::new(7, prompt.clone(), 6);
+        // reference: one unified engine runs the request end to end
+        let mut uni = Engine::with_layout(paged_mock(), PrefillPolicy::Blocking,
+                                          KvLayout::Paged);
+        let want = uni.serve(&[req.clone()]).unwrap();
+        assert_eq!(want[0].tokens.len(), 6);
+
+        // disaggregated: prefill on P (which never decodes), first-token
+        // handoff, decode to completion on D
+        let mut p = Engine::with_layout(paged_mock(), PrefillPolicy::Blocking,
+                                        KvLayout::Paged)
+            .with_role(ShardRole::Prefill);
+        let mut d = Engine::with_layout(paged_mock(), PrefillPolicy::Blocking,
+                                        KvLayout::Paged)
+            .with_role(ShardRole::Decode);
+        p.submit(req).unwrap();
+        let mut events = Vec::new();
+        let mut handoff = Vec::new();
+        while p.has_work() {
+            let r = p.step().unwrap();
+            events.extend(r.events);
+            handoff.extend(p.take_migratable());
+        }
+        assert_eq!(handoff.len(), 1, "the warm lane must hand off exactly once");
+        assert_eq!(p.metrics.migrations_out, 1);
+        assert_eq!(p.metrics.requests, 0, "the source must not claim completion");
+        assert_eq!(p.scheduler.free_pages(), 8,
+                   "migration must return every source page to the pool");
+        for m in handoff {
+            assert_eq!(m.tokens.len(), 1, "handoff happens right after token 0");
+            d.import_migrated(m).unwrap();
+        }
+        assert_eq!(d.metrics.migrations_in, 1);
+        let done = d
+            .drive(|r| events.extend(r.events.iter().copied()))
+            .unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].1.tokens, want[0].tokens,
+                   "migration must be invisible in the result stream");
+        // the live event stream — first token emitted on P, the rest on
+        // D — carries the same bytes in the same order
+        let stream: Vec<i32> = events.iter().map(|e| e.token).collect();
+        assert_eq!(stream, want[0].tokens);
+        let indices: Vec<usize> = events.iter().map(|e| e.index).collect();
+        assert_eq!(indices, (0..6).collect::<Vec<_>>());
+    }
 }

@@ -485,6 +485,34 @@ impl LaneKv {
                     max_seq, grown: 0, resident_rows })
     }
 
+    /// Bind an already-WARM, mid-decode lane migrated from another shard
+    /// (disaggregated prefill→decode handoff): the prompt plus
+    /// `decoded_rows` generated-token rows are cache-resident on the new
+    /// pages, so `pos` starts past the prompt and the lane joins decode
+    /// iterations immediately — no prefill phase exists for it here.
+    pub fn imported(prompt_len: usize, decoded_rows: usize, pages: Vec<u32>,
+                    page_len: usize, max_seq: usize) -> Result<Self> {
+        if prompt_len == 0 {
+            return Err(anyhow!("cannot import an empty prompt"));
+        }
+        let pos = prompt_len + decoded_rows;
+        let reserved_rows = (pages.len() * page_len).min(max_seq);
+        if pos > reserved_rows {
+            return Err(anyhow!(
+                "imported lane at pos {pos} exceeds its {} pages × {page_len} \
+                 rows (max_seq {max_seq})", pages.len()));
+        }
+        if pos >= max_seq {
+            return Err(anyhow!(
+                "imported lane at pos {pos} has no decode capacity left \
+                 (max_seq {max_seq}) — a finished request never migrates"));
+        }
+        // resident_rows stays 0: the span was not a shared-prefix bind
+        // but a private copy, and nothing here is prefill-resumable
+        Ok(LaneKv { prompt_len, pos, pages, reserved_rows, page_len,
+                    max_seq, grown: 0, resident_rows: 0 })
+    }
+
     /// Prompt rows that were cache-resident at bind (0 for a cold
     /// admission).
     pub fn resident_rows(&self) -> usize {

@@ -32,6 +32,7 @@
 //! bit for bit across the whole policy matrix.
 
 mod backend;
+mod config;
 mod engine;
 mod hmt;
 mod kv;
@@ -39,17 +40,19 @@ mod openloop;
 mod request;
 mod scheduler;
 
-pub use backend::{BackendSpec, ExecBackend, LaneStep, MockBackend, ModeledBackend,
-                  PagedCaps, PagedStep, PjrtBackend, PrefillSlot};
-pub use engine::{place_shard, place_shard_affine, Engine, KvLayout, StepReport,
-                 TokenEvent};
+pub use backend::{BackendCaps, BackendSpec, ExecBackend, LaneStep, MockBackend,
+                  ModeledBackend, PagedCaps, PagedStep, PjrtBackend, PrefillSlot,
+                  MIGRATION_BW_BYTES_PER_S};
+pub use config::{KvConfig, PrefillConfig, ServeConfig, ShardRole, TopologyConfig};
+pub use engine::{place_migration, place_shard, place_shard_affine, Engine, KvLayout,
+                 StepReport, TokenEvent};
 pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
 pub use kv::{split_budget, KvPool, LaneKv, ReservationPolicy};
 pub use openloop::{run_open_loop, ArrivalProcess, OpenLoopConfig, OpenLoopShardStats,
                    OpenLoopStats, PagedPoolConfig};
 pub use request::{FinishReason, GenRequest, GenResult, ServeMetrics};
-pub use scheduler::{ChunkPlan, Completion, GrowthReport, PageStats, Preempted,
-                    PrefillPolicy, RequestPhase, Scheduler, SharedBind};
+pub use scheduler::{ChunkPlan, Completion, GrowthReport, MigratedLane, PageStats,
+                    Preempted, PrefillPolicy, RequestPhase, Scheduler, SharedBind};
 
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -93,6 +96,11 @@ enum FrontMsg {
 /// Coordinator → shard commands.
 enum ShardCmd {
     Submit(Vec<GenRequest>),
+    /// Rebuild a migrated lane on this (decode) shard mid-decode
+    /// ([`Engine::import_migrated`]). Counts toward `submits_seen` like
+    /// a submit: the target scheduler assigns it the next local seq, so
+    /// the coordinator's per-shard seq bookkeeping stays index-aligned.
+    Import(Box<MigratedLane>),
     Metrics(mpsc::Sender<ServeMetrics>),
     /// Drop everything queued and in flight (another shard failed; the
     /// window is void, matching single-engine abort semantics).
@@ -106,9 +114,13 @@ enum ShardCmd {
 struct ShardLoad {
     /// Free pages minus queued admission demand — the honest headroom.
     free_pages: usize,
+    /// Unbound decode lanes — migration placement needs a free LANE as
+    /// well as pages (an import binds one directly, skipping the queue).
+    free_lanes: usize,
     has_work: bool,
-    /// Requests this shard has accepted so far; lets the coordinator
-    /// reconcile its in-flight placements against this report.
+    /// Requests this shard has accepted so far (submits AND imports);
+    /// lets the coordinator reconcile its in-flight placements against
+    /// this report.
     submits_seen: u64,
 }
 
@@ -132,6 +144,15 @@ enum ShardMsg {
         error: Error,
         load: ShardLoad,
         fatal: bool,
+    },
+    /// A prefill shard handed off its warm lanes (first-token
+    /// disaggregation): each carries its source-local seq so the
+    /// coordinator can re-home the request's global-seq bookkeeping to
+    /// whichever decode shard it picks. Sent AFTER the tick's report,
+    /// so the first-token event fans out before the move.
+    Migrate {
+        shard: usize,
+        lanes: Vec<MigratedLane>,
     },
 }
 
@@ -196,9 +217,12 @@ impl std::ops::Deref for TokenSubscription {
 // RouterBuilder
 // ---------------------------------------------------------------------------
 
-/// Builder for a [`Router`]: policy, cache layout, page-reservation
-/// policy, shared-prefix admission and shard count in one place — the
-/// only way to spawn a router.
+/// Builder for a [`Router`]: a thin fluent wrapper over the one typed
+/// [`ServeConfig`] — the only way to spawn a router. Every setter
+/// delegates to the config's builder, and `spawn` funnels through
+/// [`ServeConfig::validate`], so an invalid combination (prefix sharing
+/// on a dense layout, prefill shards with nowhere to hand off) fails
+/// with one typed error before any thread starts.
 ///
 /// ```no_run
 /// # use flexllm::coordinator::{PrefillPolicy, RouterBuilder};
@@ -210,57 +234,63 @@ impl std::ops::Deref for TokenSubscription {
 ///     .spawn("artifacts".to_string())?;
 /// # Ok(()) }
 /// ```
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Default)]
 pub struct RouterBuilder {
-    policy: PrefillPolicy,
-    layout: KvLayout,
-    reserve: ReservationPolicy,
-    shards: usize,
-    prefix_share: bool,
-}
-
-impl Default for RouterBuilder {
-    fn default() -> Self {
-        Self::new()
-    }
+    cfg: ServeConfig,
 }
 
 impl RouterBuilder {
-    /// Defaults: `Blocking` admission, dense layout, up-front
-    /// reservation, one shard — the PR 1 Router, exactly.
+    /// Defaults ([`ServeConfig::default`]): `Blocking` admission, dense
+    /// layout, up-front reservation, one `Unified` shard — the PR 1
+    /// Router, exactly.
     pub fn new() -> Self {
-        RouterBuilder {
-            policy: PrefillPolicy::Blocking,
-            layout: KvLayout::Dense,
-            reserve: ReservationPolicy::Upfront,
-            shards: 1,
-            prefix_share: false,
-        }
+        RouterBuilder { cfg: ServeConfig::default() }
+    }
+
+    /// Start from an explicit [`ServeConfig`] (the openloop harness and
+    /// the CLI build one and hand it over verbatim).
+    pub fn from_config(cfg: ServeConfig) -> Self {
+        RouterBuilder { cfg }
+    }
+
+    /// The config as currently built (validated only at spawn).
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
     }
 
     /// Admission prefill policy (coerced per shard to what the backend
     /// can execute — see [`Engine::with_reservation`]).
     pub fn policy(mut self, policy: PrefillPolicy) -> Self {
-        self.policy = policy;
+        self.cfg = self.cfg.policy(policy);
         self
     }
 
     /// KV cache layout (coerced per shard to backend capabilities).
     pub fn layout(mut self, layout: KvLayout) -> Self {
-        self.layout = layout;
+        self.cfg = self.cfg.layout(layout);
         self
     }
 
     /// Page-reservation policy (coerced to `Upfront` on a dense pool).
     pub fn reserve(mut self, reserve: ReservationPolicy) -> Self {
-        self.reserve = reserve;
+        self.cfg = self.cfg.reserve(reserve);
         self
     }
 
-    /// Number of engine shards (clamped to ≥ 1). Each shard gets its
-    /// own engine thread and backend instance from the spawn factory.
+    /// Number of `Unified` engine shards (clamped to ≥ 1). Each shard
+    /// gets its own engine thread and backend instance from the spawn
+    /// factory. For role-specialized topologies use [`Self::roles`].
     pub fn shards(mut self, shards: usize) -> Self {
-        self.shards = shards.max(1);
+        self.cfg = self.cfg.shards(shards.max(1));
+        self
+    }
+
+    /// Disaggregated topology: one [`ShardRole`] per shard, in shard-id
+    /// order. New requests are placed only on `Unified`/`Prefill`
+    /// shards; a request prefilled on a `Prefill` shard migrates to the
+    /// least-loaded `Decode` shard at its first token.
+    pub fn roles(mut self, roles: Vec<ShardRole>) -> Self {
+        self.cfg = self.cfg.roles(roles);
         self
     }
 
@@ -270,7 +300,7 @@ impl RouterBuilder {
     /// prompts to the shard already holding their prefix (coerced off
     /// per shard on dense pools, like every other capability).
     pub fn prefix_share(mut self, enabled: bool) -> Self {
-        self.prefix_share = enabled;
+        self.cfg = self.cfg.prefix_share(enabled);
         self
     }
 
@@ -295,8 +325,13 @@ impl RouterBuilder {
         B: ExecBackend + 'static,
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
     {
-        let RouterBuilder { policy, layout, reserve, shards, prefix_share } = self;
-        let shard_count = shards.max(1);
+        self.cfg.validate()?;
+        let policy = self.cfg.prefill.policy;
+        let layout = self.cfg.kv.layout;
+        let reserve = self.cfg.kv.reserve;
+        let prefix_share = self.cfg.kv.prefix_share;
+        let roles = self.cfg.topology.roles.clone();
+        let shard_count = roles.len();
         let (tx, rx) = mpsc::channel::<FrontMsg>();
         let factory = Arc::new(factory);
         let mut states: Vec<ShardState> = Vec::with_capacity(shard_count);
@@ -306,6 +341,7 @@ impl RouterBuilder {
             let (ready_tx, ready_rx) = mpsc::channel::<Result<ShardSpec>>();
             let coord = tx.clone();
             let fac = Arc::clone(&factory);
+            let role = roles[shard];
             let spawned = std::thread::Builder::new()
                 .name(format!("flexllm-shard-{shard}"))
                 .spawn(move || {
@@ -313,6 +349,7 @@ impl RouterBuilder {
                         Ok(backend) => {
                             Engine::with_reservation(backend, policy, layout, reserve)
                                 .with_shard_id(shard)
+                                .with_role(role)
                                 .with_prefix_share(prefix_share)
                         }
                         Err(e) => {
@@ -355,6 +392,16 @@ impl RouterBuilder {
                  same policy/layout/pool geometry ({:?} vs {:?})",
                 specs[0], specs.iter().find(|s| **s != specs[0]).unwrap()));
         }
+        // the config validated roles against the REQUESTED paged layout;
+        // re-check against what the backends actually coerced to —
+        // migration moves page tables, so a dense fallback cannot serve
+        // a disaggregated topology
+        if roles.iter().any(|r| *r != ShardRole::Unified) && !specs[0].paged {
+            shutdown_states(&mut states);
+            return Err(anyhow!(
+                "disaggregated shard roles need a paged backend, but the \
+                 layout coerced to dense"));
+        }
         // the coordinator's placement model: same geometry as every
         // shard, used only for validation and reservation math — so the
         // admission rules can never diverge from the schedulers'
@@ -372,7 +419,7 @@ impl RouterBuilder {
         };
         let spawned = std::thread::Builder::new()
             .name("flexllm-router".into())
-            .spawn(move || coordinator_loop(rx, states, model));
+            .spawn(move || coordinator_loop(rx, states, model, roles));
         match spawned {
             Ok(handle) => Ok(Router { tx, handle: Some(handle), shards: shard_count }),
             Err(e) => Err(anyhow!("spawning router thread: {e}")),
@@ -494,6 +541,10 @@ impl Drop for Router {
 fn shard_load<B: ExecBackend>(engine: &Engine<B>, submits_seen: u64) -> ShardLoad {
     ShardLoad {
         free_pages: engine.placement_free_pages(),
+        free_lanes: engine
+            .scheduler
+            .lanes()
+            .saturating_sub(engine.scheduler.active()),
         has_work: engine.has_work(),
         submits_seen,
     }
@@ -527,6 +578,21 @@ fn handle_shard_cmd<B: ExecBackend>(
                         fatal: false,
                     }));
                 }
+            }
+        }
+        ShardCmd::Import(m) => {
+            *submits_seen += 1;
+            if let Err(e) = engine.import_migrated(*m) {
+                // the coordinator checked pages, lanes and role against
+                // this shard's own load report, so a refusal is a
+                // desync — surface it exactly like a submit desync
+                engine.scheduler.abort_all();
+                let _ = coord.send(FrontMsg::Shard(ShardMsg::Error {
+                    shard,
+                    error: e,
+                    load: shard_load(engine, *submits_seen),
+                    fatal: false,
+                }));
             }
         }
         ShardCmd::Metrics(reply) => {
@@ -598,6 +664,17 @@ fn shard_loop<B: ExecBackend>(
             // thread gone"
             match catch_unwind(AssertUnwindSafe(|| engine.step())) {
                 Ok(Ok(report)) => {
+                    // a prefill shard hands its warm lanes off BEFORE
+                    // computing the load snapshot, so the report already
+                    // reflects the freed pages — and an all-migrated
+                    // shard reports has_work=false, letting drains
+                    // settle while the requests live in the
+                    // coordinator's migration queue
+                    let migrated = if engine.role() == ShardRole::Prefill {
+                        engine.take_migratable()
+                    } else {
+                        Vec::new()
+                    };
                     if coord
                         .send(FrontMsg::Shard(ShardMsg::Report {
                             shard,
@@ -606,6 +683,18 @@ fn shard_loop<B: ExecBackend>(
                             load: shard_load(&engine, submits_seen),
                         }))
                         .is_err()
+                    {
+                        return;
+                    }
+                    // after the report: the first-token event must fan
+                    // out before the coordinator re-homes the request
+                    if !migrated.is_empty()
+                        && coord
+                            .send(FrontMsg::Shard(ShardMsg::Migrate {
+                                shard,
+                                lanes: migrated,
+                            }))
+                            .is_err()
                     {
                         return;
                     }
@@ -630,6 +719,7 @@ fn shard_loop<B: ExecBackend>(
                         error: anyhow!("shard {shard} engine panicked during step"),
                         load: ShardLoad {
                             free_pages: 0,
+                            free_lanes: 0,
                             has_work: false,
                             submits_seen,
                         },
@@ -674,6 +764,9 @@ struct ShardState {
     /// Admission reservations dispatched but not yet reflected in a
     /// load report: (submission index, pages).
     pending_pages: VecDeque<(u64, usize)>,
+    /// Free-lane count from the last load report; migrations need an
+    /// unbound lane on the target, not just pages.
+    base_free_lanes: usize,
     has_work: bool,
     dead: bool,
     /// Global submission seq by shard-local seq, for requests whose
@@ -698,6 +791,7 @@ impl ShardState {
             reported_seen: 0,
             sent: 0,
             pending_pages: VecDeque::new(),
+            base_free_lanes: 0,
             has_work: false,
             dead: false,
             seq_map: HashMap::new(),
@@ -713,6 +807,13 @@ impl ShardState {
     fn est_free(&self) -> usize {
         let pending: usize = self.pending_pages.iter().map(|&(_, p)| p).sum();
         self.base_free.saturating_sub(pending)
+    }
+
+    /// Estimated free lanes, pessimistic by the same in-flight
+    /// dispatches as `est_free` (each pending dispatch binds at most
+    /// one lane).
+    fn est_free_lanes(&self) -> usize {
+        self.base_free_lanes.saturating_sub(self.pending_pages.len())
     }
 
     /// Idle = no in-flight work AND every dispatched request reflected.
@@ -768,10 +869,17 @@ struct Coordinator {
     drain_waiters: Vec<mpsc::Sender<Result<Vec<GenResult>>>>,
     generates: Vec<GenerateWaiter>,
     subscribers: Vec<Subscriber>,
+    /// Role of each shard, indexed like `shards`; migrations only go to
+    /// shards whose role accepts them.
+    roles: Vec<ShardRole>,
+    /// Requests mid-migration: taken off their prefill shard, waiting
+    /// for a decode shard with a free lane and enough pages (global
+    /// seq, migrated lane). FIFO like `overflow`.
+    migrating: VecDeque<(u64, MigratedLane)>,
 }
 
 fn coordinator_loop(rx: mpsc::Receiver<FrontMsg>, shards: Vec<ShardState>,
-                    model: Scheduler) {
+                    model: Scheduler, roles: Vec<ShardRole>) {
     let mut c = Coordinator {
         shards,
         model,
@@ -786,6 +894,8 @@ fn coordinator_loop(rx: mpsc::Receiver<FrontMsg>, shards: Vec<ShardState>,
         drain_waiters: Vec::new(),
         generates: Vec::new(),
         subscribers: Vec::new(),
+        roles,
+        migrating: VecDeque::new(),
     };
     loop {
         let msg = match rx.recv() {
@@ -876,8 +986,31 @@ impl Coordinator {
                 for (shard_seq, result) in completed {
                     self.route_completion(shard, shard_seq, result);
                 }
-                // freed pages may unblock the overflow head
+                // freed pages may unblock a parked migration or the
+                // overflow head; migrations first — they hold warm KV
+                self.drain_migrations();
                 self.drain_overflow();
+            }
+            ShardMsg::Migrate { shard, lanes } => {
+                for m in lanes {
+                    // re-home the global-seq bookkeeping: the request
+                    // now lives in the coordinator until a decode shard
+                    // takes it
+                    let Some(global) = self.shards[shard].seq_map.remove(&m.src_seq)
+                    else {
+                        // a voided window's straggler (its seq_map was
+                        // cleared); before any failure this is a
+                        // protocol desync
+                        if !self.ever_voided {
+                            self.pending_err.get_or_insert(anyhow!(
+                                "shard {shard} migrated unknown local seq {}",
+                                m.src_seq));
+                        }
+                        continue;
+                    };
+                    self.migrating.push_back((global, m));
+                }
+                self.drain_migrations();
             }
             ShardMsg::Error { shard, error, load, fatal } => {
                 self.update_load(shard, load);
@@ -965,12 +1098,55 @@ impl Coordinator {
             }
         }
         engine::most_free(self.shards.iter().enumerate().filter_map(|(i, st)| {
-            if st.dead {
+            if st.dead || !self.roles[i].accepts_new_requests() {
                 return None;
             }
             let free = st.est_free();
             (free >= need).then_some((i, free))
         }))
+    }
+
+    /// Dispatch parked migrations head-first while some decode shard
+    /// can take the head (same head-of-line discipline as `overflow`).
+    fn drain_migrations(&mut self) {
+        loop {
+            let Some(target) =
+                self.migrating.front().and_then(|(_, m)| self.pick_migration(m))
+            else {
+                break;
+            };
+            let (global, m) =
+                self.migrating.pop_front().expect("front checked above");
+            self.dispatch_migration(target, global, m);
+        }
+    }
+
+    /// Least-loaded decode shard with a free lane and enough pages for
+    /// the migrated KV; `None` parks the migration until a report frees
+    /// capacity.
+    fn pick_migration(&self, m: &MigratedLane) -> Option<usize> {
+        let need = self.model.import_pages(m);
+        engine::most_free(self.shards.iter().enumerate().filter_map(|(i, st)| {
+            if st.dead || !self.roles[i].accepts_migrations() {
+                return None;
+            }
+            let free = st.est_free();
+            (free >= need && st.est_free_lanes() > 0).then_some((i, free))
+        }))
+    }
+
+    fn dispatch_migration(&mut self, shard: usize, global: u64, m: MigratedLane) {
+        let need = self.model.import_pages(&m);
+        let st = &mut self.shards[shard];
+        // an Import consumes the target scheduler's next local seq just
+        // like a Submit, so it shares the same idx bookkeeping
+        let idx = st.sent;
+        st.sent += 1;
+        st.seq_map.insert(idx, global);
+        st.pending_pages.push_back((idx, need));
+        if st.tx.send(ShardCmd::Import(Box::new(m))).is_err() {
+            self.mark_dead(shard);
+        }
     }
 
     fn dispatch(&mut self, shard: usize, seq: u64, req: GenRequest) {
@@ -998,6 +1174,7 @@ impl Coordinator {
         st.reported_seen = st.sent;
         st.pending_pages.clear();
         st.base_free = 0;
+        st.base_free_lanes = 0;
     }
 
     fn mark_dead(&mut self, shard: usize) {
@@ -1008,6 +1185,7 @@ impl Coordinator {
     fn update_load(&mut self, shard: usize, load: ShardLoad) {
         let st = &mut self.shards[shard];
         st.base_free = load.free_pages;
+        st.base_free_lanes = load.free_lanes;
         st.reported_seen = load.submits_seen;
         st.has_work = load.has_work;
         while matches!(st.pending_pages.front(),
@@ -1027,6 +1205,7 @@ impl Coordinator {
     /// rule kept later windows clean in exactly that case.
     fn fail_window(&mut self, source: usize, error: Error) {
         self.overflow.clear();
+        self.migrating.clear();
         self.ever_voided = true;
         for (i, st) in self.shards.iter_mut().enumerate() {
             if i != source && !st.dead {
@@ -1097,10 +1276,13 @@ impl Coordinator {
         if self.shards.iter().any(|s| !s.idle()) {
             return;
         }
-        // a non-empty overflow keeps the window open — unless every
-        // shard is dead, in which case it can never drain and the
-        // waiters must hear the error instead of hanging
-        if !self.overflow.is_empty() && !self.shards.iter().all(|s| s.dead) {
+        // a non-empty overflow (or a request parked mid-migration)
+        // keeps the window open — unless every shard is dead, in which
+        // case it can never drain and the waiters must hear the error
+        // instead of hanging
+        if !(self.overflow.is_empty() && self.migrating.is_empty())
+            && !self.shards.iter().all(|s| s.dead)
+        {
             return;
         }
         let mut first_err = self.pending_err.take();
@@ -1362,5 +1544,103 @@ mod tests {
         // validation failures reject the whole queue atomically
         assert!(router.submit(vec![GenRequest::new(1, vec![0; 3], 2)]).is_err());
         assert!(router.drain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn disaggregated_roles_reject_invalid_configs_with_one_error() {
+        // roles on the default dense layout fail ServeConfig::validate
+        // before any thread spawns
+        let err = RouterBuilder::new()
+            .roles(vec![ShardRole::Prefill, ShardRole::Decode])
+            .spawn_with(|_| Ok(MockBackend::new(2, 4, 32, 64)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("paged"),
+                "dense + roles must name the paged requirement: {err:#}");
+        // a prefill shard with nowhere to hand off is equally invalid
+        let err = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .roles(vec![ShardRole::Prefill, ShardRole::Unified])
+            .spawn_with(|_| Ok(MockBackend::paged(2, 4, 32, 64, 4, 8)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("Decode"),
+                "prefill-without-decode must name the missing role: {err:#}");
+        // a paged REQUEST that coerces to dense (mock without pages)
+        // must fail after spawn, at the coercion re-check
+        let err = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .roles(vec![ShardRole::Prefill, ShardRole::Decode])
+            .spawn_with(|_| Ok(MockBackend::new(2, 4, 32, 64)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("coerced"),
+                "dense coercion under roles must surface: {err:#}");
+    }
+
+    #[test]
+    fn disaggregated_router_streams_byte_identical_to_unified() {
+        // reference: one unified shard with the same geometry
+        let unified = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .spawn_with(|_| Ok(MockBackend::paged(2, 4, 32, 64, 4, 8)))
+            .unwrap();
+        let queue: Vec<GenRequest> =
+            (0..4).map(|i| GenRequest::new(i, vec![i as i32 + 1; 4], 3)).collect();
+        unified.submit(queue.clone()).unwrap();
+        let want = unified.drain().unwrap();
+        assert_eq!(want.len(), 4);
+
+        // same workload over a prefill/decode pair: every request
+        // prefills on shard 0, migrates at its first token, finishes
+        // decoding on shard 1 — streams must not diverge by a byte
+        let router = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .roles(vec![ShardRole::Prefill, ShardRole::Decode])
+            .spawn_with(|_| Ok(MockBackend::paged(2, 4, 32, 64, 4, 8)))
+            .unwrap();
+        let events = router.subscribe().unwrap();
+        router.submit(queue).unwrap();
+        let got = router.drain().unwrap();
+        assert_eq!(got.len(), 4);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id);
+            assert_eq!(g.tokens, w.tokens,
+                       "request {} diverged across the migration", g.id);
+        }
+        // the token stream fans in complete and per-request ordered
+        let mut seen: std::collections::HashMap<u64, Vec<usize>> =
+            std::collections::HashMap::new();
+        for ev in events.try_iter() {
+            seen.entry(ev.id).or_default().push(ev.index);
+        }
+        for id in 0..4u64 {
+            assert_eq!(seen[&id], vec![0, 1, 2], "request {id} events diverged");
+        }
+        // the split is visible in the metrics: all four requests
+        // migrated out of shard 0 and completed on shard 1
+        let per = router.shard_metrics().unwrap();
+        assert_eq!(per[0].migrations_out, 4);
+        assert_eq!(per[1].migrations_in, 4);
+        assert_eq!(per[1].requests, 4, "completions must land on the decode shard");
+        let merged = router.metrics().unwrap();
+        assert_eq!(merged.migrations_out, 4);
+        assert_eq!(merged.migrations_in, 4);
+    }
+
+    #[test]
+    fn prefill_only_budget_completes_on_the_prefill_shard() {
+        // max_new == 1 finishes at the first (prefill-produced) token:
+        // nothing to decode, so nothing migrates
+        let router = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .roles(vec![ShardRole::Prefill, ShardRole::Decode])
+            .spawn_with(|_| Ok(MockBackend::paged(2, 4, 32, 64, 4, 8)))
+            .unwrap();
+        router.submit(vec![GenRequest::new(0, vec![5; 4], 1)]).unwrap();
+        let got = router.drain().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].tokens, MockBackend::expected_tokens(&[5; 4], 1, 64));
+        let per = router.shard_metrics().unwrap();
+        assert_eq!(per[0].requests, 1, "a no-decode request stays put");
+        assert_eq!(per[0].migrations_out, 0);
+        assert_eq!(per[1].migrations_in, 0);
     }
 }

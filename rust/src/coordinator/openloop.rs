@@ -31,10 +31,11 @@ use std::collections::VecDeque;
 use crate::anyhow::{anyhow, Result};
 
 use super::backend::ModeledBackend;
-use super::engine::{place_shard, place_shard_affine, Engine, KvLayout};
+use super::config::{ServeConfig, ShardRole};
+use super::engine::{place_migration, place_shard, place_shard_affine, Engine, KvLayout};
 use super::kv::{split_budget, ReservationPolicy};
 use super::request::{percentile, GenRequest, ServeMetrics};
-use super::scheduler::PrefillPolicy;
+use super::scheduler::{MigratedLane, PrefillPolicy};
 use crate::util::prop::Rng;
 
 /// When requests arrive.
@@ -120,6 +121,14 @@ pub struct OpenLoopConfig {
     /// engines. Placement is least-loaded-by-free-pages with a FIFO
     /// overflow queue, the same policy the threaded Router applies.
     pub shards: usize,
+    /// Disaggregated topology: one [`ShardRole`] per shard. Empty (the
+    /// default) means `shards` × `Unified` — the homogeneous pool,
+    /// bit-for-bit the PR 5 behavior. Non-empty OVERRIDES `shards`:
+    /// the run gets `roles.len()` shards, prefill specialists admit and
+    /// prefill, and each request migrates to the least-loaded decode
+    /// shard at its first token (the modeled page transfer priced
+    /// before the first decode tick). Requires a paged pool.
+    pub roles: Vec<ShardRole>,
     /// Shared-prefix WORKLOAD shape: when > 0, a `shared_frac` portion
     /// of requests open with one of `prefix_groups` seeded "system
     /// prompts" of this many tokens (the rest of the prompt stays
@@ -160,6 +169,7 @@ impl Default for OpenLoopConfig {
             paged: None,
             reserve: ReservationPolicy::Upfront,
             shards: 1,
+            roles: Vec::new(),
             shared_prefix_len: 0,
             prefix_groups: 1,
             shared_frac: 0.8,
@@ -169,10 +179,36 @@ impl Default for OpenLoopConfig {
     }
 }
 
+impl OpenLoopConfig {
+    /// The topology this run serves: explicit `roles` verbatim, or
+    /// `shards` × `Unified` when none were given.
+    pub fn effective_roles(&self) -> Vec<ShardRole> {
+        if self.roles.is_empty() {
+            vec![ShardRole::Unified; self.shards.max(1)]
+        } else {
+            self.roles.clone()
+        }
+    }
+
+    /// The [`ServeConfig`] this run is equivalent to — the one typed
+    /// config both the threaded Router and this harness validate
+    /// against, so an invalid combination fails identically in both.
+    pub fn serve_config(&self, policy: PrefillPolicy) -> ServeConfig {
+        ServeConfig::default()
+            .policy(policy)
+            .layout(if self.paged.is_some() { KvLayout::Paged } else { KvLayout::Dense })
+            .reserve(self.reserve)
+            .prefix_share(self.prefix_share)
+            .roles(self.effective_roles())
+    }
+}
+
 /// Per-shard slice of a sharded open-loop run (empty when `shards` = 1).
 #[derive(Debug, Clone)]
 pub struct OpenLoopShardStats {
     pub shard: usize,
+    /// This shard's role in the topology.
+    pub role: ShardRole,
     /// Requests this shard completed.
     pub requests: usize,
     pub peak_active: usize,
@@ -184,6 +220,10 @@ pub struct OpenLoopShardStats {
     /// Shared-prefix admissions this shard served (zeros unless
     /// `prefix_share` — shows whether affinity kept groups together).
     pub prefix_hits: usize,
+    /// First-token handoffs out of / into this shard (zeros on a
+    /// homogeneous topology).
+    pub migrations_out: usize,
+    pub migrations_in: usize,
     /// This shard's own modeled clock at the end of the run.
     pub model_time_s: f64,
 }
@@ -191,15 +231,18 @@ pub struct OpenLoopShardStats {
 impl OpenLoopShardStats {
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"shard\": {}, \"requests\": {}, \"peak_active\": {}, \
+            "{{\"shard\": {}, \"role\": \"{}\", \"requests\": {}, \
+             \"peak_active\": {}, \
              \"kv_pages_total\": {}, \"kv_pages_peak\": {}, \
              \"kv_pages_grown\": {}, \"preemptions\": {}, \
              \"decode_invocations\": {}, \"prefix_hits\": {}, \
+             \"migrations_out\": {}, \"migrations_in\": {}, \
              \"model_time_s\": {:.6}}}",
-            self.shard, self.requests, self.peak_active,
+            self.shard, self.role.name(), self.requests, self.peak_active,
             self.kv_pages_total, self.kv_pages_peak,
             self.kv_pages_grown, self.preemptions,
-            self.decode_invocations, self.prefix_hits, self.model_time_s,
+            self.decode_invocations, self.prefix_hits,
+            self.migrations_out, self.migrations_in, self.model_time_s,
         )
     }
 }
@@ -243,6 +286,10 @@ pub struct OpenLoopStats {
     pub prefix_hit_rate: f64,
     pub kv_pages_shared: usize,
     pub cow_copies: usize,
+    /// First-token handoffs between shards (zeros on a homogeneous
+    /// topology — every migration leaves a prefill shard and lands on
+    /// a decode shard, so out-counts equal in-counts pool-wide).
+    pub migrations: usize,
     /// Per-shard breakdown (empty on a single-shard run).
     pub per_shard: Vec<OpenLoopShardStats>,
 }
@@ -290,7 +337,7 @@ impl OpenLoopStats {
              \"kv_pages_grown\": {}, \"preemptions\": {}, \
              \"prefix_hits\": {}, \"prefix_misses\": {}, \
              \"prefix_hit_rate\": {:.6}, \"kv_pages_shared\": {}, \
-             \"cow_copies\": {}, \
+             \"cow_copies\": {}, \"migrations\": {}, \
              \"per_shard\": [{}]}}",
             self.requests,
             self.shards, self.tokens, self.throughput_tps(),
@@ -304,7 +351,7 @@ impl OpenLoopStats {
             self.kv_pages_grown, self.preemptions,
             self.prefix_hits, self.prefix_misses,
             self.prefix_hit_rate, self.kv_pages_shared,
-            self.cow_copies,
+            self.cow_copies, self.migrations,
             per_shard.join(", "),
         )
     }
@@ -403,7 +450,10 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         // comparison lie; refuse like a Chunked→Blocking degradation
         return Err(anyhow!("prefix sharing needs a paged pool"));
     }
-    if cfg.shards > 1 {
+    // the same typed validation the threaded Router runs at spawn:
+    // roles on a dense pool, prefill with nowhere to hand off, etc.
+    cfg.serve_config(policy).validate()?;
+    if cfg.effective_roles().len() > 1 {
         return run_open_loop_sharded(policy, cfg);
     }
     let (trace, arrival_by_id) = arrival_trace(cfg)?;
@@ -518,6 +568,7 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         prefix_hit_rate: m.prefix_hit_rate(),
         kv_pages_shared: m.kv_pages_shared,
         cow_copies: m.cow_copies,
+        migrations: 0,
         per_shard: Vec::new(),
     })
 }
@@ -533,12 +584,16 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
 fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
     -> Result<OpenLoopStats>
 {
-    let shards = cfg.shards;
+    let roles = cfg.effective_roles();
+    let shards = roles.len();
     let (trace, arrival_by_id) = arrival_trace(cfg)?;
     let arrival: Vec<f64> = trace.iter().map(|(t, _)| *t).collect();
 
     // per-shard geometry: the TOTAL budget split evenly, hardware
-    // replicated (each shard keeps the full decode invocation width)
+    // replicated (each shard keeps the full decode invocation width);
+    // a specialist shard gets the SAME silicon budget as a unified one
+    // but spends all of it on its stage (arch::STAGE_REPLICAS), so the
+    // mixed-vs-homogeneous comparison is equal-area AND equal-memory
     let mut engines: Vec<Engine<ModeledBackend>> = Vec::with_capacity(shards);
     match cfg.paged {
         Some(p) => {
@@ -547,7 +602,8 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
             for i in 0..shards {
                 let backend = ModeledBackend::u280_paged(
                     lanes[i], cfg.prefill_len, cfg.max_seq, cfg.vocab,
-                    p.page_len, pages[i], p.decode_width);
+                    p.page_len, pages[i], p.decode_width)
+                    .with_role(roles[i]);
                 let backend = match cfg.reserve {
                     ReservationPolicy::Lazy => backend.with_table_growth(),
                     ReservationPolicy::Upfront => backend,
@@ -556,6 +612,7 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
                     Engine::with_reservation(backend, policy, KvLayout::Paged,
                                              cfg.reserve)
                         .with_shard_id(i)
+                        .with_role(roles[i])
                         .with_prefix_share(cfg.prefix_share));
             }
         }
@@ -586,6 +643,10 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
     let mut next_arrival = 0usize;
     let mut pending = trace.into_iter().map(|(_, r)| Some(r)).collect::<Vec<_>>();
     let mut overflow: VecDeque<GenRequest> = VecDeque::new();
+    // requests taken off a prefill shard at their first token, parked
+    // until some decode shard has a free lane and enough pages (FIFO,
+    // mirroring the threaded coordinator's migration queue)
+    let mut migrating: VecDeque<MigratedLane> = VecDeque::new();
     // with sharing on, placement prefers the shard whose prefix index
     // already holds the prompt's head (zero-prefill admission there);
     // otherwise the plain least-loaded rule, unchanged
@@ -668,10 +729,37 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
             let id = ev.id as usize;
             if tok_count[id] == 0 {
                 first_tok[id] = t;
+                last_tok[id] = t;
+            } else {
+                // a migrated request's first decode tick can land at a
+                // target clock slightly behind the source's step-end
+                // stamp (lane causality is per-lane); keep last_tok
+                // monotone so TPOT stays non-negative
+                last_tok[id] = last_tok[id].max(t);
             }
-            last_tok[id] = t;
             tok_count[id] += 1;
         }
+        // first-token handoff: the prefill specialist sheds every lane
+        // that just produced its first token; each waits (FIFO) for a
+        // decode shard with a free lane and pages. The import prices
+        // the modeled page transfer into the lane's ready time, so the
+        // first decode tick pays for the move.
+        if engines[s].role() == ShardRole::Prefill {
+            migrating.extend(engines[s].take_migratable());
+        }
+        while let Some(head) = migrating.front() {
+            let Some(d) = place_migration(&engines, head) else { break };
+            let m = migrating.pop_front().expect("front checked above");
+            engines[d].import_migrated(m)?;
+        }
+    }
+
+    if !migrating.is_empty() {
+        // every shard went idle with requests still parked: no decode
+        // shard can EVER fit them — a topology/geometry config error
+        return Err(anyhow!(
+            "{} requests stuck mid-migration: no decode shard can fit their \
+             KV reservation", migrating.len()));
     }
 
     let mut ttft = Vec::with_capacity(n);
@@ -696,6 +784,7 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
         .iter()
         .map(|e| OpenLoopShardStats {
             shard: e.shard_id(),
+            role: e.role(),
             requests: e.metrics.requests,
             peak_active: e.metrics.peak_active,
             kv_pages_total: e.metrics.kv_pages_total,
@@ -704,6 +793,8 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
             preemptions: e.metrics.preemptions,
             decode_invocations: e.metrics.decode_invocations,
             prefix_hits: e.metrics.prefix_hits,
+            migrations_out: e.metrics.migrations_out,
+            migrations_in: e.metrics.migrations_in,
             model_time_s: e.backend.model_time_s,
         })
         .collect();
@@ -735,6 +826,7 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
         prefix_hit_rate: m.prefix_hit_rate(),
         kv_pages_shared: m.kv_pages_shared,
         cow_copies: m.cow_copies,
+        migrations: m.migrations_out,
         per_shard,
     })
 }
@@ -947,6 +1039,44 @@ mod tests {
         cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
             cfg.lanes, cfg.max_seq, 32, 16));
         cfg.shared_prefix_len = cfg.prefill_len + 1;
+        assert!(run_open_loop(PrefillPolicy::chunked(32), &cfg).is_err());
+    }
+
+    #[test]
+    fn disaggregated_run_migrates_every_decoding_request() {
+        let mut cfg = small();
+        cfg.requests = 8;
+        cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+            cfg.lanes, cfg.max_seq, 32, 16));
+        cfg.roles = vec![ShardRole::Prefill, ShardRole::Decode];
+        let s = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(s.shards, 2);
+        assert_eq!(s.requests, 8);
+        assert_eq!(s.migrations, 8,
+                   "every multi-token request must hand off at its first token");
+        assert_eq!(s.per_shard[0].role, ShardRole::Prefill);
+        assert_eq!(s.per_shard[0].migrations_out, 8);
+        assert_eq!(s.per_shard[0].requests, 0,
+                   "a prefill specialist never runs a request to completion");
+        assert_eq!(s.per_shard[1].role, ShardRole::Decode);
+        assert_eq!(s.per_shard[1].migrations_in, 8);
+        assert_eq!(s.per_shard[1].requests, 8);
+        // deterministic, and the workload itself is topology-invariant
+        let b = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert!((s.makespan_s - b.makespan_s).abs() < 1e-12);
+        let mut homog = cfg.clone();
+        homog.roles = Vec::new();
+        homog.shards = 2;
+        let u = run_open_loop(PrefillPolicy::chunked(32), &homog).unwrap();
+        assert_eq!(s.tokens, u.tokens,
+                   "disaggregation must not change the generated token count");
+        assert_eq!(u.migrations, 0, "unified shards never migrate");
+        let j = s.to_json();
+        assert!(j.contains("\"migrations\": 8"));
+        assert!(j.contains("\"role\": \"prefill\""));
+        assert!(crate::util::Json::parse(&j).is_ok());
+        // roles on a dense pool are a config error, same as the Router
+        cfg.paged = None;
         assert!(run_open_loop(PrefillPolicy::chunked(32), &cfg).is_err());
     }
 

@@ -168,6 +168,12 @@ pub struct ServeMetrics {
     /// Copy-on-write forks performed at admission (partial-page prefix
     /// overlaps copied into a private page).
     pub cow_copies: usize,
+    /// Warm lanes handed OFF this shard after their first token
+    /// (prefill→decode disaggregation); the request completes on the
+    /// importing shard, so `requests` does not count it here.
+    pub migrations_out: usize,
+    /// Migrated lanes rebuilt ON this shard mid-decode.
+    pub migrations_in: usize,
     /// Page occupancy samples (pages in use / total), one per SAMPLED
     /// tick — bounded by decimation, see [`ServeMetrics::record_page_sample`].
     pub page_occupancy_s: Vec<f64>,
@@ -263,6 +269,8 @@ impl ServeMetrics {
             m.prefix_misses += s.prefix_misses;
             m.kv_pages_shared += s.kv_pages_shared;
             m.cow_copies += s.cow_copies;
+            m.migrations_out += s.migrations_out;
+            m.migrations_in += s.migrations_in;
             m.page_occupancy_s.extend_from_slice(&s.page_occupancy_s);
             m.page_frag_s.extend_from_slice(&s.page_frag_s);
         }
@@ -607,6 +615,44 @@ mod tests {
         assert!((m.page_frag_p95() - 0.3).abs() < 1e-12);
         // decode_tps over the merged totals
         assert!((m.decode_tps() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_sums_prefix_share_and_migration_counters() {
+        // the shared-prefix counters (PR 6) and the migration counters
+        // (PR 7) pool by summation: a hit rate computed on the merged
+        // value must equal the pool-level hits / (hits + misses), and a
+        // shard that recorded nothing must not perturb the sums
+        let mut a = ServeMetrics::default();
+        a.prefix_hits = 6;
+        a.prefix_misses = 2;
+        a.kv_pages_shared = 18;
+        a.cow_copies = 3;
+        a.migrations_out = 5;
+        let mut b = ServeMetrics::default();
+        b.prefix_hits = 2;
+        b.prefix_misses = 6;
+        b.kv_pages_shared = 4;
+        b.cow_copies = 1;
+        b.migrations_in = 5;
+        let m = ServeMetrics::merge(&[a.clone(), ServeMetrics::default(), b.clone()]);
+        assert_eq!(m.prefix_hits, 8);
+        assert_eq!(m.prefix_misses, 8);
+        assert_eq!(m.kv_pages_shared, 22);
+        assert_eq!(m.cow_copies, 4);
+        assert_eq!(m.migrations_out, 5);
+        assert_eq!(m.migrations_in, 5);
+        assert!((m.prefix_hit_rate() - 0.5).abs() < 1e-12,
+                "pool hit rate must come from pooled counters, not an \
+                 average of per-shard rates");
+        // per-shard rates straddle the pooled value (0.75 and 0.25), so
+        // an averaged-rate bug would happen to match 0.5 here — pin the
+        // counter sums above, and pin asymmetry with a lopsided merge
+        let m = ServeMetrics::merge(&[a, ServeMetrics::default()]);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(m.kv_pages_shared, 18);
+        assert_eq!(m.migrations_out, 5);
+        assert_eq!(m.migrations_in, 0);
     }
 
     #[test]

@@ -52,10 +52,11 @@ use super::kv::{KvPool, LaneKv, PrefixIndex, ReservationPolicy};
 use super::request::{FinishReason, GenRequest, GenResult};
 
 /// How admission prefill shares the engine with decode iterations.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum PrefillPolicy {
     /// Whole-prompt, whole-pool admission prefill (PR 1 behavior): the
     /// tick's decode iteration waits for the full prefill invocation.
+    #[default]
     Blocking,
     /// Stream prompts in `chunk_len`-token slices interleaved with
     /// decode iterations.
@@ -161,6 +162,37 @@ pub struct Preempted {
     pub lane: usize,
     /// The evicted request's id.
     pub id: u64,
+}
+
+/// A warm, mid-decode request extracted from a prefill shard for
+/// migration to a decode shard (disaggregated serving, PR 7). Carries
+/// the full host-side request state needed to rebuild the lane
+/// remotely; the KV rows themselves move device-to-device (priced by
+/// the modeled backend's migration charge), so only token-level state
+/// travels here.
+#[derive(Debug, Clone)]
+pub struct MigratedLane {
+    pub req: GenRequest,
+    /// Tokens generated on the source so far (≥ 1 — migration happens
+    /// after prefill produced the first token, never before).
+    pub tokens: Vec<i32>,
+    /// Replay-suppression watermark carried across the move: a request
+    /// that migrates while re-generating preempted tokens keeps
+    /// suppressing them on the target, so subscriber streams stay
+    /// byte-identical.
+    pub replayed: usize,
+    pub arrived: Instant,
+    pub admitted_at: Instant,
+    pub first_token_at: Instant,
+    /// Source-shard model time at which the lane was handed off (the
+    /// source backend's `lane_ready_s`); the target's modeled clock
+    /// starts the lane's first decode no earlier. Filled by the engine
+    /// — the scheduler has no clock.
+    pub ready_s: f64,
+    /// The request's SOURCE-shard-local sequence number. The target
+    /// assigns its own local seq at import; this one lets a coordinator
+    /// move its source-seq→global-seq bookkeeping to the target.
+    pub src_seq: u64,
 }
 
 /// What one [`Scheduler::ensure_decode_backing`] pass did.
@@ -976,6 +1008,115 @@ impl Scheduler {
             resume,
         });
         Some(Preempted { lane, id })
+    }
+
+    /// Extract every DECODING-phase request for migration to another
+    /// shard, releasing their pages here (refcount-aware: a shared
+    /// prefix page just drops this lane's claim — the prefix index
+    /// keeps its own retains, so the prefix stays resident on this
+    /// shard for future admissions). Prefilling lanes stay put: their
+    /// chunk state is mid-stream on this shard's prefill engine.
+    ///
+    /// Returns `(lane, state)` pairs; the engine layer notifies the
+    /// backend per lane and stamps each `ready_s`.
+    pub fn take_migratable(&mut self) -> Vec<(usize, MigratedLane)> {
+        let mut out = Vec::new();
+        for lane in 0..self.lanes.len() {
+            let warm = matches!(&self.lanes[lane],
+                                Some(f) if matches!(f.phase, RequestPhase::Decoding));
+            if !warm {
+                continue;
+            }
+            let flight = self.lanes[lane].take().expect("lane checked above");
+            self.pool.release(flight.kv.pages);
+            out.push((lane, MigratedLane {
+                req: flight.req,
+                tokens: flight.tokens,
+                replayed: flight.replayed,
+                arrived: flight.arrived,
+                admitted_at: flight.admitted_at,
+                first_token_at: flight.first_token_at,
+                ready_s: 0.0,
+                src_seq: flight.seq,
+            }));
+        }
+        out
+    }
+
+    /// Pages an [`Scheduler::import_lane`] of `m` would allocate: the
+    /// full span under up-front reservation, the written rows plus one
+    /// decode slot under lazy (growth takes over from there). The
+    /// placement layer checks this against a target's free pages before
+    /// migrating.
+    pub fn import_pages(&self, m: &MigratedLane) -> usize {
+        let rows_written = m.req.prompt.len() + m.tokens.len() - 1;
+        let span = match self.reserve {
+            ReservationPolicy::Upfront =>
+                (m.req.prompt.len() + m.req.max_new_tokens).min(self.pool.max_seq),
+            ReservationPolicy::Lazy => (rows_written + 1).min(self.pool.max_seq),
+        };
+        self.pool.pages_for(span)
+    }
+
+    /// Rebuild a migrated request on this scheduler: allocate fresh
+    /// PRIVATE pages for its written rows (plus its decode reservation)
+    /// and bind a free lane directly in [`RequestPhase::Decoding`].
+    ///
+    /// Shared-prefix state does NOT travel — the migrated copy is
+    /// private (copy-on-migrate) and this scheduler's prefix index is
+    /// untouched. Under lazy reservation a later preemption of this
+    /// lane requeues it HERE, so its recompute prefills locally on this
+    /// shard (documented in DESIGN.md §13).
+    ///
+    /// Returns the lane bound; the engine layer hands the same pages to
+    /// the backend's `import_lane`.
+    pub fn import_lane(&mut self, m: &MigratedLane) -> Result<usize> {
+        if !self.paged {
+            return Err(anyhow!("lane migration requires a paged pool"));
+        }
+        if m.tokens.is_empty() {
+            return Err(anyhow!(
+                "migrated request {} has no first token", m.req.id));
+        }
+        let lane = (0..self.lanes.len())
+            .find(|&l| self.lanes[l].is_none())
+            .ok_or_else(|| anyhow!("no free lane to import request {} into",
+                                   m.req.id))?;
+        let pages = self.pool.alloc(self.import_pages(m))?;
+        let decoded_rows = m.tokens.len() - 1;
+        let kv = match LaneKv::imported(m.req.prompt.len(), decoded_rows,
+                                        pages.clone(), self.pool.page_len,
+                                        self.pool.max_seq) {
+            Ok(kv) => kv,
+            Err(e) => {
+                // the flight was never bound: hand the pages straight back
+                self.pool.release(pages);
+                return Err(e);
+            }
+        };
+        self.lanes[lane] = Some(InFlight {
+            req: m.req.clone(),
+            seq: self.next_seq,
+            arrived: m.arrived,
+            admitted_at: m.admitted_at,
+            phase: RequestPhase::Decoding,
+            kv,
+            tokens: m.tokens.clone(),
+            first_token_at: m.first_token_at,
+            replayed: m.replayed,
+            shared: None,
+        });
+        self.next_seq += 1;
+        Ok(lane)
+    }
+
+    /// Drop the request on `lane` entirely, releasing its pages — the
+    /// rollback path when a backend refuses an import the scheduler
+    /// already bound.
+    pub fn abort_lane(&mut self, lane: usize) {
+        if let Some(flight) = self.lanes.get_mut(lane).and_then(|l| l.take()) {
+            self.pool.release(flight.kv.pages);
+        }
     }
 
     fn retire_if_finished(&mut self, lane: usize, now: Instant) -> Result<Option<Completion>> {

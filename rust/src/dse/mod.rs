@@ -9,8 +9,11 @@
 //! that: exhaustive search with feasibility pruning, which is both exact
 //! and fast (< 1 ms per stage) on the paper's grid sizes.
 
+use crate::anyhow::{anyhow, Result};
 use crate::arch::{DecodeArch, DecodeConfig, PrefillArch, PrefillConfig};
 use crate::config::{DeviceConfig, ModelDims};
+use crate::coordinator::{run_open_loop, OpenLoopConfig, PrefillPolicy, ShardRole,
+                         TopologyConfig};
 
 /// Resource headroom for P&R closure (fraction of each class usable).
 pub const HEADROOM: f64 = 0.88;
@@ -119,6 +122,130 @@ pub fn tune_decode(
     DseResult { best, latency_s, evaluated, feasible, trail }
 }
 
+/// One evaluated topology in a shard-mix search.
+#[derive(Debug, Clone)]
+pub struct ShardMixPoint {
+    pub roles: Vec<ShardRole>,
+    /// Compact label, e.g. `"2u"` or `"1p+1d"`.
+    pub summary: String,
+    /// Whether any shard is a specialist.
+    pub mixed: bool,
+    pub ttft_p95_s: f64,
+    /// Aggregate decode throughput (modeled tokens/s over the makespan).
+    pub decode_tps: f64,
+    pub migrations: usize,
+}
+
+impl ShardMixPoint {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"topology\": \"{}\", \"mixed\": {}, \"ttft_p95_s\": {:.6}, \
+             \"decode_tps\": {:.6}, \"migrations\": {}}}",
+            self.summary, self.mixed, self.ttft_p95_s, self.decode_tps,
+            self.migrations,
+        )
+    }
+}
+
+/// Outcome of [`tune_shard_mix`]: every evaluated topology plus the best
+/// mixed and best homogeneous points (indices into `points`).
+#[derive(Debug, Clone)]
+pub struct ShardMixResult {
+    pub points: Vec<ShardMixPoint>,
+    pub best_mixed: usize,
+    pub best_homogeneous: usize,
+}
+
+impl ShardMixResult {
+    pub fn best_mixed(&self) -> &ShardMixPoint {
+        &self.points[self.best_mixed]
+    }
+
+    pub fn best_homogeneous(&self) -> &ShardMixPoint {
+        &self.points[self.best_homogeneous]
+    }
+
+    pub fn to_json(&self) -> String {
+        let points: Vec<String> = self.points.iter().map(|p| p.to_json()).collect();
+        format!(
+            "{{\"best_mixed\": {}, \"best_homogeneous\": {}, \"points\": [{}]}}",
+            self.best_mixed().to_json(), self.best_homogeneous().to_json(),
+            points.join(", "),
+        )
+    }
+}
+
+/// `a` dominates-or-beats `b` for the shard-mix objective: maximize
+/// aggregate decode throughput, break ties on lower p95 TTFT.
+fn mix_better(a: &ShardMixPoint, b: &ShardMixPoint) -> bool {
+    a.decode_tps > b.decode_tps
+        || (a.decode_tps == b.decode_tps && a.ttft_p95_s < b.ttft_p95_s)
+}
+
+/// Shard-mix search: for a given Poisson (or burst) arrival process at
+/// EQUAL total KV memory, sweep every topology up to `max_shards` —
+/// homogeneous `n`×`Unified` for n in 1..=N, and every disaggregated
+/// split `p`×`Prefill` + `(n-p)`×`Decode` — through the open-loop
+/// harness, and report the best mixed and best homogeneous points.
+///
+/// This is the serving-layer analogue of the per-stage ILP above: the
+/// per-stage search fixes each engine's parallelism; this one fixes how
+/// many engines to specialize per stage. Topologies an uneven budget
+/// split refuses (or that park requests forever) are skipped, not
+/// fatal — they are simply infeasible points.
+pub fn tune_shard_mix(policy: PrefillPolicy, base: &OpenLoopConfig,
+                      max_shards: usize) -> Result<ShardMixResult> {
+    if max_shards < 2 {
+        return Err(anyhow!("shard-mix search needs max_shards >= 2"));
+    }
+    if base.paged.is_none() {
+        return Err(anyhow!(
+            "shard-mix search needs a paged pool: migration moves page tables"));
+    }
+    let mut topologies: Vec<Vec<ShardRole>> = Vec::new();
+    for n in 1..=max_shards {
+        topologies.push(vec![ShardRole::Unified; n]);
+        for p in 1..n {
+            let t = TopologyConfig::disaggregated(p, n - p);
+            topologies.push(t.roles);
+        }
+    }
+    let mut points = Vec::new();
+    for roles in topologies {
+        let mut cfg = base.clone();
+        cfg.shards = roles.len();
+        cfg.roles = roles.clone();
+        let Ok(stats) = run_open_loop(policy, &cfg) else {
+            continue;
+        };
+        let topo = TopologyConfig { roles: roles.clone() };
+        points.push(ShardMixPoint {
+            summary: topo.summary(),
+            mixed: topo.disaggregated_any(),
+            roles,
+            ttft_p95_s: stats.ttft_p95_s,
+            decode_tps: stats.throughput_tps(),
+            migrations: stats.migrations,
+        });
+    }
+    let pick = |want_mixed: bool| -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, p) in points.iter().enumerate() {
+            if p.mixed == want_mixed
+                && best.map(|b| mix_better(p, &points[b])).unwrap_or(true)
+            {
+                best = Some(i);
+            }
+        }
+        best
+    };
+    let best_mixed =
+        pick(true).ok_or_else(|| anyhow!("no feasible mixed topology"))?;
+    let best_homogeneous =
+        pick(false).ok_or_else(|| anyhow!("no feasible homogeneous topology"))?;
+    Ok(ShardMixResult { points, best_mixed, best_homogeneous })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +278,34 @@ mod tests {
         let r = tune_decode(&model, &dev, 512, 512);
         let arch = DecodeArch::new(r.best, model, dev.clone());
         assert!(arch.peak_bandwidth() <= dev.hbm_bw * DECODE_BW_OVERSUB);
+    }
+
+    #[test]
+    fn shard_mix_sweep_covers_all_topologies() {
+        use crate::coordinator::{ArrivalProcess, PagedPoolConfig};
+        let cfg = OpenLoopConfig {
+            requests: 12,
+            arrival: ArrivalProcess::Poisson { rate_rps: 8.0 },
+            min_new_tokens: 8,
+            max_new_tokens: 16,
+            paged: Some(PagedPoolConfig::same_memory_as_dense(4, 320, 32, 16)),
+            ..OpenLoopConfig::default()
+        };
+        let r = tune_shard_mix(PrefillPolicy::chunked(32), &cfg, 2).unwrap();
+        // 1u, 2u, 1p+1d — every topology up to 2 shards is feasible here
+        assert_eq!(r.points.len(), 3);
+        assert!(r.best_mixed().mixed);
+        assert!(!r.best_homogeneous().mixed);
+        assert_eq!(r.best_mixed().summary, "1p+1d");
+        assert!(r.best_mixed().migrations > 0,
+                "a mixed topology must actually migrate");
+        let j = r.to_json();
+        assert!(j.contains("\"topology\": \"1p+1d\""));
+        assert!(crate::util::Json::parse(&j).is_ok());
+        // a dense workload is refused: migration moves page tables
+        let mut dense = cfg.clone();
+        dense.paged = None;
+        assert!(tune_shard_mix(PrefillPolicy::chunked(32), &dense, 2).is_err());
     }
 
     #[test]

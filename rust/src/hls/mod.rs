@@ -22,6 +22,6 @@ pub use module::{
     Dequantizer, DecodeLinear, FhtModule, KvCache, MhaEngine, ModuleKind, ModuleRef,
     ModuleTemplate, NonLinear, NonLinearKind, PrefillLinear, Quantizer, Sampling,
 };
-pub use pipeline_sim::{simulate, Dependency, NodeStats, SimResult};
+pub use pipeline_sim::{simulate, simulate_recurrent, Dependency, NodeStats, SimResult};
 pub use resource::Resources;
 pub use stream::StreamEdge;

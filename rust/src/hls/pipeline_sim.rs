@@ -139,6 +139,22 @@ pub fn simulate(graph: &DataflowGraph, n_tokens: u64, extra_deps: &[Dependency])
     }
 }
 
+/// Simulate `graph` processing `n_tokens` **autoregressively**: the
+/// graph's tail node feeds its head at lag 1, so token `k` cannot enter
+/// the pipeline before token `k-1` has left it. This is the cost of
+/// running decode on a *spatial* design — the recurrence drains the
+/// pipeline every token, collapsing throughput toward the serialized
+/// sum of stage services (Fig. 1(d/e)). [`crate::arch::DecodeArch`]
+/// uses it for its native temporal engine and
+/// [`crate::arch::PrefillArch::recurrent_decode_latency_s`] uses it to
+/// price decode *fallback* on a prefill-specialized pipeline.
+pub fn simulate_recurrent(graph: &DataflowGraph, n_tokens: u64) -> SimResult {
+    assert!(!graph.nodes.is_empty(), "empty graph");
+    let last = graph.nodes.len() - 1;
+    let dep = Dependency { from: last, to: 0, lag: 1 };
+    simulate(graph, n_tokens, &[dep])
+}
+
 /// Kahn topological sort over stream edges; falls back to insertion order
 /// for nodes in (erroneous) cycles so the simulator still terminates.
 fn topo_order(n_nodes: usize, edges: &[(NodeId, NodeId, crate::hls::stream::StreamEdge)]) -> Vec<usize> {
@@ -227,6 +243,20 @@ mod tests {
         let sum = g.serialized_cycles_per_token();
         assert!(serial.makespan_cycles >= 0.95 * n as f64 * sum);
         assert!(pipe.makespan_cycles < 0.6 * serial.makespan_cycles);
+    }
+
+    #[test]
+    fn simulate_recurrent_matches_explicit_lag_dep() {
+        let mut g = DataflowGraph::new();
+        let a = g.invoke(linear("a", 1, 16));
+        let b = g.invoke(linear("b", 1, 16));
+        g.connect(a, b, StreamEdge::activation(1));
+        let dep = Dependency { from: b, to: a, lag: 1 };
+        let explicit = simulate(&g, 64, &[dep]);
+        let helper = simulate_recurrent(&g, 64);
+        assert_eq!(explicit.makespan_cycles, helper.makespan_cycles);
+        // the recurrence must cost more than the free-running pipeline
+        assert!(helper.makespan_cycles > simulate(&g, 64, &[]).makespan_cycles);
     }
 
     #[test]

@@ -8,9 +8,10 @@
 //!               [--prefill-greedy] [--kv-pages P] [--page-len L]
 //!               [--kv-reserve upfront|lazy] [--kv-overcommit F]
 //!               [--prefix-share] [--shared-prefix-len N]
-//!               [--shards N] [--artifacts DIR]
+//!               [--shards N] [--shard-roles SPEC] [--artifacts DIR]
 //! flexllm ablate [--artifacts DIR]
-//! flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
+//! flexllm dse [--device u280|v80] [--stage prefill|decode|shard-mix]
+//!             [--prefill N] [--decode N] [--shards N] [--rate R]
 //! flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
 //! ```
 //!
@@ -22,10 +23,11 @@ use flexllm::anyhow::{anyhow, bail, Result};
 
 use flexllm::arch::{AcceleratorSystem, DecodeArch, PrefillArch};
 use flexllm::config::{DeviceConfig, ModelDims};
-use flexllm::coordinator::{place_shard, place_shard_affine, split_budget, Engine,
-                           ExecBackend, GenRequest, GenResult, KvLayout, MockBackend,
-                           ModeledBackend, PrefillPolicy, ReservationPolicy,
-                           RouterBuilder, ServeMetrics};
+use flexllm::coordinator::{place_migration, place_shard, place_shard_affine,
+                           split_budget, Engine, ExecBackend, GenRequest, GenResult,
+                           KvLayout, MigratedLane, MockBackend, ModeledBackend,
+                           PrefillPolicy, ReservationPolicy, RouterBuilder,
+                           ServeConfig, ServeMetrics, ShardRole, TopologyConfig};
 use flexllm::eval;
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;
@@ -42,7 +44,7 @@ USAGE:
                 [--prefill-greedy] [--kv-pages P] [--page-len L]
                 [--kv-reserve upfront|lazy] [--kv-overcommit F]
                 [--prefix-share] [--shared-prefix-len N]
-                [--shards N] [--artifacts DIR]
+                [--shards N] [--shard-roles SPEC] [--artifacts DIR]
       Serve generation requests through the iteration-level scheduler.
       --spread K        skew budgets: request i gets ~new-tokens·(i%K+1)/K
       --arrival-rate R  stagger submissions at R req/s (pjrt backend)
@@ -94,6 +96,15 @@ USAGE:
                         split the KV budget evenly across shards at equal
                         total memory; pjrt opens one artifact set (device)
                         per shard via the threaded Router
+      --shard-roles SPEC
+                        disaggregate the pool: a comma list of roles, each
+                        optionally repeat-counted — \"2p,2d\", \"1p,1d\",
+                        \"prefill,decode,unified\". Prefill shards admit and
+                        prefill only; at its first token a request's KV
+                        page table migrates to the least-loaded decode
+                        shard (the modeled page transfer is priced before
+                        the first decode tick). Overrides --shards; needs
+                        the paged layout
       Examples:
         flexllm serve --backend modeled --requests 32 --spread 4 \
                       --prefill-policy chunked --prefill-chunk 32
@@ -116,8 +127,13 @@ USAGE:
                       # and ttft against the same run without the flag
   flexllm ablate [--artifacts DIR]
       Run the Table V quantization ablation on the real artifacts.
-  flexllm dse [--device u280|v80] [--stage prefill|decode] [--prefill N] [--decode N]
-      ILP-style design-space exploration for TP/WP/BP.
+  flexllm dse [--device u280|v80] [--stage prefill|decode|shard-mix]
+              [--prefill N] [--decode N] [--shards N] [--rate R]
+      ILP-style design-space exploration for TP/WP/BP — or, with
+      --stage shard-mix, sweep every prefill/decode shard split up to
+      --shards total shards (default 2) on a prefill-heavy Poisson
+      open-loop workload at --rate req/s (default 12) and equal total
+      KV memory, reporting the best mixed vs best homogeneous topology.
   flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
       Run the dataflow pipeline simulator on a stage architecture.
 ";
@@ -217,6 +233,8 @@ fn main() -> Result<()> {
                 &a.get_str("stage", "decode"),
                 a.get_u64("prefill", 1024)?,
                 a.get_u64("decode", 1024)?,
+                a.get_u64("shards", 2)?.max(2) as usize,
+                a.get_f64("rate", 12.0)?,
             )
         }
         "simulate" => {
@@ -386,7 +404,17 @@ fn serve(a: &Args) -> Result<()> {
     let reserve = kv_reserve(a)?;
     let overcommit = a.get_f64("kv-overcommit", 1.0)?;
     let paged = paged_request(a, reserve, overcommit)?;
-    let shards = a.get_u64("shards", 1)?.max(1) as usize;
+    // --shard-roles overrides --shards: the role list IS the topology
+    let topo = match a.get("shard-roles") {
+        Some(spec) => TopologyConfig::parse(spec)?,
+        None => TopologyConfig::unified(a.get_u64("shards", 1)?.max(1) as usize),
+    };
+    let shards = topo.shards();
+    let roles = topo.roles.clone();
+    if topo.disaggregated_any() && paged.is_none() {
+        bail!("--shard-roles needs the paged layout (add --kv-pages/--page-len): \
+               migration moves page tables");
+    }
     let prefix_share = a.has("prefix-share");
     let shared_prefix_len = a.get_u64("shared-prefix-len", 0)? as usize;
     if prefix_share && paged.is_none() {
@@ -398,7 +426,7 @@ fn serve(a: &Args) -> Result<()> {
     };
     match a.get_str("backend", "pjrt").as_str() {
         "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop, policy,
-                             paged.is_some(), reserve, shards, prefix_share),
+                             paged.is_some(), reserve, roles, prefix_share),
         "mock" => {
             let mut engines: Vec<Engine<MockBackend>> = match paged {
                 Some((pages, page_len)) => {
@@ -417,6 +445,7 @@ fn serve(a: &Args) -> Result<()> {
                             Engine::with_reservation(backend, policy, KvLayout::Paged,
                                                      reserve)
                                 .with_shard_id(i)
+                                .with_role(roles[i])
                                 .with_prefix_share(prefix_share)
                         })
                         .collect()
@@ -457,13 +486,15 @@ fn serve(a: &Args) -> Result<()> {
                         .enumerate()
                         .map(|(i, p)| {
                             let mut backend = ModeledBackend::u280_paged(
-                                p, 128, 320, 512, page_len, p, 4);
+                                p, 128, 320, 512, page_len, p, 4)
+                                .with_role(roles[i]);
                             if reserve == ReservationPolicy::Lazy {
                                 backend = backend.with_table_growth();
                             }
                             Engine::with_reservation(backend, policy, KvLayout::Paged,
                                                      reserve)
                                 .with_shard_id(i)
+                                .with_role(roles[i])
                                 .with_prefix_share(prefix_share)
                         })
                         .collect()
@@ -585,6 +616,7 @@ fn drive_sim_sharded<B: ExecBackend>(engines: &mut [Engine<B>], n: usize,
     let place: fn(&[Engine<B>], &GenRequest) -> Option<usize> =
         if engines[0].prefix_share() { place_shard_affine } else { place_shard };
     let mut done: Vec<GenResult> = Vec::new();
+    let mut migrating: VecDeque<MigratedLane> = VecDeque::new();
     loop {
         // place the FIFO head while some shard has pages for it
         while let Some(head) = overflow.front() {
@@ -593,6 +625,11 @@ fn drive_sim_sharded<B: ExecBackend>(engines: &mut [Engine<B>], n: usize,
             engines[sh].submit(req)?;
         }
         if engines.iter().all(|e| !e.has_work()) {
+            if !migrating.is_empty() {
+                return Err(anyhow!(
+                    "migration stuck: no decode shard can fit a migrated page \
+                     table (add pages or decode shards)"));
+            }
             if overflow.is_empty() {
                 break;
             }
@@ -600,11 +637,11 @@ fn drive_sim_sharded<B: ExecBackend>(engines: &mut [Engine<B>], n: usize,
                 "placement stuck: a request's reservation exceeds every shard's \
                  pool (add pages or lower --kv-overcommit / --shards)"));
         }
-        for (sh, engine) in engines.iter_mut().enumerate() {
-            if !engine.has_work() {
+        for sh in 0..engines.len() {
+            if !engines[sh].has_work() {
                 continue;
             }
-            let report = engine.step()?;
+            let report = engines[sh].step()?;
             if stream {
                 for ev in &report.events {
                     println!("  [req {} shard {sh}] #{} tok {}{}", ev.id, ev.index,
@@ -612,6 +649,15 @@ fn drive_sim_sharded<B: ExecBackend>(engines: &mut [Engine<B>], n: usize,
                 }
             }
             done.extend(report.completed.into_iter().map(|(_, r)| r));
+            if engines[sh].role() == ShardRole::Prefill {
+                migrating.extend(engines[sh].take_migratable());
+            }
+        }
+        // re-home finished prefills onto the freest decode shard, head-first
+        while let Some(head) = migrating.front() {
+            let Some(dst) = place_migration(engines, head) else { break };
+            let m = migrating.pop_front().expect("front checked above");
+            engines[dst].import_migrated(m)?;
         }
     }
     done.sort_by_key(|r| r.id);
@@ -623,8 +669,13 @@ fn print_shard_lines(per: &[ServeMetrics]) {
         return;
     }
     for (i, m) in per.iter().enumerate() {
+        let mig = if m.migrations_out + m.migrations_in > 0 {
+            format!("  migrations out {} in {}", m.migrations_out, m.migrations_in)
+        } else {
+            String::new()
+        };
         println!("  shard {i}: {} requests  peak concurrency {}  pages peak {}/{}  \
-                  grown {}  preemptions {}",
+                  grown {}  preemptions {}{mig}",
                  m.requests, m.peak_active, m.kv_pages_peak, m.kv_pages_total,
                  m.kv_pages_grown, m.preemptions);
     }
@@ -633,9 +684,10 @@ fn print_shard_lines(per: &[ServeMetrics]) {
 #[allow(clippy::too_many_arguments)]
 fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool,
               stop: Vec<i32>, policy: PrefillPolicy, paged: bool,
-              reserve: ReservationPolicy, shards: usize, prefix_share: bool)
+              reserve: ReservationPolicy, roles: Vec<ShardRole>, prefix_share: bool)
     -> Result<()>
 {
+    let shards = roles.len();
     let artifacts = a.get_str("artifacts", "artifacts");
     println!("prefill policy requested: {}", describe_policy(policy));
     let layout = if paged {
@@ -664,13 +716,14 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
     if shards > 1 {
         println!("engine shards: {shards} (one artifact runtime per shard)");
     }
-    let router = RouterBuilder::new()
+    // the whole knob ladder collapses into one validated config
+    let cfg = ServeConfig::default()
         .policy(policy)
         .layout(layout)
         .reserve(reserve)
-        .shards(shards)
         .prefix_share(prefix_share)
-        .spawn(artifacts.to_string())?;
+        .roles(roles);
+    let router = RouterBuilder::from_config(cfg).spawn(artifacts.to_string())?;
     if stream {
         let events = router.subscribe()?;
         std::thread::spawn(move || {
@@ -765,9 +818,42 @@ fn print_summary(results: &[GenResult], m: &ServeMetrics, lanes: usize) {
     }
 }
 
-fn dse(device: &str, stage: &str, prefill: u64, decode: u64) -> Result<()> {
+fn dse(device: &str, stage: &str, prefill: u64, decode: u64, max_shards: usize,
+       rate: f64) -> Result<()> {
     let model = ModelDims::llama32_1b();
     let dev = device_of(device)?;
+    if stage == "shard-mix" {
+        use flexllm::coordinator::{ArrivalProcess, OpenLoopConfig, PagedPoolConfig};
+        {
+            // prefill-heavy: 128-token prompts against 16..48-token
+            // budgets, Poisson arrivals, equal total KV memory per
+            // topology (the pool splits across however many shards)
+            let cfg = OpenLoopConfig {
+                requests: 48,
+                arrival: ArrivalProcess::Poisson { rate_rps: rate },
+                min_new_tokens: 16,
+                max_new_tokens: 48,
+                paged: Some(PagedPoolConfig::same_memory_as_dense(4, 320, 32, 16)),
+                ..OpenLoopConfig::default()
+            };
+            let r = flexllm::dse::tune_shard_mix(PrefillPolicy::chunked(32), &cfg,
+                                                 max_shards)?;
+            println!("shard-mix DSE (poisson {rate} req/s, prefill-heavy, equal \
+                      total KV, up to {max_shards} shards):");
+            for p in &r.points {
+                println!("  {:<10} ttft p95 {:>10}  decode {:>8.1} tok/s  \
+                          migrations {}",
+                         p.summary, fmt_secs(p.ttft_p95_s), p.decode_tps,
+                         p.migrations);
+            }
+            let (bm, bh) = (r.best_mixed(), r.best_homogeneous());
+            println!("  best mixed:       {} (ttft p95 {}, {:.1} tok/s)",
+                     bm.summary, fmt_secs(bm.ttft_p95_s), bm.decode_tps);
+            println!("  best homogeneous: {} (ttft p95 {}, {:.1} tok/s)",
+                     bh.summary, fmt_secs(bh.ttft_p95_s), bh.decode_tps);
+            return Ok(());
+        }
+    }
     match stage {
         "prefill" => {
             let r = flexllm::dse::tune_prefill(&model, &dev, prefill);
