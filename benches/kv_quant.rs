@@ -1,0 +1,147 @@
+//! Quantized-KV sweep: admitted concurrency, p95 TTFT and preemption
+//! behavior vs page codec × pool overcommit × shared-prefix fraction,
+//! on the U280-modeled backend — every pool re-tiled to the SAME
+//! page-buffer byte budget (`retiled_for_codec`), so the int8 columns
+//! read as "what the same HBM buys at half the bytes per row".
+//!
+//! Two headline numbers lead the output and are gated in CI against
+//! the committed `BENCH_kv_quant.json` floors:
+//!
+//! * `concurrency_gain_int8_vs_fp16` — peak admitted concurrency of
+//!   the INT8 pool over its fp16 twin on the page-bound burst workload
+//!   (the tier-1 acceptance experiment of `tests/kv_quant.rs`; 2.0 is
+//!   the geometric factor, the floor gates ≥ 1.8).
+//! * `argmax_agreement` — mean argmax agreement of the quantized
+//!   stream against fp over the pinned prompt set (the fidelity the
+//!   capacity is bought with; the floor gates ≥ 0.95).
+//!
+//! Output: `kv_quant.json` in the working directory (override with the
+//! `KV_QUANT_OUT` environment variable), also echoed to stdout.
+
+use flexllm::coordinator::{run_open_loop, ArrivalProcess, MockBackend,
+                           OpenLoopConfig, PageCodec, PagedPoolConfig,
+                           PrefillPolicy, ReservationPolicy};
+
+const VOCAB: usize = 512;
+const PAGE_LEN: usize = 16;
+const CODECS: &[PageCodec] = &[PageCodec::Fp16, PageCodec::Int8Sym];
+const OVERCOMMITS: &[f64] = &[1.0, 2.0];
+const SHARED_FRACS: &[f64] = &[0.0, 0.8];
+
+/// The tier-1 capacity experiment: one burst of 16 × 256-token prompts
+/// against a pool holding the dense footprint of 4 lanes — 17 pages
+/// per upfront admission, so fp16 page-binds at 4 while int8 holds 8.
+fn headline_cfg(codec: PageCodec) -> OpenLoopConfig {
+    OpenLoopConfig {
+        lanes: 4,
+        prefill_len: 256,
+        max_seq: 272,
+        vocab: VOCAB,
+        requests: 16,
+        arrival: ArrivalProcess::Burst,
+        bursts: 1,
+        burst_gap_s: 0.0,
+        burst_jitter_s: 0.001,
+        min_new_tokens: 2,
+        max_new_tokens: 8,
+        paged: Some(PagedPoolConfig::same_memory_as_dense(4, 272, PAGE_LEN, 32)
+                        .retiled_for_codec(codec)),
+        reserve: ReservationPolicy::Upfront,
+        kv_quant: codec,
+        seed: 0xC0DEC,
+        ..OpenLoopConfig::default()
+    }
+}
+
+/// Sweep point: saturating two-burst workload over an overcommitted
+/// lazy pool, optionally 80% shared-prefix — codec × memory pressure ×
+/// sharing, all at the fp16 pool's byte budget.
+fn sweep_cfg(codec: PageCodec, overcommit: f64, shared_frac: f64)
+    -> OpenLoopConfig
+{
+    OpenLoopConfig {
+        lanes: 4,
+        prefill_len: 128,
+        max_seq: 320,
+        vocab: VOCAB,
+        requests: 48,
+        arrival: ArrivalProcess::Burst,
+        bursts: 2,
+        burst_gap_s: 1.0,
+        burst_jitter_s: 0.05,
+        min_new_tokens: 16,
+        max_new_tokens: 64,
+        paged: Some(PagedPoolConfig::overcommit_of_dense(4, 320, PAGE_LEN, 16,
+                                                         overcommit)
+                        .retiled_for_codec(codec)),
+        reserve: ReservationPolicy::Lazy,
+        shared_prefix_len: if shared_frac > 0.0 { 112 } else { 0 },
+        prefix_groups: 2,
+        shared_frac,
+        prefix_share: shared_frac > 0.0,
+        kv_quant: codec,
+        seed: 0x5EED,
+        ..OpenLoopConfig::default()
+    }
+}
+
+/// Mean argmax agreement over the pinned tier-1 prompt set.
+fn pinned_agreement() -> f64 {
+    let mut total = 0.0;
+    for p in 0..40 {
+        let prompt: Vec<i32> =
+            (0..12).map(|j| ((p * 31 + j * 7) % VOCAB) as i32).collect();
+        total += MockBackend::argmax_agreement(&prompt, 32, VOCAB, PAGE_LEN);
+    }
+    total / 40.0
+}
+
+fn main() {
+    let policy = PrefillPolicy::chunked(32);
+
+    let fp = run_open_loop(policy, &headline_cfg(PageCodec::Fp16))
+        .expect("fp16 headline");
+    let q = run_open_loop(policy, &headline_cfg(PageCodec::Int8Sym))
+        .expect("int8 headline");
+    let gain = q.peak_active as f64 / (fp.peak_active as f64).max(1e-12);
+    let agreement = pinned_agreement();
+    println!("headline: peak {} (int8) vs {} (fp16) = {gain:.2}x at equal \
+              memory | argmax agreement {agreement:.4}",
+             q.peak_active, fp.peak_active);
+
+    let mut entries: Vec<String> = Vec::new();
+    for &codec in CODECS {
+        for &overcommit in OVERCOMMITS {
+            for &shared_frac in SHARED_FRACS {
+                let stats =
+                    run_open_loop(policy,
+                                  &sweep_cfg(codec, overcommit, shared_frac))
+                        .expect("sweep open loop");
+                entries.push(format!(
+                    "{{\"codec\": \"{}\", \"overcommit\": {overcommit:.2}, \
+                     \"shared_frac\": {shared_frac:.2}, \"stats\": {}}}",
+                    codec.name(), stats.to_json()));
+                println!(
+                    "codec {:>4} over {overcommit:.1} shared {shared_frac:.1}: \
+                     peak {:>2} | ttft p95 {:.4}s | preempt {:>3} | \
+                     grown {:>4} | dequant rows {:>8} | pages {}",
+                    codec.name(), stats.peak_active, stats.ttft_p95_s,
+                    stats.preemptions, stats.kv_pages_grown,
+                    stats.dequant_rows, stats.kv_pages_total);
+            }
+        }
+    }
+
+    let doc = format!(
+        "{{\"bench\": \"kv_quant\", \"backend\": \"modeled-u280\", \
+         \"page_len\": {PAGE_LEN}, \
+         \"headline\": {{\"concurrency_gain_int8_vs_fp16\": {gain:.4}, \
+         \"argmax_agreement\": {agreement:.4}, \
+         \"peak_active_int8\": {}, \"peak_active_fp16\": {}}}, \
+         \"points\": [{}]}}\n",
+        q.peak_active, fp.peak_active, entries.join(", "));
+    let out = std::env::var("KV_QUANT_OUT")
+        .unwrap_or_else(|_| "kv_quant.json".to_string());
+    std::fs::write(&out, &doc).expect("write kv_quant.json");
+    println!("\nwrote {} sweep points to {out}", entries.len());
+}

@@ -42,8 +42,9 @@ from jax._src.lib import xla_client as xc
 
 from . import corpus
 from .model import (ModelConfig, decode_step, decode_step_lanes, decode_step_paged,
-                    hmt_memattn, llama32_1b, prefill_chunk, prefill_chunk_paged,
-                    prefill_logits, prefill_serve, summary_embedding, tiny)
+                    decode_step_paged_kv8, hmt_memattn, llama32_1b, prefill_chunk,
+                    prefill_chunk_paged, prefill_chunk_paged_kv8, prefill_logits,
+                    prefill_serve, summary_embedding, tiny)
 from .quantize import SCHEMES, prepare
 from .train_tiny import eval_ppl_fp, train
 
@@ -292,6 +293,58 @@ def main() -> None:
         [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
          tensor("k_pages", "f32", page_cache_shape),
          tensor("v_pages", "f32", page_cache_shape)])
+
+    # INT8 paged KV: the same paged pair with i8 page pools and [L, P]
+    # f32 per-page scale headers threaded through as state — writes
+    # quantize against the touched page's fresh amax inside the graph,
+    # the attention gather dequantizes in-graph, and the halved
+    # bytes-per-row lets the same pool byte budget hold 2× the pages.
+    # The manifest names the codec so the Rust PjrtBackend can DECLARE
+    # it in its caps (anything partial is served as fp16).
+    header_shape = (cfg.n_layers, n_phys_pages)
+    page_cache_i8 = jax.ShapeDtypeStruct(page_cache_shape, jnp.int8)
+    header_spec = jax.ShapeDtypeStruct(header_shape, jnp.float32)
+    manifest["serving"]["kv_codec"] = "int8_sym"
+    manifest["serving"]["kv_header_shape"] = list(header_shape)
+
+    fn_paged_kv8 = functools.partial(decode_step_paged_kv8, qp_q3, cfg, scheme_q3)
+    paged_kv8_specs = [jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                       jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                       jax.ShapeDtypeStruct((SERVE_BATCH, pages_per_lane), jnp.int32),
+                       page_cache_i8, page_cache_i8, header_spec, header_spec]
+    manifest["artifacts"]["decode_paged_q3_kv8"] = dump(
+        fn_paged_kv8, paged_kv8_specs, out / "decode_paged_q3_kv8.hlo.txt",
+        [tensor("token", "i32", (SERVE_BATCH,)), tensor("pos", "i32", (SERVE_BATCH,)),
+         tensor("page_table", "i32", (SERVE_BATCH, pages_per_lane)),
+         tensor("k_pages", "i8", page_cache_shape),
+         tensor("v_pages", "i8", page_cache_shape),
+         tensor("k_scale", "f32", header_shape),
+         tensor("v_scale", "f32", header_shape)],
+        [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
+         tensor("k_pages", "i8", page_cache_shape),
+         tensor("v_pages", "i8", page_cache_shape),
+         tensor("k_scale", "f32", header_shape),
+         tensor("v_scale", "f32", header_shape)])
+
+    fn_chunk_kv8 = functools.partial(prefill_chunk_paged_kv8, qp_q3, cfg, scheme_q3)
+    chunk_kv8_specs = [jax.ShapeDtypeStruct((SERVE_BATCH, SERVE_CHUNK), jnp.int32),
+                       jax.ShapeDtypeStruct((SERVE_BATCH,), jnp.int32),
+                       jax.ShapeDtypeStruct((SERVE_BATCH, pages_per_lane), jnp.int32),
+                       page_cache_i8, page_cache_i8, header_spec, header_spec]
+    manifest["artifacts"]["prefill_chunk_paged_q3_kv8"] = dump(
+        fn_chunk_kv8, chunk_kv8_specs, out / "prefill_chunk_paged_q3_kv8.hlo.txt",
+        [tensor("tokens", "i32", (SERVE_BATCH, SERVE_CHUNK)),
+         tensor("pos", "i32", (SERVE_BATCH,)),
+         tensor("page_table", "i32", (SERVE_BATCH, pages_per_lane)),
+         tensor("k_pages", "i8", page_cache_shape),
+         tensor("v_pages", "i8", page_cache_shape),
+         tensor("k_scale", "f32", header_shape),
+         tensor("v_scale", "f32", header_shape)],
+        [tensor("logits", "f32", (SERVE_BATCH, cfg.vocab)),
+         tensor("k_pages", "i8", page_cache_shape),
+         tensor("v_pages", "i8", page_cache_shape),
+         tensor("k_scale", "f32", header_shape),
+         tensor("v_scale", "f32", header_shape)])
 
     # -------------------------------------------- greedy generation reference
     print("computing greedy generation reference (q3, 32 steps)")

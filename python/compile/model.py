@@ -887,6 +887,231 @@ def prefill_chunk_paged(qparams, cfg: ModelConfig, scheme: QuantScheme, tokens, 
 
 
 # ---------------------------------------------------------------------------
+# Quantized (INT8) paged KV cache graphs
+# ---------------------------------------------------------------------------
+#
+# Page-granular KV quantization: the pools store INT8 rows
+# ([L, P, KV, page_len, hd] i8) and each physical page carries one
+# symmetric scale per K and per V ([L, P] f32 side tables — the "page
+# header"). Writes land fp, then the touched page is re-scaled against
+# its fresh amax and re-quantized (quantize-on-scatter); the attention
+# gather multiplies each page by its scale before use (dequant-on-
+# gather), so the fp values never round-trip through host memory and
+# HBM traffic on the gather path is halved. This is the per-page
+# refinement of the scheme-level ``sta8`` attention mode: the page
+# scale replaces the per-tensor calibration scale, so attention runs
+# fp over the dequantized rows.
+
+
+def _gather_pages_dequant(pages_li, scale_li, page_table):
+    """[P, KV, page_len, hd] i8 + [P] f32 + [B, MP] -> [B*KV, MP*page_len, hd].
+
+    :func:`_gather_pages` with the in-graph dequantizer fused in: each
+    gathered page is widened to f32 and multiplied by its header scale,
+    so downstream attention sees the logical fp cache view while the
+    resident pool stays INT8.
+    """
+    b, mp = page_table.shape
+    _, nkv, page_len, hd = pages_li.shape
+    g = pages_li[page_table].astype(jnp.float32)   # [B, MP, KV, page_len, hd]
+    g = g * scale_li[page_table][:, :, None, None, None]
+    g = g.transpose(0, 2, 1, 3, 4)                 # [B, KV, MP, page_len, hd]
+    return g.reshape(b * nkv, mp * page_len, hd)
+
+
+def _requant_pages(pages_f32):
+    """Re-quantize a fp page pool view: [P, KV, page_len, hd] -> (i8, [P] scales).
+
+    Each page's scale is ``max(amax, eps) / 127`` over its resident
+    rows — the hardware scatter unit restamps only the page it wrote,
+    but the graph restamps every page uniformly to keep shapes static.
+    Untouched pages hold exact int8 grid points, so their recomputed
+    scale and re-rounding reproduce the stored bytes bit-for-bit.
+    """
+    amax = jnp.max(jnp.abs(pages_f32), axis=(1, 2, 3))            # [P]
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(pages_f32 / scale[:, None, None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_step_paged_kv8(qparams, cfg: ModelConfig, scheme: QuantScheme, token,
+                          pos, page_table, k_pages, v_pages, k_scale, v_scale):
+    """One decode iteration over an INT8-quantized PAGED KV cache.
+
+    Same contract as :func:`decode_step_paged` plus the page headers:
+    caches are [L, P, KV, page_len, hd] **i8**, ``k_scale``/``v_scale``
+    [L, P] f32 carry one symmetric scale per physical page. The new
+    K/V row is computed fp (RoPE'd), scattered into the lane's current
+    page, and that page is re-quantized against its fresh amax;
+    attention gathers through the page table with the dequantizer
+    fused in. Returns (logits [B, V], k', v', k_scale', v_scale').
+    """
+    b = token.shape[0]
+    page_len = k_pages.shape[3]
+    mp = page_table.shape[1]
+    max_ctx = mp * page_len
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = nh // nkv
+    params = qparams.get("params", qparams)
+    layers = params["layers"]
+
+    x = params["embed"][token]                                  # [B, d]
+    cos_l, sin_l = rope_angles(pos.astype(jnp.float32), hd, cfg.rope_theta)
+    cos_q = jnp.repeat(cos_l, nh, axis=0)[:, None, :]           # [B*H, 1, hd/2]
+    sin_q = jnp.repeat(sin_l, nh, axis=0)[:, None, :]
+    cos_k = jnp.repeat(cos_l, nkv, axis=0)[:, None, :]          # [B*KV, 1, hd/2]
+    sin_k = jnp.repeat(sin_l, nkv, axis=0)[:, None, :]
+    positions = jnp.arange(max_ctx)
+    lane_mask = jnp.where(positions[None, :] <= pos[:, None], 0.0, NEG_INF)
+    dec_mask = jnp.broadcast_to(
+        lane_mask[:, None, None, :], (b, nkv, rep, max_ctx)
+    ).reshape(b * nkv, rep, max_ctx)
+    write_page = jnp.take_along_axis(page_table, (pos // page_len)[:, None],
+                                     axis=1)[:, 0]              # [B]
+    write_off = pos % page_len                                  # [B]
+
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"], b)
+        q = _linear(lp["wq"], h, scheme, cfg, "decode")
+        k = _linear(lp["wk"], h, scheme, cfg, "decode")
+        v = _linear(lp["wv"], h, scheme, cfg, "decode")
+        q = rope(q.reshape(b * nh, 1, hd), cos_q, sin_q)
+        k = rope(k.reshape(b * nkv, 1, hd), cos_k, sin_k)
+        v = v.reshape(b * nkv, 1, hd)
+
+        # quantize-on-scatter: dequantize the layer's pool view, land
+        # the fp row, then restamp the page scales and re-quantize
+        kf = k_pages[li].astype(jnp.float32) * k_scale[li][:, None, None, None]
+        vf = v_pages[li].astype(jnp.float32) * v_scale[li][:, None, None, None]
+        kf = kf.at[write_page, :, write_off, :].set(k.reshape(b, nkv, hd))
+        vf = vf.at[write_page, :, write_off, :].set(v.reshape(b, nkv, hd))
+        kq8, ks = _requant_pages(kf)
+        vq8, vs = _requant_pages(vf)
+        k_pages = k_pages.at[li].set(kq8)
+        v_pages = v_pages.at[li].set(vq8)
+        k_scale = k_scale.at[li].set(ks)
+        v_scale = v_scale.at[li].set(vs)
+
+        kall = _gather_pages_dequant(k_pages[li], ks, page_table)
+        vall = _gather_pages_dequant(v_pages[li], vs, page_table)
+
+        def group_q(t):   # [B*H, 1, hd] → [B*KV, rep, hd]
+            return t.reshape(b * nkv, rep, hd)
+
+        attn = attention_fp(group_q(q), kall, vall, dec_mask)
+
+        attn = attn.reshape(b, nh * hd)
+        x = x + _linear(lp["wo"], attn, scheme, cfg, "decode")
+
+        hf = rmsnorm(x, lp["ffn_norm"], b)
+        gate = _linear(lp["wg"], hf, scheme, cfg, "decode")
+        up = _linear(lp["wu"], hf, scheme, cfg, "decode")
+        act = swiglu(gate, up, b)
+        if scheme.fht_down:
+            act = fht(act, b)
+        x = x + _linear(lp["wd"], act, scheme, cfg, "decode")
+
+    logits = _lm_head(qparams, cfg, scheme, x, "decode")
+    return logits, k_pages, v_pages, k_scale, v_scale
+
+
+def prefill_chunk_paged_kv8(qparams, cfg: ModelConfig, scheme: QuantScheme,
+                            tokens, pos, page_table, k_pages, v_pages,
+                            k_scale, v_scale):
+    """A C-token prefill chunk scattered into INT8-quantized pages.
+
+    Same contract as :func:`prefill_chunk_paged` plus the [L, P] f32
+    page headers (see :func:`decode_step_paged_kv8`): chunk K/V rows
+    are computed fp, scattered into their pages, and every touched
+    page is re-quantized against its fresh amax; attention gathers
+    with the dequantizer fused in. Returns (logits [B, V], k', v',
+    k_scale', v_scale').
+    """
+    b, c = tokens.shape
+    mp = page_table.shape[1]
+    page_len = k_pages.shape[3]
+    max_ctx = mp * page_len
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    rep = nh // nkv
+    params = qparams.get("params", qparams)
+    layers = params["layers"]
+
+    x = params["embed"][tokens].reshape(b * c, cfg.d_model)
+    chunk_pos = pos[:, None] + jnp.arange(c)[None, :]                 # [B, C]
+    cos_f, sin_f = rope_angles(chunk_pos.reshape(-1).astype(jnp.float32), hd,
+                               cfg.rope_theta)                        # [B*C, hd/2]
+    cos_l = cos_f.reshape(b, c, hd // 2)
+    sin_l = sin_f.reshape(b, c, hd // 2)
+    cos_q = jnp.repeat(cos_l, nh, axis=0)                             # [B*H, C, hd/2]
+    sin_q = jnp.repeat(sin_l, nh, axis=0)
+    cos_k = jnp.repeat(cos_l, nkv, axis=0)                            # [B*KV, C, hd/2]
+    sin_k = jnp.repeat(sin_l, nkv, axis=0)
+    positions = jnp.arange(max_ctx)
+    lane_mask = jnp.where(positions[None, None, :] <= chunk_pos[:, :, None],
+                          0.0, NEG_INF)                               # [B, C, max_ctx]
+    chunk_mask = jnp.broadcast_to(
+        lane_mask[:, None, None, :, :], (b, nkv, rep, c, max_ctx)
+    ).reshape(b * nkv, rep * c, max_ctx)
+    write_page = jnp.take_along_axis(page_table, chunk_pos // page_len,
+                                     axis=1)                          # [B, C]
+    write_off = chunk_pos % page_len                                  # [B, C]
+
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["attn_norm"], b * c)
+        q = _linear(lp["wq"], h, scheme, cfg, "decode")
+        k = _linear(lp["wk"], h, scheme, cfg, "decode")
+        v = _linear(lp["wv"], h, scheme, cfg, "decode")
+        q = q.reshape(b, c, nh, hd).transpose(0, 2, 1, 3).reshape(b * nh, c, hd)
+        k = k.reshape(b, c, nkv, hd).transpose(0, 2, 1, 3).reshape(b * nkv, c, hd)
+        v = v.reshape(b, c, nkv, hd).transpose(0, 2, 1, 3).reshape(b * nkv, c, hd)
+        q = rope(q, cos_q, sin_q)
+        k = rope(k, cos_k, sin_k)
+
+        # quantize-on-scatter over the whole chunk: [B, C] page/offset
+        # index arrays broadcast together, selecting [B, C, KV, hd]
+        # fp slots, then the pool is restamped and re-quantized
+        knew = k.reshape(b, nkv, c, hd).transpose(0, 2, 1, 3)         # [B, C, KV, hd]
+        vnew = v.reshape(b, nkv, c, hd).transpose(0, 2, 1, 3)
+        kf = k_pages[li].astype(jnp.float32) * k_scale[li][:, None, None, None]
+        vf = v_pages[li].astype(jnp.float32) * v_scale[li][:, None, None, None]
+        kf = kf.at[write_page, :, write_off, :].set(knew)
+        vf = vf.at[write_page, :, write_off, :].set(vnew)
+        kq8, ks = _requant_pages(kf)
+        vq8, vs = _requant_pages(vf)
+        k_pages = k_pages.at[li].set(kq8)
+        v_pages = v_pages.at[li].set(vq8)
+        k_scale = k_scale.at[li].set(ks)
+        v_scale = v_scale.at[li].set(vs)
+
+        kall = _gather_pages_dequant(k_pages[li], ks, page_table)
+        vall = _gather_pages_dequant(v_pages[li], vs, page_table)
+
+        def group_q(t):   # [B*H, C, hd] → [B*KV, rep*C, hd]
+            return t.reshape(b, nkv, rep, c, hd).reshape(b * nkv, rep * c, hd)
+
+        def ungroup(t):   # inverse of group_q
+            return t.reshape(b, nkv, rep, c, hd).reshape(b * nh, c, hd)
+
+        attn = ungroup(attention_fp(group_q(q), kall, vall, chunk_mask))
+
+        attn = attn.reshape(b, nh, c, hd).transpose(0, 2, 1, 3).reshape(b * c, nh * hd)
+        x = x + _linear(lp["wo"], attn, scheme, cfg, "decode")
+
+        hf = rmsnorm(x, lp["ffn_norm"], b * c)
+        gate = _linear(lp["wg"], hf, scheme, cfg, "decode")
+        up = _linear(lp["wu"], hf, scheme, cfg, "decode")
+        act = swiglu(gate, up, b * c)
+        if scheme.fht_down:
+            act = fht(act, b * c)
+        x = x + _linear(lp["wd"], act, scheme, cfg, "decode")
+
+    last = x.reshape(b, c, cfg.d_model)[:, -1, :]
+    logits = _lm_head(qparams, cfg, scheme, last, "decode")
+    return logits, k_pages, v_pages, k_scale, v_scale
+
+
+# ---------------------------------------------------------------------------
 # HMT plug-in: memory cross-attention (Case Study 2)
 # ---------------------------------------------------------------------------
 

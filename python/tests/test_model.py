@@ -12,11 +12,13 @@ from compile.model import (
     decode_step,
     decode_step_lanes,
     decode_step_paged,
+    decode_step_paged_kv8,
     forward_fp,
     hmt_memattn,
     init_params,
     prefill_chunk,
     prefill_chunk_paged,
+    prefill_chunk_paged_kv8,
     prefill_logits,
     prefill_serve,
 )
@@ -384,6 +386,128 @@ def test_paged_prefill_then_paged_decode_stream(setup, q3):
         tok_p = jnp.argmax(logits_p, -1).astype(jnp.int32)
         np.testing.assert_array_equal(np.asarray(tok_d), np.asarray(tok_p),
                                       err_msg=f"greedy stream diverged at step {i}")
+
+
+def kv8_empty_pool(cfg, n_pages, page_len):
+    """Zero INT8 pools + identity (1.0) scale headers, the reset state the
+    Rust PjrtBackend threads into the first kv8 invocation."""
+    kp = jnp.zeros((cfg.n_layers, n_pages, cfg.n_kv_heads, page_len,
+                    cfg.head_dim), jnp.int8)
+    scale = jnp.ones((cfg.n_layers, n_pages), jnp.float32)
+    return kp, jnp.zeros_like(kp), scale, scale
+
+
+def test_prefill_chunk_paged_kv8_matches_fp_argmax(setup):
+    """Quantize-on-scatter admission: chunked prefill through INT8 pages
+    must yield the same greedy first token as the fp paged path, with
+    int8-grid pools and strictly positive per-page scale headers.
+
+    Runs under the noquant scheme so the only difference between the two
+    graphs is the page codec itself: under q3 the fp reference runs sta8
+    int8 attention with static calib scales — a *different* approximation
+    whose argmax legitimately diverges from per-page quant at vocab 64."""
+    cfg, params, calib = setup
+    scheme = SCHEMES["noquant"]
+    qp = prepare(params, cfg, scheme, calib)
+    page_len = 8
+    mp = cfg.max_seq // page_len
+    tokens = jax.random.randint(jax.random.PRNGKey(24), (2, 8), 0, cfg.vocab)
+    table = jnp.asarray(np.arange(2 * mp, dtype=np.int32).reshape(2, mp))
+
+    kp = jnp.zeros((cfg.n_layers, 2 * mp + 1, cfg.n_kv_heads, page_len,
+                    cfg.head_dim), jnp.float32)
+    vp = jnp.zeros_like(kp)
+    kq, vq, ks, vs = kv8_empty_pool(cfg, 2 * mp + 1, page_len)
+    want = got = None
+    for start in (0, 4):
+        pos = jnp.full((2,), start, jnp.int32)
+        want, kp, vp = prefill_chunk_paged(qp, cfg, scheme,
+                                           tokens[:, start:start + 4],
+                                           pos, table, kp, vp)
+        got, kq, vq, ks, vs = prefill_chunk_paged_kv8(
+            qp, cfg, scheme, tokens[:, start:start + 4], pos, table,
+            kq, vq, ks, vs)
+    assert kq.dtype == jnp.int8 and vq.dtype == jnp.int8
+    assert ks.shape == (cfg.n_layers, 2 * mp + 1)
+    assert float(jnp.min(ks)) > 0.0 and float(jnp.min(vs)) > 0.0
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.1, f"kv8 prefill logits diverged: rel={rel}"
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(got, -1)),
+                                  np.asarray(jnp.argmax(want, -1)))
+
+
+def test_paged_kv8_decode_argmax_agreement(setup):
+    """Teacher-forced decode: feeding the fp paged stream's greedy tokens
+    into both graphs, the INT8-page decode must agree with the fp paged
+    decode on (nearly) every next-token argmax — the per-page
+    reconstruction error stays below the argmax margin.
+
+    noquant scheme for the same reason as the prefill test: the codec is
+    the only delta under test, not the sta8 attention approximation."""
+    cfg, params, calib = setup
+    scheme = SCHEMES["noquant"]
+    qp = prepare(params, cfg, scheme, calib)
+    page_len = 8
+    mp = cfg.max_seq // page_len
+    tokens = jax.random.randint(jax.random.PRNGKey(25), (2, 8), 0, cfg.vocab)
+    table = jnp.asarray(np.arange(2 * mp, dtype=np.int32).reshape(2, mp))
+
+    kp = jnp.zeros((cfg.n_layers, 2 * mp + 1, cfg.n_kv_heads, page_len,
+                    cfg.head_dim), jnp.float32)
+    vp = jnp.zeros_like(kp)
+    kq, vq, ks, vs = kv8_empty_pool(cfg, 2 * mp + 1, page_len)
+    lf = lq = None
+    for start in (0, 4):
+        pos = jnp.full((2,), start, jnp.int32)
+        lf, kp, vp = prefill_chunk_paged(qp, cfg, scheme,
+                                         tokens[:, start:start + 4],
+                                         pos, table, kp, vp)
+        lq, kq, vq, ks, vs = prefill_chunk_paged_kv8(
+            qp, cfg, scheme, tokens[:, start:start + 4], pos, table,
+            kq, vq, ks, vs)
+
+    agree, total = 0, 0
+    tok = jnp.argmax(lf, -1).astype(jnp.int32)  # shared teacher stream
+    for i in range(6):
+        pos = jnp.full((2,), 8 + i, jnp.int32)
+        lf, kp, vp = decode_step_paged(qp, cfg, scheme, tok, pos, table, kp, vp)
+        lq, kq, vq, ks, vs = decode_step_paged_kv8(
+            qp, cfg, scheme, tok, pos, table, kq, vq, ks, vs)
+        assert bool(jnp.all(jnp.isfinite(lq)))
+        agree += int(jnp.sum(jnp.argmax(lq, -1) == jnp.argmax(lf, -1)))
+        total += 2
+        tok = jnp.argmax(lf, -1).astype(jnp.int32)
+    assert agree / total >= 0.9, f"kv8 argmax agreement {agree}/{total}"
+
+
+def test_paged_kv8_untouched_page_roundtrip_is_exact(setup, q3):
+    """Pages the step does not write must survive the uniform restamp
+    bit-for-bit: their rows already sit on the int8 grid, so recomputing
+    the scale and re-rounding is the identity."""
+    cfg, _, _ = setup
+    scheme = SCHEMES["q3"]
+    page_len = 8
+    mp = cfg.max_seq // page_len
+    tokens = jax.random.randint(jax.random.PRNGKey(26), (2, 8), 0, cfg.vocab)
+    table = jnp.asarray(np.arange(2 * mp, dtype=np.int32).reshape(2, mp))
+    kq, vq, ks, vs = kv8_empty_pool(cfg, 2 * mp + 1, page_len)
+    pos0 = jnp.zeros((2,), jnp.int32)
+    lq, kq, vq, ks, vs = prefill_chunk_paged_kv8(
+        q3, cfg, scheme, tokens, pos0, table, kq, vq, ks, vs)
+    # the prefill filled logical page 0 of both lanes (physical 0 and 3);
+    # the decode at position 8 writes logical page 1 (physical 1 and 4)
+    tok = jnp.argmax(lq, -1).astype(jnp.int32)
+    pos = jnp.full((2,), 8, jnp.int32)
+    _, kq2, vq2, ks2, vs2 = decode_step_paged_kv8(
+        q3, cfg, scheme, tok, pos, table, kq, vq, ks, vs)
+    for phys in (0, 3):
+        np.testing.assert_array_equal(np.asarray(kq2[:, phys]),
+                                      np.asarray(kq[:, phys]))
+        np.testing.assert_array_equal(np.asarray(vq2[:, phys]),
+                                      np.asarray(vq[:, phys]))
+    # and the written pages did change
+    assert float(jnp.max(jnp.abs(kq2[:, 1].astype(jnp.float32)
+                                 - kq[:, 1].astype(jnp.float32)))) > 0.0
 
 
 def test_hmt_memattn_shapes_and_effect(setup):

@@ -26,16 +26,18 @@
 //!   what makes the prefill/decode overlap measurable in the simulator.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use crate::anyhow::{anyhow, Result};
 
 use crate::arch::{AcceleratorSystem, STAGE_REPLICAS};
-use crate::config::Precision;
+use crate::hls::{simulate, DataflowGraph, Dequantizer};
 #[cfg(not(feature = "pjrt"))]
 use crate::runtime::xla;
-use crate::runtime::{argmax_rows, lit_f32, lit_i32, lit_scalar_i32, to_f32, Runtime};
+use crate::runtime::{argmax_rows, lit_f32, lit_i32, lit_i8, lit_scalar_i32, to_f32, Runtime};
 
 use super::config::ShardRole;
+use super::kv::{self, PageCodec};
 
 /// Declared optional capabilities of a backend (PR 7 API redesign).
 ///
@@ -66,6 +68,13 @@ pub struct BackendCaps {
     /// migrated from another shard can be rebuilt here (disaggregated
     /// prefill→decode handoff).
     pub lane_import: bool,
+    /// Storage codec of the backend's KV pages (PR 8). `Fp16` is the
+    /// identity codec — exactly the pre-quantization behavior, byte for
+    /// byte. `Int8Sym` declares that pool pages hold symmetric-INT8
+    /// rows with a per-page scale header and that the paged gather
+    /// dequantizes them in-graph; the halved bytes-per-row is what lets
+    /// the same byte budget hold twice the pages.
+    pub kv_codec: PageCodec,
 }
 
 /// Paged KV cache capabilities of a backend.
@@ -250,6 +259,16 @@ pub trait ExecBackend {
     fn lane_ready_s(&self, _lane: usize) -> f64 {
         0.0
     }
+
+    /// Cache rows this backend has dequantized on paged gathers so far
+    /// (cumulative over the backend's lifetime). Identically 0 for an
+    /// `Fp16` pool; the engine snapshots it into
+    /// [`ServeMetrics::dequant_rows`](super::request::ServeMetrics)
+    /// after each tick so the quantization win is reported next to the
+    /// ALU cost that paid for it.
+    fn rows_dequantized(&self) -> usize {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -292,6 +311,18 @@ pub struct MockBackend {
     /// write landing in one (decode scatter or prefill chunk) is a
     /// refcount/COW bug in the layer above and is rejected.
     lane_shared: Vec<Vec<u32>>,
+    /// Page storage codec. Under `Int8Sym` the mock MATERIALIZES the
+    /// per-page quantize→dequantize round trip over synthetic K/V row
+    /// magnitudes derived from each lane's resident tokens
+    /// ([`kv::sim_dequant_error`]), and flips an emitted token whenever
+    /// the reconstruction error beats that step's synthetic logit
+    /// margin — quantization shows up as a real, deterministic
+    /// argmax-disagreement stream
+    /// ([`MockBackend::expected_tokens_quant`]), not a cosmetic label.
+    codec: PageCodec,
+    /// Tokens whose K/V rows are cache-resident, per lane (prompt +
+    /// emitted so far): the content the quant error model runs over.
+    lane_ctx: Vec<Vec<i32>>,
     pub prefill_calls: usize,
     pub prefill_slots: usize,
     pub prefill_chunk_calls: usize,
@@ -311,7 +342,15 @@ pub struct MockBackend {
     pub prefix_binds: usize,
     /// Migrated-lane imports accepted ([`ExecBackend::import_lane`]).
     pub lanes_imported: usize,
+    /// Rows reconstructed by the in-graph dequant of paged gathers
+    /// (whole pages, ragged tails included) under an `Int8Sym` codec.
+    pub rows_dequantized: usize,
 }
+
+/// XOR salt deriving the token a quant-flipped step emits instead of
+/// the fp stream's — a flip lands on a different (still deterministic)
+/// vocab draw, exactly what a perturbed near-tie argmax does.
+const FLIP_SALT: u64 = 0x0051_5541_4E54_4B56;
 
 impl MockBackend {
     pub fn new(lanes: usize, prefill_len: usize, max_seq: usize, vocab: usize) -> Self {
@@ -330,6 +369,7 @@ impl MockBackend {
                     resident_prefix: true,
                     lane_release: true,
                     lane_import: true,
+                    kv_codec: PageCodec::Fp16,
                 },
             },
             lane_seed: vec![None; lanes],
@@ -337,6 +377,8 @@ impl MockBackend {
             lane_table: vec![Vec::new(); lanes],
             allow_table_growth: false,
             lane_shared: vec![Vec::new(); lanes],
+            codec: PageCodec::Fp16,
+            lane_ctx: vec![Vec::new(); lanes],
             prefill_calls: 0,
             prefill_slots: 0,
             prefill_chunk_calls: 0,
@@ -348,6 +390,7 @@ impl MockBackend {
             lanes_released: 0,
             prefix_binds: 0,
             lanes_imported: 0,
+            rows_dequantized: 0,
         }
     }
 
@@ -381,6 +424,18 @@ impl MockBackend {
     /// implementation, must drive the engine's choices.
     pub fn with_caps(mut self, caps: BackendCaps) -> Self {
         self.spec.caps = caps;
+        self
+    }
+
+    /// Store KV pages under `codec` (builder). Under
+    /// [`PageCodec::Int8Sym`] the emitted stream becomes
+    /// [`MockBackend::expected_tokens_quant`]: still a pure function of
+    /// the prompt — so differential byte-identity tests stay exact — but
+    /// with deterministic argmax flips wherever the per-page INT8
+    /// reconstruction error exceeds the step's margin.
+    pub fn with_kv_quant(mut self, codec: PageCodec) -> Self {
+        self.codec = codec;
+        self.spec.caps.kv_codec = codec;
         self
     }
 
@@ -421,6 +476,83 @@ impl MockBackend {
         (0..n).map(|i| Self::token_at(seed, i, vocab)).collect()
     }
 
+    /// The synthetic logit margin of stream step `index`: uniform in
+    /// [0, 0.25), hashed from (seed, index). A step whose per-page
+    /// reconstruction error exceeds its margin flips its argmax — most
+    /// steps have margin to spare, the occasional near-tie does not.
+    fn flip_margin(seed: u64, index: usize) -> f32 {
+        let mut x = seed.rotate_left(17)
+            ^ (index as u64).wrapping_mul(0x2545_F491_4F6C_DD1D)
+            ^ 0x632B_E593_04B4_00D5;
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        x ^= x >> 33;
+        (x % 10_000) as f32 / 10_000.0 * 0.25
+    }
+
+    /// The full stream a prompt produces under an [`PageCodec::Int8Sym`]
+    /// page codec: the fp stream with a deterministic argmax flip at
+    /// every step whose page reconstruction error
+    /// ([`kv::sim_dequant_error`] over the rows resident AT that step —
+    /// prompt plus everything emitted so far, flips included) beats the
+    /// step's margin. A pure function of the prompt, so import
+    /// validation, shared-admission replay and differential tests can
+    /// all derive it without a live backend.
+    pub fn expected_tokens_quant(prompt: &[i32], n: usize, vocab: usize,
+                                 page_len: usize) -> Vec<i32> {
+        let seed = Self::prompt_seed(prompt);
+        let mut ctx = prompt.to_vec();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let err = kv::sim_dequant_error(&ctx, page_len, PageCodec::Int8Sym);
+            let t = if err > Self::flip_margin(seed, i) {
+                Self::token_at(seed ^ FLIP_SALT, i, vocab)
+            } else {
+                Self::token_at(seed, i, vocab)
+            };
+            out.push(t);
+            ctx.push(t);
+        }
+        out
+    }
+
+    /// Argmax-agreement rate between one prompt's quantized and fp
+    /// streams over `n` tokens — the serving-side PPL proxy the kv_quant
+    /// gate pins.
+    pub fn argmax_agreement(prompt: &[i32], n: usize, vocab: usize,
+                            page_len: usize) -> f64 {
+        if n == 0 {
+            return 1.0;
+        }
+        let fp = Self::expected_tokens(prompt, n, vocab);
+        let q = Self::expected_tokens_quant(prompt, n, vocab, page_len);
+        fp.iter().zip(&q).filter(|(a, b)| a == b).count() as f64 / n as f64
+    }
+
+    /// Emit stream step `index` on `lane`, honoring the page codec:
+    /// under `Int8Sym`, run the lane's resident rows through the
+    /// per-page round trip and flip the argmax when the error beats the
+    /// step's margin (the live mirror of
+    /// [`MockBackend::expected_tokens_quant`]).
+    fn emit(&self, lane: usize, seed: u64, index: usize) -> i32 {
+        let vocab = self.spec.vocab;
+        if self.codec == PageCodec::Fp16 {
+            return Self::token_at(seed, index, vocab);
+        }
+        let page_len = self
+            .spec
+            .paged
+            .as_ref()
+            .map(|c| c.page_len)
+            .unwrap_or(self.spec.max_seq);
+        let err = kv::sim_dequant_error(&self.lane_ctx[lane], page_len, self.codec);
+        if err > Self::flip_margin(seed, index) {
+            Self::token_at(seed ^ FLIP_SALT, index, vocab)
+        } else {
+            Self::token_at(seed, index, vocab)
+        }
+    }
+
     /// Every page currently held read-only by SOME lane's shared-prefix
     /// bind: the only pages allowed to back two live lanes at once.
     fn shared_union(&self) -> HashSet<u32> {
@@ -450,7 +582,8 @@ impl ExecBackend for MockBackend {
             self.lane_partial[s.lane].clear();
             self.lane_table[s.lane].clear(); // dense admission: no pages
             self.lane_shared[s.lane].clear();
-            out.push(Self::token_at(seed, 0, self.spec.vocab));
+            self.lane_ctx[s.lane] = s.prompt.to_vec();
+            out.push(self.emit(s.lane, seed, 0));
         }
         Ok(out)
     }
@@ -481,10 +614,11 @@ impl ExecBackend for MockBackend {
         if self.lane_partial[lane].len() == self.spec.prefill_len {
             // the chunk completes the prompt: same seed a blocking
             // admission of the full prompt would derive
-            let seed = Self::prompt_seed(&self.lane_partial[lane]);
+            let full = std::mem::take(&mut self.lane_partial[lane]);
+            let seed = Self::prompt_seed(&full);
             self.lane_seed[lane] = Some(seed);
-            self.lane_partial[lane].clear();
-            Ok(Self::token_at(seed, 0, self.spec.vocab))
+            self.lane_ctx[lane] = full;
+            Ok(self.emit(lane, seed, 0))
         } else {
             // mid-prompt: the lane must not decode yet
             self.lane_seed[lane] = None;
@@ -513,10 +647,14 @@ impl ExecBackend for MockBackend {
             if s.pos < self.spec.prefill_len || s.pos >= self.spec.max_seq {
                 return Err(anyhow!("decode lane {} at invalid pos {}", s.lane, s.pos));
             }
+            if self.codec != PageCodec::Fp16 {
+                // the fed token's K/V row is scattered at `pos` before
+                // the gather, so the round trip runs over it too
+                self.lane_ctx[s.lane].push(s.token);
+            }
             // the step at write position p produces generated token
             // index (p - prefill_len + 1); index 0 came from prefill
-            out.push(Self::token_at(seed, s.pos - self.spec.prefill_len + 1,
-                                    self.spec.vocab));
+            out.push(self.emit(s.lane, seed, s.pos - self.spec.prefill_len + 1));
         }
         Ok(out)
     }
@@ -593,10 +731,15 @@ impl ExecBackend for MockBackend {
             .collect();
         let out = self.decode(&lane_steps)?;
         self.paged_decode_calls += 1;
-        self.pages_gathered += steps
+        let gathered: usize = steps
             .iter()
             .map(|st| (st.pos + 1).div_ceil(caps.page_len))
-            .sum::<usize>();
+            .sum();
+        self.pages_gathered += gathered;
+        if self.codec == PageCodec::Int8Sym {
+            // every gathered page is reconstructed row by row in-graph
+            self.rows_dequantized += gathered * caps.page_len;
+        }
         Ok(out)
     }
 
@@ -671,6 +814,7 @@ impl ExecBackend for MockBackend {
             self.lane_partial[lane].clear();
             self.lane_table[lane].clear();
             self.lane_shared[lane].clear();
+            self.lane_ctx[lane].clear();
             self.lanes_released += 1;
         }
     }
@@ -681,6 +825,10 @@ impl ExecBackend for MockBackend {
         if lane < self.spec.lanes {
             self.lane_shared[lane].clear();
         }
+    }
+
+    fn rows_dequantized(&self) -> usize {
+        self.rows_dequantized
     }
 
     fn bind_resident_prefix(&mut self, lane: usize, prompt: &[i32],
@@ -736,6 +884,7 @@ impl ExecBackend for MockBackend {
         self.lane_partial[lane] = prompt[..resident_rows].to_vec();
         self.lane_table[lane] = pages.to_vec();
         self.lane_shared[lane] = pages[..shared_pages].to_vec();
+        self.lane_ctx[lane] = prompt[..resident_rows].to_vec();
         self.prefix_binds += 1;
         Ok(())
     }
@@ -786,20 +935,35 @@ impl ExecBackend for MockBackend {
             }
         }
         // migration must be undetectable downstream: the tokens the
-        // source emitted must BE this prompt's stream, and the lane
-        // resumes at exactly the next index
+        // source emitted must BE this prompt's stream — UNDER THIS
+        // POOL'S CODEC (a quantized pool validates against the quant
+        // stream, flips included) — and the lane resumes at exactly the
+        // next index
         let seed = Self::prompt_seed(prompt);
-        for (i, &t) in emitted.iter().enumerate() {
-            if t != Self::token_at(seed, i, self.spec.vocab) {
-                return Err(anyhow!(
-                    "lane {lane}: migrated stream diverges from its prompt's \
-                     at token {i}"));
+        let want = match self.codec {
+            PageCodec::Fp16 => {
+                Self::expected_tokens(prompt, emitted.len(), self.spec.vocab)
             }
+            PageCodec::Int8Sym => Self::expected_tokens_quant(
+                prompt, emitted.len(), self.spec.vocab, caps.page_len),
+        };
+        if let Some(i) = (0..emitted.len()).find(|&i| emitted[i] != want[i]) {
+            return Err(anyhow!(
+                "lane {lane}: migrated stream diverges from its prompt's \
+                 at token {i}"));
         }
         self.lane_seed[lane] = Some(seed);
         self.lane_partial[lane].clear();
         self.lane_table[lane] = pages.to_vec();
         self.lane_shared[lane].clear(); // migrated copies are private
+        // rows resident after import: the prompt plus every emitted
+        // token's row EXCEPT the newest (its feed-in writes that row on
+        // the first local decode step)
+        self.lane_ctx[lane] = prompt
+            .iter()
+            .chain(&emitted[..emitted.len() - 1])
+            .copied()
+            .collect();
         self.lanes_imported += 1;
         Ok(())
     }
@@ -859,6 +1023,9 @@ pub struct ModeledBackend {
     decode_width: usize,
     /// Simulated seconds-per-token cache keyed by context bucket.
     step_cost: HashMap<u64, f64>,
+    /// Lazily simulated seconds to dequantize one gathered K/V row
+    /// (all layers, K and V) under an `Int8Sym` codec.
+    dequant_row_cost_s: Option<f64>,
     /// Simulated chunk cost keyed by (tokens, ctx bucket, lm_head).
     chunk_cost: HashMap<(u64, u64, bool), f64>,
     /// Whole-pool blocking prefill invocation cost.
@@ -885,6 +1052,7 @@ impl ModeledBackend {
             role: ShardRole::Unified,
             decode_width: lanes,
             step_cost: HashMap::new(),
+            dequant_row_cost_s: None,
             chunk_cost: HashMap::new(),
             pool_prefill_cost_s,
             prefill_clock_s: 0.0,
@@ -921,6 +1089,18 @@ impl ModeledBackend {
     /// reservation runs.
     pub fn with_table_growth(mut self) -> Self {
         self.inner = self.inner.with_table_growth();
+        self
+    }
+
+    /// Store pool pages under `codec` (builder; token-stream effect as
+    /// [`MockBackend::with_kv_quant`]). The model reprices honesty both
+    /// ways: page-gather HBM traffic, COW copies and migration DMA
+    /// shrink to the codec's bytes-per-row, while every gathered page
+    /// pays a simulated per-row dequant ALU cost from a [`Dequantizer`]
+    /// module on the decode fabric — the capacity win is not free.
+    pub fn with_kv_quant(mut self, codec: PageCodec) -> Self {
+        self.inner = self.inner.with_kv_quant(codec);
+        self.dequant_row_cost_s = None;
         self
     }
 
@@ -966,14 +1146,44 @@ impl ModeledBackend {
 
     /// Seconds to stream `rows` reserved-but-useless cache rows (the
     /// ragged page tails a gather reads anyway) at the device's HBM
-    /// bandwidth — the fragmentation cost of paging.
+    /// bandwidth — the fragmentation cost of paging. Priced at the
+    /// pool codec's bytes-per-row, so an INT8 pool halves it.
     fn gather_overhead_s(&self, extra_rows: usize) -> f64 {
         let row_bytes = self
             .sys
             .decode
             .model
-            .kv_bytes_per_token(1, Precision::Int8.bytes());
+            .kv_bytes_per_token(1, self.inner.codec.bytes_per_elem());
         extra_rows as f64 * row_bytes / self.sys.decode.device.hbm_bw
+    }
+
+    /// Simulated seconds the decode fabric spends reconstructing ONE
+    /// gathered K/V row (every layer, K and V) from INT8 under the
+    /// pool's per-page scale: a [`Dequantizer`] module streamed through
+    /// the pipeline simulator at the decode engine's clock, amortized
+    /// over a long run and cached. Zero under the `Fp16` identity codec.
+    fn dequant_s_per_row(&mut self) -> f64 {
+        if self.inner.codec == PageCodec::Fp16 {
+            return 0.0;
+        }
+        if let Some(c) = self.dequant_row_cost_s {
+            return c;
+        }
+        let arch = &self.sys.decode;
+        let mut g = DataflowGraph::new();
+        // one d_kv-wide row per layer for K and for V; the per-PAGE
+        // scale is a single factor (not per-channel aux data)
+        g.invoke_reused(
+            Arc::new(Dequantizer::new("kv_page_dequant", arch.cfg.bp,
+                                      arch.model.d_kv, false)),
+            (2 * arch.model.n_layers) as f64,
+            1,
+        );
+        const AMORTIZE_ROWS: u64 = 256;
+        let cost = simulate(&g, AMORTIZE_ROWS, &[]).seconds(arch.freq_hz)
+            / AMORTIZE_ROWS as f64;
+        self.dequant_row_cost_s = Some(cost);
+        cost
     }
 
     /// Fast-forward both engine clocks to at least `t` (open-loop
@@ -1086,11 +1296,18 @@ impl ExecBackend for ModeledBackend {
             .map(|s| (s.pos + 1).div_ceil(page_len) * page_len - (s.pos + 1))
             .sum();
         let gather_s = self.gather_overhead_s(extra_rows);
+        // a quantized pool reconstructs EVERY gathered row in-graph —
+        // the ALU bill that keeps the halved-bandwidth win honest
+        let gathered_rows: usize = steps
+            .iter()
+            .map(|s| (s.pos + 1).div_ceil(page_len) * page_len)
+            .sum();
+        let dequant_s = self.dequant_s_per_row() * gathered_rows as f64;
         let lane_steps: Vec<LaneStep> = steps
             .iter()
             .map(|s| LaneStep { lane: s.lane, token: s.token, pos: s.pos })
             .collect();
-        self.charge_decode(&lane_steps, gather_s);
+        self.charge_decode(&lane_steps, gather_s + dequant_s);
         Ok(out)
     }
 
@@ -1136,15 +1353,17 @@ impl ExecBackend for ModeledBackend {
                    pages: &[u32], ready_s: f64) -> Result<()> {
         self.inner.import_lane(lane, prompt, emitted, pages, ready_s)?;
         // the migrated K/V rows cross the shard-to-shard link as whole
-        // rows; the DMA overlaps local decode compute, but this lane
-        // cannot step before the source handed it off (`ready_s`, its
+        // rows AT THE POOL CODEC'S WIDTH (INT8 pages migrate at half
+        // the bytes — quantization compounds with disaggregation); the
+        // DMA overlaps local decode compute, but this lane cannot step
+        // before the source handed it off (`ready_s`, its
         // prefill-completion time there) AND its pages finished landing
         let rows = prompt.len() + emitted.len() - 1;
         let row_bytes = self
             .sys
             .decode
             .model
-            .kv_bytes_per_token(1, Precision::Int8.bytes());
+            .kv_bytes_per_token(1, self.inner.codec.bytes_per_elem());
         let xfer_s = rows as f64 * row_bytes / MIGRATION_BW_BYTES_PER_S;
         self.lane_ready_s[lane] = ready_s + xfer_s;
         Ok(())
@@ -1152,6 +1371,10 @@ impl ExecBackend for ModeledBackend {
 
     fn lane_ready_s(&self, lane: usize) -> f64 {
         self.lane_ready_s.get(lane).copied().unwrap_or(0.0)
+    }
+
+    fn rows_dequantized(&self) -> usize {
+        self.inner.rows_dequantized()
     }
 }
 
@@ -1204,6 +1427,10 @@ const DECODE_LANES: &str = "decode_lanes_q3";
 const DECODE_ALIGNED: &str = "decode_step_q3";
 const DECODE_PAGED: &str = "decode_paged_q3";
 const PREFILL_CHUNK_PAGED: &str = "prefill_chunk_paged_q3";
+/// INT8-page variants: same geometry, but the page pools are INT8 and two
+/// extra `[L, P+1]` f32 scale headers (K and V) ride along as state.
+const DECODE_PAGED_KV8: &str = "decode_paged_q3_kv8";
+const PREFILL_CHUNK_PAGED_KV8: &str = "prefill_chunk_paged_q3_kv8";
 
 /// Execution over the AOT-compiled PJRT artifacts.
 ///
@@ -1239,6 +1466,11 @@ pub struct PjrtBackend {
     /// head_dim]; physical page 0 is the idle-lane scratch page.
     kp: Option<xla::Literal>,
     vp: Option<xla::Literal>,
+    /// Per-page scale headers `[L, P+1]` (f32), threaded through every
+    /// kv8 invocation exactly like the pools. `None` until the first
+    /// paged call — or always, under `PageCodec::Fp16`.
+    k_scale: Option<xla::Literal>,
+    v_scale: Option<xla::Literal>,
     page_cache_shape: Vec<usize>,
     pages_per_lane: usize,
 }
@@ -1288,6 +1520,21 @@ impl PjrtBackend {
             }
             _ => None,
         };
+        // the codec is DECLARED by the artifact set, not configured: the
+        // manifest must name it, ship both kv8 artifacts, and record a
+        // coherent `[L, pages+1]` scale-header shape — anything partial
+        // stays Fp16 rather than desyncing graph state mid-serve
+        let kv_codec = match (&paged, m.serving.kv_codec.as_deref()) {
+            (Some(p), Some("int8_sym"))
+                if m.artifacts.contains_key(DECODE_PAGED_KV8)
+                    && m.artifacts.contains_key(PREFILL_CHUNK_PAGED_KV8)
+                    && m.serving.kv_header_shape.as_deref()
+                        == Some([m.model.n_layers, p.pages as u64 + 1].as_slice()) =>
+            {
+                PageCodec::Int8Sym
+            }
+            _ => PageCodec::Fp16,
+        };
         let spec = BackendSpec {
             lanes: m.serving.batch,
             prefill_len: m.serving.prefill_len,
@@ -1306,6 +1553,7 @@ impl PjrtBackend {
                 lane_release: false,
                 // no artifact rebuilds a warm lane from foreign pages
                 lane_import: false,
+                kv_codec,
             },
             paged,
         };
@@ -1319,7 +1567,8 @@ impl PjrtBackend {
             .unwrap_or_default();
         let pages_per_lane = m.serving.pages_per_lane.unwrap_or(0);
         PjrtBackend { runtime, spec, k: None, v: None, cache_shape,
-                      kp: None, vp: None, page_cache_shape, pages_per_lane }
+                      kp: None, vp: None, k_scale: None, v_scale: None,
+                      page_cache_shape, pages_per_lane }
     }
 
     fn cache_dims_i64(&self) -> Vec<i64> {
@@ -1354,15 +1603,38 @@ impl PjrtBackend {
     }
 
     /// The live PAGE-POOL caches (zeros before the first paged chunk).
+    /// Under `Int8Sym` the pools are INT8 grids, matching the kv8
+    /// artifacts' input dtype.
     fn page_literals(&mut self) -> Result<(xla::Literal, xla::Literal)> {
         if self.kp.is_none() || self.vp.is_none() {
             let dims: Vec<i64> = self.page_cache_shape.iter().map(|&d| d as i64).collect();
             let len: usize = self.page_cache_shape.iter().product();
-            let zeros = vec![0.0f32; len];
-            self.kp = Some(lit_f32(&zeros, &dims)?);
-            self.vp = Some(lit_f32(&zeros, &dims)?);
+            if self.spec.caps.kv_codec == PageCodec::Int8Sym {
+                let zeros = vec![0i8; len];
+                self.kp = Some(lit_i8(&zeros, &dims)?);
+                self.vp = Some(lit_i8(&zeros, &dims)?);
+            } else {
+                let zeros = vec![0.0f32; len];
+                self.kp = Some(lit_f32(&zeros, &dims)?);
+                self.vp = Some(lit_f32(&zeros, &dims)?);
+            }
         }
         Ok((self.kp.as_ref().unwrap().clone(), self.vp.as_ref().unwrap().clone()))
+    }
+
+    /// The live scale headers `[L, P+1]` (identity 1.0 before the first
+    /// kv8 invocation stamps them in-graph).
+    fn header_literals(&mut self) -> Result<(xla::Literal, xla::Literal)> {
+        if self.k_scale.is_none() || self.v_scale.is_none() {
+            let layers = self.page_cache_shape[0];
+            let phys = self.page_cache_shape[1];
+            let ones = vec![1.0f32; layers * phys];
+            let dims = [layers as i64, phys as i64];
+            self.k_scale = Some(lit_f32(&ones, &dims)?);
+            self.v_scale = Some(lit_f32(&ones, &dims)?);
+        }
+        Ok((self.k_scale.as_ref().unwrap().clone(),
+            self.v_scale.as_ref().unwrap().clone()))
     }
 
     /// Flatten a step's page table into row `slot` of the invocation's
@@ -1385,13 +1657,20 @@ impl PjrtBackend {
         Ok(())
     }
 
-    /// Unpack a paged artifact's (logits, k_pages, v_pages) outputs:
-    /// store the updated page pool and return the per-slot argmax.
+    /// Unpack a paged artifact's outputs — (logits, k_pages, v_pages)
+    /// plus (k_scale, v_scale) under the kv8 codec: store the updated
+    /// page-pool state and return the per-slot argmax.
     fn take_paged_outputs(&mut self, name: &str, mut out: Vec<xla::Literal>)
         -> Result<Vec<i32>>
     {
-        if out.len() != 3 {
-            return Err(anyhow!("{name} returned {} outputs", out.len()));
+        let quant = self.spec.caps.kv_codec == PageCodec::Int8Sym;
+        let want = if quant { 5 } else { 3 };
+        if out.len() != want {
+            return Err(anyhow!("{name} returned {} outputs, want {want}", out.len()));
+        }
+        if quant {
+            self.v_scale = Some(out.pop().unwrap());
+            self.k_scale = Some(out.pop().unwrap());
         }
         self.vp = Some(out.pop().unwrap());
         self.kp = Some(out.pop().unwrap());
@@ -1605,13 +1884,22 @@ impl ExecBackend for PjrtBackend {
         }
 
         let (kp, vp) = self.page_literals()?;
-        let out = self.runtime.execute(DECODE_PAGED, &[
+        let mut inputs = vec![
             lit_i32(&tok, &[b as i64])?,
             lit_i32(&pos, &[b as i64])?,
             lit_i32(&table, &[b as i64, mp as i64])?,
             kp, vp,
-        ])?;
-        let next = self.take_paged_outputs(DECODE_PAGED, out)?;
+        ];
+        let name = if self.spec.caps.kv_codec == PageCodec::Int8Sym {
+            let (ks, vs) = self.header_literals()?;
+            inputs.push(ks);
+            inputs.push(vs);
+            DECODE_PAGED_KV8
+        } else {
+            DECODE_PAGED
+        };
+        let out = self.runtime.execute(name, &inputs)?;
+        let next = self.take_paged_outputs(name, out)?;
         Ok(next[..steps.len()].to_vec())
     }
 
@@ -1655,13 +1943,22 @@ impl ExecBackend for PjrtBackend {
         self.fill_table_row(&mut table, 0, pages, &caps)?;
 
         let (kp, vp) = self.page_literals()?;
-        let out = self.runtime.execute(PREFILL_CHUNK_PAGED, &[
+        let mut inputs = vec![
             lit_i32(&flat, &[b as i64, c as i64])?,
             lit_i32(&pos, &[b as i64])?,
             lit_i32(&table, &[b as i64, mp as i64])?,
             kp, vp,
-        ])?;
-        let next = self.take_paged_outputs(PREFILL_CHUNK_PAGED, out)?;
+        ];
+        let name = if self.spec.caps.kv_codec == PageCodec::Int8Sym {
+            let (ks, vs) = self.header_literals()?;
+            inputs.push(ks);
+            inputs.push(vs);
+            PREFILL_CHUNK_PAGED_KV8
+        } else {
+            PREFILL_CHUNK_PAGED
+        };
+        let out = self.runtime.execute(name, &inputs)?;
+        let next = self.take_paged_outputs(name, out)?;
         Ok(next[0])
     }
 
@@ -2188,5 +2485,175 @@ mod tests {
         assert!(dst.decode_clock_s > ready,
                 "target decoded before the migration arrived: {} vs {ready}",
                 dst.decode_clock_s);
+    }
+
+    #[test]
+    fn mock_kv8_stream_matches_static_replay() {
+        // the live quantize→dequantize round trip must reproduce the
+        // pure static function token for token (the property every
+        // differential test and import validation builds on)
+        let prompt: Vec<i32> = (3..11).collect();
+        let want = MockBackend::expected_tokens_quant(&prompt, 6, 64, 8);
+        let mut m = MockBackend::paged(2, 8, 32, 64, 8, 8)
+            .with_kv_quant(PageCodec::Int8Sym);
+        let mut tok = m.prefill_chunk_paged(0, &prompt, 0, &[0, 1]).unwrap();
+        assert_eq!(tok, want[0]);
+        for (i, &w) in want.iter().enumerate().skip(1) {
+            let out = m
+                .decode_paged(&[PagedStep { lane: 0, token: tok, pos: 8 + i - 1,
+                                            pages: vec![0, 1] }])
+                .unwrap();
+            tok = out[0];
+            assert_eq!(tok, w, "quant stream diverged from replay at {i}");
+        }
+        assert!(m.rows_dequantized > 0, "INT8 gathers must count dequant rows");
+    }
+
+    #[test]
+    fn mock_kv8_agreement_is_high_but_imperfect() {
+        // the serving-side PPL proxy: INT8 pages agree with fp on the
+        // overwhelming majority of argmaxes, but NOT all of them — a
+        // codec that never flips a token would be a lie
+        let (vocab, page_len, n) = (64usize, 8usize, 32usize);
+        let mut total = 0.0;
+        let mut flipped_prompts = 0usize;
+        const PROMPTS: usize = 40;
+        for s in 0..PROMPTS {
+            let prompt: Vec<i32> =
+                (0..8).map(|i| ((s * 13 + i * 7) % vocab) as i32).collect();
+            let agree = MockBackend::argmax_agreement(&prompt, n, vocab, page_len);
+            assert!((0.0..=1.0).contains(&agree));
+            if agree < 1.0 {
+                flipped_prompts += 1;
+            }
+            total += agree;
+        }
+        let mean = total / PROMPTS as f64;
+        assert!(mean >= 0.9, "agreement collapsed: {mean}");
+        assert!(flipped_prompts > 0,
+                "INT8 reconstruction error never flipped a single argmax");
+    }
+
+    #[test]
+    fn mock_kv8_import_validates_the_quant_stream() {
+        // migration between quantized shards validates against the QUANT
+        // stream — flips included; the fp stream is a foreign stream
+        let (vocab, page_len, n) = (64usize, 8usize, 16usize);
+        let prompt = 'search: {
+            for s in 0..200 {
+                let p: Vec<i32> =
+                    (0..8).map(|i| ((s * 31 + i * 11) % vocab) as i32).collect();
+                if MockBackend::expected_tokens(&p, n, vocab)
+                    != MockBackend::expected_tokens_quant(&p, n, vocab, page_len)
+                {
+                    break 'search p;
+                }
+            }
+            panic!("no diverging prompt among 200 candidates");
+        };
+        let q = MockBackend::expected_tokens_quant(&prompt, n, vocab, page_len);
+        let fp = MockBackend::expected_tokens(&prompt, n, vocab);
+        let mk = || MockBackend::paged(2, 8, 64, vocab, page_len, 16)
+            .with_kv_quant(PageCodec::Int8Sym);
+        assert!(mk().import_lane(0, &prompt, &fp, &[0, 1, 2], 0.0).is_err(),
+                "the fp stream must be rejected by a quantized pool");
+        let mut m = mk();
+        m.import_lane(0, &prompt, &q, &[0, 1, 2], 0.0).unwrap();
+        let d = m
+            .decode_paged(&[PagedStep { lane: 0, token: q[n - 1], pos: 8 + n - 1,
+                                        pages: vec![0, 1, 2] }])
+            .unwrap();
+        assert_eq!(
+            d[0],
+            MockBackend::expected_tokens_quant(&prompt, n + 1, vocab, page_len)[n],
+            "imported lane must continue the quant stream");
+    }
+
+    #[test]
+    fn mock_kv8_shared_prefix_replays_the_quant_stream() {
+        // a shared-prefix hit on an INT8 page: the resumed lane must
+        // reproduce the registrant's quantized stream exactly
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut m = MockBackend::paged(2, 8, 32, 64, 4, 6)
+            .with_table_growth()
+            .with_kv_quant(PageCodec::Int8Sym);
+        let t0 = m.prefill_chunk_paged(0, &prompt, 0, &[0, 1]).unwrap();
+        m.bind_resident_prefix(1, &prompt, 4, 1, 0, &[0, 2]).unwrap();
+        let t1 = m.prefill_chunk_paged(1, &prompt[4..], 4, &[0, 2]).unwrap();
+        assert_eq!(t1, t0, "shared quant admission must replay the cold stream");
+        assert_eq!(t0, MockBackend::expected_tokens_quant(&prompt, 1, 64, 4)[0]);
+    }
+
+    #[test]
+    fn mock_fp16_codec_is_the_identity() {
+        // codec declaration surfaces in the caps…
+        let q = MockBackend::paged(2, 8, 32, 64, 8, 8)
+            .with_kv_quant(PageCodec::Int8Sym);
+        assert_eq!(q.spec().caps.kv_codec, PageCodec::Int8Sym);
+        assert_eq!(MockBackend::new(2, 8, 32, 64).spec().caps.kv_codec,
+                   PageCodec::Fp16);
+        // …and an EXPLICIT Fp16 codec is bit-for-bit the plain backend
+        let prompt: Vec<i32> = (5..13).collect();
+        let mut a = MockBackend::paged(1, 8, 32, 64, 8, 8);
+        let mut b = MockBackend::paged(1, 8, 32, 64, 8, 8)
+            .with_kv_quant(PageCodec::Fp16);
+        let ta = a.prefill_chunk_paged(0, &prompt, 0, &[0, 1]).unwrap();
+        let tb = b.prefill_chunk_paged(0, &prompt, 0, &[0, 1]).unwrap();
+        assert_eq!(ta, tb);
+        let da = a.decode_paged(&[PagedStep { lane: 0, token: ta, pos: 8,
+                                              pages: vec![0, 1] }]).unwrap();
+        let db = b.decode_paged(&[PagedStep { lane: 0, token: tb, pos: 8,
+                                              pages: vec![0, 1] }]).unwrap();
+        assert_eq!(da, db);
+        assert_eq!(b.rows_dequantized, 0, "Fp16 must never touch dequant");
+    }
+
+    #[test]
+    fn modeled_kv8_halves_migration_bytes() {
+        // the same migrated lane crosses the shard link at half the
+        // bytes under INT8 pages: with ready=0 the lane-ready timestamp
+        // IS the transfer time, so the ratio must be exactly the
+        // bytes-per-row ratio
+        let p: Vec<i32> = (0..8).collect();
+        let toks_fp = MockBackend::expected_tokens(&p, 2, 32);
+        let toks_q = MockBackend::expected_tokens_quant(&p, 2, 32, 8);
+        let mut fp = ModeledBackend::u280_paged(2, 8, 64, 32, 8, 8, 2);
+        let mut q = ModeledBackend::u280_paged(2, 8, 64, 32, 8, 8, 2)
+            .with_kv_quant(PageCodec::Int8Sym);
+        fp.import_lane(0, &p, &toks_fp, &[0, 1], 0.0).unwrap();
+        q.import_lane(0, &p, &toks_q, &[0, 1], 0.0).unwrap();
+        let (x_fp, x_q) = (fp.lane_ready_s[0], q.lane_ready_s[0]);
+        assert!(x_fp > 0.0 && x_q > 0.0);
+        assert!((x_fp / x_q - 2.0).abs() < 1e-9,
+                "INT8 migration must bill half the bytes: {x_fp} vs {x_q}");
+    }
+
+    #[test]
+    fn modeled_kv8_prices_dequant_and_halves_gather() {
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut fp = ModeledBackend::u280_paged(1, 8, 64, 32, 8, 8, 1);
+        let mut q = ModeledBackend::u280_paged(1, 8, 64, 32, 8, 8, 1)
+            .with_kv_quant(PageCodec::Int8Sym);
+        // fragmentation traffic is billed at the codec's bytes-per-row
+        assert!((fp.gather_overhead_s(100) / q.gather_overhead_s(100) - 2.0).abs()
+                    < 1e-9,
+                "INT8 gather fragmentation must bill half the bytes");
+        // the dequant ALU bill exists only under INT8…
+        assert_eq!(fp.dequant_s_per_row(), 0.0);
+        assert!(q.dequant_s_per_row() > 0.0);
+        // …and dominates the saved fragmentation bytes on a real step,
+        // so the same decode costs strictly MORE modeled time (the
+        // capacity win is capacity, not latency)
+        let t_fp = fp.prefill_chunk_paged(0, &prompt, 0, &[0]).unwrap();
+        let t_q = q.prefill_chunk_paged(0, &prompt, 0, &[0]).unwrap();
+        fp.advance_to(100.0);
+        q.advance_to(100.0);
+        fp.decode_paged(&[PagedStep { lane: 0, token: t_fp, pos: 8,
+                                      pages: vec![0, 1] }]).unwrap();
+        q.decode_paged(&[PagedStep { lane: 0, token: t_q, pos: 8,
+                                     pages: vec![0, 1] }]).unwrap();
+        let (c_fp, c_q) = (fp.decode_clock_s - 100.0, q.decode_clock_s - 100.0);
+        assert!(c_q > c_fp,
+                "INT8 decode must pay the dequant ALU: {c_q} vs {c_fp}");
     }
 }

@@ -16,7 +16,7 @@ use std::fmt;
 use crate::anyhow::{anyhow, Result};
 
 use super::engine::KvLayout;
-use super::kv::ReservationPolicy;
+use super::kv::{PageCodec, ReservationPolicy};
 use super::scheduler::PrefillPolicy;
 
 /// What stage a serving shard is specialized for.
@@ -98,6 +98,13 @@ pub struct KvConfig {
     /// Shared-prefix admission (PR 6). Requires the paged layout —
     /// sharing needs refcounted pages.
     pub prefix_share: bool,
+    /// Page storage codec (PR 8). `Int8Sym` stores K/V rows as
+    /// symmetric INT8 with a per-page scale header — the paper's
+    /// static-symmetric attention mode ([`crate::quant::AttnMode::Sta8`])
+    /// applied to the serving cache. Requires the paged layout: the
+    /// codec is a property of pool *pages*, and the dense cache has
+    /// none.
+    pub kv_quant: PageCodec,
 }
 
 /// Shard topology: one [`ShardRole`] per shard, in shard-id order.
@@ -227,6 +234,11 @@ impl ServeConfig {
         self
     }
 
+    pub fn kv_quant(mut self, codec: PageCodec) -> Self {
+        self.kv.kv_quant = codec;
+        self
+    }
+
     /// `n` identical `Unified` shards (the pre-role topology knob).
     pub fn shards(mut self, n: usize) -> Self {
         self.topology = TopologyConfig::unified(n);
@@ -258,7 +270,9 @@ impl ServeConfig {
     /// * role-specialized topologies require the `Paged` layout
     ///   (migration moves KV *page tables*);
     /// * `prefix_share` requires the `Paged` layout (sharing needs
-    ///   refcounted pages).
+    ///   refcounted pages);
+    /// * `kv_quant != Fp16` requires the `Paged` layout (the codec is
+    ///   page-granular — scale headers live on pool pages).
     pub fn validate(&self) -> Result<()> {
         let t = &self.topology;
         if t.roles.is_empty() {
@@ -285,6 +299,11 @@ impl ServeConfig {
             return Err(anyhow!(
                 "ServeConfig: prefix sharing needs refcounted pages — use the \
                  paged layout"));
+        }
+        if self.kv.kv_quant != PageCodec::Fp16 && self.kv.layout != KvLayout::Paged {
+            return Err(anyhow!(
+                "ServeConfig: quantized KV ({}) is page-granular — use the \
+                 paged layout", self.kv.kv_quant.name()));
         }
         Ok(())
     }
@@ -369,6 +388,33 @@ mod tests {
         let cfg = ServeConfig::new().prefix_share(true);
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("refcounted pages"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_kv_quant_on_dense_layout() {
+        let cfg = ServeConfig::new().kv_quant(PageCodec::Int8Sym);
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("paged layout"), "{err}");
+        assert!(ServeConfig::new()
+            .layout(KvLayout::Paged)
+            .kv_quant(PageCodec::Int8Sym)
+            .validate()
+            .is_ok());
+        // fp16 is the identity codec — fine on any layout
+        assert!(ServeConfig::new().kv_quant(PageCodec::Fp16).validate().is_ok());
+    }
+
+    #[test]
+    fn kv_quant_composes_with_the_rest_of_the_matrix() {
+        let cfg = ServeConfig::new()
+            .policy(PrefillPolicy::chunked(32))
+            .layout(KvLayout::Paged)
+            .reserve(ReservationPolicy::Lazy)
+            .prefix_share(true)
+            .kv_quant(PageCodec::Int8Sym)
+            .roles(vec![ShardRole::Prefill, ShardRole::Decode]);
+        assert_eq!(cfg.kv.kv_quant, PageCodec::Int8Sym);
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -180,7 +180,11 @@ impl<B: ExecBackend> Engine<B> {
                 // Scheduler::paged clamps max_lanes to the page budget
                 Scheduler::paged(caps.max_lanes, spec.prefill_len, spec.max_seq,
                                  caps.page_len, caps.pages)
-                    .with_reserve(reserve),
+                    .with_reserve(reserve)
+                    // the pool's codec is DECLARED by the backend, never
+                    // configured past it: pages hold whatever bytes the
+                    // backend's artifacts read and write
+                    .with_kv_codec(spec.caps.kv_codec),
                 caps.pages,
             ),
             None => (KvLayout::Dense,
@@ -188,7 +192,9 @@ impl<B: ExecBackend> Engine<B> {
                                     !spec.per_lane_pos),
                      0),
         };
-        let metrics = ServeMetrics::with_pages_total(pages_total);
+        let mut metrics = ServeMetrics::with_pages_total(pages_total);
+        metrics.kv_codec = scheduler.kv_codec().name().to_string();
+        metrics.kv_bytes_per_row_effective = scheduler.kv_bytes_per_row_effective();
         let reserve = scheduler.reserve();
         Engine { backend, scheduler, metrics, policy, layout, reserve, shard: 0,
                  role: ShardRole::Unified, shared_lanes: HashSet::new() }
@@ -437,6 +443,8 @@ impl<B: ExecBackend> Engine<B> {
             self.metrics.kv_rows_written_peak =
                 self.metrics.kv_rows_written_peak.max(stats.rows_used);
             self.metrics.record_page_sample(stats.occupancy(), stats.fragmentation());
+            // snapshot (not sum): the backend's counter is cumulative
+            self.metrics.dequant_rows = self.backend.rows_dequantized();
         }
 
         // ---- one decode iteration ----------------------------------------
@@ -802,7 +810,7 @@ mod tests {
         // the mock IMPLEMENTS bind_resident_prefix either way — only the
         // declaration changes. The engine must follow the declaration.
         let stripped = BackendCaps { resident_prefix: false, lane_release: true,
-                                     lane_import: true };
+                                     lane_import: true, ..Default::default() };
         let e = Engine::with_layout(paged_mock(), PrefillPolicy::Blocking,
                                     KvLayout::Paged)
             .with_prefix_share(true);
@@ -835,7 +843,7 @@ mod tests {
         };
         let (full_results, full_preempt, full_released) = run(None);
         let stripped = BackendCaps { resident_prefix: true, lane_release: false,
-                                     lane_import: true };
+                                     lane_import: true, ..Default::default() };
         let (bare_results, bare_preempt, bare_released) = run(Some(stripped));
         assert!(full_preempt > 0, "overcommit must actually preempt");
         assert_eq!(full_preempt, bare_preempt,
@@ -853,7 +861,7 @@ mod tests {
     #[test]
     fn import_refused_without_declared_capability() {
         let stripped = BackendCaps { resident_prefix: true, lane_release: true,
-                                     lane_import: false };
+                                     lane_import: false, ..Default::default() };
         let mut e = Engine::with_layout(paged_mock().with_caps(stripped),
                                         PrefillPolicy::Blocking, KvLayout::Paged);
         let err = e.import_migrated(migrated(9, vec![3; 4], 4, 64)).unwrap_err();
@@ -886,6 +894,34 @@ mod tests {
         assert_eq!(place_shard(&unified, &req), Some(0));
         assert_eq!(place_migration(&unified, &m), None,
                    "Unified shards never accept migrations");
+    }
+
+    #[test]
+    fn quantized_backend_threads_codec_into_scheduler_and_metrics() {
+        use super::super::kv::PageCodec;
+        let mut e = Engine::with_layout(paged_mock().with_kv_quant(PageCodec::Int8Sym),
+                                        PrefillPolicy::Blocking, KvLayout::Paged);
+        assert_eq!(e.scheduler.kv_codec(), PageCodec::Int8Sym,
+                   "the declared codec must reach the scheduler's pool");
+        assert_eq!(e.metrics.kv_codec, "int8");
+        assert!((e.metrics.kv_bytes_per_row_effective
+                 - PageCodec::Int8Sym.effective_bytes_per_row(4)).abs() < 1e-12);
+        let prompt = vec![3; 4];
+        let res = e.serve(&[GenRequest::new(1, prompt.clone(), 6)]).unwrap();
+        assert_eq!(res[0].tokens,
+                   MockBackend::expected_tokens_quant(&prompt, 6, 64, 4),
+                   "a quantized engine must serve the quant-perturbed stream");
+        assert!(e.metrics.dequant_rows > 0,
+                "paged gathers must surface their dequant row count");
+        // the default engine is fp16 end to end: identity label, zero
+        // dequant work, PR 7 stream byte-for-byte
+        let mut e = Engine::with_layout(paged_mock(), PrefillPolicy::Blocking,
+                                        KvLayout::Paged);
+        assert_eq!(e.scheduler.kv_codec(), PageCodec::Fp16);
+        assert_eq!(e.metrics.kv_codec, "fp16");
+        let res = e.serve(&[GenRequest::new(1, prompt.clone(), 6)]).unwrap();
+        assert_eq!(res[0].tokens, MockBackend::expected_tokens(&prompt, 6, 64));
+        assert_eq!(e.metrics.dequant_rows, 0);
     }
 
     #[test]

@@ -32,15 +32,26 @@
 //! later request with the same prefix binds them instead of
 //! re-prefilling (copy-on-write forks a shared page before any write).
 //!
-//! The actual cache tensors (INT8 integer-grid K/V of the W4A4KV8
-//! scheme) live in the execution backend; on the PJRT backend the paged
-//! layout is `[L, P, KV, page_len, hd]` with physical page 0 reserved
-//! as the scratch page idle artifact lanes write into — the Rust side
-//! allocates ids `0..pages` and the backend shifts by one.
+//! PR 8 quantizes the pool itself: every page carries a [`PageCodec`]
+//! and — under [`PageCodec::Int8Sym`] — a [`PageHeader`] holding one
+//! symmetric f32 scale per K and per V tensor, stamped on the
+//! chunk-scatter write path and re-derived (never aliased) when a
+//! copy-on-write fork copies a shared page's common rows. INT8 pages
+//! halve bytes-per-row, so the same byte budget holds 2× pages.
+//!
+//! The actual cache tensors live in the execution backend; on the PJRT
+//! backend the paged layout is `[L, P, KV, page_len, hd]` (f32 holding
+//! the INT8 integer grid on the classic `q3` artifacts, true int8
+//! storage plus `[L, P]` scale headers on the `q3_kv8` artifacts), with
+//! physical page 0 reserved as the scratch page idle artifact lanes
+//! write into — the Rust side allocates ids `0..pages` and the backend
+//! shifts by one.
 
 use std::collections::HashMap;
 
 use crate::anyhow::{anyhow, Result};
+use crate::config::Precision;
+use crate::quant::AttnMode;
 
 /// How a request's page reservation is sized (PR 4).
 ///
@@ -85,6 +96,178 @@ pub fn split_budget(total: usize, shards: usize) -> crate::anyhow::Result<Vec<us
     Ok((0..shards).map(|i| base + usize::from(i < extra)).collect())
 }
 
+// ---------------------------------------------------------------------------
+// Page codec (PR 8)
+// ---------------------------------------------------------------------------
+
+/// Storage codec of the paged KV cache (DESIGN.md §14).
+///
+/// * [`PageCodec::Fp16`] — the PR 7 pool bit-for-bit: full-precision
+///   rows, no header, 2 bytes per element.
+/// * [`PageCodec::Int8Sym`] — per-page static symmetric INT8 (the
+///   paper's hardware-friendly [`AttnMode::Sta8`] applied to the
+///   serving pool): rows store the integer grid, the page header holds
+///   one f32 scale per K and per V, the paged gather dequantizes
+///   in-graph. 1 byte per element, so an equal byte budget holds 2×
+///   pages — capacity that compounds with lazy overcommit and prefix
+///   sharing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PageCodec {
+    /// Full-precision pages (no quantization, no header).
+    #[default]
+    Fp16,
+    /// Per-page symmetric INT8 with an f32 scale per K and V tensor.
+    Int8Sym,
+}
+
+impl PageCodec {
+    /// Header bytes per page: two f32 scales (K, V). Zero-points are
+    /// identically 0 under symmetric quantization and are not stored.
+    pub const HEADER_BYTES: usize = 8;
+
+    /// Parse a `--kv-quant` CLI value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fp16" => Ok(PageCodec::Fp16),
+            "int8" => Ok(PageCodec::Int8Sym),
+            other => Err(anyhow!("unknown KV page codec '{other}' (fp16|int8)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PageCodec::Fp16 => "fp16",
+            PageCodec::Int8Sym => "int8",
+        }
+    }
+
+    /// Element storage precision of a page row.
+    pub fn precision(self) -> Precision {
+        match self {
+            PageCodec::Fp16 => Precision::Fp16,
+            PageCodec::Int8Sym => Precision::Int8,
+        }
+    }
+
+    /// Bytes per stored K/V element.
+    pub fn bytes_per_elem(self) -> f64 {
+        self.precision().bytes()
+    }
+
+    /// The attention quantization mode this codec realizes — the codec
+    /// is the serving-pool face of the quant suite's scheme ladder, so
+    /// `Int8Sym` maps onto the W4A4KV8 scheme's static INT8 attention.
+    pub fn attn_mode(self) -> AttnMode {
+        match self {
+            PageCodec::Fp16 => AttnMode::Fp,
+            PageCodec::Int8Sym => AttnMode::Sta8,
+        }
+    }
+
+    /// Symmetric quantization scale for a page whose |max| is `amax`
+    /// (identity under `Fp16`).
+    pub fn scale_for(self, amax: f32) -> f32 {
+        match self {
+            PageCodec::Fp16 => 1.0,
+            PageCodec::Int8Sym => amax.max(1e-8) / 127.0,
+        }
+    }
+
+    /// Round-trip one value through the codec at `scale` — what a
+    /// quantize-on-scatter / dequantize-on-gather pair reconstructs.
+    pub fn requantize(self, x: f32, scale: f32) -> f32 {
+        match self {
+            PageCodec::Fp16 => x,
+            PageCodec::Int8Sym => (x / scale).round().clamp(-127.0, 127.0) * scale,
+        }
+    }
+
+    /// Effective storage cost per cache row: element bytes plus the
+    /// page header amortized over the page's rows. A pool-level scalar
+    /// (per element, not per model row) — the metrics surface it so the
+    /// capacity claim carries its header overhead honestly.
+    pub fn effective_bytes_per_row(self, page_len: usize) -> f64 {
+        let header = match self {
+            PageCodec::Fp16 => 0.0,
+            PageCodec::Int8Sym => Self::HEADER_BYTES as f64,
+        };
+        self.bytes_per_elem() + header / page_len.max(1) as f64
+    }
+}
+
+/// Per-page quantization header mirrored by the coordinator: one
+/// symmetric scale per K and per V tensor. The device-side truth lives
+/// in the backend's page pool (`[L, P]` f32 arrays beside the int8
+/// pages on the `q3_kv8` artifacts); the coordinator's mirror is what
+/// the COW fork and the metrics reason about. Under [`PageCodec::Fp16`]
+/// headers stay at the identity scale and are never consulted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PageHeader {
+    pub k_scale: f32,
+    pub v_scale: f32,
+}
+
+impl Default for PageHeader {
+    fn default() -> Self {
+        PageHeader { k_scale: 1.0, v_scale: 1.0 }
+    }
+}
+
+// Salts separating the K and V synthetic row magnitudes.
+const SIM_SALT_K: u64 = 0x4b00;
+const SIM_SALT_V: u64 = 0x7600;
+
+/// Deterministic synthetic |value| of the K (`salt = SIM_SALT_K`) or V
+/// row a token writes — the shared "content model" of the simulation
+/// backends and the coordinator's header stamping. Magnitudes are O(1)
+/// with rare 8× outlier rows, so per-PAGE scales genuinely matter: an
+/// outlier widens only its own page's quantization step, exactly the
+/// failure mode per-tensor scales cannot contain.
+fn sim_row_magnitude(token: i32, salt: u64) -> f32 {
+    let mut x = (token as u32 as u64 ^ salt).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 29;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 32;
+    let base = 0.5 + 1.5 * ((x % 10_000) as f32 / 10_000.0);
+    if x % 512 == 0 { base * 8.0 } else { base }
+}
+
+/// |max| over the K rows written by `tokens` (one page's worth).
+pub fn sim_rows_amax_k(tokens: &[i32]) -> f32 {
+    tokens.iter().map(|&t| sim_row_magnitude(t, SIM_SALT_K)).fold(0.0, f32::max)
+}
+
+/// |max| over the V rows written by `tokens`.
+pub fn sim_rows_amax_v(tokens: &[i32]) -> f32 {
+    tokens.iter().map(|&t| sim_row_magnitude(t, SIM_SALT_V)).fold(0.0, f32::max)
+}
+
+/// Mean |reconstruction error| of `codec` over the cache rows written
+/// by `tokens`, quantized with per-logical-page scales (`page_len` rows
+/// per page, K and V both counted). Identically 0 under `Fp16`. This is
+/// the perturbation the simulated backends weigh against each decode
+/// step's logit margin to decide whether quantization flips the argmax
+/// — the PPL proxy of the tier-1 gate.
+pub fn sim_dequant_error(tokens: &[i32], page_len: usize, codec: PageCodec) -> f32 {
+    if codec == PageCodec::Fp16 || tokens.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0f32;
+    for chunk in tokens.chunks(page_len.max(1)) {
+        for salt in [SIM_SALT_K, SIM_SALT_V] {
+            let amax = chunk.iter()
+                .map(|&t| sim_row_magnitude(t, salt))
+                .fold(0.0f32, f32::max);
+            let scale = codec.scale_for(amax);
+            for &t in chunk {
+                let v = sim_row_magnitude(t, salt);
+                total += (codec.requantize(v, scale) - v).abs();
+            }
+        }
+    }
+    total / (2 * tokens.len()) as f32
+}
+
 /// Geometry + free-list allocator over the shared KV page pool.
 ///
 /// Pages are REFCOUNTED (PR 6): a physical page can back multiple
@@ -106,6 +289,10 @@ pub struct KvPool {
     free: Vec<u32>,
     /// Owners per physical page; 0 means the page is on the free list.
     refs: Vec<u32>,
+    /// Storage codec of every page in this pool (PR 8).
+    codec: PageCodec,
+    /// Per-page quantization headers (identity under `Fp16`).
+    headers: Vec<PageHeader>,
 }
 
 impl KvPool {
@@ -126,7 +313,74 @@ impl KvPool {
         // lowest-lane-first binding order
         let free: Vec<u32> = (0..total_pages as u32).rev().collect();
         KvPool { page_len, prefill_len, max_seq, total_pages, free,
-                 refs: vec![0; total_pages] }
+                 refs: vec![0; total_pages], codec: PageCodec::default(),
+                 headers: vec![PageHeader::default(); total_pages] }
+    }
+
+    /// Set the pool's page storage codec (builder). `Fp16` (the
+    /// default) reproduces the PR 7 pool bit-for-bit.
+    pub fn with_codec(mut self, codec: PageCodec) -> Self {
+        self.set_codec(codec);
+        self
+    }
+
+    /// `&mut` form of [`KvPool::with_codec`] for owners embedding the
+    /// pool (the scheduler's builder). Flip it before any page is
+    /// allocated — a codec change does not re-stamp live headers.
+    pub fn set_codec(&mut self, codec: PageCodec) {
+        self.codec = codec;
+    }
+
+    pub fn codec(&self) -> PageCodec {
+        self.codec
+    }
+
+    /// This pool's effective storage cost per cache row (element bytes
+    /// + amortized header) — what the metrics report.
+    pub fn bytes_per_row_effective(&self) -> f64 {
+        self.codec.effective_bytes_per_row(self.page_len)
+    }
+
+    /// The quantization header of a live page.
+    pub fn header(&self, page: u32) -> PageHeader {
+        assert!((page as usize) < self.total_pages,
+                "header of foreign KV page id {page} ({} pages)", self.total_pages);
+        self.headers[page as usize]
+    }
+
+    /// Stamp `page`'s header from the |max| of the K and V rows written
+    /// into it — the chunk-scatter write path calls this after each
+    /// scatter, so a page's scale always covers exactly its resident
+    /// rows. A no-op scale of 1.0 under `Fp16`.
+    ///
+    /// Panics on a free or foreign page: stamping a header nobody owns
+    /// means the scatter path desynced from the allocator.
+    pub fn stamp_header(&mut self, page: u32, k_amax: f32, v_amax: f32) {
+        assert!((page as usize) < self.total_pages,
+                "stamped foreign KV page id {page} ({} pages)", self.total_pages);
+        assert!(self.refs[page as usize] > 0, "stamped free KV page {page}");
+        self.headers[page as usize] = PageHeader {
+            k_scale: self.codec.scale_for(k_amax),
+            v_scale: self.codec.scale_for(v_amax),
+        };
+    }
+
+    /// Stamp the header of a copy-on-write fork's DESTINATION page from
+    /// the |max| of the rows actually copied into it.
+    ///
+    /// This is deliberately NOT `headers[dest] = headers[donor]`: the
+    /// donor's scale covers its full page, but the fork copies only the
+    /// common-prefix rows — a narrower population whose amax is usually
+    /// smaller (and diverges further as the fork's own rows land). An
+    /// aliased donor header would quantize every subsequently scattered
+    /// row of the fork on the WRONG grid; re-deriving the scale from
+    /// the copied rows keeps the destination page self-describing.
+    pub fn cow_stamp(&mut self, donor: u32, dest: u32, copied_k_amax: f32,
+                     copied_v_amax: f32) {
+        assert!((donor as usize) < self.total_pages && self.refs[donor as usize] > 0,
+                "COW fork from a free or foreign donor page {donor}");
+        assert_ne!(donor, dest, "COW fork must target a fresh private page");
+        self.stamp_header(dest, copied_k_amax, copied_v_amax);
     }
 
     pub fn total_pages(&self) -> usize {
@@ -159,6 +413,9 @@ impl KvPool {
         let pages = self.free.split_off(self.free.len() - n);
         for &p in &pages {
             self.refs[p as usize] = 1;
+            // a fresh allocation starts with an identity header — the
+            // previous owner's scale must never leak into a new page
+            self.headers[p as usize] = PageHeader::default();
         }
         Ok(pages)
     }
@@ -831,6 +1088,125 @@ mod tests {
         p.release(vec![fork]);
         check(&p);
         assert_eq!(p.free_pages(), 8);
+    }
+
+    // -- page codec + headers (PR 8) ---------------------------------------
+
+    #[test]
+    fn codec_parses_prices_and_maps_onto_the_quant_suite() {
+        assert_eq!(PageCodec::parse("fp16").unwrap(), PageCodec::Fp16);
+        assert_eq!(PageCodec::parse("int8").unwrap(), PageCodec::Int8Sym);
+        assert!(PageCodec::parse("fp8").is_err());
+        assert_eq!(PageCodec::default(), PageCodec::Fp16);
+        assert_eq!(PageCodec::Fp16.bytes_per_elem(), 2.0);
+        assert_eq!(PageCodec::Int8Sym.bytes_per_elem(), 1.0);
+        assert_eq!(PageCodec::Int8Sym.attn_mode(), AttnMode::Sta8);
+        assert_eq!(PageCodec::Fp16.attn_mode(), AttnMode::Fp);
+        assert_eq!(PageCodec::Int8Sym.attn_mode().kv_precision(),
+                   PageCodec::Int8Sym.precision());
+        // effective bytes: fp16 has no header; int8 amortizes 8 B/page
+        assert_eq!(PageCodec::Fp16.effective_bytes_per_row(64), 2.0);
+        assert_eq!(PageCodec::Int8Sym.effective_bytes_per_row(64), 1.0 + 8.0 / 64.0);
+        // the round-trip is exact for values ON the grid and bounded by
+        // scale/2 off it
+        let s = PageCodec::Int8Sym.scale_for(12.7);
+        assert!((PageCodec::Int8Sym.requantize(12.7, s) - 12.7).abs() < 1e-5);
+        assert!((PageCodec::Int8Sym.requantize(0.033, s) - 0.033).abs() <= s / 2.0);
+        assert_eq!(PageCodec::Fp16.requantize(0.033, 1.0), 0.033);
+    }
+
+    #[test]
+    fn sim_error_model_is_deterministic_and_zero_for_fp16() {
+        let toks: Vec<i32> = (0..96).collect();
+        assert_eq!(sim_dequant_error(&toks, 16, PageCodec::Fp16), 0.0);
+        let e = sim_dequant_error(&toks, 16, PageCodec::Int8Sym);
+        assert!(e > 0.0 && e < 0.1, "per-page int8 error should be small: {e}");
+        assert_eq!(e, sim_dequant_error(&toks, 16, PageCodec::Int8Sym));
+        // coarser pages (one scale over more rows) can never be MORE
+        // accurate than the same rows split across finer pages
+        let fine = sim_dequant_error(&toks, 8, PageCodec::Int8Sym);
+        assert!(fine <= e + 1e-6, "finer pages must not hurt: {fine} vs {e}");
+    }
+
+    #[test]
+    fn headers_are_stamped_on_scatter_and_reset_on_alloc() {
+        let mut p = KvPool::paged(4, 32, 8, 4).with_codec(PageCodec::Int8Sym);
+        assert_eq!(p.codec(), PageCodec::Int8Sym);
+        let pages = p.alloc(2).unwrap();
+        assert_eq!(p.header(pages[0]), PageHeader::default());
+        p.stamp_header(pages[0], 12.7, 25.4);
+        let h = p.header(pages[0]);
+        assert!((h.k_scale - 0.1).abs() < 1e-6);
+        assert!((h.v_scale - 0.2).abs() < 1e-6);
+        // release + realloc: the stale scale must not leak
+        p.release(pages.clone());
+        let again = p.alloc(2).unwrap();
+        assert_eq!(again, pages, "LIFO realloc hands the same pages back");
+        assert_eq!(p.header(pages[0]), PageHeader::default(),
+                   "a fresh allocation must reset the header");
+        // fp16 pools stamp the identity scale regardless of amax
+        let mut fp = KvPool::paged(4, 32, 8, 4);
+        let g = fp.alloc(1).unwrap();
+        fp.stamp_header(g[0], 100.0, 100.0);
+        assert_eq!(fp.header(g[0]), PageHeader::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "stamped free KV page")]
+    fn stamping_a_free_page_is_detected() {
+        let mut p = KvPool::paged(4, 32, 8, 4).with_codec(PageCodec::Int8Sym);
+        p.stamp_header(2, 1.0, 1.0);
+    }
+
+    #[test]
+    fn cow_fork_requantizes_against_the_destination_scale() {
+        // satellite fix: mid-page divergence under Int8Sym. The donor
+        // page holds a full page of rows including an outlier, so its
+        // scale is wide; the fork copies only the common prefix (which
+        // misses the outlier) — aliasing the donor header would carry
+        // the wide grid onto a page whose rows need a fine one.
+        let mut p = KvPool::paged(4, 64, 8, 8).with_codec(PageCodec::Int8Sym);
+        let donor = p.alloc(1).unwrap()[0];
+        let full: Vec<i32> = (0..8).collect();
+        // find a token population whose amax differs between the full
+        // page and its first-half prefix (the content model has rare
+        // outliers; a plain range already differs)
+        let (fk, fv) = (sim_rows_amax_k(&full), sim_rows_amax_v(&full));
+        p.stamp_header(donor, fk, fv);
+        let wide = p.header(donor);
+
+        let dest = p.alloc(1).unwrap()[0];
+        let copied = &full[..3];
+        let (ck, cv) = (sim_rows_amax_k(copied), sim_rows_amax_v(copied));
+        assert!(ck < fk || cv < fv,
+                "test premise: the copied prefix must have a smaller amax");
+        p.cow_stamp(donor, dest, ck, cv);
+        let fresh = p.header(dest);
+        assert_ne!(fresh, wide,
+                   "COW destination must NOT alias the donor's header");
+        assert!((fresh.k_scale - PageCodec::Int8Sym.scale_for(ck)).abs() < 1e-9);
+        assert!((fresh.v_scale - PageCodec::Int8Sym.scale_for(cv)).abs() < 1e-9);
+        // and the fresh scale reconstructs the copied rows strictly
+        // better than the donor's wide grid would have
+        let c = PageCodec::Int8Sym;
+        let err = |scale: f32| -> f32 {
+            copied.iter()
+                .map(|&t| {
+                    let v = sim_row_magnitude(t, SIM_SALT_K);
+                    (c.requantize(v, scale) - v).abs()
+                })
+                .sum()
+        };
+        assert!(err(fresh.k_scale) <= err(wide.k_scale),
+                "re-deriving the scale must not lose precision");
+    }
+
+    #[test]
+    #[should_panic(expected = "COW fork from a free or foreign donor")]
+    fn cow_stamp_requires_a_live_donor() {
+        let mut p = KvPool::paged(4, 32, 8, 4).with_codec(PageCodec::Int8Sym);
+        let dest = p.alloc(1).unwrap()[0];
+        p.cow_stamp(3, dest, 1.0, 1.0);
     }
 
     #[test]

@@ -47,7 +47,8 @@ pub use config::{KvConfig, PrefillConfig, ServeConfig, ShardRole, TopologyConfig
 pub use engine::{place_migration, place_shard, place_shard_affine, Engine, KvLayout,
                  StepReport, TokenEvent};
 pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
-pub use kv::{split_budget, KvPool, LaneKv, ReservationPolicy};
+pub use kv::{sim_dequant_error, split_budget, KvPool, LaneKv, PageCodec, PageHeader,
+             ReservationPolicy};
 pub use openloop::{run_open_loop, ArrivalProcess, OpenLoopConfig, OpenLoopShardStats,
                    OpenLoopStats, PagedPoolConfig};
 pub use request::{FinishReason, GenRequest, GenResult, ServeMetrics};
@@ -171,6 +172,12 @@ struct ShardSpec {
     /// off on dense pools); shards must agree or the coordinator's
     /// affinity routing would chase prefixes some shards can't share.
     prefix: bool,
+    /// The shard pool's page storage codec (PR 8). Shards must agree:
+    /// page counts are the placement currency, and an int8 page holds
+    /// the bytes of half an fp16 one — mixing codecs would make "free
+    /// pages" incomparable across shards (and migrated page bytes
+    /// unreadable by the target's artifacts).
+    codec: PageCodec,
 }
 
 fn spec_of<B: ExecBackend>(engine: &Engine<B>) -> ShardSpec {
@@ -183,6 +190,7 @@ fn spec_of<B: ExecBackend>(engine: &Engine<B>) -> ShardSpec {
         paged: engine.scheduler.is_paged(),
         reserve: engine.reserve(),
         prefix: engine.prefix_share(),
+        codec: engine.scheduler.kv_codec(),
     }
 }
 
@@ -304,6 +312,16 @@ impl RouterBuilder {
         self
     }
 
+    /// Requested KV page storage codec (PR 8). Validated at spawn:
+    /// quantization is page-granular, so a non-`Fp16` codec needs the
+    /// paged layout, and every shard's backend must DECLARE the codec
+    /// in its caps — a shard whose artifacts cannot read int8 pages
+    /// fails the spawn instead of desyncing the pool.
+    pub fn kv_quant(mut self, codec: PageCodec) -> Self {
+        self.cfg = self.cfg.kv_quant(codec);
+        self
+    }
+
     /// Spawn over the AOT PJRT artifacts: every shard opens its own
     /// [`Runtime`](crate::runtime::Runtime) on `artifact_dir` (one
     /// artifact set per device — the manifest fixes each shard's pool
@@ -330,6 +348,7 @@ impl RouterBuilder {
         let layout = self.cfg.kv.layout;
         let reserve = self.cfg.kv.reserve;
         let prefix_share = self.cfg.kv.prefix_share;
+        let kv_quant = self.cfg.kv.kv_quant;
         let roles = self.cfg.topology.roles.clone();
         let shard_count = roles.len();
         let (tx, rx) = mpsc::channel::<FrontMsg>();
@@ -401,6 +420,19 @@ impl RouterBuilder {
             return Err(anyhow!(
                 "disaggregated shard roles need a paged backend, but the \
                  layout coerced to dense"));
+        }
+        // likewise the codec: a pool's codec is DECLARED by the backend
+        // caps (the artifacts either read int8 rows or they don't) — if
+        // the caller asked for quantized pages but the shards speak
+        // fp16 (or vice versa), fail the spawn instead of silently
+        // serving at a different capacity/precision than requested
+        if kv_quant != specs[0].codec {
+            shutdown_states(&mut states);
+            return Err(anyhow!(
+                "requested KV codec {} but the shard backends declare {} \
+                 pages — back quantized pools with kv8-capable artifacts \
+                 (e.g. MockBackend::with_kv_quant / a *_kv8 artifact set)",
+                kv_quant.name(), specs[0].codec.name()));
         }
         // the coordinator's placement model: same geometry as every
         // shard, used only for validation and reservation math — so the
@@ -1411,6 +1443,7 @@ mod tests {
     #[test]
     fn coordinator_routes_shared_prefixes_to_the_resident_shard() {
         let router = RouterBuilder::new()
+            .layout(KvLayout::Paged)
             .shards(2)
             .prefix_share(true)
             .spawn_with(|_| Ok(MockBackend::paged(2, 4, 32, 64, 2, 12)))
@@ -1441,6 +1474,66 @@ mod tests {
         assert_eq!(m.prefix_hits, 3);
         assert_eq!(m.kv_pages_shared, 3, "each hit binds the one resident page");
         assert_eq!(m.cow_copies, 3, "each hit forks the tail mid-page");
+    }
+
+    #[test]
+    fn quantized_router_serves_quant_streams_and_pools_dequant_rows() {
+        // 2 int8 shards end-to-end: streams must match the static int8
+        // replay per request, and the merged metrics must carry the
+        // codec label, the pooled dequant counter, and the effective
+        // bytes/row rate (1 B/elem + 8 B header over a 4-row page = 3.0)
+        let router = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .shards(2)
+            .kv_quant(PageCodec::Int8Sym)
+            .spawn_with(|_| {
+                Ok(MockBackend::paged(2, 4, 32, 64, 4, 8)
+                    .with_kv_quant(PageCodec::Int8Sym))
+            })
+            .unwrap();
+        let queue: Vec<GenRequest> =
+            (0..4).map(|i| GenRequest::new(i, vec![10 + i as i32; 4], 6)).collect();
+        router.submit(queue).unwrap();
+        let results = router.drain().unwrap();
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            let want =
+                MockBackend::expected_tokens_quant(&[10 + r.id as i32; 4], 6, 64, 4);
+            assert_eq!(r.tokens, want,
+                       "request {} diverged from the int8 replay", r.id);
+        }
+        let m = router.metrics().unwrap();
+        assert_eq!(m.kv_codec, "int8");
+        assert!(m.dequant_rows > 0, "pooled dequant counter must see the gathers");
+        assert!((m.kv_bytes_per_row_effective - 3.0).abs() < 1e-9);
+        let per = router.shard_metrics().unwrap();
+        assert!(per.iter().all(|s| s.kv_codec == "int8"),
+                "every shard must stamp the declared codec");
+    }
+
+    #[test]
+    fn spawn_rejects_codec_mismatch_between_config_and_backend() {
+        // requested int8, but the shard artifacts only speak fp16
+        let err = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .kv_quant(PageCodec::Int8Sym)
+            .spawn_with(|_| Ok(MockBackend::paged(2, 4, 32, 64, 4, 8)))
+            .err()
+            .expect("fp16 shards cannot serve a requested int8 pool")
+            .to_string();
+        assert!(err.contains("requested KV codec int8"), "{err}");
+        // the mirror image: backends quantize but the caller asked for
+        // fp16 — refusing beats silently halving precision
+        let err = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .spawn_with(|_| {
+                Ok(MockBackend::paged(2, 4, 32, 64, 4, 8)
+                    .with_kv_quant(PageCodec::Int8Sym))
+            })
+            .err()
+            .expect("int8 shards cannot silently serve an fp16 request")
+            .to_string();
+        assert!(err.contains("declare int8"), "{err}");
     }
 
     /// Mock that serves normally until its `fail_after`-th decode

@@ -33,7 +33,7 @@ use crate::anyhow::{anyhow, Result};
 use super::backend::ModeledBackend;
 use super::config::{ServeConfig, ShardRole};
 use super::engine::{place_migration, place_shard, place_shard_affine, Engine, KvLayout};
-use super::kv::{split_budget, ReservationPolicy};
+use super::kv::{split_budget, PageCodec, ReservationPolicy};
 use super::request::{percentile, GenRequest, ServeMetrics};
 use super::scheduler::{MigratedLane, PrefillPolicy};
 use crate::util::prop::Rng;
@@ -85,6 +85,20 @@ impl PagedPoolConfig {
         let dense_pages = lanes * (max_seq / page_len);
         let pages = ((dense_pages as f64 / factor).ceil() as usize).max(1);
         PagedPoolConfig { page_len, pages, max_lanes, decode_width: lanes }
+    }
+
+    /// The same total page-buffer memory re-tiled for `codec`: an int8
+    /// pool packs `2.0 / 1.0 = 2x` the pages of its fp16 twin into the
+    /// same HBM footprint. Scale headers live in their own
+    /// `[pages]`-sized side table (8 B/page — metadata beside the page
+    /// table, reported through `kv_bytes_per_row_effective`, not carved
+    /// out of page memory). Logical-lane ceiling and decode width stay
+    /// put: same silicon, denser cache — the equal-memory comparison
+    /// `tests/kv_quant.rs` gates.
+    pub fn retiled_for_codec(self, codec: PageCodec) -> Self {
+        let factor = PageCodec::Fp16.bytes_per_elem() / codec.bytes_per_elem();
+        let pages = ((self.pages as f64 * factor) as usize).max(1);
+        PagedPoolConfig { pages, ..self }
     }
 }
 
@@ -145,6 +159,13 @@ pub struct OpenLoopConfig {
     /// with zero prefill work, divergent tails fork copy-on-write.
     /// Requires a paged pool; shard placement becomes prefix-affine.
     pub prefix_share: bool,
+    /// KV page storage codec: `Int8Sym` stores rows as symmetric INT8
+    /// with a per-page scale header, quantized on the scatter path and
+    /// dequantized in-graph on gather. Requires a paged pool. NOTE the
+    /// codec only changes what a page *holds* — pool GEOMETRY is the
+    /// caller's (use [`PagedPoolConfig::retiled_for_codec`] for the
+    /// equal-memory 2x-pages comparison).
+    pub kv_quant: PageCodec,
     pub seed: u64,
 }
 
@@ -174,6 +195,7 @@ impl Default for OpenLoopConfig {
             prefix_groups: 1,
             shared_frac: 0.8,
             prefix_share: false,
+            kv_quant: PageCodec::Fp16,
             seed: 0x5EED,
         }
     }
@@ -199,6 +221,7 @@ impl OpenLoopConfig {
             .layout(if self.paged.is_some() { KvLayout::Paged } else { KvLayout::Dense })
             .reserve(self.reserve)
             .prefix_share(self.prefix_share)
+            .kv_quant(self.kv_quant)
             .roles(self.effective_roles())
     }
 }
@@ -220,6 +243,8 @@ pub struct OpenLoopShardStats {
     /// Shared-prefix admissions this shard served (zeros unless
     /// `prefix_share` — shows whether affinity kept groups together).
     pub prefix_hits: usize,
+    /// INT8 pool rows this shard dequantized on gather (zeros on fp16).
+    pub dequant_rows: usize,
     /// First-token handoffs out of / into this shard (zeros on a
     /// homogeneous topology).
     pub migrations_out: usize,
@@ -236,12 +261,14 @@ impl OpenLoopShardStats {
              \"kv_pages_total\": {}, \"kv_pages_peak\": {}, \
              \"kv_pages_grown\": {}, \"preemptions\": {}, \
              \"decode_invocations\": {}, \"prefix_hits\": {}, \
+             \"dequant_rows\": {}, \
              \"migrations_out\": {}, \"migrations_in\": {}, \
              \"model_time_s\": {:.6}}}",
             self.shard, self.role.name(), self.requests, self.peak_active,
             self.kv_pages_total, self.kv_pages_peak,
             self.kv_pages_grown, self.preemptions,
             self.decode_invocations, self.prefix_hits,
+            self.dequant_rows,
             self.migrations_out, self.migrations_in, self.model_time_s,
         )
     }
@@ -286,6 +313,12 @@ pub struct OpenLoopStats {
     pub prefix_hit_rate: f64,
     pub kv_pages_shared: usize,
     pub cow_copies: usize,
+    /// Page-codec accounting (PR 8): the pool's codec label, its
+    /// honest per-row HBM cost (elements + the amortized scale
+    /// header), and total rows dequantized on gather (0 on fp16).
+    pub kv_codec: String,
+    pub kv_bytes_per_row_effective: f64,
+    pub dequant_rows: usize,
     /// First-token handoffs between shards (zeros on a homogeneous
     /// topology — every migration leaves a prefill shard and lands on
     /// a decode shard, so out-counts equal in-counts pool-wide).
@@ -338,6 +371,8 @@ impl OpenLoopStats {
              \"prefix_hits\": {}, \"prefix_misses\": {}, \
              \"prefix_hit_rate\": {:.6}, \"kv_pages_shared\": {}, \
              \"cow_copies\": {}, \"migrations\": {}, \
+             \"kv_codec\": \"{}\", \"kv_bytes_per_row_effective\": {:.6}, \
+             \"dequant_rows\": {}, \
              \"per_shard\": [{}]}}",
             self.requests,
             self.shards, self.tokens, self.throughput_tps(),
@@ -352,6 +387,8 @@ impl OpenLoopStats {
             self.prefix_hits, self.prefix_misses,
             self.prefix_hit_rate, self.kv_pages_shared,
             self.cow_copies, self.migrations,
+            self.kv_codec, self.kv_bytes_per_row_effective,
+            self.dequant_rows,
             per_shard.join(", "),
         )
     }
@@ -463,7 +500,8 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         Some(p) => {
             let backend = ModeledBackend::u280_paged(
                 p.max_lanes, cfg.prefill_len, cfg.max_seq, cfg.vocab,
-                p.page_len, p.pages, p.decode_width);
+                p.page_len, p.pages, p.decode_width)
+                .with_kv_quant(cfg.kv_quant);
             // lazy growth legitimately extends page tables between
             // decode invocations; upfront runs keep the strict check
             let backend = match cfg.reserve {
@@ -568,6 +606,9 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         prefix_hit_rate: m.prefix_hit_rate(),
         kv_pages_shared: m.kv_pages_shared,
         cow_copies: m.cow_copies,
+        kv_codec: m.kv_codec.clone(),
+        kv_bytes_per_row_effective: m.kv_bytes_per_row_effective,
+        dequant_rows: m.dequant_rows,
         migrations: 0,
         per_shard: Vec::new(),
     })
@@ -603,6 +644,7 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
                 let backend = ModeledBackend::u280_paged(
                     lanes[i], cfg.prefill_len, cfg.max_seq, cfg.vocab,
                     p.page_len, pages[i], p.decode_width)
+                    .with_kv_quant(cfg.kv_quant)
                     .with_role(roles[i]);
                 let backend = match cfg.reserve {
                     ReservationPolicy::Lazy => backend.with_table_growth(),
@@ -793,6 +835,7 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
             preemptions: e.metrics.preemptions,
             decode_invocations: e.metrics.decode_invocations,
             prefix_hits: e.metrics.prefix_hits,
+            dequant_rows: e.metrics.dequant_rows,
             migrations_out: e.metrics.migrations_out,
             migrations_in: e.metrics.migrations_in,
             model_time_s: e.backend.model_time_s,
@@ -826,6 +869,9 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
         prefix_hit_rate: m.prefix_hit_rate(),
         kv_pages_shared: m.kv_pages_shared,
         cow_copies: m.cow_copies,
+        kv_codec: m.kv_codec.clone(),
+        kv_bytes_per_row_effective: m.kv_bytes_per_row_effective,
+        dequant_rows: m.dequant_rows,
         migrations: m.migrations_out,
         per_shard,
     })
@@ -1076,6 +1122,43 @@ mod tests {
         assert!(j.contains("\"role\": \"prefill\""));
         assert!(crate::util::Json::parse(&j).is_ok());
         // roles on a dense pool are a config error, same as the Router
+        cfg.paged = None;
+        assert!(run_open_loop(PrefillPolicy::chunked(32), &cfg).is_err());
+    }
+
+    #[test]
+    fn quantized_pool_packs_double_pages_and_reports_codec() {
+        // the equal-memory comparison: the int8 run re-tiles the same
+        // page-buffer bytes into 2x the pages; both runs are otherwise
+        // the identical seeded workload on identical modeled hardware
+        let mut cfg = small();
+        cfg.requests = 12;
+        cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+            cfg.lanes, cfg.max_seq, 32, 16));
+        let fp = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(fp.kv_codec, "fp16");
+        assert_eq!(fp.dequant_rows, 0, "an fp16 pool never dequantizes");
+        assert!((fp.kv_bytes_per_row_effective - 2.0).abs() < 1e-9);
+
+        cfg.kv_quant = PageCodec::Int8Sym;
+        cfg.paged = Some(cfg.paged.unwrap().retiled_for_codec(PageCodec::Int8Sym));
+        let q = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(q.kv_codec, "int8");
+        assert_eq!(q.kv_pages_total, 2 * fp.kv_pages_total,
+                   "equal bytes must hold twice the int8 pages");
+        assert!(q.dequant_rows > 0, "int8 gathers must be dequantized");
+        // 1 B/elem + 8 B header over a 32-row page = 1.25 rate
+        assert!((q.kv_bytes_per_row_effective - 1.25).abs() < 1e-9);
+        assert_eq!(q.requests, fp.requests, "same trace, both codecs");
+        // deterministic, and the JSON carries the new fields
+        let r = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert!((q.makespan_s - r.makespan_s).abs() < 1e-12);
+        let j = q.to_json();
+        assert!(j.contains("\"kv_codec\": \"int8\""));
+        assert!(j.contains("\"dequant_rows\""));
+        assert!(crate::util::Json::parse(&j).is_ok());
+        // quantized KV on the dense layout is a config error, same as
+        // the Router's ServeConfig validation
         cfg.paged = None;
         assert!(run_open_loop(PrefillPolicy::chunked(32), &cfg).is_err());
     }

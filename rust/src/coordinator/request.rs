@@ -174,6 +174,20 @@ pub struct ServeMetrics {
     pub migrations_out: usize,
     /// Migrated lanes rebuilt ON this shard mid-decode.
     pub migrations_in: usize,
+    /// Storage codec label of this engine's KV pool ("fp16", "int8";
+    /// empty until the engine stamps it at construction). Merging
+    /// shards with DIFFERING codecs yields "mixed" — a pool-level
+    /// metric must not claim a codec half its shards don't run.
+    pub kv_codec: String,
+    /// Effective storage bytes per cache row: element bytes plus the
+    /// per-page header amortized over `page_len` (PR 8). This is the
+    /// honest denominator of the 2×-capacity claim — INT8 pages cost
+    /// 1 byte/elem PLUS the header, not a clean half.
+    pub kv_bytes_per_row_effective: f64,
+    /// Cache rows dequantized on paged gathers (identically 0 under
+    /// fp16) — the in-graph ALU work the halved HBM traffic is bought
+    /// with.
+    pub dequant_rows: usize,
     /// Page occupancy samples (pages in use / total), one per SAMPLED
     /// tick — bounded by decimation, see [`ServeMetrics::record_page_sample`].
     pub page_occupancy_s: Vec<f64>,
@@ -271,6 +285,20 @@ impl ServeMetrics {
             m.cow_copies += s.cow_copies;
             m.migrations_out += s.migrations_out;
             m.migrations_in += s.migrations_in;
+            // codec label: keep while shards agree, degrade to "mixed"
+            // the moment they don't (an unstamped shard is neutral)
+            if m.kv_codec.is_empty() {
+                m.kv_codec = s.kv_codec.clone();
+            } else if !s.kv_codec.is_empty() && s.kv_codec != m.kv_codec {
+                m.kv_codec = "mixed".to_string();
+            }
+            // bytes/row is a RATE, not a counter: the pool-level figure
+            // is the worst shard's storage cost (max), never an average
+            // of per-shard rates — averaging rates weighs a 4-page
+            // shard as much as a 4096-page one
+            m.kv_bytes_per_row_effective =
+                m.kv_bytes_per_row_effective.max(s.kv_bytes_per_row_effective);
+            m.dequant_rows += s.dequant_rows;
             m.page_occupancy_s.extend_from_slice(&s.page_occupancy_s);
             m.page_frag_s.extend_from_slice(&s.page_frag_s);
         }
@@ -653,6 +681,49 @@ mod tests {
         assert_eq!(m.kv_pages_shared, 18);
         assert_eq!(m.migrations_out, 5);
         assert_eq!(m.migrations_in, 0);
+    }
+
+    #[test]
+    fn merge_pools_kv_codec_and_dequant_counters() {
+        // PR 8: dequant rows SUM, bytes/row takes the pool-level MAX
+        // (same averaging guard as the percentile merge: averaging
+        // per-shard rates is not a rate of anything), and the codec
+        // label survives agreement but degrades to "mixed" on conflict
+        let mut a = ServeMetrics::default();
+        a.kv_codec = "int8".to_string();
+        a.kv_bytes_per_row_effective = 1.125;
+        a.dequant_rows = 640;
+        let mut b = ServeMetrics::default();
+        b.kv_codec = "int8".to_string();
+        b.kv_bytes_per_row_effective = 1.125;
+        b.dequant_rows = 360;
+        let m = ServeMetrics::merge(&[a.clone(), b.clone()]);
+        assert_eq!(m.kv_codec, "int8", "agreeing shards keep their codec");
+        assert_eq!(m.dequant_rows, 1000);
+        assert!((m.kv_bytes_per_row_effective - 1.125).abs() < 1e-12);
+        // an UNSTAMPED (default) shard must not perturb the label
+        let m = ServeMetrics::merge(&[ServeMetrics::default(), a.clone()]);
+        assert_eq!(m.kv_codec, "int8");
+        assert_eq!(m.dequant_rows, 640);
+        // codec conflict → "mixed"; bytes/row is the max, NOT the mean
+        let mut fp = ServeMetrics::default();
+        fp.kv_codec = "fp16".to_string();
+        fp.kv_bytes_per_row_effective = 2.0;
+        let m = ServeMetrics::merge(&[a, fp]);
+        assert_eq!(m.kv_codec, "mixed",
+                   "a pool-level metric must not claim a codec half its \
+                    shards don't run");
+        assert!((m.kv_bytes_per_row_effective - 2.0).abs() < 1e-12);
+        let averaged = (1.125 + 2.0) / 2.0;
+        assert!((m.kv_bytes_per_row_effective - averaged).abs() > 0.2,
+                "merged bytes/row must not equal averaged per-shard rates");
+        // merge order must not change the verdict
+        let mut c = ServeMetrics::default();
+        c.kv_codec = "fp16".to_string();
+        let mut d = ServeMetrics::default();
+        d.kv_codec = "int8".to_string();
+        assert_eq!(ServeMetrics::merge(&[c.clone(), d.clone()]).kv_codec, "mixed");
+        assert_eq!(ServeMetrics::merge(&[d, c]).kv_codec, "mixed");
     }
 
     #[test]

@@ -48,7 +48,8 @@ use std::time::Instant;
 use crate::anyhow::{anyhow, Result};
 
 use super::backend::{LaneStep, PagedStep};
-use super::kv::{KvPool, LaneKv, PrefixIndex, ReservationPolicy};
+use super::kv::{sim_rows_amax_k, sim_rows_amax_v, KvPool, LaneKv, PageCodec,
+                PageHeader, PrefixIndex, ReservationPolicy};
 use super::request::{FinishReason, GenRequest, GenResult};
 
 /// How admission prefill shares the engine with decode iterations.
@@ -407,6 +408,34 @@ impl Scheduler {
         self.reserve
     }
 
+    /// Select the pool's page storage codec (builder; default `Fp16`,
+    /// which reproduces the PR 7 scheduler bit-for-bit). Coerced back to
+    /// `Fp16` on a dense pool: quantization is page-granular, and the
+    /// dense layout's one-page-per-lane geometry has no page headers to
+    /// amortize — `ServeConfig::validate()` rejects the combination
+    /// before it ever reaches here.
+    pub fn with_kv_codec(mut self, codec: PageCodec) -> Self {
+        self.pool.set_codec(if self.paged { codec } else { PageCodec::Fp16 });
+        self
+    }
+
+    /// The page storage codec in effect.
+    pub fn kv_codec(&self) -> PageCodec {
+        self.pool.codec()
+    }
+
+    /// Effective storage bytes per cache row (element bytes + amortized
+    /// page header) — the metrics surface's honesty figure.
+    pub fn kv_bytes_per_row_effective(&self) -> f64 {
+        self.pool.bytes_per_row_effective()
+    }
+
+    /// The quantization header of a live page — the coordinator-side
+    /// mirror the COW fork and the header-consistency tests read.
+    pub fn page_header(&self, page: u32) -> PageHeader {
+        self.pool.header(page)
+    }
+
     pub fn lanes(&self) -> usize {
         self.lanes.len()
     }
@@ -564,11 +593,16 @@ impl Scheduler {
     /// STRICTLY below the prompt — the final token's logits must be
     /// recomputed to produce the request's first generated token, so at
     /// least one row always prefills. Returns the shared pages, the
-    /// resident row count and the COW overlap rows (> 0 means the page
-    /// after the shared span forks a private copy of that many rows).
-    fn prefix_match(&mut self, req: &GenRequest) -> (Vec<u32>, usize, usize) {
+    /// resident row count, the COW overlap rows (> 0 means the page
+    /// after the shared span forks a private copy of that many rows)
+    /// and the donor page the fork copies from.
+    fn prefix_match(&mut self, req: &GenRequest)
+        -> (Vec<u32>, usize, usize, Option<u32>)
+    {
         let page_len = self.pool.page_len;
-        let Some(idx) = self.prefix.as_mut() else { return (Vec::new(), 0, 0) };
+        let Some(idx) = self.prefix.as_mut() else {
+            return (Vec::new(), 0, 0, None);
+        };
         let hit = idx.lookup(&req.prompt, page_len);
         let mut pages = hit.pages;
         let mut chain = hit.chain;
@@ -581,12 +615,14 @@ impl Scheduler {
         }
         let resident = pages.len() * page_len;
         let mut cow_rows = 0;
+        let mut donor = None;
         if self.partial_cow {
-            if let Some((_, w)) = idx.partial_overlap(chain, &req.prompt[resident..]) {
+            if let Some((page, w)) = idx.partial_overlap(chain, &req.prompt[resident..]) {
                 cow_rows = w.min(cap - resident);
+                donor = (cow_rows > 0).then_some(page);
             }
         }
-        (pages, resident, cow_rows)
+        (pages, resident, cow_rows, donor)
     }
 
     /// Size and stage the head request's bind: shared pages from the
@@ -595,14 +631,14 @@ impl Scheduler {
     /// evicted first (resident-but-idle cache yields to admission);
     /// `None` means the head still cannot bind — head-of-line blocks.
     fn plan_bind(&mut self, req: &GenRequest)
-        -> Option<(Vec<u32>, usize, usize, usize)>
+        -> Option<(Vec<u32>, usize, usize, Option<u32>, usize)>
     {
         loop {
-            let (shared, resident_rows, cow_rows) = self.prefix_match(req);
+            let (shared, resident_rows, cow_rows, donor) = self.prefix_match(req);
             let logical = self.pool.pages_for(self.admission_rows(req));
             let private = logical - shared.len().min(logical);
             if private <= self.pool.free_pages() {
-                return Some((shared, resident_rows, cow_rows, private));
+                return Some((shared, resident_rows, cow_rows, donor, private));
             }
             let evicted = match self.prefix.as_mut() {
                 Some(idx) => idx.evict_lru(),
@@ -638,7 +674,7 @@ impl Scheduler {
         for lane in free {
             let Some(head) = self.queue.front() else { break };
             let head_req = head.req.clone();
-            let Some((shared, resident_rows, cow_rows, private)) =
+            let Some((shared, resident_rows, cow_rows, donor, private)) =
                 self.plan_bind(&head_req)
             else {
                 break; // head-of-line blocks: keep FIFO order
@@ -654,6 +690,21 @@ impl Scheduler {
                 self.pool.retain(page);
             }
             table.extend(self.pool.alloc(private).expect("count checked above"));
+            if self.pool.codec() != PageCodec::Fp16 && cow_rows > 0 {
+                // the COW fork's destination page holds ONLY the copied
+                // common-prefix rows right now: re-quantize them against
+                // a fresh scale derived from that narrower population —
+                // aliasing the donor's full-page header would put every
+                // subsequently scattered row on the wrong grid
+                let lo = shared_count * self.pool.page_len;
+                let copied = &p.req.prompt[lo..lo + cow_rows];
+                self.pool.cow_stamp(
+                    donor.expect("cow_rows > 0 implies a donor page"),
+                    table[shared_count],
+                    sim_rows_amax_k(copied),
+                    sim_rows_amax_v(copied),
+                );
+            }
             let kv = LaneKv::with_resident(p.req.prompt.len(), table,
                                            self.pool.page_len, self.pool.max_seq,
                                            resident_rows + cow_rows)
@@ -822,10 +873,22 @@ impl Scheduler {
         // refcount-1 by construction — a higher count here means the
         // planner aliased a live shared page into a write path.
         if len > 0 {
+            let quant = self.pool.codec() != PageCodec::Fp16;
             for logical in start / page_len..=(start + len - 1) / page_len {
                 let page = flight.kv.pages[logical];
                 assert_eq!(self.pool.refcount(page), 1,
                            "prefill chunk wrote into shared KV page {page}");
+                if quant {
+                    // quantize-on-scatter: re-stamp the page's scale over
+                    // every prompt row now resident in it — rows below
+                    // `start` landed earlier (prior chunks or the COW
+                    // copy) but are prompt rows all the same
+                    let lo = logical * page_len;
+                    let hi = (start + len).min((logical + 1) * page_len);
+                    let rows = &flight.req.prompt[lo..hi];
+                    self.pool.stamp_header(page, sim_rows_amax_k(rows),
+                                           sim_rows_amax_v(rows));
+                }
             }
         }
         if !flight.kv.is_warm() {
@@ -912,6 +975,19 @@ impl Scheduler {
         let page = flight.kv.pages[write_pos / page_len];
         assert_eq!(self.pool.refcount(page), 1,
                    "decode wrote into shared KV page {page}");
+        if self.pool.codec() != PageCodec::Fp16 {
+            // the decode scatter wrote the PREVIOUS token's KV at
+            // `write_pos`; re-stamp the page over every row now resident
+            // in it — prompt rows below the boundary, generated above
+            let prompt_len = flight.req.prompt.len();
+            let lo = (write_pos / page_len) * page_len;
+            let rows: Vec<i32> = (lo..=write_pos)
+                .map(|r| if r < prompt_len { flight.req.prompt[r] }
+                         else { flight.tokens[r - prompt_len] })
+                .collect();
+            self.pool.stamp_header(page, sim_rows_amax_k(&rows),
+                                   sim_rows_amax_v(&rows));
+        }
         flight.tokens.push(token);
         self.retire_if_finished(lane, now)
     }
@@ -1094,6 +1170,27 @@ impl Scheduler {
                 return Err(e);
             }
         };
+        if self.pool.codec() != PageCodec::Fp16 {
+            // the migration DMA carries the quantized page bytes AND
+            // their headers: re-stamp each imported page over the rows
+            // it holds (trailing reservation-only pages stay identity
+            // until their first decode write re-stamps them)
+            let prompt_len = m.req.prompt.len();
+            let rows_written = prompt_len + decoded_rows;
+            for (logical, &page) in pages.iter().enumerate() {
+                let lo = logical * self.pool.page_len;
+                if lo >= rows_written {
+                    break;
+                }
+                let hi = rows_written.min(lo + self.pool.page_len);
+                let rows: Vec<i32> = (lo..hi)
+                    .map(|r| if r < prompt_len { m.req.prompt[r] }
+                             else { m.tokens[r - prompt_len] })
+                    .collect();
+                self.pool.stamp_header(page, sim_rows_amax_k(&rows),
+                                       sim_rows_amax_v(&rows));
+            }
+        }
         self.lanes[lane] = Some(InFlight {
             req: m.req.clone(),
             seq: self.next_seq,
@@ -1737,6 +1834,131 @@ mod tests {
         assert!(!s.prefix_share());
         let s = Scheduler::paged(2, 4, 32, 8, 4).with_prefix_share(true);
         assert!(s.prefix_share());
+    }
+
+    // -- quantized page headers (PR 8) -------------------------------------
+
+    use super::super::kv::{sim_rows_amax_k as amax_k, sim_rows_amax_v as amax_v};
+
+    /// Expected header for a page holding exactly `rows`.
+    fn int8_header(rows: &[i32]) -> PageHeader {
+        PageHeader {
+            k_scale: PageCodec::Int8Sym.scale_for(amax_k(rows)),
+            v_scale: PageCodec::Int8Sym.scale_for(amax_v(rows)),
+        }
+    }
+
+    #[test]
+    fn kv_codec_coerced_to_fp16_on_dense_pools() {
+        let s = Scheduler::new(2, 4, 12, false).with_kv_codec(PageCodec::Int8Sym);
+        assert_eq!(s.kv_codec(), PageCodec::Fp16);
+        assert_eq!(s.kv_bytes_per_row_effective(), 2.0);
+        let s = Scheduler::paged(2, 4, 32, 4, 8).with_kv_codec(PageCodec::Int8Sym);
+        assert_eq!(s.kv_codec(), PageCodec::Int8Sym);
+        // 1 byte/elem + 8 header bytes over 4 rows
+        assert_eq!(s.kv_bytes_per_row_effective(), 3.0);
+    }
+
+    #[test]
+    fn quantized_writes_stamp_scales_over_resident_rows() {
+        // prompt 8 over 4-row pages, 3-token chunks: page 0 is stamped
+        // twice (partial then full), page 1 twice, and the decode page
+        // re-stamps on every generated row
+        let mut s = Scheduler::paged(2, 8, 32, 4, 8)
+            .with_kv_codec(PageCodec::Int8Sym);
+        let prompt: Vec<i32> = (100..108).collect();
+        s.submit(GenRequest::new(1, prompt.clone(), 4)).unwrap();
+        s.plan_admissions();
+        let table: Vec<u32> = s.page_table(0).unwrap().to_vec();
+        s.record_chunk(0, 3, 0).unwrap();
+        assert_eq!(s.page_header(table[0]), int8_header(&prompt[0..3]),
+                   "partial page: scale covers exactly the resident rows");
+        s.record_chunk(0, 3, 0).unwrap();
+        assert_eq!(s.page_header(table[0]), int8_header(&prompt[0..4]),
+                   "page 0 re-stamped when its last row lands");
+        assert_eq!(s.page_header(table[1]), int8_header(&prompt[4..6]));
+        s.record_chunk(0, 2, 77).unwrap();
+        assert_eq!(s.page_header(table[1]), int8_header(&prompt[4..8]));
+        // decode row 8 carries the KV of the prefill's first token (77)
+        s.record_decode(0, 78).unwrap();
+        assert_eq!(s.page_header(table[2]), int8_header(&[77]));
+        s.record_decode(0, 79).unwrap();
+        assert_eq!(s.page_header(table[2]), int8_header(&[77, 78]),
+                   "decode page re-stamps as generated rows accumulate");
+    }
+
+    #[test]
+    fn fp16_pool_headers_stay_identity() {
+        let mut s = Scheduler::paged(2, 8, 32, 4, 8); // default Fp16
+        s.submit(GenRequest::new(1, (100..108).collect(), 2)).unwrap();
+        s.plan_admissions();
+        let table: Vec<u32> = s.page_table(0).unwrap().to_vec();
+        s.record_prefill(0, 9).unwrap();
+        s.record_decode(0, 3).unwrap();
+        for page in table {
+            assert_eq!(s.page_header(page), PageHeader::default(),
+                       "fp16 pages must never stamp a non-identity scale");
+        }
+    }
+
+    #[test]
+    fn cow_fork_restamps_the_destination_scale() {
+        // craft a prompt whose page-1 amax lives in its LAST row: the
+        // COW fork copies only rows 4..7, so the destination's fresh
+        // scale must be strictly tighter than the donor's full-page one
+        let base = [20, 21, 22];
+        let spike = (0..4096)
+            .find(|&t| amax_k(&[t]) > amax_k(&base) && amax_v(&[t]) > amax_v(&base))
+            .expect("sim model has wide magnitude spread");
+        let mut prompt: Vec<i32> = (10..14).collect();
+        prompt.extend_from_slice(&base);
+        prompt.push(spike);
+        let mut s = Scheduler::paged(2, 8, 32, 4, 8)
+            .with_prefix_share(true)
+            .with_kv_codec(PageCodec::Int8Sym);
+        s.submit(GenRequest::new(1, prompt.clone(), 2)).unwrap();
+        s.plan_admissions();
+        s.record_prefill(0, 9).unwrap();
+        let donor = s.page_table(0).unwrap()[1];
+        assert_eq!(s.page_header(donor), int8_header(&prompt[4..8]));
+        // identical prompt: shares page 0, COW-forks rows 4..7 of page 1
+        s.submit(GenRequest::new(2, prompt.clone(), 2)).unwrap();
+        assert_eq!(s.plan_admissions(), vec![1]);
+        assert_eq!(s.shared_bind(1),
+                   Some(SharedBind { resident_rows: 7, shared_pages: 1,
+                                     cow_rows: 3 }));
+        let dest = s.page_table(1).unwrap()[1];
+        assert_ne!(dest, donor, "fork must land in a private page");
+        assert_eq!(s.page_header(dest), int8_header(&prompt[4..7]),
+                   "destination scale must cover the COPIED rows only");
+        assert_ne!(s.page_header(dest), s.page_header(donor),
+                   "aliasing the donor header would quantize the fork's \
+                    subsequent rows on the wrong grid");
+        // the fork's own final prompt row re-stamps over rows 4..8
+        s.record_chunk(1, 1, 5).unwrap();
+        assert_eq!(s.page_header(dest), int8_header(&prompt[4..8]));
+    }
+
+    #[test]
+    fn imported_lane_restamps_its_pages() {
+        let mk = || Scheduler::paged(2, 4, 32, 4, 8)
+            .with_kv_codec(PageCodec::Int8Sym);
+        let mut src = mk();
+        let prompt: Vec<i32> = (200..204).collect();
+        src.submit(GenRequest::new(1, prompt.clone(), 8)).unwrap();
+        src.plan_admissions();
+        src.record_prefill(0, 50).unwrap();
+        src.record_decode(0, 51).unwrap();
+        let moved = src.take_migratable();
+        assert_eq!(moved.len(), 1);
+        let mut dst = mk();
+        let lane = dst.import_lane(&moved[0].1).unwrap();
+        let table: Vec<u32> = dst.page_table(lane).unwrap().to_vec();
+        assert_eq!(dst.page_header(table[0]), int8_header(&prompt),
+                   "imported prompt page must carry its header");
+        // rows written = 4 prompt + 1 decoded (token 50's KV at row 4)
+        assert_eq!(dst.page_header(table[1]), int8_header(&[50]),
+                   "imported decode page must carry its header");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!               [--prefill-policy blocking|chunked] [--prefill-chunk C]
 //!               [--prefill-greedy] [--kv-pages P] [--page-len L]
 //!               [--kv-reserve upfront|lazy] [--kv-overcommit F]
+//!               [--kv-quant fp16|int8]
 //!               [--prefix-share] [--shared-prefix-len N]
 //!               [--shards N] [--shard-roles SPEC] [--artifacts DIR]
 //! flexllm ablate [--artifacts DIR]
@@ -26,8 +27,9 @@ use flexllm::config::{DeviceConfig, ModelDims};
 use flexllm::coordinator::{place_migration, place_shard, place_shard_affine,
                            split_budget, Engine, ExecBackend, GenRequest, GenResult,
                            KvLayout, MigratedLane, MockBackend, ModeledBackend,
-                           PrefillPolicy, ReservationPolicy, RouterBuilder,
-                           ServeConfig, ServeMetrics, ShardRole, TopologyConfig};
+                           PageCodec, PrefillPolicy, ReservationPolicy,
+                           RouterBuilder, ServeConfig, ServeMetrics, ShardRole,
+                           TopologyConfig};
 use flexllm::eval;
 use flexllm::report::fmt_secs;
 use flexllm::runtime::Runtime;
@@ -43,6 +45,7 @@ USAGE:
                 [--prefill-policy blocking|chunked] [--prefill-chunk C]
                 [--prefill-greedy] [--kv-pages P] [--page-len L]
                 [--kv-reserve upfront|lazy] [--kv-overcommit F]
+                [--kv-quant fp16|int8]
                 [--prefix-share] [--shared-prefix-len N]
                 [--shards N] [--shard-roles SPEC] [--artifacts DIR]
       Serve generation requests through the iteration-level scheduler.
@@ -78,6 +81,13 @@ USAGE:
       --kv-overcommit F shrink the mock/modeled paged pool to 1/F of the
                         dense memory budget (default 1; needs --kv-reserve
                         lazy to be useful — upfront admission just queues)
+      --kv-quant        fp16 (identity storage, default) or int8: store K/V
+                        page rows as symmetric INT8 with a per-page scale
+                        header, quantized on the scatter path and
+                        dequantized in-graph on gather. The same page
+                        memory then holds 2x the pages (mock/modeled size
+                        the default pool accordingly; pjrt needs a *_kv8
+                        artifact set). Needs the paged layout
       --prefix-share    admit requests whose page-aligned prompt prefix is
                         already resident in the paged pool with ZERO prefill
                         work for the shared span: pages are refcounted and
@@ -125,6 +135,11 @@ USAGE:
                       --page-len 32 --prefix-share --shared-prefix-len 96
                       # shared-prefix cache: compare the prefix hit rate
                       # and ttft against the same run without the flag
+        flexllm serve --backend modeled --requests 64 --spread 8 \
+                      --page-len 32 --kv-quant int8
+                      # int8 KV pages: same memory, double the pages —
+                      # compare peak concurrency and the dequant rows
+                      # line against the fp16 default
   flexllm ablate [--artifacts DIR]
       Run the Table V quantization ablation on the real artifacts.
   flexllm dse [--device u280|v80] [--stage prefill|decode|shard-mix]
@@ -349,13 +364,16 @@ fn describe_policy(p: PrefillPolicy) -> String {
 /// validated against the SIM pool shape (4 lanes × max_seq 320) only by
 /// [`sim_paged_geometry`] — the pjrt backend takes its geometry from
 /// the artifact manifest and uses the flags purely as a layout switch.
-fn paged_request(a: &Args, reserve: ReservationPolicy, overcommit: f64)
+fn paged_request(a: &Args, reserve: ReservationPolicy, overcommit: f64,
+                 kv_quant: PageCodec)
     -> Result<Option<(u64, u64)>>
 {
-    // lazy reservation / a real overcommit only exist on the paged
-    // layout, so they imply it; spelling out the DEFAULTS (`--kv-reserve
-    // upfront`, `--kv-overcommit 1`) must not switch the layout
-    let implied = reserve == ReservationPolicy::Lazy || overcommit > 1.0;
+    // lazy reservation / a real overcommit / a quantized codec only
+    // exist on the paged layout, so they imply it; spelling out the
+    // DEFAULTS (`--kv-reserve upfront`, `--kv-overcommit 1`,
+    // `--kv-quant fp16`) must not switch the layout
+    let implied = reserve == ReservationPolicy::Lazy || overcommit > 1.0
+        || kv_quant != PageCodec::Fp16;
     if !a.has("kv-pages") && !a.has("page-len") && !implied {
         return Ok(None);
     }
@@ -374,8 +392,11 @@ fn kv_reserve(a: &Args) -> Result<ReservationPolicy> {
 /// Resolve the mock/modeled paged geometry (their pools are hardcoded
 /// at 4 lanes × max_seq 320): `--page-len` must tile max_seq, and
 /// `--kv-pages 0`/absent defaults to the dense pool's memory budget
-/// shrunk by `--kv-overcommit` (an explicit `--kv-pages` wins).
-fn sim_paged_geometry(pages: u64, page_len: u64, overcommit: f64)
+/// shrunk by `--kv-overcommit` — and re-tiled for `--kv-quant`: the
+/// same page-buffer bytes hold 2x the pages under int8 (an explicit
+/// `--kv-pages` wins verbatim).
+fn sim_paged_geometry(pages: u64, page_len: u64, overcommit: f64,
+                      kv_quant: PageCodec)
     -> Result<(usize, usize)>
 {
     const SIM_MAX_SEQ: u64 = 320;
@@ -388,7 +409,9 @@ fn sim_paged_geometry(pages: u64, page_len: u64, overcommit: f64)
     }
     let pages = if pages == 0 {
         let dense = SIM_LANES * SIM_MAX_SEQ / page_len;
-        ((dense as f64 / overcommit).ceil() as u64).max(1)
+        let codec_factor =
+            PageCodec::Fp16.bytes_per_elem() / kv_quant.bytes_per_elem();
+        (((dense as f64 * codec_factor) / overcommit).ceil() as u64).max(1)
     } else {
         pages
     };
@@ -403,7 +426,8 @@ fn serve(a: &Args) -> Result<()> {
     let policy = prefill_policy(a)?;
     let reserve = kv_reserve(a)?;
     let overcommit = a.get_f64("kv-overcommit", 1.0)?;
-    let paged = paged_request(a, reserve, overcommit)?;
+    let kv_quant = PageCodec::parse(&a.get_str("kv-quant", "fp16"))?;
+    let paged = paged_request(a, reserve, overcommit, kv_quant)?;
     // --shard-roles overrides --shards: the role list IS the topology
     let topo = match a.get("shard-roles") {
         Some(spec) => TopologyConfig::parse(spec)?,
@@ -426,18 +450,20 @@ fn serve(a: &Args) -> Result<()> {
     };
     match a.get_str("backend", "pjrt").as_str() {
         "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop, policy,
-                             paged.is_some(), reserve, roles, prefix_share),
+                             paged.is_some(), reserve, roles, prefix_share,
+                             kv_quant),
         "mock" => {
             let mut engines: Vec<Engine<MockBackend>> = match paged {
                 Some((pages, page_len)) => {
                     let (pages, page_len) =
-                        sim_paged_geometry(pages, page_len, overcommit)?;
+                        sim_paged_geometry(pages, page_len, overcommit, kv_quant)?;
                     split_budget(pages, shards)?
                         .into_iter()
                         .enumerate()
                         .map(|(i, p)| {
                             let mut backend =
-                                MockBackend::paged(p, 128, 320, 512, page_len, p);
+                                MockBackend::paged(p, 128, 320, 512, page_len, p)
+                                    .with_kv_quant(kv_quant);
                             if reserve == ReservationPolicy::Lazy {
                                 // lazy growth legitimately extends tables
                                 backend = backend.with_table_growth();
@@ -480,13 +506,14 @@ fn serve(a: &Args) -> Result<()> {
             let mut engines: Vec<Engine<ModeledBackend>> = match paged {
                 Some((pages, page_len)) => {
                     let (pages, page_len) =
-                        sim_paged_geometry(pages, page_len, overcommit)?;
+                        sim_paged_geometry(pages, page_len, overcommit, kv_quant)?;
                     split_budget(pages, shards)?
                         .into_iter()
                         .enumerate()
                         .map(|(i, p)| {
                             let mut backend = ModeledBackend::u280_paged(
                                 p, 128, 320, 512, page_len, p, 4)
+                                .with_kv_quant(kv_quant)
                                 .with_role(roles[i]);
                             if reserve == ReservationPolicy::Lazy {
                                 backend = backend.with_table_growth();
@@ -684,7 +711,8 @@ fn print_shard_lines(per: &[ServeMetrics]) {
 #[allow(clippy::too_many_arguments)]
 fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool,
               stop: Vec<i32>, policy: PrefillPolicy, paged: bool,
-              reserve: ReservationPolicy, roles: Vec<ShardRole>, prefix_share: bool)
+              reserve: ReservationPolicy, roles: Vec<ShardRole>, prefix_share: bool,
+              kv_quant: PageCodec)
     -> Result<()>
 {
     let shards = roles.len();
@@ -722,6 +750,7 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
         .layout(layout)
         .reserve(reserve)
         .prefix_share(prefix_share)
+        .kv_quant(kv_quant)
         .roles(roles);
     let router = RouterBuilder::from_config(cfg).spawn(artifacts.to_string())?;
     if stream {
@@ -808,6 +837,11 @@ fn print_summary(results: &[GenResult], m: &ServeMetrics, lanes: usize) {
                       pages shared {}  cow copies {}",
                      m.prefix_hit_rate() * 100.0, m.prefix_hits, m.prefix_misses,
                      m.kv_pages_shared, m.cow_copies);
+        }
+        if !m.kv_codec.is_empty() && m.kv_codec != "fp16" {
+            println!("  kv codec: {} ({:.3} B/row-elem effective)  \
+                      rows dequantized {}",
+                     m.kv_codec, m.kv_bytes_per_row_effective, m.dequant_rows);
         }
     }
     let stopped = results.iter()

@@ -64,6 +64,14 @@ pub struct ServingInfo {
     pub kv_pages: Option<usize>,
     pub pages_per_lane: Option<usize>,
     pub page_cache_shape: Option<Vec<u64>>,
+    /// Page-pool storage codec of the quantized artifacts
+    /// (`decode_paged_q3_kv8` + `prefill_chunk_paged_q3_kv8`):
+    /// `"int8_sym"` when the pool literals are true INT8 with per-page
+    /// scale headers. Absent in fp artifact sets.
+    pub kv_codec: Option<String>,
+    /// Scale-header shape `[L, pages + scratch]` per K and V (f32),
+    /// present iff `kv_codec` is.
+    pub kv_header_shape: Option<Vec<u64>>,
 }
 
 /// Held-out eval batch layout (`eval_tokens.bin`).
@@ -229,6 +237,12 @@ impl Manifest {
             } else {
                 None
             },
+            kv_codec: sv.get("kv_codec").and_then(|v| v.as_str()).map(String::from),
+            kv_header_shape: if sv.get("kv_header_shape").is_some() {
+                Some(u64_vec(sv, "kv_header_shape")?)
+            } else {
+                None
+            },
         };
 
         let ev = req(&j, "eval")?;
@@ -340,6 +354,21 @@ mod tests {
         assert_eq!(m.serving.kv_pages, Some(9));
         assert_eq!(m.serving.pages_per_lane, Some(4));
         assert_eq!(m.serving.page_cache_shape, Some(vec![2, 10, 1, 6, 4]));
+        // fp artifact set: no page codec declared
+        assert_eq!(m.serving.kv_codec, None);
+        assert_eq!(m.serving.kv_header_shape, None);
+    }
+
+    #[test]
+    fn parses_kv_codec_when_present() {
+        let src = MINI.replace(
+            "\"prefill_len\": 16,",
+            "\"prefill_len\": 16, \"page_len\": 6, \"kv_pages\": 9, \
+             \"pages_per_lane\": 4, \"page_cache_shape\": [2, 10, 1, 6, 4], \
+             \"kv_codec\": \"int8_sym\", \"kv_header_shape\": [2, 10],");
+        let m = Manifest::parse(&src).unwrap();
+        assert_eq!(m.serving.kv_codec.as_deref(), Some("int8_sym"));
+        assert_eq!(m.serving.kv_header_shape, Some(vec![2, 10]));
     }
 
     #[test]

@@ -157,6 +157,17 @@ pub fn lit_i32(data: &[i32], shape: &[i64]) -> Result<xla::Literal> {
         .map_err(|e| anyhow!("reshape: {e}"))
 }
 
+/// Build an i8 literal of the given shape (quantized KV page pools).
+pub fn lit_i8(data: &[i8], shape: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("shape {shape:?} wants {n} elems, got {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(shape)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
 /// Scalar i32 literal (e.g. the decode position).
 pub fn lit_scalar_i32(v: i32) -> xla::Literal {
     xla::Literal::scalar(v)

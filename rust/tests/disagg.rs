@@ -30,8 +30,9 @@
 
 use std::collections::HashMap;
 
-use flexllm::coordinator::{ArrivalProcess, Engine, GenRequest, KvLayout,
-                           MockBackend, OpenLoopConfig, PagedPoolConfig,
+use flexllm::coordinator::{ArrivalProcess, Engine, ExecBackend, GenRequest,
+                           KvLayout, MockBackend, ModeledBackend,
+                           OpenLoopConfig, PageCodec, PagedPoolConfig,
                            PrefillPolicy, ReservationPolicy, RouterBuilder,
                            ShardRole, TokenEvent};
 use flexllm::dse::tune_shard_mix;
@@ -294,4 +295,73 @@ fn prefix_share_hits_migrate_byte_identically() {
     // shared pages never left shard 0 — the decode shard shares nothing
     assert_eq!(per[1].kv_pages_shared, 0,
                "migrated prefix pages must be private copies");
+}
+
+// ---------------------------------------------------------------------------
+// 4. Quantized pages migrate: half the DMA bytes, same stream (ISSUE 8)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn int8_pages_migrate_at_halved_bytes_with_exact_streams() {
+    // (a) the billed transfer: the SAME warm lane handed across the
+    // shard link at ready = 0, so the lane-ready timestamp IS the DMA
+    // time — INT8 rows must cross at exactly half the fp16 bytes
+    let p: Vec<i32> = (0..PREFILL as i32).collect();
+    let toks_fp = MockBackend::expected_tokens(&p, 2, VOCAB);
+    let toks_q = MockBackend::expected_tokens_quant(&p, 2, VOCAB, PAGE_LEN);
+    let mut fp = ModeledBackend::u280_paged(LANES, PREFILL, MAX_SEQ, VOCAB,
+                                            PAGE_LEN, PAGES, LANES);
+    let mut q = ModeledBackend::u280_paged(LANES, PREFILL, MAX_SEQ, VOCAB,
+                                           PAGE_LEN, PAGES, LANES)
+        .with_kv_quant(PageCodec::Int8Sym);
+    fp.import_lane(0, &p, &toks_fp, &[0, 1, 2], 0.0).unwrap();
+    q.import_lane(0, &p, &toks_q, &[0, 1, 2], 0.0).unwrap();
+    let (x_fp, x_q) = (ExecBackend::lane_ready_s(&fp, 0),
+                       ExecBackend::lane_ready_s(&q, 0));
+    assert!(x_fp > 0.0 && x_q > 0.0, "imports must bill DMA time");
+    assert!((x_fp / x_q - 2.0).abs() < 1e-9,
+            "INT8 migration must bill half the bytes: {x_fp}s vs {x_q}s");
+
+    // (b) the full disaggregated path: every multi-token request
+    // prefills on shard 0, migrates its INT8 pages, decodes on shard 1
+    // — and still replays its static quant stream byte for byte
+    let queue: Vec<GenRequest> = (0..8)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..PREFILL).map(|j| ((i * 53 + j * 13) % VOCAB) as i32).collect();
+            GenRequest::new(i as u64, prompt, 3 + (i % 4))
+        })
+        .collect();
+    let router = RouterBuilder::new()
+        .policy(PrefillPolicy::chunked(3))
+        .layout(KvLayout::Paged)
+        .reserve(ReservationPolicy::Upfront)
+        .roles(vec![ShardRole::Prefill, ShardRole::Decode])
+        .kv_quant(PageCodec::Int8Sym)
+        .spawn_with(|_| {
+            Ok(MockBackend::paged(LANES, PREFILL, MAX_SEQ, VOCAB, PAGE_LEN,
+                                  PAGES)
+                .with_kv_quant(PageCodec::Int8Sym))
+        })
+        .unwrap();
+    router.submit(queue.clone()).unwrap();
+    let results = router.drain().unwrap();
+    assert_eq!(results.len(), queue.len());
+    for r in &results {
+        let req = &queue[r.id as usize];
+        assert_eq!(r.tokens,
+                   MockBackend::expected_tokens_quant(&req.prompt,
+                                                      req.max_new_tokens,
+                                                      VOCAB, PAGE_LEN),
+                   "request {} quant stream diverged across migration", r.id);
+    }
+    let per = router.shard_metrics().unwrap();
+    assert_eq!(per[0].migrations_out, queue.len(),
+               "every multi-token request must migrate");
+    assert_eq!(per[1].migrations_in, queue.len());
+    // the codec is live on BOTH sides of the link
+    assert_eq!(per[0].kv_codec, "int8");
+    assert_eq!(per[1].kv_codec, "int8");
+    assert!(per[1].dequant_rows > 0,
+            "the decode shard must dequantize its gathers");
 }
