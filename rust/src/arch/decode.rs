@@ -38,7 +38,7 @@ impl DecodeConfig {
 }
 
 /// A composed decode accelerator instance.
-#[derive(Clone)]
+#[derive(Debug, Clone)]
 pub struct DecodeArch {
     pub cfg: DecodeConfig,
     pub model: ModelDims,

@@ -41,7 +41,7 @@ impl HmtConfig {
 }
 
 /// A composed HMT plug-in attached to a backbone accelerator.
-#[derive(Clone)]
+#[derive(Debug, Clone)]
 pub struct HmtPlugin {
     pub cfg: HmtConfig,
     pub model: ModelDims,

@@ -42,7 +42,7 @@ pub const STAGE_REPLICAS: usize = 2;
 /// sharing one device via rapid reconfiguration (~0.3 s on U280).
 /// `Clone` replicates the system per device — multi-engine sharding
 /// instantiates one modeled system per shard.
-#[derive(Clone)]
+#[derive(Debug, Clone)]
 pub struct AcceleratorSystem {
     pub prefill: PrefillArch,
     pub decode: DecodeArch,

@@ -37,7 +37,7 @@ impl PrefillConfig {
 }
 
 /// A composed prefill accelerator instance on a device.
-#[derive(Clone)]
+#[derive(Debug, Clone)]
 pub struct PrefillArch {
     pub cfg: PrefillConfig,
     pub model: ModelDims,

@@ -18,6 +18,7 @@ use crate::hls::{
 };
 
 /// Unified spatial design: one TP/WP point serves both stages.
+#[derive(Debug)]
 pub struct SpatialBaseline {
     pub model: ModelDims,
     pub device: DeviceConfig,
@@ -85,6 +86,7 @@ impl SpatialBaseline {
 /// lets FlexLLM hold INT4 activations. Net effect: engine widths scale
 /// by ≈3/4 in both stages — which the paper measures as 1.46× E2E /
 /// 1.35× decode / 1.10× energy in FlexLLM's favor.
+#[derive(Debug)]
 pub struct AlloBaseline {
     pub prefill: crate::arch::PrefillArch,
     pub decode: crate::arch::DecodeArch,
@@ -120,6 +122,7 @@ impl AlloBaseline {
 /// flows through the prefill engines, so TP−1 lanes idle and the
 /// FFN-sized engines must also carry the lm_head — this quantifies what
 /// the paper's stage customization is worth on its own.
+#[derive(Debug)]
 pub struct UnifiedAlloBaseline {
     pub prefill: crate::arch::PrefillArch,
 }

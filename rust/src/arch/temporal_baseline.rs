@@ -12,6 +12,7 @@ use crate::hls::{achieved_frequency, Resources};
 use crate::hls::calibration as cal;
 
 /// A FlightLLM-style monolithic engine sized to a device.
+#[derive(Debug)]
 pub struct TemporalBaseline {
     pub model: ModelDims,
     pub device: DeviceConfig,

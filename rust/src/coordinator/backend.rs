@@ -289,7 +289,7 @@ pub trait ExecBackend {
 /// replicates the backend per engine shard: clone a freshly constructed
 /// template once per shard and every shard starts from identical, empty
 /// state.
-#[derive(Clone)]
+#[derive(Debug, Clone)]
 pub struct MockBackend {
     spec: BackendSpec,
     /// Prompt fingerprint per occupied lane.
@@ -1005,7 +1005,7 @@ pub const MIGRATION_BW_BYTES_PER_S: f64 = 64e9;
 /// imbalanced placement shows up as one shard's clocks running ahead of
 /// the others' — imbalance costs modeled time, exactly like real
 /// replicated devices.
-#[derive(Clone)]
+#[derive(Debug, Clone)]
 pub struct ModeledBackend {
     inner: MockBackend,
     sys: AcceleratorSystem,
@@ -1475,6 +1475,23 @@ pub struct PjrtBackend {
     pages_per_lane: usize,
 }
 
+// Manual: xla literals and the client are runtime handles without
+// Debug under the real bindings; print the serving-relevant shape.
+impl std::fmt::Debug for PjrtBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtBackend")
+            .field("spec", &self.spec)
+            .field("cache_shape", &self.cache_shape)
+            .field("page_cache_shape", &self.page_cache_shape)
+            .field("pages_per_lane", &self.pages_per_lane)
+            .finish_non_exhaustive()
+    }
+}
+
+// The literal plumbing unwraps Options the invocation protocol just
+// populated (`out.pop()` after a fixed-arity execute, caches set by the
+// preceding branch) — artifact-shape contracts, not user input.
+#[allow(clippy::unwrap_used)]
 impl PjrtBackend {
     pub fn new(runtime: Runtime) -> Self {
         let m = &runtime.manifest;
@@ -1679,6 +1696,9 @@ impl PjrtBackend {
     }
 }
 
+// Same contract as the inherent impl: every unwrap pops a literal the
+// fixed-arity artifact call just returned.
+#[allow(clippy::unwrap_used)]
 impl ExecBackend for PjrtBackend {
     fn spec(&self) -> &BackendSpec {
         &self.spec

@@ -100,6 +100,21 @@ pub struct Engine<B: ExecBackend> {
     shared_lanes: HashSet<usize>,
 }
 
+// Manual: deriving would demand `B: Debug` of every backend; the
+// scheduling state is what violation reports need printed anyway.
+impl<B: ExecBackend> std::fmt::Debug for Engine<B> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("shard", &self.shard)
+            .field("role", &self.role)
+            .field("policy", &self.policy)
+            .field("layout", &self.layout)
+            .field("reserve", &self.reserve)
+            .field("scheduler", &self.scheduler)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Engine<PjrtBackend> {
     /// Engine over the real PJRT artifacts.
     pub fn pjrt(runtime: crate::runtime::Runtime) -> Self {
@@ -296,6 +311,19 @@ impl<B: ExecBackend> Engine<B> {
     /// then one decode iteration across every warm lane, retiring
     /// finished requests.
     pub fn step(&mut self) -> Result<StepReport> {
+        // Per-tick invariant probe (debug builds): every predicate the
+        // model checker and the fuzz suites enforce also runs here, on
+        // the state the previous tick (plus any inter-tick mutation —
+        // submits, migration imports) left behind. One predicate set,
+        // three consumers — see `verify::invariants`. Disabled under
+        // `verify-mutants` so the checker observes an injected fault
+        // as a reportable violation instead of a panic mid-step.
+        #[cfg(all(debug_assertions, not(feature = "verify-mutants")))]
+        crate::verify::invariants::assert_clean(
+            &self.scheduler,
+            &format!("shard {} per-tick probe", self.shard),
+        );
+
         let mut report = StepReport::default();
 
         // ---- admission + prefill phase -----------------------------------
@@ -435,6 +463,9 @@ impl<B: ExecBackend> Engine<B> {
         // one tick never did work, so it must not count toward the
         // peak-concurrency comparison the lazy acceptance test gates
         self.metrics.peak_active = self.metrics.peak_active.max(self.scheduler.active());
+        // snapshot (not sum): the pool's corruption counter is
+        // cumulative; always 0 in debug builds, which panic instead
+        self.metrics.kv_corruption_errors = self.scheduler.kv_corruptions();
         if self.layout == KvLayout::Paged {
             let stats = self.scheduler.page_stats();
             self.metrics.kv_pages_peak = self.metrics.kv_pages_peak.max(stats.pages_in_use);

@@ -21,6 +21,7 @@ const MEMATTN: &str = "hmt_memattn";
 
 /// Fixed-size FIFO of memory embeddings (the paper's queue of N
 /// most-recent segment memories).
+#[derive(Debug)]
 pub struct MemoryQueue {
     pub capacity: usize,
     pub d_model: usize,
@@ -69,6 +70,7 @@ pub struct SegmentTrace {
 }
 
 /// Drive the HMT pipeline over a long token stream.
+#[derive(Debug)]
 pub struct HmtDriver<'rt> {
     pub runtime: &'rt Runtime,
     pub queue: MemoryQueue,

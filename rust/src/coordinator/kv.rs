@@ -293,6 +293,13 @@ pub struct KvPool {
     codec: PageCodec,
     /// Per-page quantization headers (identity under `Fp16`).
     headers: Vec<PageHeader>,
+    /// Free-list corruption events absorbed in RELEASE builds: a
+    /// double-free, or a retain/release/refcount of a free or
+    /// out-of-range page. Debug builds panic at the corrupting call
+    /// instead; release builds skip the bad operation (never touching
+    /// the free list) and count it here, surfaced through
+    /// [`ServeMetrics::kv_corruption_errors`](super::request::ServeMetrics).
+    corruptions: usize,
 }
 
 impl KvPool {
@@ -314,7 +321,8 @@ impl KvPool {
         let free: Vec<u32> = (0..total_pages as u32).rev().collect();
         KvPool { page_len, prefill_len, max_seq, total_pages, free,
                  refs: vec![0; total_pages], codec: PageCodec::default(),
-                 headers: vec![PageHeader::default(); total_pages] }
+                 headers: vec![PageHeader::default(); total_pages],
+                 corruptions: 0 }
     }
 
     /// Set the pool's page storage codec (builder). `Fp16` (the
@@ -405,6 +413,30 @@ impl KvPool {
         if n == 0 {
             return Err(anyhow!("cannot allocate 0 pages"));
         }
+        // Injected fault (`verify-mutants` feature, model-checker
+        // mutation gate): a stale free-page report admitted a request
+        // the pool cannot back — "satisfy" the shortage by handing out
+        // a duplicate of a page that is already live, exactly the
+        // silent aliasing a corrupt free list would produce.
+        #[cfg(feature = "verify-mutants")]
+        if n > self.free.len()
+            && crate::verify::mutants::active(
+                crate::verify::mutants::Mutant::StaleFreeReport)
+        {
+            if let Some(victim) = (0..self.total_pages as u32)
+                .find(|&p| self.refs[p as usize] > 0)
+            {
+                let mut pages = self.free.split_off(0);
+                for &p in &pages {
+                    self.refs[p as usize] = 1;
+                    self.headers[p as usize] = PageHeader::default();
+                }
+                while pages.len() < n {
+                    pages.push(victim);
+                }
+                return Ok(pages);
+            }
+        }
         if n > self.free.len() {
             return Err(anyhow!(
                 "KV pages exhausted: want {n}, {} of {} free",
@@ -423,18 +455,39 @@ impl KvPool {
     /// Add an owner to an already-allocated page (a lane binding a
     /// shared-prefix page, or the prefix index pinning one resident).
     ///
-    /// Panics on a free or foreign page: retaining a page nobody owns
-    /// would resurrect freed memory into a live page table.
+    /// Debug builds panic on a free or foreign page: retaining a page
+    /// nobody owns would resurrect freed memory into a live page
+    /// table. Release builds refuse the retain (the free list stays
+    /// intact) and count a corruption event instead of taking the
+    /// whole serving process down.
     pub fn retain(&mut self, page: u32) {
-        assert!((page as usize) < self.total_pages,
-                "retained foreign KV page id {page} ({} pages)", self.total_pages);
-        assert!(self.refs[page as usize] > 0, "retained free KV page {page}");
+        if (page as usize) >= self.total_pages {
+            debug_assert!(false, "retained foreign KV page id {page} ({} pages)",
+                          self.total_pages);
+            self.corruptions += 1;
+            return;
+        }
+        if self.refs[page as usize] == 0 {
+            debug_assert!(false, "retained free KV page {page}");
+            self.corruptions += 1;
+            return;
+        }
         self.refs[page as usize] += 1;
     }
 
-    /// Owners of `page` (0 = on the free list).
+    /// Owners of `page` (0 = on the free list). A foreign page id
+    /// reads as 0 owners in release builds (debug builds panic — the
+    /// caller's table is already corrupt).
     pub fn refcount(&self, page: u32) -> u32 {
-        self.refs[page as usize]
+        match self.refs.get(page as usize) {
+            Some(&r) => r,
+            None => {
+                debug_assert!(false,
+                              "refcount of foreign KV page id {page} ({} pages)",
+                              self.total_pages);
+                0
+            }
+        }
     }
 
     /// Drop one ownership reference from each of `pages`, returning a
@@ -442,23 +495,50 @@ impl KvPool {
     /// shared prefix pages therefore reclaims exactly its private
     /// pages; the shared ones stay resident for their other owners.
     ///
-    /// Panics on a double-free or a foreign page id: a corrupt free
-    /// list would silently alias two live requests' caches, so the
-    /// invariant is checked unconditionally (pools are small — the
-    /// check is noise next to one decode invocation).
+    /// Debug builds panic on a double-free or a foreign page id: a
+    /// corrupt free list would silently alias two live requests'
+    /// caches, so the invariant is checked at every call (pools are
+    /// small — the check is noise next to one decode invocation).
+    /// Release builds skip the bad page — the free list is never
+    /// touched by an id that cannot legally reach it — and count a
+    /// corruption event the metrics surface instead.
     pub fn release(&mut self, pages: Vec<u32>) {
         // re-push in table order: `alloc` returns the free list's tail
         // in storage order, so an immediate realloc hands the same
         // pages back in the same order
         for p in pages.into_iter() {
-            assert!((p as usize) < self.total_pages,
-                    "released foreign KV page id {p} ({} pages)", self.total_pages);
-            assert!(self.refs[p as usize] > 0, "double-free of KV page {p}");
+            if (p as usize) >= self.total_pages {
+                debug_assert!(false, "released foreign KV page id {p} ({} pages)",
+                              self.total_pages);
+                self.corruptions += 1;
+                continue;
+            }
+            if self.refs[p as usize] == 0 {
+                debug_assert!(false, "double-free of KV page {p}");
+                self.corruptions += 1;
+                continue;
+            }
+            // Injected fault (`verify-mutants`): drop the refcount
+            // decrement on a SHARED page — the canonical COW leak the
+            // model checker's mutation gate must catch.
+            #[cfg(feature = "verify-mutants")]
+            if self.refs[p as usize] > 1
+                && crate::verify::mutants::active(
+                    crate::verify::mutants::Mutant::SkipSharedRelease)
+            {
+                continue;
+            }
             self.refs[p as usize] -= 1;
             if self.refs[p as usize] == 0 {
                 self.free.push(p);
             }
         }
+    }
+
+    /// Free-list corruption events absorbed so far (always 0 in debug
+    /// builds, which panic at the corrupting call instead).
+    pub fn corruption_events(&self) -> usize {
+        self.corruptions
     }
 
     /// Pages with at least one owner, counted from the refcount table —
@@ -553,6 +633,14 @@ impl PrefixIndex {
     /// Registered chunk entries (one per resident page).
     pub fn len(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Every page the index holds a retain on (one element per entry,
+    /// unordered) — the referent list the `refcount-consistency`
+    /// predicate ([`crate::verify::invariants`]) reconciles against
+    /// the pool's refcounts.
+    pub fn retained_pages(&self) -> Vec<u32> {
+        self.entries.values().map(|e| e.page).collect()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -31,6 +31,12 @@
 //! `tests/sharding.rs` pins `shards(1)` against the unsharded engine
 //! bit for bit across the whole policy matrix.
 
+// The coordinator owns shard threads and user requests: a panic here
+// poisons the fleet, so `.unwrap()` is lint-banned across the subtree
+// (`verify::archlint` additionally bans `.expect(` in this façade
+// file). The PJRT literal plumbing carries a justified module allow.
+#![warn(clippy::unwrap_used)]
+
 mod backend;
 mod config;
 mod engine;
@@ -208,6 +214,7 @@ struct Subscriber {
 /// Derefs to the underlying receiver (`recv`/`try_iter`/…); dropping it
 /// unsubscribes — the coordinator prunes the dead entry on its next
 /// report, events or not.
+#[derive(Debug)]
 pub struct TokenSubscription {
     rx: mpsc::Receiver<TokenEvent>,
     _live: Arc<()>,
@@ -404,12 +411,12 @@ impl RouterBuilder {
                 }
             }
         }
-        if specs.windows(2).any(|w| w[0] != w[1]) {
+        if let Some(mismatch) = specs.iter().find(|s| **s != specs[0]) {
             shutdown_states(&mut states);
             return Err(anyhow!(
                 "engine shards are not uniform: every shard must coerce to the \
                  same policy/layout/pool geometry ({:?} vs {:?})",
-                specs[0], specs.iter().find(|s| **s != specs[0]).unwrap()));
+                specs[0], mismatch));
         }
         // the config validated roles against the REQUESTED paged layout;
         // re-check against what the backends actually coerced to —
@@ -476,6 +483,7 @@ fn shutdown_states(states: &mut [ShardState]) {
 
 /// Thread-backed request router over N engine shards: spawn once,
 /// submit from anywhere. Build with [`RouterBuilder`].
+#[derive(Debug)]
 pub struct Router {
     tx: mpsc::Sender<FrontMsg>,
     handle: Option<JoinHandle<()>>,
@@ -1079,7 +1087,7 @@ impl Coordinator {
             else {
                 break;
             };
-            let (seq, req) = self.overflow.pop_front().expect("front checked above");
+            let Some((seq, req)) = self.overflow.pop_front() else { break };
             self.dispatch(shard, seq, req);
         }
     }
@@ -1147,8 +1155,7 @@ impl Coordinator {
             else {
                 break;
             };
-            let (global, m) =
-                self.migrating.pop_front().expect("front checked above");
+            let Some((global, m)) = self.migrating.pop_front() else { break };
             self.dispatch_migration(target, global, m);
         }
     }

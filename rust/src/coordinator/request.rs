@@ -188,6 +188,12 @@ pub struct ServeMetrics {
     /// fp16) — the in-graph ALU work the halved HBM traffic is bought
     /// with.
     pub dequant_rows: usize,
+    /// Free-list corruption events the KV pool absorbed instead of
+    /// panicking: double-releases, retains/releases of free or
+    /// out-of-range pages. Debug builds panic at the corrupting call,
+    /// so this is only ever nonzero in release builds — and ANY
+    /// nonzero value is a bug to chase with `flexllm verify`.
+    pub kv_corruption_errors: usize,
     /// Page occupancy samples (pages in use / total), one per SAMPLED
     /// tick — bounded by decimation, see [`ServeMetrics::record_page_sample`].
     pub page_occupancy_s: Vec<f64>,
@@ -299,6 +305,7 @@ impl ServeMetrics {
             m.kv_bytes_per_row_effective =
                 m.kv_bytes_per_row_effective.max(s.kv_bytes_per_row_effective);
             m.dequant_rows += s.dequant_rows;
+            m.kv_corruption_errors += s.kv_corruption_errors;
             m.page_occupancy_s.extend_from_slice(&s.page_occupancy_s);
             m.page_frag_s.extend_from_slice(&s.page_frag_s);
         }

@@ -273,6 +273,7 @@ impl InFlight {
 }
 
 /// Admission queue + page pool + in-flight state.
+#[derive(Debug)]
 pub struct Scheduler {
     pool: KvPool,
     queue: VecDeque<Pending>,
@@ -495,6 +496,45 @@ impl Scheduler {
         self.lanes.iter().flatten().map(|f| f.req.id).collect()
     }
 
+    /// Ids waiting in the admission queue, FIFO order. Together with
+    /// [`Scheduler::inflight_ids`] this is every request the shard is
+    /// responsible for — the `verify` fleet predicates prove an id is
+    /// never live on two shards at once.
+    pub fn queued_ids(&self) -> Vec<u64> {
+        self.queue.iter().map(|p| p.req.id).collect()
+    }
+
+    /// Owners of `page` in the underlying pool (0 = free). A read-only
+    /// passthrough for the shared invariant predicates
+    /// ([`crate::verify::invariants`]): refcount consistency is checked
+    /// from OUTSIDE the scheduler, against the public referent surface
+    /// (lane tables + prefix retains).
+    pub fn page_refcount(&self, page: u32) -> u32 {
+        self.pool.refcount(page)
+    }
+
+    /// Next cache write position of the request bound to `lane`
+    /// (`None` when unbound) — the cursor the `cow-write-safety`
+    /// predicate checks against page refcounts.
+    pub fn lane_pos(&self, lane: usize) -> Option<usize> {
+        self.flight(lane).ok().map(|f| f.kv.pos)
+    }
+
+    /// Every page the prefix index currently retains (one element per
+    /// retained reference). Empty when prefix sharing is off.
+    pub fn prefix_retained_pages(&self) -> Vec<u32> {
+        self.prefix.as_ref().map(PrefixIndex::retained_pages).unwrap_or_default()
+    }
+
+    /// Free-list corruption events the pool absorbed instead of
+    /// panicking (release builds only — debug builds panic at the
+    /// corrupting call). Snapshot-copied into
+    /// [`ServeMetrics::kv_corruption_errors`](super::request::ServeMetrics)
+    /// each tick.
+    pub fn kv_corruptions(&self) -> usize {
+        self.pool.corruption_events()
+    }
+
     /// Pool-wide page accounting (occupancy / fragmentation metrics).
     pub fn page_stats(&self) -> PageStats {
         let mut stats = PageStats {
@@ -637,7 +677,15 @@ impl Scheduler {
             let (shared, resident_rows, cow_rows, donor) = self.prefix_match(req);
             let logical = self.pool.pages_for(self.admission_rows(req));
             let private = logical - shared.len().min(logical);
-            if private <= self.pool.free_pages() {
+            let mut free = self.pool.free_pages();
+            if crate::verify::mutants::active(
+                crate::verify::mutants::Mutant::StaleFreeReport)
+            {
+                // injected fault (`verify-mutants`): admission trusts a
+                // stale report of one more free page than the pool has
+                free += 1;
+            }
+            if private <= free {
                 return Some((shared, resident_rows, cow_rows, donor, private));
             }
             let evicted = match self.prefix.as_mut() {
@@ -1104,7 +1152,14 @@ impl Scheduler {
                 continue;
             }
             let flight = self.lanes[lane].take().expect("lane checked above");
-            self.pool.release(flight.kv.pages);
+            if !crate::verify::mutants::active(
+                crate::verify::mutants::Mutant::DropDonorRelease)
+            {
+                // injected fault (`verify-mutants`) when skipped: the
+                // donor forgets the migrated lane's pages — a leak the
+                // model checker must pin on this shard
+                self.pool.release(flight.kv.pages);
+            }
             out.push((lane, MigratedLane {
                 req: flight.req,
                 tokens: flight.tokens,

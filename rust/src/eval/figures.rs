@@ -82,6 +82,7 @@ pub fn fig6() -> String {
 }
 
 /// One Fig. 7 measurement row across all five systems.
+#[derive(Debug)]
 pub struct Fig7Row {
     pub lp: u64,
     pub ld: u64,
@@ -170,6 +171,7 @@ pub fn fig7() -> String {
 }
 
 /// Headline average ratios (the abstract's numbers).
+#[derive(Debug)]
 pub struct Fig7Headline {
     pub u280_e2e: f64,
     pub u280_tput: f64,
@@ -224,6 +226,7 @@ fn fig8_decode_len(ctx: u64) -> u64 {
     (ctx / 4).max(512)
 }
 
+#[derive(Debug)]
 pub struct Fig8Row {
     pub ctx: u64,
     /// prefill seconds: [A100 full, U280 full (theoretical), U280+HMT, V80+HMT]

@@ -57,6 +57,7 @@ mod cal {
 }
 
 /// An A100 running the target model in a given mode.
+#[derive(Debug)]
 pub struct GpuBaseline {
     pub device: DeviceConfig,
     pub model: ModelDims,

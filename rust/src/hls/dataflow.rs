@@ -31,6 +31,19 @@ pub struct Node {
     pub copies: u64,
 }
 
+// Manual: `ModuleRef` is `Arc<dyn ModuleTemplate>`; print the module's
+// name instead of demanding Debug of every template.
+impl std::fmt::Debug for Node {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Node")
+            .field("id", &self.id)
+            .field("module", &self.module.name())
+            .field("invocations_per_token", &self.invocations_per_token)
+            .field("copies", &self.copies)
+            .finish()
+    }
+}
+
 impl Node {
     /// Effective steady-state cycles this node spends per pipeline token.
     pub fn service_per_token(&self) -> f64 {
@@ -46,6 +59,15 @@ pub struct DataflowGraph {
     /// (producer, consumer, stream) triples.
     pub edges: Vec<(NodeId, NodeId, StreamEdge)>,
     names: HashMap<String, NodeId>,
+}
+
+impl std::fmt::Debug for DataflowGraph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DataflowGraph")
+            .field("nodes", &self.nodes)
+            .field("edges", &self.edges)
+            .finish_non_exhaustive()
+    }
 }
 
 impl DataflowGraph {

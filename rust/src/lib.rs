@@ -21,7 +21,25 @@
 //!   backends (PJRT / mock / pipeline-sim-modeled), per-lane KV pool,
 //!   HMT segment driver;
 //! * the **evaluation harness** ([`eval`]) regenerating every table and
-//!   figure of the paper.
+//!   figure of the paper;
+//! * the **verify subsystem** ([`verify`]) — shared invariant
+//!   predicates, a bounded exhaustive model checker for the KV
+//!   page/refcount/migration state machine, and the architectural lint
+//!   gate.
+
+// Crate-wide architecture gates (ISSUE 9; `verify::archlint` carries
+// the rules the compiler cannot express). Every public type must be
+// printable — counterexamples and violation reports have to show the
+// state they indict.
+#![forbid(unsafe_code)]
+#![warn(missing_debug_implementations)]
+// Curated hygiene subset (kept deliberately small; each lint is
+// all-clean today and cheap to keep clean):
+#![warn(clippy::dbg_macro)]
+#![warn(clippy::todo)]
+#![warn(clippy::unimplemented)]
+#![warn(clippy::macro_use_imports)]
+#![warn(clippy::mut_mut)]
 
 /// In-tree `anyhow` replacement (the offline build has no external
 /// dependencies — see `util::error`). The module keeps the `anyhow`
@@ -46,5 +64,6 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod util;
+pub mod verify;
 
 pub use config::{DeviceConfig, ModelDims, Precision};

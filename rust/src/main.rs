@@ -14,6 +14,8 @@
 //! flexllm dse [--device u280|v80] [--stage prefill|decode|shard-mix]
 //!             [--prefill N] [--decode N] [--shards N] [--rate R]
 //! flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
+//! flexllm verify [--bounded] [--arch-lint] [--depth N] [--config NAME]
+//!                [--replay SPEC] [--trace-out PATH]
 //! ```
 //!
 //! (CLI is hand-rolled: the offline vendored crate set has no clap.)
@@ -151,6 +153,35 @@ USAGE:
       KV memory, reporting the best mixed vs best homogeneous topology.
   flexllm simulate [--device u280|v80] [--stage prefill|decode] [--tokens N]
       Run the dataflow pipeline simulator on a stage architecture.
+  flexllm verify [--bounded] [--arch-lint] [--depth N] [--config NAME]
+                 [--replay SPEC] [--trace-out PATH]
+      Check the KV page/refcount/migration state machine and the crate's
+      architectural rules. With no mode flag BOTH gates run. Any
+      violation prints a minimized, replayable counterexample and the
+      command exits nonzero (the CI gate).
+      --bounded         bounded exhaustive model check: drive the real
+                        scheduler + paged KV pool through every
+                        interleaving of the first --depth scheduling
+                        decisions (arrival order, tick order, migration
+                        timing) across the 16-cell {upfront,lazy} ×
+                        {share,noshare} × {unified,disagg} × {fp16,int8}
+                        matrix, asserting the verify::invariants
+                        predicates after every step
+      --arch-lint       dependency-free source lint over rust/src: pool
+                        alloc/release/retain stay inside kv.rs and
+                        scheduler.rs, no pool-array indexing outside
+                        kv.rs, no unwrap/expect in the coordinator
+                        facade, every public coordinator type is Debug
+      --depth N         choice points explored exhaustively per episode
+                        (default 6; deeper decisions take the first
+                        enabled action)
+      --config NAME     restrict --bounded to one matrix cell, e.g.
+                        lazy-share-disagg-int8
+      --replay SPEC     re-run one recorded trace deterministically,
+                        e.g. \"lazy-share-disagg-int8:0,2,1\" (the spec
+                        printed with every counterexample)
+      --trace-out PATH  write the replay specs of any counterexamples
+                        to PATH (one per line; CI uploads it)
 ";
 
 /// Minimal flag parser: --key value pairs plus boolean --flags.
@@ -259,6 +290,10 @@ fn main() -> Result<()> {
                 &a.get_str("stage", "prefill"),
                 a.get_u64("tokens", 1024)?,
             )
+        }
+        "verify" => {
+            let a = Args::parse(rest, &["bounded", "arch-lint"])?;
+            verify(&a)
         }
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -945,6 +980,98 @@ fn simulate(device: &str, stage: &str, tokens: u64) -> Result<()> {
         }
         other => bail!("unknown stage '{other}' (prefill|decode)"),
     }
+    Ok(())
+}
+
+/// The `verify` gate: bounded exhaustive model check of the KV
+/// page/refcount/migration machine plus the architectural source lint.
+/// Prints one line per matrix cell, a full minimized counterexample for
+/// every violation, and fails (nonzero exit) if anything fired.
+fn verify(a: &Args) -> Result<()> {
+    use flexllm::verify::{archlint, mc};
+    let budget = mc::McBudget {
+        branch_depth: a.get_u64("depth", 6)?.max(1) as usize,
+        ..mc::McBudget::default()
+    };
+    let bounded = a.has("bounded");
+    let arch = a.has("arch-lint");
+    let replay = a.get("replay");
+    // no mode flag → run everything (the CI default)
+    let all = !bounded && !arch && replay.is_none();
+
+    let mut counterexamples: Vec<mc::Counterexample> = Vec::new();
+    let mut lint_violations = 0usize;
+
+    if let Some(spec) = replay {
+        let report = mc::replay(spec, &budget)?;
+        match report.violation {
+            Some(ce) => {
+                println!("{ce}");
+                counterexamples.push(ce);
+            }
+            None => println!("replay {spec}: clean ({} states visited)",
+                             report.unique_states),
+        }
+    }
+    if bounded || all {
+        let reports = match a.get("config") {
+            Some(name) => {
+                let cfg = mc::config_by_name(name).ok_or_else(|| anyhow!(
+                    "unknown config '{name}' — the matrix cells are named \
+                     <upfront|lazy>-<share|noshare>-<unified|disagg>-<fp16|int8>"))?;
+                vec![mc::check_config(&cfg, &budget)?]
+            }
+            None => mc::check_all(&budget)?,
+        };
+        let mut episodes = 0usize;
+        let mut states = 0usize;
+        for r in &reports {
+            println!("  {:<30} {:>7} interleavings  {:>7} states  {}",
+                     r.config, r.interleavings, r.unique_states,
+                     if r.violation.is_some() { "VIOLATION" } else { "ok" });
+            episodes += r.interleavings;
+            states += r.unique_states;
+            if let Some(ce) = &r.violation {
+                println!("{ce}");
+                counterexamples.push(ce.clone());
+            }
+        }
+        println!("bounded model check: {} configs, {} interleavings, {} unique \
+                  states at depth {}",
+                 reports.len(), episodes, states, budget.branch_depth);
+    }
+    if arch || all {
+        let root = archlint::default_src_root();
+        let violations = archlint::lint(&root)?;
+        for v in &violations {
+            println!("  {v}");
+        }
+        lint_violations = violations.len();
+        println!("arch lint over {}: {}", root.display(),
+                 if lint_violations == 0 {
+                     "clean".to_string()
+                 } else {
+                     format!("{lint_violations} violation(s)")
+                 });
+    }
+    if let Some(path) = a.get("trace-out") {
+        if counterexamples.is_empty() {
+            // an empty artifact still tells CI the gate ran
+            std::fs::write(path, "")?;
+        } else {
+            let specs: String = counterexamples
+                .iter()
+                .map(|ce| format!("{}\n", ce.replay_spec()))
+                .collect();
+            std::fs::write(path, specs)?;
+            println!("wrote {} replay spec(s) to {path}", counterexamples.len());
+        }
+    }
+    if !counterexamples.is_empty() || lint_violations > 0 {
+        bail!("verify failed: {} counterexample(s), {} arch-lint violation(s)",
+              counterexamples.len(), lint_violations);
+    }
+    println!("verify: all gates clean");
     Ok(())
 }
 

@@ -37,6 +37,17 @@ pub struct Runtime {
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
+// Manual: the PJRT client and executable cache are runtime handles
+// without Debug under the real bindings.
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("manifest", &self.manifest)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Runtime {
     /// Open the artifact directory (must contain `manifest.json`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {

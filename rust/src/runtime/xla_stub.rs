@@ -64,6 +64,7 @@ impl Literal {
     }
 }
 
+#[derive(Debug)]
 pub struct PjRtClient;
 
 impl PjRtClient {
@@ -80,6 +81,7 @@ impl PjRtClient {
     }
 }
 
+#[derive(Debug)]
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
@@ -88,6 +90,7 @@ impl PjRtBuffer {
     }
 }
 
+#[derive(Debug)]
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
@@ -96,6 +99,7 @@ impl PjRtLoadedExecutable {
     }
 }
 
+#[derive(Debug)]
 pub struct HloModuleProto;
 
 impl HloModuleProto {
@@ -104,6 +108,7 @@ impl HloModuleProto {
     }
 }
 
+#[derive(Debug)]
 pub struct XlaComputation;
 
 impl XlaComputation {

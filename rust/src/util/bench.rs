@@ -46,6 +46,7 @@ fn fmt_dur(d: Duration) -> String {
 }
 
 /// A bench group with a shared time budget per benchmark.
+#[derive(Debug)]
 pub struct Bench {
     budget: Duration,
     min_samples: usize,

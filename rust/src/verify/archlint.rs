@@ -1,0 +1,313 @@
+//! Architectural lint: dependency-free source rules the compiler
+//! cannot express (ISSUE 9 tentpole, layer 3).
+//!
+//! `rustc` enforces privacy, clippy enforces style — neither can say
+//! "KV page ownership mutations belong to exactly two files" or "the
+//! coordinator façade never panics on user input". These are
+//! ARCHITECTURAL decisions, and they erode one innocent-looking commit
+//! at a time. This scanner pins them in CI (`flexllm verify
+//! --arch-lint`):
+//!
+//! | rule | what it pins |
+//! |------|--------------|
+//! | `pool-ownership` | `pool.alloc(` / `pool.release(` / `pool.retain(` appear only in `coordinator/kv.rs` and `coordinator/scheduler.rs` — every page ownership change flows through the two files the invariant predicates audit. |
+//! | `page-encapsulation` | the pool's internal arrays (`.refs[`, `.free[`, `.headers[`) are indexed only inside `coordinator/kv.rs`. |
+//! | `no-panic-facade` | no `.unwrap()` / `.expect(` in `coordinator/mod.rs` non-test code — the Router façade turns errors into values, never panics (it owns shard threads; a panic poisons the fleet). |
+//! | `debug-everywhere` | every `pub struct` / `pub enum` in `coordinator/` derives or implements `Debug`, so counterexamples and violation reports can always print the state they indict. |
+//!
+//! The scan is linewise and deliberately dumb: no parser, no syn, no
+//! dependencies — false positives are handled by an explicit
+//! `// archlint: allow` on the offending or preceding line, which is
+//! itself greppable (an audit trail of every exemption). Test modules
+//! (everything from the first `#[cfg(test)]` line on) are exempt:
+//! archlint governs production code.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::anyhow::{anyhow, Result};
+
+/// One broken architecture rule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LintViolation {
+    /// Path relative to the scanned source root.
+    pub file: String,
+    /// 1-based line of the offending declaration or call.
+    pub line: usize,
+    /// Stable rule id (the table in the module docs).
+    pub rule: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for LintViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule,
+               self.detail)
+    }
+}
+
+/// The crate source root this binary was built from — the default
+/// scan target for `flexllm verify --arch-lint` and the tier-1 suite.
+pub fn default_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src")
+}
+
+/// Scan every `.rs` file under `src_root` and return all rule
+/// violations (empty = architecture holds).
+pub fn lint(src_root: &Path) -> Result<Vec<LintViolation>> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut sources = Vec::with_capacity(files.len());
+    for path in &files {
+        let rel = path.strip_prefix(src_root).unwrap_or(path)
+            .to_string_lossy().replace('\\', "/");
+        let text = fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        sources.push((rel, text));
+    }
+    // the Debug rule accepts a manual `impl ... Debug for T` anywhere
+    // in the crate, so the whole source set is the lookup corpus
+    let corpus: String = sources.iter()
+        .map(|(_, text)| text.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+    let mut out = Vec::new();
+    for (rel, text) in &sources {
+        lint_source(rel, text, &corpus, &mut out);
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(dir)
+        .map_err(|e| anyhow!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow!("walk {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Apply every rule to one file. `rel` is the path relative to the
+/// source root (forward slashes); `corpus` is the concatenated crate
+/// source (for manual `Debug` impl lookup).
+pub fn lint_source(rel: &str, text: &str, corpus: &str,
+                   out: &mut Vec<LintViolation>)
+{
+    let fname = rel.rsplit('/').next().unwrap_or(rel);
+    let in_coordinator = rel.starts_with("coordinator/");
+    // patterns are assembled at runtime so this scanner never matches
+    // its own source
+    let pool_calls: Vec<String> = ["alloc", "release", "retain"]
+        .iter().map(|m| format!("pool.{m}(")).collect();
+    let pool_fields: Vec<String> = ["refs", "free", "headers"]
+        .iter().map(|f| format!(".{f}[")).collect();
+    let unwraps: Vec<String> = [("unwrap", "()"), ("expect", "(")]
+        .iter().map(|(m, tail)| format!(".{m}{tail}")).collect();
+
+    let lines: Vec<&str> = text.lines().collect();
+    let mut prev: &str = "";
+    for (i, &line) in lines.iter().enumerate() {
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("#[cfg(test)]") {
+            break; // test modules are exempt from every rule
+        }
+        let allowed = line.contains("archlint: allow")
+            || prev.contains("archlint: allow");
+        prev = line;
+        if allowed || trimmed.starts_with("//") {
+            continue;
+        }
+        let lineno = i + 1;
+        if fname != "kv.rs" && fname != "scheduler.rs" {
+            for pat in &pool_calls {
+                if line.contains(pat.as_str()) {
+                    out.push(LintViolation {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "pool-ownership",
+                        detail: format!(
+                            "`{pat}..` outside coordinator/kv.rs and \
+                             coordinator/scheduler.rs — page ownership \
+                             mutations are confined to the audited files"),
+                    });
+                }
+            }
+        }
+        if fname != "kv.rs" {
+            for pat in &pool_fields {
+                if line.contains(pat.as_str()) {
+                    out.push(LintViolation {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "page-encapsulation",
+                        detail: format!(
+                            "`{pat}..` outside coordinator/kv.rs — the \
+                             pool's arrays are not indexed directly"),
+                    });
+                }
+            }
+        }
+        if rel == "coordinator/mod.rs" {
+            for pat in &unwraps {
+                if line.contains(pat.as_str()) {
+                    out.push(LintViolation {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "no-panic-facade",
+                        detail: format!(
+                            "`{pat}..` in the Router façade — a panic \
+                             here poisons every shard thread; return \
+                             the error instead"),
+                    });
+                }
+            }
+        }
+        if in_coordinator {
+            if let Some(name) = public_type_name(trimmed) {
+                if !has_debug(&lines, i, name, corpus) {
+                    out.push(LintViolation {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "debug-everywhere",
+                        detail: format!(
+                            "public coordinator type `{name}` has no \
+                             Debug — violation reports and \
+                             counterexamples must be able to print it"),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// The identifier of a `pub struct` / `pub enum` declaration, if this
+/// line is one.
+fn public_type_name(trimmed: &str) -> Option<&str> {
+    let rest = trimmed.strip_prefix("pub struct ")
+        .or_else(|| trimmed.strip_prefix("pub enum "))?;
+    let end = rest.find(|c: char| !c.is_alphanumeric() && c != '_')
+        .unwrap_or(rest.len());
+    let name = &rest[..end];
+    (!name.is_empty()).then_some(name)
+}
+
+/// Whether the declaration at `decl` (index into `lines`) carries
+/// Debug: a `derive(.., Debug, ..)` in the attributes directly above
+/// it, or a manual `impl .. Debug for Name` anywhere in the corpus.
+fn has_debug(lines: &[&str], decl: usize, name: &str, corpus: &str) -> bool {
+    for back in 1..=10 {
+        let Some(j) = decl.checked_sub(back) else { break };
+        let t = lines[j].trim_start();
+        let attr_or_doc = t.starts_with("#[") || t.starts_with("//");
+        if t.starts_with("#[derive(") && t.contains("Debug") {
+            return true;
+        }
+        if !attr_or_doc {
+            break;
+        }
+    }
+    let needle = format!("Debug for {name}");
+    let mut hay = corpus;
+    while let Some(at) = hay.find(&needle) {
+        let after = &hay[at + needle.len()..];
+        let boundary = after.chars().next()
+            .map_or(true, |c| !c.is_alphanumeric() && c != '_');
+        if boundary {
+            return true;
+        }
+        hay = after;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(rel: &str, text: &str, corpus: &str) -> Vec<LintViolation> {
+        let mut out = Vec::new();
+        lint_source(rel, text, corpus, &mut out);
+        out
+    }
+
+    #[test]
+    fn pool_calls_confined_to_kv_and_scheduler() {
+        let src = "fn f(p: &mut KvPool) { p.pool.release(vec![1]); }\n";
+        let hits = lint_one("coordinator/engine.rs", src, "");
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "pool-ownership");
+        assert_eq!(hits[0].line, 1);
+        assert!(lint_one("coordinator/kv.rs", src, "").is_empty());
+        assert!(lint_one("coordinator/scheduler.rs", src, "").is_empty());
+    }
+
+    #[test]
+    fn pool_arrays_only_indexed_in_kv() {
+        let src = "fn f(&self) -> u32 { self.refs[0] }\n";
+        let hits = lint_one("coordinator/scheduler.rs", src, "");
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "page-encapsulation");
+        assert!(lint_one("coordinator/kv.rs", src, "").is_empty());
+    }
+
+    #[test]
+    fn facade_rule_hits_mod_rs_only_outside_tests() {
+        let src = "fn f() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests { fn g() { y.unwrap(); } }\n";
+        let hits = lint_one("coordinator/mod.rs", src, "");
+        assert_eq!(hits.len(), 1, "test region is exempt: {hits:?}");
+        assert_eq!(hits[0].rule, "no-panic-facade");
+        assert!(lint_one("coordinator/engine.rs", src, "").is_empty(),
+                "the facade rule is scoped to mod.rs");
+    }
+
+    #[test]
+    fn allow_marker_exempts_a_line() {
+        let src = "// archlint: allow (recovery path, can't fail)\n\
+                   fn f() { x.unwrap(); }\n\
+                   fn g() { y.expect(\"boom\"); } // archlint: allow\n";
+        assert!(lint_one("coordinator/mod.rs", src, "").is_empty());
+    }
+
+    #[test]
+    fn public_coordinator_types_need_debug() {
+        let bare = "pub struct Widget {\n    x: u32,\n}\n";
+        let hits = lint_one("coordinator/kv.rs", bare, "");
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "debug-everywhere");
+
+        let derived = "#[derive(Debug, Clone)]\npub struct Widget;\n";
+        assert!(lint_one("coordinator/kv.rs", derived, "").is_empty());
+
+        let manual = "impl<B: Backend> fmt::Debug for Widget<B> {}\n";
+        assert!(lint_one("coordinator/kv.rs", bare, manual).is_empty(),
+                "a manual impl anywhere in the crate satisfies the rule");
+        assert_eq!(lint_one("coordinator/kv.rs", bare,
+                            "impl fmt::Debug for WidgetFoo {}").len(), 1,
+                   "identifier must match on a word boundary");
+    }
+
+    #[test]
+    fn non_coordinator_files_skip_debug_rule() {
+        let bare = "pub struct Widget;\n";
+        assert!(lint_one("eval/figures.rs", bare, "").is_empty());
+    }
+
+    /// The real tree holds every rule (the same claim CI gates).
+    #[test]
+    fn crate_source_is_clean() {
+        let root = default_src_root();
+        let hits = lint(&root).expect("source root readable");
+        assert!(hits.is_empty(), "architecture violations:\n{}",
+                hits.iter().map(ToString::to_string)
+                    .collect::<Vec<_>>().join("\n"));
+    }
+}

@@ -1,0 +1,556 @@
+//! Shared invariant predicates over KV-pool / scheduler snapshots.
+//!
+//! One predicate set, three consumers (ISSUE 9): the tier-1 test
+//! suites (`tests/sharding.rs` fuzz loop, the `prefix_share` /
+//! `disagg` leak checks), the `cfg(debug_assertions)` per-tick probe
+//! in [`Engine::step`](crate::coordinator::Engine::step), and the
+//! bounded model checker ([`super::mc`]) all call the SAME functions
+//! in this module — so the checked contract cannot drift between the
+//! fuzzer, the debug build and the exhaustive explorer.
+//!
+//! The predicates are pure functions over two snapshot traits:
+//!
+//! * [`PoolView`] — the allocator's own accounting (page counts and
+//!   per-page refcounts). Implemented by
+//!   [`KvPool`](crate::coordinator::KvPool) directly.
+//! * [`SchedView`] — the allocator view PLUS who references each page
+//!   (live lane tables, prefix-index retains) and each lane's write
+//!   cursor. Implemented by
+//!   [`Scheduler`](crate::coordinator::Scheduler) through its public
+//!   accessor surface only — the predicates deliberately cannot see
+//!   private state, so anything they prove is provable from outside.
+//!
+//! ## Invariant catalog (see DESIGN.md §15 for rationale)
+//!
+//! | id                    | statement                                  |
+//! |-----------------------|--------------------------------------------|
+//! | `page-conservation`   | free + live == total, counted two ways     |
+//! | `refcount-consistency`| refcount(p) == #tables(p) + #index(p), ∀p  |
+//! | `table-sanity`        | table pages in range, allocated, no dups   |
+//! | `cow-write-safety`    | a lane's next write page has refcount 1    |
+//! | `request-aliasing`    | a request id lives on at most one shard    |
+//! | `completion-exactly-once` | every id completes exactly once        |
+//! | `migration-balance`   | lanes taken from donors == lanes imported  |
+
+use std::collections::HashMap;
+
+use crate::coordinator::{KvPool, Scheduler};
+
+/// One failed invariant: which predicate, and a human-readable account
+/// of the state that broke it. `Display` renders both.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Stable predicate id (the table in the module docs).
+    pub invariant: &'static str,
+    /// What was observed, with the numbers that disagree.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.invariant, self.detail)
+    }
+}
+
+/// Allocator-only snapshot: what the pool believes about its pages.
+pub trait PoolView {
+    fn total_pages(&self) -> usize;
+    fn free_pages(&self) -> usize;
+    /// Owners of `page`; 0 means the page is on the free list. Must
+    /// tolerate any `page < total_pages`.
+    fn page_refcount(&self, page: u32) -> u32;
+}
+
+/// One occupied lane, as the predicates need to see it.
+#[derive(Debug, Clone)]
+pub struct LaneSnapshot {
+    pub lane: usize,
+    /// Bound request id (for violation messages).
+    pub id: u64,
+    /// Physical pages backing the lane, logical order.
+    pub table: Vec<u32>,
+    /// Next cache write position (rows).
+    pub pos: usize,
+}
+
+/// Scheduler-wide snapshot: the pool plus every page referent.
+pub trait SchedView: PoolView {
+    /// Cache rows per page.
+    fn page_len(&self) -> usize;
+    /// Every occupied lane's table and write cursor.
+    fn lane_snapshots(&self) -> Vec<LaneSnapshot>;
+    /// Every page the prefix index holds a retain on (one entry per
+    /// retain — multiplicity matters for refcount consistency).
+    fn prefix_retained(&self) -> Vec<u32>;
+    /// Request ids currently in flight on lanes.
+    fn inflight_ids(&self) -> Vec<u64>;
+    /// Request ids waiting in the admission queue.
+    fn queued_ids(&self) -> Vec<u64>;
+}
+
+// ---------------------------------------------------------------------------
+// Trait implementations (public accessors only)
+// ---------------------------------------------------------------------------
+
+impl PoolView for KvPool {
+    fn total_pages(&self) -> usize {
+        KvPool::total_pages(self)
+    }
+
+    fn free_pages(&self) -> usize {
+        KvPool::free_pages(self)
+    }
+
+    fn page_refcount(&self, page: u32) -> u32 {
+        self.refcount(page)
+    }
+}
+
+impl PoolView for Scheduler {
+    fn total_pages(&self) -> usize {
+        Scheduler::total_pages(self)
+    }
+
+    fn free_pages(&self) -> usize {
+        Scheduler::free_pages(self)
+    }
+
+    fn page_refcount(&self, page: u32) -> u32 {
+        Scheduler::page_refcount(self, page)
+    }
+}
+
+impl SchedView for Scheduler {
+    fn page_len(&self) -> usize {
+        Scheduler::page_len(self)
+    }
+
+    fn lane_snapshots(&self) -> Vec<LaneSnapshot> {
+        (0..self.lanes())
+            .filter_map(|lane| {
+                let id = self.prompt_owner(lane)?;
+                let table = self.page_table(lane).ok()?.to_vec();
+                let pos = self.lane_pos(lane)?;
+                Some(LaneSnapshot { lane, id, table, pos })
+            })
+            .collect()
+    }
+
+    fn prefix_retained(&self) -> Vec<u32> {
+        self.prefix_retained_pages()
+    }
+
+    fn inflight_ids(&self) -> Vec<u64> {
+        Scheduler::inflight_ids(self)
+    }
+
+    fn queued_ids(&self) -> Vec<u64> {
+        Scheduler::queued_ids(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool-level predicates
+// ---------------------------------------------------------------------------
+
+/// `page-conservation`: the free list and the refcount table must tell
+/// the same story — every page is either free (refcount 0) or live
+/// (refcount > 0), and the two populations partition the pool. A leak
+/// (page unreachable but not free) or a free-list corruption (page on
+/// the free list with owners) breaks the partition.
+pub fn page_conservation(view: &impl PoolView, out: &mut Vec<Violation>) {
+    let total = view.total_pages();
+    let free = view.free_pages();
+    let live = (0..total as u32).filter(|&p| view.page_refcount(p) > 0).count();
+    if free + live != total {
+        out.push(Violation {
+            invariant: "page-conservation",
+            detail: format!(
+                "free ({free}) + live-by-refcount ({live}) != total ({total})"),
+        });
+    }
+    if free > total {
+        out.push(Violation {
+            invariant: "page-conservation",
+            detail: format!("free list ({free}) exceeds the pool ({total})"),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler-level predicates
+// ---------------------------------------------------------------------------
+
+/// `refcount-consistency`: every page's refcount equals the number of
+/// live referents — occurrences across lane page tables plus prefix
+/// index retains. `refcount > referents` is a leak (the page can never
+/// free); `refcount < referents` is a use-after-free in waiting (the
+/// page frees while a table still maps it).
+pub fn refcount_consistency(view: &impl SchedView, out: &mut Vec<Violation>) {
+    let mut expected: HashMap<u32, u32> = HashMap::new();
+    for lane in view.lane_snapshots() {
+        for &page in &lane.table {
+            *expected.entry(page).or_insert(0) += 1;
+        }
+    }
+    for page in view.prefix_retained() {
+        *expected.entry(page).or_insert(0) += 1;
+    }
+    for page in 0..view.total_pages() as u32 {
+        let want = expected.get(&page).copied().unwrap_or(0);
+        let got = view.page_refcount(page);
+        if got != want {
+            out.push(Violation {
+                invariant: "refcount-consistency",
+                detail: format!(
+                    "page {page}: refcount {got}, but {want} referents \
+                     (lane tables + prefix retains)"),
+            });
+        }
+    }
+}
+
+/// `table-sanity`: every mapped page id is in range and allocated, and
+/// no lane maps the same physical page twice (two LOGICAL rows of one
+/// request aliasing one physical page corrupts the cache silently —
+/// sharing is only legal ACROSS lanes).
+pub fn table_sanity(view: &impl SchedView, out: &mut Vec<Violation>) {
+    let total = view.total_pages();
+    for lane in view.lane_snapshots() {
+        let mut seen = std::collections::HashSet::new();
+        for &page in &lane.table {
+            if (page as usize) >= total {
+                out.push(Violation {
+                    invariant: "table-sanity",
+                    detail: format!(
+                        "lane {} (request {}): foreign page id {page} \
+                         ({total} pages)", lane.lane, lane.id),
+                });
+                continue;
+            }
+            if view.page_refcount(page) == 0 {
+                out.push(Violation {
+                    invariant: "table-sanity",
+                    detail: format!(
+                        "lane {} (request {}): table maps FREE page {page}",
+                        lane.lane, lane.id),
+                });
+            }
+            if !seen.insert(page) {
+                out.push(Violation {
+                    invariant: "table-sanity",
+                    detail: format!(
+                        "lane {} (request {}): page {page} mapped twice \
+                         in one table", lane.lane, lane.id),
+                });
+            }
+        }
+    }
+    for page in view.prefix_retained() {
+        if (page as usize) >= total || view.page_refcount(page) == 0 {
+            out.push(Violation {
+                invariant: "table-sanity",
+                detail: format!(
+                    "prefix index retains a free or foreign page {page}"),
+            });
+        }
+    }
+}
+
+/// `cow-write-safety`: the page under a lane's next write position must
+/// be PRIVATE (refcount 1). Shared-prefix admission starts the fill
+/// cursor past the resident span and partial overlaps fork a
+/// copy-on-write page first, so by construction no lane ever has a
+/// shared page under its cursor — if one does, the next scatter
+/// corrupts every other owner's cache.
+pub fn cow_write_safety(view: &impl SchedView, out: &mut Vec<Violation>) {
+    let page_len = view.page_len();
+    for lane in view.lane_snapshots() {
+        let logical = lane.pos / page_len;
+        // under lazy reservation the cursor's page may not be allocated
+        // yet — nothing to check until growth backs it
+        let Some(&page) = lane.table.get(logical) else { continue };
+        let refs = view.page_refcount(page);
+        if refs > 1 {
+            out.push(Violation {
+                invariant: "cow-write-safety",
+                detail: format!(
+                    "lane {} (request {}): next write at row {} lands in \
+                     page {page} with refcount {refs}",
+                    lane.lane, lane.id, lane.pos),
+            });
+        }
+    }
+}
+
+/// Run every per-shard predicate over one scheduler snapshot.
+pub fn check_sched(view: &impl SchedView) -> Vec<Violation> {
+    let mut out = Vec::new();
+    page_conservation(view, &mut out);
+    refcount_consistency(view, &mut out);
+    table_sanity(view, &mut out);
+    cow_write_safety(view, &mut out);
+    out
+}
+
+/// Assert-style wrapper for test suites and the engine's debug probe:
+/// panics with every violation when the snapshot is inconsistent.
+///
+/// # Panics
+///
+/// Panics listing every violated invariant, prefixed by `ctx`.
+pub fn assert_clean(view: &impl SchedView, ctx: &str) {
+    let violations = check_sched(view);
+    assert!(
+        violations.is_empty(),
+        "{ctx}: {} KV invariant violation(s):\n  {}",
+        violations.len(),
+        violations.iter().map(|v| v.to_string())
+            .collect::<Vec<_>>().join("\n  "),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fleet-level predicates (across shards / across the episode)
+// ---------------------------------------------------------------------------
+
+/// `request-aliasing`: a request id may be in flight or queued on at
+/// most ONE shard at a time — a migration that forgot to extract, or a
+/// placement that double-submitted, shows up as the same id alive in
+/// two schedulers.
+pub fn request_aliasing<'a, V: SchedView + 'a>(
+    views: impl IntoIterator<Item = &'a V>,
+    out: &mut Vec<Violation>,
+) {
+    let mut owner: HashMap<u64, usize> = HashMap::new();
+    for (shard, view) in views.into_iter().enumerate() {
+        for id in view.inflight_ids().into_iter().chain(view.queued_ids()) {
+            if let Some(prev) = owner.insert(id, shard) {
+                out.push(Violation {
+                    invariant: "request-aliasing",
+                    detail: format!(
+                        "request {id} is live on shard {prev} AND shard \
+                         {shard}"),
+                });
+            }
+        }
+    }
+}
+
+/// Episode-long stream accounting for `completion-exactly-once` and
+/// `migration-balance`: the driving harness (fuzz loop, model checker)
+/// records what it submitted, what completed and how many lanes it
+/// moved, then asks for the verdict at drain.
+#[derive(Debug, Clone, Default)]
+pub struct StreamLog {
+    /// Ids handed to `submit`, in order.
+    pub submitted: Vec<u64>,
+    /// Ids that completed, in completion order (duplicates preserved).
+    pub completed: Vec<u64>,
+    /// Lanes extracted from donor shards (`take_migratable`).
+    pub migrations_taken: usize,
+    /// Lanes rebuilt on destination shards (`import_migrated`).
+    pub migrations_imported: usize,
+}
+
+impl StreamLog {
+    /// `completion-exactly-once` mid-episode: no id may complete twice
+    /// and no unknown id may complete, even before the drain.
+    pub fn check_partial(&self, out: &mut Vec<Violation>) {
+        let mut seen = std::collections::HashSet::new();
+        for &id in &self.completed {
+            if !seen.insert(id) {
+                out.push(Violation {
+                    invariant: "completion-exactly-once",
+                    detail: format!("request {id} completed twice"),
+                });
+            }
+            if !self.submitted.contains(&id) {
+                out.push(Violation {
+                    invariant: "completion-exactly-once",
+                    detail: format!("unknown request {id} completed"),
+                });
+            }
+        }
+    }
+
+    /// Drain-time verdict: completions are a permutation of
+    /// submissions, and every migrated lane was imported exactly once.
+    pub fn check_drained(&self, out: &mut Vec<Violation>) {
+        self.check_partial(out);
+        let mut got = self.completed.clone();
+        got.sort_unstable();
+        let mut want = self.submitted.clone();
+        want.sort_unstable();
+        if got != want {
+            out.push(Violation {
+                invariant: "completion-exactly-once",
+                detail: format!(
+                    "completions {got:?} are not a permutation of \
+                     submissions {want:?}"),
+            });
+        }
+        if self.migrations_taken != self.migrations_imported {
+            out.push(Violation {
+                invariant: "migration-balance",
+                detail: format!(
+                    "{} lanes taken from donors, {} imported",
+                    self.migrations_taken, self.migrations_imported),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A hand-rolled view for predicate unit tests: the predicates see
+    /// exactly what the struct says, so each invariant can be broken
+    /// in isolation without corrupting a real pool.
+    struct FakeView {
+        total: usize,
+        free: usize,
+        refs: Vec<u32>,
+        page_len: usize,
+        lanes: Vec<LaneSnapshot>,
+        prefix: Vec<u32>,
+        queued: Vec<u64>,
+    }
+
+    impl FakeView {
+        fn clean() -> Self {
+            // 4 pages: lane 0 holds [0, 1] writing at row 5 (page 1),
+            // page 2 shared (lane + index) with lane 1's cursor past
+            // the resident span (next page not yet allocated — lazy),
+            // page 3 free
+            FakeView {
+                total: 4,
+                free: 1,
+                refs: vec![1, 1, 2, 0],
+                page_len: 4,
+                lanes: vec![
+                    LaneSnapshot { lane: 0, id: 7, table: vec![0, 1], pos: 5 },
+                    LaneSnapshot { lane: 1, id: 8, table: vec![2], pos: 4 },
+                ],
+                prefix: vec![2],
+                queued: vec![],
+            }
+        }
+    }
+
+    impl PoolView for FakeView {
+        fn total_pages(&self) -> usize {
+            self.total
+        }
+
+        fn free_pages(&self) -> usize {
+            self.free
+        }
+
+        fn page_refcount(&self, page: u32) -> u32 {
+            self.refs.get(page as usize).copied().unwrap_or(0)
+        }
+    }
+
+    impl SchedView for FakeView {
+        fn page_len(&self) -> usize {
+            self.page_len
+        }
+
+        fn lane_snapshots(&self) -> Vec<LaneSnapshot> {
+            self.lanes.clone()
+        }
+
+        fn prefix_retained(&self) -> Vec<u32> {
+            self.prefix.clone()
+        }
+
+        fn inflight_ids(&self) -> Vec<u64> {
+            self.lanes.iter().map(|l| l.id).collect()
+        }
+
+        fn queued_ids(&self) -> Vec<u64> {
+            self.queued.clone()
+        }
+    }
+
+    fn ids(violations: &[Violation]) -> Vec<&'static str> {
+        violations.iter().map(|v| v.invariant).collect()
+    }
+
+    #[test]
+    fn clean_view_has_no_violations() {
+        assert_eq!(check_sched(&FakeView::clean()), Vec::new());
+    }
+
+    #[test]
+    fn leaked_page_breaks_conservation_and_refcounts() {
+        let mut v = FakeView::clean();
+        v.refs[3] = 1; // page 3 claims an owner but nobody references it
+        v.free = 0;
+        let got = check_sched(&v);
+        assert!(ids(&got).contains(&"refcount-consistency"), "{got:?}");
+    }
+
+    #[test]
+    fn free_list_desync_breaks_conservation() {
+        let mut v = FakeView::clean();
+        v.free = 2; // free list says 2, refcounts say 1
+        let got = check_sched(&v);
+        assert!(ids(&got).contains(&"page-conservation"), "{got:?}");
+    }
+
+    #[test]
+    fn undercounted_shared_page_is_flagged() {
+        let mut v = FakeView::clean();
+        v.refs[2] = 1; // lane 1 AND the index reference it
+        let got = check_sched(&v);
+        assert!(ids(&got).contains(&"refcount-consistency"), "{got:?}");
+    }
+
+    #[test]
+    fn write_cursor_on_shared_page_is_flagged() {
+        let mut v = FakeView::clean();
+        // pull lane 1's cursor back onto page 2, which has refcount 2
+        v.lanes[1].pos = 0;
+        let got = check_sched(&v);
+        assert!(ids(&got).contains(&"cow-write-safety"), "{got:?}");
+    }
+
+    #[test]
+    fn duplicate_page_in_one_table_is_flagged() {
+        let mut v = FakeView::clean();
+        v.lanes[0].table = vec![0, 0];
+        v.refs[0] = 2;
+        v.refs[1] = 0;
+        v.free = 2;
+        let got = check_sched(&v);
+        assert!(ids(&got).contains(&"table-sanity"), "{got:?}");
+    }
+
+    #[test]
+    fn cross_shard_request_alias_is_flagged() {
+        let a = FakeView::clean();
+        let mut b = FakeView::clean();
+        b.lanes.truncate(1); // id 7 in flight on both shards
+        let mut out = Vec::new();
+        request_aliasing([&a, &b], &mut out);
+        assert!(ids(&out).contains(&"request-aliasing"), "{out:?}");
+    }
+
+    #[test]
+    fn stream_log_catches_duplicates_and_imbalance() {
+        let log = StreamLog {
+            submitted: vec![1, 2],
+            completed: vec![1, 1, 3],
+            migrations_taken: 2,
+            migrations_imported: 1,
+        };
+        let mut out = Vec::new();
+        log.check_drained(&mut out);
+        let got = ids(&out);
+        assert!(got.contains(&"completion-exactly-once"), "{out:?}");
+        assert!(got.contains(&"migration-balance"), "{out:?}");
+    }
+}

@@ -1,0 +1,757 @@
+//! Bounded exhaustive model checker for the KV page / refcount /
+//! migration state machine (ISSUE 9 tentpole, layer 2).
+//!
+//! The checker drives the REAL [`Scheduler`]+[`KvPool`] spine — through
+//! [`Engine`]`<`[`MockBackend`]`>`, exactly the stack the tier-1 suites
+//! exercise — over EVERY interleaving of a bounded decision space and
+//! asserts the layer-1 predicates ([`super::invariants`]) after every
+//! action. Nothing here is a simulation of the coordinator: a state the
+//! checker reaches is a state production code can reach.
+//!
+//! **Decision space.** One episode serves a fixed 3-request workload
+//! (crafted so prefix sharing, partial-page COW forks and page-boundary
+//! divergence all occur) on 1 unified shard or a prefill+decode pair.
+//! At each macro-step the explorer chooses among the enabled actions:
+//!
+//! * `submit(i)` — hand request `i` to the admitting shard (arrival
+//!   order is explored, not fixed);
+//! * `migrate` — drain the prefill specialist's warm lanes into the
+//!   decode shard (migration timing is explored);
+//! * `tick(s)` — one `Engine::step` on shard `s` (chunk boundaries,
+//!   growth, preemption and completion timing are explored).
+//!
+//! The search is an odometer DFS over the first
+//! [`McBudget::branch_depth`] choice points; deeper decisions take the
+//! first enabled action, so every explored prefix still runs to drain.
+//! Episodes are deterministic (the spine's only clock feeds metrics,
+//! never decisions), which is what makes counterexample traces
+//! replayable: a trace is just the choice indices taken.
+//!
+//! **Stutter pruning.** A `tick` that provably changed nothing (the
+//! shard's state digest is unchanged) parks that shard's tick until its
+//! digest moves again — a stuttering action can be dropped from any
+//! interleaving without losing reachable states, and pruning it keeps
+//! the tree finite while a prefill specialist waits for migration.
+//!
+//! **Verdicts.** Every action is followed by the full predicate set
+//! (`check_sched` per shard, cross-shard [`request_aliasing`], the
+//! [`StreamLog`] exactly-once checks) plus the stream oracle: each
+//! completion's bytes must equal [`MockBackend::expected_tokens`] (or
+//! the quantized stream under an Int8 codec). The first violation stops
+//! the episode; the trace is then greedily minimized (drop one decision
+//! at a time while the SAME invariant still fires) into a
+//! [`Counterexample`] whose `replay` spec reproduces it exactly.
+//!
+//! [`Scheduler`]: crate::coordinator::Scheduler
+//! [`KvPool`]: crate::coordinator::KvPool
+//! [`Engine`]: crate::coordinator::Engine
+//! [`MockBackend`]: crate::coordinator::MockBackend
+//! [`request_aliasing`]: super::invariants::request_aliasing
+//! [`StreamLog`]: super::invariants::StreamLog
+//! [`MockBackend::expected_tokens`]: crate::coordinator::MockBackend::expected_tokens
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+
+use crate::anyhow::{anyhow, Result};
+use crate::coordinator::{Engine, GenRequest, KvLayout, MockBackend, PageCodec,
+                         PrefillPolicy, RequestPhase, ReservationPolicy,
+                         ShardRole};
+
+use super::invariants::{self, StreamLog, Violation};
+
+// ---------------------------------------------------------------------------
+// Fixed geometry: small enough to explore exhaustively, rich enough
+// that sharing, COW, growth, preemption and migration all occur.
+// ---------------------------------------------------------------------------
+
+const VOCAB: usize = 64;
+const LANES: usize = 2;
+const PREFILL: usize = 8;
+const MAX_SEQ: usize = 16;
+const PAGE_LEN: usize = 4;
+/// Unified / prefill-shard pool: 7 pages. An upfront lane reserves 4
+/// (`max_seq / page_len`), so the second admission stalls at 3 free —
+/// exactly the off-by-one a stale free-page report (the
+/// `StaleFreeReport` mutant) turns into silent page aliasing.
+const PAGES_TIGHT: usize = 7;
+/// Decode-shard pool: 8 pages = 2 lanes × 4, so both lanes can hold
+/// imported upfront reservations at once.
+const PAGES_DECODE: usize = 8;
+
+/// The fixed workload. Prompts are 2 pages; B shares A's first page and
+/// diverges mid-page (a partial-page COW fork when enabled), C diverges
+/// exactly at the page boundary (full-page sharing, no fork).
+fn workload() -> Vec<GenRequest> {
+    vec![
+        GenRequest::new(0, vec![1, 2, 3, 4, 5, 6, 7, 8], 3),
+        GenRequest::new(1, vec![1, 2, 3, 4, 5, 6, 7, 9], 2),
+        GenRequest::new(2, vec![1, 2, 3, 4, 9, 9, 9, 9], 2),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Configuration matrix and exploration budget
+// ---------------------------------------------------------------------------
+
+/// One cell of the checked matrix: {Upfront, Lazy} × {prefix sharing
+/// on, off} × {1 unified shard, prefill+decode pair} × {Fp16, Int8Sym}.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct McConfig {
+    pub name: &'static str,
+    pub reserve: ReservationPolicy,
+    pub share: bool,
+    pub disagg: bool,
+    pub codec: PageCodec,
+}
+
+/// All 16 checked configurations, in a stable order. The names are the
+/// replay keys — traces cite them, so they never change.
+pub fn matrix() -> Vec<McConfig> {
+    const NAMES: [&str; 16] = [
+        "upfront-noshare-unified-fp16", "upfront-noshare-unified-int8",
+        "upfront-noshare-disagg-fp16", "upfront-noshare-disagg-int8",
+        "upfront-share-unified-fp16", "upfront-share-unified-int8",
+        "upfront-share-disagg-fp16", "upfront-share-disagg-int8",
+        "lazy-noshare-unified-fp16", "lazy-noshare-unified-int8",
+        "lazy-noshare-disagg-fp16", "lazy-noshare-disagg-int8",
+        "lazy-share-unified-fp16", "lazy-share-unified-int8",
+        "lazy-share-disagg-fp16", "lazy-share-disagg-int8",
+    ];
+    let mut out = Vec::new();
+    let mut names = NAMES.iter();
+    for reserve in [ReservationPolicy::Upfront, ReservationPolicy::Lazy] {
+        for share in [false, true] {
+            for disagg in [false, true] {
+                for codec in [PageCodec::Fp16, PageCodec::Int8Sym] {
+                    let name = names.next().expect("16 names for 16 cells");
+                    out.push(McConfig { name, reserve, share, disagg, codec });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Look a matrix cell up by its replay name.
+pub fn config_by_name(name: &str) -> Option<McConfig> {
+    matrix().into_iter().find(|c| c.name == name)
+}
+
+/// Exploration bounds. The search is exhaustive over the first
+/// `branch_depth` decisions of every episode; the remaining caps are
+/// backstops that turn runaway exploration into a hard error instead
+/// of a hang.
+#[derive(Debug, Clone, Copy)]
+pub struct McBudget {
+    /// Choice points explored exhaustively per episode (deeper
+    /// decisions take the first enabled action).
+    pub branch_depth: usize,
+    /// Macro-steps per episode before it is declared stalled (a
+    /// violation: the machine must always drain).
+    pub max_steps: usize,
+    /// Episodes per configuration before the run errors out.
+    pub max_interleavings: usize,
+}
+
+impl Default for McBudget {
+    fn default() -> Self {
+        McBudget { branch_depth: 6, max_steps: 200, max_interleavings: 200_000 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reports and counterexamples
+// ---------------------------------------------------------------------------
+
+/// A minimized, replayable witness of one invariant violation.
+#[derive(Debug, Clone)]
+pub struct Counterexample {
+    /// Matrix cell the violation occurred in.
+    pub config: String,
+    /// Choice indices of the minimized trace (the replay spec's body).
+    pub trace: Vec<usize>,
+    /// Human-readable action labels of the full violating episode.
+    pub labels: Vec<String>,
+    /// The first predicate that fired.
+    pub violation: Violation,
+}
+
+impl Counterexample {
+    /// The `flexllm verify --replay` spec reproducing this episode.
+    pub fn replay_spec(&self) -> String {
+        let trace: Vec<String> =
+            self.trace.iter().map(ToString::to_string).collect();
+        format!("{}:{}", self.config, trace.join(","))
+    }
+}
+
+impl std::fmt::Display for Counterexample {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "counterexample in config {} (replay \"{}\"):",
+                 self.config, self.replay_spec())?;
+        for (i, label) in self.labels.iter().enumerate() {
+            writeln!(f, "  step {i:>2}: {label}")?;
+        }
+        write!(f, "  {}", self.violation)
+    }
+}
+
+/// The verdict for one matrix cell.
+#[derive(Debug, Clone)]
+pub struct McReport {
+    pub config: String,
+    /// Interleavings fully explored.
+    pub interleavings: usize,
+    /// Distinct post-action state digests observed.
+    pub unique_states: usize,
+    /// First violation found, already minimized (`None` = clean).
+    pub violation: Option<Counterexample>,
+}
+
+// ---------------------------------------------------------------------------
+// Episode: one deterministic run through the bounded decision space
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Action {
+    Submit(usize),
+    Migrate,
+    Tick(usize),
+}
+
+impl Action {
+    fn label(self) -> String {
+        match self {
+            Action::Submit(i) => format!("submit(req {i})"),
+            Action::Migrate => "migrate(prefill -> decode)".to_string(),
+            Action::Tick(s) => format!("tick(shard {s})"),
+        }
+    }
+}
+
+/// What one episode did: the recorded choice points (for the
+/// odometer), the action labels, the digests it visited and its
+/// verdict.
+struct EpisodeOut {
+    decisions: Vec<(usize, usize)>,
+    labels: Vec<String>,
+    digests: Vec<u64>,
+    violation: Option<Violation>,
+}
+
+struct Episode {
+    shards: Vec<Engine<MockBackend>>,
+    reqs: Vec<GenRequest>,
+    submitted: Vec<bool>,
+    log: StreamLog,
+    /// Per-request event-stream accumulation (token per index).
+    streams: HashMap<u64, Vec<i32>>,
+    /// Shard digests whose tick last proved to be a no-op; the tick
+    /// stays parked until the digest moves (stutter pruning).
+    parked: Vec<Option<u64>>,
+    codec: PageCodec,
+}
+
+fn build_shards(cfg: &McConfig) -> Vec<Engine<MockBackend>> {
+    let mk = |pages: usize| {
+        let mut b = MockBackend::paged(LANES, PREFILL, MAX_SEQ, VOCAB,
+                                       PAGE_LEN, pages);
+        if cfg.reserve == ReservationPolicy::Lazy {
+            b = b.with_table_growth();
+        }
+        if cfg.codec == PageCodec::Int8Sym {
+            b = b.with_kv_quant(PageCodec::Int8Sym);
+        }
+        b
+    };
+    // two-chunk prefill: a lane stays `Prefilling` across ticks, so
+    // chunk boundaries are real interleaving points
+    let policy = PrefillPolicy::Chunked { chunk_len: PAGE_LEN,
+                                          decode_priority: false };
+    if cfg.disagg {
+        vec![
+            Engine::with_reservation(mk(PAGES_TIGHT), policy, KvLayout::Paged,
+                                     cfg.reserve)
+                .with_role(ShardRole::Prefill)
+                .with_shard_id(0)
+                .with_prefix_share(cfg.share),
+            Engine::with_reservation(mk(PAGES_DECODE), policy, KvLayout::Paged,
+                                     cfg.reserve)
+                .with_role(ShardRole::Decode)
+                .with_shard_id(1)
+                .with_prefix_share(cfg.share),
+        ]
+    } else {
+        vec![Engine::with_reservation(mk(PAGES_TIGHT), policy, KvLayout::Paged,
+                                      cfg.reserve)
+            .with_shard_id(0)
+            .with_prefix_share(cfg.share)]
+    }
+}
+
+impl Episode {
+    fn new(cfg: &McConfig) -> Self {
+        let shards = build_shards(cfg);
+        let reqs = workload();
+        let parked = vec![None; shards.len()];
+        Episode {
+            submitted: vec![false; reqs.len()],
+            log: StreamLog::default(),
+            streams: HashMap::new(),
+            parked,
+            codec: cfg.codec,
+            shards,
+            reqs,
+        }
+    }
+
+    fn shard_digest(&self, s: usize) -> u64 {
+        let mut h = DefaultHasher::new();
+        let sched = &self.shards[s].scheduler;
+        sched.free_pages().hash(&mut h);
+        for lane in 0..sched.lanes() {
+            sched.prompt_owner(lane).hash(&mut h);
+            if let Ok(table) = sched.page_table(lane) {
+                table.hash(&mut h);
+            }
+            sched.lane_pos(lane).hash(&mut h);
+            match sched.phase(lane) {
+                None => 0usize.hash(&mut h),
+                Some(RequestPhase::Prefilling { next_chunk }) => {
+                    (1usize, next_chunk).hash(&mut h);
+                }
+                Some(RequestPhase::Decoding) => 2usize.hash(&mut h),
+            }
+        }
+        for p in 0..sched.total_pages() {
+            sched.page_refcount(p as u32).hash(&mut h);
+        }
+        sched.queued_ids().hash(&mut h);
+        let mut retained = sched.prefix_retained_pages();
+        retained.sort_unstable();
+        retained.hash(&mut h);
+        h.finish()
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        for s in 0..self.shards.len() {
+            self.shard_digest(s).hash(&mut h);
+        }
+        self.submitted.hash(&mut h);
+        self.log.completed.hash(&mut h);
+        h.finish()
+    }
+
+    /// Lanes on the prefill specialist waiting in `Decoding` phase.
+    fn migratable(&self) -> usize {
+        let donor = &self.shards[0];
+        if donor.role() != ShardRole::Prefill {
+            return 0;
+        }
+        (0..donor.scheduler.lanes())
+            .filter(|&l| donor.scheduler.phase(l)
+                    == Some(RequestPhase::Decoding))
+            .count()
+    }
+
+    /// Enabled actions, in a stable order. `migrate` precedes `tick` so
+    /// the all-default path (choice 0 everywhere) migrates promptly —
+    /// the deterministic completion of every branch still drains.
+    fn enabled(&self) -> Vec<Action> {
+        let mut acts = Vec::new();
+        for (i, &done) in self.submitted.iter().enumerate() {
+            if !done {
+                acts.push(Action::Submit(i));
+            }
+        }
+        let migratable = self.migratable();
+        if migratable > 0 {
+            // conservative import guard: enough free lanes AND a full
+            // upfront reservation per lane, so take_migratable (which
+            // drains every warm lane at once) can never strand one
+            let dest = &self.shards[1].scheduler;
+            let free_lanes = dest.lanes() - dest.active();
+            let pages_per_lane = MAX_SEQ / PAGE_LEN;
+            if free_lanes >= migratable
+                && dest.free_pages() >= migratable * pages_per_lane
+            {
+                acts.push(Action::Migrate);
+            }
+        }
+        for s in 0..self.shards.len() {
+            if self.shards[s].has_work()
+                && self.parked[s] != Some(self.shard_digest(s))
+            {
+                acts.push(Action::Tick(s));
+            }
+        }
+        acts
+    }
+
+    /// Execute one action; returns violations observed applying it.
+    fn apply(&mut self, act: Action) -> Result<Vec<Violation>> {
+        let mut out = Vec::new();
+        match act {
+            Action::Submit(i) => {
+                let req = self.reqs[i].clone();
+                self.log.submitted.push(req.id);
+                self.submitted[i] = true;
+                self.shards[0].submit(req)?;
+            }
+            Action::Migrate => {
+                let taken = self.shards[0].take_migratable();
+                self.log.migrations_taken += taken.len();
+                for m in taken {
+                    if !self.shards[1].can_import(&m) {
+                        out.push(Violation {
+                            invariant: "migration-balance",
+                            detail: format!(
+                                "decode shard refused request {} after the \
+                                 import guard admitted the batch", m.req.id),
+                        });
+                        return Ok(out);
+                    }
+                    self.shards[1].import_migrated(m)?;
+                    self.log.migrations_imported += 1;
+                }
+            }
+            Action::Tick(s) => {
+                let before = self.shard_digest(s);
+                let report = self.shards[s].step()?;
+                for ev in &report.events {
+                    let stream = self.streams.entry(ev.id).or_default();
+                    if ev.index != stream.len() {
+                        out.push(Violation {
+                            invariant: "stream-identity",
+                            detail: format!(
+                                "request {} emitted index {} after {} tokens \
+                                 (gap or replay)", ev.id, ev.index,
+                                stream.len()),
+                        });
+                    }
+                    stream.push(ev.token);
+                }
+                for (_, result) in &report.completed {
+                    self.log.completed.push(result.id);
+                    let want = self.oracle(result.id);
+                    if result.tokens != want {
+                        out.push(Violation {
+                            invariant: "stream-identity",
+                            detail: format!(
+                                "request {} completed with {:?}, expected \
+                                 {:?}", result.id, result.tokens, want),
+                        });
+                    }
+                }
+                if self.shard_digest(s) == before {
+                    self.parked[s] = Some(before);
+                } else {
+                    self.parked[s] = None;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The mock stream a request must produce, under the active codec.
+    fn oracle(&self, id: u64) -> Vec<i32> {
+        let req = &self.reqs[id as usize];
+        let n = req.max_new_tokens;
+        match self.codec {
+            PageCodec::Fp16 =>
+                MockBackend::expected_tokens(&req.prompt, n, VOCAB),
+            PageCodec::Int8Sym =>
+                MockBackend::expected_tokens_quant(&req.prompt, n, VOCAB,
+                                                   PAGE_LEN),
+        }
+    }
+
+    /// The full predicate set over the current state.
+    fn check(&self) -> Vec<Violation> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let sid = shard.shard_id();
+            for v in invariants::check_sched(&shard.scheduler) {
+                out.push(Violation {
+                    invariant: v.invariant,
+                    detail: format!("shard {sid}: {}", v.detail),
+                });
+            }
+            if shard.scheduler.kv_corruptions() > 0 {
+                out.push(Violation {
+                    invariant: "kv-corruption",
+                    detail: format!(
+                        "shard {sid}: pool counted {} corruption events",
+                        shard.scheduler.kv_corruptions()),
+                });
+            }
+        }
+        invariants::request_aliasing(
+            self.shards.iter().map(|e| &e.scheduler), &mut out);
+        self.log.check_partial(&mut out);
+        out
+    }
+}
+
+/// Run one episode, consuming `trace` at the first `branch_depth`
+/// choice points (missing entries and all deeper decisions take the
+/// first enabled action).
+fn run_episode(cfg: &McConfig, budget: &McBudget, trace: &[usize])
+    -> Result<EpisodeOut>
+{
+    let mut ep = Episode::new(cfg);
+    let mut out = EpisodeOut {
+        decisions: Vec::new(),
+        labels: Vec::new(),
+        digests: Vec::new(),
+        violation: None,
+    };
+    for _ in 0..budget.max_steps {
+        let acts = ep.enabled();
+        if acts.is_empty() {
+            break;
+        }
+        let k = out.decisions.len();
+        let choice = if k < budget.branch_depth {
+            // clamp: minimization candidates may carry an index the
+            // shorter tree no longer offers
+            let c = trace.get(k).copied().unwrap_or(0).min(acts.len() - 1);
+            out.decisions.push((c, acts.len()));
+            c
+        } else {
+            0
+        };
+        let act = acts[choice];
+        out.labels.push(act.label());
+        let mut violations = ep.apply(act)?;
+        violations.extend(ep.check());
+        out.digests.push(ep.digest());
+        if let Some(v) = violations.into_iter().next() {
+            out.violation = Some(v);
+            return Ok(out);
+        }
+    }
+    let outstanding: Vec<u64> = ep.log.submitted.iter().copied()
+        .filter(|id| !ep.log.completed.contains(id))
+        .collect();
+    if !outstanding.is_empty() || ep.submitted.iter().any(|&s| !s) {
+        out.violation = Some(Violation {
+            invariant: "drain",
+            detail: format!(
+                "episode ended after {} steps with requests {outstanding:?} \
+                 outstanding", out.labels.len()),
+        });
+        return Ok(out);
+    }
+    let mut drained = Vec::new();
+    ep.log.check_drained(&mut drained);
+    for (id, got) in &ep.streams {
+        let want = ep.oracle(*id);
+        if *got != want {
+            drained.push(Violation {
+                invariant: "stream-identity",
+                detail: format!(
+                    "request {id} streamed {got:?}, expected {want:?}"),
+            });
+        }
+    }
+    out.violation = drained.into_iter().next();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// The explorer: odometer DFS + greedy trace minimization
+// ---------------------------------------------------------------------------
+
+/// Exhaustively explore one matrix cell. A violation is returned
+/// minimized; `Err` means the checker itself failed (backend refusal,
+/// interleaving budget exhausted) — never a property verdict.
+pub fn check_config(cfg: &McConfig, budget: &McBudget) -> Result<McReport> {
+    let mut trace: Vec<usize> = Vec::new();
+    let mut interleavings = 0usize;
+    let mut states: HashSet<u64> = HashSet::new();
+    loop {
+        let out = run_episode(cfg, budget, &trace)?;
+        interleavings += 1;
+        states.extend(out.digests.iter().copied());
+        if let Some(v) = out.violation {
+            let ce = minimize(cfg, budget, &out.decisions, v)?;
+            return Ok(McReport {
+                config: cfg.name.to_string(),
+                interleavings,
+                unique_states: states.len(),
+                violation: Some(ce),
+            });
+        }
+        if interleavings >= budget.max_interleavings {
+            return Err(anyhow!(
+                "config {}: interleaving budget {} exhausted before the \
+                 bounded space was covered", cfg.name,
+                budget.max_interleavings));
+        }
+        // advance the odometer: bump the deepest decision that still
+        // has an untaken alternative, drop everything after it
+        let mut decisions = out.decisions;
+        loop {
+            match decisions.last_mut() {
+                None => {
+                    return Ok(McReport {
+                        config: cfg.name.to_string(),
+                        interleavings,
+                        unique_states: states.len(),
+                        violation: None,
+                    });
+                }
+                Some((choice, alts)) if *choice + 1 < *alts => {
+                    *choice += 1;
+                    break;
+                }
+                Some(_) => {
+                    decisions.pop();
+                }
+            }
+        }
+        trace = decisions.iter().map(|&(c, _)| c).collect();
+    }
+}
+
+/// Greedily shrink a violating trace: drop one decision at a time as
+/// long as the SAME invariant still fires, then strip trailing
+/// default choices (a missing entry already means "first enabled").
+fn minimize(cfg: &McConfig, budget: &McBudget, decisions: &[(usize, usize)],
+            violation: Violation) -> Result<Counterexample>
+{
+    let mut trace: Vec<usize> = decisions.iter().map(|&(c, _)| c).collect();
+    let mut labels = None;
+    let mut shrunk = true;
+    while shrunk {
+        shrunk = false;
+        for i in 0..trace.len() {
+            let mut candidate = trace.clone();
+            candidate.remove(i);
+            let out = run_episode(cfg, budget, &candidate)?;
+            if out.violation.as_ref().map(|v| v.invariant)
+                == Some(violation.invariant)
+            {
+                trace = candidate;
+                labels = Some(out.labels);
+                shrunk = true;
+                break;
+            }
+        }
+    }
+    while trace.last() == Some(&0) {
+        trace.pop();
+    }
+    let labels = match labels {
+        Some(l) => l,
+        None => run_episode(cfg, budget, &trace)?.labels,
+    };
+    Ok(Counterexample {
+        config: cfg.name.to_string(),
+        trace,
+        labels,
+        violation,
+    })
+}
+
+/// Explore the full 16-cell matrix; reports come back in matrix order.
+pub fn check_all(budget: &McBudget) -> Result<Vec<McReport>> {
+    matrix().iter().map(|cfg| check_config(cfg, budget)).collect()
+}
+
+/// Re-run one recorded episode from a `config:choice,choice,...` spec
+/// (the body of [`Counterexample::replay_spec`]). Returns the episode's
+/// verdict without exploring or minimizing — determinism makes this an
+/// exact reproduction.
+pub fn replay(spec: &str, budget: &McBudget) -> Result<McReport> {
+    let (name, body) = spec.split_once(':')
+        .ok_or_else(|| anyhow!("replay spec must be config:i,j,k — got \
+                                {spec:?}"))?;
+    let cfg = config_by_name(name)
+        .ok_or_else(|| anyhow!("unknown config {name:?}; cells are named \
+                                <upfront|lazy>-<share|noshare>-\
+                                <unified|disagg>-<fp16|int8>"))?;
+    let trace: Vec<usize> = body
+        .split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| t.trim().parse::<usize>()
+             .map_err(|e| anyhow!("bad choice index {t:?}: {e}")))
+        .collect::<Result<_>>()?;
+    // the replayed trace must be consumable whole, whatever depth the
+    // caller's exploration budget says
+    let budget = McBudget {
+        branch_depth: budget.branch_depth.max(trace.len()),
+        ..*budget
+    };
+    let out = run_episode(&cfg, &budget, &trace)?;
+    let violation = out.violation.map(|v| Counterexample {
+        config: cfg.name.to_string(),
+        trace,
+        labels: out.labels,
+        violation: v,
+    });
+    Ok(McReport {
+        config: cfg.name.to_string(),
+        interleavings: 1,
+        unique_states: out.digests.len(),
+        violation,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The matrix is 16 distinct, name-addressable cells.
+    #[test]
+    fn matrix_is_complete_and_named() {
+        let m = matrix();
+        assert_eq!(m.len(), 16);
+        let names: HashSet<&str> = m.iter().map(|c| c.name).collect();
+        assert_eq!(names.len(), 16, "config names must be unique");
+        for cfg in &m {
+            assert_eq!(config_by_name(cfg.name), Some(*cfg));
+        }
+    }
+
+    /// A single all-defaults episode on the simplest cell drains clean:
+    /// every request completes, streams match the mock oracle.
+    #[test]
+    fn default_episode_drains_clean() {
+        let cfg = config_by_name("upfront-noshare-unified-fp16")
+            .expect("matrix cell exists");
+        let budget = McBudget { branch_depth: 0, ..McBudget::default() };
+        let out = run_episode(&cfg, &budget, &[]).expect("episode runs");
+        assert!(out.violation.is_none(),
+                "clean tree must drain without violations: {:?}",
+                out.violation);
+        assert!(out.labels.iter().any(|l| l.contains("submit")));
+    }
+
+    /// The disagg default path actually migrates (the `migrate` action
+    /// precedes `tick` in the stable order, so choice-0 paths take it).
+    #[test]
+    fn default_disagg_episode_migrates() {
+        let cfg = config_by_name("upfront-noshare-disagg-fp16")
+            .expect("matrix cell exists");
+        let budget = McBudget { branch_depth: 0, ..McBudget::default() };
+        let out = run_episode(&cfg, &budget, &[]).expect("episode runs");
+        assert!(out.violation.is_none(), "clean drain: {:?}", out.violation);
+        assert!(out.labels.iter().any(|l| l.contains("migrate")),
+                "default disagg path must exercise migration: {:?}",
+                out.labels);
+    }
+
+    /// Replay rejects malformed specs and unknown configs.
+    #[test]
+    fn replay_spec_parsing_rejects_garbage() {
+        let budget = McBudget::default();
+        assert!(replay("no-colon", &budget).is_err());
+        assert!(replay("not-a-config:0,1", &budget).is_err());
+        assert!(replay("upfront-noshare-unified-fp16:zero", &budget).is_err());
+    }
+}

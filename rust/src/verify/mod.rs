@@ -1,0 +1,32 @@
+//! The verify subsystem (ISSUE 9): one place where the serving spine's
+//! correctness story lives, in three layers that share ONE set of
+//! predicates.
+//!
+//! * [`invariants`] — pure predicates over snapshot views of the
+//!   [`KvPool`](crate::coordinator::KvPool) and
+//!   [`Scheduler`](crate::coordinator::Scheduler): page conservation,
+//!   refcount consistency, table sanity, COW write safety, cross-shard
+//!   aliasing, exactly-once completion/migration accounting. The SAME
+//!   functions run as the debug-build per-tick probe inside
+//!   `Engine::step`, inside the tier-1 fuzz suites, and under the
+//!   model checker — a predicate can never drift between its users.
+//! * [`mc`] — a bounded exhaustive model checker that drives the REAL
+//!   scheduler/pool through every interleaving of a small decision
+//!   space (arrival order, tick order, migration timing) across the
+//!   {reservation} × {sharing} × {topology} × {codec} matrix, asserting
+//!   the layer-1 predicates after every action and minimizing any
+//!   violation into a replayable counterexample.
+//! * [`archlint`] — a dependency-free source scanner for the
+//!   architecture rules the compiler cannot see (page-ownership
+//!   confinement, façade panic-freedom, Debug everywhere), gated in CI
+//!   next to the checker.
+//!
+//! [`mutants`] closes the loop: known-fatal faults behind the
+//! `verify-mutants` feature, so the tier-1 gate can prove the checker
+//! CATCHES the bug classes it exists for — a checker that has never
+//! seen red is untested equipment.
+
+pub mod archlint;
+pub mod invariants;
+pub mod mc;
+pub mod mutants;

@@ -1,0 +1,73 @@
+//! Compile-time-selected fault injections for the model checker's
+//! mutation gate (ISSUE 9 satellite).
+//!
+//! A model checker that never fires is indistinguishable from one that
+//! cannot fire. This module plants three known-fatal bugs in the KV
+//! ownership machinery — each a real bug class the serving spine has
+//! to defend against — behind the off-by-default `verify-mutants`
+//! feature, and the tier-1 `verify_mutants` suite asserts the bounded
+//! explorer CATCHES every one of them with a minimized, replayable
+//! counterexample:
+//!
+//! * [`Mutant::SkipSharedRelease`] — [`KvPool::release`] drops the
+//!   refcount decrement on a shared page (the COW leak): the page can
+//!   never free once its sharers leave.
+//! * [`Mutant::DropDonorRelease`] — the donor shard's
+//!   [`Scheduler::take_migratable`] forgets to release a migrated
+//!   lane's pages: the donor pool leaks every migrated request.
+//! * [`Mutant::StaleFreeReport`] — admission reads a stale free-page
+//!   count and [`KvPool::alloc`] "satisfies" the shortage with a
+//!   duplicate of a live page: two lanes silently alias one physical
+//!   page.
+//!
+//! Without the feature the module compiles down to a `const fn` that
+//! returns `false` — every injection site folds away; with the
+//! feature, the active mutant is selected at runtime through [`arm`]
+//! so one test binary can exercise each fault in turn.
+//!
+//! [`KvPool::release`]: crate::coordinator::KvPool::release
+//! [`KvPool::alloc`]: crate::coordinator::KvPool::alloc
+//! [`Scheduler::take_migratable`]: crate::coordinator::Scheduler::take_migratable
+
+/// One plantable fault. The discriminants are stable — counterexample
+/// traces name mutants by this id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutant {
+    /// Skip the refcount decrement when releasing a shared page.
+    SkipSharedRelease = 1,
+    /// Donor shard keeps a migrated lane's pages allocated.
+    DropDonorRelease = 2,
+    /// Admission trusts a stale (+1) free-page report; the allocator
+    /// covers the shortage by aliasing a live page.
+    StaleFreeReport = 3,
+}
+
+#[cfg(feature = "verify-mutants")]
+mod armed {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// 0 = no mutant armed; otherwise `Mutant as usize`.
+    static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+    /// Select which fault is live (`None` disarms). Tests touching
+    /// this shared switch must serialize — see the `verify_mutants`
+    /// suite's mutex.
+    pub fn arm(m: Option<super::Mutant>) {
+        ACTIVE.store(m.map_or(0, |m| m as usize), Ordering::SeqCst);
+    }
+
+    /// Whether `m` is the armed fault.
+    pub fn active(m: super::Mutant) -> bool {
+        ACTIVE.load(Ordering::SeqCst) == m as usize
+    }
+}
+
+#[cfg(feature = "verify-mutants")]
+pub use armed::{active, arm};
+
+/// Without the `verify-mutants` feature no fault can ever be live;
+/// the injection sites guard on this constant `false` and fold away.
+#[cfg(not(feature = "verify-mutants"))]
+pub const fn active(_m: Mutant) -> bool {
+    false
+}

@@ -37,6 +37,7 @@ use flexllm::coordinator::{ArrivalProcess, Engine, ExecBackend, GenRequest,
                            ShardRole, TokenEvent};
 use flexllm::dse::tune_shard_mix;
 use flexllm::util::prop::Rng;
+use flexllm::verify::invariants::assert_clean;
 
 const VOCAB: usize = 512;
 const LANES: usize = 4;
@@ -154,7 +155,13 @@ fn drive_unsharded(engine: &mut Engine<MockBackend>, queue: &[GenRequest])
             streams.entry(id).or_default().push((token, index, done));
         }
         completed.extend(report.completed);
+        // the shared predicate set (verify::invariants) on the unified
+        // reference, every tick — the differential side of this suite
+        // only proves stream equality, so the reference itself must be
+        // certified consistent
+        assert_clean(&engine.scheduler, "unified reference tick");
     }
+    assert_clean(&engine.scheduler, "unified reference drained");
     completed.sort_by_key(|&(seq, _)| seq);
     let done = completed
         .into_iter()

@@ -33,6 +33,7 @@ use flexllm::coordinator::{run_open_loop, ArrivalProcess, Engine, GenRequest,
                            PagedPoolConfig, PrefillPolicy, ReservationPolicy,
                            RouterBuilder};
 use flexllm::util::prop::Rng;
+use flexllm::verify::invariants::assert_clean;
 
 const VOCAB: usize = 512;
 
@@ -279,11 +280,10 @@ fn preempted_prefix_sharer_keeps_the_head_resident() {
         }
         ticks += 1;
         assert!(ticks < 10_000, "driver did not terminate");
-        // page accounting never desyncs, preemption or not: free +
-        // lane-held + index-only pages == total, every tick
-        let sched = &engine.scheduler;
-        assert!(sched.free_pages() <= sched.total_pages(),
-                "free pages exceed the pool");
+        // page accounting never desyncs, preemption or not: the full
+        // shared predicate set (verify::invariants) — conservation,
+        // refcount-vs-table consistency, COW write safety — every tick
+        assert_clean(&engine.scheduler, &format!("tick {ticks}"));
     }
 
     assert!(engine.metrics.preemptions >= 1,
@@ -316,8 +316,10 @@ fn preempted_prefix_sharer_keeps_the_head_resident() {
     assert_eq!(probe_tokens,
                MockBackend::expected_tokens(&probe_prompt, 4, VOCAB));
 
-    // nothing leaked: whatever is still allocated is exactly what the
-    // prefix index pins for the next tenant
+    // nothing leaked: the shared predicates certify the drained state,
+    // and whatever is still allocated is exactly what the prefix index
+    // pins for the next tenant
+    assert_clean(&engine.scheduler, "drained");
     let held: usize = (0..engine.scheduler.lanes())
         .map(|l| engine.scheduler.page_table(l).map(|p| p.len()).unwrap_or(0))
         .sum();

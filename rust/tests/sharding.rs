@@ -16,9 +16,11 @@
 //!    exactly once, with exactly-once completions.
 //! 3. **Invariant fuzz**: dozens of seeded random configs over an
 //!    in-process multi-shard driver assert, at EVERY tick and for every
-//!    shard, `free + allocated == total` pages, page accounting synced
-//!    to the lane tables, no request in two shards' in-flight tables,
-//!    and drained results a permutation of submissions.
+//!    shard, the shared `verify::invariants` predicate set (page
+//!    conservation, refcount/table consistency, COW write safety,
+//!    cross-shard request aliasing, exactly-once completions) — the
+//!    same functions the debug probe and the bounded model checker
+//!    evaluate — and drained results a permutation of submissions.
 //! 4. **Placement policy**: least-loaded-by-free-pages picks the
 //!    emptiest shard deterministically (lowest id on ties) and starves
 //!    to the FIFO overflow only when NO shard fits.
@@ -29,13 +31,14 @@
 //! (`ServeMetrics::merge` percentile-pooling unit tests live next to
 //! the implementation in `coordinator/request.rs`.)
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
 
 use flexllm::coordinator::{place_shard, run_open_loop, ArrivalProcess, Engine,
                            GenRequest, KvLayout, MockBackend, OpenLoopConfig,
                            PagedPoolConfig, PrefillPolicy, ReservationPolicy,
                            RouterBuilder, ServeMetrics, TokenEvent};
 use flexllm::util::prop::Rng;
+use flexllm::verify::invariants::{check_sched, request_aliasing, StreamLog};
 
 const VOCAB: usize = 512;
 const LANES: usize = 4;
@@ -309,7 +312,10 @@ fn fuzz_sharded_invariants_hold_at_every_tick() {
             .collect();
         let submitted: Vec<u64> = overflow.iter().map(|r| r.id).collect();
 
-        let mut completed: Vec<u64> = Vec::new();
+        // the exactly-once ledger from verify::invariants — the same
+        // one the bounded model checker keeps
+        let mut log = StreamLog { submitted: submitted.clone(),
+                                  ..StreamLog::default() };
         let mut ticks = 0usize;
         loop {
             // the Router's placement rule, inline: FIFO head to the
@@ -329,50 +335,42 @@ fn fuzz_sharded_invariants_hold_at_every_tick() {
                     continue;
                 }
                 let report = e.step().unwrap();
-                completed.extend(report.completed.iter().map(|(_, r)| r.id));
+                log.completed.extend(report.completed.iter().map(|(_, r)| r.id));
             }
             ticks += 1;
             assert!(ticks < 10_000, "case {case}: driver did not terminate");
 
-            // ---- per-tick invariants -------------------------------------
-            let mut seen: HashSet<u64> = HashSet::new();
+            // ---- per-tick invariants: the ONE shared predicate set -------
+            // (verify::invariants, the same functions the debug probe
+            // and the bounded model checker evaluate): per shard, page
+            // conservation / refcount-vs-table consistency / table
+            // sanity / COW write safety; across shards, no request in
+            // two in-flight tables; plus exactly-once completions
+            let mut found: Vec<String> = Vec::new();
             for e in &engines {
-                let sched = &e.scheduler;
-                // free + allocated == total, every tick, every shard —
-                // with "allocated" counted INDEPENDENTLY off the live
-                // lane tables, so a page that is neither free nor held
-                // (leak) or doubly held (alias) breaks the equation
-                let held: usize = (0..sched.lanes())
-                    .map(|l| sched.page_table(l).map(|p| p.len()).unwrap_or(0))
-                    .sum();
-                assert_eq!(sched.free_pages() + held, sched.total_pages(),
-                           "case {case} shard {}: free + allocated != total",
-                           e.shard_id());
-                // ...and the allocator's own view agrees with the tables
-                assert_eq!(sched.page_stats().pages_in_use, held,
-                           "case {case} shard {}: allocator desynced from lane \
-                            tables", e.shard_id());
-                // no request may appear in two shards' in-flight tables
-                for id in sched.inflight_ids() {
-                    assert!(seen.insert(id),
-                            "case {case}: request {id} in flight on two shards");
-                    assert!(submitted.contains(&id),
-                            "case {case}: unknown request {id} in flight");
+                for v in check_sched(&e.scheduler) {
+                    found.push(format!("shard {}: {v}", e.shard_id()));
                 }
             }
+            let mut cross = Vec::new();
+            request_aliasing(engines.iter().map(|e| &e.scheduler), &mut cross);
+            log.check_partial(&mut cross);
+            found.extend(cross.iter().map(ToString::to_string));
+            assert!(found.is_empty(), "case {case} tick {ticks}: {}",
+                    found.join("; "));
         }
 
-        // drained results are a permutation of submissions
-        let mut got = completed.clone();
-        got.sort_unstable();
-        let mut want = submitted.clone();
-        want.sort_unstable();
-        assert_eq!(got, want,
-                   "case {case}: completions are not a permutation of submissions");
-        assert_eq!(completed.len(), n, "case {case}: duplicate completion");
-        // nothing left behind
+        // drained: completions a permutation of submissions (no dup, no
+        // loss) and balanced migrations — the ledger's end-state check
+        let mut end = Vec::new();
+        log.check_drained(&mut end);
+        assert!(end.is_empty(), "case {case}: {}",
+                end.iter().map(ToString::to_string).collect::<Vec<_>>()
+                    .join("; "));
+        assert_eq!(log.completed.len(), n, "case {case}: completion count");
+        // nothing left behind in any pool
         for e in &engines {
-            assert_eq!(e.scheduler.page_stats().pages_in_use, 0,
+            assert_eq!(e.scheduler.free_pages(), e.scheduler.total_pages(),
                        "case {case} shard {}: leaked pages at the end",
                        e.shard_id());
         }

@@ -1,0 +1,63 @@
+//! Tier-1 gate for the verify subsystem (ISSUE 9): the bounded model
+//! checker finds NO violation on the clean tree, and the architectural
+//! lint passes over the crate's own sources.
+//!
+//! The tier-1 run uses a small exploration depth so the dev-profile
+//! suite stays fast; CI's `model-check` job re-runs the checker at the
+//! full default depth in release mode (`flexllm verify --bounded`).
+
+use flexllm::verify::{archlint, mc};
+
+/// Dev-profile exploration depth: every interleaving of the first 3
+/// scheduling decisions per episode, across all 16 matrix cells.
+const TIER1_DEPTH: usize = 3;
+
+fn tier1_budget() -> mc::McBudget {
+    mc::McBudget { branch_depth: TIER1_DEPTH, ..mc::McBudget::default() }
+}
+
+#[test]
+fn bounded_check_is_clean_on_every_config() {
+    let reports = mc::check_all(&tier1_budget()).expect("exploration in budget");
+    assert_eq!(reports.len(), 16, "one report per matrix cell");
+    for r in &reports {
+        assert!(
+            r.violation.is_none(),
+            "config {}: unexpected violation:\n{}",
+            r.config,
+            r.violation.as_ref().expect("checked some")
+        );
+        // an explorer that visits nothing proves nothing
+        assert!(r.interleavings > 0, "config {}: zero interleavings", r.config);
+        assert!(r.unique_states > 1, "config {}: degenerate state space", r.config);
+    }
+    // depth 3 over a >=2-way decision space must branch somewhere
+    let total: usize = reports.iter().map(|r| r.interleavings).sum();
+    assert!(total > 16, "no config ever branched: {total} episodes total");
+}
+
+#[test]
+fn replay_of_a_clean_trace_is_clean_and_deterministic() {
+    let budget = tier1_budget();
+    let a = mc::replay("upfront-share-disagg-int8:0,1,0", &budget)
+        .expect("valid spec");
+    assert!(a.violation.is_none(), "clean tree, clean replay");
+    let b = mc::replay("upfront-share-disagg-int8:0,1,0", &budget)
+        .expect("valid spec");
+    assert_eq!(a.unique_states, b.unique_states, "replay must be deterministic");
+}
+
+#[test]
+fn arch_lint_passes_on_the_crate_sources() {
+    let root = archlint::default_src_root();
+    let violations = archlint::lint(&root).expect("source tree readable");
+    assert!(
+        violations.is_empty(),
+        "architectural lint violations:\n{}",
+        violations
+            .iter()
+            .map(|v| format!("  {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
