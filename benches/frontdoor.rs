@@ -1,0 +1,132 @@
+//! Front-door overload sweep: goodput, shed/steal counts and
+//! Interactive tail latency vs burst factor × shed watermark × work
+//! stealing, on the U280-modeled sharded open loop.
+//!
+//! The headline reproduces the tier-1 acceptance experiment of
+//! `tests/frontdoor.rs` — a prefix-affinity-funneled burst at 1× and 2×
+//! machine capacity — and is gated in CI against the committed
+//! `BENCH_frontdoor.json` floors:
+//!
+//! * `goodput_on_vs_base` — goodput retention of the front-door-ON 2×
+//!   overload run against the unloaded baseline (the floor gates
+//!   ≥ 0.8: "degrades by ≤ 20%").
+//! * `goodput_off_vs_base` — the same ratio with the front door OFF
+//!   (the ceiling gates ≤ 0.5: "loses ≥ 50%").
+//!
+//! Output: `frontdoor.json` in the working directory (override with the
+//! `FRONTDOOR_OUT` environment variable), also echoed to stdout. Every
+//! float goes through `fmt_json_f64`, so the document always parses.
+
+use flexllm::coordinator::{run_open_loop, FrontDoorConfig, OpenLoopConfig,
+                           OpenLoopStats, PagedPoolConfig, PrefillPolicy,
+                           ReservationPolicy};
+use flexllm::util::fmt_json_f64;
+
+/// Requests per capacity wave: 4 lanes per shard × 2 shards.
+const WAVE: usize = 8;
+
+/// The funnel workload of `tests/frontdoor.rs`: one instantaneous
+/// burst, every prompt opening with a pre-warmed system prompt resident
+/// on shard 0, so affine placement funnels the whole burst there.
+fn funnel_cfg(requests: usize) -> OpenLoopConfig {
+    let mut cfg = OpenLoopConfig::default();
+    cfg.prefill_len = 64;
+    cfg.max_seq = 272;
+    cfg.requests = requests;
+    cfg.bursts = 1;
+    cfg.burst_jitter_s = 0.0;
+    cfg.min_new_tokens = 200;
+    cfg.max_new_tokens = 200;
+    cfg.paged = Some(PagedPoolConfig {
+        page_len: 16, pages: 600, max_lanes: 8, decode_width: 4 });
+    cfg.reserve = ReservationPolicy::Upfront;
+    cfg.shards = 2;
+    cfg.shared_prefix_len = 32;
+    cfg.prefix_groups = 1;
+    cfg.shared_frac = 1.0;
+    cfg.prefix_share = true;
+    cfg.prefix_warm = true;
+    cfg.interactive_every = 5;
+    cfg.seed = 0xF00D;
+    cfg
+}
+
+fn run(cfg: &OpenLoopConfig) -> OpenLoopStats {
+    run_open_loop(PrefillPolicy::adaptive(8, 64), cfg).expect("open loop runs")
+}
+
+fn main() {
+    let front_on = FrontDoorConfig::on().with_shed_watermark(4.0).with_steal(true);
+
+    // calibrate the TTFT deadline off the unloaded one-wave run, then
+    // re-judge the baseline and both 2x-overload arms under it
+    let mut base_cfg = funnel_cfg(WAVE);
+    base_cfg.front_door = front_on;
+    let deadline = 1.4 * run(&base_cfg).makespan_s;
+    base_cfg.interactive_ttft_s = deadline;
+    base_cfg.batch_ttft_s = deadline;
+    let base = run(&base_cfg);
+
+    let arm = |front: FrontDoorConfig| {
+        let mut cfg = funnel_cfg(2 * WAVE);
+        cfg.front_door = front;
+        cfg.interactive_ttft_s = deadline;
+        cfg.batch_ttft_s = deadline;
+        run(&cfg)
+    };
+    let on = arm(front_on);
+    let off = arm(FrontDoorConfig::default());
+    let on_ratio = on.goodput_rps / base.goodput_rps.max(1e-12);
+    let off_ratio = off.goodput_rps / base.goodput_rps.max(1e-12);
+    println!(
+        "headline: goodput {:.3}/s base | {:.3}/s on ({:.2}x, {} stolen) | \
+         {:.3}/s off ({:.2}x) | interactive p95 {:.3}s vs deadline {:.3}s",
+        base.goodput_rps, on.goodput_rps, on_ratio, on.stolen,
+        off.goodput_rps, off_ratio, on.interactive_ttft_p95_s, deadline);
+
+    // sweep: burst factor x shed watermark x stealing. The 0.25
+    // watermark (150 of 600 pages) admits the whole 1x wave (139 pages
+    // peak demand) but sheds the tail of a 2x-and-beyond burst; 4.0
+    // never sheds, isolating the stealing effect.
+    let mut entries: Vec<String> = Vec::new();
+    for &factor in &[1usize, 2, 3] {
+        for &(watermark, steal) in &[(0.25, false), (0.25, true),
+                                     (4.0, false), (4.0, true)] {
+            let mut cfg = funnel_cfg(factor * WAVE);
+            cfg.front_door = FrontDoorConfig::on()
+                .with_shed_watermark(watermark)
+                .with_steal(steal);
+            cfg.interactive_ttft_s = deadline;
+            cfg.batch_ttft_s = deadline;
+            let stats = run(&cfg);
+            entries.push(format!(
+                "{{\"burst_factor\": {factor}, \"shed_watermark\": {}, \
+                 \"steal\": {steal}, \"stats\": {}}}",
+                fmt_json_f64(watermark), stats.to_json()));
+            println!(
+                "burst {factor}x watermark {watermark:.2} steal {steal:>5}: \
+                 met {:>2}/{:<2} | goodput {:.3}/s | shed {:>2} | stolen {:>2} \
+                 | int p95 {:.3}s",
+                stats.slo_met, cfg.requests, stats.goodput_rps, stats.shed,
+                stats.stolen, stats.interactive_ttft_p95_s);
+        }
+    }
+
+    let doc = format!(
+        "{{\"bench\": \"frontdoor\", \"backend\": \"modeled-u280\", \
+         \"shards\": 2, \"wave\": {WAVE}, \
+         \"headline\": {{\"goodput_base_rps\": {}, \"goodput_on_rps\": {}, \
+         \"goodput_off_rps\": {}, \"goodput_on_vs_base\": {}, \
+         \"goodput_off_vs_base\": {}, \"stolen_on\": {}, \"shed_on\": {}, \
+         \"interactive_ttft_p95_s\": {}, \"ttft_deadline_s\": {}}}, \
+         \"points\": [{}]}}\n",
+        fmt_json_f64(base.goodput_rps), fmt_json_f64(on.goodput_rps),
+        fmt_json_f64(off.goodput_rps), fmt_json_f64(on_ratio),
+        fmt_json_f64(off_ratio), on.stolen, on.shed,
+        fmt_json_f64(on.interactive_ttft_p95_s), fmt_json_f64(deadline),
+        entries.join(", "));
+    let out = std::env::var("FRONTDOOR_OUT")
+        .unwrap_or_else(|_| "frontdoor.json".to_string());
+    std::fs::write(&out, &doc).expect("write frontdoor.json");
+    println!("\nwrote {} sweep points to {out}", entries.len());
+}

@@ -16,6 +16,7 @@ use std::fmt;
 use crate::anyhow::{anyhow, Result};
 
 use super::engine::KvLayout;
+use super::frontdoor::FrontDoorConfig;
 use super::kv::{PageCodec, ReservationPolicy};
 use super::scheduler::PrefillPolicy;
 
@@ -205,6 +206,10 @@ pub struct ServeConfig {
     pub prefill: PrefillConfig,
     pub kv: KvConfig,
     pub topology: TopologyConfig,
+    /// SLO-aware admission layer (DESIGN.md §16): load-shed watermark
+    /// and cross-shard work stealing. Disabled by default — every
+    /// pre-ISSUE-10 construction path keeps PR 9 behavior bit-for-bit.
+    pub front_door: FrontDoorConfig,
 }
 
 impl ServeConfig {
@@ -247,6 +252,12 @@ impl ServeConfig {
 
     pub fn roles(mut self, roles: Vec<ShardRole>) -> Self {
         self.topology = TopologyConfig { roles };
+        self
+    }
+
+    /// Install the SLO-aware front door (shed watermark + stealing).
+    pub fn front_door(mut self, fd: FrontDoorConfig) -> Self {
+        self.front_door = fd;
         self
     }
 
@@ -305,6 +316,8 @@ impl ServeConfig {
                 "ServeConfig: quantized KV ({}) is page-granular — use the \
                  paged layout", self.kv.kv_quant.name()));
         }
+        // front-door knob sanity (watermark finite/positive when enabled)
+        self.front_door.validate()?;
         Ok(())
     }
 }
@@ -430,6 +443,22 @@ mod tests {
         assert!(TopologyConfig::parse("").is_err());
         assert!(TopologyConfig::parse("2q").is_err());
         assert!(TopologyConfig::parse("0p,1d").is_err());
+    }
+
+    #[test]
+    fn front_door_knobs_validate_through_serve_config() {
+        // off by default: PartialEq keeps the pre-front-door identity
+        let cfg = ServeConfig::default();
+        assert!(!cfg.front_door.enabled);
+        assert!(cfg.validate().is_ok());
+        // enabled with a sane watermark passes; a zero watermark fails
+        let cfg = ServeConfig::new()
+            .front_door(FrontDoorConfig::on().with_shed_watermark(0.5).with_steal(true));
+        assert!(cfg.validate().is_ok());
+        let cfg = ServeConfig::new()
+            .front_door(FrontDoorConfig::on().with_shed_watermark(0.0));
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("shed watermark"), "{err}");
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::anyhow::{anyhow, Result};
 
 use super::backend::{ExecBackend, PjrtBackend, PrefillSlot};
 use super::config::ShardRole;
+use super::frontdoor::AdaptiveChunk;
 use super::kv::ReservationPolicy;
 use super::request::{GenRequest, GenResult, ServeMetrics};
 use super::scheduler::{Completion, MigratedLane, PrefillPolicy, Scheduler};
@@ -98,6 +99,10 @@ pub struct Engine<B: ExecBackend> {
     /// set lets the engine notify the backend (`retire_lane`) when a
     /// sharer leaves, so read-only page claims never outlive the lane.
     shared_lanes: HashSet<usize>,
+    /// Chunk-width controller state for [`PrefillPolicy::Adaptive`]
+    /// (one `observe(queue depth)` per tick). Degenerate (width 1) and
+    /// never consulted under the other policies.
+    adaptive: AdaptiveChunk,
 }
 
 // Manual: deriving would demand `B: Debug` of every backend; the
@@ -173,7 +178,7 @@ impl<B: ExecBackend> Engine<B> {
                 chunk_len: spec.prefill_len,
                 decode_priority: false,
             },
-            PrefillPolicy::Chunked { .. }
+            PrefillPolicy::Chunked { .. } | PrefillPolicy::Adaptive { .. }
                 if !spec.chunked_prefill || !spec.per_lane_pos =>
             {
                 PrefillPolicy::Blocking
@@ -181,13 +186,34 @@ impl<B: ExecBackend> Engine<B> {
             other => other,
         };
         // step 2: snap any chunked policy to the backend's fixed
-        // artifact chunk width (one place, so the rule cannot diverge)
+        // artifact chunk width (one place, so the rule cannot diverge).
+        // A fixed artifact width makes Adaptive impossible — it
+        // collapses to fixed-width Chunked rather than pretending.
         let policy = match policy {
             PrefillPolicy::Chunked { chunk_len, decode_priority } => {
                 let chunk_len = spec.chunk_len.unwrap_or(chunk_len.max(1)).max(1);
                 PrefillPolicy::Chunked { chunk_len, decode_priority }
             }
+            PrefillPolicy::Adaptive { min_chunk, max_chunk, decode_priority } => {
+                match spec.chunk_len {
+                    Some(w) => PrefillPolicy::Chunked { chunk_len: w.max(1),
+                                                        decode_priority },
+                    None => {
+                        // normalize degenerate bounds through the
+                        // controller's own clamping rule
+                        let c = AdaptiveChunk::new(min_chunk, max_chunk);
+                        PrefillPolicy::Adaptive { min_chunk: c.min_chunk,
+                                                  max_chunk: c.max_chunk,
+                                                  decode_priority }
+                    }
+                }
+            }
             PrefillPolicy::Blocking => PrefillPolicy::Blocking,
+        };
+        let adaptive = match policy {
+            PrefillPolicy::Adaptive { min_chunk, max_chunk, .. } =>
+                AdaptiveChunk::new(min_chunk, max_chunk),
+            _ => AdaptiveChunk::new(1, 1),
         };
         let (layout, scheduler, pages_total) = match paged_caps {
             Some(caps) => (
@@ -212,7 +238,7 @@ impl<B: ExecBackend> Engine<B> {
         metrics.kv_bytes_per_row_effective = scheduler.kv_bytes_per_row_effective();
         let reserve = scheduler.reserve();
         Engine { backend, scheduler, metrics, policy, layout, reserve, shard: 0,
-                 role: ShardRole::Unified, shared_lanes: HashSet::new() }
+                 role: ShardRole::Unified, shared_lanes: HashSet::new(), adaptive }
     }
 
     /// Assign this engine a disaggregated serving role (builder; the
@@ -281,6 +307,14 @@ impl<B: ExecBackend> Engine<B> {
     /// coercion).
     pub fn policy(&self) -> PrefillPolicy {
         self.policy
+    }
+
+    /// Current adaptive chunk width (`None` unless the policy is
+    /// [`PrefillPolicy::Adaptive`]) — observability for tests and the
+    /// overload bench.
+    pub fn adaptive_chunk(&self) -> Option<usize> {
+        matches!(self.policy, PrefillPolicy::Adaptive { .. })
+            .then(|| self.adaptive.current())
     }
 
     /// The cache layout actually in effect (after capability coercion).
@@ -370,8 +404,22 @@ impl<B: ExecBackend> Engine<B> {
             }
         }
 
-        match self.policy {
-            PrefillPolicy::Blocking => {
+        // resolve the tick's prefill plan: `None` = blocking, otherwise
+        // the chunk width + cadence knob. Adaptive feeds the controller
+        // one queue-depth observation per tick — the POST-admission
+        // depth, i.e. demand this tick could not seat — and uses the
+        // resulting width exactly like a fixed Chunked policy would.
+        let chunk_plan = match self.policy {
+            PrefillPolicy::Blocking => None,
+            PrefillPolicy::Chunked { chunk_len, decode_priority } =>
+                Some((chunk_len, decode_priority)),
+            PrefillPolicy::Adaptive { decode_priority, .. } => {
+                let queued = self.scheduler.queued();
+                Some((self.adaptive.observe(queued), decode_priority))
+            }
+        };
+        match chunk_plan {
+            None => {
                 if !admitted.is_empty() {
                     let prefill_len = self.prefill_len();
                     let mut slots = Vec::with_capacity(admitted.len());
@@ -389,7 +437,7 @@ impl<B: ExecBackend> Engine<B> {
                     }
                 }
             }
-            PrefillPolicy::Chunked { chunk_len, decode_priority } => {
+            Some((chunk_len, decode_priority)) => {
                 let mut lanes = self.scheduler.prefilling_lanes();
                 if decode_priority && self.scheduler.has_warm_lane() {
                     // one chunk per tick: resident lanes keep their
@@ -1003,5 +1051,53 @@ mod tests {
         assert_eq!(stream, want[0].tokens);
         let indices: Vec<usize> = events.iter().map(|e| e.index).collect();
         assert_eq!(indices, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn adaptive_policy_coerces_like_chunked() {
+        // capable backend: Adaptive survives, bounds normalized
+        let e = Engine::with_layout(paged_mock(), PrefillPolicy::adaptive(2, 8),
+                                    KvLayout::Paged);
+        assert_eq!(e.policy(),
+                   PrefillPolicy::Adaptive { min_chunk: 2, max_chunk: 8,
+                                             decode_priority: true });
+        assert_eq!(e.adaptive_chunk(), Some(2), "controller starts at min_chunk");
+        // aligned-only backend (no chunk op / no per-lane positions):
+        // Adaptive degrades to Blocking exactly like Chunked does
+        let e = Engine::with_policy(MockBackend::aligned(2, 4, 32, 64),
+                                    PrefillPolicy::adaptive(2, 8));
+        assert_eq!(e.policy(), PrefillPolicy::Blocking);
+        assert_eq!(e.adaptive_chunk(), None);
+        // degenerate bounds normalize instead of panicking
+        let e = Engine::with_layout(paged_mock(), PrefillPolicy::adaptive(8, 2),
+                                    KvLayout::Paged);
+        assert_eq!(e.policy(),
+                   PrefillPolicy::Adaptive { min_chunk: 8, max_chunk: 8,
+                                             decode_priority: true });
+    }
+
+    #[test]
+    fn adaptive_streams_match_fixed_chunked_byte_for_byte() {
+        // chunk width moves modeled TIMING only: the mock's streams are
+        // a pure function of the prompt, so an adaptive engine must
+        // reproduce the fixed-width engine's bytes exactly even while
+        // its width breathes with the queue depth
+        let reqs: Vec<GenRequest> = (0..6)
+            .map(|i| GenRequest::new(i, (i as i32..i as i32 + 4).collect(), 5))
+            .collect();
+        let mut fixed = Engine::with_layout(paged_mock(), PrefillPolicy::chunked(4),
+                                            KvLayout::Paged);
+        let want = fixed.serve(&reqs).unwrap();
+        let mut adaptive = Engine::with_layout(paged_mock(),
+                                               PrefillPolicy::adaptive(1, 4),
+                                               KvLayout::Paged);
+        let got = adaptive.serve(&reqs).unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.tokens, g.tokens, "request {} bytes diverged", w.id);
+        }
+        // the deep initial queue must have grown the width off its floor
+        // at some point; after the drain it has decayed back toward it
+        assert_eq!(adaptive.adaptive_chunk(), Some(1),
+                   "an idle engine decays back to min_chunk");
     }
 }

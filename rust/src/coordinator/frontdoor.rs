@@ -1,0 +1,513 @@
+//! SLO-aware front door (ISSUE 10): the admission-policy layer that
+//! sits between `Router::submit` / the open-loop drivers and the
+//! per-shard schedulers.
+//!
+//! Everything here is PURE POLICY — small deterministic state machines
+//! with no channels, threads or clocks — so the threaded Router
+//! coordinator, the virtual-time open-loop harness and the inline CLI
+//! driver all share the exact same decisions and cannot drift apart:
+//!
+//! * [`SloClass`] / [`Slo`] — per-request service class with TTFT/TPOT
+//!   deadlines, carried on `GenRequest` and validated with the rest of
+//!   the request shape. `Interactive` is never shed; `Batch` is the
+//!   deferrable/sheddable bulk tier.
+//! * [`FrontDoorConfig`] — the three knobs (enabled, shed watermark,
+//!   stealing), validated through `ServeConfig::validate`.
+//! * [`FrontDoorConfig::shed`] — the load-shed decision: when the
+//!   pool-wide queued page demand exceeds the watermark (a fraction of
+//!   total pool pages — the point where projected queue wait blows an
+//!   Interactive TTFT deadline under the modeled drain rate), new
+//!   Batch submissions are rejected with a typed [`Overloaded`] error
+//!   instead of parking in the overflow queue forever.
+//! * [`overflow_insert`] — the deferral arm: with the front door on,
+//!   the shared overflow queue becomes a two-level priority queue
+//!   (Interactive FIFO ahead of Batch FIFO). With the door off, or a
+//!   uniform class, it is exactly `push_back` — PR 9 ordering
+//!   bit-for-bit, which is what keeps zero-overload streams
+//!   byte-identical.
+//! * [`AdaptiveChunk`] — the chunk-width controller behind
+//!   `PrefillPolicy::Adaptive`: queue depth grows the chunk toward
+//!   `max_chunk` (drain the prompt backlog), an empty queue shrinks it
+//!   toward `min_chunk` (protect decode cadence). Deterministic, no
+//!   clock, no RNG — chunk width changes modeled timing, never token
+//!   bytes.
+//! * [`pick_donor`] / [`RequestTooWide`] — the work-stealing donor
+//!   rule and the typed fail-fast for requests wider than any single
+//!   shard's pool (the overflow head-of-line livelock fix).
+//!
+//! The crate's `anyhow` replacement carries messages, not payloads, so
+//! "typed" errors here are real `std::error::Error` structs whose
+//! `Display` opens with a stable prefix; the `matches` helpers classify
+//! an `Error` that has already crossed the channel boundary.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use crate::anyhow::{Error, Result};
+use crate::bail;
+
+// ---------------------------------------------------------------------------
+// SLO classes and per-request deadlines
+// ---------------------------------------------------------------------------
+
+/// Service class of a request. `Batch` is the default: unmarked
+/// traffic is deferrable, and only explicitly `Interactive` requests
+/// get priority (and shed immunity) at the front door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SloClass {
+    /// Latency-sensitive: never shed, jumps Batch in the overflow
+    /// queue, and its TTFT deadline is what the goodput gate measures.
+    Interactive,
+    /// Throughput tier: deferred behind Interactive under load and
+    /// rejected with [`Overloaded`] past the shed watermark.
+    #[default]
+    Batch,
+}
+
+impl SloClass {
+    /// Stable lowercase name (CLI / JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Result<SloClass> {
+        match s {
+            "interactive" => Ok(SloClass::Interactive),
+            "batch" => Ok(SloClass::Batch),
+            other => bail!("unknown SLO class '{other}' (interactive|batch)"),
+        }
+    }
+}
+
+/// Per-request SLO: class plus the deadlines goodput is measured
+/// against. Deadlines are in (wall or modeled) seconds and must be
+/// finite and positive — `validate` runs with the rest of the request
+/// shape checks at submit time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    pub class: SloClass,
+    /// First-token deadline: a completion "meets SLO" iff its TTFT is
+    /// at or under this.
+    pub ttft_deadline_s: f64,
+    /// Per-output-token deadline (decode cadence budget).
+    pub tpot_deadline_s: f64,
+}
+
+/// Default Batch deadlines: finite (the hand-rolled JSON emitters map
+/// non-finite to 0.0, so `f64::INFINITY` would read as "impossible")
+/// but far beyond any modeled makespan — an unmarked request only
+/// misses its SLO if it never completes.
+const BATCH_TTFT_S: f64 = 1.0e6;
+const BATCH_TPOT_S: f64 = 1.0e6;
+
+impl Slo {
+    /// Interactive defaults: 1 s to first token, 250 ms per token.
+    pub fn interactive() -> Slo {
+        Slo { class: SloClass::Interactive, ttft_deadline_s: 1.0, tpot_deadline_s: 0.25 }
+    }
+
+    /// Batch defaults: effectively unbounded (but finite) deadlines.
+    pub fn batch() -> Slo {
+        Slo {
+            class: SloClass::Batch,
+            ttft_deadline_s: BATCH_TTFT_S,
+            tpot_deadline_s: BATCH_TPOT_S,
+        }
+    }
+
+    /// Override the first-token deadline.
+    pub fn with_ttft_deadline(mut self, s: f64) -> Slo {
+        self.ttft_deadline_s = s;
+        self
+    }
+
+    /// Override the per-token deadline.
+    pub fn with_tpot_deadline(mut self, s: f64) -> Slo {
+        self.tpot_deadline_s = s;
+        self
+    }
+
+    /// Deadlines must be finite and positive (non-finite values would
+    /// make every comparison vacuous and poison the JSON emitters).
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [("ttft", self.ttft_deadline_s), ("tpot", self.tpot_deadline_s)] {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("SLO {name} deadline must be finite and positive, got {v}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Did a completion with this TTFT meet the SLO?
+    pub fn met(&self, ttft_s: f64) -> bool {
+        ttft_s <= self.ttft_deadline_s
+    }
+}
+
+impl Default for Slo {
+    fn default() -> Slo {
+        Slo::batch()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Front-door configuration
+// ---------------------------------------------------------------------------
+
+/// The front-door knobs, validated through `ServeConfig::validate`.
+/// Disabled by default: every pre-ISSUE-10 call site keeps PR 9
+/// behavior bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrontDoorConfig {
+    /// Master switch: off = FIFO overflow, no shedding, no stealing.
+    pub enabled: bool,
+    /// Shed watermark as a fraction of total pool pages: when the
+    /// queued page demand exceeds `shed_watermark × total_pages`, new
+    /// Batch submissions are rejected with [`Overloaded`]. Values
+    /// above 1.0 allow queueing deeper than one full pool turn.
+    pub shed_watermark: f64,
+    /// Cross-shard work stealing: an idle shard takes the youngest
+    /// queued (never prefilled) request from the longest-queued shard.
+    pub steal: bool,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> FrontDoorConfig {
+        FrontDoorConfig { enabled: false, shed_watermark: 0.75, steal: false }
+    }
+}
+
+impl FrontDoorConfig {
+    /// An enabled front door with default watermark and no stealing.
+    pub fn on() -> FrontDoorConfig {
+        FrontDoorConfig { enabled: true, ..FrontDoorConfig::default() }
+    }
+
+    /// Builder: set the shed watermark.
+    pub fn with_shed_watermark(mut self, w: f64) -> FrontDoorConfig {
+        self.shed_watermark = w;
+        self
+    }
+
+    /// Builder: toggle cross-shard stealing.
+    pub fn with_steal(mut self, steal: bool) -> FrontDoorConfig {
+        self.steal = steal;
+        self
+    }
+
+    /// Knob sanity, called from `ServeConfig::validate`.
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if !self.shed_watermark.is_finite() || self.shed_watermark <= 0.0 {
+            bail!(
+                "front door: shed watermark must be finite and positive \
+                 (a fraction of total pool pages), got {}",
+                self.shed_watermark
+            );
+        }
+        Ok(())
+    }
+
+    /// The watermark in pages for a pool of `total_pages`.
+    pub fn watermark_pages(&self, total_pages: usize) -> usize {
+        (((self.shed_watermark * total_pages as f64).ceil()) as usize).max(1)
+    }
+
+    /// The load-shed decision at submit time: `Some(Overloaded)` means
+    /// the submission must be rejected. Interactive traffic is never
+    /// shed; Batch is shed once the queued demand passes the
+    /// watermark.
+    pub fn shed(&self, slo: &Slo, snap: PoolSnapshot) -> Option<Overloaded> {
+        if !self.enabled || slo.class == SloClass::Interactive {
+            return None;
+        }
+        let watermark_pages = self.watermark_pages(snap.total_pages);
+        if snap.queued_pages > watermark_pages {
+            Some(Overloaded {
+                queued_pages: snap.queued_pages,
+                watermark_pages,
+                total_pages: snap.total_pages,
+            })
+        } else {
+            None
+        }
+    }
+}
+
+/// Pool-wide congestion snapshot the shed decision reads: total pages
+/// across live admitting shards and the page demand currently parked
+/// (overflow queue plus per-shard admission queues).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolSnapshot {
+    pub total_pages: usize,
+    pub queued_pages: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Typed errors
+// ---------------------------------------------------------------------------
+
+/// Typed rejection of a Batch submission past the shed watermark. The
+/// caller should back off and retry once the backlog drains — the
+/// request was NOT queued.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded {
+    pub queued_pages: usize,
+    pub watermark_pages: usize,
+    pub total_pages: usize,
+}
+
+/// Stable `Display` prefix [`Overloaded::matches`] classifies by (the
+/// in-tree anyhow carries messages, not payloads).
+pub const OVERLOADED_PREFIX: &str = "overloaded:";
+
+impl fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{OVERLOADED_PREFIX} {} queued pages exceed the shed watermark of \
+             {} pages ({} pool pages) — batch admission sheds until the \
+             backlog drains",
+            self.queued_pages, self.watermark_pages, self.total_pages
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+impl Overloaded {
+    /// Does an error that crossed the channel boundary denote an
+    /// overload shed? Checks the whole context chain.
+    pub fn matches(e: &Error) -> bool {
+        format!("{e:#}").contains(OVERLOADED_PREFIX)
+    }
+}
+
+/// Typed fail-fast for a request whose page reservation exceeds every
+/// single shard's pool: legal against total memory, impossible after
+/// `kv::split_budget` — without this check it would park at the shared
+/// overflow head forever and starve all later arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestTooWide {
+    pub id: u64,
+    pub needed_pages: usize,
+    pub shard_pages: usize,
+}
+
+/// Stable `Display` marker [`RequestTooWide::matches`] classifies by.
+pub const TOO_WIDE_MARKER: &str = "too wide for any shard";
+
+impl fmt::Display for RequestTooWide {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "request {} {TOO_WIDE_MARKER}: reservation of {} pages exceeds \
+             the per-shard pool of {} pages — lower --kv-overcommit, add \
+             pages, or reduce --shards",
+            self.id, self.needed_pages, self.shard_pages
+        )
+    }
+}
+
+impl std::error::Error for RequestTooWide {}
+
+impl RequestTooWide {
+    /// Does an error denote the per-shard capacity rejection?
+    pub fn matches(e: &Error) -> bool {
+        format!("{e:#}").contains(TOO_WIDE_MARKER)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Overflow priority insert (the Batch-deferral arm)
+// ---------------------------------------------------------------------------
+
+/// Insert into the shared overflow queue. With the front door enabled,
+/// Interactive entries go ahead of every queued Batch entry (stable:
+/// after the last queued Interactive), which is the mechanism that
+/// keeps Interactive TTFT under deadline while Batch floods. With the
+/// door off — or a uniform class — this is exactly `push_back`, so
+/// PR 9 dispatch order (and therefore every stream byte) is preserved.
+pub fn overflow_insert<T>(
+    enabled: bool,
+    queue: &mut VecDeque<T>,
+    item: T,
+    class_of: impl Fn(&T) -> SloClass,
+) {
+    if enabled && class_of(&item) == SloClass::Interactive {
+        let pos = queue
+            .iter()
+            .position(|t| class_of(t) == SloClass::Batch)
+            .unwrap_or(queue.len());
+        queue.insert(pos, item);
+    } else {
+        queue.push_back(item);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive chunk-width controller
+// ---------------------------------------------------------------------------
+
+/// Deterministic chunk-width controller for `PrefillPolicy::Adaptive`:
+/// one observation per engine tick. A non-empty admission queue
+/// doubles the width toward `max_chunk` (drain the prompt backlog
+/// before it snowballs); an empty queue halves it toward `min_chunk`
+/// (small chunks keep decode iterations frequent). No clock, no RNG —
+/// the width only moves modeled/wall TIME, never token bytes, because
+/// the mock/modeled streams are position-deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdaptiveChunk {
+    pub min_chunk: usize,
+    pub max_chunk: usize,
+    cur: usize,
+}
+
+impl AdaptiveChunk {
+    /// Controller starting at `min_chunk` (decode-protective until a
+    /// backlog proves otherwise). Degenerate bounds are clamped sane.
+    pub fn new(min_chunk: usize, max_chunk: usize) -> AdaptiveChunk {
+        let min_chunk = min_chunk.max(1);
+        let max_chunk = max_chunk.max(min_chunk);
+        AdaptiveChunk { min_chunk, max_chunk, cur: min_chunk }
+    }
+
+    /// The width the next prefill chunk will use.
+    pub fn current(&self) -> usize {
+        self.cur
+    }
+
+    /// Feed one queue-depth observation; returns the updated width.
+    pub fn observe(&mut self, queued: usize) -> usize {
+        self.cur = if queued > 0 {
+            (self.cur.saturating_mul(2)).min(self.max_chunk)
+        } else {
+            (self.cur / 2).max(self.min_chunk)
+        };
+        self.cur
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Work-stealing donor rule
+// ---------------------------------------------------------------------------
+
+/// Pick the steal donor: the shard with the deepest stealable queue
+/// (queued entries that have NEVER been admitted — preempted resumes
+/// already streamed tokens and stay home). Strict maximum, lowest
+/// index wins ties; `None` when nothing anywhere is stealable.
+pub fn pick_donor(stealable: &[usize]) -> Option<usize> {
+    let mut best: Option<(usize, usize)> = None;
+    for (i, &n) in stealable.iter().enumerate() {
+        if n > 0 && best.map(|(_, bn)| n > bn).unwrap_or(true) {
+            best = Some((i, n));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::anyhow::anyhow;
+
+    #[test]
+    fn slo_defaults_and_validation() {
+        assert_eq!(Slo::default().class, SloClass::Batch);
+        assert!(Slo::interactive().validate().is_ok());
+        assert!(Slo::batch().validate().is_ok());
+        assert!(Slo::interactive().with_ttft_deadline(0.0).validate().is_err());
+        assert!(Slo::interactive().with_ttft_deadline(f64::NAN).validate().is_err());
+        assert!(Slo::batch().with_tpot_deadline(-1.0).validate().is_err());
+        assert!(Slo::interactive().met(1.0));
+        assert!(!Slo::interactive().met(1.0001));
+        assert_eq!(SloClass::parse("interactive").unwrap(), SloClass::Interactive);
+        assert_eq!(SloClass::parse("batch").unwrap(), SloClass::Batch);
+        assert!(SloClass::parse("gold").is_err());
+    }
+
+    #[test]
+    fn shed_fires_only_for_batch_past_watermark() {
+        let fd = FrontDoorConfig::on().with_shed_watermark(0.5);
+        let calm = PoolSnapshot { total_pages: 40, queued_pages: 20 };
+        let hot = PoolSnapshot { total_pages: 40, queued_pages: 21 };
+        // at the watermark: admitted; past it: batch shed, interactive kept
+        assert!(fd.shed(&Slo::batch(), calm).is_none());
+        let shed = fd.shed(&Slo::batch(), hot).expect("past watermark");
+        assert_eq!(shed.watermark_pages, 20);
+        assert!(fd.shed(&Slo::interactive(), hot).is_none());
+        // disabled door never sheds
+        let off = FrontDoorConfig::default();
+        assert!(off.shed(&Slo::batch(), hot).is_none());
+        // validation rejects a nonsense watermark only when enabled
+        assert!(FrontDoorConfig::on().with_shed_watermark(0.0).validate().is_err());
+        assert!(FrontDoorConfig { enabled: false, shed_watermark: 0.0, steal: false }
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn typed_errors_round_trip_the_message_boundary() {
+        let o = Overloaded { queued_pages: 9, watermark_pages: 4, total_pages: 8 };
+        let e: Error = anyhow!("{o}").context("submit failed");
+        assert!(Overloaded::matches(&e));
+        assert!(!RequestTooWide::matches(&e));
+        let w = RequestTooWide { id: 7, needed_pages: 12, shard_pages: 10 };
+        let e: Error = anyhow!("{w}");
+        assert!(RequestTooWide::matches(&e));
+        assert!(!Overloaded::matches(&e));
+        assert!(format!("{w}").contains("12 pages"));
+        assert!(format!("{w}").contains("10 pages"));
+    }
+
+    #[test]
+    fn overflow_insert_is_fifo_per_class_interactive_first() {
+        let class = |t: &(u64, SloClass)| t.1;
+        let mut q: VecDeque<(u64, SloClass)> = VecDeque::new();
+        overflow_insert(true, &mut q, (0, SloClass::Batch), class);
+        overflow_insert(true, &mut q, (1, SloClass::Interactive), class);
+        overflow_insert(true, &mut q, (2, SloClass::Batch), class);
+        overflow_insert(true, &mut q, (3, SloClass::Interactive), class);
+        let order: Vec<u64> = q.iter().map(|t| t.0).collect();
+        assert_eq!(order, vec![1, 3, 0, 2], "interactive FIFO ahead of batch FIFO");
+        // door off: plain FIFO regardless of class
+        let mut q: VecDeque<(u64, SloClass)> = VecDeque::new();
+        overflow_insert(false, &mut q, (0, SloClass::Batch), class);
+        overflow_insert(false, &mut q, (1, SloClass::Interactive), class);
+        let order: Vec<u64> = q.iter().map(|t| t.0).collect();
+        assert_eq!(order, vec![0, 1]);
+    }
+
+    #[test]
+    fn adaptive_chunk_tracks_queue_depth() {
+        let mut c = AdaptiveChunk::new(8, 64);
+        assert_eq!(c.current(), 8);
+        assert_eq!(c.observe(3), 16);
+        assert_eq!(c.observe(3), 32);
+        assert_eq!(c.observe(1), 64);
+        assert_eq!(c.observe(9), 64, "saturates at max_chunk");
+        assert_eq!(c.observe(0), 32);
+        assert_eq!(c.observe(0), 16);
+        assert_eq!(c.observe(0), 8);
+        assert_eq!(c.observe(0), 8, "floors at min_chunk");
+        // degenerate bounds clamp instead of panicking
+        let c = AdaptiveChunk::new(0, 0);
+        assert_eq!((c.min_chunk, c.max_chunk, c.current()), (1, 1, 1));
+        let c = AdaptiveChunk::new(32, 4);
+        assert_eq!((c.min_chunk, c.max_chunk), (32, 32));
+    }
+
+    #[test]
+    fn donor_is_deepest_stealable_queue() {
+        assert_eq!(pick_donor(&[]), None);
+        assert_eq!(pick_donor(&[0, 0]), None);
+        assert_eq!(pick_donor(&[0, 3, 1]), Some(1));
+        assert_eq!(pick_donor(&[2, 2]), Some(0), "lowest index wins ties");
+    }
+}

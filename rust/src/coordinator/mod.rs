@@ -40,6 +40,7 @@
 mod backend;
 mod config;
 mod engine;
+mod frontdoor;
 mod hmt;
 mod kv;
 mod openloop;
@@ -52,6 +53,8 @@ pub use backend::{BackendCaps, BackendSpec, ExecBackend, LaneStep, MockBackend,
 pub use config::{KvConfig, PrefillConfig, ServeConfig, ShardRole, TopologyConfig};
 pub use engine::{place_migration, place_shard, place_shard_affine, Engine, KvLayout,
                  StepReport, TokenEvent};
+pub use frontdoor::{overflow_insert, pick_donor, AdaptiveChunk, FrontDoorConfig,
+                    Overloaded, PoolSnapshot, RequestTooWide, Slo, SloClass};
 pub use hmt::{HmtDriver, MemoryQueue, SegmentTrace};
 pub use kv::{sim_dequant_error, split_budget, KvPool, LaneKv, PageCodec, PageHeader,
              ReservationPolicy};
@@ -112,6 +115,11 @@ enum ShardCmd {
     /// Drop everything queued and in flight (another shard failed; the
     /// window is void, matching single-engine abort semantics).
     Abort,
+    /// Work stealing (front door): give up the youngest queued request
+    /// that has never been admitted, if any. Always answered with a
+    /// [`ShardMsg::Stolen`], even when empty-handed, so the coordinator
+    /// can serialize steals without timeouts.
+    Steal,
     Shutdown,
 }
 
@@ -129,6 +137,9 @@ struct ShardLoad {
     /// lets the coordinator reconcile its in-flight placements against
     /// this report.
     submits_seen: u64,
+    /// Queued requests eligible for work stealing (never admitted —
+    /// [`Scheduler::stealable_queued`]); the donor-selection input.
+    stealable: usize,
 }
 
 /// Shard → coordinator messages (fan-in).
@@ -160,6 +171,15 @@ enum ShardMsg {
     Migrate {
         shard: usize,
         lanes: Vec<MigratedLane>,
+    },
+    /// Answer to [`ShardCmd::Steal`]: the youngest never-admitted
+    /// queued request with the shard-local seq it held (so the
+    /// coordinator can re-home its global-seq bookkeeping), or `None`
+    /// when the queue drained before the steal landed — a benign race.
+    Stolen {
+        shard: usize,
+        stolen: Option<(u64, GenRequest)>,
+        load: ShardLoad,
     },
 }
 
@@ -319,6 +339,14 @@ impl RouterBuilder {
         self
     }
 
+    /// SLO-aware front door (DESIGN.md §16): load-shed watermark over
+    /// pool-wide queued demand plus cross-shard work stealing. Off by
+    /// default — the PR 9 FIFO overflow, bit-for-bit.
+    pub fn front_door(mut self, fd: FrontDoorConfig) -> Self {
+        self.cfg = self.cfg.front_door(fd);
+        self
+    }
+
     /// Requested KV page storage codec (PR 8). Validated at spawn:
     /// quantization is page-granular, so a non-`Fp16` codec needs the
     /// paged layout, and every shard's backend must DECLARE the codec
@@ -356,6 +384,7 @@ impl RouterBuilder {
         let reserve = self.cfg.kv.reserve;
         let prefix_share = self.cfg.kv.prefix_share;
         let kv_quant = self.cfg.kv.kv_quant;
+        let front = self.cfg.front_door;
         let roles = self.cfg.topology.roles.clone();
         let shard_count = roles.len();
         let (tx, rx) = mpsc::channel::<FrontMsg>();
@@ -458,7 +487,7 @@ impl RouterBuilder {
         };
         let spawned = std::thread::Builder::new()
             .name("flexllm-router".into())
-            .spawn(move || coordinator_loop(rx, states, model, roles));
+            .spawn(move || coordinator_loop(rx, states, model, roles, front));
         match spawned {
             Ok(handle) => Ok(Router { tx, handle: Some(handle), shards: shard_count }),
             Err(e) => Err(anyhow!("spawning router thread: {e}")),
@@ -587,6 +616,7 @@ fn shard_load<B: ExecBackend>(engine: &Engine<B>, submits_seen: u64) -> ShardLoa
             .saturating_sub(engine.scheduler.active()),
         has_work: engine.has_work(),
         submits_seen,
+        stealable: engine.scheduler.stealable_queued(),
     }
 }
 
@@ -639,6 +669,18 @@ fn handle_shard_cmd<B: ExecBackend>(
             let _ = reply.send(engine.metrics.clone());
         }
         ShardCmd::Abort => engine.scheduler.abort_all(),
+        ShardCmd::Steal => {
+            // a stolen request never bound a lane here, so no event was
+            // ever emitted for it on this shard: handing it back is
+            // exactly-once by construction. Empty-handed is a benign
+            // race (the queue drained first) and still answered.
+            let stolen = engine.scheduler.steal_youngest_queued();
+            let _ = coord.send(FrontMsg::Shard(ShardMsg::Stolen {
+                shard,
+                stolen,
+                load: shard_load(engine, *submits_seen),
+            }));
+        }
         ShardCmd::Shutdown => return ShardFlow::Shutdown,
     }
     ShardFlow::Continue
@@ -762,6 +804,7 @@ fn shard_loop<B: ExecBackend>(
                             free_lanes: 0,
                             has_work: false,
                             submits_seen,
+                            stealable: 0,
                         },
                         fatal: true,
                     }));
@@ -807,6 +850,9 @@ struct ShardState {
     /// Free-lane count from the last load report; migrations need an
     /// unbound lane on the target, not just pages.
     base_free_lanes: usize,
+    /// Never-admitted queued requests from the last load report — the
+    /// work-stealing donor signal.
+    stealable: usize,
     has_work: bool,
     dead: bool,
     /// Global submission seq by shard-local seq, for requests whose
@@ -832,6 +878,7 @@ impl ShardState {
             sent: 0,
             pending_pages: VecDeque::new(),
             base_free_lanes: 0,
+            stealable: 0,
             has_work: false,
             dead: false,
             seq_map: HashMap::new(),
@@ -916,10 +963,20 @@ struct Coordinator {
     /// for a decode shard with a free lane and enough pages (global
     /// seq, migrated lane). FIFO like `overflow`.
     migrating: VecDeque<(u64, MigratedLane)>,
+    /// The SLO-aware front door (DESIGN.md §16). Disabled = PR 9
+    /// semantics bit-for-bit: plain FIFO overflow, no shedding, no
+    /// stealing.
+    front: FrontDoorConfig,
+    /// Donor shard of the one steal currently in flight, if any.
+    /// Steals are serialized (at most one outstanding) so a request in
+    /// transit can never be double-counted or lost by a racing drain —
+    /// `settle_drains` holds the window open while this is `Some`.
+    steal_inflight: Option<usize>,
 }
 
 fn coordinator_loop(rx: mpsc::Receiver<FrontMsg>, shards: Vec<ShardState>,
-                    model: Scheduler, roles: Vec<ShardRole>) {
+                    model: Scheduler, roles: Vec<ShardRole>,
+                    front: FrontDoorConfig) {
     let mut c = Coordinator {
         shards,
         model,
@@ -936,6 +993,8 @@ fn coordinator_loop(rx: mpsc::Receiver<FrontMsg>, shards: Vec<ShardState>,
         subscribers: Vec::new(),
         roles,
         migrating: VecDeque::new(),
+        front,
+        steal_inflight: None,
     };
     loop {
         let msg = match rx.recv() {
@@ -960,7 +1019,7 @@ impl Coordinator {
     fn handle_cmd(&mut self, cmd: Cmd) -> bool {
         match cmd {
             Cmd::Generate(queue, reply) => {
-                if let Err(e) = self.validate_all(&queue) {
+                if let Err(e) = self.validate_all(&queue).and_then(|()| self.admit_all(&queue)) {
                     let _ = reply.send(Err(e));
                     return false;
                 }
@@ -995,7 +1054,8 @@ impl Coordinator {
                 }
             }
             Cmd::Submit(queue, reply) => {
-                let outcome = self.validate_all(&queue);
+                let outcome =
+                    self.validate_all(&queue).and_then(|()| self.admit_all(&queue));
                 if outcome.is_ok() {
                     self.submit_outstanding += queue.len();
                     for req in queue {
@@ -1030,6 +1090,7 @@ impl Coordinator {
                 // overflow head; migrations first — they hold warm KV
                 self.drain_migrations();
                 self.drain_overflow();
+                self.maybe_steal();
             }
             ShardMsg::Migrate { shard, lanes } => {
                 for m in lanes {
@@ -1052,6 +1113,15 @@ impl Coordinator {
                 }
                 self.drain_migrations();
             }
+            ShardMsg::Stolen { shard, stolen, load } => {
+                self.update_load(shard, load);
+                self.steal_inflight = None;
+                if let Some((local_seq, req)) = stolen {
+                    self.rehome_stolen(shard, local_seq, req);
+                }
+                self.drain_overflow();
+                self.maybe_steal();
+            }
             ShardMsg::Error { shard, error, load, fatal } => {
                 self.update_load(shard, load);
                 if fatal {
@@ -1062,21 +1132,155 @@ impl Coordinator {
         }
     }
 
+    /// One steal at most when the front door allows it: some live
+    /// new-request shard is hungry (a free lane, nothing of its own
+    /// queued, and every dispatch reflected in a load report) while
+    /// another's queue holds never-admitted work, and nothing is parked
+    /// in overflow or mid-migration (parked work would reach the hungry
+    /// shard by the ordinary drain path — stealing would jump the
+    /// line). Requiring full idleness instead would cap stealing at one
+    /// request per receiver generation and leave lanes dark under a
+    /// skewed burst.
+    fn maybe_steal(&mut self) {
+        if !(self.front.enabled && self.front.steal) || self.steal_inflight.is_some()
+        {
+            return;
+        }
+        if !(self.overflow.is_empty() && self.migrating.is_empty()) {
+            return;
+        }
+        let hungry_receiver = self.shards.iter().enumerate().any(|(i, st)| {
+            !st.dead
+                && self.roles[i].accepts_new_requests()
+                && st.reported_seen == st.sent
+                && st.est_free_lanes() > 0
+                && st.stealable == 0
+        });
+        if !hungry_receiver {
+            return;
+        }
+        // donor = deepest stealable queue (an idle shard reports 0, so
+        // the receiver can never donate to itself)
+        let counts: Vec<usize> = self
+            .shards
+            .iter()
+            .map(|st| if st.dead { 0 } else { st.stealable })
+            .collect();
+        if let Some(donor) = frontdoor::pick_donor(&counts) {
+            if self.shards[donor].tx.send(ShardCmd::Steal).is_err() {
+                self.mark_dead(donor);
+                return;
+            }
+            self.steal_inflight = Some(donor);
+        }
+    }
+
+    /// A stolen request comes home to the coordinator: strip the
+    /// donor's seq bookkeeping and re-dispatch to the least-loaded
+    /// OTHER shard (bypassing prefix affinity, which by construction
+    /// points at the donor and would bounce the request straight back).
+    /// If nothing can take it right now it parks in overflow — no
+    /// further steals fire until it lands, so it cannot ping-pong.
+    fn rehome_stolen(&mut self, donor: usize, local_seq: u64, req: GenRequest) {
+        let Some(global) = self.shards[donor].seq_map.remove(&local_seq) else {
+            // a voided window's straggler (bookkeeping already
+            // cleared); before any failure this is a protocol desync
+            if !self.ever_voided {
+                self.pending_err.get_or_insert(anyhow!(
+                    "shard {donor} yielded unknown local seq {local_seq} to a steal"));
+            }
+            return;
+        };
+        let need = self.model.admission_pages(&req);
+        let target =
+            engine::most_free(self.shards.iter().enumerate().filter_map(|(i, st)| {
+                if i == donor || st.dead || !self.roles[i].accepts_new_requests() {
+                    return None;
+                }
+                let free = st.est_free();
+                (free >= need).then_some((i, free))
+            }));
+        match target {
+            Some(t) => self.dispatch(t, global, req),
+            None => self.overflow.push_back((global, req)),
+        }
+    }
+
     fn validate_all(&self, queue: &[GenRequest]) -> Result<()> {
         for req in queue {
+            // a reservation wider than any SINGLE shard's pool is legal
+            // against total pool memory but could never be admitted
+            // anywhere: without this typed fail-fast it would park at
+            // the shared overflow head forever and starve every later
+            // arrival (head-of-line livelock). Checked before the
+            // model's own validation so callers get the actionable
+            // per-shard message, not the generic single-pool one.
+            let needed = self.model.reservation_pages(req);
+            if self.model.is_paged() && needed > self.model.total_pages() {
+                return Err(frontdoor::RequestTooWide {
+                    id: req.id,
+                    needed_pages: needed,
+                    shard_pages: self.model.total_pages(),
+                }
+                .into());
+            }
             self.model.validate(req)?;
         }
         Ok(())
     }
 
-    /// Admit one request into the placement layer: it enters the FIFO
-    /// overflow and the queue drains head-first into shards — so a
-    /// request never jumps an earlier one that is still waiting for
-    /// pages (head-of-line blocking across the pool).
+    /// Front-door load shed, atomic over the submission like
+    /// validation: if ANY of its Batch requests lands past the shed
+    /// watermark the whole queue is refused with a typed
+    /// [`Overloaded`] error and nothing is enqueued. Interactive
+    /// traffic is never shed; a disabled front door admits everything.
+    fn admit_all(&self, queue: &[GenRequest]) -> Result<()> {
+        if !self.front.enabled {
+            return Ok(());
+        }
+        let snap = self.pool_snapshot();
+        for req in queue {
+            if let Some(shed) = self.front.shed(&req.slo, snap) {
+                return Err(shed.into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Pool-wide congestion for the shed decision: total pages across
+    /// live new-request shards, and the demand already committed to
+    /// them — pages held out of their free lists (admitted plus queued,
+    /// via the honest per-shard headroom estimate) plus everything
+    /// parked in the shared overflow queue.
+    fn pool_snapshot(&self) -> PoolSnapshot {
+        let mut total = 0usize;
+        let mut free = 0usize;
+        for (i, st) in self.shards.iter().enumerate() {
+            if st.dead || !self.roles[i].accepts_new_requests() {
+                continue;
+            }
+            total += self.model.total_pages();
+            free += st.est_free();
+        }
+        let parked: usize =
+            self.overflow.iter().map(|(_, r)| self.model.admission_pages(r)).sum();
+        PoolSnapshot {
+            total_pages: total,
+            queued_pages: total.saturating_sub(free) + parked,
+        }
+    }
+
+    /// Admit one request into the placement layer: it enters the
+    /// overflow queue and the queue drains head-first into shards — so
+    /// a request never jumps an earlier one that is still waiting for
+    /// pages (head-of-line blocking across the pool). With the front
+    /// door ON the overflow is two-level (Interactive FIFO ahead of
+    /// Batch FIFO); off, it is plain FIFO — PR 9 order, bit-for-bit.
     fn place(&mut self, req: GenRequest) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.overflow.push_back((seq, req));
+        frontdoor::overflow_insert(self.front.enabled, &mut self.overflow,
+                                   (seq, req), |(_, r)| r.slo.class);
         self.drain_overflow();
     }
 
@@ -1214,6 +1418,18 @@ impl Coordinator {
         st.pending_pages.clear();
         st.base_free = 0;
         st.base_free_lanes = 0;
+        st.stealable = 0;
+        // stale-affinity purge: entries routing prefixes at this shard
+        // are garbage now — they soak up AFFINITY_CAP slots (evicting
+        // live recordings) and every affine probe against them is a
+        // guaranteed miss. Drop them so post-kill affine submissions
+        // fall straight through to least-loaded placement.
+        purge_affinity(&mut self.affinity, &mut self.affinity_order, shard);
+        // a steal answered by a dead shard never will be: release the
+        // serialization slot or drains would hang forever
+        if self.steal_inflight == Some(shard) {
+            self.steal_inflight = None;
+        }
     }
 
     fn mark_dead(&mut self, shard: usize) {
@@ -1225,6 +1441,7 @@ impl Coordinator {
         let st = &mut self.shards[shard];
         st.base_free = load.free_pages;
         st.base_free_lanes = load.free_lanes;
+        st.stealable = load.stealable;
         st.reported_seen = load.submits_seen;
         st.has_work = load.has_work;
         while matches!(st.pending_pages.front(),
@@ -1315,6 +1532,12 @@ impl Coordinator {
         if self.shards.iter().any(|s| !s.idle()) {
             return;
         }
+        // a steal in flight is a request in transit between shards:
+        // neither side's queue holds it, but the window must not close
+        // over it
+        if self.steal_inflight.is_some() {
+            return;
+        }
         // a non-empty overflow (or a request parked mid-migration)
         // keeps the window open — unless every shard is dead, in which
         // case it can never drain and the waiters must hear the error
@@ -1357,6 +1580,17 @@ impl Coordinator {
         }
         self.shards.iter().map(|st| st.last_metrics.clone()).collect()
     }
+}
+
+/// Drop every prefix-affinity recording that routes to `shard` (it
+/// died), and its slots in the FIFO eviction order. Stale entries are
+/// doubly harmful: each occupies one of the `AFFINITY_CAP` slots
+/// (evicting a LIVE recording to make room), and every probe through
+/// one is a guaranteed miss before the least-loaded fallback runs.
+fn purge_affinity(affinity: &mut HashMap<u64, usize>,
+                  order: &mut VecDeque<u64>, shard: usize) {
+    affinity.retain(|_, s| *s != shard);
+    order.retain(|k| affinity.contains_key(k));
 }
 
 /// Fan one report's events out to every live subscriber, pruning dead
@@ -1723,6 +1957,157 @@ mod tests {
         let merged = router.metrics().unwrap();
         assert_eq!(merged.migrations_out, 4);
         assert_eq!(merged.migrations_in, 4);
+    }
+
+    #[test]
+    fn purge_affinity_drops_only_the_dead_shards_entries() {
+        let mut affinity: HashMap<u64, usize> =
+            [(10, 0), (11, 1), (12, 0), (13, 2)].into_iter().collect();
+        let mut order: VecDeque<u64> = [10, 11, 12, 13].into_iter().collect();
+        purge_affinity(&mut affinity, &mut order, 0);
+        assert_eq!(affinity.len(), 2, "both shard-0 recordings must go");
+        assert_eq!(affinity.get(&11), Some(&1));
+        assert_eq!(affinity.get(&13), Some(&2));
+        // the eviction order drops the same keys, keeping the two
+        // structures consistent (no ghost slots that would evict live
+        // entries early, no dangling order keys)
+        assert_eq!(order.iter().copied().collect::<Vec<_>>(), vec![11, 13]);
+    }
+
+    #[test]
+    fn oversized_request_fails_fast_with_typed_error_and_router_survives() {
+        // 6-page shards (24 rows) under a 32-row max_seq: a full-budget
+        // request legally shaped for the artifacts needs 8 pages — more
+        // than any single shard's pool. Pre-fix it parked at the shared
+        // overflow head forever, livelocking every later arrival.
+        let router = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .shards(2)
+            .spawn_with(|_| Ok(MockBackend::paged(2, 4, 32, 64, 4, 6)))
+            .unwrap();
+        let wide = GenRequest::new(0, vec![1; 4], 28); // 32 rows → 8 pages
+        let err = router.submit(vec![wide]).expect_err("over-wide must fail fast");
+        assert!(RequestTooWide::matches(&err), "want typed too-wide, got {err:#}");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("8 pages") && msg.contains("6 pages"),
+                "the error must name the reservation and the limit: {msg}");
+        // fail-fast means NOTHING was queued: the router still serves
+        let ok = GenRequest::new(1, vec![2; 4], 4); // 8 rows → 2 pages
+        router.submit(vec![ok]).unwrap();
+        let got = router.drain().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].tokens, MockBackend::expected_tokens(&[2; 4], 4, 64));
+    }
+
+    /// Mock that panics (not errs) on its first decode when armed —
+    /// drives the FATAL shard-death path, which is what triggers
+    /// `kill_shard` and the affinity purge.
+    struct PanickyBackend {
+        inner: MockBackend,
+        armed: bool,
+    }
+
+    impl ExecBackend for PanickyBackend {
+        fn spec(&self) -> &BackendSpec {
+            self.inner.spec()
+        }
+
+        fn prefill(&mut self, slots: &[PrefillSlot]) -> Result<Vec<i32>> {
+            self.inner.prefill(slots)
+        }
+
+        fn prefill_chunk(&mut self, lane: usize, tokens: &[i32], start_pos: usize)
+            -> Result<i32>
+        {
+            self.inner.prefill_chunk(lane, tokens, start_pos)
+        }
+
+        fn decode(&mut self, steps: &[LaneStep]) -> Result<Vec<i32>> {
+            assert!(!self.armed, "injected shard panic");
+            self.inner.decode(steps)
+        }
+    }
+
+    #[test]
+    fn dead_shard_affinity_is_purged_and_affine_submits_replace_least_loaded() {
+        // shard 0 panics fatally on its first decode; shard 1 is sound
+        let router = RouterBuilder::new()
+            .layout(KvLayout::Paged)
+            .shards(2)
+            .prefix_share(true)
+            .spawn_with(|shard| {
+                Ok(PanickyBackend {
+                    inner: MockBackend::paged(2, 8, 32, 64, 4, 12),
+                    armed: shard == 0,
+                })
+            })
+            .unwrap();
+        let prompt: Vec<i32> = vec![7, 7, 7, 7, 1, 2, 3, 4];
+        // budget-1 seeds the affinity on shard 0 without decoding
+        router.submit(vec![GenRequest::new(0, prompt.clone(), 1)]).unwrap();
+        router.drain().unwrap();
+        // the affine follow-up decodes on shard 0 → fatal panic →
+        // kill_shard purges the prefix recording
+        router.submit(vec![GenRequest::new(1, prompt.clone(), 4)]).unwrap();
+        assert!(router.drain().is_err(), "the shard panic must void the window");
+        // same prefix again: with the recording purged the submit falls
+        // through to least-loaded placement on the SURVIVING shard and
+        // completes — and drains clean (the window poison was consumed)
+        router.submit(vec![GenRequest::new(2, prompt.clone(), 1)]).unwrap();
+        let got = router.drain().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 2);
+        assert_eq!(got[0].tokens, MockBackend::expected_tokens(&prompt, 1, 64));
+        let per = router.shard_metrics().unwrap();
+        assert_eq!(per[1].requests, 1,
+                   "post-kill affine submit must land on the live shard");
+    }
+
+    #[test]
+    fn work_stealing_moves_queued_work_to_an_idle_shard() {
+        let run = |steal: bool| {
+            let mut builder = RouterBuilder::new()
+                .layout(KvLayout::Paged)
+                .shards(2)
+                .prefix_share(true);
+            if steal {
+                builder = builder.front_door(FrontDoorConfig::on().with_steal(true));
+            }
+            // 1 lane/shard so the affine shard serializes its backlog
+            let router = builder
+                .spawn_with(|_| Ok(MockBackend::paged(1, 8, 32, 64, 4, 64)))
+                .unwrap();
+            // 12 requests sharing a first page: affinity funnels every
+            // one onto shard 0 (64 pages cover all 12 reservations of
+            // 4), leaving shard 1 fully idle — the steal scenario
+            let queue: Vec<GenRequest> = (0..12)
+                .map(|i| {
+                    let mut prompt = vec![7, 7, 7, 7];
+                    prompt.extend_from_slice(&[i as i32; 4]);
+                    GenRequest::new(i, prompt, 8)
+                })
+                .collect();
+            router.submit(queue).unwrap();
+            let got = router.drain().unwrap();
+            let per = router.shard_metrics().unwrap();
+            (got, per)
+        };
+        let (base, base_per) = run(false);
+        assert_eq!(base_per[1].requests, 0,
+                   "without stealing, affinity starves the idle shard");
+        let (got, per) = run(true);
+        assert!(per[1].requests > 0,
+                "stealing must move queued work to the idle shard");
+        assert_eq!(per[0].requests + per[1].requests, 12);
+        // exactly-once, in global order, byte-identical to the
+        // no-steal run: a stolen request was never prefilled, so its
+        // one and only stream comes off the thief shard
+        assert_eq!(got.len(), 12);
+        for (g, b) in got.iter().zip(&base) {
+            assert_eq!(g.id, b.id);
+            assert_eq!(g.tokens, b.tokens,
+                       "request {} diverged across the steal", g.id);
+        }
     }
 
     #[test]

@@ -33,10 +33,18 @@ use crate::anyhow::{anyhow, Result};
 use super::backend::ModeledBackend;
 use super::config::{ServeConfig, ShardRole};
 use super::engine::{place_migration, place_shard, place_shard_affine, Engine, KvLayout};
+use super::frontdoor::{self, FrontDoorConfig, PoolSnapshot, Slo, SloClass};
 use super::kv::{split_budget, PageCodec, ReservationPolicy};
 use super::request::{percentile, GenRequest, ServeMetrics};
 use super::scheduler::{MigratedLane, PrefillPolicy};
+use crate::util::fmt_json_f64;
 use crate::util::prop::Rng;
+
+/// Sentinel id for the `prefix_warm` throwaway request — outside the
+/// `0..requests` id space, so it can never collide with a real arrival
+/// (it runs to completion before the first arrival is delivered, so it
+/// never reaches the per-request accounting either).
+const WARM_ID: u64 = u64::MAX;
 
 /// When requests arrive.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -159,6 +167,15 @@ pub struct OpenLoopConfig {
     /// with zero prefill work, divergent tails fork copy-on-write.
     /// Requires a paged pool; shard placement becomes prefix-affine.
     pub prefix_share: bool,
+    /// Warm the group-0 shared prefix onto shard 0 before any arrival:
+    /// a throwaway 1-token request runs there to completion, leaving the
+    /// prefix resident so affine placement funnels sharing requests from
+    /// t = 0 (without it, a tight burst lands before any prefix is
+    /// resident and placement degenerates to least-loaded). The warm
+    /// request is excluded from latency/SLO statistics; every shard
+    /// clock starts at the warm finish so relative timing is unchanged.
+    /// Requires `prefix_share`, sharded runs only.
+    pub prefix_warm: bool,
     /// KV page storage codec: `Int8Sym` stores rows as symmetric INT8
     /// with a per-page scale header, quantized on the scatter path and
     /// dequantized in-graph on gather. Requires a paged pool. NOTE the
@@ -166,6 +183,22 @@ pub struct OpenLoopConfig {
     /// caller's (use [`PagedPoolConfig::retiled_for_codec`] for the
     /// equal-memory 2x-pages comparison).
     pub kv_quant: PageCodec,
+    /// Front-door serving policy (PR 10): shed watermark, Interactive-
+    /// before-Batch overflow priority, cross-shard work stealing. The
+    /// default (off) is bit-for-bit the PR 9 behavior.
+    pub front_door: FrontDoorConfig,
+    /// When > 0, every `interactive_every`-th request BY ID (0, k, 2k,
+    /// …) carries the Interactive SLO class; the rest are Batch. Derived
+    /// from the request index — deliberately not an RNG draw, so the
+    /// SLO mix never perturbs committed arrival traces. 0 (the default)
+    /// stamps every request Batch.
+    pub interactive_every: usize,
+    /// TTFT deadline stamped on Interactive requests (modeled seconds).
+    pub interactive_ttft_s: f64,
+    /// TTFT deadline stamped on Batch requests. Defaults to the
+    /// effectively-unbounded [`Slo::batch`] deadline; overload studies
+    /// tighten it so late Batch work stops counting as goodput.
+    pub batch_ttft_s: f64,
     pub seed: u64,
 }
 
@@ -195,7 +228,12 @@ impl Default for OpenLoopConfig {
             prefix_groups: 1,
             shared_frac: 0.8,
             prefix_share: false,
+            prefix_warm: false,
             kv_quant: PageCodec::Fp16,
+            front_door: FrontDoorConfig::default(),
+            interactive_every: 0,
+            interactive_ttft_s: 1.0,
+            batch_ttft_s: Slo::batch().ttft_deadline_s,
             seed: 0x5EED,
         }
     }
@@ -222,6 +260,7 @@ impl OpenLoopConfig {
             .reserve(self.reserve)
             .prefix_share(self.prefix_share)
             .kv_quant(self.kv_quant)
+            .front_door(self.front_door)
             .roles(self.effective_roles())
     }
 }
@@ -263,13 +302,14 @@ impl OpenLoopShardStats {
              \"decode_invocations\": {}, \"prefix_hits\": {}, \
              \"dequant_rows\": {}, \
              \"migrations_out\": {}, \"migrations_in\": {}, \
-             \"model_time_s\": {:.6}}}",
+             \"model_time_s\": {}}}",
             self.shard, self.role.name(), self.requests, self.peak_active,
             self.kv_pages_total, self.kv_pages_peak,
             self.kv_pages_grown, self.preemptions,
             self.decode_invocations, self.prefix_hits,
             self.dequant_rows,
-            self.migrations_out, self.migrations_in, self.model_time_s,
+            self.migrations_out, self.migrations_in,
+            fmt_json_f64(self.model_time_s),
         )
     }
 }
@@ -323,6 +363,21 @@ pub struct OpenLoopStats {
     /// topology — every migration leaves a prefill shard and lands on
     /// a decode shard, so out-counts equal in-counts pool-wide).
     pub migrations: usize,
+    /// Front-door accounting (PR 10; zeros with the front door off).
+    /// Arrivals rejected at admission by the shed watermark.
+    pub shed: usize,
+    /// Queued requests moved to an idle shard by work stealing.
+    pub stolen: usize,
+    /// Completions that met their TTFT deadline.
+    pub slo_met: usize,
+    /// SLO-met completions per modeled second — the overload headline
+    /// `tests/frontdoor.rs` and `benches/frontdoor.rs` gate.
+    pub goodput_rps: f64,
+    /// Worst observed TTFT over admitted requests (used to calibrate
+    /// deadlines for the goodput gate without magic constants).
+    pub ttft_max_s: f64,
+    /// TTFT p95 over Interactive completions only (0 when none).
+    pub interactive_ttft_p95_s: f64,
     /// Per-shard breakdown (empty on a single-shard run).
     pub per_shard: Vec<OpenLoopShardStats>,
 }
@@ -346,6 +401,9 @@ impl OpenLoopStats {
             PrefillPolicy::Chunked { chunk_len, decode_priority } => format!(
                 r#"{{"chunked": {{"chunk_len": {chunk_len}, "decode_priority": {decode_priority}}}}}"#
             ),
+            PrefillPolicy::Adaptive { min_chunk, max_chunk, decode_priority } => format!(
+                r#"{{"adaptive": {{"min_chunk": {min_chunk}, "max_chunk": {max_chunk}, "decode_priority": {decode_priority}}}}}"#
+            ),
         };
         let layout = match self.layout {
             KvLayout::Dense => "dense",
@@ -359,36 +417,42 @@ impl OpenLoopStats {
         format!(
             "{{\"policy\": {policy}, \"layout\": \"{layout}\", \
              \"reserve\": \"{reserve}\", \"requests\": {}, \
-             \"shards\": {}, \"tokens\": {}, \"throughput_tps\": {:.6}, \
-             \"makespan_s\": {:.6}, \
-             \"ttft_p50_s\": {:.6}, \"ttft_p95_s\": {:.6}, \
-             \"tpot_p50_s\": {:.6}, \"tpot_p95_s\": {:.6}, \
+             \"shards\": {}, \"tokens\": {}, \"throughput_tps\": {}, \
+             \"makespan_s\": {}, \
+             \"ttft_p50_s\": {}, \"ttft_p95_s\": {}, \
+             \"tpot_p50_s\": {}, \"tpot_p95_s\": {}, \
              \"decode_iterations\": {}, \"decode_invocations\": {}, \
              \"prefill_calls\": {}, \"prefill_chunks\": {}, \
              \"peak_active\": {}, \"kv_pages_total\": {}, \"kv_pages_peak\": {}, \
-             \"page_occupancy_p95\": {:.6}, \"page_frag_p95\": {:.6}, \
+             \"page_occupancy_p95\": {}, \"page_frag_p95\": {}, \
              \"kv_pages_grown\": {}, \"preemptions\": {}, \
              \"prefix_hits\": {}, \"prefix_misses\": {}, \
-             \"prefix_hit_rate\": {:.6}, \"kv_pages_shared\": {}, \
+             \"prefix_hit_rate\": {}, \"kv_pages_shared\": {}, \
              \"cow_copies\": {}, \"migrations\": {}, \
-             \"kv_codec\": \"{}\", \"kv_bytes_per_row_effective\": {:.6}, \
+             \"kv_codec\": \"{}\", \"kv_bytes_per_row_effective\": {}, \
              \"dequant_rows\": {}, \
+             \"shed\": {}, \"stolen\": {}, \"slo_met\": {}, \
+             \"goodput_rps\": {}, \"ttft_max_s\": {}, \
+             \"interactive_ttft_p95_s\": {}, \
              \"per_shard\": [{}]}}",
             self.requests,
-            self.shards, self.tokens, self.throughput_tps(),
-            self.makespan_s,
-            self.ttft_p50_s, self.ttft_p95_s,
-            self.tpot_p50_s, self.tpot_p95_s,
+            self.shards, self.tokens, fmt_json_f64(self.throughput_tps()),
+            fmt_json_f64(self.makespan_s),
+            fmt_json_f64(self.ttft_p50_s), fmt_json_f64(self.ttft_p95_s),
+            fmt_json_f64(self.tpot_p50_s), fmt_json_f64(self.tpot_p95_s),
             self.decode_iterations, self.decode_invocations,
             self.prefill_calls, self.prefill_chunks,
             self.peak_active, self.kv_pages_total, self.kv_pages_peak,
-            self.page_occupancy_p95, self.page_frag_p95,
+            fmt_json_f64(self.page_occupancy_p95), fmt_json_f64(self.page_frag_p95),
             self.kv_pages_grown, self.preemptions,
             self.prefix_hits, self.prefix_misses,
-            self.prefix_hit_rate, self.kv_pages_shared,
+            fmt_json_f64(self.prefix_hit_rate), self.kv_pages_shared,
             self.cow_copies, self.migrations,
-            self.kv_codec, self.kv_bytes_per_row_effective,
+            self.kv_codec, fmt_json_f64(self.kv_bytes_per_row_effective),
             self.dequant_rows,
+            self.shed, self.stolen, self.slo_met,
+            fmt_json_f64(self.goodput_rps), fmt_json_f64(self.ttft_max_s),
+            fmt_json_f64(self.interactive_ttft_p95_s),
             per_shard.join(", "),
         )
     }
@@ -433,6 +497,9 @@ fn arrival_trace(cfg: &OpenLoopConfig)
     if !(0.0..=1.0).contains(&cfg.shared_frac) {
         return Err(anyhow!("shared_frac must be in [0, 1]"));
     }
+    // reject bad deadlines before the run, not at the first submit
+    Slo::interactive().with_ttft_deadline(cfg.interactive_ttft_s).validate()?;
+    Slo::batch().with_ttft_deadline(cfg.batch_ttft_s).validate()?;
 
     let mut rng = Rng::new(cfg.seed);
     // the seeded "system prompts" shared heads are drawn from; with the
@@ -471,8 +538,15 @@ fn arrival_trace(cfg: &OpenLoopConfig)
             rng.tokens(cfg.prefill_len, cfg.vocab as i32)
         };
         let budget = rng.usize_in(cfg.min_new_tokens, cfg.max_new_tokens);
+        // SLO class from the request INDEX, not an RNG draw: the mix
+        // can change without moving a single committed arrival time
+        let slo = if cfg.interactive_every > 0 && i % cfg.interactive_every == 0 {
+            Slo::interactive().with_ttft_deadline(cfg.interactive_ttft_s)
+        } else {
+            Slo::batch().with_ttft_deadline(cfg.batch_ttft_s)
+        };
         arrival_by_id[i] = at;
-        trace.push((at, GenRequest::new(i as u64, prompt, budget)));
+        trace.push((at, GenRequest::new(i as u64, prompt, budget).with_slo(slo)));
     }
     trace.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
     Ok((trace, arrival_by_id))
@@ -487,11 +561,21 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         // comparison lie; refuse like a Chunked→Blocking degradation
         return Err(anyhow!("prefix sharing needs a paged pool"));
     }
+    if cfg.prefix_warm && (!cfg.prefix_share || cfg.shared_prefix_len == 0) {
+        return Err(anyhow!(
+            "prefix_warm needs prefix_share and a shared-prefix workload"));
+    }
     // the same typed validation the threaded Router runs at spawn:
     // roles on a dense pool, prefill with nowhere to hand off, etc.
     cfg.serve_config(policy).validate()?;
     if cfg.effective_roles().len() > 1 {
         return run_open_loop_sharded(policy, cfg);
+    }
+    if cfg.prefix_warm {
+        // warming exists to steer affine PLACEMENT; with one shard
+        // there is nothing to steer, so refuse rather than silently
+        // run a different workload than the sharded comparison arm
+        return Err(anyhow!("prefix_warm needs shards > 1"));
     }
     let (trace, arrival_by_id) = arrival_trace(cfg)?;
     let arrival: Vec<f64> = trace.iter().map(|(t, _)| *t).collect();
@@ -520,19 +604,25 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
     if cfg.paged.is_some() && engine.layout() != KvLayout::Paged {
         return Err(anyhow!("modeled backend refused the paged layout"));
     }
-    // a Chunked request degrading to Blocking means the backend cannot
-    // chunk — that invalidates the comparison; paged-layout coercions
-    // (Blocking → greedy Chunked) are expected and reported in stats
-    if matches!(policy, PrefillPolicy::Chunked { .. })
-        && engine.policy() == PrefillPolicy::Blocking
-    {
+    // a Chunked or Adaptive request degrading to Blocking means the
+    // backend cannot chunk — that invalidates the comparison; paged-
+    // layout coercions (Blocking → greedy Chunked) are expected and
+    // reported in stats
+    if policy.is_chunked() && engine.policy() == PrefillPolicy::Blocking {
         return Err(anyhow!("modeled backend cannot run {policy:?}"));
     }
 
     let n = cfg.requests;
+    let fd = cfg.front_door;
+    let mut slo_by_id = vec![Slo::batch(); n];
+    for (_, r) in &trace {
+        slo_by_id[r.id as usize] = r.slo;
+    }
     let mut first_tok = vec![f64::NAN; n];
     let mut last_tok = vec![f64::NAN; n];
     let mut tok_count = vec![0usize; n];
+    let mut was_shed = vec![false; n];
+    let mut shed_count = 0usize;
     let mut next_arrival = 0usize;
     let mut pending = trace.into_iter().map(|(_, r)| Some(r)).collect::<Vec<_>>();
 
@@ -542,8 +632,28 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         let now = engine.backend.model_time_s;
         while next_arrival < n && arrival[next_arrival] <= now {
             let req = pending[next_arrival].take().expect("arrival delivered once");
-            engine.submit(req)?;
             next_arrival += 1;
+            // front door: shed Batch arrivals past the watermark. The
+            // congestion signal is pages in use plus queued demand, so
+            // a backlog deeper than one pool turn still registers (a
+            // >1.0 watermark deliberately tolerates some queueing).
+            // Dense layouts have no page pool and never shed.
+            let total = engine.scheduler.total_pages();
+            let snap = if total == 0 {
+                PoolSnapshot { total_pages: 0, queued_pages: 0 }
+            } else {
+                PoolSnapshot {
+                    total_pages: total,
+                    queued_pages: total.saturating_sub(engine.scheduler.free_pages())
+                        + engine.scheduler.queued_pages(),
+                }
+            };
+            if fd.shed(&req.slo, snap).is_some() {
+                was_shed[req.id as usize] = true;
+                shed_count += 1;
+                continue;
+            }
+            engine.submit(req)?;
         }
         if !engine.has_work() {
             if next_arrival >= n {
@@ -567,11 +677,25 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
 
     let mut ttft = Vec::with_capacity(n);
     let mut tpot = Vec::new();
+    let mut interactive_ttft = Vec::new();
+    let mut ttft_max = 0.0f64;
+    let mut slo_met = 0usize;
     for i in 0..n {
+        if was_shed[i] {
+            continue; // rejected at the front door — no token stream owed
+        }
         if !first_tok[i].is_finite() {
             return Err(anyhow!("request {i} produced no tokens"));
         }
-        ttft.push(first_tok[i] - arrival_by_id[i]);
+        let t = first_tok[i] - arrival_by_id[i];
+        ttft.push(t);
+        ttft_max = ttft_max.max(t);
+        if slo_by_id[i].met(t) {
+            slo_met += 1;
+        }
+        if slo_by_id[i].class == SloClass::Interactive {
+            interactive_ttft.push(t);
+        }
         if tok_count[i] > 1 {
             tpot.push((last_tok[i] - first_tok[i]) / (tok_count[i] - 1) as f64);
         }
@@ -610,8 +734,51 @@ pub fn run_open_loop(policy: PrefillPolicy, cfg: &OpenLoopConfig) -> Result<Open
         kv_bytes_per_row_effective: m.kv_bytes_per_row_effective,
         dequant_rows: m.dequant_rows,
         migrations: 0,
+        shed: shed_count,
+        stolen: 0,
+        slo_met,
+        goodput_rps: if engine.backend.model_time_s > 0.0 {
+            slo_met as f64 / engine.backend.model_time_s
+        } else {
+            0.0
+        },
+        ttft_max_s: ttft_max,
+        interactive_ttft_p95_s: percentile(&interactive_ttft, 95.0),
         per_shard: Vec::new(),
     })
+}
+
+/// Pool-wide congestion snapshot for the sharded shed decision: pages
+/// and honest free capacity summed over admitting shards, plus the
+/// reservation demand parked in the shared overflow FIFO — the same
+/// quantities the threaded coordinator sums from shard load reports.
+fn sharded_pool_snapshot(engines: &[Engine<ModeledBackend>],
+                         overflow: &VecDeque<GenRequest>) -> PoolSnapshot {
+    let mut total = 0usize;
+    let mut queued = 0usize;
+    let mut gauge: Option<&Engine<ModeledBackend>> = None;
+    for e in engines {
+        if !e.role().accepts_new_requests() {
+            continue;
+        }
+        let t = e.scheduler.total_pages();
+        total += t;
+        // pages in use plus queued demand: a backlog deeper than one
+        // pool turn still registers (saturating free-page math would
+        // clip it), which is what lets a >1.0 watermark mean "tolerate
+        // this much queueing"
+        queued += t.saturating_sub(e.scheduler.free_pages())
+            + e.scheduler.queued_pages();
+        gauge.get_or_insert(e);
+    }
+    if total == 0 {
+        // dense layout: no page pool to watermark, so never shed
+        return PoolSnapshot { total_pages: 0, queued_pages: 0 };
+    }
+    let parked: usize = gauge
+        .map(|e| overflow.iter().map(|r| e.scheduler.reservation_pages(r)).sum())
+        .unwrap_or(0);
+    PoolSnapshot { total_pages: total, queued_pages: queued + parked }
 }
 
 /// The sharded open loop: N modeled engines, each a full device replica
@@ -671,17 +838,23 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
         if cfg.paged.is_some() && e.layout() != KvLayout::Paged {
             return Err(anyhow!("modeled backend refused the paged layout"));
         }
-        if matches!(policy, PrefillPolicy::Chunked { .. })
-            && e.policy() == PrefillPolicy::Blocking
-        {
+        if policy.is_chunked() && e.policy() == PrefillPolicy::Blocking {
             return Err(anyhow!("modeled backend cannot run {policy:?}"));
         }
     }
 
     let n = cfg.requests;
+    let fd = cfg.front_door;
+    let mut slo_by_id = vec![Slo::batch(); n];
+    for (_, r) in &trace {
+        slo_by_id[r.id as usize] = r.slo;
+    }
     let mut first_tok = vec![f64::NAN; n];
     let mut last_tok = vec![f64::NAN; n];
     let mut tok_count = vec![0usize; n];
+    let mut was_shed = vec![false; n];
+    let mut shed_count = 0usize;
+    let mut stolen = 0usize;
     let mut next_arrival = 0usize;
     let mut pending = trace.into_iter().map(|(_, r)| Some(r)).collect::<Vec<_>>();
     let mut overflow: VecDeque<GenRequest> = VecDeque::new();
@@ -694,6 +867,24 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
     // otherwise the plain least-loaded rule, unchanged
     let place: fn(&[Engine<ModeledBackend>], &GenRequest) -> Option<usize> =
         if cfg.prefix_share { place_shard_affine } else { place_shard };
+
+    if cfg.prefix_warm {
+        // group 0's head is the FIRST draw from the seeded rng, so a
+        // fresh Rng reproduces it exactly without perturbing the
+        // arrival trace built above from the same seed
+        let mut rng = Rng::new(cfg.seed);
+        let head = rng.tokens(cfg.shared_prefix_len, cfg.vocab as i32);
+        engines[0].submit(GenRequest::new(WARM_ID, head, 1))?;
+        while engines[0].has_work() {
+            engines[0].step()?;
+        }
+        // every shard starts at the warm finish: the warm pass shifts
+        // absolute time equally, leaving relative timing untouched
+        let t0 = engines[0].backend.model_time_s;
+        for e in &mut engines {
+            e.backend.advance_to(t0);
+        }
+    }
 
     loop {
         // the global clock is the earliest busy shard (arrivals due by
@@ -738,8 +929,22 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
         // waiting for pages (the threaded Router's exact rule)
         while next_arrival < n && arrival[next_arrival] <= now {
             let req = pending[next_arrival].take().expect("arrival delivered once");
-            overflow.push_back(req);
             next_arrival += 1;
+            // front door: shed Batch arrivals once the pool-wide queued
+            // demand (admitted backlogs + parked overflow) passes the
+            // watermark; Interactive is never shed
+            if fd.shed(&req.slo, sharded_pool_snapshot(&engines, &overflow))
+                .is_some()
+            {
+                was_shed[req.id as usize] = true;
+                shed_count += 1;
+                continue;
+            }
+            // with the front door on, Interactive arrivals park ahead
+            // of waiting Batch work; otherwise plain FIFO (the PR 9
+            // rule, and the threaded Router's exact insertion order)
+            frontdoor::overflow_insert(fd.enabled, &mut overflow, req,
+                                       |r| r.slo.class);
         }
         // place while SOME shard can take the head (retirements since
         // the last pass may have freed pages); head-of-line blocks
@@ -750,6 +955,39 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
             // instant; a busy one is already past it
             engines[s].backend.advance_to(now);
             engines[s].submit(req)?;
+        }
+        // cross-shard work stealing: a hungry admitting shard (a free
+        // lane, nothing of its own queued) pulls the youngest queued
+        // (never prefilled) request off the deepest per-shard queue.
+        // Gating on full idleness instead would cap stealing at one
+        // request per receiver generation and leave lanes dark. Only
+        // once the shared FIFOs are empty — parked work always drains
+        // first, exactly as the threaded coordinator gates its Steal
+        // command.
+        if fd.enabled && fd.steal && overflow.is_empty() && migrating.is_empty() {
+            let hungry = engines.iter().position(|e| {
+                e.role().accepts_new_requests()
+                    && e.scheduler.active() < e.scheduler.lanes()
+                    && e.scheduler.queued() == 0
+            });
+            if let Some(hungry) = hungry {
+                let counts: Vec<usize> = engines
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| if i == hungry { 0 } else { e.scheduler.stealable_queued() })
+                    .collect();
+                if let Some(donor) = frontdoor::pick_donor(&counts) {
+                    if let Some((_, req)) =
+                        engines[donor].scheduler.steal_youngest_queued()
+                    {
+                        // the receiver starts no earlier than the
+                        // instant the steal is observed
+                        engines[hungry].backend.advance_to(now);
+                        engines[hungry].submit(req)?;
+                        stolen += 1;
+                    }
+                }
+            }
         }
         // step the laggard busy shard so virtual time advances causally
         let Some(s) = engines
@@ -806,11 +1044,25 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
 
     let mut ttft = Vec::with_capacity(n);
     let mut tpot = Vec::new();
+    let mut interactive_ttft = Vec::new();
+    let mut ttft_max = 0.0f64;
+    let mut slo_met = 0usize;
     for i in 0..n {
+        if was_shed[i] {
+            continue; // rejected at the front door — no token stream owed
+        }
         if !first_tok[i].is_finite() {
             return Err(anyhow!("request {i} produced no tokens"));
         }
-        ttft.push(first_tok[i] - arrival_by_id[i]);
+        let t = first_tok[i] - arrival_by_id[i];
+        ttft.push(t);
+        ttft_max = ttft_max.max(t);
+        if slo_by_id[i].met(t) {
+            slo_met += 1;
+        }
+        if slo_by_id[i].class == SloClass::Interactive {
+            interactive_ttft.push(t);
+        }
         if tok_count[i] > 1 {
             tpot.push((last_tok[i] - first_tok[i]) / (tok_count[i] - 1) as f64);
         }
@@ -873,6 +1125,16 @@ fn run_open_loop_sharded(policy: PrefillPolicy, cfg: &OpenLoopConfig)
         kv_bytes_per_row_effective: m.kv_bytes_per_row_effective,
         dequant_rows: m.dequant_rows,
         migrations: m.migrations_out,
+        shed: shed_count,
+        stolen,
+        slo_met,
+        goodput_rps: if makespan_s > 0.0 {
+            slo_met as f64 / makespan_s
+        } else {
+            0.0
+        },
+        ttft_max_s: ttft_max,
+        interactive_ttft_p95_s: percentile(&interactive_ttft, 95.0),
         per_shard,
     })
 }
@@ -1161,6 +1423,167 @@ mod tests {
         // the Router's ServeConfig validation
         cfg.paged = None;
         assert!(run_open_loop(PrefillPolicy::chunked(32), &cfg).is_err());
+    }
+
+    #[test]
+    fn front_door_sheds_batch_under_overload_and_spares_interactive() {
+        // one dense burst against a small paged pool: demand (24 × 5
+        // pages) is 3× the 40-page pool, so queued demand blows past a
+        // 0.5 watermark almost immediately
+        let mut cfg = small();
+        cfg.requests = 24;
+        cfg.bursts = 1;
+        cfg.burst_jitter_s = 0.01;
+        cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+            cfg.lanes, cfg.max_seq, 32, 16));
+        cfg.interactive_every = 4; // ids 0, 4, 8, … are Interactive
+        cfg.front_door = FrontDoorConfig::on().with_shed_watermark(0.5);
+        let s = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert!(s.shed > 0, "a 3x-overcommitted burst must shed");
+        assert!(s.shed < cfg.requests, "the first arrivals always admit");
+        assert!(s.tokens > 0);
+        // seeded: the same config sheds the same arrivals
+        let b = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(s.shed, b.shed);
+        assert!((s.makespan_s - b.makespan_s).abs() < 1e-12);
+        // the JSON carries the front-door fields and round-trips
+        let j = s.to_json();
+        assert!(j.contains("\"shed\""));
+        assert!(j.contains("\"goodput_rps\""));
+        assert!(crate::util::Json::parse(&j).is_ok());
+        // Interactive traffic is NEVER shed: the same overload with
+        // every request Interactive admits everything
+        cfg.interactive_every = 1;
+        let all_int = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(all_int.shed, 0, "Interactive must never be shed");
+        assert!(all_int.interactive_ttft_p95_s > 0.0);
+        // and the front door OFF admits everything too (PR 9 behavior)
+        cfg.interactive_every = 4;
+        cfg.front_door = FrontDoorConfig::default();
+        let off = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(off.shed, 0);
+        assert_eq!(off.stolen, 0);
+    }
+
+    #[test]
+    fn adaptive_policy_runs_and_reports() {
+        let mut cfg = small();
+        cfg.paged = Some(PagedPoolConfig::same_memory_as_dense(
+            cfg.lanes, cfg.max_seq, 32, 16));
+        let a = run_open_loop(PrefillPolicy::adaptive(16, 64), &cfg).unwrap();
+        assert!(a.prefill_chunks > 0, "adaptive admission must chunk");
+        assert_eq!(a.prefill_calls, 0);
+        let b = run_open_loop(PrefillPolicy::adaptive(16, 64), &cfg).unwrap();
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-12,
+                "adaptive runs must be deterministic");
+        // chunk width shapes modeled timing only, never token bytes
+        let fixed = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(a.tokens, fixed.tokens);
+        let j = a.to_json();
+        assert!(j.contains("\"adaptive\""));
+        assert!(j.contains("\"min_chunk\": 16"));
+        assert!(j.contains("\"max_chunk\": 64"));
+        assert!(crate::util::Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn degenerate_stats_serialize_finite_json() {
+        // a zero-request / zero-makespan report: every derived float is
+        // NaN or inf territory, and the JSON must still parse
+        let s = OpenLoopStats {
+            policy: PrefillPolicy::Blocking,
+            layout: KvLayout::Dense,
+            reserve: ReservationPolicy::Upfront,
+            requests: 0,
+            shards: 1,
+            tokens: 0,
+            makespan_s: 0.0,
+            ttft_p50_s: f64::NAN,
+            ttft_p95_s: f64::INFINITY,
+            tpot_p50_s: f64::NEG_INFINITY,
+            tpot_p95_s: f64::NAN,
+            decode_iterations: 0,
+            decode_invocations: 0,
+            prefill_calls: 0,
+            prefill_chunks: 0,
+            peak_active: 0,
+            kv_pages_total: 0,
+            kv_pages_peak: 0,
+            page_occupancy_p95: f64::NAN,
+            page_frag_p95: f64::NAN,
+            kv_pages_grown: 0,
+            preemptions: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_hit_rate: f64::NAN,
+            kv_pages_shared: 0,
+            cow_copies: 0,
+            kv_codec: "fp16".to_string(),
+            kv_bytes_per_row_effective: f64::INFINITY,
+            dequant_rows: 0,
+            migrations: 0,
+            shed: 0,
+            stolen: 0,
+            slo_met: 0,
+            goodput_rps: f64::NAN,
+            ttft_max_s: f64::NAN,
+            interactive_ttft_p95_s: f64::NAN,
+            per_shard: vec![OpenLoopShardStats {
+                shard: 0,
+                role: ShardRole::Unified,
+                requests: 0,
+                peak_active: 0,
+                kv_pages_total: 0,
+                kv_pages_peak: 0,
+                kv_pages_grown: 0,
+                preemptions: 0,
+                decode_invocations: 0,
+                prefix_hits: 0,
+                dequant_rows: 0,
+                migrations_out: 0,
+                migrations_in: 0,
+                model_time_s: f64::NAN,
+            }],
+        };
+        let j = s.to_json();
+        let v = crate::util::Json::parse(&j).expect("degenerate stats must parse");
+        assert_eq!(v.get("ttft_p95_s").unwrap().as_f64(), Some(0.0),
+                   "non-finite floats must emit as 0.0");
+        assert_eq!(v.get("goodput_rps").unwrap().as_f64(), Some(0.0));
+        assert!(!j.contains("NaN") && !j.contains("inf"),
+                "no non-finite literal may reach the JSON");
+    }
+
+    #[test]
+    fn sharded_steal_moves_work_and_preserves_tokens() {
+        // prefix affinity funnels every request onto one shard whose
+        // pool holds ALL their reservations (12 × 5 = 60 ≤ 70 per-shard
+        // pages) but whose 2 lanes serialize them — the other shard
+        // stays provably idle until a steal fires
+        let mut cfg = small();
+        cfg.requests = 12;
+        cfg.paged = Some(PagedPoolConfig {
+            page_len: 32, pages: 140, max_lanes: 4, decode_width: 4 });
+        cfg.shards = 2;
+        cfg.shared_prefix_len = 96;
+        cfg.prefix_groups = 1;
+        cfg.shared_frac = 1.0;
+        cfg.prefix_share = true;
+        let off = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(off.stolen, 0);
+        cfg.front_door = FrontDoorConfig::on().with_steal(true);
+        let on = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert!(on.stolen > 0, "an idle shard must steal from the deep queue");
+        assert_eq!(on.shed, 0, "stealing alone must not shed");
+        assert_eq!(on.tokens, off.tokens,
+                   "stealing must not change the generated token count");
+        assert_eq!(
+            on.per_shard.iter().map(|s| s.requests).sum::<usize>(), 12,
+            "every request completes exactly once");
+        let again = run_open_loop(PrefillPolicy::chunked(32), &cfg).unwrap();
+        assert_eq!(on.stolen, again.stolen, "steals must be deterministic");
+        assert!((on.makespan_s - again.makespan_s).abs() < 1e-12);
+        assert!(on.to_json().contains("\"stolen\""));
     }
 
     #[test]

@@ -2,6 +2,8 @@
 
 use std::time::Duration;
 
+use super::frontdoor::Slo;
+
 /// A generation request entering the router.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
@@ -16,16 +18,32 @@ pub struct GenRequest {
     /// generated. The stop token itself is kept as the final entry of
     /// `GenResult::tokens`. Empty = run to `max_new_tokens`.
     pub stop_tokens: Vec<i32>,
+    /// Service class + deadlines the front door (DESIGN.md §16) shapes
+    /// admission by. Defaults to Batch with effectively-unbounded
+    /// deadlines, which is exactly the pre-front-door behavior.
+    pub slo: Slo,
 }
 
 impl GenRequest {
     /// Request with no stop tokens (runs to `max_new_tokens`).
     pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
-        GenRequest { id, prompt, max_new_tokens, stop_tokens: Vec::new() }
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            stop_tokens: Vec::new(),
+            slo: Slo::default(),
+        }
     }
 
     pub fn with_stop_tokens(mut self, stop_tokens: Vec<i32>) -> Self {
         self.stop_tokens = stop_tokens;
+        self
+    }
+
+    /// Stamp an SLO class/deadline set on the request.
+    pub fn with_slo(mut self, slo: Slo) -> Self {
+        self.slo = slo;
         self
     }
 }
@@ -738,5 +756,15 @@ mod tests {
         let r = GenRequest::new(1, vec![0; 4], 8).with_stop_tokens(vec![2]);
         assert_eq!(r.stop_tokens, vec![2]);
         assert!(GenRequest::new(1, vec![], 1).stop_tokens.is_empty());
+    }
+
+    #[test]
+    fn slo_defaults_to_batch_and_builds() {
+        use crate::coordinator::frontdoor::SloClass;
+        let r = GenRequest::new(1, vec![0; 4], 8);
+        assert_eq!(r.slo.class, SloClass::Batch, "unmarked traffic is batch");
+        let r = r.with_slo(Slo::interactive().with_ttft_deadline(0.5));
+        assert_eq!(r.slo.class, SloClass::Interactive);
+        assert!((r.slo.ttft_deadline_s - 0.5).abs() < 1e-12);
     }
 }

@@ -71,12 +71,40 @@ pub enum PrefillPolicy {
         /// admissions faster at the decode lanes' expense).
         decode_priority: bool,
     },
+    /// Chunked prefill whose chunk width floats between `min_chunk` and
+    /// `max_chunk`, driven per tick by the admission-queue depth (the
+    /// front door's [`super::frontdoor::AdaptiveChunk`] controller): a
+    /// backlog grows the chunk to drain prompts faster, an empty queue
+    /// shrinks it to protect decode cadence. Admission/phase machinery
+    /// is identical to [`PrefillPolicy::Chunked`]; only the per-tick
+    /// width moves, and width only changes modeled TIMING — mock and
+    /// modeled token streams are position-deterministic, so bytes never
+    /// depend on it.
+    Adaptive {
+        /// Smallest chunk the controller issues (≥ 1).
+        min_chunk: usize,
+        /// Largest chunk the controller grows to (≥ `min_chunk`).
+        max_chunk: usize,
+        /// Same decode-cadence knob as [`PrefillPolicy::Chunked`].
+        decode_priority: bool,
+    },
 }
 
 impl PrefillPolicy {
     /// Chunked with the decode-protecting default.
     pub fn chunked(chunk_len: usize) -> Self {
         PrefillPolicy::Chunked { chunk_len, decode_priority: true }
+    }
+
+    /// Adaptive chunking with the decode-protecting default.
+    pub fn adaptive(min_chunk: usize, max_chunk: usize) -> Self {
+        PrefillPolicy::Adaptive { min_chunk, max_chunk, decode_priority: true }
+    }
+
+    /// Whether this policy streams prompts in chunks (either fixed or
+    /// adaptive width) rather than blocking whole-pool prefill.
+    pub fn is_chunked(&self) -> bool {
+        !matches!(self, PrefillPolicy::Blocking)
     }
 }
 
@@ -578,7 +606,21 @@ impl Scheduler {
                  ({} rows/page)", req.id, self.pool.total_pages(), self.pool.page_len
             ));
         }
+        // SLO deadlines ride the request through every queue and clock
+        // comparison — non-finite values would make them all vacuous
+        if let Err(e) = req.slo.validate() {
+            return Err(anyhow!("request {}: {e}", req.id));
+        }
         Ok(())
+    }
+
+    /// Pages `req` would reserve over its WHOLE life (prompt + budget),
+    /// independent of the reservation policy — the figure the sharded
+    /// Router checks against per-shard pool capacity to fail over-wide
+    /// submissions fast instead of letting them park at the overflow
+    /// head forever.
+    pub fn reservation_pages(&self, req: &GenRequest) -> usize {
+        self.pool.pages_for(self.reserve_rows(req))
     }
 
     /// Enqueue a validated request; its TTFT clock starts now.
@@ -595,6 +637,30 @@ impl Scheduler {
 
     pub fn queued(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Queued entries eligible for cross-shard stealing: requests that
+    /// have NEVER been admitted. Preempted entries awaiting recompute
+    /// carry a `Resume` watermark — they already streamed tokens from
+    /// this shard, so moving them would either replay or drop bytes.
+    pub fn stealable_queued(&self) -> usize {
+        self.queue.iter().filter(|p| p.resume.is_none()).count()
+    }
+
+    /// Remove and return the YOUNGEST stealable queued request (highest
+    /// submission order without a resume watermark), with the local
+    /// sequence number it held here. The queued-demand counter rolls
+    /// back by the same submit-time estimate admission would have
+    /// charged. Exactly-once delivery is trivial for the stolen
+    /// request: it never bound a lane, so zero events were emitted on
+    /// this shard — resubmitting it elsewhere produces its one and only
+    /// stream. `None` when nothing is stealable.
+    pub fn steal_youngest_queued(&mut self) -> Option<(u64, GenRequest)> {
+        let idx = self.queue.iter().rposition(|p| p.resume.is_none())?;
+        let p = self.queue.remove(idx)?;
+        let estimate = self.pool.pages_for(self.admission_rows(&p.req));
+        self.queue_pages = self.queue_pages.saturating_sub(estimate);
+        Some((p.seq, p.req))
     }
 
     /// Sequence number the next submission will receive.

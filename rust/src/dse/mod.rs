@@ -14,6 +14,7 @@ use crate::arch::{DecodeArch, DecodeConfig, PrefillArch, PrefillConfig};
 use crate::config::{DeviceConfig, ModelDims};
 use crate::coordinator::{run_open_loop, OpenLoopConfig, PrefillPolicy, ShardRole,
                          TopologyConfig};
+use crate::util::fmt_json_f64;
 
 /// Resource headroom for P&R closure (fraction of each class usable).
 pub const HEADROOM: f64 = 0.88;
@@ -139,10 +140,10 @@ pub struct ShardMixPoint {
 impl ShardMixPoint {
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"topology\": \"{}\", \"mixed\": {}, \"ttft_p95_s\": {:.6}, \
-             \"decode_tps\": {:.6}, \"migrations\": {}}}",
-            self.summary, self.mixed, self.ttft_p95_s, self.decode_tps,
-            self.migrations,
+            "{{\"topology\": \"{}\", \"mixed\": {}, \"ttft_p95_s\": {}, \
+             \"decode_tps\": {}, \"migrations\": {}}}",
+            self.summary, self.mixed, fmt_json_f64(self.ttft_p95_s),
+            fmt_json_f64(self.decode_tps), self.migrations,
         )
     }
 }

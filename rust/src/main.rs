@@ -4,11 +4,12 @@
 //! flexllm report [--table N] [--fig N] [--all] [--csv PATH] [--artifacts DIR]
 //! flexllm serve [--requests N] [--new-tokens N] [--spread K] [--arrival-rate R]
 //!               [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
-//!               [--prefill-policy blocking|chunked] [--prefill-chunk C]
+//!               [--prefill-policy blocking|chunked] [--prefill-chunk C|adaptive]
 //!               [--prefill-greedy] [--kv-pages P] [--page-len L]
 //!               [--kv-reserve upfront|lazy] [--kv-overcommit F]
 //!               [--kv-quant fp16|int8]
 //!               [--prefix-share] [--shared-prefix-len N]
+//!               [--slo interactive|batch] [--shed-watermark F] [--steal]
 //!               [--shards N] [--shard-roles SPEC] [--artifacts DIR]
 //! flexllm ablate [--artifacts DIR]
 //! flexllm dse [--device u280|v80] [--stage prefill|decode|shard-mix]
@@ -26,11 +27,13 @@ use flexllm::anyhow::{anyhow, bail, Result};
 
 use flexllm::arch::{AcceleratorSystem, DecodeArch, PrefillArch};
 use flexllm::config::{DeviceConfig, ModelDims};
-use flexllm::coordinator::{place_migration, place_shard, place_shard_affine,
-                           split_budget, Engine, ExecBackend, GenRequest, GenResult,
+use flexllm::coordinator::{overflow_insert, pick_donor, place_migration,
+                           place_shard, place_shard_affine, split_budget, Engine,
+                           ExecBackend, FrontDoorConfig, GenRequest, GenResult,
                            KvLayout, MigratedLane, MockBackend, ModeledBackend,
-                           PageCodec, PrefillPolicy, ReservationPolicy,
-                           RouterBuilder, ServeConfig, ServeMetrics, ShardRole,
+                           PageCodec, PoolSnapshot, PrefillPolicy,
+                           ReservationPolicy, RouterBuilder, ServeConfig,
+                           ServeMetrics, ShardRole, Slo, SloClass,
                            TopologyConfig};
 use flexllm::eval;
 use flexllm::report::fmt_secs;
@@ -44,11 +47,12 @@ USAGE:
       Regenerate paper tables (1-6) and figures (1,2,6,7,8).
   flexllm serve [--requests N] [--new-tokens N] [--spread K] [--arrival-rate R]
                 [--stream] [--stop-token T] [--backend pjrt|mock|modeled]
-                [--prefill-policy blocking|chunked] [--prefill-chunk C]
+                [--prefill-policy blocking|chunked] [--prefill-chunk C|adaptive]
                 [--prefill-greedy] [--kv-pages P] [--page-len L]
                 [--kv-reserve upfront|lazy] [--kv-overcommit F]
                 [--kv-quant fp16|int8]
                 [--prefix-share] [--shared-prefix-len N]
+                [--slo interactive|batch] [--shed-watermark F] [--steal]
                 [--shards N] [--shard-roles SPEC] [--artifacts DIR]
       Serve generation requests through the iteration-level scheduler.
       --spread K        skew budgets: request i gets ~new-tokens·(i%K+1)/K
@@ -61,8 +65,12 @@ USAGE:
       --prefill-policy  blocking (whole-pool admission prefill, default) or
                         chunked (prompts stream in chunks interleaved with
                         decode iterations — cuts TTFT tail under load)
-      --prefill-chunk C prompt tokens per chunk (default 32; the pjrt
-                        backend snaps to the artifact's compiled width)
+      --prefill-chunk C prompt tokens per chunk: a count pins the static
+                        ladder, \"adaptive\" (the default when chunked)
+                        resizes every admission chunk from live pool
+                        pressure — a backlog doubles the width toward
+                        128, an empty queue halves it toward 8 (the pjrt
+                        backend snaps chunks to the compiled width)
       --prefill-greedy  feed every prefilling lane a chunk per tick instead
                         of one per tick (drains admissions faster, decode
                         lanes pay)
@@ -117,6 +125,21 @@ USAGE:
                         shard (the modeled page transfer is priced before
                         the first decode tick). Overrides --shards; needs
                         the paged layout
+      --slo CLASS       SLO class stamped on every synthetic sim request:
+                        batch (default; loose deadlines, sheddable past
+                        the watermark) or interactive (tight deadlines,
+                        admitted ahead of queued Batch, never shed)
+      --shed-watermark F
+                        turn the SLO front door ON: Batch arrivals are
+                        shed once pool-wide queued page demand exceeds
+                        F x the total pool (F > 1 tolerates that much
+                        queueing; default 0.75). Dense layouts have no
+                        page pool and never shed
+      --steal           turn the front door ON with cross-shard work
+                        stealing: a hungry shard (a free lane, nothing
+                        of its own queued) pulls the youngest queued,
+                        never-prefilled request from the deepest
+                        per-shard queue (needs --shards > 1)
       Examples:
         flexllm serve --backend modeled --requests 32 --spread 4 \
                       --prefill-policy chunked --prefill-chunk 32
@@ -142,6 +165,12 @@ USAGE:
                       # int8 KV pages: same memory, double the pages —
                       # compare peak concurrency and the dequant rows
                       # line against the fp16 default
+        flexllm serve --backend modeled --requests 64 --spread 8 \
+                      --kv-pages 40 --page-len 32 --shards 2 \
+                      --shed-watermark 1.5 --steal
+                      # SLO front door on an overloaded 2-shard pool:
+                      # the front-door line reports shed and stolen
+                      # counts next to the per-shard balance
   flexllm ablate [--artifacts DIR]
       Run the Table V quantization ablation on the real artifacts.
   flexllm dse [--device u280|v80] [--stage prefill|decode|shard-mix]
@@ -263,7 +292,9 @@ fn main() -> Result<()> {
             report(&a)
         }
         "serve" => {
-            let a = Args::parse(rest, &["stream", "prefill-greedy", "prefix-share"])?;
+            let a = Args::parse(rest,
+                                &["stream", "prefill-greedy", "prefix-share",
+                                  "steal"])?;
             serve(&a)
         }
         "ablate" => {
@@ -369,17 +400,31 @@ fn skewed_budget(i: usize, new_tokens: usize, spread: usize) -> usize {
 }
 
 /// Parse `--prefill-policy` / `--prefill-chunk` / `--prefill-greedy`.
+/// `--prefill-chunk` takes a token count or the literal `adaptive`,
+/// and since PR 10 adaptive IS the chunked default: the scheduler
+/// resizes every admission chunk from live pool pressure instead of a
+/// static knob the operator has to tune per workload.
 fn prefill_policy(a: &Args) -> Result<PrefillPolicy> {
-    let chunk_len = a.get_u64("prefill-chunk", 32)? as usize;
-    if chunk_len == 0 {
-        bail!("--prefill-chunk must be > 0");
-    }
+    let decode_priority = !a.has("prefill-greedy");
     match a.get_str("prefill-policy", "blocking").as_str() {
         "blocking" => Ok(PrefillPolicy::Blocking),
-        "chunked" => Ok(PrefillPolicy::Chunked {
-            chunk_len,
-            decode_priority: !a.has("prefill-greedy"),
-        }),
+        "chunked" => match a.get("prefill-chunk") {
+            // bounds span the sim prompt: halve toward 8 when idle,
+            // double toward the full 128-token prompt under backlog
+            None | Some("adaptive") => Ok(PrefillPolicy::Adaptive {
+                min_chunk: 8,
+                max_chunk: 128,
+                decode_priority,
+            }),
+            Some(v) => {
+                let chunk_len: usize = v.parse().map_err(|_| anyhow!(
+                    "--prefill-chunk: want a token count or 'adaptive', got '{v}'"))?;
+                if chunk_len == 0 {
+                    bail!("--prefill-chunk must be > 0");
+                }
+                Ok(PrefillPolicy::Chunked { chunk_len, decode_priority })
+            }
+        },
         other => bail!("unknown prefill policy '{other}' (blocking|chunked)"),
     }
 }
@@ -389,6 +434,10 @@ fn describe_policy(p: PrefillPolicy) -> String {
         PrefillPolicy::Blocking => "blocking (whole-pool admission)".into(),
         PrefillPolicy::Chunked { chunk_len, decode_priority } => format!(
             "chunked ({chunk_len}-token chunks, {})",
+            if decode_priority { "decode-priority" } else { "greedy" }),
+        PrefillPolicy::Adaptive { min_chunk, max_chunk, decode_priority } => format!(
+            "adaptive ({min_chunk}..{max_chunk}-token chunks sized from pool \
+             pressure, {})",
             if decode_priority { "decode-priority" } else { "greedy" }),
     }
 }
@@ -483,10 +532,32 @@ fn serve(a: &Args) -> Result<()> {
         Some(v) => vec![v.parse().map_err(|_| anyhow!("--stop-token: bad token '{v}'"))?],
         None => Vec::new(),
     };
+    // the SLO class every synthetic request is stamped with, and the
+    // front door: either knob arms it; absent both, PR 9 bit-for-bit
+    let slo = match SloClass::parse(&a.get_str("slo", "batch"))? {
+        SloClass::Interactive => Slo::interactive(),
+        SloClass::Batch => Slo::batch(),
+    };
+    let fd = if a.has("shed-watermark") || a.has("steal") {
+        FrontDoorConfig::on()
+            .with_shed_watermark(a.get_f64(
+                "shed-watermark", FrontDoorConfig::default().shed_watermark)?)
+            .with_steal(a.has("steal"))
+    } else {
+        FrontDoorConfig::default()
+    };
+    fd.validate()?;
+    if fd.steal && shards == 1 {
+        bail!("--steal needs --shards > 1: there is no second queue to steal from");
+    }
+    if fd.enabled {
+        println!("front door: watermark {:.2}x pool, steal {}",
+                 fd.shed_watermark, if fd.steal { "on" } else { "off" });
+    }
     match a.get_str("backend", "pjrt").as_str() {
         "pjrt" => serve_pjrt(a, n, new_tokens, spread, stream, stop, policy,
                              paged.is_some(), reserve, roles, prefix_share,
-                             kv_quant),
+                             kv_quant, slo, fd),
         "mock" => {
             let mut engines: Vec<Engine<MockBackend>> = match paged {
                 Some((pages, page_len)) => {
@@ -525,10 +596,10 @@ fn serve(a: &Args) -> Result<()> {
             let results = if shards > 1 {
                 println!("engine shards: {shards} (free-page balanced)");
                 drive_sim_sharded(&mut engines, n, new_tokens, spread, stream, &stop,
-                                  shared_prefix_len)?
+                                  shared_prefix_len, slo, fd)?
             } else {
                 drive_sim(&mut engines[0], n, new_tokens, spread, stream, &stop,
-                          shared_prefix_len)?
+                          shared_prefix_len, slo, fd)?
             };
             let per: Vec<ServeMetrics> =
                 engines.iter().map(|e| e.metrics.clone()).collect();
@@ -576,10 +647,10 @@ fn serve(a: &Args) -> Result<()> {
                 println!("engine shards: {shards} (free-page balanced, modeled \
                           clocks independent per shard)");
                 drive_sim_sharded(&mut engines, n, new_tokens, spread, stream, &stop,
-                                  shared_prefix_len)?
+                                  shared_prefix_len, slo, fd)?
             } else {
                 drive_sim(&mut engines[0], n, new_tokens, spread, stream, &stop,
-                          shared_prefix_len)?
+                          shared_prefix_len, slo, fd)?
             };
             let per: Vec<ServeMetrics> =
                 engines.iter().map(|e| e.metrics.clone()).collect();
@@ -624,20 +695,34 @@ fn sim_prompt(i: usize, s: usize, shared: usize) -> Vec<i32> {
 
 /// Submit a synthetic workload and run the step loop inline (no engine
 /// thread needed for the artifact-free backends).
+#[allow(clippy::too_many_arguments)]
 fn drive_sim<B: ExecBackend>(engine: &mut Engine<B>, n: usize, new_tokens: usize,
-                             spread: usize, stream: bool, stop: &[i32], shared: usize)
+                             spread: usize, stream: bool, stop: &[i32],
+                             shared: usize, slo: Slo, fd: FrontDoorConfig)
     -> Result<Vec<GenResult>>
 {
     let s = engine.prefill_len();
     if shared > s {
         bail!("--shared-prefix-len {shared} exceeds the {s}-token sim prompt");
     }
+    let empty: VecDeque<GenRequest> = VecDeque::new();
+    let mut shed = 0usize;
     for i in 0..n {
-        engine.submit(
-            GenRequest::new(i as u64, sim_prompt(i, s, shared),
-                            skewed_budget(i, new_tokens, spread))
-                .with_stop_tokens(stop.to_vec()),
-        )?;
+        let req = GenRequest::new(i as u64, sim_prompt(i, s, shared),
+                                  skewed_budget(i, new_tokens, spread))
+            .with_stop_tokens(stop.to_vec())
+            .with_slo(slo);
+        // front door: Batch arrivals past the watermark are refused at
+        // the door instead of parking in an unbounded admission queue
+        if fd.shed(&req.slo, cli_pool_snapshot(
+                std::slice::from_ref(engine), &empty)).is_some() {
+            shed += 1;
+            continue;
+        }
+        engine.submit(req)?;
+    }
+    if fd.enabled {
+        println!("  front door: {shed} shed (of {n} arrivals)");
     }
     let mut done = Vec::new();
     while engine.has_work() {
@@ -654,26 +739,76 @@ fn drive_sim<B: ExecBackend>(engine: &mut Engine<B>, n: usize, new_tokens: usize
     Ok(done.into_iter().map(|(_, r)| r).collect())
 }
 
+/// Pool-wide congestion snapshot for the inline drivers' shed decision
+/// (the openloop harness's arithmetic, generic over the backend): pages
+/// in use plus queued demand over admitting shards, plus the
+/// reservation demand already parked in the shared overflow FIFO — the
+/// same quantities the threaded Router sums from shard load reports.
+fn cli_pool_snapshot<B: ExecBackend>(engines: &[Engine<B>],
+                                     overflow: &VecDeque<GenRequest>)
+    -> PoolSnapshot
+{
+    let mut total = 0usize;
+    let mut queued = 0usize;
+    let mut gauge: Option<&Engine<B>> = None;
+    for e in engines {
+        if !e.role().accepts_new_requests() {
+            continue;
+        }
+        let t = e.scheduler.total_pages();
+        total += t;
+        // in-use plus queued demand, NOT saturating free-page math: a
+        // backlog deeper than one pool turn must keep registering for
+        // a >1.0 watermark to mean "tolerate this much queueing"
+        queued += t.saturating_sub(e.scheduler.free_pages())
+            + e.scheduler.queued_pages();
+        gauge.get_or_insert(e);
+    }
+    if total == 0 {
+        // dense layout: no page pool to watermark, so never shed
+        return PoolSnapshot { total_pages: 0, queued_pages: 0 };
+    }
+    let parked: usize = gauge
+        .map(|e| overflow.iter().map(|r| e.scheduler.reservation_pages(r)).sum())
+        .unwrap_or(0);
+    PoolSnapshot { total_pages: total, queued_pages: queued + parked }
+}
+
 /// Drive N in-process engine shards to completion: requests flow
 /// head-first through the least-loaded-by-free-pages placement with a
 /// FIFO overflow (exactly the threaded Router's policy, inline), and
-/// every busy shard steps once per round. Results in submission order.
+/// every busy shard steps once per round. With the front door on,
+/// Batch arrivals past the watermark are shed at the door, Interactive
+/// arrivals jump queued Batch, and hungry shards steal queued work.
+/// Results in submission order.
+#[allow(clippy::too_many_arguments)]
 fn drive_sim_sharded<B: ExecBackend>(engines: &mut [Engine<B>], n: usize,
                                      new_tokens: usize, spread: usize, stream: bool,
-                                     stop: &[i32], shared: usize)
+                                     stop: &[i32], shared: usize, slo: Slo,
+                                     fd: FrontDoorConfig)
     -> Result<Vec<GenResult>>
 {
     let s = engines[0].prefill_len();
     if shared > s {
         bail!("--shared-prefix-len {shared} exceeds the {s}-token sim prompt");
     }
-    let mut overflow: VecDeque<GenRequest> = (0..n)
-        .map(|i| {
-            GenRequest::new(i as u64, sim_prompt(i, s, shared),
-                            skewed_budget(i, new_tokens, spread))
-                .with_stop_tokens(stop.to_vec())
-        })
-        .collect();
+    let mut overflow: VecDeque<GenRequest> = VecDeque::new();
+    let mut shed = 0usize;
+    let mut stolen = 0usize;
+    for i in 0..n {
+        let req = GenRequest::new(i as u64, sim_prompt(i, s, shared),
+                                  skewed_budget(i, new_tokens, spread))
+            .with_stop_tokens(stop.to_vec())
+            .with_slo(slo);
+        // front door: Batch arrivals past the pool-wide watermark are
+        // refused at the door; admitted Interactive goes ahead of
+        // every queued Batch entry
+        if fd.shed(&req.slo, cli_pool_snapshot(engines, &overflow)).is_some() {
+            shed += 1;
+            continue;
+        }
+        overflow_insert(fd.enabled, &mut overflow, req, |r| r.slo.class);
+    }
     // sharing on → prefer the shard whose index holds the prompt's head
     let place: fn(&[Engine<B>], &GenRequest) -> Option<usize> =
         if engines[0].prefix_share() { place_shard_affine } else { place_shard };
@@ -685,6 +820,35 @@ fn drive_sim_sharded<B: ExecBackend>(engines: &mut [Engine<B>], n: usize,
             let Some(sh) = place(engines, head) else { break };
             let req = overflow.pop_front().expect("front checked above");
             engines[sh].submit(req)?;
+        }
+        // front door: a hungry admitting shard (a free lane, nothing of
+        // its own queued) pulls the youngest never-prefilled request
+        // off the deepest per-shard queue — but only once the shared
+        // FIFO is empty and nothing is mid-migration: parked work
+        // always drains first, exactly as the threaded Router gates it
+        if fd.enabled && fd.steal && overflow.is_empty() && migrating.is_empty() {
+            let hungry = engines.iter().position(|e| {
+                e.role().accepts_new_requests()
+                    && e.scheduler.active() < e.scheduler.lanes()
+                    && e.scheduler.queued() == 0
+            });
+            if let Some(hungry) = hungry {
+                let counts: Vec<usize> = engines
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| {
+                        if i == hungry { 0 } else { e.scheduler.stealable_queued() }
+                    })
+                    .collect();
+                if let Some(donor) = pick_donor(&counts) {
+                    if let Some((_, req)) =
+                        engines[donor].scheduler.steal_youngest_queued()
+                    {
+                        engines[hungry].submit(req)?;
+                        stolen += 1;
+                    }
+                }
+            }
         }
         if engines.iter().all(|e| !e.has_work()) {
             if !migrating.is_empty() {
@@ -722,6 +886,9 @@ fn drive_sim_sharded<B: ExecBackend>(engines: &mut [Engine<B>], n: usize,
             engines[dst].import_migrated(m)?;
         }
     }
+    if fd.enabled {
+        println!("  front door: {shed} shed  {stolen} stolen  (of {n} arrivals)");
+    }
     done.sort_by_key(|r| r.id);
     Ok(done)
 }
@@ -747,7 +914,7 @@ fn print_shard_lines(per: &[ServeMetrics]) {
 fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool,
               stop: Vec<i32>, policy: PrefillPolicy, paged: bool,
               reserve: ReservationPolicy, roles: Vec<ShardRole>, prefix_share: bool,
-              kv_quant: PageCodec)
+              kv_quant: PageCodec, slo: Slo, fd: FrontDoorConfig)
     -> Result<()>
 {
     let shards = roles.len();
@@ -786,6 +953,7 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
         .reserve(reserve)
         .prefix_share(prefix_share)
         .kv_quant(kv_quant)
+        .front_door(fd)
         .roles(roles);
     let router = RouterBuilder::from_config(cfg).spawn(artifacts.to_string())?;
     if stream {
@@ -802,6 +970,7 @@ fn serve_pjrt(a: &Args, n: usize, new_tokens: usize, spread: usize, stream: bool
             GenRequest::new(i as u64, base[i % base.len()].clone(),
                             skewed_budget(i, new_tokens, spread))
                 .with_stop_tokens(stop.clone())
+                .with_slo(slo)
         })
         .collect();
 

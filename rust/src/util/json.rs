@@ -297,6 +297,20 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Format a float for hand-rolled JSON emission.
+///
+/// JSON has no literal for `NaN` or `inf`, and `format!("{:.6}")` happily
+/// prints both, producing output `Json::parse` rejects. Every float written
+/// into a JSON report must go through this helper, which maps non-finite
+/// values to `0.0`.
+pub fn fmt_json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "0.000000".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,6 +351,17 @@ mod tests {
     #[test]
     fn utf8_passthrough() {
         assert_eq!(Json::parse(r#""héllo — ×""#).unwrap().as_str(), Some("héllo — ×"));
+    }
+
+    #[test]
+    fn fmt_json_f64_maps_non_finite_to_zero() {
+        assert_eq!(fmt_json_f64(1.5), "1.500000");
+        assert_eq!(fmt_json_f64(0.0), "0.000000");
+        assert_eq!(fmt_json_f64(f64::NAN), "0.000000");
+        assert_eq!(fmt_json_f64(f64::INFINITY), "0.000000");
+        assert_eq!(fmt_json_f64(f64::NEG_INFINITY), "0.000000");
+        let doc = format!("{{\"x\": {}}}", fmt_json_f64(f64::NAN));
+        assert_eq!(Json::parse(&doc).unwrap().get("x").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

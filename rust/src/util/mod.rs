@@ -7,4 +7,4 @@ pub mod error;
 pub mod json;
 pub mod prop;
 
-pub use json::{Json, JsonError};
+pub use json::{fmt_json_f64, Json, JsonError};

@@ -55,9 +55,10 @@ use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
 
 use crate::anyhow::{anyhow, Result};
-use crate::coordinator::{Engine, GenRequest, KvLayout, MockBackend, PageCodec,
-                         PrefillPolicy, RequestPhase, ReservationPolicy,
-                         ShardRole};
+use crate::coordinator::{Engine, FrontDoorConfig, GenRequest, KvLayout,
+                         MockBackend, PageCodec, PoolSnapshot, PrefillPolicy,
+                         RequestPhase, ReservationPolicy, ShardRole, Slo,
+                         SloClass};
 
 use super::invariants::{self, StreamLog, Violation};
 
@@ -82,21 +83,46 @@ const PAGES_DECODE: usize = 8;
 
 /// The fixed workload. Prompts are 2 pages; B shares A's first page and
 /// diverges mid-page (a partial-page COW fork when enabled), C diverges
-/// exactly at the page boundary (full-page sharing, no fork).
-fn workload() -> Vec<GenRequest> {
-    vec![
+/// exactly at the page boundary (full-page sharing, no fork). On a
+/// front-door cell request 0 is stamped Interactive, so the
+/// never-shed-Interactive discipline is part of the explored space.
+fn workload(front: FrontMode) -> Vec<GenRequest> {
+    let mut reqs = vec![
         GenRequest::new(0, vec![1, 2, 3, 4, 5, 6, 7, 8], 3),
         GenRequest::new(1, vec![1, 2, 3, 4, 5, 6, 7, 9], 2),
         GenRequest::new(2, vec![1, 2, 3, 4, 9, 9, 9, 9], 2),
-    ]
+    ];
+    if front != FrontMode::Off {
+        reqs[0].slo = Slo::interactive();
+    }
+    reqs
 }
 
 // ---------------------------------------------------------------------------
 // Configuration matrix and exploration budget
 // ---------------------------------------------------------------------------
 
+/// Front-door paths a cell drives through the episode (ISSUE 10).
+/// `Off` on the base 16 cells keeps their state spaces — and their
+/// committed replay traces — exactly the PR 9 behavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrontMode {
+    /// No front door: every submission goes straight to shard 0.
+    Off,
+    /// Load-shed at submit: Batch submissions past the watermark are
+    /// rejected (recorded, never owed a stream); request 0 is stamped
+    /// Interactive and must never shed.
+    Shed,
+    /// Cross-shard stealing: a `steal` action moves the youngest
+    /// queued request from shard 0 to the idle twin shard.
+    Steal,
+    /// Shedding and stealing together.
+    ShedSteal,
+}
+
 /// One cell of the checked matrix: {Upfront, Lazy} × {prefix sharing
-/// on, off} × {1 unified shard, prefill+decode pair} × {Fp16, Int8Sym}.
+/// on, off} × {1 unified shard, prefill+decode pair, unified twin} ×
+/// {Fp16, Int8Sym} × front-door mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct McConfig {
     pub name: &'static str,
@@ -104,10 +130,35 @@ pub struct McConfig {
     pub share: bool,
     pub disagg: bool,
     pub codec: PageCodec,
+    /// Which front-door paths the episode's submissions run through.
+    pub front: FrontMode,
+    /// Two UNIFIED shards (the steal topology: submissions land on
+    /// shard 0, stealing is the only road to shard 1). Exclusive with
+    /// `disagg`.
+    pub twin: bool,
 }
 
-/// All 16 checked configurations, in a stable order. The names are the
-/// replay keys — traces cite them, so they never change.
+impl McConfig {
+    /// The [`FrontDoorConfig`] this cell's episode submits through. The
+    /// 0.5 watermark on the 7-page pool (= 4 pages after ceil) is
+    /// crossed by the SECOND queued upfront reservation, so shed and
+    /// no-shed orders both exist inside the explored tree.
+    fn front_door(&self) -> FrontDoorConfig {
+        match self.front {
+            FrontMode::Off => FrontDoorConfig::default(),
+            FrontMode::Shed => FrontDoorConfig::on().with_shed_watermark(0.5),
+            FrontMode::Steal => FrontDoorConfig::on().with_steal(true),
+            FrontMode::ShedSteal => FrontDoorConfig::on()
+                .with_shed_watermark(0.5)
+                .with_steal(true),
+        }
+    }
+}
+
+/// All 20 checked configurations, in a stable order: the 16 PR 9 cells
+/// (front door off, byte-identical state spaces) plus 4 front-door
+/// cells. The names are the replay keys — traces cite them, so they
+/// never change.
 pub fn matrix() -> Vec<McConfig> {
     const NAMES: [&str; 16] = [
         "upfront-noshare-unified-fp16", "upfront-noshare-unified-int8",
@@ -126,11 +177,32 @@ pub fn matrix() -> Vec<McConfig> {
             for disagg in [false, true] {
                 for codec in [PageCodec::Fp16, PageCodec::Int8Sym] {
                     let name = names.next().expect("16 names for 16 cells");
-                    out.push(McConfig { name, reserve, share, disagg, codec });
+                    out.push(McConfig { name, reserve, share, disagg, codec,
+                                        front: FrontMode::Off, twin: false });
                 }
             }
         }
     }
+    out.push(McConfig {
+        name: "frontdoor-shed-unified-fp16",
+        reserve: ReservationPolicy::Upfront, share: false, disagg: false,
+        codec: PageCodec::Fp16, front: FrontMode::Shed, twin: false,
+    });
+    out.push(McConfig {
+        name: "frontdoor-shed-share-unified-int8",
+        reserve: ReservationPolicy::Upfront, share: true, disagg: false,
+        codec: PageCodec::Int8Sym, front: FrontMode::Shed, twin: false,
+    });
+    out.push(McConfig {
+        name: "frontdoor-steal-twin-fp16",
+        reserve: ReservationPolicy::Upfront, share: false, disagg: false,
+        codec: PageCodec::Fp16, front: FrontMode::Steal, twin: true,
+    });
+    out.push(McConfig {
+        name: "frontdoor-shedsteal-twin-lazy-fp16",
+        reserve: ReservationPolicy::Lazy, share: false, disagg: false,
+        codec: PageCodec::Fp16, front: FrontMode::ShedSteal, twin: true,
+    });
     out
 }
 
@@ -218,6 +290,7 @@ pub struct McReport {
 enum Action {
     Submit(usize),
     Migrate,
+    Steal,
     Tick(usize),
 }
 
@@ -226,6 +299,7 @@ impl Action {
         match self {
             Action::Submit(i) => format!("submit(req {i})"),
             Action::Migrate => "migrate(prefill -> decode)".to_string(),
+            Action::Steal => "steal(shard 0 -> shard 1)".to_string(),
             Action::Tick(s) => format!("tick(shard {s})"),
         }
     }
@@ -252,6 +326,11 @@ struct Episode {
     /// stays parked until the digest moves (stutter pruning).
     parked: Vec<Option<u64>>,
     codec: PageCodec,
+    /// The cell's front door, applied at every `submit`.
+    front: FrontDoorConfig,
+    /// Requests the front door rejected — marked submitted (the action
+    /// is consumed) but never owed a token stream.
+    shed: Vec<bool>,
 }
 
 fn build_shards(cfg: &McConfig) -> Vec<Engine<MockBackend>> {
@@ -283,6 +362,17 @@ fn build_shards(cfg: &McConfig) -> Vec<Engine<MockBackend>> {
                 .with_shard_id(1)
                 .with_prefix_share(cfg.share),
         ]
+    } else if cfg.twin {
+        // two UNIFIED shards for the steal topology: submissions land
+        // on shard 0; stealing is the only road onto shard 1
+        (0..2)
+            .map(|i| {
+                Engine::with_reservation(mk(PAGES_TIGHT), policy,
+                                         KvLayout::Paged, cfg.reserve)
+                    .with_shard_id(i)
+                    .with_prefix_share(cfg.share)
+            })
+            .collect()
     } else {
         vec![Engine::with_reservation(mk(PAGES_TIGHT), policy, KvLayout::Paged,
                                       cfg.reserve)
@@ -294,7 +384,7 @@ fn build_shards(cfg: &McConfig) -> Vec<Engine<MockBackend>> {
 impl Episode {
     fn new(cfg: &McConfig) -> Self {
         let shards = build_shards(cfg);
-        let reqs = workload();
+        let reqs = workload(cfg.front);
         let parked = vec![None; shards.len()];
         Episode {
             submitted: vec![false; reqs.len()],
@@ -302,9 +392,29 @@ impl Episode {
             streams: HashMap::new(),
             parked,
             codec: cfg.codec,
+            front: cfg.front_door(),
+            shed: vec![false; reqs.len()],
             shards,
             reqs,
         }
+    }
+
+    /// Pool-wide congestion snapshot for the shed decision: pages in
+    /// use plus queued demand over admitting shards — the same signal
+    /// the Router's admission gate and the open-loop harness read.
+    fn pool_snapshot(&self) -> PoolSnapshot {
+        let mut total = 0usize;
+        let mut queued = 0usize;
+        for sh in &self.shards {
+            if !sh.role().accepts_new_requests() {
+                continue;
+            }
+            let t = sh.scheduler.total_pages();
+            total += t;
+            queued += t.saturating_sub(sh.scheduler.free_pages())
+                + sh.scheduler.queued_pages();
+        }
+        PoolSnapshot { total_pages: total, queued_pages: queued }
     }
 
     fn shard_digest(&self, s: usize) -> u64 {
@@ -341,6 +451,7 @@ impl Episode {
             self.shard_digest(s).hash(&mut h);
         }
         self.submitted.hash(&mut h);
+        self.shed.hash(&mut h);
         self.log.completed.hash(&mut h);
         h.finish()
     }
@@ -381,6 +492,17 @@ impl Episode {
                 acts.push(Action::Migrate);
             }
         }
+        // stealing mirrors the coordinator's gate: receiver idle and
+        // admitting, donor holding queued (never prefilled) work
+        if self.front.enabled
+            && self.front.steal
+            && self.shards.len() > 1
+            && self.shards[1].role() == ShardRole::Unified
+            && !self.shards[1].has_work()
+            && self.shards[0].scheduler.stealable_queued() > 0
+        {
+            acts.push(Action::Steal);
+        }
         for s in 0..self.shards.len() {
             if self.shards[s].has_work()
                 && self.parked[s] != Some(self.shard_digest(s))
@@ -397,9 +519,33 @@ impl Episode {
         match act {
             Action::Submit(i) => {
                 let req = self.reqs[i].clone();
-                self.log.submitted.push(req.id);
                 self.submitted[i] = true;
+                if self.front.shed(&req.slo, self.pool_snapshot()).is_some() {
+                    if req.slo.class == SloClass::Interactive {
+                        out.push(Violation {
+                            invariant: "shed-discipline",
+                            detail: format!(
+                                "Interactive request {} was shed", req.id),
+                        });
+                    }
+                    self.shed[i] = true;
+                    return Ok(out);
+                }
+                self.log.submitted.push(req.id);
                 self.shards[0].submit(req)?;
+            }
+            Action::Steal => {
+                if let Some((_, req)) =
+                    self.shards[0].scheduler.steal_youngest_queued()
+                {
+                    self.shards[1].submit(req)?;
+                } else {
+                    out.push(Violation {
+                        invariant: "steal-discipline",
+                        detail: "steal enabled with nothing stealable"
+                            .to_string(),
+                    });
+                }
             }
             Action::Migrate => {
                 let taken = self.shards[0].take_migratable();
@@ -527,6 +673,13 @@ fn run_episode(cfg: &McConfig, budget: &McBudget, trace: &[usize])
         let act = acts[choice];
         out.labels.push(act.label());
         let mut violations = ep.apply(act)?;
+        if let Action::Submit(i) = act {
+            if ep.shed[i] {
+                // make shed decisions visible in counterexample traces
+                *out.labels.last_mut().expect("label just pushed") =
+                    format!("submit(req {i}) -> shed");
+            }
+        }
         violations.extend(ep.check());
         out.digests.push(ep.digest());
         if let Some(v) = violations.into_iter().next() {
@@ -548,6 +701,16 @@ fn run_episode(cfg: &McConfig, budget: &McBudget, trace: &[usize])
     }
     let mut drained = Vec::new();
     ep.log.check_drained(&mut drained);
+    for (i, &shed) in ep.shed.iter().enumerate() {
+        if shed && ep.streams.contains_key(&(i as u64)) {
+            drained.push(Violation {
+                invariant: "shed-discipline",
+                detail: format!(
+                    "request {i} was shed at the front door but streamed \
+                     tokens anyway"),
+            });
+        }
+    }
     for (id, got) in &ep.streams {
         let want = ep.oracle(*id);
         if *got != want {
@@ -674,7 +837,9 @@ pub fn replay(spec: &str, budget: &McBudget) -> Result<McReport> {
     let cfg = config_by_name(name)
         .ok_or_else(|| anyhow!("unknown config {name:?}; cells are named \
                                 <upfront|lazy>-<share|noshare>-\
-                                <unified|disagg>-<fp16|int8>"))?;
+                                <unified|disagg>-<fp16|int8> plus the \
+                                frontdoor-* cells (run `flexllm verify` \
+                                for the list)"))?;
     let trace: Vec<usize> = body
         .split(',')
         .filter(|t| !t.trim().is_empty())
@@ -706,16 +871,18 @@ pub fn replay(spec: &str, budget: &McBudget) -> Result<McReport> {
 mod tests {
     use super::*;
 
-    /// The matrix is 16 distinct, name-addressable cells.
+    /// The matrix is 20 distinct, name-addressable cells: the 16-cell
+    /// base product plus 4 front-door cells.
     #[test]
     fn matrix_is_complete_and_named() {
         let m = matrix();
-        assert_eq!(m.len(), 16);
+        assert_eq!(m.len(), 20);
         let names: HashSet<&str> = m.iter().map(|c| c.name).collect();
-        assert_eq!(names.len(), 16, "config names must be unique");
+        assert_eq!(names.len(), 20, "config names must be unique");
         for cfg in &m {
             assert_eq!(config_by_name(cfg.name), Some(*cfg));
         }
+        assert_eq!(m.iter().filter(|c| c.front != FrontMode::Off).count(), 4);
     }
 
     /// A single all-defaults episode on the simplest cell drains clean:
@@ -743,6 +910,35 @@ mod tests {
         assert!(out.violation.is_none(), "clean drain: {:?}", out.violation);
         assert!(out.labels.iter().any(|l| l.contains("migrate")),
                 "default disagg path must exercise migration: {:?}",
+                out.labels);
+    }
+
+    /// The shed cell's default path actually sheds: the tight unified
+    /// pool (7 pages, 4-page upfront reservations, watermark 4) rejects
+    /// the third Batch submit, and the episode still drains clean.
+    #[test]
+    fn default_shed_episode_sheds_batch_and_drains() {
+        let cfg = config_by_name("frontdoor-shed-unified-fp16")
+            .expect("matrix cell exists");
+        let budget = McBudget { branch_depth: 0, ..McBudget::default() };
+        let out = run_episode(&cfg, &budget, &[]).expect("episode runs");
+        assert!(out.violation.is_none(), "clean drain: {:?}", out.violation);
+        assert!(out.labels.iter().any(|l| l.contains("-> shed")),
+                "default shed path must exercise load-shed: {:?}",
+                out.labels);
+    }
+
+    /// The steal cell's default path actually steals (the `steal` action
+    /// precedes `tick` in the stable order, so choice-0 paths take it).
+    #[test]
+    fn default_steal_episode_steals_and_drains() {
+        let cfg = config_by_name("frontdoor-steal-twin-fp16")
+            .expect("matrix cell exists");
+        let budget = McBudget { branch_depth: 0, ..McBudget::default() };
+        let out = run_episode(&cfg, &budget, &[]).expect("episode runs");
+        assert!(out.violation.is_none(), "clean drain: {:?}", out.violation);
+        assert!(out.labels.iter().any(|l| l.contains("steal")),
+                "default twin path must exercise work stealing: {:?}",
                 out.labels);
     }
 

@@ -9,7 +9,8 @@
 use flexllm::verify::{archlint, mc};
 
 /// Dev-profile exploration depth: every interleaving of the first 3
-/// scheduling decisions per episode, across all 16 matrix cells.
+/// scheduling decisions per episode, across all 20 matrix cells (the
+/// 16 PR 9 cells plus the 4 front-door cells from ISSUE 10).
 const TIER1_DEPTH: usize = 3;
 
 fn tier1_budget() -> mc::McBudget {
@@ -19,7 +20,7 @@ fn tier1_budget() -> mc::McBudget {
 #[test]
 fn bounded_check_is_clean_on_every_config() {
     let reports = mc::check_all(&tier1_budget()).expect("exploration in budget");
-    assert_eq!(reports.len(), 16, "one report per matrix cell");
+    assert_eq!(reports.len(), 20, "one report per matrix cell");
     for r in &reports {
         assert!(
             r.violation.is_none(),
@@ -33,7 +34,7 @@ fn bounded_check_is_clean_on_every_config() {
     }
     // depth 3 over a >=2-way decision space must branch somewhere
     let total: usize = reports.iter().map(|r| r.interleavings).sum();
-    assert!(total > 16, "no config ever branched: {total} episodes total");
+    assert!(total > 20, "no config ever branched: {total} episodes total");
 }
 
 #[test]
